@@ -1,0 +1,81 @@
+//! END-TO-END driver: proves all three layers compose on a real workload.
+//!
+//! Pipeline: generate a paper-style graph (ca-GrQc analogue, LCC) ->
+//! §IV-B Jaccard construction -> solve the metric-constrained LP TWICE:
+//!
+//!   1. CPU engine  — the paper's parallel Dykstra (L3 only, f64), and
+//!   2. XLA engine  — the same Dykstra driven through the AOT-compiled
+//!      JAX+Pallas kernels (`artifacts/*.hlo.txt`, built once by
+//!      `make artifacts`) via PJRT: L3 gathers conflict-free batches,
+//!      L2/L1 executes the projection math, L3 scatters back.
+//!
+//! Reports agreement of the two optima, constraint satisfaction, LP
+//! objective, rounded clustering quality, and per-engine throughput
+//! (constraint visits/second) — the numbers recorded in EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example e2e_xla_solve [n]
+
+use metric_proj::graph::datasets::Dataset;
+use metric_proj::instance::cc_objective;
+use metric_proj::instance::construction::{build_cc_instance, ConstructionParams};
+use metric_proj::rounding::pivot;
+use metric_proj::runtime::engine::XlaEngine;
+use metric_proj::solver::{dykstra_parallel, dykstra_xla, SolveOpts};
+use metric_proj::util::timer::time;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(60);
+    let passes = 150;
+
+    // --- workload -------------------------------------------------------
+    let g = Dataset::CaGrQc.load_or_generate(std::path::Path::new("data"), n, 42);
+    let inst = build_cc_instance(&g, ConstructionParams::default(), 2);
+    let visits_per_pass = inst.n_metric_constraints() as f64;
+    println!("workload : ca-GrQc analogue, n={}, m={}", g.n(), g.m());
+    println!("          {:.2e} metric constraints/pass, {passes} passes", visits_per_pass);
+
+    // --- L1/L2 artifacts through PJRT ------------------------------------
+    let engine = XlaEngine::load("artifacts").map_err(|e| {
+        anyhow::anyhow!("{e}\nhint: run `make artifacts` first to build the HLO artifacts")
+    })?;
+    println!("pjrt     : platform = {}", engine.platform());
+
+    // --- solve with both engines -----------------------------------------
+    let opts = SolveOpts { max_passes: passes, threads: 2, tile: 16, ..Default::default() };
+    let (cpu, t_cpu) = time(|| dykstra_parallel::solve(&inst, &opts));
+    let (xla, t_xla) = time(|| dykstra_xla::solve(&inst, &opts, &engine));
+    let xla = xla?;
+
+    println!("\n== CPU engine (scalar f64, wave schedule) ==");
+    println!("time      : {t_cpu:.2}s  ({:.2e} visits/s)", passes as f64 * visits_per_pass / t_cpu);
+    println!("violation : {:.2e}", cpu.residuals.max_violation);
+    println!("LP obj    : {:.4}", cpu.residuals.lp_objective);
+
+    println!("\n== XLA engine (Pallas kernel via PJRT, delta batches) ==");
+    println!("time      : {t_xla:.2}s  ({:.2e} visits/s)", passes as f64 * visits_per_pass / t_xla);
+    println!("violation : {:.2e}", xla.residuals.max_violation);
+    println!("LP obj    : {:.4}", xla.residuals.lp_objective);
+
+    // --- cross-engine agreement ------------------------------------------
+    let mut worst: f64 = 0.0;
+    for (i, j, v) in xla.x.iter_pairs() {
+        worst = worst.max((v - cpu.x.get(i, j)).abs());
+    }
+    println!("\nmax |x_xla - x_cpu| = {worst:.2e} (f32 artifacts vs f64 scalar)");
+    anyhow::ensure!(worst < 5e-2, "engines disagree beyond f32 tolerance: {worst}");
+    anyhow::ensure!(
+        (xla.residuals.lp_objective - cpu.residuals.lp_objective).abs()
+            < 1e-2 * cpu.residuals.lp_objective.max(1.0),
+        "LP objectives diverged"
+    );
+
+    // --- downstream clustering -------------------------------------------
+    let (labels, obj) = pivot::round_best(&xla.x, 20, 3, |l| cc_objective(&inst, l));
+    let k = labels.iter().max().unwrap() + 1;
+    println!(
+        "rounded clustering (from XLA solution): {k} clusters, obj {obj:.4}, ratio vs LP {:.3}",
+        obj / xla.residuals.lp_objective.max(1e-12)
+    );
+    println!("\nE2E OK: graph -> instance -> L3 coordinator -> PJRT(L2/L1) -> LP -> clustering");
+    Ok(())
+}

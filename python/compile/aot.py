@@ -1,0 +1,88 @@
+"""AOT lowering: JAX (L2+L1) -> HLO *text* artifacts for the Rust runtime.
+
+HLO text — not `.serialize()` — is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Emits, for batch sizes B in PROJECT_BATCHES:
+  project_b{B}.hlo.txt    triplet_sweep    ((B,3) x3, winv3, y3) -> (x3', y3')
+  pair_b{B}.hlo.txt       pair_sweep       7 x (B,) -> 5 x (B,)
+  objective_b{B}.hlo.txt  objective_terms  7 x (B,) -> (4,)
+plus a manifest.txt recording shapes and dtypes.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+PROJECT_BATCHES = (1024, 4096, 16384)
+PAIR_BATCHES = (4096,)
+OBJECTIVE_BATCHES = (4096,)
+DTYPE = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_project(batch: int) -> str:
+    spec = jax.ShapeDtypeStruct((batch, 3), DTYPE)
+    return to_hlo_text(jax.jit(model.triplet_sweep).lower(spec, spec, spec))
+
+
+def lower_pair(batch: int) -> str:
+    s = jax.ShapeDtypeStruct((batch,), DTYPE)
+    return to_hlo_text(jax.jit(model.pair_sweep).lower(s, s, s, s, s, s, s))
+
+
+def lower_objective(batch: int) -> str:
+    s = jax.ShapeDtypeStruct((batch,), DTYPE)
+    return to_hlo_text(jax.jit(model.objective_terms).lower(s, s, s, s, s, s, s))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = []
+    for b in PROJECT_BATCHES:
+        path = os.path.join(args.out, f"project_b{b}.hlo.txt")
+        text = lower_project(b)
+        with open(path, "w") as fh:
+            fh.write(text)
+        manifest.append(f"project_b{b}: triplet_sweep (B={b},3) f32 -> (x3', y3')")
+        print(f"wrote {path} ({len(text)} chars)")
+    for b in PAIR_BATCHES:
+        path = os.path.join(args.out, f"pair_b{b}.hlo.txt")
+        text = lower_pair(b)
+        with open(path, "w") as fh:
+            fh.write(text)
+        manifest.append(f"pair_b{b}: pair_sweep 7x(B={b},) f32 -> 5x(B,)")
+        print(f"wrote {path} ({len(text)} chars)")
+    for b in OBJECTIVE_BATCHES:
+        path = os.path.join(args.out, f"objective_b{b}.hlo.txt")
+        text = lower_objective(b)
+        with open(path, "w") as fh:
+            fh.write(text)
+        manifest.append(f"objective_b{b}: objective_terms 7x(B={b},) f32 -> (4,)")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.txt"), "w") as fh:
+        fh.write("\n".join(manifest) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""L1: Pallas kernels for the metric-projection hot-spot."""

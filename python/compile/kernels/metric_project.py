@@ -1,0 +1,95 @@
+"""Layer-1 Pallas kernel: batched Dykstra visit of a triplet's 3 metric
+constraints.
+
+One conflict-free *wave* of the Rust coordinator's schedule is a batch of
+independent triplets: each lane owns the 3 variables (x_ij, x_ik, x_jk) and
+the 3 scaled duals of its triplet, so the whole batch is data-parallel.
+Per lane the kernel performs, sequentially for constraint types t = 0,1,2
+(sign patterns s_t), the fused correction+projection of Algorithm 1:
+
+    x_c   = x + y_t * s_t * winv          (correction)
+    delta = <s_t, x_c>                     (violation; b = 0)
+    theta = max(delta, 0) / sum(winv)      (a' W^{-1} a = sum(winv))
+    x     = x_c - theta * s_t * winv       (projection)
+    y_t   = theta                          (dual update)
+
+Hardware adaptation (DESIGN.md §2): the paper's multicore cache tiling
+becomes the HBM<->VMEM schedule expressed by the BlockSpec below — each
+grid step streams one block of lanes through VMEM; the update itself is
+element-wise VPU work (no MXU), so the kernel is memory-bound.
+
+`interpret=True` is REQUIRED here: the CPU PJRT plugin cannot execute the
+Mosaic custom-call that real TPU lowering emits (see /opt/xla-example).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Sign patterns of the 3 metric constraints of an (i,j,k) triplet, in the
+# same visit order as the Rust solver (solver/projection.rs METRIC_SIGNS).
+SIGNS = ((1.0, -1.0, -1.0), (-1.0, 1.0, -1.0), (-1.0, -1.0, 1.0))
+
+# Default lane block: 9 f32 arrays x 1024 lanes x 4 B = 36 KiB working set,
+# comfortably inside a TPU core's ~16 MiB VMEM with double buffering.
+DEFAULT_BLOCK = 1024
+
+
+def _project_kernel(x_ref, w_ref, y_ref, xo_ref, yo_ref):
+    """Pallas kernel body: one block of lanes, shape (block, 3).
+
+    The sign patterns are unrolled as scalar +-1 factors (Pallas kernels
+    may not capture constant arrays), keeping everything element-wise.
+    """
+    x0, x1, x2 = x_ref[:, 0], x_ref[:, 1], x_ref[:, 2]
+    w0, w1, w2 = w_ref[:, 0], w_ref[:, 1], w_ref[:, 2]
+    s_norm = w0 + w1 + w2  # a' W^{-1} a (signs square to 1)
+    ys = []
+    for t, (s0, s1, s2) in enumerate(SIGNS):
+        y_t = y_ref[:, t]
+        # correction
+        c0 = x0 + y_t * s0 * w0
+        c1 = x1 + y_t * s1 * w1
+        c2 = x2 + y_t * s2 * w2
+        delta = s0 * c0 + s1 * c1 + s2 * c2
+        theta = jnp.maximum(delta, 0.0) / s_norm
+        # projection
+        x0 = c0 - theta * s0 * w0
+        x1 = c1 - theta * s1 * w1
+        x2 = c2 - theta * s2 * w2
+        ys.append(theta)
+    xo_ref[:, 0], xo_ref[:, 1], xo_ref[:, 2] = x0, x1, x2
+    yo_ref[:, 0], yo_ref[:, 1], yo_ref[:, 2] = ys[0], ys[1], ys[2]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def project_triplets(x3, winv3, y3, *, block=DEFAULT_BLOCK):
+    """Batched triplet projection via the Pallas kernel.
+
+    Args:
+      x3:    (B, 3) distances (x_ij, x_ik, x_jk) per lane.
+      winv3: (B, 3) inverse weights per lane.
+      y3:    (B, 3) scaled duals from the previous pass, per constraint type.
+      block: lane block size (B must be a multiple, callers pad).
+
+    Returns:
+      (x3', y3'): updated distances and duals.
+    """
+    b_total, three = x3.shape
+    assert three == 3, f"expected (B, 3), got {x3.shape}"
+    assert b_total % block == 0, f"B={b_total} not a multiple of block={block}"
+    grid = (b_total // block,)
+    spec = pl.BlockSpec((block, 3), lambda i: (i, 0))
+    return pl.pallas_call(
+        _project_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(x3.shape, x3.dtype),
+            jax.ShapeDtypeStruct(y3.shape, y3.dtype),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x3, winv3, y3)

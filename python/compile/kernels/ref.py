@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for the Pallas kernel — the correctness reference.
+
+Implements exactly the math of `metric_project._project_kernel` (and of the
+Rust scalar hot path in rust/src/solver/projection.rs) without Pallas, so
+pytest can assert the kernel against it on every shape/dtype hypothesis
+draws.
+"""
+
+import jax.numpy as jnp
+
+from .metric_project import SIGNS
+
+
+def project_triplets_ref(x3, winv3, y3):
+    """Reference batched triplet projection; same signature as the kernel."""
+    x = jnp.asarray(x3)
+    w = jnp.asarray(winv3)
+    y = jnp.asarray(y3)
+    s_norm = jnp.sum(w, axis=-1, keepdims=True)
+    ys = []
+    for t, signs in enumerate(SIGNS):
+        sv = jnp.asarray(signs, dtype=x.dtype)
+        y_t = y[:, t : t + 1]
+        x_c = x + y_t * sv * w
+        delta = jnp.sum(x_c * sv, axis=-1, keepdims=True)
+        theta = jnp.maximum(delta, 0.0) / s_norm
+        x = x_c - theta * sv * w
+        ys.append(theta[:, 0])
+    return x, jnp.stack(ys, axis=-1)
+
+
+def project_triplets_scalar(x3, winv3, y3):
+    """Scalar (python-loop) port of the Rust solver's visit_metric, for
+    triple-checking the vectorized math lane by lane. Slow; tests only."""
+    import numpy as np
+
+    x = np.array(x3, dtype=np.float64)
+    w = np.array(winv3, dtype=np.float64)
+    y = np.array(y3, dtype=np.float64)
+    out_x = x.copy()
+    out_y = y.copy()
+    for lane in range(x.shape[0]):
+        xv = out_x[lane]
+        for t, signs in enumerate(SIGNS):
+            yv = out_y[lane, t]
+            # correction
+            xc = xv + yv * np.array(signs) * w[lane]
+            delta = float(np.dot(signs, xc))
+            theta = max(delta, 0.0) / float(w[lane].sum())
+            xv = xc - theta * np.array(signs) * w[lane]
+            out_y[lane, t] = theta
+        out_x[lane] = xv
+    return out_x, out_y

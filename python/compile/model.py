@@ -1,0 +1,74 @@
+"""Layer-2 JAX model: the batched compute graph the Rust coordinator
+executes through PJRT.
+
+Three jittable entry points, all lowered to HLO text by `aot.py`:
+
+* `triplet_sweep`   — one conflict-free wave of metric-constraint visits,
+                      delegating the per-lane math to the L1 Pallas kernel.
+* `pair_sweep`      — the per-pair constraint block of the CC-LP (3):
+                      x - f <= d, -x - f <= -d, and the box x <= 1,
+                      element-wise parallel over pairs.
+* `objective_terms` — partial sums for the QP primal/dual and LP objective
+                      over a batch of pairs (the reduction the coordinator
+                      uses for termination checks).
+
+Python never runs at solve time: these functions exist to be lowered once
+(`make artifacts`) and executed from rust/src/runtime/.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.metric_project import project_triplets
+
+
+@jax.jit
+def triplet_sweep(x3, winv3, y3):
+    """One wave of triplet projections (see kernels.metric_project)."""
+    return project_triplets(x3, winv3, y3, block=min(1024, x3.shape[0]))
+
+
+@jax.jit
+def pair_sweep(x, f, winv, d, y_up, y_lo, y_box):
+    """Dykstra visits to the pair constraints of one batch of pairs.
+
+    Mirrors rust/src/solver/projection.rs::visit_pair_{upper,lower} and
+    visit_box_upper, vectorized over the batch. Returns updated
+    (x, f, y_up, y_lo, y_box).
+    """
+    # upper: x - f <= d
+    delta = x - f - d + 2.0 * y_up * winv
+    theta = jnp.maximum(delta, 0.0) / (2.0 * winv)
+    c = y_up - theta
+    x = x + c * winv
+    f = f - c * winv
+    y_up = theta
+    # lower: -x - f <= -d
+    delta = d - x - f + 2.0 * y_lo * winv
+    theta = jnp.maximum(delta, 0.0) / (2.0 * winv)
+    c = y_lo - theta
+    x = x - c * winv
+    f = f - c * winv
+    y_lo = theta
+    # box: x <= 1
+    delta = x + y_box * winv - 1.0
+    theta = jnp.maximum(delta, 0.0) / winv
+    c = y_box - theta
+    x = x + c * winv
+    y_box = theta
+    return x, f, y_up, y_lo, y_box
+
+
+@jax.jit
+def objective_terms(x, f, w, d, y_up, y_lo, y_box):
+    """Partial reductions for termination metrics over a batch of pairs.
+
+    Returns a (4,) vector: [c'x, x'Wx, b'yhat, lp_objective] contributions
+    (summed over the batch; the coordinator accumulates across batches and
+    assembles primal/dual/gap exactly as solver/termination.rs does).
+    """
+    cx = jnp.sum(w * f)
+    xwx = jnp.sum(w * (x * x + f * f))
+    b_yhat = jnp.sum(d * (y_up - y_lo) + y_box)
+    lp = jnp.sum(w * jnp.abs(x - d))
+    return jnp.stack([cx, xwx, b_yhat, lp])

@@ -1,0 +1,120 @@
+"""L1 correctness: Pallas kernel vs the pure-jnp oracle (and a scalar port
+of the Rust hot path). This is the core cross-layer correctness signal:
+rust/src/solver/projection.rs, the Pallas kernel, and ref.py must agree.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.metric_project import SIGNS, project_triplets
+from compile.kernels.ref import project_triplets_ref, project_triplets_scalar
+
+jax.config.update("jax_enable_x64", True)
+
+
+def rand_inputs(rng, b, dtype=np.float64, y_scale=0.5):
+    x = rng.uniform(-1.0, 2.0, size=(b, 3)).astype(dtype)
+    w = rng.uniform(0.4, 2.5, size=(b, 3)).astype(dtype)
+    y = (rng.uniform(0.0, y_scale, size=(b, 3)) * rng.integers(0, 2, size=(b, 3))).astype(dtype)
+    return x, w, y
+
+
+@pytest.mark.parametrize("b", [1, 2, 7, 64, 1024, 2048])
+def test_kernel_matches_ref(b):
+    rng = np.random.default_rng(b)
+    x, w, y = rand_inputs(rng, b)
+    block = min(1024, b) if b % min(1024, b) == 0 else 1
+    kx, ky = project_triplets(x, w, y, block=block)
+    rx, ry = project_triplets_ref(x, w, y)
+    np.testing.assert_allclose(kx, rx, rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(ky, ry, rtol=1e-12, atol=1e-12)
+
+
+def test_ref_matches_scalar_rust_port():
+    rng = np.random.default_rng(0)
+    x, w, y = rand_inputs(rng, 50)
+    rx, ry = project_triplets_ref(x, w, y)
+    sx, sy = project_triplets_scalar(x, w, y)
+    np.testing.assert_allclose(rx, sx, rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(ry, sy, rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=96),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    dtype=st.sampled_from([np.float32, np.float64]),
+)
+def test_kernel_matches_ref_hypothesis(b, seed, dtype):
+    rng = np.random.default_rng(seed)
+    x, w, y = rand_inputs(rng, b, dtype=dtype)
+    kx, ky = project_triplets(x, w, y, block=1)
+    rx, ry = project_triplets_ref(x, w, y)
+    tol = 1e-5 if dtype == np.float32 else 1e-12
+    np.testing.assert_allclose(kx, rx, rtol=tol, atol=tol)
+    np.testing.assert_allclose(ky, ry, rtol=tol, atol=tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_projection_invariants(seed):
+    """After a visit with zero incoming duals, each constraint t is
+    satisfied at its own projection point, duals are nonnegative, and
+    satisfied-with-zero-dual lanes are untouched."""
+    rng = np.random.default_rng(seed)
+    x, w, _ = rand_inputs(rng, 64)
+    y0 = np.zeros_like(x)
+    kx, ky = project_triplets(x, w, y0, block=64)
+    kx, ky = np.array(kx), np.array(ky)
+    assert (ky >= 0.0).all()
+    # After the full sweep the LAST constraint (t=2) is exactly satisfied.
+    s2 = np.array(SIGNS[2])
+    delta2 = (kx * s2).sum(axis=-1)
+    assert (delta2 <= 1e-9).all()
+    # Lanes already metric with no duals are fixed points.
+    metric_mask = np.ones(len(x), dtype=bool)
+    for s in SIGNS:
+        metric_mask &= (x * np.array(s)).sum(axis=-1) <= 0.0
+    np.testing.assert_allclose(kx[metric_mask], x[metric_mask], atol=1e-12)
+    assert np.allclose(ky[metric_mask], 0.0)
+
+
+def test_repeated_sweeps_converge_to_metric():
+    """Iterating the kernel (Dykstra on a single triplet per lane) must
+    converge: all 3 constraints satisfied in the limit."""
+    rng = np.random.default_rng(3)
+    x, w, y = rand_inputs(rng, 32, y_scale=0.0)
+    for _ in range(200):
+        x, y = project_triplets(x, w, y, block=32)
+    x = np.array(x)
+    for s in SIGNS:
+        assert ((x * np.array(s)).sum(axis=-1) <= 1e-8).all()
+
+
+def test_block_size_does_not_change_result():
+    rng = np.random.default_rng(9)
+    x, w, y = rand_inputs(rng, 2048)
+    a = project_triplets(x, w, y, block=1024)
+    b = project_triplets(x, w, y, block=256)
+    c = project_triplets(x, w, y, block=2048)
+    np.testing.assert_allclose(a[0], b[0], atol=1e-12)
+    np.testing.assert_allclose(a[0], c[0], atol=1e-12)
+    np.testing.assert_allclose(a[1], b[1], atol=1e-12)
+
+
+def test_paper_worked_example():
+    """§II-B(c): x_ij=3, x_ik=1, x_jk=1, unit weights -> delta=1,
+    update x_ij -= 1/3, x_ik += 1/3, x_jk += 1/3."""
+    x = np.array([[3.0, 1.0, 1.0]])
+    w = np.ones((1, 3))
+    y = np.zeros((1, 3))
+    kx, ky = project_triplets(x, w, y, block=1)
+    kx = np.array(kx)
+    # first constraint projects to (3-1/3, 1+1/3, 1+1/3); t=1 and t=2 are
+    # then satisfied, so that's the final state.
+    np.testing.assert_allclose(kx, [[3 - 1 / 3, 1 + 1 / 3, 1 + 1 / 3]], atol=1e-12)
+    np.testing.assert_allclose(np.array(ky)[0, 0], 1 / 3, atol=1e-12)
+    assert np.array(ky)[0, 1] == 0.0 and np.array(ky)[0, 2] == 0.0

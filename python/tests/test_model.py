@@ -1,0 +1,88 @@
+"""L2 correctness: pair_sweep and objective_terms vs scalar math mirroring
+rust/src/solver/{projection,termination}.rs."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+jax.config.update("jax_enable_x64", True)
+
+
+def pair_scalar(x, f, winv, d, yu, yl, yb):
+    """Scalar port of visit_pair_upper/lower + visit_box_upper."""
+    # upper
+    delta = x - f - d + 2 * yu * winv
+    theta = max(delta, 0.0) / (2 * winv)
+    c = yu - theta
+    x, f, yu = x + c * winv, f - c * winv, theta
+    # lower
+    delta = d - x - f + 2 * yl * winv
+    theta = max(delta, 0.0) / (2 * winv)
+    c = yl - theta
+    x, f, yl = x - c * winv, f - c * winv, theta
+    # box
+    delta = x + yb * winv - 1.0
+    theta = max(delta, 0.0) / winv
+    c = yb - theta
+    x, yb = x + c * winv, theta
+    return x, f, yu, yl, yb
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1), b=st.integers(1, 64))
+def test_pair_sweep_matches_scalar(seed, b):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1, 2, b)
+    f = rng.uniform(-1, 2, b)
+    winv = rng.uniform(0.3, 3.0, b)
+    d = rng.integers(0, 2, b).astype(float)
+    yu = rng.uniform(0, 0.5, b)
+    yl = rng.uniform(0, 0.5, b)
+    yb = rng.uniform(0, 0.5, b)
+    got = model.pair_sweep(x, f, winv, d, yu, yl, yb)
+    for lane in range(b):
+        want = pair_scalar(x[lane], f[lane], winv[lane], d[lane], yu[lane], yl[lane], yb[lane])
+        for gi, wi in zip(got, want):
+            np.testing.assert_allclose(np.array(gi)[lane], wi, atol=1e-12)
+
+
+def test_pair_sweep_feasible_fixed_point():
+    # x between d-f and d+f, x <= 1, zero duals: nothing moves.
+    x = np.array([0.5, 0.2])
+    f = np.array([1.0, 1.0])
+    winv = np.array([1.0, 2.0])
+    d = np.array([0.0, 1.0])
+    z = np.zeros(2)
+    nx, nf, yu, yl, yb = model.pair_sweep(x, f, winv, d, z, z, z)
+    np.testing.assert_allclose(nx, x, atol=1e-12)
+    np.testing.assert_allclose(nf, f, atol=1e-12)
+    assert np.allclose(yu, 0) and np.allclose(yl, 0) and np.allclose(yb, 0)
+
+
+def test_objective_terms_formulas():
+    rng = np.random.default_rng(1)
+    b = 100
+    x = rng.uniform(0, 1, b)
+    f = rng.uniform(0, 1, b)
+    w = rng.uniform(0.5, 2, b)
+    d = rng.integers(0, 2, b).astype(float)
+    yu = rng.uniform(0, 1, b)
+    yl = rng.uniform(0, 1, b)
+    yb = rng.uniform(0, 1, b)
+    out = np.array(model.objective_terms(x, f, w, d, yu, yl, yb))
+    np.testing.assert_allclose(out[0], (w * f).sum(), rtol=1e-12)
+    np.testing.assert_allclose(out[1], (w * (x**2 + f**2)).sum(), rtol=1e-12)
+    np.testing.assert_allclose(out[2], (d * (yu - yl) + yb).sum(), rtol=1e-12)
+    np.testing.assert_allclose(out[3], (w * np.abs(x - d)).sum(), rtol=1e-12)
+
+
+@pytest.mark.parametrize("b", [1024, 4096])
+def test_triplet_sweep_shapes(b):
+    x = np.zeros((b, 3), np.float32)
+    w = np.ones((b, 3), np.float32)
+    y = np.zeros((b, 3), np.float32)
+    ox, oy = model.triplet_sweep(x, w, y)
+    assert ox.shape == (b, 3) and oy.shape == (b, 3)

@@ -1,0 +1,104 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//!   A1. Constraint ordering / tiling (single-thread wall time): serial
+//!       lexicographic [37] vs wave schedule with b = 1 (Fig 2) vs tiled
+//!       b = 40 (Fig 4) — isolates the cache effect of tiling.
+//!   A2. Assignment policy (simulated p-core time): the paper's r mod p
+//!       vs the rotated variant, tiled schedule, p in {8, 32}.
+//!   A3. Projection engine: scalar CPU hot path vs the AOT-compiled
+//!       Pallas kernel through PJRT (visits/second) — quantifies PJRT
+//!       dispatch overhead at CPU batch sizes.
+//!
+//!     cargo bench --bench ablations
+
+mod common;
+
+use metric_proj::eval::simulate::instrument;
+use metric_proj::eval::{build_instance, time_serial};
+use metric_proj::graph::datasets::Dataset;
+use metric_proj::solver::schedule::{Assignment, Schedule};
+use metric_proj::solver::{dykstra_parallel, dykstra_xla, SolveOpts};
+use metric_proj::util::timer::time;
+
+fn main() {
+    let cfg = common::bench_config();
+    common::print_header("ablations", &cfg);
+    let inst = build_instance(Dataset::CaGrQc, &cfg);
+    println!("instance: ca-GrQc analogue n={}", inst.n);
+
+    // --- A1: ordering / tiling, single thread ---------------------------
+    println!("\n[A1] constraint order (single-thread wall time, {} passes)", cfg.passes);
+    let t_lex = time_serial(&inst, cfg.passes);
+    println!("  serial lexicographic [37] : {t_lex:>7.2}s (baseline)");
+    for b in [1usize, 5, 40] {
+        let opts = SolveOpts {
+            max_passes: cfg.passes,
+            threads: 1,
+            tile: b,
+            check_every: 0,
+            track_pass_times: true,
+            ..Default::default()
+        };
+        let sol = dykstra_parallel::solve(&inst, &opts);
+        let t: f64 = sol.pass_times.iter().sum();
+        println!("  wave schedule b={b:<3}        : {t:>7.2}s ({:+.1}% vs lex)", (t / t_lex - 1.0) * 100.0);
+    }
+
+    // --- A2: assignment policy -------------------------------------------
+    // The paper's r mod p systematically hands worker 0 the largest tile
+    // of every wave; this bites when waves hold only a few tiles per
+    // worker. Report both the deterministic load imbalance and the
+    // simulated pass time, at a tile size giving ~3 tiles/worker (the
+    // regime of the paper's Table I runs).
+    println!("\n[A2] tile-to-worker assignment:");
+    for p in [8usize, 16] {
+        let b_a2 = (inst.n / (3 * p)).max(2);
+        let schedule = Schedule::new(inst.n, b_a2);
+        let ins = instrument(&inst, &schedule, cfg.passes);
+        let imb = |a: Assignment| {
+            let loads: Vec<f64> =
+                schedule.worker_loads(p, a).iter().map(|&x| x as f64).collect();
+            metric_proj::util::stats::load_imbalance(&loads)
+        };
+        let rr = ins.simulate(p, Assignment::RoundRobin);
+        let rot = ins.simulate(p, Assignment::Rotated);
+        println!(
+            "  p={p:<3} b={b_a2:<3} round-robin (paper): {rr:>7.3}s (imbalance {:>5.1}%) | rotated: {rot:>7.3}s (imbalance {:>5.1}%, {:+.1}% time)",
+            imb(Assignment::RoundRobin) * 100.0,
+            imb(Assignment::Rotated) * 100.0,
+            (rot / rr - 1.0) * 100.0
+        );
+    }
+    println!(
+        "  -> finding: rotation fixes the *cumulative* imbalance (worker 0 no\n     longer owns every wave's biggest tile) but pass time is set by the\n     per-wave critical path, which barriers make invariant to who owns\n     which tile. The paper's Fig-3 concern matters for fairness/energy,\n     not wall-clock, as long as waves are barrier-separated."
+    );
+
+    // --- A3: projection engine -------------------------------------------
+    println!("\n[A3] projection engine (n=50, {} passes):", cfg.passes);
+    let small = build_instance_small();
+    let visits = small.n_metric_constraints() as f64 * cfg.passes as f64;
+    let opts = SolveOpts { max_passes: cfg.passes, threads: 1, tile: 16, ..Default::default() };
+    let (_, t_cpu) = time(|| dykstra_parallel::solve(&small, &opts));
+    println!("  CPU scalar engine : {t_cpu:>7.2}s ({:.2e} visits/s)", visits / t_cpu);
+    match metric_proj::runtime::engine::XlaEngine::load("artifacts") {
+        Ok(engine) => {
+            let (res, t_xla) = time(|| dykstra_xla::solve(&small, &opts, &engine));
+            res.expect("xla solve");
+            println!("  XLA/PJRT engine   : {t_xla:>7.2}s ({:.2e} visits/s)", visits / t_xla);
+            println!(
+                "  -> PJRT dispatch overhead dominates at CPU batch sizes ({:.0}x slower);\n     the kernel exists for TPU offload + layer-composition proof.",
+                t_xla / t_cpu
+            );
+        }
+        Err(e) => println!("  XLA engine unavailable ({e}); run `make artifacts`"),
+    }
+}
+
+fn build_instance_small() -> metric_proj::instance::CcLpInstance {
+    let g = Dataset::CaGrQc.generate(50, 42);
+    metric_proj::instance::construction::build_cc_instance(
+        &g,
+        metric_proj::instance::construction::ConstructionParams::default(),
+        1,
+    )
+}

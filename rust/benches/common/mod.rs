@@ -1,0 +1,43 @@
+//! Shared bench-harness helpers (criterion is unavailable offline; the
+//! benches are `harness = false` binaries driven by `cargo bench`).
+
+use metric_proj::eval::{EvalConfig, Scale, TimingMode};
+
+/// Passes per timing run: the paper uses 20; benches default to 5 (the
+/// speedup ratios are stable in the pass count) and honor
+/// `METRIC_PROJ_BENCH_PASSES` for full-fidelity runs.
+pub fn bench_passes() -> usize {
+    std::env::var("METRIC_PROJ_BENCH_PASSES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5)
+}
+
+/// Scale override via `METRIC_PROJ_BENCH_SCALE` (smoke|small|paper).
+pub fn bench_scale() -> Scale {
+    std::env::var("METRIC_PROJ_BENCH_SCALE")
+        .ok()
+        .and_then(|s| Scale::parse(&s))
+        .unwrap_or(Scale::Small)
+}
+
+/// Default bench config: simulated timing unless the machine has real
+/// parallelism AND `METRIC_PROJ_BENCH_TIMING=real` is set.
+pub fn bench_config() -> EvalConfig {
+    let mut cfg = EvalConfig::default();
+    cfg.scale = bench_scale();
+    cfg.passes = bench_passes();
+    if let Ok(s) = std::env::var("METRIC_PROJ_BENCH_TIMING") {
+        if let Some(t) = TimingMode::parse(&s) {
+            cfg.timing = t;
+        }
+    }
+    cfg
+}
+
+pub fn print_header(name: &str, cfg: &EvalConfig) {
+    println!(
+        "\n### bench {name}: scale={:?} passes={} tile={:?} timing={:?}",
+        cfg.scale, cfg.passes, cfg.tile, cfg.timing
+    );
+}

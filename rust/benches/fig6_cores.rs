@@ -1,0 +1,24 @@
+//! Regenerates the paper's **Figure 6**: speedup vs core count on
+//! ca-HepPh with tile size 40 (paper: 1 core, then 8..40 in steps of 4 —
+//! performance climbs sharply then levels off).
+//!
+//!     cargo bench --bench fig6_cores
+
+mod common;
+
+use metric_proj::eval::fig6;
+use metric_proj::graph::datasets::Dataset;
+
+fn main() {
+    let cfg = common::bench_config();
+    common::print_header("fig6 (ca-HepPh, speedup vs cores)", &cfg);
+    let cores: Vec<usize> = (8..=40).step_by(4).collect();
+    let pts = fig6(&cfg, Dataset::CaHepPh, &cores, |c, t, s| {
+        println!("cores={c:<3} time={t:>8.2}s speedup={s:.2}");
+    });
+    // ascii curve
+    println!("\nspeedup curve:");
+    for (c, _, s) in &pts {
+        println!("{c:>3} | {}", "#".repeat((s * 4.0).round() as usize));
+    }
+}

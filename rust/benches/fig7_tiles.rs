@@ -1,0 +1,23 @@
+//! Regenerates the paper's **Figure 7**: speedup vs tile size on ca-GrQc
+//! at 16 cores, tiles 5..50 step 5 (paper: rises to a peak near b=25,
+//! then slowly decreases).
+//!
+//!     cargo bench --bench fig7_tiles
+
+mod common;
+
+use metric_proj::eval::fig7;
+use metric_proj::graph::datasets::Dataset;
+
+fn main() {
+    let cfg = common::bench_config();
+    common::print_header("fig7 (ca-GrQc, speedup vs tile size, 16 cores)", &cfg);
+    let tiles: Vec<usize> = (1..=10).map(|i| i * 5).collect();
+    let pts = fig7(&cfg, Dataset::CaGrQc, 16, &tiles, |b, t, s| {
+        println!("tile={b:<3} time={t:>8.2}s speedup={s:.2}");
+    });
+    println!("\nspeedup curve:");
+    for (b, _, s) in &pts {
+        println!("b={b:>2} | {}", "#".repeat((s * 4.0).round() as usize));
+    }
+}

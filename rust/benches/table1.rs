@@ -1,0 +1,25 @@
+//! Regenerates the paper's **Table I**: time for a fixed number of
+//! Dykstra iterations on all five graphs at 1/8/16/32/64 cores, tile 40.
+//!
+//!     cargo bench --bench table1
+//!     METRIC_PROJ_BENCH_PASSES=20 METRIC_PROJ_BENCH_SCALE=small cargo bench --bench table1
+
+mod common;
+
+use metric_proj::eval::{render_table1, table1};
+use metric_proj::graph::datasets::Dataset;
+
+fn main() {
+    let cfg = common::bench_config();
+    common::print_header("table1", &cfg);
+    println!(
+        "paper reference shapes: 8 cores 4.2-5.1x | 16 cores 5.3-6.7x | 32 cores 7.3-8x | 64 cores 11.5x"
+    );
+    let rows = table1(&cfg, &Dataset::ALL, |r| {
+        println!(
+            "{:<11} n={:<5} cores={:<3} time={:>8.2}s speedup={:.2}",
+            r.dataset, r.n, r.cores, r.time_s, r.speedup
+        );
+    });
+    println!("\n{}", render_table1(&rows));
+}

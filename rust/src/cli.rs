@@ -1,0 +1,123 @@
+//! Minimal command-line argument parsing (no `clap` in the offline build).
+//!
+//! Grammar: `metric-proj <command> [--key value]... [--flag]...`
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut options = HashMap::new();
+        let mut flags = Vec::new();
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                // `--key value` or bare `--flag`
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        options.insert(key.to_string(), it.next().unwrap());
+                    }
+                    _ => flags.push(key.to_string()),
+                }
+            } else {
+                return Err(format!("unexpected positional argument: {arg}"));
+            }
+        }
+        Ok(Args { command, options, flags })
+    }
+
+    /// Parse from the process arguments.
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    /// Typed option with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: cannot parse `{v}`")),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, key: &str) -> Result<Option<Vec<usize>>, String> {
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().map_err(|_| format!("--{key}: bad item `{s}`")))
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+
+    /// Boolean flag.
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn basic_parse() {
+        let a = parse("solve --n 100 --threads 8 --verbose");
+        assert_eq!(a.command, "solve");
+        assert_eq!(a.get("n"), Some("100"));
+        assert_eq!(a.get_or("threads", 1usize).unwrap(), 8);
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("solve");
+        assert_eq!(a.get_or("tile", 40usize).unwrap(), 40);
+        assert_eq!(a.get("dataset"), None);
+    }
+
+    #[test]
+    fn lists_parse() {
+        let a = parse("table1 --cores 1,8,16");
+        assert_eq!(a.get_list("cores").unwrap(), Some(vec![1, 8, 16]));
+        assert_eq!(a.get_list("tiles").unwrap(), None);
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = parse("solve --n abc");
+        assert!(a.get_or("n", 1usize).is_err());
+    }
+
+    #[test]
+    fn positional_rejected() {
+        assert!(Args::parse(["solve".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = parse("run --fast --n 5");
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.get_or("n", 0usize).unwrap(), 5);
+    }
+}

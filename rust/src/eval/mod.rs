@@ -1,0 +1,352 @@
+//! Evaluation harness: regenerates every table and figure of the paper's
+//! §IV on this machine (DESIGN.md §4 maps each experiment to the modules
+//! it exercises). Shared by the CLI (`metric-proj table1|fig6|fig7`) and
+//! the cargo benches.
+
+pub mod simulate;
+
+use crate::graph::datasets::Dataset;
+use crate::instance::construction::{build_cc_instance, ConstructionParams};
+use crate::instance::CcLpInstance;
+use crate::solver::schedule::{Assignment, Schedule};
+use crate::solver::{dykstra_parallel, dykstra_serial, SolveOpts};
+use crate::util::parallel::available_cores;
+
+/// How parallel pass times are obtained.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimingMode {
+    /// Real threads and wall clock (needs a multi-core machine).
+    Real,
+    /// Instrumented single-thread execution folded through the machine
+    /// model of [`simulate`] — the only honest option on 1 core.
+    Simulated,
+}
+
+impl TimingMode {
+    pub fn parse(s: &str) -> Option<TimingMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "real" => Some(TimingMode::Real),
+            "sim" | "simulated" => Some(TimingMode::Simulated),
+            _ => None,
+        }
+    }
+
+    /// Real when the machine can actually run threads in parallel.
+    pub fn auto() -> TimingMode {
+        if available_cores() > 1 {
+            TimingMode::Real
+        } else {
+            TimingMode::Simulated
+        }
+    }
+}
+
+/// Scaled problem sizes: Table I at paper scale takes days on one core in
+/// Julia; we default to n that regenerate the table's *shape* in minutes
+/// and keep the paper's size ordering across datasets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Tiny (CI): n ~ 100-530 (paper n / 34).
+    Smoke,
+    /// Default: n ~ 520-2240 (paper n / 8; minutes for the full table).
+    Small,
+    /// Paper-sized n (hours+; only sensible on a large machine).
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s.to_ascii_lowercase().as_str() {
+            "smoke" => Some(Scale::Smoke),
+            "small" => Some(Scale::Small),
+            "paper" | "full" => Some(Scale::Paper),
+            _ => None,
+        }
+    }
+
+    /// Target LCC size for a dataset at this scale. Scaling preserves the
+    /// paper's ordering ca-GrQc < power < ca-HepTh < ca-HepPh < ca-AstroPh.
+    pub fn n_for(self, d: Dataset) -> usize {
+        match self {
+            Scale::Paper => d.paper_n(),
+            // paper_n / 14 and / 34 keep the relative sizes intact.
+            Scale::Small => (d.paper_n() / 8).max(200),
+            Scale::Smoke => (d.paper_n() / 34).max(100),
+        }
+    }
+}
+
+/// One row of Table I.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub dataset: &'static str,
+    pub n: usize,
+    pub constraints: u128,
+    pub cores: usize,
+    pub time_s: f64,
+    pub speedup: f64,
+}
+
+/// Tile-size policy for scaled runs.
+///
+/// The paper uses `b = 40` at `n = 4158..17903`, i.e. `n/b ≈ 104..448`
+/// tiles per grid dimension — plenty of tiles per wave for up to 64
+/// workers. At scaled-down `n`, a *fixed* b = 40 leaves so few tiles per
+/// wave that the wave critical path (the single biggest tile) caps the
+/// speedup regardless of p; preserving the paper's **n/b ratio** preserves
+/// its parallelism shape, which is what Table I measures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TilePolicy {
+    /// Use exactly this tile size (paper-faithful at paper scale).
+    Fixed(usize),
+    /// b = max(4, n / 104): the paper's ca-GrQc ratio (4158 / 40).
+    PaperRatio,
+}
+
+impl TilePolicy {
+    /// Resolve to a concrete tile size for problem size `n`.
+    pub fn tile_for(self, n: usize) -> usize {
+        match self {
+            TilePolicy::Fixed(b) => b,
+            TilePolicy::PaperRatio => (n / 104).max(4),
+        }
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct EvalConfig {
+    pub scale: Scale,
+    pub passes: usize,
+    pub tile: TilePolicy,
+    pub cores: Vec<usize>,
+    pub seed: u64,
+    pub assignment: Assignment,
+    pub timing: TimingMode,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        let timing = TimingMode::auto();
+        // Paper's core counts; in simulated mode they need no clamping.
+        let cores: Vec<usize> = match timing {
+            TimingMode::Simulated => vec![8, 16, 32, 64],
+            TimingMode::Real => {
+                let avail = available_cores();
+                [8usize, 16, 32, 64].iter().copied().filter(|&c| c <= avail).collect()
+            }
+        };
+        EvalConfig {
+            scale: Scale::Small,
+            passes: 20, // the paper times 20 iterations
+            // Paper's Table I is b = 40; at scaled n the harness keeps
+            // the paper's n/b ratio instead (see TilePolicy).
+            tile: TilePolicy::PaperRatio,
+            cores,
+            seed: 42,
+            assignment: Assignment::RoundRobin,
+            timing,
+        }
+    }
+}
+
+/// Build the CC-LP instance for a dataset at the configured scale,
+/// exactly as §IV-B: generate/load graph -> LCC -> Jaccard construction.
+pub fn build_instance(d: Dataset, cfg: &EvalConfig) -> CcLpInstance {
+    let n_target = cfg.scale.n_for(d);
+    let g = d.load_or_generate(std::path::Path::new("data"), n_target, cfg.seed);
+    build_cc_instance(&g, ConstructionParams::default(), available_cores())
+}
+
+/// Seconds to run `passes` full Dykstra passes (pass time only: instance
+/// setup and the final residual computation are excluded, matching §IV-D's
+/// "time it takes to complete a fixed number of iterations").
+pub fn time_parallel(inst: &CcLpInstance, cores: usize, tile: usize, passes: usize,
+                     assignment: Assignment) -> f64 {
+    let opts = SolveOpts {
+        max_passes: passes,
+        threads: cores,
+        tile,
+        check_every: 0,
+        track_pass_times: true,
+        assignment,
+        ..Default::default()
+    };
+    let sol = dykstra_parallel::solve(inst, &opts);
+    sol.pass_times.iter().sum()
+}
+
+/// Serial baseline ([37]'s ordering) timing.
+pub fn time_serial(inst: &CcLpInstance, passes: usize) -> f64 {
+    let opts = SolveOpts {
+        max_passes: passes,
+        check_every: 0,
+        track_pass_times: true,
+        ..Default::default()
+    };
+    let sol = dykstra_serial::solve(inst, &opts);
+    sol.pass_times.iter().sum()
+}
+
+/// Regenerate Table I. `emit` receives each row as it completes so long
+/// runs stream progress.
+pub fn table1(cfg: &EvalConfig, datasets: &[Dataset], mut emit: impl FnMut(&Table1Row)) -> Vec<Table1Row> {
+    let mut rows = Vec::new();
+    for &d in datasets {
+        let inst = build_instance(d, cfg);
+        let constraints = inst.n_constraints();
+        let serial = time_serial(&inst, cfg.passes);
+        let row = Table1Row {
+            dataset: d.name(),
+            n: inst.n,
+            constraints,
+            cores: 1,
+            time_s: serial,
+            speedup: 1.0,
+        };
+        emit(&row);
+        rows.push(row);
+        for (c, t) in times_for_cores(&inst, cfg, cfg.tile.tile_for(inst.n), &cfg.cores) {
+            let row = Table1Row {
+                dataset: d.name(),
+                n: inst.n,
+                constraints,
+                cores: c,
+                time_s: t,
+                speedup: serial / t,
+            };
+            emit(&row);
+            rows.push(row);
+        }
+    }
+    rows
+}
+
+/// Fig 6: speedup vs core count on one dataset (paper: ca-HepPh, b=40,
+/// cores 1 then 8..40 step 4).
+pub fn fig6(cfg: &EvalConfig, dataset: Dataset, core_counts: &[usize],
+            mut emit: impl FnMut(usize, f64, f64)) -> Vec<(usize, f64, f64)> {
+    let inst = build_instance(dataset, cfg);
+    let serial = time_serial(&inst, cfg.passes);
+    emit(1, serial, 1.0);
+    let mut out = vec![(1, serial, 1.0)];
+    let cores: Vec<usize> = core_counts.iter().copied().filter(|&c| c > 1).collect();
+    for (c, t) in times_for_cores(&inst, cfg, cfg.tile.tile_for(inst.n), &cores) {
+        emit(c, t, serial / t);
+        out.push((c, t, serial / t));
+    }
+    out
+}
+
+/// Fig 7: speedup vs tile size at fixed cores (paper: ca-GrQc, 16 cores,
+/// b in 5..=50 step 5).
+pub fn fig7(cfg: &EvalConfig, dataset: Dataset, cores: usize, tiles: &[usize],
+            mut emit: impl FnMut(usize, f64, f64)) -> Vec<(usize, f64, f64)> {
+    let inst = build_instance(dataset, cfg);
+    let serial = time_serial(&inst, cfg.passes);
+    let mut out = Vec::new();
+    for &b in tiles {
+        let t = times_for_cores(&inst, cfg, b, &[cores])[0].1;
+        emit(b, t, serial / t);
+        out.push((b, t, serial / t));
+    }
+    out
+}
+
+/// Parallel pass times for a list of core counts, honoring the timing
+/// mode. Simulated mode instruments ONCE per (instance, tile) and
+/// evaluates every core count from the same per-tile measurements.
+pub fn times_for_cores(
+    inst: &CcLpInstance,
+    cfg: &EvalConfig,
+    tile: usize,
+    cores: &[usize],
+) -> Vec<(usize, f64)> {
+    match cfg.timing {
+        TimingMode::Real => cores
+            .iter()
+            .map(|&c| (c, time_parallel(inst, c, tile, cfg.passes, cfg.assignment)))
+            .collect(),
+        TimingMode::Simulated => {
+            let schedule = Schedule::new(inst.n, tile);
+            let ins = simulate::instrument(inst, &schedule, cfg.passes);
+            cores.iter().map(|&c| (c, ins.simulate(c, cfg.assignment))).collect()
+        }
+    }
+}
+
+/// Render rows in the paper's Table I layout (markdown).
+pub fn render_table1(rows: &[Table1Row]) -> String {
+    let mut s = String::from(
+        "| Graph | # constraints | # Cores | Time (s) | Speedup |\n|---|---|---|---|---|\n",
+    );
+    let mut last = "";
+    for r in rows {
+        let (name, cons) = if r.dataset == last {
+            (String::new(), String::new())
+        } else {
+            last = r.dataset;
+            (format!("{} (n={})", r.dataset, r.n), format!("{:.1e}", r.constraints as f64))
+        };
+        s.push_str(&format!(
+            "| {name} | {cons} | {} | {:.2} | {:.2} |\n",
+            r.cores, r.time_s, r.speedup
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_preserves_order() {
+        for scale in [Scale::Smoke, Scale::Small, Scale::Paper] {
+            let ns: Vec<usize> = Dataset::ALL.iter().map(|&d| scale.n_for(d)).collect();
+            let mut sorted = ns.clone();
+            sorted.sort_unstable();
+            assert_eq!(ns, sorted, "{scale:?} broke Table I ordering");
+        }
+        assert_eq!(Scale::Paper.n_for(Dataset::CaAstroPh), 17903);
+    }
+
+    #[test]
+    fn scale_parse() {
+        assert_eq!(Scale::parse("small"), Some(Scale::Small));
+        assert_eq!(Scale::parse("PAPER"), Some(Scale::Paper));
+        assert_eq!(Scale::parse("full"), Some(Scale::Paper));
+        assert_eq!(Scale::parse("nope"), None);
+    }
+
+    #[test]
+    fn timing_runs_and_speedup_sane() {
+        // micro smoke: n ~ 100, 1 pass, 2 cores
+        let cfg = EvalConfig {
+            scale: Scale::Smoke,
+            passes: 1,
+            tile: TilePolicy::Fixed(10),
+            cores: vec![2],
+            seed: 1,
+            assignment: Assignment::RoundRobin,
+            timing: TimingMode::Simulated,
+        };
+        let inst = build_instance(Dataset::CaGrQc, &cfg);
+        assert!(inst.n >= 100);
+        let ts = time_serial(&inst, 1);
+        let tp = time_parallel(&inst, 2, 10, 1, Assignment::RoundRobin);
+        assert!(ts > 0.0 && tp > 0.0);
+        // don't assert speedup in CI-sized runs; just that both complete
+    }
+
+    #[test]
+    fn render_table_has_all_rows() {
+        let rows = vec![
+            Table1Row { dataset: "x", n: 10, constraints: 360, cores: 1, time_s: 1.0, speedup: 1.0 },
+            Table1Row { dataset: "x", n: 10, constraints: 360, cores: 8, time_s: 0.25, speedup: 4.0 },
+        ];
+        let s = render_table1(&rows);
+        assert_eq!(s.lines().count(), 4);
+        assert!(s.contains("4.00"));
+    }
+}

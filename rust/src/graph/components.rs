@@ -1,0 +1,90 @@
+//! Connected components; the paper takes the largest connected component
+//! (LCC) of each input graph before building the instance (§IV-B).
+
+use super::Graph;
+
+/// Label each node with a component id (0-based, by discovery order).
+pub fn components(g: &Graph) -> Vec<usize> {
+    let n = g.n();
+    let mut comp = vec![usize::MAX; n];
+    let mut next = 0usize;
+    let mut queue = std::collections::VecDeque::new();
+    for s in 0..n {
+        if comp[s] != usize::MAX {
+            continue;
+        }
+        comp[s] = next;
+        queue.push_back(s);
+        while let Some(u) = queue.pop_front() {
+            for &v in g.neighbors(u) {
+                let v = v as usize;
+                if comp[v] == usize::MAX {
+                    comp[v] = next;
+                    queue.push_back(v);
+                }
+            }
+        }
+        next += 1;
+    }
+    comp
+}
+
+/// Induced subgraph on the largest connected component.
+/// Ties broken by smallest component id (deterministic).
+pub fn largest_component(g: &Graph) -> Graph {
+    let comp = components(g);
+    let k = comp.iter().copied().max().map(|m| m + 1).unwrap_or(0);
+    let mut sizes = vec![0usize; k];
+    for &c in &comp {
+        sizes[c] += 1;
+    }
+    let best = (0..k).max_by_key(|&c| (sizes[c], std::cmp::Reverse(c))).unwrap_or(0);
+    let nodes: Vec<usize> = (0..g.n()).filter(|&u| comp[u] == best).collect();
+    g.induced(&nodes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_component() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let c = components(&g);
+        assert!(c.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn two_components() {
+        let g = Graph::from_edges(5, &[(0, 1), (2, 3), (3, 4)]);
+        let c = components(&g);
+        assert_eq!(c[0], c[1]);
+        assert_eq!(c[2], c[3]);
+        assert_eq!(c[3], c[4]);
+        assert_ne!(c[0], c[2]);
+    }
+
+    #[test]
+    fn isolated_nodes_are_own_components() {
+        let g = Graph::from_edges(3, &[]);
+        let c = components(&g);
+        assert_eq!(c, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn lcc_picks_larger() {
+        // component {0,1} size 2; component {2,3,4} size 3
+        let g = Graph::from_edges(5, &[(0, 1), (2, 3), (3, 4)]);
+        let lcc = largest_component(&g);
+        assert_eq!(lcc.n(), 3);
+        assert_eq!(lcc.m(), 2);
+    }
+
+    #[test]
+    fn lcc_of_connected_graph_is_identity_shape() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let lcc = largest_component(&g);
+        assert_eq!(lcc.n(), 4);
+        assert_eq!(lcc.m(), 4);
+    }
+}

@@ -1,0 +1,148 @@
+//! Catalog of the paper's evaluation datasets and their synthetic analogues.
+//!
+//! The paper (§IV-B) uses five graphs: `power` (SuiteSparse/Newman, Watts &
+//! Strogatz's western-US power grid) and four SNAP collaboration networks
+//! (`ca-GrQc`, `ca-HepTh`, `ca-HepPh`, `ca-AstroPh`), each reduced to its
+//! largest connected component. This environment has no network access, so
+//! each entry carries (a) the paper's LCC size, (b) a deterministic
+//! generator reproducing the structural family, and (c) a file stem so a
+//! real SNAP edge list is used instead when present under `data/`.
+//! See DESIGN.md §5 for why this substitution preserves Table I's shape.
+
+use super::components::largest_component;
+use super::generators;
+use super::io;
+use super::Graph;
+
+/// One paper dataset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dataset {
+    CaGrQc,
+    Power,
+    CaHepTh,
+    CaHepPh,
+    CaAstroPh,
+}
+
+impl Dataset {
+    /// All datasets in Table I order.
+    pub const ALL: [Dataset; 5] =
+        [Dataset::CaGrQc, Dataset::Power, Dataset::CaHepTh, Dataset::CaHepPh, Dataset::CaAstroPh];
+
+    /// Paper's name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Dataset::CaGrQc => "ca-GrQc",
+            Dataset::Power => "power",
+            Dataset::CaHepTh => "ca-HepTh",
+            Dataset::CaHepPh => "ca-HepPh",
+            Dataset::CaAstroPh => "ca-AstroPh",
+        }
+    }
+
+    /// Parse a paper dataset name (case-insensitive).
+    pub fn parse(s: &str) -> Option<Dataset> {
+        Dataset::ALL.iter().copied().find(|d| d.name().eq_ignore_ascii_case(s))
+    }
+
+    /// LCC size used in the paper (Table I).
+    pub fn paper_n(self) -> usize {
+        match self {
+            Dataset::CaGrQc => 4158,
+            Dataset::Power => 4941,
+            Dataset::CaHepTh => 8638,
+            Dataset::CaHepPh => 11204,
+            Dataset::CaAstroPh => 17903,
+        }
+    }
+
+    /// Generate the synthetic analogue at target LCC size `n`, then take
+    /// the LCC exactly as the paper does. The returned graph's node count
+    /// is close to (and at most) `n_target`.
+    pub fn generate(self, n_target: usize, seed: u64) -> Graph {
+        let g = match self {
+            // Watts–Strogatz: the power grid is the canonical small-world
+            // example (same Watts–Strogatz 1998 paper the dataset is from);
+            // mean degree ~2.7 in the real data → k=4 ring with rewiring.
+            Dataset::Power => generators::watts_strogatz(n_target, 4, 0.1, seed),
+            // Collaboration nets: planted co-authorship groups + heavy-tail
+            // cross links. Group counts scale with n; densities tuned per
+            // network family (GrQc sparse ... AstroPh dense).
+            Dataset::CaGrQc => {
+                generators::collaboration(n_target, (n_target / 24).max(2), 0.55, 1, seed)
+            }
+            Dataset::CaHepTh => {
+                generators::collaboration(n_target, (n_target / 20).max(2), 0.5, 1, seed)
+            }
+            Dataset::CaHepPh => {
+                generators::collaboration(n_target, (n_target / 16).max(2), 0.6, 2, seed)
+            }
+            Dataset::CaAstroPh => {
+                generators::collaboration(n_target, (n_target / 12).max(2), 0.65, 3, seed)
+            }
+        };
+        largest_component(&g)
+    }
+
+    /// Load the graph: a real edge list `data/<name>.txt` if present
+    /// (taking the LCC), else the synthetic analogue at `n_target`.
+    pub fn load_or_generate(self, data_dir: &std::path::Path, n_target: usize, seed: u64) -> Graph {
+        let path = data_dir.join(format!("{}.txt", self.name()));
+        if path.exists() {
+            match io::load_edge_list(&path) {
+                Ok(g) => return largest_component(&g),
+                Err(e) => eprintln!(
+                    "warning: failed to load {} ({e}); falling back to synthetic analogue",
+                    path.display()
+                ),
+            }
+        }
+        self.generate(n_target, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for d in Dataset::ALL {
+            assert_eq!(Dataset::parse(d.name()), Some(d));
+            assert_eq!(Dataset::parse(&d.name().to_uppercase()), Some(d));
+        }
+        assert_eq!(Dataset::parse("nope"), None);
+    }
+
+    #[test]
+    fn paper_sizes_ordered() {
+        // Table I order is ascending in constraint count.
+        let sizes: Vec<usize> = Dataset::ALL.iter().map(|d| d.paper_n()).collect();
+        assert_eq!(sizes, vec![4158, 4941, 8638, 11204, 17903]);
+    }
+
+    #[test]
+    fn generate_connected_and_near_target() {
+        for d in Dataset::ALL {
+            let g = d.generate(200, 1);
+            assert!(g.n() >= 120, "{}: lcc too small ({})", d.name(), g.n());
+            assert!(g.n() <= 200);
+            // connectivity: LCC by construction
+            let lcc = crate::graph::components::largest_component(&g);
+            assert_eq!(lcc.n(), g.n());
+        }
+    }
+
+    #[test]
+    fn generate_deterministic() {
+        let a = Dataset::CaGrQc.generate(150, 9);
+        let b = Dataset::CaGrQc.generate(150, 9);
+        assert_eq!(a.edges(), b.edges());
+    }
+
+    #[test]
+    fn load_or_generate_falls_back() {
+        let g = Dataset::Power.load_or_generate(std::path::Path::new("/nonexistent"), 100, 2);
+        assert!(g.n() > 50);
+    }
+}

@@ -1,0 +1,249 @@
+//! Deterministic synthetic graph generators.
+//!
+//! The paper's evaluation graphs come from SNAP / SuiteSparse, which are
+//! unreachable in this offline environment. DESIGN.md §5 documents the
+//! substitution: we generate structural analogues — Watts–Strogatz for the
+//! `power` grid, planted-partition + preferential attachment for the
+//! `ca-*` collaboration networks — with matched (scaled) LCC sizes. The
+//! solver's per-iteration work is exactly `3·C(n,3)` constraint visits, so
+//! Table I's parallel-scaling behaviour depends on `n` and memory layout,
+//! not on where the weights came from; the instance construction (Jaccard +
+//! sign map) is applied identically to real or synthetic graphs.
+
+use super::Graph;
+use crate::util::rng::Rng;
+
+/// Erdős–Rényi G(n, p).
+pub fn erdos_renyi(n: usize, p: f64, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::new();
+    for i in 0..n as u32 {
+        for j in (i + 1)..n as u32 {
+            if rng.bool(p) {
+                edges.push((i, j));
+            }
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Watts–Strogatz small-world ring: each node connects to `k/2` neighbors
+/// on each side, each edge rewired with probability `beta`. Structural
+/// analogue for the Western US `power` grid (Watts & Strogatz 1998 — the
+/// same paper the dataset comes from).
+pub fn watts_strogatz(n: usize, k: usize, beta: f64, seed: u64) -> Graph {
+    assert!(k < n && k % 2 == 0, "watts_strogatz requires even k < n");
+    let mut rng = Rng::new(seed);
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(n * k / 2);
+    for u in 0..n {
+        for d in 1..=(k / 2) {
+            let v = (u + d) % n;
+            let (mut a, mut b) = (u as u32, v as u32);
+            if rng.bool(beta) {
+                // Rewire endpoint b to a uniform non-self target; duplicate
+                // edges are dropped by Graph::from_edges.
+                let mut t = rng.usize_in(0, n - 1);
+                if t >= u {
+                    t += 1;
+                }
+                b = t as u32;
+                a = u as u32;
+            }
+            edges.push((a, b));
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Barabási–Albert preferential attachment: each new node attaches to `m`
+/// existing nodes chosen proportionally to degree.
+pub fn barabasi_albert(n: usize, m: usize, seed: u64) -> Graph {
+    assert!(m >= 1 && n > m);
+    let mut rng = Rng::new(seed);
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(n * m);
+    // Repeated-endpoint list: sampling uniformly from it = degree-biased.
+    let mut endpoints: Vec<u32> = Vec::with_capacity(2 * n * m);
+    // Seed clique on m+1 nodes.
+    for i in 0..=(m as u32) {
+        for j in (i + 1)..=(m as u32) {
+            edges.push((i, j));
+            endpoints.push(i);
+            endpoints.push(j);
+        }
+    }
+    for u in (m + 1)..n {
+        let mut targets = std::collections::HashSet::with_capacity(m);
+        while targets.len() < m {
+            let t = endpoints[rng.usize_in(0, endpoints.len())];
+            targets.insert(t);
+        }
+        for &t in &targets {
+            edges.push((u as u32, t));
+            endpoints.push(u as u32);
+            endpoints.push(t);
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Collaboration-network analogue: planted communities with dense in-group
+/// wiring plus preferential cross-links, mimicking co-authorship structure
+/// (high clustering, heavy-tailed degrees) of the SNAP `ca-*` graphs.
+pub fn collaboration(n: usize, n_comm: usize, p_in: f64, m_cross: usize, seed: u64) -> Graph {
+    assert!(n_comm >= 1 && n >= n_comm);
+    let mut rng = Rng::new(seed);
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    // Community sizes: heavy-ish tail via repeated halving.
+    let mut comm_of = vec![0usize; n];
+    for (u, c) in comm_of.iter_mut().enumerate() {
+        // Zipf-ish assignment: community k gets ~ 1/(k+1) share.
+        let r = rng.f64();
+        let mut acc = 0.0;
+        let norm: f64 = (0..n_comm).map(|k| 1.0 / (k + 1) as f64).sum();
+        let mut chosen = n_comm - 1;
+        for k in 0..n_comm {
+            acc += (1.0 / (k + 1) as f64) / norm;
+            if r < acc {
+                chosen = k;
+                break;
+            }
+        }
+        *c = chosen;
+        let _ = u;
+    }
+    // Dense in-community edges ("paper cliques").
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); n_comm];
+    for (u, &c) in comm_of.iter().enumerate() {
+        members[c].push(u as u32);
+    }
+    for group in &members {
+        for ai in 0..group.len() {
+            for bi in (ai + 1)..group.len() {
+                if rng.bool(p_in) {
+                    edges.push((group[ai], group[bi]));
+                }
+            }
+        }
+    }
+    // Preferential cross-community links.
+    let mut endpoints: Vec<u32> = edges.iter().flat_map(|&(a, b)| [a, b]).collect();
+    if endpoints.is_empty() {
+        endpoints.extend(0..n as u32);
+    }
+    for _ in 0..(n * m_cross) {
+        let u = rng.usize_in(0, n) as u32;
+        let v = endpoints[rng.usize_in(0, endpoints.len())];
+        if u != v {
+            edges.push((u.min(v), u.max(v)));
+            endpoints.push(u);
+            endpoints.push(v);
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// A ready-made small connected test graph (two cliques joined by a bridge),
+/// handy for quickstart examples and unit tests.
+pub fn two_cliques(k: usize) -> Graph {
+    let n = 2 * k;
+    let mut edges = Vec::new();
+    for i in 0..k as u32 {
+        for j in (i + 1)..k as u32 {
+            edges.push((i, j));
+            edges.push((i + k as u32, j + k as u32));
+        }
+    }
+    edges.push((0, k as u32)); // bridge
+    Graph::from_edges(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::components::largest_component;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn er_determinism() {
+        let a = erdos_renyi(50, 0.1, 7);
+        let b = erdos_renyi(50, 0.1, 7);
+        assert_eq!(a.edges(), b.edges());
+        let c = erdos_renyi(50, 0.1, 8);
+        assert_ne!(a.edges(), c.edges());
+    }
+
+    #[test]
+    fn er_density_sane() {
+        let g = erdos_renyi(200, 0.05, 1);
+        let expect = 0.05 * (200.0 * 199.0 / 2.0);
+        let m = g.m() as f64;
+        assert!((m - expect).abs() < 0.3 * expect, "m={m} expect~{expect}");
+    }
+
+    #[test]
+    fn ws_ring_unrewired() {
+        let g = watts_strogatz(20, 4, 0.0, 1);
+        // Pure ring lattice: every node has degree 4.
+        for u in 0..20 {
+            assert_eq!(g.degree(u), 4);
+        }
+        assert!(g.has_edge(0, 1));
+        assert!(g.has_edge(0, 2));
+        assert!(g.has_edge(0, 19));
+    }
+
+    #[test]
+    fn ws_rewired_keeps_edge_budget() {
+        let g = watts_strogatz(100, 6, 0.3, 2);
+        // Rewiring can only lose edges to dedup; never gain.
+        assert!(g.m() <= 300);
+        assert!(g.m() > 250);
+        assert!(largest_component(&g).n() >= 95);
+    }
+
+    #[test]
+    fn ba_degrees_heavy_tailed() {
+        let g = barabasi_albert(500, 3, 3);
+        let max_deg = (0..500).map(|u| g.degree(u)).max().unwrap();
+        let mean_deg = 2.0 * g.m() as f64 / 500.0;
+        assert!(max_deg as f64 > 4.0 * mean_deg, "max={max_deg} mean={mean_deg}");
+        assert_eq!(largest_component(&g).n(), 500); // BA is connected
+    }
+
+    #[test]
+    fn collaboration_clusters() {
+        let g = collaboration(300, 12, 0.6, 2, 4);
+        assert!(g.m() > 300);
+        let lcc = largest_component(&g);
+        assert!(lcc.n() > 150, "lcc={}", lcc.n());
+    }
+
+    #[test]
+    fn two_cliques_shape() {
+        let g = two_cliques(4);
+        assert_eq!(g.n(), 8);
+        assert_eq!(g.m(), 2 * 6 + 1);
+        assert!(g.has_edge(0, 4));
+    }
+
+    #[test]
+    fn generators_property_no_self_loops_or_dupes() {
+        check("generators clean", 0xBEEF, 16, |rng, _| {
+            let n = rng.usize_in(10, 120);
+            let g = match rng.usize_in(0, 3) {
+                0 => erdos_renyi(n, 0.1, rng.next_u64()),
+                1 => watts_strogatz(n, 4.min((n - 1) & !1), 0.2, rng.next_u64()),
+                _ => barabasi_albert(n, 2.min(n - 1), rng.next_u64()),
+            };
+            for u in 0..g.n() {
+                let nb = g.neighbors(u);
+                prop_assert!(!nb.contains(&(u as u32)), "self loop at {u}");
+                for w in nb.windows(2) {
+                    prop_assert!(w[0] < w[1], "unsorted/dup adjacency at {u}");
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,112 @@
+//! Edge-list IO.
+//!
+//! Loads the standard whitespace-separated edge-list format used by the
+//! SNAP repository (`ca-GrQc.txt` etc., `#` comments) and the SuiteSparse
+//! exports, so the *real* paper datasets drop in unchanged when available.
+//! Node ids are compacted to `0..n`.
+
+use super::Graph;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Parse an edge list from text. Lines starting with `#` or `%` are
+/// comments; each data line holds two whitespace-separated node ids.
+pub fn parse_edge_list(text: &str) -> Result<Graph> {
+    let mut ids: HashMap<u64, u32> = HashMap::new();
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let intern = |raw: u64, ids: &mut HashMap<u64, u32>| -> u32 {
+        let next = ids.len() as u32;
+        *ids.entry(raw).or_insert(next)
+    };
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let a: u64 = it
+            .next()
+            .context("missing src")?
+            .parse()
+            .with_context(|| format!("line {}: bad src", lineno + 1))?;
+        let b: u64 = it
+            .next()
+            .context("missing dst")?
+            .parse()
+            .with_context(|| format!("line {}: bad dst", lineno + 1))?;
+        let u = intern(a, &mut ids);
+        let v = intern(b, &mut ids);
+        edges.push((u, v));
+    }
+    Ok(Graph::from_edges(ids.len(), &edges))
+}
+
+/// Load an edge-list file (SNAP format).
+pub fn load_edge_list(path: &Path) -> Result<Graph> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_edge_list(&text)
+}
+
+/// Write a graph as an edge list (u v per line, 0-based ids).
+pub fn write_edge_list(g: &Graph, path: &Path) -> Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    writeln!(f, "# metric-proj edge list: n={} m={}", g.n(), g.m())?;
+    for (u, v) in g.edges() {
+        writeln!(f, "{u}\t{v}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let g = parse_edge_list("# comment\n0 1\n1 2\n").unwrap();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 2);
+    }
+
+    #[test]
+    fn parse_compacts_sparse_ids() {
+        let g = parse_edge_list("100 200\n200 4000\n").unwrap();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 2);
+    }
+
+    #[test]
+    fn parse_skips_comments_and_blanks() {
+        let g = parse_edge_list("% matrix market style\n\n# snap style\n5 6\n").unwrap();
+        assert_eq!(g.n(), 2);
+        assert_eq!(g.m(), 1);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_edge_list("a b\n").is_err());
+        assert!(parse_edge_list("1\n").is_err());
+    }
+
+    #[test]
+    fn roundtrip_via_file() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let dir = std::env::temp_dir().join("metric_proj_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.txt");
+        write_edge_list(&g, &path).unwrap();
+        let g2 = load_edge_list(&path).unwrap();
+        assert_eq!(g2.n(), 4);
+        assert_eq!(g2.m(), 3);
+        let mut e1 = g.edges();
+        let mut e2 = g2.edges();
+        e1.sort_unstable();
+        e2.sort_unstable();
+        assert_eq!(e1, e2);
+    }
+}

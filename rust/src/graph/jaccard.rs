@@ -1,0 +1,132 @@
+//! All-pairs Jaccard similarity over closed neighborhoods.
+//!
+//! §IV-B: "we compute a signed and weighted edge between each pair of nodes
+//! (i, j) by computing the Jaccard index between the nodes". We use closed
+//! neighborhoods N[u] = N(u) ∪ {u} so that adjacent nodes always have
+//! nonzero similarity (the convention of Wang et al. [40] / Veldt [37]).
+
+use super::Graph;
+use crate::matrix::PackedSym;
+use crate::util::parallel::scoped_workers;
+
+/// Jaccard index of the closed neighborhoods of `u` and `v`.
+pub fn jaccard_pair(g: &Graph, u: usize, v: usize) -> f64 {
+    debug_assert!(u != v);
+    let inter = closed_intersection(g, u, v);
+    let union = (g.degree(u) + 1) + (g.degree(v) + 1) - inter;
+    inter as f64 / union as f64
+}
+
+/// |N[u] ∩ N[v]| via sorted-list merge, treating u and v as members of
+/// their own closed neighborhoods.
+fn closed_intersection(g: &Graph, u: usize, v: usize) -> usize {
+    let a = g.neighbors(u);
+    let b = g.neighbors(v);
+    let (mut i, mut j, mut count) = (0usize, 0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                count += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    // Closed-neighborhood corrections: u ∈ N[u] always; u ∈ N[v] iff edge.
+    // The merge above counted N(u) ∩ N(v). Add u if u ∈ N(v), v if v ∈ N(u),
+    // noting u ∈ N(v) ⇔ v ∈ N(u) ⇔ has_edge.
+    if g.has_edge(u, v) {
+        count += 2;
+    }
+    count
+}
+
+/// All-pairs Jaccard matrix, computed with `p` workers.
+pub fn all_pairs_jaccard(g: &Graph, p: usize) -> PackedSym {
+    let n = g.n();
+    let mut out = PackedSym::zeros(n);
+    // Partition columns among workers; each column i covers pairs (i, j>i).
+    // Work per column shrinks with i, so interleave columns round-robin for
+    // balance: worker t takes columns t, t+p, t+2p, ...
+    let col_starts = out.col_starts().to_vec();
+    let data = out.as_mut_slice();
+    let data_addr = data.as_mut_ptr() as usize;
+    let data_len = data.len();
+    scoped_workers(p, |tid, _barrier| {
+        // SAFETY: workers write disjoint column ranges [col_starts[i], ...).
+        let data =
+            unsafe { std::slice::from_raw_parts_mut(data_addr as *mut f64, data_len) };
+        let mut i = tid;
+        while i < n {
+            let base = col_starts[i];
+            for j in (i + 1)..n {
+                data[base + (j - i - 1)] = jaccard_pair(g, i, j);
+            }
+            i += p;
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::erdos_renyi;
+
+    #[test]
+    fn triangle_jaccard_is_one() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2), (0, 2)]);
+        // closed neighborhoods are all {0,1,2}
+        assert!((jaccard_pair(&g, 0, 1) - 1.0).abs() < 1e-12);
+        assert!((jaccard_pair(&g, 1, 2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disconnected_pair_is_zero() {
+        let g = Graph::from_edges(4, &[(0, 1), (2, 3)]);
+        assert_eq!(jaccard_pair(&g, 0, 2), 0.0);
+    }
+
+    #[test]
+    fn path_values() {
+        // path 0-1-2: N[0]={0,1}, N[2]={1,2} -> inter {1}, union {0,1,2} -> 1/3
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2)]);
+        assert!((jaccard_pair(&g, 0, 2) - 1.0 / 3.0).abs() < 1e-12);
+        // N[0]={0,1}, N[1]={0,1,2} -> inter {0,1}=2, union=3 -> 2/3
+        assert!((jaccard_pair(&g, 0, 1) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn symmetric() {
+        let g = erdos_renyi(30, 0.2, 5);
+        for u in 0..30 {
+            for v in (u + 1)..30 {
+                assert!((jaccard_pair(&g, u, v) - jaccard_pair(&g, v, u)).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn all_pairs_matches_pairwise_and_parallel_agrees() {
+        let g = erdos_renyi(40, 0.15, 9);
+        let serial = all_pairs_jaccard(&g, 1);
+        let par = all_pairs_jaccard(&g, 4);
+        assert_eq!(serial, par);
+        for u in 0..40 {
+            for v in (u + 1)..40 {
+                assert!((serial.get(u, v) - jaccard_pair(&g, u, v)).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn values_in_unit_interval() {
+        let g = erdos_renyi(25, 0.3, 2);
+        let j = all_pairs_jaccard(&g, 2);
+        for (_, _, v) in j.iter_pairs() {
+            assert!((0.0..=1.0).contains(&v));
+        }
+    }
+}

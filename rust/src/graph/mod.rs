@@ -1,0 +1,176 @@
+//! Graph substrate: CSR storage, IO, generators, connected components,
+//! and Jaccard similarity — everything needed to build the paper's
+//! correlation-clustering instances from undirected graphs (§IV-B).
+
+pub mod components;
+pub mod stats;
+pub mod datasets;
+pub mod generators;
+pub mod io;
+pub mod jaccard;
+
+/// Simple undirected graph in CSR form with sorted adjacency lists.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// Number of nodes.
+    n: usize,
+    /// CSR row offsets, length n+1.
+    offsets: Vec<usize>,
+    /// Concatenated sorted neighbor lists.
+    neighbors: Vec<u32>,
+}
+
+impl Graph {
+    /// Build from an undirected edge list. Self-loops and duplicate edges
+    /// are dropped. Node ids must be `< n`.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Graph {
+        let mut deg = vec![0usize; n];
+        let mut clean: Vec<(u32, u32)> = Vec::with_capacity(edges.len());
+        for &(u, v) in edges {
+            assert!((u as usize) < n && (v as usize) < n, "edge ({u},{v}) out of range");
+            if u != v {
+                clean.push((u.min(v), u.max(v)));
+            }
+        }
+        clean.sort_unstable();
+        clean.dedup();
+        for &(u, v) in &clean {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + deg[i];
+        }
+        let mut neighbors = vec![0u32; offsets[n]];
+        let mut fill = offsets.clone();
+        for &(u, v) in &clean {
+            neighbors[fill[u as usize]] = v;
+            fill[u as usize] += 1;
+            neighbors[fill[v as usize]] = u;
+            fill[v as usize] += 1;
+        }
+        // Each adjacency list is sorted because `clean` was processed in
+        // lexicographic order for u but arbitrary for v; sort per row.
+        for i in 0..n {
+            neighbors[offsets[i]..offsets[i + 1]].sort_unstable();
+        }
+        Graph { n, offsets, neighbors }
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.neighbors.len() / 2
+    }
+
+    /// Sorted neighbors of node `u`.
+    #[inline]
+    pub fn neighbors(&self, u: usize) -> &[u32] {
+        &self.neighbors[self.offsets[u]..self.offsets[u + 1]]
+    }
+
+    /// Degree of node `u`.
+    #[inline]
+    pub fn degree(&self, u: usize) -> usize {
+        self.offsets[u + 1] - self.offsets[u]
+    }
+
+    /// True iff edge {u, v} exists (binary search).
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.neighbors(u).binary_search(&(v as u32)).is_ok()
+    }
+
+    /// All undirected edges (u < v).
+    pub fn edges(&self) -> Vec<(u32, u32)> {
+        let mut out = Vec::with_capacity(self.m());
+        for u in 0..self.n {
+            for &v in self.neighbors(u) {
+                if (u as u32) < v {
+                    out.push((u as u32, v));
+                }
+            }
+        }
+        out
+    }
+
+    /// Induced subgraph on `nodes` (relabels to 0..nodes.len()).
+    pub fn induced(&self, nodes: &[usize]) -> Graph {
+        let mut label = vec![usize::MAX; self.n];
+        for (new, &old) in nodes.iter().enumerate() {
+            label[old] = new;
+        }
+        let mut edges = Vec::new();
+        for &old_u in nodes {
+            let u = label[old_u];
+            for &v_old in self.neighbors(old_u) {
+                let v = label[v_old as usize];
+                if v != usize::MAX && u < v {
+                    edges.push((u as u32, v as u32));
+                }
+            }
+        }
+        Graph::from_edges(nodes.len(), &edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path3() -> Graph {
+        Graph::from_edges(3, &[(0, 1), (1, 2)])
+    }
+
+    #[test]
+    fn basic_csr() {
+        let g = path3();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 2);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.degree(1), 2);
+        assert!(g.has_edge(0, 1));
+        assert!(!g.has_edge(0, 2));
+    }
+
+    #[test]
+    fn dedup_and_self_loops() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 0), (0, 0), (1, 2), (1, 2)]);
+        assert_eq!(g.m(), 2);
+        assert_eq!(g.degree(0), 1);
+    }
+
+    #[test]
+    fn neighbors_sorted() {
+        let g = Graph::from_edges(5, &[(4, 0), (2, 0), (0, 3), (0, 1)]);
+        assert_eq!(g.neighbors(0), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn edges_roundtrip() {
+        let edges = vec![(0u32, 1u32), (1, 2), (2, 3), (0, 3)];
+        let g = Graph::from_edges(4, &edges);
+        let mut got = g.edges();
+        got.sort_unstable();
+        let mut want = edges;
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn induced_subgraph() {
+        // square 0-1-2-3-0 plus chord 0-2; take {0,1,2}
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (0, 3), (0, 2)]);
+        let sub = g.induced(&[0, 1, 2]);
+        assert_eq!(sub.n(), 3);
+        assert_eq!(sub.m(), 3); // triangle 0-1-2 with chord
+        assert!(sub.has_edge(0, 2));
+        assert!(!sub.has_edge(0, 3).then_some(true).unwrap_or(false));
+    }
+}

@@ -1,0 +1,125 @@
+//! §IV-B problem construction (Wang et al. [40] with the modification of
+//! [37]): given an undirected graph, compute all-pairs Jaccard similarity,
+//! map through a non-linear signing function, and offset by ±epsilon so
+//! every pair carries a sign and a nonzero weight — a *dense* correlation
+//! clustering instance whose LP relaxation is the benchmark problem.
+
+use super::CcLpInstance;
+use crate::graph::jaccard::all_pairs_jaccard;
+use crate::graph::Graph;
+use crate::matrix::PackedSym;
+
+/// Parameters of the signed-instance construction.
+#[derive(Clone, Copy, Debug)]
+pub struct ConstructionParams {
+    /// Jaccard threshold: similarity above ⇒ positive pair (d = 0).
+    pub threshold: f64,
+    /// Weight offset ε ensuring every pair has nonzero weight.
+    pub epsilon: f64,
+}
+
+impl Default for ConstructionParams {
+    fn default() -> Self {
+        // threshold ~ the sparsity regime of the ca-* nets; epsilon small,
+        // as in [37]'s modification ("offset these scores by ±ε").
+        ConstructionParams { threshold: 0.05, epsilon: 0.01 }
+    }
+}
+
+/// Non-linear signing function: logit-like map of the Jaccard score `s`
+/// against the threshold `t`, f(s) = log((s + δ) / (t + δ)) with δ a small
+/// smoothing constant. f > 0 ⇔ s > t; |f| grows smoothly with the margin.
+fn sign_score(s: f64, t: f64) -> f64 {
+    const DELTA: f64 = 1e-3;
+    ((s + DELTA) / (t + DELTA)).ln()
+}
+
+/// Build the dense correlation-clustering instance of §IV-B from a graph
+/// (callers should pass the largest connected component, as the paper does).
+/// `p` = worker threads for the all-pairs Jaccard sweep.
+pub fn build_cc_instance(g: &Graph, params: ConstructionParams, p: usize) -> CcLpInstance {
+    let n = g.n();
+    let jac = all_pairs_jaccard(g, p);
+    let mut d = PackedSym::zeros(n);
+    let mut w = PackedSym::zeros(n);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = sign_score(jac.get(i, j), params.threshold);
+            // v > 0: similar ⇒ positive pair (target distance 0).
+            // v ≤ 0: dissimilar ⇒ negative pair (target distance 1).
+            d.set(i, j, f64::from(v <= 0.0));
+            w.set(i, j, v.abs() + params.epsilon);
+        }
+    }
+    CcLpInstance { n, d, w }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{erdos_renyi, two_cliques};
+
+    #[test]
+    fn instance_is_valid_and_dense() {
+        let g = erdos_renyi(30, 0.2, 11);
+        let inst = build_cc_instance(&g, ConstructionParams::default(), 2);
+        inst.validate().unwrap();
+        assert_eq!(inst.n, 30);
+    }
+
+    #[test]
+    fn cliques_become_positive_pairs() {
+        let g = two_cliques(6);
+        // threshold 0.1 > 1/12: cross pairs that only share a bridge
+        // endpoint stay negative; in-clique pairs (Jaccard >= 1/2) positive.
+        let params = ConstructionParams { threshold: 0.1, epsilon: 0.01 };
+        let inst = build_cc_instance(&g, params, 1);
+        // Within-clique pairs share most of their closed neighborhoods.
+        let mut in_pos = 0;
+        let mut cross_neg = 0;
+        for i in 0..6 {
+            for j in (i + 1)..6 {
+                if inst.d.get(i, j) == 0.0 {
+                    in_pos += 1;
+                }
+            }
+        }
+        for i in 0..6 {
+            for j in 6..12 {
+                if inst.d.get(i, j) == 1.0 {
+                    cross_neg += 1;
+                }
+            }
+        }
+        assert_eq!(in_pos, 15, "all in-clique pairs should be positive");
+        assert!(cross_neg >= 35, "most cross pairs negative, got {cross_neg}");
+    }
+
+    #[test]
+    fn weights_at_least_epsilon() {
+        let g = erdos_renyi(20, 0.15, 3);
+        let params = ConstructionParams { threshold: 0.1, epsilon: 0.02 };
+        let inst = build_cc_instance(&g, params, 1);
+        for (_, _, w) in inst.w.iter_pairs() {
+            assert!(w >= 0.02);
+        }
+    }
+
+    #[test]
+    fn sign_score_monotone_and_signed() {
+        assert!(sign_score(0.5, 0.1) > 0.0);
+        assert!(sign_score(0.01, 0.1) < 0.0);
+        assert!(sign_score(0.3, 0.1) < sign_score(0.6, 0.1));
+        // exactly at threshold: log(1) = 0 -> negative pair by convention
+        assert_eq!(sign_score(0.1, 0.1), 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_graph() {
+        let g = erdos_renyi(25, 0.2, 7);
+        let a = build_cc_instance(&g, ConstructionParams::default(), 1);
+        let b = build_cc_instance(&g, ConstructionParams::default(), 4);
+        assert_eq!(a.d, b.d);
+        assert_eq!(a.w, b.w);
+    }
+}

@@ -1,0 +1,106 @@
+//! The p = 2 metric nearness problem (paper (1)): given dissimilarities
+//! `D` and weights `W`, find the nearest (weighted least-squares) matrix
+//! `X` satisfying all triangle inequalities. This is the original setting
+//! of Sra–Tropp–Dhillon [36] and is solved by the same projection machinery
+//! with no slack variables: Dykstra projects `X0 = D` onto the metric cone.
+
+use crate::matrix::PackedSym;
+use crate::util::rng::Rng;
+
+/// Weighted l2 metric nearness instance.
+#[derive(Clone, Debug)]
+pub struct MetricNearnessInstance {
+    pub n: usize,
+    /// Input dissimilarities (symmetric, nonnegative).
+    pub d: PackedSym,
+    /// Positive weights.
+    pub w: PackedSym,
+}
+
+impl MetricNearnessInstance {
+    /// Uniform-weight instance from a dissimilarity matrix.
+    pub fn new(d: PackedSym) -> Self {
+        let n = d.n();
+        MetricNearnessInstance { n, d, w: PackedSym::filled(n, 1.0) }
+    }
+
+    /// Random instance: d_ij uniform in [0, hi], unit weights.
+    pub fn random(n: usize, hi: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        Self::new(PackedSym::from_fn(n, |_, _| rng.f64_in(0.0, hi)))
+    }
+
+    /// Weighted squared distance `Σ w_ij (x_ij − d_ij)^2` — the objective.
+    pub fn objective(&self, x: &PackedSym) -> f64 {
+        x.sub(&self.d).weighted_sq_norm(&self.w)
+    }
+
+    /// Validate: nonnegative d, positive w.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.d.n() == self.n && self.w.n() == self.n, "dim mismatch");
+        for (i, j, v) in self.d.iter_pairs() {
+            anyhow::ensure!(v >= 0.0 && v.is_finite(), "d[{i},{j}] = {v} negative");
+        }
+        for (i, j, v) in self.w.iter_pairs() {
+            anyhow::ensure!(v > 0.0 && v.is_finite(), "w[{i},{j}] = {v} not positive");
+        }
+        Ok(())
+    }
+}
+
+/// Max triangle-inequality violation of `x`: max over ordered triples of
+/// `x_ij − x_ik − x_jk` (nonpositive ⇔ x is metric). O(n^3) — for tests
+/// and small-instance validation; the solver tracks this incrementally.
+pub fn max_triangle_violation(x: &PackedSym) -> f64 {
+    let n = x.n();
+    let mut worst = f64::NEG_INFINITY;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            for k in (j + 1)..n {
+                let (a, b, c) = (x.get(i, j), x.get(i, k), x.get(j, k));
+                worst = worst.max(a - b - c).max(b - a - c).max(c - a - b);
+            }
+        }
+    }
+    if worst == f64::NEG_INFINITY {
+        0.0
+    } else {
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_matrix_has_no_violation() {
+        // all distances equal 1 -> triangle holds with slack 1
+        let x = PackedSym::filled(5, 1.0);
+        assert!(max_triangle_violation(&x) <= -1.0 + 1e-12);
+    }
+
+    #[test]
+    fn violation_detected() {
+        let mut x = PackedSym::filled(3, 1.0);
+        x.set(0, 1, 5.0); // 5 > 1 + 1
+        assert!((max_triangle_violation(&x) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn objective_zero_at_d() {
+        let inst = MetricNearnessInstance::random(6, 2.0, 3);
+        assert_eq!(inst.objective(&inst.d), 0.0);
+    }
+
+    #[test]
+    fn random_is_valid() {
+        MetricNearnessInstance::random(10, 3.0, 4).validate().unwrap();
+    }
+
+    #[test]
+    fn small_n_no_triples() {
+        let x = PackedSym::filled(2, 7.0);
+        assert_eq!(max_triangle_violation(&x), 0.0);
+    }
+}

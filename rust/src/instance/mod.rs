@@ -1,0 +1,166 @@
+//! Problem instances for metric-constrained optimization.
+//!
+//! * [`CcLpInstance`] — the metric-constrained LP relaxation of correlation
+//!   clustering, in the metric-nearness form (3) of the paper: dense 0/1
+//!   targets `D` and positive weights `W` over all pairs.
+//! * [`MetricNearnessInstance`] — the p = 2 metric nearness problem (1).
+//! * [`construction`] — §IV-B Jaccard/Wang-et-al. signed instance builder.
+
+pub mod construction;
+pub mod metric_nearness;
+
+use crate::matrix::PackedSym;
+use crate::util::rng::Rng;
+
+/// Correlation-clustering LP relaxation in metric-nearness form (paper (3)):
+///
+/// ```text
+/// min  Σ_{i<j} w_ij f_ij
+/// s.t. x_ij ≤ x_ik + x_jk          for all triples
+///      |x_ij − d_ij| ≤ f_ij       for all pairs
+/// ```
+///
+/// with `d_ij ∈ {0, 1}` (1 ⇔ negative/dissimilar edge) and `w_ij > 0`.
+#[derive(Clone, Debug)]
+pub struct CcLpInstance {
+    /// Number of objects (graph nodes).
+    pub n: usize,
+    /// 0/1 dissimilarity targets.
+    pub d: PackedSym,
+    /// Positive pair weights.
+    pub w: PackedSym,
+}
+
+impl CcLpInstance {
+    /// Validate invariants (weights positive, targets 0/1).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.d.n() == self.n && self.w.n() == self.n, "dim mismatch");
+        for (i, j, v) in self.d.iter_pairs() {
+            anyhow::ensure!(v == 0.0 || v == 1.0, "d[{i},{j}] = {v} not 0/1");
+        }
+        for (i, j, v) in self.w.iter_pairs() {
+            anyhow::ensure!(v > 0.0 && v.is_finite(), "w[{i},{j}] = {v} not positive");
+        }
+        Ok(())
+    }
+
+    /// Number of metric (triangle) constraints: 3·C(n,3).
+    pub fn n_metric_constraints(&self) -> u128 {
+        let n = self.n as u128;
+        n * (n - 1) * (n - 2) / 6 * 3
+    }
+
+    /// Total constraints incl. the 2 pair constraints per pair (paper's
+    /// Table I counts: 3·C(n,3) + 2·C(n,2)).
+    pub fn n_constraints(&self) -> u128 {
+        let n = self.n as u128;
+        self.n_metric_constraints() + n * (n - 1)
+    }
+
+    /// LP objective Σ w_ij |x_ij − d_ij| at a (not necessarily feasible) x.
+    pub fn lp_objective(&self, x: &PackedSym) -> f64 {
+        assert_eq!(x.n(), self.n);
+        let (xd, dd, wd) = (x.as_slice(), self.d.as_slice(), self.w.as_slice());
+        xd.iter()
+            .zip(dd)
+            .zip(wd)
+            .map(|((x, d), w)| w * (x - d).abs())
+            .sum()
+    }
+
+    /// Random dense instance for tests: each pair negative with prob
+    /// `p_neg`, weights uniform in `[w_lo, w_hi]`.
+    pub fn random(n: usize, p_neg: f64, w_lo: f64, w_hi: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let d = PackedSym::from_fn(n, |_, _| f64::from(rng.bool(p_neg)));
+        let w = PackedSym::from_fn(n, |_, _| rng.f64_in(w_lo, w_hi));
+        CcLpInstance { n, d, w }
+    }
+
+    /// Unweighted instance from an explicit signed partition of pairs:
+    /// pairs in `neg` get d = 1; everything else d = 0; all weights 1.
+    pub fn unweighted(n: usize, neg: &[(usize, usize)]) -> Self {
+        let mut d = PackedSym::zeros(n);
+        for &(i, j) in neg {
+            d.set(i, j, 1.0);
+        }
+        CcLpInstance { n, d, w: PackedSym::filled(n, 1.0) }
+    }
+}
+
+/// Evaluate the integral correlation-clustering objective (disagreements)
+/// of a clustering `labels` against an instance.
+pub fn cc_objective(inst: &CcLpInstance, labels: &[usize]) -> f64 {
+    assert_eq!(labels.len(), inst.n);
+    let mut total = 0.0;
+    for (i, j, d) in inst.d.iter_pairs() {
+        let together = labels[i] == labels[j];
+        let w = inst.w.get(i, j);
+        // d=0 (positive pair): mistake if apart. d=1 (negative): if together.
+        if d == 0.0 && !together {
+            total += w;
+        } else if d == 1.0 && together {
+            total += w;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constraint_counts() {
+        let inst = CcLpInstance::random(10, 0.5, 1.0, 2.0, 1);
+        // 3*C(10,3) = 360, pairs 2*45 = 90
+        assert_eq!(inst.n_metric_constraints(), 360);
+        assert_eq!(inst.n_constraints(), 450);
+    }
+
+    #[test]
+    fn table1_constraint_scale_matches_paper() {
+        // Paper Table I: ca-GrQc n=4158 -> 3.6e10; ca-AstroPh n=17903 -> 2.9e12
+        let c = |n: usize| CcLpInstance { n, d: PackedSym::zeros(2), w: PackedSym::zeros(2) }
+            .n_metric_constraints() as f64;
+        assert!((c(4158) / 3.6e10 - 1.0).abs() < 0.05);
+        assert!((c(17903) / 2.9e12 - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn validate_accepts_random() {
+        CcLpInstance::random(8, 0.3, 0.5, 1.5, 2).validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_d() {
+        let mut inst = CcLpInstance::random(5, 0.3, 1.0, 1.0, 3);
+        inst.d.set(0, 1, 0.5);
+        assert!(inst.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_nonpositive_w() {
+        let mut inst = CcLpInstance::random(5, 0.3, 1.0, 1.0, 3);
+        inst.w.set(2, 3, 0.0);
+        assert!(inst.validate().is_err());
+    }
+
+    #[test]
+    fn lp_objective_zero_at_d() {
+        let inst = CcLpInstance::random(7, 0.4, 1.0, 2.0, 4);
+        assert_eq!(inst.lp_objective(&inst.d), 0.0);
+    }
+
+    #[test]
+    fn cc_objective_perfect_clustering() {
+        // two cliques of 2: pairs (0,1) and (2,3) positive, rest negative
+        let neg = [(0, 2), (0, 3), (1, 2), (1, 3)];
+        let inst = CcLpInstance::unweighted(4, &neg);
+        assert_eq!(cc_objective(&inst, &[0, 0, 1, 1]), 0.0);
+        // everything together: 4 negative mistakes
+        assert_eq!(cc_objective(&inst, &[0, 0, 0, 0]), 4.0);
+        // everything apart: 2 positive mistakes
+        assert_eq!(cc_objective(&inst, &[0, 1, 2, 3]), 2.0);
+    }
+}

@@ -1,0 +1,28 @@
+//! # metric-proj — Parallel Projection Methods for Metric-Constrained Optimization
+//!
+//! A production-quality reproduction of *"A Parallel Projection Method for
+//! Metric Constrained Optimization"* (Ruggles, Veldt, Gleich, 2019): a
+//! memory-efficient parallel Dykstra solver for optimization problems with
+//! `O(n^3)` triangle-inequality constraints, applied to the LP relaxation
+//! of correlation clustering and to metric nearness.
+//!
+//! Architecture (three layers, Python never on the solve path):
+//! * **L3 (this crate)** — the paper's contribution: a conflict-free
+//!   parallel execution schedule over metric constraints
+//!   ([`solver::schedule`]), tiled for cache efficiency
+//!   ([`solver::tiling`]), with per-thread sparse dual storage
+//!   ([`solver::duals`]), plus every substrate: graphs, instances,
+//!   rounding, evaluation.
+//! * **L2/L1 (build time)** — a JAX model + Pallas kernel implementing the
+//!   batched projection step, AOT-lowered to HLO text and executed from
+//!   Rust through PJRT ([`runtime`]).
+
+pub mod cli;
+pub mod eval;
+pub mod graph;
+pub mod instance;
+pub mod matrix;
+pub mod rounding;
+pub mod runtime;
+pub mod solver;
+pub mod util;

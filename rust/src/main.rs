@@ -1,0 +1,270 @@
+//! `metric-proj` — launcher for the parallel metric-constrained
+//! optimization framework.
+//!
+//! Commands (all options have sensible defaults):
+//!   info                         PJRT + machine info
+//!   solve    --dataset ca-GrQc --n 300 --threads 8 --tile 40 --passes 20
+//!            [--engine cpu|xla] [--assignment rr|rot] [--round] [--serial]
+//!   nearness --n 200 --threads 8 --tile 40 --passes 50
+//!   generate --dataset power --n 500 --out graph.txt
+//!   table1   [--scale smoke|small|paper] [--passes 20] [--cores 8,16,32]
+//!   fig6     [--dataset ca-HepPh] [--cores 2,4,...] [--scale ...]
+//!   fig7     [--dataset ca-GrQc] [--cores-fixed 16] [--tiles 5,10,...,50]
+
+use anyhow::{bail, Context, Result};
+use metric_proj::cli::Args;
+use metric_proj::eval::{self, EvalConfig, Scale};
+use metric_proj::graph::datasets::Dataset;
+use metric_proj::instance::{cc_objective, CcLpInstance};
+use metric_proj::rounding::{pivot, threshold};
+use metric_proj::solver::schedule::Assignment;
+use metric_proj::solver::{dykstra_parallel, dykstra_serial, dykstra_xla, nearness, SolveOpts};
+use metric_proj::util::parallel::available_cores;
+use metric_proj::util::timer::time;
+
+fn main() -> Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    match args.command.as_str() {
+        "info" => cmd_info(),
+        "solve" => cmd_solve(&args),
+        "nearness" => cmd_nearness(&args),
+        "generate" => cmd_generate(&args),
+        "table1" => cmd_table1(&args),
+        "fig6" => cmd_fig6(&args),
+        "fig7" => cmd_fig7(&args),
+        "" | "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            bail!("unknown command `{other}`")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "metric-proj — parallel projection methods for metric-constrained optimization\n\
+         commands: info | solve | nearness | generate | table1 | fig6 | fig7\n\
+         see rust/src/main.rs header or README.md for options"
+    );
+}
+
+fn parse_dataset(args: &Args, default: Dataset) -> Result<Dataset> {
+    match args.get("dataset") {
+        None => Ok(default),
+        Some(s) => Dataset::parse(s)
+            .with_context(|| format!("unknown dataset `{s}` (try ca-GrQc, power, ...)")),
+    }
+}
+
+fn parse_assignment(args: &Args) -> Result<Assignment> {
+    match args.get("assignment").unwrap_or("rr") {
+        "rr" | "round-robin" => Ok(Assignment::RoundRobin),
+        "rot" | "rotated" => Ok(Assignment::Rotated),
+        other => bail!("--assignment must be rr|rot, got `{other}`"),
+    }
+}
+
+fn eval_config(args: &Args) -> Result<EvalConfig> {
+    let mut cfg = EvalConfig::default();
+    if let Some(s) = args.get("scale") {
+        cfg.scale = Scale::parse(s).with_context(|| format!("bad --scale `{s}`"))?;
+    }
+    cfg.passes = args.get_or("passes", cfg.passes).map_err(|e| anyhow::anyhow!(e))?;
+    if let Some(b) = args.get("tile") {
+        let b: usize = b.parse().map_err(|_| anyhow::anyhow!("--tile: bad value"))?;
+        cfg.tile = metric_proj::eval::TilePolicy::Fixed(b);
+    }
+    cfg.seed = args.get_or("seed", cfg.seed).map_err(|e| anyhow::anyhow!(e))?;
+    if let Some(cores) = args.get_list("cores").map_err(|e| anyhow::anyhow!(e))? {
+        cfg.cores = cores;
+    }
+    cfg.assignment = parse_assignment(args)?;
+    if let Some(s) = args.get("timing") {
+        cfg.timing = metric_proj::eval::TimingMode::parse(s)
+            .with_context(|| format!("--timing must be real|sim, got `{s}`"))?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_info() -> Result<()> {
+    println!("cores available : {}", available_cores());
+    match metric_proj::runtime::PjrtRuntime::cpu("artifacts") {
+        Ok(rt) => {
+            println!("pjrt platform   : {}", rt.platform());
+            println!("pjrt devices    : {}", rt.device_count());
+            println!("artifacts dir   : {}", rt.artifacts_dir().display());
+        }
+        Err(e) => println!("pjrt            : unavailable ({e})"),
+    }
+    for d in Dataset::ALL {
+        println!(
+            "dataset {:<11}: paper n = {:>6}, small-scale n = {}",
+            d.name(),
+            d.paper_n(),
+            Scale::Small.n_for(d)
+        );
+    }
+    Ok(())
+}
+
+fn build_instance_cli(args: &Args) -> Result<(CcLpInstance, String)> {
+    let d = parse_dataset(args, Dataset::CaGrQc)?;
+    let n = args.get_or("n", 300usize).map_err(|e| anyhow::anyhow!(e))?;
+    let seed = args.get_or("seed", 42u64).map_err(|e| anyhow::anyhow!(e))?;
+    let g = d.load_or_generate(std::path::Path::new("data"), n, seed);
+    let inst = metric_proj::instance::construction::build_cc_instance(
+        &g,
+        metric_proj::instance::construction::ConstructionParams::default(),
+        available_cores(),
+    );
+    Ok((inst, format!("{} (lcc n={}, m={})", d.name(), g.n(), g.m())))
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let (inst, desc) = build_instance_cli(args)?;
+    let opts = SolveOpts {
+        gamma: args.get_or("gamma", 5.0).map_err(|e| anyhow::anyhow!(e))?,
+        max_passes: args.get_or("passes", 20usize).map_err(|e| anyhow::anyhow!(e))?,
+        threads: args.get_or("threads", available_cores()).map_err(|e| anyhow::anyhow!(e))?,
+        tile: args.get_or("tile", 40usize).map_err(|e| anyhow::anyhow!(e))?,
+        check_every: args.get_or("check-every", 0usize).map_err(|e| anyhow::anyhow!(e))?,
+        track_pass_times: true,
+        assignment: parse_assignment(args)?,
+        ..Default::default()
+    };
+    println!("instance  : {desc}");
+    println!("constraints: {:.3e}", inst.n_constraints() as f64);
+    println!(
+        "solver    : {} threads={} tile={} passes={}",
+        if args.has_flag("serial") { "serial" } else { "parallel" },
+        opts.threads,
+        opts.tile,
+        opts.max_passes
+    );
+    let engine = args.get("engine").unwrap_or("cpu");
+    let (sol, secs) = match engine {
+        "cpu" => time(|| {
+            if args.has_flag("serial") {
+                dykstra_serial::solve(&inst, &opts)
+            } else {
+                dykstra_parallel::solve(&inst, &opts)
+            }
+        }),
+        "xla" => {
+            let eng = metric_proj::runtime::engine::XlaEngine::load("artifacts")
+                .context("loading XLA engine (run `make artifacts`)")?;
+            let (sol, secs) = time(|| dykstra_xla::solve(&inst, &opts, &eng));
+            (sol?, secs)
+        }
+        other => bail!("--engine must be cpu|xla, got `{other}`"),
+    };
+    let r = &sol.residuals;
+    println!(
+        "passes    : {} ({secs:.2}s total, {:.3}s/pass pass-time)",
+        sol.passes,
+        sol.pass_times.iter().sum::<f64>() / sol.passes.max(1) as f64
+    );
+    println!("violation : {:.3e}", r.max_violation);
+    println!("rel gap   : {:.3e}", r.rel_gap);
+    println!("LP objective (lower bound on CC): {:.4}", r.lp_objective);
+    println!("nnz metric duals: {}", sol.nnz_duals);
+
+    if args.has_flag("round") {
+        let labels_t = threshold::round(&sol.x, 0.5);
+        let obj_t = cc_objective(&inst, &labels_t);
+        let (labels_p, obj_p) = pivot::round_best(&sol.x, 20, 7, |l| cc_objective(&inst, l));
+        let k = |l: &[usize]| l.iter().max().map(|m| m + 1).unwrap_or(0);
+        println!("rounding  : threshold obj={obj_t:.4} ({} clusters)", k(&labels_t));
+        println!("          : pivot     obj={obj_p:.4} ({} clusters)", k(&labels_p));
+        let best = obj_t.min(obj_p);
+        if r.lp_objective > 1e-9 {
+            println!("          : approx ratio vs LP bound = {:.3}", best / r.lp_objective);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_nearness(args: &Args) -> Result<()> {
+    let n = args.get_or("n", 200usize).map_err(|e| anyhow::anyhow!(e))?;
+    let seed = args.get_or("seed", 42u64).map_err(|e| anyhow::anyhow!(e))?;
+    let inst =
+        metric_proj::instance::metric_nearness::MetricNearnessInstance::random(n, 2.0, seed);
+    let opts = nearness::NearnessOpts {
+        max_passes: args.get_or("passes", 50usize).map_err(|e| anyhow::anyhow!(e))?,
+        threads: args.get_or("threads", available_cores()).map_err(|e| anyhow::anyhow!(e))?,
+        tile: args.get_or("tile", 40usize).map_err(|e| anyhow::anyhow!(e))?,
+        ..Default::default()
+    };
+    let (sol, secs) = time(|| nearness::solve(&inst, &opts));
+    println!("metric nearness n={n}: passes={} time={secs:.2}s", sol.passes);
+    println!("objective ||X-D||_W^2 = {:.4}", sol.objective);
+    println!("max violation = {:.3e}", sol.max_violation);
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let d = parse_dataset(args, Dataset::Power)?;
+    let n = args.get_or("n", 500usize).map_err(|e| anyhow::anyhow!(e))?;
+    let seed = args.get_or("seed", 42u64).map_err(|e| anyhow::anyhow!(e))?;
+    let out = args.get("out").unwrap_or("graph.txt");
+    let g = d.generate(n, seed);
+    metric_proj::graph::io::write_edge_list(&g, std::path::Path::new(out))?;
+    println!("wrote {} ({} nodes, {} edges, analogue of {})", out, g.n(), g.m(), d.name());
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let cfg = eval_config(args)?;
+    println!(
+        "# Table I reproduction — scale={:?}, passes={}, tile={:?}, cores={:?}, timing={:?} (machine: {} cores)",
+        cfg.scale,
+        cfg.passes,
+        cfg.tile,
+        cfg.cores,
+        cfg.timing,
+        available_cores()
+    );
+    let rows = eval::table1(&cfg, &Dataset::ALL, |r| {
+        println!(
+            "{:<11} n={:<6} cores={:<3} time={:>9.2}s speedup={:.2}",
+            r.dataset, r.n, r.cores, r.time_s, r.speedup
+        );
+    });
+    println!("\n{}", eval::render_table1(&rows));
+    Ok(())
+}
+
+fn cmd_fig6(args: &Args) -> Result<()> {
+    let cfg = eval_config(args)?;
+    let d = parse_dataset(args, Dataset::CaHepPh)?;
+    // paper: 1 core, then 8..40 step 4 — clamp to machine
+    let avail = available_cores();
+    let default_cores: Vec<usize> =
+        std::iter::once(2).chain((4..=avail).step_by(4)).filter(|&c| c <= avail).collect();
+    let cores = args.get_list("cores").map_err(|e| anyhow::anyhow!(e))?.unwrap_or(default_cores);
+    println!("# Fig 6 reproduction — {} speedup vs cores (tile={:?})", d.name(), cfg.tile);
+    eval::fig6(&cfg, d, &cores, |c, t, s| {
+        println!("cores={c:<3} time={t:>9.2}s speedup={s:.2}");
+    });
+    Ok(())
+}
+
+fn cmd_fig7(args: &Args) -> Result<()> {
+    let cfg = eval_config(args)?;
+    let d = parse_dataset(args, Dataset::CaGrQc)?;
+    let cores = args
+        .get_or("cores-fixed", 16usize.min(available_cores()))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let tiles = args
+        .get_list("tiles")
+        .map_err(|e| anyhow::anyhow!(e))?
+        .unwrap_or_else(|| (1..=10).map(|i| i * 5).collect());
+    println!("# Fig 7 reproduction — {} speedup vs tile size ({} cores)", d.name(), cores);
+    eval::fig7(&cfg, d, cores, &tiles, |b, t, s| {
+        println!("tile={b:<3} time={t:>9.2}s speedup={s:.2}");
+    });
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! Dense symmetric pairwise storage.
+//!
+//! All pairwise quantities in metric-constrained optimization (distances
+//! `X`, weights `W`, targets `D`, slacks `F`) are symmetric with an
+//! irrelevant diagonal, so we store only the strict lower triangle,
+//! **column-major** — the layout the paper's tiled schedule (§III-C) is
+//! designed around: for a fixed column `i`, the entries `x_{ij}` for
+//! consecutive `j` are contiguous.
+
+pub mod packed;
+
+pub use packed::PackedSym;

@@ -1,0 +1,331 @@
+//! Packed strict-lower-triangular symmetric matrix, column-major.
+//!
+//! For an `n x n` symmetric matrix with ignored diagonal we store
+//! `n*(n-1)/2` entries. Column `i` (0-based) holds rows `j = i+1 .. n-1`
+//! contiguously, so `idx(i, j) = col_start[i] + (j - i - 1)` for `i < j`.
+//! This is exactly the `X` layout of the paper (column-major, §III-C), and
+//! the tiled cube iteration maximizes locality for walks down a column.
+
+/// Packed symmetric pairwise matrix over `f64` (strict lower triangle).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedSym {
+    n: usize,
+    /// `col_start[i]` = offset of entry (i+1, i); has n entries (last col empty).
+    col_start: Vec<usize>,
+    data: Vec<f64>,
+}
+
+/// Number of stored entries for dimension `n`.
+#[inline]
+pub fn n_pairs(n: usize) -> usize {
+    n * (n - 1) / 2
+}
+
+impl PackedSym {
+    /// Zero-filled matrix of dimension `n` (n >= 1).
+    pub fn zeros(n: usize) -> Self {
+        Self::filled(n, 0.0)
+    }
+
+    /// Constant-filled matrix of dimension `n`.
+    pub fn filled(n: usize, v: f64) -> Self {
+        assert!(n >= 1, "PackedSym needs n >= 1");
+        let mut col_start = Vec::with_capacity(n);
+        let mut acc = 0usize;
+        for i in 0..n {
+            col_start.push(acc);
+            acc += n - 1 - i;
+        }
+        PackedSym { n, col_start, data: vec![v; acc] }
+    }
+
+    /// Build from a function of the pair `(i, j)` with `i < j`.
+    pub fn from_fn(n: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let idx = m.idx(i, j);
+                m.data[idx] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Dimension `n`.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of stored pairs.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True iff no pairs are stored (n == 1).
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Linear index of unordered pair `{i, j}`, any order, `i != j`.
+    #[inline]
+    pub fn idx(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i != j && i < self.n && j < self.n);
+        let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+        self.col_start[lo] + (hi - lo - 1)
+    }
+
+    /// Linear index when the caller guarantees `i < j` (hot path).
+    #[inline(always)]
+    pub fn idx_ord(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i < j && j < self.n);
+        // SAFETY of logic: col_start has n entries and i < j < n.
+        unsafe { *self.col_start.get_unchecked(i) + (j - i - 1) }
+    }
+
+    /// Get entry `{i, j}`.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[self.idx(i, j)]
+    }
+
+    /// Set entry `{i, j}`.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        let idx = self.idx(i, j);
+        self.data[idx] = v;
+    }
+
+    /// Raw packed storage (column-major lower triangle).
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable raw packed storage.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Column-start offsets (for hot loops that precompute bases).
+    #[inline]
+    pub fn col_starts(&self) -> &[usize] {
+        &self.col_start
+    }
+
+    /// Iterate `(i, j, value)` over all stored pairs, column-major order.
+    pub fn iter_pairs(&self) -> impl Iterator<Item = (usize, usize, f64)> + '_ {
+        (0..self.n).flat_map(move |i| {
+            ((i + 1)..self.n).map(move |j| (i, j, self.data[self.idx_ord(i, j)]))
+        })
+    }
+
+    /// Elementwise `self - other` as a new matrix (dimensions must match).
+    pub fn sub(&self, other: &PackedSym) -> PackedSym {
+        assert_eq!(self.n, other.n);
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(other.data.iter()) {
+            *a -= b;
+        }
+        out
+    }
+
+    /// Weighted squared Frobenius-style norm over pairs: `sum w_ij * v_ij^2`.
+    pub fn weighted_sq_norm(&self, w: &PackedSym) -> f64 {
+        assert_eq!(self.n, w.n);
+        self.data
+            .iter()
+            .zip(w.data.iter())
+            .map(|(v, wi)| wi * v * v)
+            .sum()
+    }
+
+    /// Max |entry|.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+    }
+}
+
+/// Decode a linear pair index back to `(i, j)` with `i < j` (O(1) closed form).
+///
+/// Inverse of `PackedSym::idx_ord`. Used by the pair-constraint phase to map
+/// flat work indices to pairs without a lookup table.
+pub fn pair_of_index(n: usize, idx: usize) -> (usize, usize) {
+    debug_assert!(idx < n_pairs(n));
+    // Solve for the column i: idx - col_start[i] in [0, n-1-i).
+    // col_start[i] = i*n - i*(i+1)/2 - ... derive via quadratic formula on
+    // f(i) = i*(2n - i - 1)/2 <= idx.
+    let nf = n as f64;
+    let t = 2.0 * nf - 1.0;
+    let mut i = ((t - (t * t - 8.0 * idx as f64).sqrt()) / 2.0).floor() as usize;
+    // Guard against floating point off-by-one at boundaries.
+    let cs = |i: usize| i * (2 * n - i - 1) / 2;
+    while i > 0 && cs(i) > idx {
+        i -= 1;
+    }
+    while cs(i + 1) <= idx {
+        i += 1;
+    }
+    let j = i + 1 + (idx - cs(i));
+    (i, j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(PackedSym::zeros(1).len(), 0);
+        assert_eq!(PackedSym::zeros(2).len(), 1);
+        assert_eq!(PackedSym::zeros(5).len(), 10);
+        assert_eq!(n_pairs(100), 4950);
+    }
+
+    #[test]
+    fn idx_bijective_and_column_major() {
+        let n = 17;
+        let m = PackedSym::zeros(n);
+        let mut seen = vec![false; m.len()];
+        let mut prev = None;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let idx = m.idx(i, j);
+                assert!(!seen[idx], "idx collision at ({i},{j})");
+                seen[idx] = true;
+                // Column-major: consecutive j in the same column are adjacent.
+                if let Some((pi, pidx)) = prev {
+                    if pi == i {
+                        assert_eq!(idx, pidx + 1usize);
+                    }
+                }
+                prev = Some((i, idx));
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn idx_symmetric_in_arguments() {
+        let m = PackedSym::zeros(9);
+        for i in 0..9 {
+            for j in 0..9 {
+                if i != j {
+                    assert_eq!(m.idx(i, j), m.idx(j, i));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut m = PackedSym::zeros(6);
+        m.set(2, 4, 3.5);
+        m.set(4, 1, -1.0); // unordered args
+        assert_eq!(m.get(2, 4), 3.5);
+        assert_eq!(m.get(4, 2), 3.5);
+        assert_eq!(m.get(1, 4), -1.0);
+        assert_eq!(m.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn from_fn_matches_get() {
+        let m = PackedSym::from_fn(8, |i, j| (i * 10 + j) as f64);
+        for i in 0..8 {
+            for j in (i + 1)..8 {
+                assert_eq!(m.get(i, j), (i * 10 + j) as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn pair_of_index_inverts_idx() {
+        for n in [2usize, 3, 5, 17, 101] {
+            let m = PackedSym::zeros(n);
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    assert_eq!(pair_of_index(n, m.idx(i, j)), (i, j), "n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pair_of_index_property() {
+        check("pair_of_index random n", 0xC0FFEE, 32, |rng, _| {
+            let n = rng.usize_in(2, 500);
+            let m = PackedSym::zeros(n);
+            for _ in 0..64 {
+                let idx = rng.usize_in(0, m.len().max(1));
+                let (i, j) = pair_of_index(n, idx);
+                prop_assert!(i < j && j < n, "bad pair ({i},{j}) for n={n}");
+                prop_assert!(m.idx(i, j) == idx, "roundtrip failed n={n} idx={idx}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn weighted_norm_and_sub() {
+        let a = PackedSym::from_fn(4, |i, j| (i + j) as f64);
+        let b = PackedSym::from_fn(4, |_, _| 1.0);
+        let d = a.sub(&b);
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                assert_eq!(d.get(i, j), (i + j) as f64 - 1.0);
+            }
+        }
+        let w = PackedSym::filled(4, 2.0);
+        let expect: f64 = d.iter_pairs().map(|(_, _, v)| 2.0 * v * v).sum();
+        assert!((d.weighted_sq_norm(&w) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iter_pairs_order_is_column_major() {
+        let m = PackedSym::from_fn(5, |i, j| (i * 5 + j) as f64);
+        let pairs: Vec<(usize, usize)> = m.iter_pairs().map(|(i, j, _)| (i, j)).collect();
+        let mut expect = Vec::new();
+        for i in 0..5 {
+            for j in (i + 1)..5 {
+                expect.push((i, j));
+            }
+        }
+        assert_eq!(pairs, expect);
+    }
+
+    #[test]
+    fn max_abs_works() {
+        let mut m = PackedSym::zeros(4);
+        m.set(0, 3, -7.25);
+        m.set(1, 2, 3.0);
+        assert_eq!(m.max_abs(), 7.25);
+    }
+
+    #[test]
+    fn random_get_set_fuzz() {
+        let mut rng = Rng::new(99);
+        let n = 40;
+        let mut m = PackedSym::zeros(n);
+        let mut mirror = std::collections::HashMap::new();
+        for _ in 0..5000 {
+            let i = rng.usize_in(0, n);
+            let mut j = rng.usize_in(0, n);
+            if i == j {
+                j = (j + 1) % n;
+            }
+            let v = rng.f64_in(-10.0, 10.0);
+            m.set(i, j, v);
+            let key = (i.min(j), i.max(j));
+            mirror.insert(key, v);
+        }
+        for ((i, j), v) in mirror {
+            assert_eq!(m.get(i, j), v);
+        }
+    }
+}

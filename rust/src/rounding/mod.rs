@@ -1,0 +1,5 @@
+//! Rounding LP solutions into clusterings — the downstream step that
+//! motivates solving the metric-constrained LP (§I, §II-A).
+
+pub mod pivot;
+pub mod threshold;

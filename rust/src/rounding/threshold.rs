@@ -1,0 +1,94 @@
+//! Threshold rounding: cluster = connected component of the graph whose
+//! edges are pairs with LP distance below a threshold (1/2 by default).
+//! This is the simplest scheme with provable guarantees for special cases
+//! and a strong practical baseline.
+
+use crate::matrix::PackedSym;
+
+/// Round distances `x` into a clustering: connect pairs with
+/// `x_ij < threshold`, return connected-component labels.
+pub fn round(x: &PackedSym, threshold: f64) -> Vec<usize> {
+    let n = x.n();
+    // Union-find over threshold edges.
+    let mut parent: Vec<usize> = (0..n).collect();
+    fn find(parent: &mut Vec<usize>, mut a: usize) -> usize {
+        while parent[a] != a {
+            parent[a] = parent[parent[a]];
+            a = parent[a];
+        }
+        a
+    }
+    for (i, j, v) in x.iter_pairs() {
+        if v < threshold {
+            let (ra, rb) = (find(&mut parent, i), find(&mut parent, j));
+            if ra != rb {
+                parent[ra.max(rb)] = ra.min(rb);
+            }
+        }
+    }
+    // Compact labels to 0..k by first occurrence.
+    let mut label = vec![usize::MAX; n];
+    let mut next = 0;
+    let mut out = vec![0usize; n];
+    for u in 0..n {
+        let r = find(&mut parent, u);
+        if label[r] == usize::MAX {
+            label[r] = next;
+            next += 1;
+        }
+        out[u] = label[r];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_blocks_split() {
+        // distances: 0 within {0,1}, {2,3}; 1 across
+        let x = PackedSym::from_fn(4, |i, j| if (i < 2) == (j < 2) { 0.0 } else { 1.0 });
+        let labels = round(&x, 0.5);
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[2], labels[3]);
+        assert_ne!(labels[0], labels[2]);
+    }
+
+    #[test]
+    fn all_far_apart_is_singletons() {
+        let x = PackedSym::filled(5, 1.0);
+        let labels = round(&x, 0.5);
+        let set: std::collections::HashSet<_> = labels.iter().collect();
+        assert_eq!(set.len(), 5);
+    }
+
+    #[test]
+    fn all_close_is_one_cluster() {
+        let x = PackedSym::filled(5, 0.0);
+        let labels = round(&x, 0.5);
+        assert!(labels.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn transitive_chaining() {
+        // 0-1 close, 1-2 close, 0-2 far: threshold rounding chains them.
+        let mut x = PackedSym::filled(3, 1.0);
+        x.set(0, 1, 0.1);
+        x.set(1, 2, 0.1);
+        let labels = round(&x, 0.5);
+        assert_eq!(labels[0], labels[2]);
+    }
+
+    #[test]
+    fn labels_compact_and_deterministic() {
+        let x = PackedSym::from_fn(6, |i, j| if j == i + 1 { 0.0 } else { 1.0 });
+        let a = round(&x, 0.5);
+        let b = round(&x, 0.5);
+        assert_eq!(a, b);
+        let k = a.iter().max().unwrap() + 1;
+        for l in 0..k {
+            assert!(a.contains(&l), "label {l} skipped");
+        }
+    }
+}

@@ -1,0 +1,295 @@
+//! The XLA-backed projection engine: executes the AOT-compiled JAX/Pallas
+//! kernels (L1/L2) from the Rust coordinator (L3).
+//!
+//! A conflict-free wave of the schedule is exactly a data-parallel batch,
+//! so the engine's contract mirrors the scalar hot path: give it a batch
+//! of triplets (variables, inverse weights, duals) and it returns the
+//! post-visit values. Batches are padded with identity lanes (x = 0,
+//! w⁻¹ = 1, y = 0 — a satisfied constraint with no dual is a no-op) up to
+//! the nearest compiled batch size, and chunked by the largest.
+//!
+//! Artifacts are f32 (the TPU-faithful dtype); the f64 coordinator state
+//! is converted at the boundary. The CPU scalar engine remains the
+//! default production path; this engine exists to prove the three-layer
+//! composition and for the engine ablation bench.
+
+use super::{literal_f32, literal_f32_2d, to_vec_f32, Executable, PjrtRuntime};
+use anyhow::{Context, Result};
+
+/// Compiled batch sizes emitted by python/compile/aot.py.
+pub const PROJECT_BATCHES: [usize; 3] = [1024, 4096, 16384];
+/// Pair-sweep batch size emitted by aot.py.
+pub const PAIR_BATCH: usize = 4096;
+/// Objective batch size emitted by aot.py.
+pub const OBJECTIVE_BATCH: usize = 4096;
+
+/// Engine holding all compiled executables.
+pub struct XlaEngine {
+    /// (batch, executable), ascending batch size.
+    project: Vec<(usize, Executable)>,
+    pair: Executable,
+    objective: Executable,
+    platform: String,
+}
+
+impl XlaEngine {
+    /// Load and compile all artifacts from `artifacts_dir`.
+    pub fn load(artifacts_dir: &str) -> Result<XlaEngine> {
+        let rt = PjrtRuntime::cpu(artifacts_dir)?;
+        let mut project = Vec::new();
+        for b in PROJECT_BATCHES {
+            let exe = rt
+                .load(&format!("project_b{b}"), 2)
+                .with_context(|| format!("loading project_b{b} (run `make artifacts`)"))?;
+            project.push((b, exe));
+        }
+        let pair = rt.load(&format!("pair_b{PAIR_BATCH}"), 5)?;
+        let objective = rt.load(&format!("objective_b{OBJECTIVE_BATCH}"), 1)?;
+        Ok(XlaEngine { project, pair, objective, platform: rt.platform() })
+    }
+
+    /// PJRT platform executing the kernels.
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    /// Visit the 3 metric constraints of `n_lanes` independent triplets.
+    /// `x3`, `winv3`, `y3` are row-major `[n_lanes, 3]`; `x3` and `y3` are
+    /// updated in place.
+    pub fn project_batch(
+        &self,
+        x3: &mut Vec<f32>,
+        winv3: &[f32],
+        y3: &mut Vec<f32>,
+    ) -> Result<()> {
+        let n_lanes = x3.len() / 3;
+        anyhow::ensure!(x3.len() == n_lanes * 3 && winv3.len() == x3.len());
+        let mut done = 0usize;
+        while done < n_lanes {
+            let remaining = n_lanes - done;
+            // Smallest compiled batch that fits, else the largest (chunk).
+            let (b, exe) = self
+                .project
+                .iter()
+                .find(|(b, _)| *b >= remaining)
+                .unwrap_or(self.project.last().unwrap());
+            let lanes = remaining.min(*b);
+            let (lo, hi) = (done * 3, (done + lanes) * 3);
+            // Pad with identity lanes: x=0 satisfies all metric rows, y=0.
+            let mut xb = vec![0.0f32; b * 3];
+            let mut wb = vec![1.0f32; b * 3];
+            let mut yb = vec![0.0f32; b * 3];
+            xb[..hi - lo].copy_from_slice(&x3[lo..hi]);
+            wb[..hi - lo].copy_from_slice(&winv3[lo..hi]);
+            yb[..hi - lo].copy_from_slice(&y3[lo..hi]);
+            let outs = exe.run(&[
+                literal_f32_2d(&xb, *b, 3)?,
+                literal_f32_2d(&wb, *b, 3)?,
+                literal_f32_2d(&yb, *b, 3)?,
+            ])?;
+            let xo = to_vec_f32(&outs[0])?;
+            let yo = to_vec_f32(&outs[1])?;
+            x3[lo..hi].copy_from_slice(&xo[..hi - lo]);
+            y3[lo..hi].copy_from_slice(&yo[..hi - lo]);
+            done += lanes;
+        }
+        Ok(())
+    }
+
+    /// Visit the pair (+ box) constraints for a batch of pairs; all arrays
+    /// have the same length; `x`, `f`, `yu`, `yl`, `yb` update in place.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pair_sweep(
+        &self,
+        x: &mut [f32],
+        f: &mut [f32],
+        winv: &[f32],
+        d: &[f32],
+        yu: &mut [f32],
+        yl: &mut [f32],
+        yb: &mut [f32],
+    ) -> Result<()> {
+        let m = x.len();
+        let mut done = 0usize;
+        while done < m {
+            let lanes = (m - done).min(PAIR_BATCH);
+            let (lo, hi) = (done, done + lanes);
+            let pad = |src: &[f32], fill: f32| -> Vec<f32> {
+                let mut v = vec![fill; PAIR_BATCH];
+                v[..lanes].copy_from_slice(&src[lo..hi]);
+                v
+            };
+            // identity lanes: x=d=0, f=1 (slack), winv=1, duals 0 -> no-op
+            let outs = self.pair.run(&[
+                literal_f32(&pad(x, 0.0)),
+                literal_f32(&pad(f, 1.0)),
+                literal_f32(&pad(winv, 1.0)),
+                literal_f32(&pad(d, 0.0)),
+                literal_f32(&pad(yu, 0.0)),
+                literal_f32(&pad(yl, 0.0)),
+                literal_f32(&pad(yb, 0.0)),
+            ])?;
+            let unpack = |lit: &xla::Literal, dst: &mut [f32]| -> Result<()> {
+                let v = to_vec_f32(lit)?;
+                dst[lo..hi].copy_from_slice(&v[..lanes]);
+                Ok(())
+            };
+            unpack(&outs[0], x)?;
+            unpack(&outs[1], f)?;
+            unpack(&outs[2], yu)?;
+            unpack(&outs[3], yl)?;
+            unpack(&outs[4], yb)?;
+            done += lanes;
+        }
+        Ok(())
+    }
+
+    /// Accumulate objective terms `[c'x, x'Wx, b'yhat, lp]` over all pairs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn objective_terms(
+        &self,
+        x: &[f32],
+        f: &[f32],
+        w: &[f32],
+        d: &[f32],
+        yu: &[f32],
+        yl: &[f32],
+        yb: &[f32],
+    ) -> Result<[f64; 4]> {
+        let m = x.len();
+        let mut acc = [0.0f64; 4];
+        let mut done = 0usize;
+        while done < m {
+            let lanes = (m - done).min(OBJECTIVE_BATCH);
+            let (lo, hi) = (done, done + lanes);
+            let pad = |src: &[f32]| -> Vec<f32> {
+                let mut v = vec![0.0f32; OBJECTIVE_BATCH];
+                v[..lanes].copy_from_slice(&src[lo..hi]);
+                v
+            };
+            // zero-weight padding contributes nothing to any term
+            let outs = self.objective.run(&[
+                literal_f32(&pad(x)),
+                literal_f32(&pad(f)),
+                literal_f32(&pad(w)),
+                literal_f32(&pad(d)),
+                literal_f32(&pad(yu)),
+                literal_f32(&pad(yl)),
+                literal_f32(&pad(yb)),
+            ])?;
+            let terms = to_vec_f32(&outs[0])?;
+            for (a, t) in acc.iter_mut().zip(terms.iter()) {
+                *a += *t as f64;
+            }
+            done += lanes;
+        }
+        Ok(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn engine() -> Option<XlaEngine> {
+        if !Path::new("artifacts/project_b1024.hlo.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(XlaEngine::load("artifacts").unwrap())
+    }
+
+    #[test]
+    fn project_batch_odd_sizes_and_padding() {
+        let Some(eng) = engine() else { return };
+        for lanes in [1usize, 3, 100, 1025] {
+            let mut x = vec![0.0f32; lanes * 3];
+            let w = vec![1.0f32; lanes * 3];
+            let mut y = vec![0.0f32; lanes * 3];
+            // violate lane `lanes-1`
+            x[(lanes - 1) * 3] = 3.0;
+            x[(lanes - 1) * 3 + 1] = 1.0;
+            x[(lanes - 1) * 3 + 2] = 1.0;
+            eng.project_batch(&mut x, &w, &mut y).unwrap();
+            let base = (lanes - 1) * 3;
+            assert!((x[base] - (3.0 - 1.0 / 3.0)).abs() < 1e-5, "lanes={lanes}");
+            assert!((y[base] - 1.0 / 3.0).abs() < 1e-5);
+            if lanes > 1 {
+                assert_eq!(x[0], 0.0);
+                assert_eq!(y[0], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn project_batch_matches_rust_engine() {
+        let Some(eng) = engine() else { return };
+        use crate::solver::projection::visit_metric;
+        use crate::util::shared::SharedMut;
+        let mut rng = crate::util::rng::Rng::new(17);
+        let lanes = 200usize;
+        let mut x: Vec<f32> = (0..lanes * 3).map(|_| rng.f64_in(-1.0, 2.0) as f32).collect();
+        let w: Vec<f32> = (0..lanes * 3).map(|_| rng.f64_in(0.4, 2.0) as f32).collect();
+        let mut y = vec![0.0f32; lanes * 3];
+        // rust reference on f64 copies
+        let mut xr: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let wr: Vec<f64> = w.iter().map(|&v| v as f64).collect();
+        let mut yr = vec![[0.0f64; 3]; lanes];
+        {
+            let xs = SharedMut::new(xr.as_mut_slice());
+            for lane in 0..lanes {
+                let b = lane * 3;
+                for t in 0..3 {
+                    let theta =
+                        unsafe { visit_metric(&xs, &wr, b, b + 1, b + 2, t, yr[lane][t]) };
+                    yr[lane][t] = theta;
+                }
+            }
+        }
+        eng.project_batch(&mut x, &w, &mut y).unwrap();
+        for i in 0..lanes * 3 {
+            assert!(
+                (x[i] as f64 - xr[i]).abs() < 1e-4,
+                "lane {} differs: xla={} rust={}",
+                i / 3,
+                x[i],
+                xr[i]
+            );
+        }
+    }
+
+    #[test]
+    fn pair_sweep_projects_onto_planes() {
+        let Some(eng) = engine() else { return };
+        let m = 10usize;
+        let mut x = vec![2.0f32; m];
+        let mut f = vec![0.0f32; m];
+        let winv = vec![1.0f32; m];
+        let d = vec![1.0f32; m];
+        let (mut yu, mut yl, mut yb) = (vec![0.0; m], vec![0.0; m], vec![0.0; m]);
+        eng.pair_sweep(&mut x, &mut f, &winv, &d, &mut yu, &mut yl, &mut yb).unwrap();
+        for e in 0..m {
+            // upper: x - f <= d must now hold (approximately, f32)
+            assert!(x[e] - f[e] - d[e] < 1e-5);
+            // box: x <= 1
+            assert!(x[e] <= 1.0 + 1e-5);
+        }
+    }
+
+    #[test]
+    fn objective_terms_accumulate_over_chunks() {
+        let Some(eng) = engine() else { return };
+        let m = OBJECTIVE_BATCH + 137; // forces 2 chunks
+        let x = vec![0.5f32; m];
+        let f = vec![0.25f32; m];
+        let w = vec![1.0f32; m];
+        let d = vec![0.0f32; m];
+        let z = vec![0.0f32; m];
+        let acc = eng.objective_terms(&x, &f, &w, &d, &z, &z, &z).unwrap();
+        let mf = m as f64;
+        assert!((acc[0] - 0.25 * mf).abs() / mf < 1e-5);
+        assert!((acc[1] - (0.25 + 0.0625) * mf).abs() / mf < 1e-4);
+        assert!((acc[3] - 0.5 * mf).abs() / mf < 1e-4);
+    }
+}

@@ -1,0 +1,198 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them from
+//! the Rust hot path.
+//!
+//! This is the L3↔L1/L2 bridge of the architecture: `make artifacts` runs
+//! Python/JAX once (`python/compile/aot.py`), emitting `artifacts/*.hlo.txt`;
+//! this module loads them via the `xla` crate
+//! (`PjRtClient::cpu` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`). Python never runs at solve time.
+
+pub mod engine;
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A PJRT client plus the artifact directory.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+}
+
+/// One compiled executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Number of outputs in the (always-tupled) result.
+    n_outputs: usize,
+    name: String,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client rooted at `artifacts_dir`.
+    pub fn cpu(artifacts_dir: impl Into<PathBuf>) -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client, artifacts_dir: artifacts_dir.into() })
+    }
+
+    /// Platform name reported by PJRT (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Device count.
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Artifact directory.
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Load and compile `<artifacts_dir>/<name>.hlo.txt`.
+    /// `n_outputs` must match the JAX function's output arity (aot.py lowers
+    /// with `return_tuple=True`, so results always arrive as one tuple).
+    pub fn load(&self, name: &str, n_outputs: usize) -> Result<Executable> {
+        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, n_outputs, name: name.to_string() })
+    }
+}
+
+impl Executable {
+    /// Execute with the given input literals; returns the untupled outputs.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        let outs = literal.to_tuple().context("untupling result")?;
+        anyhow::ensure!(
+            outs.len() == self.n_outputs,
+            "{}: expected {} outputs, got {}",
+            self.name,
+            self.n_outputs,
+            outs.len()
+        );
+        Ok(outs)
+    }
+
+    /// Artifact name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Build an `f32` literal of shape `[n]` from a slice.
+pub fn literal_f32(values: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(values)
+}
+
+/// Build an `f32` literal of shape `[rows, cols]` from row-major data.
+pub fn literal_f32_2d(values: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(values.len() == rows * cols, "shape mismatch");
+    Ok(xla::Literal::vec1(values).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Extract an `f32` vector from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        Path::new("artifacts/project_b1024.hlo.txt").exists()
+    }
+
+    #[test]
+    fn client_comes_up() {
+        let rt = PjrtRuntime::cpu("artifacts").unwrap();
+        assert_eq!(rt.platform(), "cpu");
+        assert!(rt.device_count() >= 1);
+    }
+
+    #[test]
+    fn load_missing_artifact_errors() {
+        let rt = PjrtRuntime::cpu("artifacts").unwrap();
+        assert!(rt.load("no_such_artifact", 1).is_err());
+    }
+
+    #[test]
+    fn project_artifact_roundtrip() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = PjrtRuntime::cpu("artifacts").unwrap();
+        let exe = rt.load("project_b1024", 2).unwrap();
+        let b = 1024usize;
+        // paper's worked example in lane 0: (3,1,1) unit weights
+        let mut x = vec![0.0f32; b * 3];
+        let w = vec![1.0f32; b * 3];
+        let y = vec![0.0f32; b * 3];
+        x[0] = 3.0;
+        x[1] = 1.0;
+        x[2] = 1.0;
+        let outs = exe
+            .run(&[
+                literal_f32_2d(&x, b, 3).unwrap(),
+                literal_f32_2d(&w, b, 3).unwrap(),
+                literal_f32_2d(&y, b, 3).unwrap(),
+            ])
+            .unwrap();
+        assert_eq!(outs.len(), 2);
+        let xo = to_vec_f32(&outs[0]).unwrap();
+        let yo = to_vec_f32(&outs[1]).unwrap();
+        assert!((xo[0] - (3.0 - 1.0 / 3.0)).abs() < 1e-5, "xo[0]={}", xo[0]);
+        assert!((xo[1] - (1.0 + 1.0 / 3.0)).abs() < 1e-5);
+        assert!((yo[0] - 1.0 / 3.0).abs() < 1e-5);
+        // untouched lanes stay zero
+        assert_eq!(xo[3], 0.0);
+    }
+
+    #[test]
+    fn objective_artifact_matches_rust_formula() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = PjrtRuntime::cpu("artifacts").unwrap();
+        let exe = rt.load("objective_b4096", 1).unwrap();
+        let b = 4096usize;
+        let x = vec![0.5f32; b];
+        let f = vec![0.25f32; b];
+        let w = vec![2.0f32; b];
+        let d = vec![1.0f32; b];
+        let yu = vec![0.1f32; b];
+        let yl = vec![0.05f32; b];
+        let yb = vec![0.2f32; b];
+        let outs = exe
+            .run(&[
+                literal_f32(&x),
+                literal_f32(&f),
+                literal_f32(&w),
+                literal_f32(&d),
+                literal_f32(&yu),
+                literal_f32(&yl),
+                literal_f32(&yb),
+            ])
+            .unwrap();
+        let terms = to_vec_f32(&outs[0]).unwrap();
+        let bf = b as f32;
+        assert!((terms[0] - 2.0 * 0.25 * bf).abs() / bf < 1e-5); // c'x
+        assert!((terms[1] - 2.0 * (0.25 + 0.0625) * bf).abs() / bf < 1e-4); // x'Wx
+        assert!((terms[2] - (0.05 + 0.2) * bf).abs() / bf < 1e-5); // b'yhat
+        assert!((terms[3] - 2.0 * 0.5 * bf).abs() / bf < 1e-4); // lp
+    }
+}

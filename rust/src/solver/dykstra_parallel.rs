@@ -1,0 +1,295 @@
+//! Parallel Dykstra — the paper's contribution (§III).
+//!
+//! Each pass walks the wave [`Schedule`]: all tiles of a wave contain
+//! mutually conflict-free triplets, so workers project concurrently with
+//! **no locks and no atomics**; a barrier separates waves. Tiles are
+//! assigned `r mod p` (Fig 3), every worker visits its tiles (and the
+//! triplets inside, via the cube order of [`tiling`]) in the same
+//! deterministic order each pass, so per-worker [`DualStore`]s give O(1)
+//! dual access (§III-D).
+//!
+//! A corollary worth stating (and tested): because concurrent projections
+//! touch disjoint variables, the result of a pass is *bitwise identical*
+//! for every worker count `p` — parallelism changes wall-clock only. The
+//! constraint *order* (hence the iterate sequence) differs from the serial
+//! baseline, which §IV-D discusses; both converge.
+
+use super::duals::DualStore;
+use super::projection::{visit_box_upper, visit_pair_lower, visit_pair_upper};
+use super::schedule::{Assignment, Schedule};
+use super::termination::compute_residuals;
+use super::{CcState, Residuals, Solution, SolveOpts};
+use crate::instance::CcLpInstance;
+use crate::util::parallel::{chunk_range, scoped_workers};
+use crate::util::shared::{PerWorker, SharedMut};
+
+/// Solve the CC-LP instance with the parallel projection method.
+pub fn solve(inst: &CcLpInstance, opts: &SolveOpts) -> Solution {
+    let schedule = Schedule::new(inst.n, opts.tile);
+    solve_with_schedule(inst, opts, &schedule)
+}
+
+/// Solve with a prebuilt schedule (benchmarks reuse schedules across runs).
+pub fn solve_with_schedule(
+    inst: &CcLpInstance,
+    opts: &SolveOpts,
+    schedule: &Schedule,
+) -> Solution {
+    assert_eq!(schedule.n(), inst.n, "schedule built for wrong n");
+    let p = opts.threads.max(1);
+    let mut state = CcState::new(inst, opts.gamma, opts.include_box);
+    let stores = PerWorker::new((0..p).map(|_| DualStore::new()).collect());
+    let mut pass_times = Vec::new();
+    let mut residuals = Residuals::default();
+    let mut passes_done = 0;
+
+    for pass in 0..opts.max_passes {
+        let t0 = std::time::Instant::now();
+        run_metric_phase(&mut state, schedule, &stores, p, opts.assignment);
+        run_pair_phase(&mut state, p);
+        passes_done = pass + 1;
+        if opts.track_pass_times {
+            pass_times.push(t0.elapsed().as_secs_f64());
+        }
+        if opts.check_every > 0 && passes_done % opts.check_every == 0 {
+            residuals = compute_residuals(&state, p);
+            if residuals.max_violation <= opts.tol_violation
+                && residuals.rel_gap.abs() <= opts.tol_gap
+            {
+                break;
+            }
+        }
+    }
+    if opts.check_every == 0 {
+        residuals = compute_residuals(&state, p);
+    }
+    let mut stores = stores.into_inner();
+    let nnz = stores.iter_mut().map(|s| s.nnz()).sum();
+    Solution {
+        x: state.x_matrix(),
+        f: Some(state.f_matrix()),
+        passes: passes_done,
+        residuals,
+        pass_times,
+        nnz_duals: nnz,
+    }
+}
+
+/// One wave-parallel sweep over all metric constraints.
+pub(crate) fn run_metric_phase(
+    state: &mut CcState,
+    schedule: &Schedule,
+    stores: &PerWorker<DualStore>,
+    p: usize,
+    assignment: Assignment,
+) {
+    let b = schedule.tile_size();
+    let x = SharedMut::new(state.x.as_mut_slice());
+    let winv = state.winv.as_slice();
+    let col_starts = state.col_starts.as_slice();
+    scoped_workers(p, |tid, barrier| {
+        // SAFETY: slot `tid` is touched by this worker only.
+        let store = unsafe { stores.get_mut(tid) };
+        store.begin_pass();
+        for (wave_idx, wave) in schedule.waves().iter().enumerate() {
+            // Fig 3: the r-th tile of the wave goes to worker r mod p
+            // (optionally rotated per wave for better load balance).
+            let mut r = assignment.first_tile(tid, wave_idx, p);
+            while r < wave.len() {
+                // SAFETY: wave tiles are conflict-free (schedule invariant,
+                // tested exhaustively) -> this worker's writes are disjoint.
+                unsafe {
+                    super::hot_loop::process_tile(&x, winv, col_starts, &wave[r], b, store)
+                };
+                r += p;
+            }
+            // Wave boundary: all workers must finish before the next wave
+            // may touch variables this wave wrote.
+            barrier.wait();
+        }
+    });
+}
+
+/// Pair (+ box) constraints: one independent 2-3 constraint block per pair,
+/// embarrassingly parallel over contiguous chunks.
+pub(crate) fn run_pair_phase(state: &mut CcState, p: usize) {
+    let m = state.x.len();
+    let include_box = state.include_box;
+    let x = SharedMut::new(state.x.as_mut_slice());
+    let f = SharedMut::new(state.f.as_mut_slice());
+    let yu = SharedMut::new(state.y_upper.as_mut_slice());
+    let yl = SharedMut::new(state.y_lower.as_mut_slice());
+    let yb = SharedMut::new(state.y_box.as_mut_slice());
+    let winv = state.winv.as_slice();
+    let d = state.d.as_slice();
+    scoped_workers(p, |tid, _| {
+        let (lo, hi) = chunk_range(m, p, tid);
+        for e in lo..hi {
+            // SAFETY: chunks are disjoint; each pair's variables are
+            // touched only by this worker.
+            unsafe {
+                let t = visit_pair_upper(&x, &f, winv, d, e, yu.get(e));
+                yu.set(e, t);
+                let t = visit_pair_lower(&x, &f, winv, d, e, yl.get(e));
+                yl.set(e, t);
+                if include_box {
+                    let t = visit_box_upper(&x, winv, e, yb.get(e));
+                    yb.set(e, t);
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::metric_nearness::max_triangle_violation;
+    use crate::solver::dykstra_serial;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+
+    fn tiny(n: usize, seed: u64) -> CcLpInstance {
+        CcLpInstance::random(n, 0.5, 0.8, 1.6, seed)
+    }
+
+    #[test]
+    fn result_independent_of_thread_count_bitwise() {
+        // The schedule's conflict-freeness makes the pass outcome exactly
+        // independent of p — the strongest possible correctness signal.
+        let inst = tiny(14, 3);
+        let base = solve(&inst, &SolveOpts { max_passes: 8, threads: 1, tile: 3, ..Default::default() });
+        for p in [2usize, 4, 7] {
+            let opts = SolveOpts { max_passes: 8, threads: p, tile: 3, ..Default::default() };
+            let sol = solve(&inst, &opts);
+            assert_eq!(sol.x, base.x, "p={p} diverged from p=1");
+            assert_eq!(sol.f, base.f, "p={p} slacks diverged");
+            assert_eq!(sol.nnz_duals, base.nnz_duals, "p={p} dual count diverged");
+        }
+    }
+
+    #[test]
+    fn thread_independence_property() {
+        check("parallel bitwise p-independence", 0xAB5EED, 12, |rng, _| {
+            let n = rng.usize_in(4, 18);
+            let b = rng.usize_in(1, 6);
+            let inst = tiny(n, rng.next_u64());
+            let mk = |p| SolveOpts { max_passes: 3, threads: p, tile: b, ..Default::default() };
+            let s1 = solve(&inst, &mk(1));
+            let s3 = solve(&inst, &mk(3));
+            prop_assert!(s1.x == s3.x, "n={n} b={b}: p=1 vs p=3 differ");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn converges_to_metric_feasible() {
+        let inst = tiny(10, 5);
+        let opts = SolveOpts { max_passes: 400, threads: 4, tile: 2, ..Default::default() };
+        let sol = solve(&inst, &opts);
+        assert!(max_triangle_violation(&sol.x) < 1e-3);
+        assert!(sol.residuals.max_violation < 1e-2);
+    }
+
+    #[test]
+    fn agrees_with_serial_at_convergence() {
+        // Different constraint orders converge to the SAME unique QP
+        // optimum (the projection onto the feasible set is unique).
+        let inst = tiny(9, 11);
+        let opts_par =
+            SolveOpts { max_passes: 400, threads: 4, tile: 2, ..Default::default() };
+        let opts_ser = SolveOpts { max_passes: 400, ..Default::default() };
+        let par = solve(&inst, &opts_par);
+        let ser = dykstra_serial::solve(&inst, &opts_ser);
+        let mut worst: f64 = 0.0;
+        for (i, j, v) in par.x.iter_pairs() {
+            worst = worst.max((v - ser.x.get(i, j)).abs());
+        }
+        assert!(worst < 5e-3, "parallel vs serial optimum differ by {worst}");
+    }
+
+    #[test]
+    fn tile_size_does_not_change_fixed_point() {
+        let inst = tiny(10, 21);
+        let sols: Vec<_> = [1usize, 2, 5, 40]
+            .iter()
+            .map(|&b| {
+                solve(
+                    &inst,
+                    &SolveOpts { max_passes: 300, threads: 2, tile: b, ..Default::default() },
+                )
+            })
+            .collect();
+        for s in &sols[1..] {
+            let mut worst: f64 = 0.0;
+            for (i, j, v) in s.x.iter_pairs() {
+                worst = worst.max((v - sols[0].x.get(i, j)).abs());
+            }
+            assert!(worst < 5e-3, "tile size changed the optimum by {worst}");
+        }
+    }
+
+    #[test]
+    fn lp_objective_close_to_serial() {
+        let inst = tiny(12, 31);
+        let par = solve(
+            &inst,
+            &SolveOpts { max_passes: 200, threads: 3, tile: 4, ..Default::default() },
+        );
+        let ser = dykstra_serial::solve(&inst, &SolveOpts { max_passes: 200, ..Default::default() });
+        let lp_par = inst.lp_objective(&par.x);
+        let lp_ser = inst.lp_objective(&ser.x);
+        assert!(
+            (lp_par - lp_ser).abs() < 1e-2 * lp_ser.abs().max(1.0),
+            "LP objectives differ: {lp_par} vs {lp_ser}"
+        );
+    }
+
+    #[test]
+    fn rotated_assignment_same_result_bitwise() {
+        // Assignment policy moves tiles between workers but never changes
+        // the wave structure -> identical numerics, different per-worker
+        // dual arrays only.
+        let inst = tiny(12, 61);
+        let rr = solve(
+            &inst,
+            &SolveOpts {
+                max_passes: 6,
+                threads: 3,
+                tile: 2,
+                assignment: Assignment::RoundRobin,
+                ..Default::default()
+            },
+        );
+        let rot = solve(
+            &inst,
+            &SolveOpts {
+                max_passes: 6,
+                threads: 3,
+                tile: 2,
+                assignment: Assignment::Rotated,
+                ..Default::default()
+            },
+        );
+        assert_eq!(rr.x, rot.x);
+        assert_eq!(rr.nnz_duals, rot.nnz_duals);
+    }
+
+    #[test]
+    fn respects_prebuilt_schedule() {
+        let inst = tiny(8, 41);
+        let schedule = Schedule::new(8, 2);
+        let opts = SolveOpts { max_passes: 5, threads: 2, tile: 2, ..Default::default() };
+        let a = solve_with_schedule(&inst, &opts, &schedule);
+        let b = solve(&inst, &opts);
+        assert_eq!(a.x, b.x);
+    }
+
+    #[test]
+    #[should_panic(expected = "schedule built for wrong n")]
+    fn wrong_schedule_panics() {
+        let inst = tiny(8, 41);
+        let schedule = Schedule::new(9, 2);
+        let _ = solve_with_schedule(&inst, &SolveOpts::default(), &schedule);
+    }
+}

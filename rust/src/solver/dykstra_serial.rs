@@ -1,0 +1,161 @@
+//! Serial Dykstra baseline — the method of [37] that the paper's 1-core
+//! rows in Table I measure. Constraints are visited in the standard
+//! lexicographic triplet order with a single sparse dual array, then the
+//! pair (and optional box) constraints per pair.
+
+use super::duals::DualStore;
+use super::dykstra_parallel::run_pair_phase;
+use super::termination::compute_residuals;
+use super::{CcState, Residuals, Solution, SolveOpts};
+use crate::instance::CcLpInstance;
+use crate::util::shared::SharedMut;
+
+/// Solve the CC-LP instance with serial Dykstra.
+pub fn solve(inst: &CcLpInstance, opts: &SolveOpts) -> Solution {
+    let mut state = CcState::new(inst, opts.gamma, opts.include_box);
+    let mut store = DualStore::new();
+    let mut pass_times = Vec::new();
+    let mut residuals = Residuals::default();
+    let mut passes_done = 0;
+
+    for pass in 0..opts.max_passes {
+        let t0 = std::time::Instant::now();
+        run_pass(&mut state, &mut store);
+        passes_done = pass + 1;
+        if opts.track_pass_times {
+            pass_times.push(t0.elapsed().as_secs_f64());
+        }
+        if opts.check_every > 0 && passes_done % opts.check_every == 0 {
+            residuals = compute_residuals(&state, 1);
+            if residuals.max_violation <= opts.tol_violation
+                && residuals.rel_gap.abs() <= opts.tol_gap
+            {
+                break;
+            }
+        }
+    }
+    if opts.check_every == 0 {
+        residuals = compute_residuals(&state, 1);
+    }
+    let nnz = store.nnz();
+    Solution {
+        x: state.x_matrix(),
+        f: Some(state.f_matrix()),
+        passes: passes_done,
+        residuals,
+        pass_times,
+        nnz_duals: nnz,
+    }
+}
+
+/// One full pass: all metric constraints (lexicographic), then all pair
+/// constraints.
+pub fn run_pass(state: &mut CcState, store: &mut DualStore) {
+    store.begin_pass();
+    let n = state.n;
+    let col_starts = std::mem::take(&mut state.col_starts);
+    {
+        let x = SharedMut::new(state.x.as_mut_slice());
+        // SAFETY: single thread, indices in bounds by construction.
+        unsafe { super::hot_loop::process_lex(&x, &state.winv, &col_starts, n, store) };
+    }
+    state.col_starts = col_starts;
+    // Pair constraints: identical code path as the parallel solver, p = 1.
+    run_pair_phase(state, 1);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::metric_nearness::max_triangle_violation;
+
+    fn tiny() -> CcLpInstance {
+        CcLpInstance::random(8, 0.5, 0.8, 1.6, 7)
+    }
+
+    #[test]
+    fn violation_decreases_over_passes() {
+        let inst = tiny();
+        let few = solve(&inst, &SolveOpts { max_passes: 2, ..Default::default() });
+        let many = solve(&inst, &SolveOpts { max_passes: 300, ..Default::default() });
+        assert!(
+            many.residuals.max_violation <= few.residuals.max_violation + 1e-12,
+            "few={} many={}",
+            few.residuals.max_violation,
+            many.residuals.max_violation
+        );
+        assert!(many.residuals.max_violation < 1e-2);
+    }
+
+    #[test]
+    fn x_becomes_metric_and_bounded() {
+        let inst = tiny();
+        let sol = solve(&inst, &SolveOpts { max_passes: 400, ..Default::default() });
+        assert!(max_triangle_violation(&sol.x) < 1e-3);
+        for (_, _, v) in sol.x.iter_pairs() {
+            assert!(v <= 1.0 + 1e-3, "x={v} exceeds box");
+            assert!(v >= -1e-3, "x={v} negative");
+        }
+    }
+
+    #[test]
+    fn slacks_dominate_deviation() {
+        let inst = tiny();
+        let sol = solve(&inst, &SolveOpts { max_passes: 400, ..Default::default() });
+        let f = sol.f.unwrap();
+        for i in 0..inst.n {
+            for j in (i + 1)..inst.n {
+                let dev = (sol.x.get(i, j) - inst.d.get(i, j)).abs();
+                assert!(f.get(i, j) >= dev - 1e-3, "f < |x-d| at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn duality_gap_shrinks() {
+        let inst = tiny();
+        let sol5 = solve(&inst, &SolveOpts { max_passes: 5, ..Default::default() });
+        let sol80 = solve(&inst, &SolveOpts { max_passes: 120, ..Default::default() });
+        assert!(
+            sol80.residuals.rel_gap.abs() < sol5.residuals.rel_gap.abs() + 1e-9,
+            "gap5={} gap80={}",
+            sol5.residuals.rel_gap,
+            sol80.residuals.rel_gap
+        );
+        assert!(sol80.residuals.rel_gap.abs() < 0.05, "gap={}", sol80.residuals.rel_gap);
+    }
+
+    #[test]
+    fn early_stop_on_tolerance() {
+        let inst = tiny();
+        let opts = SolveOpts {
+            max_passes: 500,
+            check_every: 5,
+            tol_violation: 1e-3,
+            tol_gap: 5e-2,
+            ..Default::default()
+        };
+        let sol = solve(&inst, &opts);
+        assert!(sol.passes < 500, "should stop early, ran {}", sol.passes);
+        assert!(sol.residuals.max_violation <= 1e-3);
+    }
+
+    #[test]
+    fn deterministic() {
+        let inst = tiny();
+        let opts = SolveOpts { max_passes: 10, ..Default::default() };
+        let a = solve(&inst, &opts);
+        let b = solve(&inst, &opts);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.nnz_duals, b.nnz_duals);
+    }
+
+    #[test]
+    fn trivially_consistent_instance_stays_at_targets() {
+        // d == 0 everywhere: x = 0, f = 0 is optimal (LP value 0); solver
+        // must converge to lp_objective ~ 0.
+        let inst = CcLpInstance::unweighted(6, &[]);
+        let sol = solve(&inst, &SolveOpts { max_passes: 80, ..Default::default() });
+        assert!(inst.lp_objective(&sol.x) < 1e-3);
+    }
+}

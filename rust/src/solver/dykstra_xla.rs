@@ -1,0 +1,229 @@
+//! Hybrid solver: the coordinator (L3) driving the AOT-compiled JAX/Pallas
+//! projection kernel (L1/L2) through PJRT.
+//!
+//! The thread-oriented wave schedule cannot feed a batched kernel directly:
+//! triplets *within* one tile share variables (every triplet of `S_{i,k}`
+//! contains the pair `(i, k)`), and only the sequential per-worker visit
+//! makes that safe. Batched lanes must be pairwise independent, so this
+//! solver uses the [`schedule_delta::BatchSchedule`] decomposition instead:
+//! delta classes `(i, i+a, i+a+b)` are conflict-free and pack into large
+//! flat batches. Dykstra converges under any fixed constraint order, so
+//! this is again "simply a re-ordering" (§III-A).
+//!
+//! Dual variables for this path are stored densely per triplet
+//! (`3·C(n,3)` f32), which caps practical n at a few hundred — fine for
+//! its purpose: an end-to-end proof that L3/L2/L1 compose, and the engine
+//! ablation bench. Production runs use the scalar CPU engine with sparse
+//! per-worker dual stores.
+
+use super::schedule_delta::BatchSchedule;
+use super::termination::compute_residuals;
+use super::{CcState, Residuals, Solution, SolveOpts};
+use crate::instance::CcLpInstance;
+use crate::runtime::engine::XlaEngine;
+use anyhow::Result;
+
+/// Lexicographic rank of triplet (i, j, k) among all i<j<k over n nodes.
+/// O(1) via prefix tables; used to index the dense dual array.
+pub struct TripletRank {
+    /// a_prefix[i] = #triplets with first index < i.
+    a_prefix: Vec<u64>,
+    /// p_prefix[b] = sum_{b' < b} (n - 1 - b').
+    p_prefix: Vec<u64>,
+}
+
+impl TripletRank {
+    pub fn new(n: usize) -> TripletRank {
+        let mut a_prefix = vec![0u64; n + 1];
+        for i in 0..n {
+            let rem = (n - 1 - i) as u64; // choices of (j,k) above i: C(rem,2)
+            a_prefix[i + 1] = a_prefix[i] + rem * rem.saturating_sub(1) / 2;
+        }
+        let mut p_prefix = vec![0u64; n + 1];
+        for b in 0..n {
+            p_prefix[b + 1] = p_prefix[b] + (n - 1 - b) as u64;
+        }
+        TripletRank { a_prefix, p_prefix }
+    }
+
+    /// Rank of (i, j, k), i < j < k.
+    #[inline]
+    pub fn rank(&self, i: usize, j: usize, k: usize) -> u64 {
+        self.a_prefix[i] + (self.p_prefix[j] - self.p_prefix[i + 1]) + (k - j - 1) as u64
+    }
+}
+
+/// Solve the CC-LP instance through the PJRT engine.
+pub fn solve(inst: &CcLpInstance, opts: &SolveOpts, engine: &XlaEngine) -> Result<Solution> {
+    let n = inst.n;
+    let schedule = BatchSchedule::new(n, crate::runtime::engine::PROJECT_BATCHES[2]);
+    let rank = TripletRank::new(n);
+    let n_triplets = super::schedule::n_triplets(n) as usize;
+    anyhow::ensure!(
+        n_triplets * 3 <= 200_000_000,
+        "XLA engine path caps at ~n=800 (dense duals); use the CPU engine"
+    );
+    let mut state = CcState::new(inst, opts.gamma, opts.include_box);
+    // Dense metric duals, 3 per triplet, f32 (artifact dtype).
+    let mut metric_duals = vec![0.0f32; n_triplets * 3];
+    // f32 mirrors of the pair-phase state.
+    let m = state.x.len();
+    let winv32: Vec<f32> = state.winv.iter().map(|&v| v as f32).collect();
+    let d32: Vec<f32> = state.d.iter().map(|&v| v as f32).collect();
+
+    let mut pass_times = Vec::new();
+    let mut residuals = Residuals::default();
+    let mut passes_done = 0;
+
+    // Reused gather buffers.
+    let mut lanes: Vec<(usize, usize, usize, u64)> = Vec::new();
+    let mut x3: Vec<f32> = Vec::new();
+    let mut w3: Vec<f32> = Vec::new();
+    let mut y3: Vec<f32> = Vec::new();
+
+    for pass in 0..opts.max_passes {
+        let t0 = std::time::Instant::now();
+        for batch in schedule.batches() {
+            // Gather the batch (lanes are pairwise variable-disjoint).
+            lanes.clear();
+            x3.clear();
+            w3.clear();
+            y3.clear();
+            for &(i, j, k) in batch {
+                let (i, j, k) = (i as usize, j as usize, k as usize);
+                let pij = state.pidx(i, j);
+                let pik = state.pidx(i, k);
+                let pjk = state.pidx(j, k);
+                let r = rank.rank(i, j, k);
+                lanes.push((pij, pik, pjk, r));
+                x3.extend_from_slice(&[
+                    state.x[pij] as f32,
+                    state.x[pik] as f32,
+                    state.x[pjk] as f32,
+                ]);
+                w3.extend_from_slice(&[
+                    state.winv[pij] as f32,
+                    state.winv[pik] as f32,
+                    state.winv[pjk] as f32,
+                ]);
+                let db = r as usize * 3;
+                y3.extend_from_slice(&metric_duals[db..db + 3]);
+            }
+            if lanes.is_empty() {
+                continue;
+            }
+            engine.project_batch(&mut x3, &w3, &mut y3)?;
+            // Scatter back.
+            for (lane, &(pij, pik, pjk, r)) in lanes.iter().enumerate() {
+                let b = lane * 3;
+                state.x[pij] = x3[b] as f64;
+                state.x[pik] = x3[b + 1] as f64;
+                state.x[pjk] = x3[b + 2] as f64;
+                let db = r as usize * 3;
+                metric_duals[db..db + 3].copy_from_slice(&y3[b..b + 3]);
+            }
+        }
+        // Pair phase through the pair artifact.
+        {
+            let mut x32: Vec<f32> = state.x.iter().map(|&v| v as f32).collect();
+            let mut f32v: Vec<f32> = state.f.iter().map(|&v| v as f32).collect();
+            let mut yu: Vec<f32> = state.y_upper.iter().map(|&v| v as f32).collect();
+            let mut yl: Vec<f32> = state.y_lower.iter().map(|&v| v as f32).collect();
+            let mut yb: Vec<f32> = state.y_box.iter().map(|&v| v as f32).collect();
+            engine.pair_sweep(&mut x32, &mut f32v, &winv32, &d32, &mut yu, &mut yl, &mut yb)?;
+            for e in 0..m {
+                state.x[e] = x32[e] as f64;
+                state.f[e] = f32v[e] as f64;
+                state.y_upper[e] = yu[e] as f64;
+                state.y_lower[e] = yl[e] as f64;
+                state.y_box[e] = yb[e] as f64;
+            }
+        }
+        passes_done = pass + 1;
+        if opts.track_pass_times {
+            pass_times.push(t0.elapsed().as_secs_f64());
+        }
+        if opts.check_every > 0 && passes_done % opts.check_every == 0 {
+            residuals = compute_residuals(&state, opts.threads.max(1));
+            if residuals.max_violation <= opts.tol_violation
+                && residuals.rel_gap.abs() <= opts.tol_gap
+            {
+                break;
+            }
+        }
+    }
+    if opts.check_every == 0 {
+        residuals = compute_residuals(&state, opts.threads.max(1));
+    }
+    let nnz = metric_duals.iter().filter(|&&y| y != 0.0).count();
+    Ok(Solution {
+        x: state.x_matrix(),
+        f: Some(state.f_matrix()),
+        passes: passes_done,
+        residuals,
+        pass_times,
+        nnz_duals: nnz,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::dykstra_parallel;
+
+    #[test]
+    fn triplet_rank_is_lex_order() {
+        for n in [3usize, 5, 9, 20] {
+            let r = TripletRank::new(n);
+            let mut expect = 0u64;
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    for k in (j + 1)..n {
+                        assert_eq!(r.rank(i, j, k), expect, "({i},{j},{k}) n={n}");
+                        expect += 1;
+                    }
+                }
+            }
+            assert_eq!(expect, super::super::schedule::n_triplets(n));
+        }
+    }
+
+    fn engine() -> Option<XlaEngine> {
+        if !std::path::Path::new("artifacts/project_b1024.hlo.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(XlaEngine::load("artifacts").unwrap())
+    }
+
+    #[test]
+    fn xla_solver_tracks_cpu_solver() {
+        // Different constraint orders (delta batches vs tiled waves) take
+        // different trajectories but converge to the SAME unique QP
+        // optimum; compare at convergence with f32-appropriate tolerance.
+        let Some(eng) = engine() else { return };
+        let inst = CcLpInstance::random(12, 0.5, 0.8, 1.6, 13);
+        let opts = SolveOpts { max_passes: 300, threads: 2, tile: 3, ..Default::default() };
+        let cpu = dykstra_parallel::solve(&inst, &opts);
+        let xla = solve(&inst, &opts, &eng).unwrap();
+        let mut worst: f64 = 0.0;
+        for (i, j, v) in xla.x.iter_pairs() {
+            worst = worst.max((v - cpu.x.get(i, j)).abs());
+        }
+        assert!(worst < 2e-2, "xla vs cpu engines diverged: {worst}");
+    }
+
+    #[test]
+    fn xla_solver_converges() {
+        let Some(eng) = engine() else { return };
+        let inst = CcLpInstance::random(10, 0.5, 0.8, 1.6, 29);
+        let opts = SolveOpts { max_passes: 200, tile: 4, ..Default::default() };
+        let sol = solve(&inst, &opts, &eng).unwrap();
+        // f32 duals floor the achievable violation around 1e-3.
+        assert!(
+            sol.residuals.max_violation < 1e-2,
+            "violation {}",
+            sol.residuals.max_violation
+        );
+    }
+}

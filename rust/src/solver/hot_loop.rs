@@ -1,0 +1,184 @@
+//! The optimized metric-phase inner loops (EXPERIMENTS.md §Perf).
+//!
+//! Same visit order as [`tiling::for_each_triplet`] (cube order) and the
+//! lexicographic baseline, but with the per-triplet work minimized:
+//!
+//! * fused [`visit_triplet`] — one load + one store per variable per
+//!   triplet (not per constraint), one division per triplet;
+//! * incremental packed indices — inside the innermost `k` loop, `p_ik`
+//!   and `p_jk` advance by 1 (both walk contiguous column segments) and
+//!   the dual key advances by 4, so no per-visit index arithmetic.
+
+use super::duals::{metric_key, DualStore};
+use super::projection::visit_triplet;
+use super::schedule::Tile;
+use crate::util::shared::SharedMut;
+
+/// Process every triplet of `tile` (cube order, chunk size `b`).
+///
+/// # Safety
+/// Caller guarantees exclusive access to all variables reachable from the
+/// tile (the wave schedule invariant) and in-bounds packed indices.
+#[inline]
+pub(crate) unsafe fn process_tile(
+    x: &SharedMut<f64>,
+    winv: &[f64],
+    col_starts: &[usize],
+    tile: &Tile,
+    b: usize,
+    store: &mut DualStore,
+) {
+    let j_min = tile.i_lo + 1;
+    let j_end = tile.k_hi.saturating_sub(1);
+    let mut chunk_lo = j_min;
+    while chunk_lo < j_end {
+        let chunk_hi = (chunk_lo + b).min(j_end);
+        for i in tile.i_lo..tile.i_hi {
+            let ci = *col_starts.get_unchecked(i);
+            let j_lo = chunk_lo.max(i + 1);
+            for j in j_lo..chunk_hi {
+                let k0 = tile.k_lo.max(j + 1);
+                if k0 >= tile.k_hi {
+                    continue;
+                }
+                let pij = ci + (j - i - 1);
+                let mut pik = ci + (k0 - i - 1);
+                let mut pjk = *col_starts.get_unchecked(j) + (k0 - j - 1);
+                let mut key = metric_key(i, j, k0, 0);
+                for _ in k0..tile.k_hi {
+                    let y = store.fetch3(key);
+                    let th = visit_triplet(x, winv, pij, pik, pjk, y);
+                    store.store3(key, th);
+                    pik += 1;
+                    pjk += 1;
+                    key += 4;
+                }
+            }
+        }
+        chunk_lo = chunk_hi;
+    }
+}
+
+/// Process all `C(n,3)` triplets in the lexicographic order of the serial
+/// baseline [37], fused + incremental.
+///
+/// # Safety
+/// Single-threaded access to `x`.
+#[inline]
+pub(crate) unsafe fn process_lex(
+    x: &SharedMut<f64>,
+    winv: &[f64],
+    col_starts: &[usize],
+    n: usize,
+    store: &mut DualStore,
+) {
+    for i in 0..n {
+        let ci = *col_starts.get_unchecked(i);
+        for j in (i + 1)..n {
+            let k0 = j + 1;
+            if k0 >= n {
+                continue;
+            }
+            let pij = ci + (j - i - 1);
+            let mut pik = ci + (k0 - i - 1);
+            let mut pjk = *col_starts.get_unchecked(j);
+            let mut key = metric_key(i, j, k0, 0);
+            for _ in k0..n {
+                let y = store.fetch3(key);
+                let th = visit_triplet(x, winv, pij, pik, pjk, y);
+                store.store3(key, th);
+                pik += 1;
+                pjk += 1;
+                key += 4;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::CcLpInstance;
+    use crate::solver::schedule::Schedule;
+    use crate::solver::tiling::{for_each_triplet, for_each_triplet_lex};
+    use crate::solver::CcState;
+
+    /// Reference implementation: cube-order iteration + fused visit, via
+    /// the (slower) callback iterator. Must match process_tile bitwise.
+    unsafe fn reference_tile(
+        x: &SharedMut<f64>,
+        winv: &[f64],
+        col_starts: &[usize],
+        tile: &Tile,
+        b: usize,
+        store: &mut DualStore,
+    ) {
+        for_each_triplet(tile, b, |i, j, k| {
+            let pij = col_starts[i] + (j - i - 1);
+            let pik = col_starts[i] + (k - i - 1);
+            let pjk = col_starts[j] + (k - j - 1);
+            let key = metric_key(i, j, k, 0);
+            let y = [store.fetch(key), store.fetch(key | 1), store.fetch(key | 2)];
+            let th = visit_triplet(x, winv, pij, pik, pjk, y);
+            store.store(key, th[0]);
+            store.store(key | 1, th[1]);
+            store.store(key | 2, th[2]);
+        });
+    }
+
+    #[test]
+    fn process_tile_bitwise_matches_reference() {
+        let inst = CcLpInstance::random(24, 0.5, 0.7, 1.8, 5);
+        let schedule = Schedule::new(24, 4);
+        for passes in [1usize, 3] {
+            let mut sa = CcState::new(&inst, 5.0, true);
+            let mut sb = CcState::new(&inst, 5.0, true);
+            let mut da = DualStore::new();
+            let mut db = DualStore::new();
+            for _ in 0..passes {
+                da.begin_pass();
+                db.begin_pass();
+                let xa = SharedMut::new(sa.x.as_mut_slice());
+                let xb = SharedMut::new(sb.x.as_mut_slice());
+                for wave in schedule.waves() {
+                    for tile in wave {
+                        unsafe {
+                            process_tile(&xa, &sa.winv, &sa.col_starts, tile, 4, &mut da);
+                            reference_tile(&xb, &sb.winv, &sb.col_starts, tile, 4, &mut db);
+                        }
+                    }
+                }
+            }
+            assert_eq!(sa.x, sb.x, "passes={passes}");
+            assert_eq!(da.nnz(), db.nnz());
+        }
+    }
+
+    #[test]
+    fn process_lex_bitwise_matches_reference() {
+        let inst = CcLpInstance::random(20, 0.5, 0.7, 1.8, 9);
+        let mut sa = CcState::new(&inst, 5.0, true);
+        let mut sb = CcState::new(&inst, 5.0, true);
+        let mut da = DualStore::new();
+        let mut db = DualStore::new();
+        for _ in 0..3 {
+            da.begin_pass();
+            db.begin_pass();
+            let xa = SharedMut::new(sa.x.as_mut_slice());
+            let xb = SharedMut::new(sb.x.as_mut_slice());
+            unsafe { process_lex(&xa, &sa.winv, &sa.col_starts, 20, &mut da) };
+            for_each_triplet_lex(20, |i, j, k| {
+                let pij = sb.col_starts[i] + (j - i - 1);
+                let pik = sb.col_starts[i] + (k - i - 1);
+                let pjk = sb.col_starts[j] + (k - j - 1);
+                let key = metric_key(i, j, k, 0);
+                let y = [db.fetch(key), db.fetch(key | 1), db.fetch(key | 2)];
+                let th = unsafe { visit_triplet(&xb, &sb.winv, pij, pik, pjk, y) };
+                db.store(key, th[0]);
+                db.store(key | 1, th[1]);
+                db.store(key | 2, th[2]);
+            });
+        }
+        assert_eq!(sa.x, sb.x);
+    }
+}

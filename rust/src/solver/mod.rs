@@ -1,0 +1,203 @@
+//! Projection solvers for metric-constrained optimization.
+//!
+//! * [`dykstra_serial`] — the serial baseline of [37] (standard
+//!   lexicographic constraint order, single dual array).
+//! * [`dykstra_parallel`] — the paper's contribution: wave-parallel
+//!   execution over the conflict-free [`schedule`], tiled per
+//!   [`tiling`], with per-worker [`duals`] arrays.
+//!
+//! Both solvers run the *identical* per-constraint visit
+//! ([`projection`]); they differ only in constraint ordering and
+//! parallelism, exactly as in the paper (§III-A: "this amounts simply to a
+//! re-ordering of constraints").
+
+pub mod duals;
+pub mod dykstra_parallel;
+pub mod dykstra_serial;
+pub mod dykstra_xla;
+pub(crate) mod hot_loop;
+pub mod nearness;
+pub mod projection;
+pub mod schedule;
+pub mod schedule_delta;
+pub mod termination;
+pub mod tiling;
+
+use crate::instance::CcLpInstance;
+use crate::matrix::PackedSym;
+
+/// Solver configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SolveOpts {
+    /// Regularization gamma = 1/eps of QP (5); larger tracks the LP closer.
+    pub gamma: f64,
+    /// Number of full passes through the constraint set (the paper's
+    /// experiments fix this: 20 iterations for Table I).
+    pub max_passes: usize,
+    /// Stop early when max constraint violation falls below this…
+    pub tol_violation: f64,
+    /// …and the relative duality gap falls below this.
+    pub tol_gap: f64,
+    /// Check convergence every this many passes (0 = never, fixed passes).
+    pub check_every: usize,
+    /// Worker threads (1 = serial execution of the parallel schedule).
+    pub threads: usize,
+    /// Tile size `b` (paper uses 40 for Table I).
+    pub tile: usize,
+    /// Include `x_ij <= 1` box constraints.
+    pub include_box: bool,
+    /// Record per-pass wall times.
+    pub track_pass_times: bool,
+    /// Tile-to-worker assignment (paper's Fig 3 round-robin by default).
+    pub assignment: schedule::Assignment,
+}
+
+impl Default for SolveOpts {
+    fn default() -> Self {
+        SolveOpts {
+            gamma: 5.0,
+            max_passes: 20,
+            tol_violation: 1e-4,
+            tol_gap: 1e-4,
+            check_every: 0,
+            threads: 1,
+            tile: 40,
+            include_box: true,
+            track_pass_times: false,
+            assignment: schedule::Assignment::RoundRobin,
+        }
+    }
+}
+
+/// Convergence / progress metrics at a checkpoint.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Residuals {
+    /// Max violation over all constraint families.
+    pub max_violation: f64,
+    /// Primal QP objective c'x + (eps/2) x'Wx.
+    pub qp_primal: f64,
+    /// Dual QP objective -(eps/2) x'Wx - eps b'yhat.
+    pub qp_dual: f64,
+    /// (P - D) / max(1, |P|).
+    pub rel_gap: f64,
+    /// LP objective sum w |x - d| (the quantity the LP relaxation bounds).
+    pub lp_objective: f64,
+}
+
+/// Result of a solve.
+#[derive(Clone, Debug)]
+pub struct Solution {
+    /// Distance variables.
+    pub x: PackedSym,
+    /// Slack variables f (CC-LP only).
+    pub f: Option<PackedSym>,
+    /// Passes actually executed.
+    pub passes: usize,
+    /// Residuals at the end (computed if check_every > 0 or at completion).
+    pub residuals: Residuals,
+    /// Wall time per pass (if tracked).
+    pub pass_times: Vec<f64>,
+    /// Total nonzero metric duals at the end.
+    pub nnz_duals: usize,
+}
+
+/// Mutable state of a CC-LP solve, shared by both solvers.
+///
+/// Variable layout follows DESIGN.md §6: packed `x` (distances) and `f`
+/// (slacks), precomputed `winv = 1/w`, dense scaled duals for the 2 pair
+/// constraints (+ optional box) per pair; metric duals live in sparse
+/// [`duals::DualStore`]s owned by the solver.
+pub struct CcState {
+    pub n: usize,
+    pub x: Vec<f64>,
+    pub f: Vec<f64>,
+    pub winv: Vec<f64>,
+    pub d: Vec<f64>,
+    pub w: Vec<f64>,
+    pub y_upper: Vec<f64>,
+    pub y_lower: Vec<f64>,
+    pub y_box: Vec<f64>,
+    pub col_starts: Vec<usize>,
+    pub gamma: f64,
+    pub include_box: bool,
+}
+
+impl CcState {
+    /// Initialize at the Dykstra starting point `x0 = -(1/eps) W^{-1} c`:
+    /// distances 0, slacks `-gamma` (DESIGN.md §6).
+    pub fn new(inst: &CcLpInstance, gamma: f64, include_box: bool) -> CcState {
+        let n = inst.n;
+        let m = inst.w.len();
+        let w: Vec<f64> = inst.w.as_slice().to_vec();
+        let winv: Vec<f64> = w.iter().map(|&v| 1.0 / v).collect();
+        CcState {
+            n,
+            x: vec![0.0; m],
+            f: vec![-gamma; m],
+            winv,
+            d: inst.d.as_slice().to_vec(),
+            w,
+            y_upper: vec![0.0; m],
+            y_lower: vec![0.0; m],
+            y_box: vec![0.0; m],
+            col_starts: inst.w.col_starts().to_vec(),
+            gamma,
+            include_box,
+        }
+    }
+
+    /// Packed index of pair (i, j), i < j.
+    #[inline(always)]
+    pub fn pidx(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i < j);
+        unsafe { *self.col_starts.get_unchecked(i) + (j - i - 1) }
+    }
+
+    /// Extract the distance matrix.
+    pub fn x_matrix(&self) -> PackedSym {
+        let mut m = PackedSym::zeros(self.n);
+        m.as_mut_slice().copy_from_slice(&self.x);
+        m
+    }
+
+    /// Extract the slack matrix.
+    pub fn f_matrix(&self) -> PackedSym {
+        let mut m = PackedSym::zeros(self.n);
+        m.as_mut_slice().copy_from_slice(&self.f);
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_initial_point() {
+        let inst = CcLpInstance::random(6, 0.5, 1.0, 2.0, 1);
+        let st = CcState::new(&inst, 5.0, true);
+        assert!(st.x.iter().all(|&v| v == 0.0));
+        assert!(st.f.iter().all(|&v| v == -5.0));
+        for (a, b) in st.w.iter().zip(st.winv.iter()) {
+            assert!((a * b - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn pidx_matches_packed() {
+        let inst = CcLpInstance::random(9, 0.5, 1.0, 2.0, 2);
+        let st = CcState::new(&inst, 5.0, true);
+        for i in 0..9 {
+            for j in (i + 1)..9 {
+                assert_eq!(st.pidx(i, j), inst.w.idx(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn default_opts_match_paper() {
+        let o = SolveOpts::default();
+        assert_eq!(o.max_passes, 20); // Table I runs 20 iterations
+        assert_eq!(o.tile, 40); // Table I tile size b = 40
+    }
+}

@@ -1,0 +1,244 @@
+//! Weighted l2 **metric nearness** solver (paper (1), Sra–Tropp–Dhillon
+//! [36]): project the dissimilarity matrix `D` onto the cone of metric
+//! matrices in the W-norm. This is Dykstra with `x0 = D` and *only* the
+//! metric constraints — no slacks, no pair phase — run on the same
+//! parallel wave schedule as the CC-LP solver.
+//!
+//! Nonnegativity needs no extra constraints: summing the two constraint
+//! orientations `x_ik - x_ij - x_jk <= 0` and `x_jk - x_ij - x_ik <= 0`
+//! gives `x_ij >= 0` at any feasible point.
+
+use super::duals::DualStore;
+use super::schedule::{Assignment, Schedule};
+use crate::instance::metric_nearness::MetricNearnessInstance;
+use crate::matrix::PackedSym;
+use crate::util::parallel::{par_reduce_max, scoped_workers};
+use crate::util::shared::{PerWorker, SharedMut};
+
+/// Options for a nearness solve (subset of the CC-LP options).
+#[derive(Clone, Copy, Debug)]
+pub struct NearnessOpts {
+    pub max_passes: usize,
+    pub tol_violation: f64,
+    pub check_every: usize,
+    pub threads: usize,
+    pub tile: usize,
+    pub assignment: Assignment,
+}
+
+impl Default for NearnessOpts {
+    fn default() -> Self {
+        NearnessOpts {
+            max_passes: 50,
+            tol_violation: 1e-6,
+            check_every: 10,
+            threads: 1,
+            tile: 40,
+            assignment: Assignment::RoundRobin,
+        }
+    }
+}
+
+/// Result of a nearness solve.
+#[derive(Clone, Debug)]
+pub struct NearnessSolution {
+    /// The nearest metric matrix found.
+    pub x: PackedSym,
+    /// Weighted squared distance to D.
+    pub objective: f64,
+    /// Max triangle violation at the end.
+    pub max_violation: f64,
+    pub passes: usize,
+}
+
+/// Solve with the parallel wave schedule (threads = 1 for serial order use
+/// [`solve_serial_order`]).
+pub fn solve(inst: &MetricNearnessInstance, opts: &NearnessOpts) -> NearnessSolution {
+    let n = inst.n;
+    let p = opts.threads.max(1);
+    let schedule = Schedule::new(n, opts.tile);
+    let mut x: Vec<f64> = inst.d.as_slice().to_vec();
+    let winv: Vec<f64> = inst.w.as_slice().iter().map(|&v| 1.0 / v).collect();
+    let col_starts = inst.d.col_starts().to_vec();
+    let stores = PerWorker::new((0..p).map(|_| DualStore::new()).collect());
+
+    let mut passes_done = 0;
+    let mut max_violation = f64::INFINITY;
+    for pass in 0..opts.max_passes {
+        {
+            let xs = SharedMut::new(x.as_mut_slice());
+            let winv = winv.as_slice();
+            let col_starts = col_starts.as_slice();
+            scoped_workers(p, |tid, barrier| {
+                // SAFETY: slot tid used by this worker only.
+                let store = unsafe { stores.get_mut(tid) };
+                store.begin_pass();
+                for (wave_idx, wave) in schedule.waves().iter().enumerate() {
+                    let mut r = opts.assignment.first_tile(tid, wave_idx, p);
+                    while r < wave.len() {
+                        // SAFETY: wave conflict-freeness.
+                        unsafe {
+                            super::hot_loop::process_tile(
+                                &xs, winv, col_starts, &wave[r], opts.tile, store,
+                            )
+                        };
+                        r += p;
+                    }
+                    barrier.wait();
+                }
+            });
+        }
+        passes_done = pass + 1;
+        if opts.check_every > 0 && passes_done % opts.check_every == 0 {
+            max_violation = violation(&x, &col_starts, n, p);
+            if max_violation <= opts.tol_violation {
+                break;
+            }
+        }
+    }
+    if max_violation.is_infinite() {
+        max_violation = violation(&x, &col_starts, n, p);
+    }
+    let mut xm = PackedSym::zeros(n);
+    xm.as_mut_slice().copy_from_slice(&x);
+    NearnessSolution {
+        objective: inst.objective(&xm),
+        x: xm,
+        max_violation,
+        passes: passes_done,
+    }
+}
+
+/// Serial baseline with the standard lexicographic order ([36]/[37]).
+pub fn solve_serial_order(
+    inst: &MetricNearnessInstance,
+    opts: &NearnessOpts,
+) -> NearnessSolution {
+    let n = inst.n;
+    let mut x: Vec<f64> = inst.d.as_slice().to_vec();
+    let winv: Vec<f64> = inst.w.as_slice().iter().map(|&v| 1.0 / v).collect();
+    let col_starts = inst.d.col_starts().to_vec();
+    let mut store = DualStore::new();
+    let mut passes_done = 0;
+    let mut max_violation = f64::INFINITY;
+    for pass in 0..opts.max_passes {
+        store.begin_pass();
+        {
+            let xs = SharedMut::new(x.as_mut_slice());
+            // SAFETY: single thread.
+            unsafe { super::hot_loop::process_lex(&xs, &winv, &col_starts, n, &mut store) };
+        }
+        passes_done = pass + 1;
+        if opts.check_every > 0 && passes_done % opts.check_every == 0 {
+            max_violation = violation(&x, &col_starts, n, 1);
+            if max_violation <= opts.tol_violation {
+                break;
+            }
+        }
+    }
+    if max_violation.is_infinite() {
+        max_violation = violation(&x, &col_starts, n, 1);
+    }
+    let mut xm = PackedSym::zeros(n);
+    xm.as_mut_slice().copy_from_slice(&x);
+    NearnessSolution {
+        objective: inst.objective(&xm),
+        x: xm,
+        max_violation,
+        passes: passes_done,
+    }
+}
+
+fn violation(x: &[f64], col_starts: &[usize], n: usize, p: usize) -> f64 {
+    par_reduce_max(p, n, |i| {
+        let mut worst = f64::NEG_INFINITY;
+        for j in (i + 1)..n {
+            let xij = x[col_starts[i] + (j - i - 1)];
+            for k in (j + 1)..n {
+                let xik = x[col_starts[i] + (k - i - 1)];
+                let xjk = x[col_starts[j] + (k - j - 1)];
+                let v = (xij - xik - xjk).max(xik - xij - xjk).max(xjk - xij - xik);
+                worst = worst.max(v);
+            }
+        }
+        worst
+    })
+    .max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::metric_nearness::max_triangle_violation;
+
+    #[test]
+    fn already_metric_is_fixed_point() {
+        let inst = MetricNearnessInstance::new(PackedSym::filled(8, 1.0));
+        let sol = solve(&inst, &NearnessOpts { max_passes: 5, threads: 2, ..Default::default() });
+        assert!(sol.objective < 1e-20);
+        assert_eq!(sol.x, inst.d);
+    }
+
+    #[test]
+    fn output_is_metric() {
+        let inst = MetricNearnessInstance::random(12, 3.0, 7);
+        let sol = solve(
+            &inst,
+            &NearnessOpts { max_passes: 200, threads: 3, tile: 3, ..Default::default() },
+        );
+        assert!(max_triangle_violation(&sol.x) < 1e-5, "viol {}", sol.max_violation);
+        assert!(sol.objective > 0.0); // random D isn't metric
+    }
+
+    #[test]
+    fn thread_count_does_not_change_result() {
+        let inst = MetricNearnessInstance::random(10, 2.0, 9);
+        let a = solve(&inst, &NearnessOpts { max_passes: 10, threads: 1, tile: 2, ..Default::default() });
+        let b = solve(&inst, &NearnessOpts { max_passes: 10, threads: 4, tile: 2, ..Default::default() });
+        assert_eq!(a.x, b.x);
+    }
+
+    #[test]
+    fn parallel_and_serial_order_agree_at_convergence() {
+        let inst = MetricNearnessInstance::random(9, 2.0, 3);
+        let par = solve(
+            &inst,
+            &NearnessOpts { max_passes: 300, threads: 2, tile: 2, ..Default::default() },
+        );
+        let ser = solve_serial_order(&inst, &NearnessOpts { max_passes: 300, ..Default::default() });
+        let mut worst: f64 = 0.0;
+        for (i, j, v) in par.x.iter_pairs() {
+            worst = worst.max((v - ser.x.get(i, j)).abs());
+        }
+        assert!(worst < 1e-4, "optima differ by {worst}");
+        assert!((par.objective - ser.objective).abs() < 1e-4 * ser.objective.max(1.0));
+    }
+
+    #[test]
+    fn projection_shrinks_objective_monotone_feasibility() {
+        // objective must be near the infimum: check that doubling passes
+        // doesn't change it much (converged), and violation decreased.
+        let inst = MetricNearnessInstance::random(10, 2.0, 11);
+        let s1 = solve(&inst, &NearnessOpts { max_passes: 50, threads: 2, ..Default::default() });
+        let s2 = solve(&inst, &NearnessOpts { max_passes: 400, threads: 2, ..Default::default() });
+        assert!(s2.max_violation <= s1.max_violation + 1e-12);
+        assert!((s1.objective - s2.objective).abs() < 0.05 * s2.objective.max(1e-9));
+    }
+
+    #[test]
+    fn early_stop_works() {
+        let inst = MetricNearnessInstance::random(8, 2.0, 5);
+        let sol = solve(
+            &inst,
+            &NearnessOpts {
+                max_passes: 10_000,
+                check_every: 5,
+                tol_violation: 1e-4,
+                threads: 2,
+                ..Default::default()
+            },
+        );
+        assert!(sol.passes < 10_000);
+        assert!(sol.max_violation <= 1e-4);
+    }
+}

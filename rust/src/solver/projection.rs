@@ -1,0 +1,492 @@
+//! The localized Dykstra constraint visit (Algorithm 1, §II-B(c)).
+//!
+//! Every visit to a constraint `a'x <= b` performs, in the W-inner-product:
+//!
+//! ```text
+//! correction:  x += yhat * W^{-1} a          (yhat = dual from last pass)
+//! projection:  theta = max(a'x - b, 0) / (a' W^{-1} a)
+//!              x -= theta * W^{-1} a
+//! dual update: yhat := theta
+//! ```
+//!
+//! We store *scaled* duals `yhat = y / eps`, which removes `eps` from every
+//! visit (it only enters through the starting point `x0 = -(1/eps) W^{-1} c`;
+//! see DESIGN.md §6). Because correction and projection move along the same
+//! direction `W^{-1} a`, we fuse them into a single write with coefficient
+//! `yhat_old - theta` — one read-modify-write per variable per visit.
+//!
+//! Metric rows have exactly 3 nonzeros (±1), pair rows 2, box rows 1, so
+//! each function below is O(1).
+
+use crate::util::shared::SharedMut;
+
+/// Sign patterns of the three metric constraints of a triplet `(i,j,k)`,
+/// ordered by constraint type `t`:
+/// t=0: `x_ij - x_ik - x_jk <= 0`
+/// t=1: `-x_ij + x_ik - x_jk <= 0`
+/// t=2: `-x_ij - x_ik + x_jk <= 0`
+pub const METRIC_SIGNS: [[f64; 3]; 3] =
+    [[1.0, -1.0, -1.0], [-1.0, 1.0, -1.0], [-1.0, -1.0, 1.0]];
+
+/// Visit one metric constraint. `x` = packed distance variables;
+/// `winv` = packed 1/w; `(pij, pik, pjk)` = packed indices of the triplet's
+/// pairs; `t` = constraint type; `y` = scaled dual from last pass.
+/// Returns the new scaled dual `theta`.
+///
+/// # Safety
+/// Indices must be in bounds and no other thread may concurrently access
+/// the three entries (guaranteed by the wave schedule).
+#[inline(always)]
+pub unsafe fn visit_metric(
+    x: &SharedMut<f64>,
+    winv: &[f64],
+    pij: usize,
+    pik: usize,
+    pjk: usize,
+    t: usize,
+    y: f64,
+) -> f64 {
+    let [s0, s1, s2] = METRIC_SIGNS[t];
+    let (w0, w1, w2) = (
+        *winv.get_unchecked(pij),
+        *winv.get_unchecked(pik),
+        *winv.get_unchecked(pjk),
+    );
+    let (mut x0, mut x1, mut x2) = (x.get(pij), x.get(pik), x.get(pjk));
+    // Corrected point (in registers only).
+    x0 += y * s0 * w0;
+    x1 += y * s1 * w1;
+    x2 += y * s2 * w2;
+    let delta = s0 * x0 + s1 * x1 + s2 * x2; // b = 0 for metric rows
+    let theta = if delta > 0.0 { delta / (w0 + w1 + w2) } else { 0.0 };
+    // Fused write-back: net coefficient (y - theta) along W^{-1} a.
+    let c = y - theta;
+    if c != 0.0 {
+        // x currently holds the *uncorrected* values; apply net change.
+        x.set(pij, x.get(pij) + c * s0 * w0);
+        x.set(pik, x.get(pik) + c * s1 * w1);
+        x.set(pjk, x.get(pjk) + c * s2 * w2);
+    }
+    theta
+}
+
+/// Fused visit of ALL THREE metric constraints of one triplet.
+///
+/// Numerically identical sequence to three [`visit_metric`] calls (t = 0,
+/// 1, 2) except that (a) the three variables stay in registers across the
+/// three constraint visits — one load and one store per variable per
+/// *triplet* instead of per *constraint* — and (b) `theta` uses a
+/// precomputed reciprocal (one division per triplet, not three). This is
+/// the solver hot path (~10 cycles/constraint); see EXPERIMENTS.md §Perf.
+///
+/// Returns the three new scaled duals.
+///
+/// # Safety
+/// Same contract as [`visit_metric`].
+#[inline(always)]
+pub unsafe fn visit_triplet(
+    x: &SharedMut<f64>,
+    winv: &[f64],
+    pij: usize,
+    pik: usize,
+    pjk: usize,
+    y: [f64; 3],
+) -> [f64; 3] {
+    let (mut x0, mut x1, mut x2) = (x.get(pij), x.get(pik), x.get(pjk));
+    // Fast path: zero duals and all three constraints slack — by far the
+    // most common case in steady state — needs only the three deltas and
+    // no weight loads, no division, no stores, no dual writes.
+    if y[0] == 0.0 && y[1] == 0.0 && y[2] == 0.0 {
+        let d0 = x0 - x1 - x2;
+        let d1 = x1 - x0 - x2;
+        let d2 = x2 - x0 - x1;
+        if d0 <= 0.0 && d1 <= 0.0 && d2 <= 0.0 {
+            return [0.0; 3];
+        }
+    }
+    let w0 = *winv.get_unchecked(pij);
+    let w1 = *winv.get_unchecked(pik);
+    let w2 = *winv.get_unchecked(pjk);
+    let sinv = 1.0 / (w0 + w1 + w2);
+    // t = 0: x_ij - x_ik - x_jk <= 0   signs (+, -, -)
+    x0 += y[0] * w0;
+    x1 -= y[0] * w1;
+    x2 -= y[0] * w2;
+    let d0 = x0 - x1 - x2;
+    let t0 = if d0 > 0.0 { d0 * sinv } else { 0.0 };
+    x0 -= t0 * w0;
+    x1 += t0 * w1;
+    x2 += t0 * w2;
+    // t = 1: -x_ij + x_ik - x_jk <= 0  signs (-, +, -)
+    x0 -= y[1] * w0;
+    x1 += y[1] * w1;
+    x2 -= y[1] * w2;
+    let d1 = x1 - x0 - x2;
+    let t1 = if d1 > 0.0 { d1 * sinv } else { 0.0 };
+    x0 += t1 * w0;
+    x1 -= t1 * w1;
+    x2 += t1 * w2;
+    // t = 2: -x_ij - x_ik + x_jk <= 0  signs (-, -, +)
+    x0 -= y[2] * w0;
+    x1 -= y[2] * w1;
+    x2 += y[2] * w2;
+    let d2 = x2 - x0 - x1;
+    let t2 = if d2 > 0.0 { d2 * sinv } else { 0.0 };
+    x0 += t2 * w0;
+    x1 += t2 * w1;
+    x2 -= t2 * w2;
+    // Write back only if anything moved: in steady state most triplets are
+    // strictly feasible with zero duals, and skipping the 3 stores keeps
+    // their cache lines clean (measured ~2.4x on the full pass, §Perf).
+    if y[0] != 0.0 || y[1] != 0.0 || y[2] != 0.0 || t0 != 0.0 || t1 != 0.0 || t2 != 0.0 {
+        x.set(pij, x0);
+        x.set(pik, x1);
+        x.set(pjk, x2);
+    }
+    [t0, t1, t2]
+}
+
+/// As [`visit_triplet`], but with the `x_ij` variable and its inverse
+/// weight carried in registers by the caller (inside the innermost `k`
+/// loop of the hot path, `p_ij` is fixed).
+///
+/// **Recorded negative result** (EXPERIMENTS.md §Perf attempt 5): this
+/// measured ~75% *slower* than [`visit_triplet`] in the full pass — the
+/// carried value extends a live range across the loop and defeats the
+/// compiler's scheduling of the inactive fast path. Kept for the record
+/// and for callers that genuinely hold `x_ij` elsewhere; the hot loops
+/// use [`visit_triplet`].
+///
+/// # Safety
+/// Same contract as [`visit_triplet`]; additionally `*x0` must be the
+/// current value of the variable at `p_ij` and nothing else may touch it.
+#[inline(always)]
+pub unsafe fn visit_triplet_carried(
+    x: &SharedMut<f64>,
+    winv: &[f64],
+    x0: &mut f64,
+    w0: f64,
+    pik: usize,
+    pjk: usize,
+    y: [f64; 3],
+) -> [f64; 3] {
+    let (mut x1, mut x2) = (x.get(pik), x.get(pjk));
+    let mut v0 = *x0;
+    if y[0] == 0.0 && y[1] == 0.0 && y[2] == 0.0 {
+        let d0 = v0 - x1 - x2;
+        let d1 = x1 - v0 - x2;
+        let d2 = x2 - v0 - x1;
+        if d0 <= 0.0 && d1 <= 0.0 && d2 <= 0.0 {
+            return [0.0; 3];
+        }
+    }
+    let w1 = *winv.get_unchecked(pik);
+    let w2 = *winv.get_unchecked(pjk);
+    let sinv = 1.0 / (w0 + w1 + w2);
+    // t = 0
+    v0 += y[0] * w0;
+    x1 -= y[0] * w1;
+    x2 -= y[0] * w2;
+    let d0 = v0 - x1 - x2;
+    let t0 = if d0 > 0.0 { d0 * sinv } else { 0.0 };
+    v0 -= t0 * w0;
+    x1 += t0 * w1;
+    x2 += t0 * w2;
+    // t = 1
+    v0 -= y[1] * w0;
+    x1 += y[1] * w1;
+    x2 -= y[1] * w2;
+    let d1 = x1 - v0 - x2;
+    let t1 = if d1 > 0.0 { d1 * sinv } else { 0.0 };
+    v0 += t1 * w0;
+    x1 -= t1 * w1;
+    x2 += t1 * w2;
+    // t = 2
+    v0 -= y[2] * w0;
+    x1 -= y[2] * w1;
+    x2 += y[2] * w2;
+    let d2 = x2 - v0 - x1;
+    let t2 = if d2 > 0.0 { d2 * sinv } else { 0.0 };
+    v0 += t2 * w0;
+    x1 += t2 * w1;
+    x2 -= t2 * w2;
+    if y[0] != 0.0 || y[1] != 0.0 || y[2] != 0.0 || t0 != 0.0 || t1 != 0.0 || t2 != 0.0 {
+        *x0 = v0;
+        x.set(pik, x1);
+        x.set(pjk, x2);
+    }
+    [t0, t1, t2]
+}
+
+/// Visit the pair constraint `x_e - f_e <= d_e` (slack upper side).
+/// Returns the new scaled dual.
+///
+/// # Safety
+/// `e` in bounds; exclusive access to `x[e]`, `f[e]`.
+#[inline(always)]
+pub unsafe fn visit_pair_upper(
+    x: &SharedMut<f64>,
+    f: &SharedMut<f64>,
+    winv: &[f64],
+    d: &[f64],
+    e: usize,
+    y: f64,
+) -> f64 {
+    let w = *winv.get_unchecked(e);
+    let (xv, fv) = (x.get(e), f.get(e));
+    // delta at the corrected point: (x + yw) - (f - yw) - d
+    let delta = xv - fv - *d.get_unchecked(e) + 2.0 * y * w;
+    let theta = if delta > 0.0 { delta / (2.0 * w) } else { 0.0 };
+    let c = y - theta;
+    if c != 0.0 {
+        x.set(e, xv + c * w);
+        f.set(e, fv - c * w);
+    }
+    theta
+}
+
+/// Visit the pair constraint `-x_e - f_e <= -d_e` (slack lower side).
+///
+/// # Safety
+/// Same contract as [`visit_pair_upper`].
+#[inline(always)]
+pub unsafe fn visit_pair_lower(
+    x: &SharedMut<f64>,
+    f: &SharedMut<f64>,
+    winv: &[f64],
+    d: &[f64],
+    e: usize,
+    y: f64,
+) -> f64 {
+    let w = *winv.get_unchecked(e);
+    let (xv, fv) = (x.get(e), f.get(e));
+    let delta = *d.get_unchecked(e) - xv - fv + 2.0 * y * w;
+    let theta = if delta > 0.0 { delta / (2.0 * w) } else { 0.0 };
+    let c = y - theta;
+    if c != 0.0 {
+        x.set(e, xv - c * w);
+        f.set(e, fv - c * w);
+    }
+    theta
+}
+
+/// Visit the box constraint `x_e <= 1`.
+///
+/// # Safety
+/// Same contract as [`visit_pair_upper`].
+#[inline(always)]
+pub unsafe fn visit_box_upper(x: &SharedMut<f64>, winv: &[f64], e: usize, y: f64) -> f64 {
+    let w = *winv.get_unchecked(e);
+    let xv = x.get(e);
+    let delta = xv + y * w - 1.0;
+    let theta = if delta > 0.0 { delta / w } else { 0.0 };
+    let c = y - theta;
+    if c != 0.0 {
+        x.set(e, xv + c * w);
+    }
+    theta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shared(v: &mut Vec<f64>) -> SharedMut<'_, f64> {
+        SharedMut::new(v.as_mut_slice())
+    }
+
+    #[test]
+    fn satisfied_constraint_no_dual_is_noop() {
+        let mut xv = vec![1.0, 2.0, 2.0];
+        let winv = vec![1.0, 1.0, 1.0];
+        let x = shared(&mut xv);
+        let theta = unsafe { visit_metric(&x, &winv, 0, 1, 2, 0, 0.0) };
+        assert_eq!(theta, 0.0);
+        assert_eq!(xv, vec![1.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn violated_constraint_projects_onto_hyperplane() {
+        // x_ij=3, x_ik=1, x_jk=1: delta=1; unit weights -> theta=1/3
+        let mut xv = vec![3.0, 1.0, 1.0];
+        let winv = vec![1.0, 1.0, 1.0];
+        let x = shared(&mut xv);
+        let theta = unsafe { visit_metric(&x, &winv, 0, 1, 2, 0, 0.0) };
+        assert!((theta - 1.0 / 3.0).abs() < 1e-12);
+        // paper's example update: x_ij -= delta/3, others += delta/3
+        assert!((xv[0] - (3.0 - 1.0 / 3.0)).abs() < 1e-12);
+        assert!((xv[1] - (1.0 + 1.0 / 3.0)).abs() < 1e-12);
+        assert!((xv[2] - (1.0 + 1.0 / 3.0)).abs() < 1e-12);
+        // now exactly on the hyperplane
+        assert!((xv[0] - xv[1] - xv[2]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn correction_undone_when_constraint_becomes_satisfied() {
+        // After a projection with dual y, if the constraint is now slack
+        // the correction step must add y back (Dykstra's memory).
+        let mut xv = vec![0.0, 5.0, 5.0]; // hugely satisfied
+        let winv = vec![1.0, 1.0, 1.0];
+        let x = shared(&mut xv);
+        let y = 0.3;
+        let theta = unsafe { visit_metric(&x, &winv, 0, 1, 2, 0, y) };
+        // corrected point: (0.3, 4.7, 4.7): delta = -9.1 < 0 -> theta = 0
+        assert_eq!(theta, 0.0);
+        assert!((xv[0] - 0.3).abs() < 1e-12);
+        assert!((xv[1] - 4.7).abs() < 1e-12);
+        assert!((xv[2] - 4.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_projection_minimizes_w_norm() {
+        // With weights, the projection must be the W-norm-least correction:
+        // update along W^{-1} a. Verify the constraint lands exactly on the
+        // plane and the step direction is proportional to winv.
+        let mut xv = vec![2.0, 0.0, 0.0];
+        let winv = vec![0.5, 0.25, 1.0]; // w = 2, 4, 1
+        let x = shared(&mut xv);
+        let theta = unsafe { visit_metric(&x, &winv, 0, 1, 2, 0, 0.0) };
+        let s = 0.5 + 0.25 + 1.0;
+        assert!((theta - 2.0 / s).abs() < 1e-12);
+        assert!((xv[0] - (2.0 - theta * 0.5)).abs() < 1e-12);
+        assert!((xv[1] - theta * 0.25).abs() < 1e-12);
+        assert!((xv[2] - theta).abs() < 1e-12);
+        assert!((xv[0] - xv[1] - xv[2]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_three_types_cover_each_orientation() {
+        for t in 0..3 {
+            let mut xv = vec![0.0, 0.0, 0.0];
+            xv[t] = 3.0; // make variable t the violating "long side"
+            let winv = vec![1.0, 1.0, 1.0];
+            let x = shared(&mut xv);
+            let theta = unsafe { visit_metric(&x, &winv, 0, 1, 2, t, 0.0) };
+            assert!(theta > 0.0, "type {t} should project");
+            let [s0, s1, s2] = METRIC_SIGNS[t];
+            let delta = s0 * xv[0] + s1 * xv[1] + s2 * xv[2];
+            assert!(delta.abs() < 1e-12, "type {t} lands on plane");
+        }
+    }
+
+    #[test]
+    fn fused_triplet_matches_three_visits() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(123);
+        for _ in 0..2000 {
+            let xs: Vec<f64> = (0..3).map(|_| rng.f64_in(-1.5, 2.5)).collect();
+            let ws: Vec<f64> = (0..3).map(|_| rng.f64_in(0.3, 3.0)).collect();
+            let ys = [
+                if rng.bool(0.5) { rng.f64_in(0.0, 0.8) } else { 0.0 },
+                if rng.bool(0.5) { rng.f64_in(0.0, 0.8) } else { 0.0 },
+                if rng.bool(0.5) { rng.f64_in(0.0, 0.8) } else { 0.0 },
+            ];
+            let mut a = xs.clone();
+            let mut b = xs.clone();
+            let (ta, tb);
+            {
+                let sa = SharedMut::new(a.as_mut_slice());
+                let mut t = [0.0; 3];
+                for (tt, slot) in t.iter_mut().enumerate() {
+                    *slot = unsafe { visit_metric(&sa, &ws, 0, 1, 2, tt, ys[tt]) };
+                }
+                ta = t;
+            }
+            {
+                let sb = SharedMut::new(b.as_mut_slice());
+                tb = unsafe { visit_triplet(&sb, &ws, 0, 1, 2, ys) };
+            }
+            for k in 0..3 {
+                assert!(
+                    (a[k] - b[k]).abs() < 1e-9,
+                    "x[{k}]: {:.17} vs {:.17}",
+                    a[k],
+                    b[k]
+                );
+                assert!((ta[k] - tb[k]).abs() < 1e-9, "theta[{k}]");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_triplet_noop_when_feasible() {
+        let mut xv = vec![0.5, 1.0, 1.0];
+        let winv = vec![1.0, 1.0, 1.0];
+        let x = SharedMut::new(xv.as_mut_slice());
+        let t = unsafe { visit_triplet(&x, &winv, 0, 1, 2, [0.0; 3]) };
+        assert_eq!(t, [0.0; 3]);
+        assert_eq!(xv, vec![0.5, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn pair_upper_projection() {
+        // x - f <= d with x=2, f=0, d=1: delta=1, unit w -> theta=1/2
+        let mut xv = vec![2.0];
+        let mut fv = vec![0.0];
+        let winv = vec![1.0];
+        let d = vec![1.0];
+        let x = shared(&mut xv);
+        let f = shared(&mut fv);
+        let theta = unsafe { visit_pair_upper(&x, &f, &winv, &d, 0, 0.0) };
+        assert!((theta - 0.5).abs() < 1e-12);
+        assert!((xv[0] - 1.5).abs() < 1e-12);
+        assert!((fv[0] - 0.5).abs() < 1e-12);
+        assert!((xv[0] - fv[0] - 1.0).abs() < 1e-12); // on the plane
+    }
+
+    #[test]
+    fn pair_lower_projection() {
+        // -x - f <= -d with x=0, f=0, d=1: delta = 1 -> theta = 1/2
+        let mut xv = vec![0.0];
+        let mut fv = vec![0.0];
+        let winv = vec![1.0];
+        let d = vec![1.0];
+        let x = shared(&mut xv);
+        let f = shared(&mut fv);
+        let theta = unsafe { visit_pair_lower(&x, &f, &winv, &d, 0, 0.0) };
+        assert!((theta - 0.5).abs() < 1e-12);
+        assert!((xv[0] - 0.5).abs() < 1e-12);
+        assert!((fv[0] - 0.5).abs() < 1e-12);
+        assert!((1.0 - xv[0] - fv[0]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn box_projection_clamps_via_dual() {
+        let mut xv = vec![1.5];
+        let winv = vec![2.0]; // w = 0.5
+        let x = shared(&mut xv);
+        let theta = unsafe { visit_box_upper(&x, &winv, 0, 0.0) };
+        assert!((theta - 0.25).abs() < 1e-12); // delta 0.5 / w 2.0
+        assert!((xv[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dykstra_two_halfspace_convergence() {
+        // Classic sanity check: alternating Dykstra visits to two
+        // constraints converge to the projection onto the intersection.
+        // Constraints (on a 3-vector, unit weights):
+        //   A: x0 - x1 - x2 <= 0   (metric type 0)
+        //   B: x0 <= 1             (box)
+        // Start x = (3, 0.5, 0.5). True projection onto {A ∩ B}:
+        // project onto A: (3-δ/3, .5+δ/3, .5+δ/3), δ=2 → (2.333,1.166,1.166)
+        // that violates B. The intersection projection solves a small QP;
+        // verify instead: final point feasible AND fixed point of both
+        // projections AND closer to start than naive sequential projection.
+        let winv = vec![1.0, 1.0, 1.0];
+        let mut xv = vec![3.0, 0.5, 0.5];
+        let (mut ya, mut yb) = (0.0, 0.0);
+        for _ in 0..500 {
+            let x = SharedMut::new(xv.as_mut_slice());
+            ya = unsafe { visit_metric(&x, &winv, 0, 1, 2, 0, ya) };
+            yb = unsafe { visit_box_upper(&x, &winv, 0, yb) };
+        }
+        assert!(xv[0] <= 1.0 + 1e-9);
+        assert!(xv[0] - xv[1] - xv[2] <= 1e-9);
+        // Optimality via KKT: x - x_start = -ya*a_A - yb*a_B with ya,yb >= 0.
+        assert!(ya >= 0.0 && yb >= 0.0);
+        let dx = [xv[0] - 3.0, xv[1] - 0.5, xv[2] - 0.5];
+        assert!((dx[0] - (-ya - yb)).abs() < 1e-6, "dx0={} ya={} yb={}", dx[0], ya, yb);
+        assert!((dx[1] - ya).abs() < 1e-6);
+        assert!((dx[2] - ya).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,420 @@
+//! The paper's parallel execution schedule (§III-B/C).
+//!
+//! Triplets `(i, j, k)`, `i < j < k`, are grouped into sets `S_{i,k}` (all
+//! middle indices `j` for a fixed smallest index `i` and largest index
+//! `k`). Arranged on the `(i, k)` grid, any two sets on the same
+//! *downward-sloping diagonal* (`i` strictly increasing while `k` strictly
+//! decreasing, i.e. constant `i + k`) contain triplets sharing at most one
+//! index, so their projections touch disjoint variables (Fig 1/2).
+//!
+//! §III-C generalizes cells to `b × b` **tiles** of `S_{i,k}` sets for
+//! cache efficiency (Fig 4); tiles along one block diagonal are
+//! conflict-free by the same argument (DESIGN.md §1 gives the proof we
+//! test against). `b = 1` recovers the untiled schedule exactly.
+//!
+//! A [`Schedule`] is a sequence of **waves**; all tiles in a wave may be
+//! processed concurrently, with the `r mod p` worker assignment of Fig 3.
+
+/// A rectangular tile of the `(i, k)` grid: smallest indices
+/// `i ∈ [i_lo, i_hi)`, largest indices `k ∈ [k_lo, k_hi)`. The triplets of
+/// the tile are `{(i, j, k) : i ∈ I, k ∈ K, i < j < k}`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tile {
+    pub i_lo: usize,
+    pub i_hi: usize,
+    pub k_lo: usize,
+    pub k_hi: usize,
+}
+
+impl Tile {
+    /// Number of triplets inside this tile.
+    pub fn triplet_count(&self) -> u64 {
+        let mut count = 0u64;
+        for i in self.i_lo..self.i_hi {
+            for k in self.k_lo..self.k_hi {
+                if k >= i + 2 {
+                    count += (k - i - 1) as u64;
+                }
+            }
+        }
+        count
+    }
+
+    /// True iff the tile contains at least one valid triplet.
+    pub fn is_nonempty(&self) -> bool {
+        // smallest i and largest k give the widest j range
+        self.i_lo + 2 < self.k_hi && self.i_lo < self.i_hi && self.k_lo < self.k_hi
+    }
+}
+
+/// Wave-structured schedule over all `C(n, 3)` triplets.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    n: usize,
+    b: usize,
+    waves: Vec<Vec<Tile>>,
+}
+
+impl Schedule {
+    /// Build the tiled schedule for problem size `n` (nodes) and tile size
+    /// `b >= 1`. Every triplet `i < j < k < n` is covered by exactly one
+    /// tile; tiles within a wave are mutually conflict-free.
+    pub fn new(n: usize, b: usize) -> Schedule {
+        assert!(b >= 1, "tile size must be >= 1");
+        let mut waves: Vec<Vec<Tile>> = Vec::new();
+        if n < 3 {
+            return Schedule { n, b, waves };
+        }
+        // i-blocks partition [0, n-2) (largest useful smallest-index is n-3).
+        // k-blocks partition [2, n). Block `a` covers i ∈ [a·b, (a+1)·b);
+        // block `e` covers k ∈ [2 + e·b, 2 + (e+1)·b). Along a wave,
+        // a + e = d is constant: `a` ascending ⇒ i-ranges ascending and
+        // k-ranges descending, which is the conflict-free diagonal pattern.
+        let i_span = n - 2;
+        let k_span = n - 2;
+        let na = i_span.div_ceil(b);
+        let ne = k_span.div_ceil(b);
+        // Iterate d from high to low so the first waves hold the largest k
+        // (z = n downwards), matching Fig 1's first double loop direction.
+        for d in (0..=(na - 1 + ne - 1)).rev() {
+            let a_min = d.saturating_sub(ne - 1);
+            let a_max = d.min(na - 1);
+            let mut wave = Vec::new();
+            for a in a_min..=a_max {
+                let e = d - a;
+                let tile = Tile {
+                    i_lo: a * b,
+                    i_hi: ((a + 1) * b).min(i_span),
+                    k_lo: 2 + e * b,
+                    k_hi: (2 + (e + 1) * b).min(n),
+                };
+                if tile.is_nonempty() {
+                    wave.push(tile);
+                }
+            }
+            if !wave.is_empty() {
+                waves.push(wave);
+            }
+        }
+        Schedule { n, b, waves }
+    }
+
+    /// Problem size.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Tile size.
+    pub fn tile_size(&self) -> usize {
+        self.b
+    }
+
+    /// The waves, in execution order. Tiles within a wave are ordered by
+    /// ascending `i_lo` — the index used for the `r mod p` assignment.
+    pub fn waves(&self) -> &[Vec<Tile>] {
+        &self.waves
+    }
+
+    /// Total number of tiles.
+    pub fn n_tiles(&self) -> usize {
+        self.waves.iter().map(Vec::len).sum()
+    }
+
+    /// Total triplets covered (must equal C(n,3)).
+    pub fn total_triplets(&self) -> u64 {
+        self.waves.iter().flatten().map(Tile::triplet_count).sum()
+    }
+
+    /// Per-worker triplet loads under an [`Assignment`] policy — used by
+    /// load-balance diagnostics, the ablation bench, and tests.
+    pub fn worker_loads(&self, p: usize, policy: Assignment) -> Vec<u64> {
+        let mut loads = vec![0u64; p];
+        for (wi, wave) in self.waves.iter().enumerate() {
+            for (r, tile) in wave.iter().enumerate() {
+                loads[policy.worker_of(r, wi, p)] += tile.triplet_count();
+            }
+        }
+        loads
+    }
+}
+
+/// Tile-to-worker assignment policy within a wave.
+///
+/// `RoundRobin` is the paper's Fig 3: the r-th tile of a wave goes to
+/// worker `r mod p`. Because tile sizes *decrease* along a diagonal
+/// (the j-span shrinks as `i` grows toward `k`), worker 0 systematically
+/// receives the largest tile of **every** wave; for tiled schedules with
+/// few tiles per wave (`n/b` comparable to `p`) this is measurably
+/// imbalanced. `Rotated` fixes it by shifting the round-robin offset by
+/// the wave index — still fully deterministic per worker across passes
+/// (the §III-D requirement), so the dual stores remain valid. The
+/// ablation bench quantifies the difference.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Assignment {
+    /// Paper's Fig 3: worker = r mod p.
+    #[default]
+    RoundRobin,
+    /// worker = (r + wave_index) mod p.
+    Rotated,
+}
+
+impl Assignment {
+    /// Worker owning the `r`-th tile of wave `wave_idx` among `p` workers.
+    #[inline(always)]
+    pub fn worker_of(self, r: usize, wave_idx: usize, p: usize) -> usize {
+        match self {
+            Assignment::RoundRobin => r % p,
+            Assignment::Rotated => (r + wave_idx) % p,
+        }
+    }
+
+    /// First tile index of wave `wave_idx` owned by `tid` (then step by p).
+    #[inline(always)]
+    pub fn first_tile(self, tid: usize, wave_idx: usize, p: usize) -> usize {
+        match self {
+            Assignment::RoundRobin => tid,
+            Assignment::Rotated => (tid + p - wave_idx % p) % p,
+        }
+    }
+}
+
+/// C(n, 3) as u64.
+pub fn n_triplets(n: usize) -> u64 {
+    if n < 3 {
+        return 0;
+    }
+    let n = n as u64;
+    n * (n - 1) * (n - 2) / 6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+    use crate::util::stats::load_imbalance;
+
+    /// Exhaustively collect (tile_index_in_wave -> triplets) per wave.
+    fn wave_triplets(wave: &[Tile]) -> Vec<Vec<(usize, usize, usize)>> {
+        wave.iter()
+            .map(|t| {
+                let mut v = Vec::new();
+                for i in t.i_lo..t.i_hi {
+                    for k in t.k_lo..t.k_hi {
+                        for j in (i + 1)..k {
+                            v.push((i, j, k));
+                        }
+                    }
+                }
+                v
+            })
+            .collect()
+    }
+
+    fn shares_two_indices(a: (usize, usize, usize), b: (usize, usize, usize)) -> bool {
+        let sa = [a.0, a.1, a.2];
+        let sb = [b.0, b.1, b.2];
+        let shared = sa.iter().filter(|x| sb.contains(x)).count();
+        shared >= 2
+    }
+
+    #[test]
+    fn covers_all_triplets_exactly_once_small() {
+        for n in [3usize, 4, 5, 8, 13, 20] {
+            for b in [1usize, 2, 3, 5, 40] {
+                let s = Schedule::new(n, b);
+                let mut seen = std::collections::HashSet::new();
+                for wave in s.waves() {
+                    for tri in wave_triplets(wave).into_iter().flatten() {
+                        assert!(seen.insert(tri), "duplicate {tri:?} n={n} b={b}");
+                    }
+                }
+                assert_eq!(seen.len() as u64, n_triplets(n), "n={n} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn triplet_count_formula_matches_enumeration() {
+        let s = Schedule::new(15, 4);
+        for wave in s.waves() {
+            for (tile, tris) in wave.iter().zip(wave_triplets(wave)) {
+                assert_eq!(tile.triplet_count() as usize, tris.len());
+            }
+        }
+        assert_eq!(s.total_triplets(), n_triplets(15));
+    }
+
+    #[test]
+    fn waves_are_conflict_free_exhaustive() {
+        // The safety property for SharedMut: two triplets from different
+        // tiles of the same wave never share 2+ indices.
+        for n in [6usize, 9, 12, 14] {
+            for b in [1usize, 2, 3] {
+                let s = Schedule::new(n, b);
+                for wave in s.waves() {
+                    let per_tile = wave_triplets(wave);
+                    for a in 0..per_tile.len() {
+                        for bb in (a + 1)..per_tile.len() {
+                            for &ta in &per_tile[a] {
+                                for &tb in &per_tile[bb] {
+                                    assert!(
+                                        !shares_two_indices(ta, tb),
+                                        "conflict {ta:?} vs {tb:?} (n={n} b={b})"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conflict_freeness_property_random() {
+        check("schedule conflict-free", 0xD1A60, 24, |rng, _| {
+            let n = rng.usize_in(3, 60);
+            let b = rng.usize_in(1, 12);
+            let s = Schedule::new(n, b);
+            // sample pairs of tiles in random waves
+            for _ in 0..50 {
+                if s.waves().is_empty() {
+                    break;
+                }
+                let w = &s.waves()[rng.usize_in(0, s.waves().len())];
+                if w.len() < 2 {
+                    continue;
+                }
+                let ta = w[rng.usize_in(0, w.len())];
+                let tb = w[rng.usize_in(0, w.len())];
+                if ta == tb {
+                    continue;
+                }
+                // random triplet from each tile
+                let pick = |rng: &mut crate::util::rng::Rng, t: &Tile| loop {
+                    let i = rng.usize_in(t.i_lo, t.i_hi);
+                    let k = rng.usize_in(t.k_lo, t.k_hi);
+                    if k >= i + 2 {
+                        let j = rng.usize_in(i + 1, k);
+                        return (i, j, k);
+                    }
+                };
+                if !ta.is_nonempty() || !tb.is_nonempty() {
+                    continue;
+                }
+                let x = pick(rng, &ta);
+                let y = pick(rng, &tb);
+                prop_assert!(!shares_two_indices(x, y), "{x:?} vs {y:?} n={n} b={b}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn coverage_property_random() {
+        check("schedule covers C(n,3)", 0xC0FE3, 24, |rng, _| {
+            let n = rng.usize_in(3, 80);
+            let b = rng.usize_in(1, 16);
+            let s = Schedule::new(n, b);
+            prop_assert!(
+                s.total_triplets() == n_triplets(n),
+                "covered {} != C({n},3) = {} (b={b})",
+                s.total_triplets(),
+                n_triplets(n)
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn untiled_matches_figure2_shape() {
+        // n = 12 as in Fig 2: every wave's tiles have strictly increasing
+        // i and strictly decreasing k.
+        let s = Schedule::new(12, 1);
+        for wave in s.waves() {
+            for pair in wave.windows(2) {
+                assert!(pair[0].i_lo < pair[1].i_lo);
+                assert!(pair[0].k_lo > pair[1].k_lo);
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        assert_eq!(Schedule::new(1, 4).total_triplets(), 0);
+        assert_eq!(Schedule::new(2, 4).total_triplets(), 0);
+        assert_eq!(Schedule::new(3, 4).total_triplets(), 1);
+    }
+
+    #[test]
+    fn load_balance_untiled_reasonable() {
+        // Fig 3's r mod p assignment on the untiled schedule: waves have
+        // ~n/2 sets, so round-robin is well balanced for p << n.
+        let s = Schedule::new(300, 1);
+        for p in [2usize, 4, 8] {
+            let loads: Vec<f64> =
+                s.worker_loads(p, Assignment::RoundRobin).iter().map(|&x| x as f64).collect();
+            let im = load_imbalance(&loads);
+            assert!(im < 0.3, "p={p} imbalance={im}");
+            assert_eq!(loads.iter().sum::<f64>() as u64, n_triplets(300));
+        }
+    }
+
+    #[test]
+    fn rotated_assignment_beats_round_robin_when_tiled() {
+        // With b=10 and n=300 each wave has <= 30 tiles; worker 0 always
+        // getting the wave's largest tile hurts RoundRobin. Rotation fixes.
+        let s = Schedule::new(300, 10);
+        for p in [4usize, 8] {
+            let rr: Vec<f64> =
+                s.worker_loads(p, Assignment::RoundRobin).iter().map(|&x| x as f64).collect();
+            let rot: Vec<f64> =
+                s.worker_loads(p, Assignment::Rotated).iter().map(|&x| x as f64).collect();
+            assert!(
+                load_imbalance(&rot) < load_imbalance(&rr),
+                "p={p}: rotated {} !< round-robin {}",
+                load_imbalance(&rot),
+                load_imbalance(&rr)
+            );
+            assert!(load_imbalance(&rot) < 0.1, "p={p} rotated imbalance");
+            // both conserve total work
+            assert_eq!(rr.iter().sum::<f64>(), rot.iter().sum::<f64>());
+        }
+    }
+
+    #[test]
+    fn assignment_policies_cover_all_tiles() {
+        for policy in [Assignment::RoundRobin, Assignment::Rotated] {
+            for p in [1usize, 3, 5] {
+                // every tile index must be owned by exactly one worker, and
+                // first_tile + step-p must enumerate exactly those indices
+                for wave_idx in [0usize, 1, 7] {
+                    let wave_len = 23;
+                    let mut owned = vec![false; wave_len];
+                    for tid in 0..p {
+                        let mut r = policy.first_tile(tid, wave_idx, p);
+                        while r < wave_len {
+                            assert_eq!(policy.worker_of(r, wave_idx, p), tid);
+                            assert!(!owned[r]);
+                            owned[r] = true;
+                            r += p;
+                        }
+                    }
+                    assert!(owned.iter().all(|&o| o));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn b1_tiles_are_single_cells() {
+        let s = Schedule::new(10, 1);
+        for wave in s.waves() {
+            for t in wave {
+                assert_eq!(t.i_hi - t.i_lo, 1);
+                assert_eq!(t.k_hi - t.k_lo, 1);
+            }
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Convergence metrics: constraint satisfaction and duality gap (§II-B,
+//! following [37]'s stopping criteria).
+//!
+//! Dykstra's iterate always satisfies `x = x0 - W^{-1} A' yhat`, so the
+//! dual objective of QP (5) evaluates to
+//! `g(y) = -(eps/2) x' W x - eps * b' yhat` with no extra matvec
+//! (DESIGN.md §6). The primal is `P = c'x + (eps/2) x'Wx`. Both are exact
+//! at pass boundaries; `P - g -> 0` as Dykstra converges.
+
+use super::{CcState, Residuals};
+use crate::util::parallel::{par_reduce_max, par_reduce_sum};
+
+/// Compute all residuals with `p` worker threads.
+pub fn compute_residuals(state: &CcState, p: usize) -> Residuals {
+    let n = state.n;
+    let m = state.x.len();
+    let gamma = state.gamma;
+
+    // --- max constraint violation ---------------------------------------
+    // Metric constraints: for each smallest index i, scan all (j, k).
+    let metric_viol = par_reduce_max(p, n, |i| {
+        let mut worst = f64::NEG_INFINITY;
+        let x = state.x.as_slice();
+        for j in (i + 1)..n {
+            let pij = state.pidx(i, j);
+            let xij = x[pij];
+            for k in (j + 1)..n {
+                let xik = x[state.pidx(i, k)];
+                let xjk = x[state.pidx(j, k)];
+                let v = (xij - xik - xjk).max(xik - xij - xjk).max(xjk - xij - xik);
+                if v > worst {
+                    worst = v;
+                }
+            }
+        }
+        worst
+    });
+    // Pair constraints |x - d| <= f, box x <= 1.
+    let pair_viol = par_reduce_max(p, m, |e| {
+        let dev = (state.x[e] - state.d[e]).abs() - state.f[e];
+        if state.include_box {
+            dev.max(state.x[e] - 1.0)
+        } else {
+            dev
+        }
+    });
+    let max_violation = metric_viol.max(pair_viol).max(0.0);
+
+    // --- objectives -------------------------------------------------------
+    let cx = par_reduce_sum(p, m, |e| state.w[e] * state.f[e]);
+    let xwx = par_reduce_sum(p, m, |e| {
+        state.w[e] * (state.x[e] * state.x[e] + state.f[e] * state.f[e])
+    });
+    // b' yhat: metric rows have b = 0; pair rows b = +d / -d; box rows b = 1.
+    let b_yhat = par_reduce_sum(p, m, |e| {
+        let mut acc = state.d[e] * (state.y_upper[e] - state.y_lower[e]);
+        if state.include_box {
+            acc += state.y_box[e];
+        }
+        acc
+    });
+    let eps = 1.0 / gamma;
+    let qp_primal = cx + 0.5 * eps * xwx;
+    let qp_dual = -0.5 * eps * xwx - eps * b_yhat;
+    let rel_gap = (qp_primal - qp_dual) / qp_primal.abs().max(1.0);
+    let lp_objective = par_reduce_sum(p, m, |e| state.w[e] * (state.x[e] - state.d[e]).abs());
+
+    Residuals { max_violation, qp_primal, qp_dual, rel_gap, lp_objective }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::CcLpInstance;
+    use crate::solver::CcState;
+
+    #[test]
+    fn residuals_at_start_point() {
+        let inst = CcLpInstance::random(7, 0.5, 1.0, 1.0, 3);
+        let st = CcState::new(&inst, 5.0, true);
+        let r = compute_residuals(&st, 1);
+        // x = 0: metric constraints tight (0 <= 0), |0 - d| - f = d + gamma.
+        // With some d = 1 the worst pair violation is 1 + gamma... but f is
+        // -gamma so violation = d - (-gamma) = d + gamma >= gamma.
+        assert!(r.max_violation >= 5.0);
+        // primal at x0: c'x0 + (eps/2)x0'Wx0 = -gamma*sum(w) + (1/(2gamma))
+        // * gamma^2 * sum(w) = -gamma/2 * sum(w)
+        let sw: f64 = inst.w.as_slice().iter().sum();
+        assert!((r.qp_primal - (-2.5 * sw)).abs() < 1e-9);
+        // dual at yhat=0: -(eps/2) x0'Wx0 = -2.5 sw -> gap 0 at start
+        assert!((r.qp_dual - (-2.5 * sw)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parallel_residuals_match_serial() {
+        let inst = CcLpInstance::random(20, 0.4, 0.5, 2.0, 9);
+        let mut st = CcState::new(&inst, 5.0, true);
+        // perturb the state so all terms are nonzero
+        let mut rng = crate::util::rng::Rng::new(5);
+        for v in st.x.iter_mut() {
+            *v = rng.f64_in(-0.2, 1.2);
+        }
+        for v in st.f.iter_mut() {
+            *v = rng.f64_in(-0.5, 0.5);
+        }
+        for v in st.y_upper.iter_mut() {
+            *v = rng.f64_in(0.0, 0.3);
+        }
+        for v in st.y_box.iter_mut() {
+            *v = rng.f64_in(0.0, 0.2);
+        }
+        let a = compute_residuals(&st, 1);
+        let b = compute_residuals(&st, 4);
+        assert!((a.max_violation - b.max_violation).abs() < 1e-12);
+        assert!((a.qp_primal - b.qp_primal).abs() < 1e-9);
+        assert!((a.qp_dual - b.qp_dual).abs() < 1e-9);
+        assert!((a.lp_objective - b.lp_objective).abs() < 1e-9);
+    }
+
+    #[test]
+    fn violation_detects_metric_break() {
+        let inst = CcLpInstance::random(5, 0.0, 1.0, 1.0, 1);
+        let mut st = CcState::new(&inst, 5.0, false);
+        // make f consistent so pair violations vanish
+        for v in st.f.iter_mut() {
+            *v = 10.0;
+        }
+        let e01 = st.pidx(0, 1);
+        st.x[e01] = 9.0; // 9 > 0 + 0 for triple (0,1,k)
+        let r = compute_residuals(&st, 1);
+        assert!((r.max_violation - 9.0).abs() < 1e-12);
+    }
+}

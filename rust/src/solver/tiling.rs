@@ -1,0 +1,133 @@
+//! Cube iteration inside a tile (§III-C, Fig 5).
+//!
+//! A tile fixes `b` candidate smallest indices `i` and `b` candidate
+//! largest indices `k`. The middle indices `j` span `(i_lo, k_hi - 1)`;
+//! we split that span into chunks of length `b`, producing `b × b × b`
+//! cubes of `(i, j, k)` values. Within a cube we iterate `i → j → k` so the
+//! innermost loop walks entries `x_{jk}` (column `j`) and `x_{ik}` (column
+//! `i`) down contiguous column segments of the column-major packed matrix —
+//! the access pattern Fig 5 is designed for. Incomplete cubes near the
+//! `i < j < k` boundary are simply clipped.
+
+use super::schedule::Tile;
+
+/// Visit every triplet `(i, j, k)` of `tile` in the cube order, calling
+/// `f(i, j, k)` for each. The order is deterministic — a requirement for
+/// the per-worker dual-variable arrays (§III-D).
+#[inline]
+pub fn for_each_triplet<F: FnMut(usize, usize, usize)>(tile: &Tile, b: usize, mut f: F) {
+    let j_min = tile.i_lo + 1;
+    let j_end = tile.k_hi.saturating_sub(1); // j < k <= k_hi - 1
+    let mut chunk_lo = j_min;
+    while chunk_lo < j_end {
+        let chunk_hi = (chunk_lo + b).min(j_end);
+        // One b×b×b cube: i-range × j-chunk × k-range, clipped to i<j<k.
+        for i in tile.i_lo..tile.i_hi {
+            let j_lo = chunk_lo.max(i + 1);
+            for j in j_lo..chunk_hi {
+                let k_lo = tile.k_lo.max(j + 1);
+                for k in k_lo..tile.k_hi {
+                    f(i, j, k);
+                }
+            }
+        }
+        chunk_lo = chunk_hi;
+    }
+}
+
+/// The serial baseline order of [37]: plain lexicographic `(i, j, k)`.
+#[inline]
+pub fn for_each_triplet_lex<F: FnMut(usize, usize, usize)>(n: usize, mut f: F) {
+    for i in 0..n {
+        for j in (i + 1)..n {
+            for k in (j + 1)..n {
+                f(i, j, k);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::schedule::{n_triplets, Schedule};
+
+    #[test]
+    fn tile_iteration_matches_tile_definition() {
+        let tile = Tile { i_lo: 1, i_hi: 3, k_lo: 5, k_hi: 8 };
+        let mut got = Vec::new();
+        for_each_triplet(&tile, 2, |i, j, k| got.push((i, j, k)));
+        // reference: all (i,j,k), i in [1,3), k in [5,8), i<j<k
+        let mut want = Vec::new();
+        for i in 1..3 {
+            for k in 5..8 {
+                for j in (i + 1)..k {
+                    want.push((i, j, k));
+                }
+            }
+        }
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn no_duplicates_and_valid_order_invariants() {
+        let tile = Tile { i_lo: 0, i_hi: 4, k_lo: 2, k_hi: 9 };
+        let mut seen = std::collections::HashSet::new();
+        for_each_triplet(&tile, 3, |i, j, k| {
+            assert!(i < j && j < k, "bad triplet ({i},{j},{k})");
+            assert!(seen.insert((i, j, k)), "dup ({i},{j},{k})");
+        });
+        assert_eq!(seen.len() as u64, tile.triplet_count());
+    }
+
+    #[test]
+    fn full_schedule_iteration_covers_cn3() {
+        for (n, b) in [(10usize, 1usize), (14, 3), (23, 5), (30, 40)] {
+            let s = Schedule::new(n, b);
+            let mut seen = std::collections::HashSet::new();
+            for wave in s.waves() {
+                for tile in wave {
+                    for_each_triplet(tile, b, |i, j, k| {
+                        assert!(seen.insert((i, j, k)), "dup n={n} b={b}");
+                    });
+                }
+            }
+            assert_eq!(seen.len() as u64, n_triplets(n), "n={n} b={b}");
+        }
+    }
+
+    #[test]
+    fn lex_order_is_sorted_and_complete() {
+        let mut got = Vec::new();
+        for_each_triplet_lex(7, |i, j, k| got.push((i, j, k)));
+        let mut sorted = got.clone();
+        sorted.sort_unstable();
+        assert_eq!(got, sorted, "lex order must be sorted");
+        assert_eq!(got.len() as u64, n_triplets(7));
+    }
+
+    #[test]
+    fn deterministic_iteration_order() {
+        let tile = Tile { i_lo: 2, i_hi: 6, k_lo: 7, k_hi: 12 };
+        let mut a = Vec::new();
+        let mut b_ = Vec::new();
+        for_each_triplet(&tile, 4, |i, j, k| a.push((i, j, k)));
+        for_each_triplet(&tile, 4, |i, j, k| b_.push((i, j, k)));
+        assert_eq!(a, b_);
+    }
+
+    #[test]
+    fn cube_order_groups_j_chunks() {
+        // With b=2 and a wide j span, the first visited j values must all
+        // lie in the first chunk before any j from the second chunk.
+        let tile = Tile { i_lo: 0, i_hi: 2, k_lo: 8, k_hi: 10 };
+        let mut js = Vec::new();
+        for_each_triplet(&tile, 2, |_, j, _| js.push(j));
+        let first_chunk_max = 1 + 2; // j_min=1, chunk = [1,3)
+        let split = js.iter().position(|&j| j >= first_chunk_max).unwrap();
+        assert!(js[..split].iter().all(|&j| j < first_chunk_max));
+        assert!(js[split..].iter().all(|&j| j >= first_chunk_max));
+    }
+}

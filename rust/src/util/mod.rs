@@ -1,0 +1,9 @@
+//! Shared utilities: deterministic RNG, parallel helpers, timing, stats,
+//! and a minimal property-testing harness (no external crates offline).
+
+pub mod parallel;
+pub mod proptest;
+pub mod rng;
+pub mod shared;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,202 @@
+//! Deterministic parallel execution helpers (no rayon in this environment).
+//!
+//! The paper's schedule requires that (a) the r-th work item of a wave is
+//! always handled by worker `r mod p`, and (b) each worker traverses its
+//! items in the same order every pass. Plain scoped threads plus a barrier
+//! give us exactly that with no extra machinery.
+
+use std::sync::Barrier;
+
+/// Run `p` scoped workers; `body(tid, &barrier)` runs on each.
+///
+/// The barrier is shared so workers can synchronize between waves. Panics in
+/// any worker propagate (std::thread::scope joins and re-raises).
+pub fn scoped_workers<F>(p: usize, body: F)
+where
+    F: Fn(usize, &Barrier) + Sync,
+{
+    assert!(p >= 1);
+    let barrier = Barrier::new(p);
+    if p == 1 {
+        // Fast path: no thread spawn for the serial case.
+        body(0, &barrier);
+        return;
+    }
+    std::thread::scope(|s| {
+        for tid in 0..p {
+            let body = &body;
+            let barrier = &barrier;
+            s.spawn(move || body(tid, barrier));
+        }
+    });
+}
+
+/// Split `[0, n)` into `p` contiguous chunks whose sizes differ by <= 1.
+/// Returns the half-open range of chunk `tid`.
+pub fn chunk_range(n: usize, p: usize, tid: usize) -> (usize, usize) {
+    debug_assert!(tid < p);
+    let base = n / p;
+    let rem = n % p;
+    let lo = tid * base + tid.min(rem);
+    let hi = lo + base + usize::from(tid < rem);
+    (lo, hi)
+}
+
+/// Map `f` over `[0, n)` in parallel with `p` workers writing disjoint
+/// chunks of `out`. `f` must be pure w.r.t. the index.
+pub fn par_map_into<T: Send, F>(p: usize, out: &mut [T], f: F)
+where
+    F: Fn(usize) -> T + Sync,
+{
+    let n = out.len();
+    if p <= 1 || n < 2 {
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = f(i);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut rest = &mut *out;
+        for tid in 0..p {
+            // Chunks are contiguous, so chunk `tid` is the next hi-lo slots.
+            let (lo, hi) = chunk_range(n, p, tid);
+            let (mine, tail) = rest.split_at_mut(hi - lo);
+            rest = tail;
+            let f = &f;
+            s.spawn(move || {
+                for (off, slot) in mine.iter_mut().enumerate() {
+                    *slot = f(lo + off);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel sum-reduction of `f(i)` over `[0, n)` with `p` workers.
+pub fn par_reduce_sum<F>(p: usize, n: usize, f: F) -> f64
+where
+    F: Fn(usize) -> f64 + Sync,
+{
+    if p <= 1 || n < 1024 {
+        return (0..n).map(&f).sum();
+    }
+    let mut partials = vec![0.0f64; p];
+    std::thread::scope(|s| {
+        for (tid, slot) in partials.iter_mut().enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                let (lo, hi) = chunk_range(n, p, tid);
+                *slot = (lo..hi).map(f).sum();
+            });
+        }
+    });
+    partials.iter().sum()
+}
+
+/// Parallel max-reduction of `f(i)` over `[0, n)` with `p` workers.
+/// Returns `f64::NEG_INFINITY` for n = 0.
+pub fn par_reduce_max<F>(p: usize, n: usize, f: F) -> f64
+where
+    F: Fn(usize) -> f64 + Sync,
+{
+    if p <= 1 || n < 1024 {
+        return (0..n).map(&f).fold(f64::NEG_INFINITY, f64::max);
+    }
+    let mut partials = vec![f64::NEG_INFINITY; p];
+    std::thread::scope(|s| {
+        for (tid, slot) in partials.iter_mut().enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                let (lo, hi) = chunk_range(n, p, tid);
+                *slot = (lo..hi).map(f).fold(f64::NEG_INFINITY, f64::max);
+            });
+        }
+    });
+    partials.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Number of hardware threads available to this process.
+pub fn available_cores() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_cover_and_are_disjoint() {
+        for n in [0usize, 1, 7, 100, 101] {
+            for p in [1usize, 2, 3, 8] {
+                let mut covered = vec![false; n];
+                let mut prev_hi = 0;
+                for tid in 0..p {
+                    let (lo, hi) = chunk_range(n, p, tid);
+                    assert_eq!(lo, prev_hi);
+                    prev_hi = hi;
+                    for slot in covered.iter_mut().take(hi).skip(lo) {
+                        assert!(!*slot);
+                        *slot = true;
+                    }
+                }
+                assert_eq!(prev_hi, n);
+                assert!(covered.iter().all(|&c| c));
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_sizes_balanced() {
+        for n in [10usize, 11, 99] {
+            for p in [2usize, 3, 7] {
+                let sizes: Vec<usize> =
+                    (0..p).map(|t| { let (l, h) = chunk_range(n, p, t); h - l }).collect();
+                let mx = *sizes.iter().max().unwrap();
+                let mn = *sizes.iter().min().unwrap();
+                assert!(mx - mn <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn scoped_workers_all_run() {
+        let count = AtomicUsize::new(0);
+        scoped_workers(4, |_tid, b| {
+            count.fetch_add(1, Ordering::SeqCst);
+            b.wait();
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn par_reduce_sum_matches_serial() {
+        let f = |i: usize| (i as f64).sqrt();
+        let serial: f64 = (0..10_000).map(f).sum();
+        for p in [1usize, 2, 4] {
+            let par = par_reduce_sum(p, 10_000, f);
+            assert!((par - serial).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn par_reduce_max_matches_serial() {
+        let f = |i: usize| ((i * 2654435761) % 10007) as f64;
+        let serial = (0..5000).map(f).fold(f64::NEG_INFINITY, f64::max);
+        for p in [1usize, 3, 8] {
+            assert_eq!(par_reduce_max(p, 5000, f), serial);
+        }
+    }
+
+    #[test]
+    fn par_map_into_writes_all() {
+        let mut out = vec![0usize; 5000];
+        par_map_into(4, &mut out, |i| i * 3);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * 3);
+        }
+    }
+}

@@ -1,0 +1,78 @@
+//! Minimal seeded property-testing harness.
+//!
+//! The offline environment has no `proptest` crate; this module provides the
+//! small subset we need: run a property over many seeded random cases and
+//! report the failing seed so the case can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Number of cases per property (overridable via `METRIC_PROJ_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("METRIC_PROJ_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop(rng, case_index)` for `cases` seeded cases derived from `seed`.
+/// On failure (panic or `Err`), panics with the case seed for replay.
+pub fn check<F>(name: &str, seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = root.next_u64();
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!("property `{name}` failed on case {case} (seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Convenience assertion for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut seen = 0usize;
+        check("trivial", 1, 16, |rng, _case| {
+            let _ = rng.next_u64();
+            seen += 1;
+            Ok(())
+        });
+        assert_eq!(seen, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 2, 8, |rng, _| {
+            if rng.f64() >= 0.0 {
+                Err("always fails".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn prop_assert_macro_works() {
+        check("macro", 3, 4, |rng, _| {
+            let v = rng.f64();
+            prop_assert!((0.0..1.0).contains(&v), "v out of range: {v}");
+            Ok(())
+        });
+    }
+}

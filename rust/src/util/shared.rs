@@ -1,0 +1,173 @@
+//! Unsynchronized shared mutable slices for conflict-free parallel writes.
+//!
+//! The whole point of the paper's execution schedule is that concurrent
+//! projections touch **disjoint** entries of `X`, so no locks or atomics
+//! are needed. Rust's aliasing rules still require us to say this
+//! explicitly: [`SharedMut`] hands out raw unsynchronized access, and the
+//! *scheduler* is the safety argument (verified by `solver::schedule`
+//! tests: any two triplets in the same wave assigned to different workers
+//! share at most one index, hence no variable).
+
+use std::marker::PhantomData;
+
+/// A shareable view of a mutable slice. All access is `unsafe`; callers
+/// must guarantee data-race freedom (disjoint index sets per thread, or
+/// synchronization via barriers between phases).
+#[derive(Clone, Copy)]
+pub struct SharedMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for SharedMut<'_, T> {}
+unsafe impl<T: Send> Sync for SharedMut<'_, T> {}
+
+impl<'a, T> SharedMut<'a, T> {
+    /// Wrap a mutable slice.
+    pub fn new(slice: &'a mut [T]) -> Self {
+        SharedMut { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+    }
+
+    /// Length of the underlying slice.
+    #[inline(always)]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True iff empty.
+    #[inline(always)]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Read element `i`.
+    ///
+    /// # Safety
+    /// `i < len`, and no other thread may be writing element `i`.
+    #[inline(always)]
+    pub unsafe fn get(&self, i: usize) -> T
+    where
+        T: Copy,
+    {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i)
+    }
+
+    /// Write element `i`.
+    ///
+    /// # Safety
+    /// `i < len`, and no other thread may be accessing element `i`.
+    #[inline(always)]
+    pub unsafe fn set(&self, i: usize, v: T) {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) = v;
+    }
+
+    /// Add `v` to element `i` (read-modify-write).
+    ///
+    /// # Safety
+    /// Same contract as [`Self::set`].
+    #[inline(always)]
+    pub unsafe fn add(&self, i: usize, v: T)
+    where
+        T: Copy + std::ops::AddAssign,
+    {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) += v;
+    }
+}
+
+/// Per-worker mutable state: each worker `tid` may access only slot `tid`.
+///
+/// Used for the per-processor dual arrays of §III-D: the stores live across
+/// the whole solve, each owned (dynamically) by one worker thread.
+pub struct PerWorker<T> {
+    slots: Vec<std::cell::UnsafeCell<T>>,
+}
+
+unsafe impl<T: Send> Sync for PerWorker<T> {}
+
+impl<T> PerWorker<T> {
+    /// Build from one value per worker.
+    pub fn new(values: Vec<T>) -> Self {
+        PerWorker { slots: values.into_iter().map(std::cell::UnsafeCell::new).collect() }
+    }
+
+    /// Number of workers.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True iff no slots.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Mutable access to worker `tid`'s slot.
+    ///
+    /// # Safety
+    /// Only thread `tid` may call this for a given `tid` at a given time,
+    /// and the returned reference must not outlive that exclusivity.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, tid: usize) -> &mut T {
+        &mut *self.slots[tid].get()
+    }
+
+    /// Consume, returning the inner values.
+    pub fn into_inner(self) -> Vec<T> {
+        self.slots.into_iter().map(std::cell::UnsafeCell::into_inner).collect()
+    }
+
+    /// Exclusive iteration (requires &mut self, hence no races).
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut T> {
+        self.slots.iter_mut().map(|c| unsafe { &mut *c.get() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::parallel::{chunk_range, scoped_workers};
+
+    #[test]
+    fn basic_access() {
+        let mut v = vec![1.0f64, 2.0, 3.0];
+        let s = SharedMut::new(&mut v);
+        unsafe {
+            assert_eq!(s.get(1), 2.0);
+            s.set(1, 5.0);
+            s.add(2, 1.0);
+        }
+        assert_eq!(v, vec![1.0, 5.0, 4.0]);
+    }
+
+    #[test]
+    fn disjoint_parallel_writes() {
+        let n = 10_000;
+        let mut v = vec![0usize; n];
+        let s = SharedMut::new(&mut v);
+        scoped_workers(4, |tid, _| {
+            let (lo, hi) = chunk_range(n, 4, tid);
+            for i in lo..hi {
+                unsafe { s.set(i, i * 2) };
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * 2);
+        }
+    }
+
+    #[test]
+    fn per_worker_isolated_slots() {
+        let pw = PerWorker::new(vec![0u64; 4]);
+        scoped_workers(4, |tid, _| {
+            let slot = unsafe { pw.get_mut(tid) };
+            for _ in 0..1000 {
+                *slot += tid as u64 + 1;
+            }
+        });
+        let vals = pw.into_inner();
+        assert_eq!(vals, vec![1000, 2000, 3000, 4000]);
+    }
+}

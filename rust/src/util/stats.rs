@@ -1,0 +1,101 @@
+//! Small statistics helpers used by the bench harness and eval binaries.
+
+/// Summary of a sample of measurements (seconds, counts, ...).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+}
+
+/// Compute a summary of `xs`. Panics on empty input.
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty(), "summarize: empty sample");
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = if n % 2 == 1 {
+        sorted[n / 2]
+    } else {
+        0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+    };
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        max: sorted[n - 1],
+        median,
+    }
+}
+
+/// Population coefficient of variation of nonneg data (= std/mean); 0 if mean is 0.
+pub fn coeff_of_variation(xs: &[f64]) -> f64 {
+    let s = summarize(xs);
+    if s.mean == 0.0 {
+        0.0
+    } else {
+        s.std / s.mean
+    }
+}
+
+/// Relative imbalance of a load vector: (max - mean) / mean. 0 = perfect.
+pub fn load_imbalance(loads: &[f64]) -> f64 {
+    let s = summarize(loads);
+    if s.mean == 0.0 {
+        0.0
+    } else {
+        (s.max - s.mean) / s.mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant() {
+        let s = summarize(&[2.0, 2.0, 2.0]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 2.0);
+    }
+
+    #[test]
+    fn summary_basic() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.median - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        // sample std of 1..4 = sqrt(5/3)
+        assert!((s.std - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_odd() {
+        assert_eq!(summarize(&[5.0, 1.0, 3.0]).median, 3.0);
+    }
+
+    #[test]
+    fn imbalance_zero_when_equal() {
+        assert_eq!(load_imbalance(&[3.0, 3.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn imbalance_positive_when_skewed() {
+        let im = load_imbalance(&[1.0, 1.0, 4.0]);
+        assert!((im - 1.0).abs() < 1e-12); // mean 2, max 4
+    }
+}

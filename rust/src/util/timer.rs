@@ -1,0 +1,76 @@
+//! Wall-clock timing helpers for the bench harness.
+
+use std::time::Instant;
+
+/// Time a closure, returning (result, seconds).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// A named phase timer that accumulates durations across calls.
+#[derive(Debug, Default)]
+pub struct PhaseTimer {
+    phases: Vec<(String, f64)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f` under phase `name`, accumulating its wall time.
+    pub fn run<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let (out, secs) = time(f);
+        self.add(name, secs);
+        out
+    }
+
+    /// Accumulate `secs` into phase `name`.
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(slot) = self.phases.iter_mut().find(|(n, _)| n == name) {
+            slot.1 += secs;
+        } else {
+            self.phases.push((name.to_string(), secs));
+        }
+    }
+
+    /// Total seconds of phase `name` (0 if never run).
+    pub fn total(&self, name: &str) -> f64 {
+        self.phases
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+
+    /// All (phase, seconds) pairs in first-seen order.
+    pub fn phases(&self) -> &[(String, f64)] {
+        &self.phases
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_returns_value() {
+        let (v, secs) = time(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut t = PhaseTimer::new();
+        t.add("a", 1.0);
+        t.add("b", 2.0);
+        t.add("a", 0.5);
+        assert!((t.total("a") - 1.5).abs() < 1e-12);
+        assert!((t.total("b") - 2.0).abs() < 1e-12);
+        assert_eq!(t.total("missing"), 0.0);
+        assert_eq!(t.phases().len(), 2);
+    }
+}

@@ -1,0 +1,167 @@
+//! Integration tests: compose the public API across modules the way the
+//! examples and the CLI do (graph -> instance -> solver -> rounding ->
+//! certificates; runtime artifacts; eval harness).
+
+use metric_proj::graph::components::largest_component;
+use metric_proj::graph::datasets::Dataset;
+use metric_proj::graph::generators;
+use metric_proj::instance::construction::{build_cc_instance, ConstructionParams};
+use metric_proj::instance::metric_nearness::{max_triangle_violation, MetricNearnessInstance};
+use metric_proj::instance::{cc_objective, CcLpInstance};
+use metric_proj::rounding::{pivot, threshold};
+use metric_proj::solver::{dykstra_parallel, dykstra_serial, nearness, SolveOpts};
+
+#[test]
+fn full_pipeline_planted_clusters_recovered() {
+    // Graph with 3 planted communities -> dense CC instance -> LP ->
+    // rounding must recover communities with objective matching LP bound.
+    let g = generators::collaboration(45, 3, 0.9, 0, 11);
+    let g = largest_component(&g);
+    let inst = build_cc_instance(&g, ConstructionParams::default(), 2);
+    inst.validate().unwrap();
+    let opts = SolveOpts {
+        max_passes: 300,
+        check_every: 20,
+        tol_violation: 1e-6,
+        tol_gap: 1e-4,
+        threads: 3,
+        tile: 8,
+        ..Default::default()
+    };
+    let sol = dykstra_parallel::solve(&inst, &opts);
+    assert!(sol.residuals.max_violation < 1e-3, "violation {}", sol.residuals.max_violation);
+    let lp = sol.residuals.lp_objective;
+    let labels = threshold::round(&sol.x, 0.5);
+    let obj = cc_objective(&inst, &labels);
+    // LP is a lower bound; a good rounding is within a small factor.
+    assert!(obj + 1e-9 >= lp, "LP bound violated: {obj} < {lp}");
+    assert!(obj <= 2.5 * lp.max(1e-9) + 1e-6, "rounding far from bound: {obj} vs {lp}");
+    let (_, obj_piv) = pivot::round_best(&sol.x, 30, 5, |l| cc_objective(&inst, l));
+    assert!(obj_piv + 1e-9 >= lp);
+}
+
+#[test]
+fn serial_and_parallel_agree_on_dataset_instance() {
+    let g = Dataset::Power.generate(60, 3);
+    let inst = build_cc_instance(&g, ConstructionParams::default(), 2);
+    let passes = 800;
+    let ser = dykstra_serial::solve(&inst, &SolveOpts { max_passes: passes, ..Default::default() });
+    let par = dykstra_parallel::solve(
+        &inst,
+        &SolveOpts { max_passes: passes, threads: 4, tile: 10, ..Default::default() },
+    );
+    let mut worst: f64 = 0.0;
+    for (i, j, v) in par.x.iter_pairs() {
+        worst = worst.max((v - ser.x.get(i, j)).abs());
+    }
+    assert!(worst < 1e-2, "optima differ by {worst}");
+    assert!(
+        (par.residuals.lp_objective - ser.residuals.lp_objective).abs()
+            < 1e-2 * ser.residuals.lp_objective.max(1.0)
+    );
+}
+
+#[test]
+fn nearness_pipeline_produces_metric() {
+    let inst = MetricNearnessInstance::random(40, 2.0, 5);
+    let sol = nearness::solve(
+        &inst,
+        &nearness::NearnessOpts {
+            max_passes: 2000,
+            check_every: 25,
+            tol_violation: 1e-6,
+            threads: 2,
+            tile: 8,
+            ..Default::default()
+        },
+    );
+    assert!(sol.max_violation <= 1e-6);
+    assert!(max_triangle_violation(&sol.x) <= 1e-6);
+    assert!(sol.passes < 2000, "early stop expected, ran {}", sol.passes);
+}
+
+#[test]
+fn eval_harness_smoke_end_to_end() {
+    use metric_proj::eval::{self, EvalConfig, Scale, TilePolicy, TimingMode};
+    let cfg = EvalConfig {
+        scale: Scale::Smoke,
+        passes: 1,
+        tile: TilePolicy::PaperRatio,
+        cores: vec![4],
+        seed: 7,
+        assignment: Default::default(),
+        timing: TimingMode::Simulated,
+    };
+    let rows = eval::table1(&cfg, &[Dataset::CaGrQc], |_| {});
+    assert_eq!(rows.len(), 2); // serial + 1 core count
+    assert!(rows[1].speedup > 1.0, "simulated 4-core speedup {}", rows[1].speedup);
+    let pts = eval::fig7(&cfg, Dataset::CaGrQc, 4, &[4, 16], |_, _, _| {});
+    assert_eq!(pts.len(), 2);
+}
+
+#[test]
+fn solver_handles_extreme_weights_and_signs() {
+    // Failure-injection-flavored robustness: weight ratios of 1e4 and
+    // all-negative / all-positive instances must not produce NaNs.
+    for (p_neg, w_lo, w_hi) in [(0.0, 1.0, 1.0), (1.0, 1.0, 1.0), (0.5, 1e-2, 1e2)] {
+        let inst = CcLpInstance::random(12, p_neg, w_lo, w_hi, 9);
+        let sol = dykstra_parallel::solve(
+            &inst,
+            &SolveOpts { max_passes: 150, threads: 2, tile: 4, ..Default::default() },
+        );
+        for (_, _, v) in sol.x.iter_pairs() {
+            assert!(v.is_finite(), "non-finite x (p_neg={p_neg})");
+        }
+        assert!(sol.residuals.max_violation.is_finite());
+        assert!(sol.residuals.lp_objective >= -1e-9);
+    }
+}
+
+#[test]
+fn runtime_artifacts_compose_when_built() {
+    // Exercised fully only after `make artifacts`; skips otherwise so
+    // `cargo test` works from a clean checkout.
+    if !std::path::Path::new("artifacts/project_b1024.hlo.txt").exists() {
+        eprintln!("skipping runtime integration: run `make artifacts`");
+        return;
+    }
+    let engine = metric_proj::runtime::engine::XlaEngine::load("artifacts").unwrap();
+    let inst = CcLpInstance::random(10, 0.5, 0.8, 1.5, 3);
+    let opts = SolveOpts { max_passes: 120, tile: 4, ..Default::default() };
+    let xla = metric_proj::solver::dykstra_xla::solve(&inst, &opts, &engine).unwrap();
+    let cpu = dykstra_parallel::solve(&inst, &opts);
+    assert!(
+        (xla.residuals.lp_objective - cpu.residuals.lp_objective).abs()
+            < 1e-2 * cpu.residuals.lp_objective.max(1.0),
+        "engines disagree: {} vs {}",
+        xla.residuals.lp_objective,
+        cpu.residuals.lp_objective
+    );
+}
+
+#[test]
+fn graph_io_roundtrip_through_instance() {
+    let g = Dataset::CaGrQc.generate(50, 21);
+    let dir = std::env::temp_dir().join("metric_proj_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ca-GrQc.txt");
+    metric_proj::graph::io::write_edge_list(&g, &path).unwrap();
+    // load_or_generate must prefer the file. Loading may relabel nodes
+    // (ids are interned in file order), so compare graph invariants and
+    // the *distribution* of instance entries, which are label-invariant.
+    let loaded = Dataset::CaGrQc.load_or_generate(&dir, 999, 1);
+    let lcc = largest_component(&g);
+    assert_eq!(loaded.n(), lcc.n());
+    assert_eq!(loaded.m(), lcc.m());
+    let mut deg_a: Vec<usize> = (0..lcc.n()).map(|u| lcc.degree(u)).collect();
+    let mut deg_b: Vec<usize> = (0..loaded.n()).map(|u| loaded.degree(u)).collect();
+    deg_a.sort_unstable();
+    deg_b.sort_unstable();
+    assert_eq!(deg_a, deg_b);
+    let a = build_cc_instance(&lcc, ConstructionParams::default(), 1);
+    let b = build_cc_instance(&loaded, ConstructionParams::default(), 1);
+    let negs = |inst: &CcLpInstance| inst.d.as_slice().iter().filter(|&&v| v == 1.0).count();
+    assert_eq!(negs(&a), negs(&b));
+    let wsum = |inst: &CcLpInstance| inst.w.as_slice().iter().sum::<f64>();
+    assert!((wsum(&a) - wsum(&b)).abs() < 1e-9);
+}
