@@ -120,4 +120,16 @@ mod tests {
         assert!(a.has_flag("fast"));
         assert_eq!(a.get_or("n", 0usize).unwrap(), 5);
     }
+
+    #[test]
+    fn strategy_flags_parse() {
+        // The grammar main.rs uses for the active-set strategy.
+        let a = parse("solve --strategy active --sweep-every 6 --forget-after 2");
+        assert_eq!(a.get("strategy"), Some("active"));
+        assert_eq!(a.get_or("sweep-every", 8usize).unwrap(), 6);
+        assert_eq!(a.get_or("forget-after", 3usize).unwrap(), 2);
+        // defaults apply when the options are absent
+        let b = parse("solve --strategy full");
+        assert_eq!(b.get_or("sweep-every", 8usize).unwrap(), 8);
+    }
 }

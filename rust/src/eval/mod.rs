@@ -9,7 +9,7 @@ use crate::graph::datasets::Dataset;
 use crate::instance::construction::{build_cc_instance, ConstructionParams};
 use crate::instance::CcLpInstance;
 use crate::solver::schedule::{Assignment, Schedule};
-use crate::solver::{dykstra_parallel, dykstra_serial, SolveOpts};
+use crate::solver::{dykstra_parallel, dykstra_serial, SolveOpts, Strategy};
 use crate::util::parallel::available_cores;
 
 /// How parallel pass times are obtained.
@@ -275,6 +275,49 @@ pub fn times_for_cores(
     }
 }
 
+/// One row of the constraint-visit ablation: how much metric work a
+/// strategy spent and where it landed.
+#[derive(Clone, Debug)]
+pub struct StrategyRow {
+    pub label: &'static str,
+    pub strategy: Strategy,
+    pub passes: usize,
+    /// Total metric-constraint visits over the solve.
+    pub metric_visits: u64,
+    /// Average metric-constraint visits per pass.
+    pub visits_per_pass: f64,
+    /// Active triplets at the end (= C(n,3) for the full strategy).
+    pub active_triplets: usize,
+    pub max_violation: f64,
+    pub lp_objective: f64,
+}
+
+/// Solve `inst` once per strategy with otherwise-identical options —
+/// convergence-vs-work data for the [A4] ablation bench and for plotting
+/// (each [`crate::solver::Solution`] carries the same counters).
+pub fn strategy_ablation(
+    inst: &CcLpInstance,
+    base: &SolveOpts,
+    strategies: &[(&'static str, Strategy)],
+) -> Vec<StrategyRow> {
+    strategies
+        .iter()
+        .map(|&(label, strategy)| {
+            let sol = dykstra_parallel::solve(inst, &SolveOpts { strategy, ..*base });
+            StrategyRow {
+                label,
+                strategy,
+                passes: sol.passes,
+                metric_visits: sol.metric_visits,
+                visits_per_pass: sol.metric_visits as f64 / sol.passes.max(1) as f64,
+                active_triplets: sol.active_triplets,
+                max_violation: sol.residuals.max_violation,
+                lp_objective: sol.residuals.lp_objective,
+            }
+        })
+        .collect()
+}
+
 /// Render rows in the paper's Table I layout (markdown).
 pub fn render_table1(rows: &[Table1Row]) -> String {
     let mut s = String::from(
@@ -337,6 +380,31 @@ mod tests {
         let tp = time_parallel(&inst, 2, 10, 1, Assignment::RoundRobin);
         assert!(ts > 0.0 && tp > 0.0);
         // don't assert speedup in CI-sized runs; just that both complete
+    }
+
+    #[test]
+    fn strategy_ablation_reports_less_work_for_active() {
+        let inst = CcLpInstance::random(24, 0.5, 0.8, 1.6, 3);
+        let base = SolveOpts { max_passes: 30, threads: 2, tile: 4, ..Default::default() };
+        let rows = strategy_ablation(
+            &inst,
+            &base,
+            &[
+                ("full", Strategy::Full),
+                ("active", Strategy::Active { sweep_every: 5, forget_after: 2 }),
+            ],
+        );
+        assert_eq!(rows.len(), 2);
+        assert!(
+            rows[1].metric_visits < rows[0].metric_visits,
+            "active {} !< full {}",
+            rows[1].metric_visits,
+            rows[0].metric_visits
+        );
+        assert!(rows[1].visits_per_pass < rows[0].visits_per_pass);
+        // same pass budget, so the full row visits exactly 3·C(n,3)/pass
+        let per_pass = crate::solver::schedule::n_triplets(24) * 3;
+        assert_eq!(rows[0].metric_visits, 30 * per_pass);
     }
 
     #[test]

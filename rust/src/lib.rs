@@ -13,6 +13,13 @@
 //!   ([`solver::tiling`]), with per-thread sparse dual storage
 //!   ([`solver::duals`]), plus every substrate: graphs, instances,
 //!   rounding, evaluation.
+//! * **Active-set layer** ([`solver::active`]) — project-and-forget on
+//!   top of the wave schedule: cheap passes visit only the constraints
+//!   that recently mattered (nonzero duals), full discovery sweeps every
+//!   few passes re-measure everything, and a retention policy forgets
+//!   persistently idle constraints. Selected per solve via
+//!   [`solver::SolveOpts::strategy`]; cuts constraint visits by large
+//!   factors once duals sparsify, without changing the fixed point.
 //! * **L2/L1 (build time)** — a JAX model + Pallas kernel implementing the
 //!   batched projection step, AOT-lowered to HLO text and executed from
 //!   Rust through PJRT ([`runtime`]).

@@ -5,7 +5,9 @@
 //!   info                         PJRT + machine info
 //!   solve    --dataset ca-GrQc --n 300 --threads 8 --tile 40 --passes 20
 //!            [--engine cpu|xla] [--assignment rr|rot] [--round] [--serial]
+//!            [--strategy full|active --sweep-every 8 --forget-after 3]
 //!   nearness --n 200 --threads 8 --tile 40 --passes 50
+//!            [--strategy full|active --sweep-every 8 --forget-after 3]
 //!   generate --dataset power --n 500 --out graph.txt
 //!   table1   [--scale smoke|small|paper] [--passes 20] [--cores 8,16,32]
 //!   fig6     [--dataset ca-HepPh] [--cores 2,4,...] [--scale ...]
@@ -18,7 +20,9 @@ use metric_proj::graph::datasets::Dataset;
 use metric_proj::instance::{cc_objective, CcLpInstance};
 use metric_proj::rounding::{pivot, threshold};
 use metric_proj::solver::schedule::Assignment;
-use metric_proj::solver::{dykstra_parallel, dykstra_serial, dykstra_xla, nearness, SolveOpts};
+use metric_proj::solver::{
+    dykstra_parallel, dykstra_serial, dykstra_xla, nearness, SolveOpts, Strategy,
+};
 use metric_proj::util::parallel::available_cores;
 use metric_proj::util::timer::time;
 
@@ -65,6 +69,29 @@ fn parse_assignment(args: &Args) -> Result<Assignment> {
         "rot" | "rotated" => Ok(Assignment::Rotated),
         other => bail!("--assignment must be rr|rot, got `{other}`"),
     }
+}
+
+fn parse_strategy(args: &Args) -> Result<Strategy> {
+    let sweep_every = args.get_or("sweep-every", 8usize).map_err(|e| anyhow::anyhow!(e))?;
+    let forget_after = args.get_or("forget-after", 3usize).map_err(|e| anyhow::anyhow!(e))?;
+    let s = args.get("strategy").unwrap_or("full");
+    Strategy::parse(s, sweep_every, forget_after)
+        .with_context(|| format!("--strategy must be full|active, got `{s}`"))
+}
+
+/// Print the work accounting shared by `solve` and `nearness`.
+fn print_work(metric_visits: u64, active_triplets: usize, passes: usize, full_per_pass: u128) {
+    let full_total = full_per_pass as f64 * passes.max(1) as f64;
+    println!(
+        "metric visits: {:.3e} ({:.1}% of a full-sweep run)",
+        metric_visits as f64,
+        100.0 * metric_visits as f64 / full_total.max(1.0)
+    );
+    println!(
+        "active set : {} triplets ({:.1}% of C(n,3))",
+        active_triplets,
+        100.0 * active_triplets as f64 / (full_per_pass as f64 / 3.0).max(1.0)
+    );
 }
 
 fn eval_config(args: &Args) -> Result<EvalConfig> {
@@ -133,18 +160,26 @@ fn cmd_solve(args: &Args) -> Result<()> {
         check_every: args.get_or("check-every", 0usize).map_err(|e| anyhow::anyhow!(e))?,
         track_pass_times: true,
         assignment: parse_assignment(args)?,
+        strategy: parse_strategy(args)?,
         ..Default::default()
     };
+    let engine = args.get("engine").unwrap_or("cpu");
+    if opts.strategy.is_active() && (args.has_flag("serial") || engine != "cpu") {
+        bail!(
+            "--strategy active runs on the parallel CPU engine only \
+             (drop --serial / use --engine cpu)"
+        );
+    }
     println!("instance  : {desc}");
     println!("constraints: {:.3e}", inst.n_constraints() as f64);
     println!(
-        "solver    : {} threads={} tile={} passes={}",
+        "solver    : {} threads={} tile={} passes={} strategy={:?}",
         if args.has_flag("serial") { "serial" } else { "parallel" },
         opts.threads,
         opts.tile,
-        opts.max_passes
+        opts.max_passes,
+        opts.strategy
     );
-    let engine = args.get("engine").unwrap_or("cpu");
     let (sol, secs) = match engine {
         "cpu" => time(|| {
             if args.has_flag("serial") {
@@ -171,6 +206,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
     println!("rel gap   : {:.3e}", r.rel_gap);
     println!("LP objective (lower bound on CC): {:.4}", r.lp_objective);
     println!("nnz metric duals: {}", sol.nnz_duals);
+    print_work(sol.metric_visits, sol.active_triplets, sol.passes, inst.n_metric_constraints());
 
     if args.has_flag("round") {
         let labels_t = threshold::round(&sol.x, 0.5);
@@ -196,12 +232,15 @@ fn cmd_nearness(args: &Args) -> Result<()> {
         max_passes: args.get_or("passes", 50usize).map_err(|e| anyhow::anyhow!(e))?,
         threads: args.get_or("threads", available_cores()).map_err(|e| anyhow::anyhow!(e))?,
         tile: args.get_or("tile", 40usize).map_err(|e| anyhow::anyhow!(e))?,
+        strategy: parse_strategy(args)?,
         ..Default::default()
     };
     let (sol, secs) = time(|| nearness::solve(&inst, &opts));
     println!("metric nearness n={n}: passes={} time={secs:.2}s", sol.passes);
     println!("objective ||X-D||_W^2 = {:.4}", sol.objective);
     println!("max violation = {:.3e}", sol.max_violation);
+    let full_per_pass = metric_proj::solver::schedule::n_triplets(n) as u128 * 3;
+    print_work(sol.metric_visits, sol.active_triplets, sol.passes, full_per_pass);
     Ok(())
 }
 

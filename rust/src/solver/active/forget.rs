@@ -1,0 +1,89 @@
+//! The retention policy: forget constraints whose duals stayed zero.
+//!
+//! A triplet whose three duals are exactly zero contributes nothing to
+//! the next visit's correction step, so skipping it changes the iterate
+//! only if it has become violated in the meantime — and the periodic
+//! discovery sweep bounds how long such a violation can go unnoticed.
+//! Dropping zero-dual entries after `forget_after` consecutive zero-dual
+//! active passes therefore preserves Dykstra's convergence (the
+//! project-and-forget argument): constraints with nonzero duals are
+//! *never* forgotten, so no correction memory is ever lost.
+
+use super::set::ActiveSet;
+
+/// Drop every active triplet whose duals are all zero **and** have been
+/// zero for at least `forget_after` consecutive active passes. Returns
+/// the number of triplets forgotten. `forget_after = 0` forgets a
+/// triplet the moment its duals hit zero.
+pub fn forget_inactive(set: &mut ActiveSet, forget_after: usize) -> usize {
+    let threshold = forget_after.min(u32::MAX as usize) as u32;
+    let mut dropped = 0usize;
+    for bucket in set.buckets_mut() {
+        let before = bucket.len();
+        bucket.retain(|e| e.y != [0.0; 3] || e.zero_passes < threshold);
+        dropped += before - bucket.len();
+    }
+    dropped
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::active::set::{triplet_key, ActiveTriplet};
+    use crate::solver::schedule::Schedule;
+
+    fn entry(k: usize, y0: f64, zero_passes: u32) -> ActiveTriplet {
+        ActiveTriplet { key: triplet_key(0, 1, k), y: [y0, 0.0, 0.0], zero_passes }
+    }
+
+    #[test]
+    fn drops_only_persistently_zero_entries() {
+        let schedule = Schedule::new(12, 3);
+        let mut set = ActiveSet::new(&schedule);
+        {
+            let b = unsafe { set.bucket_mut(0) };
+            b.push(entry(2, 0.7, 0)); // live dual: kept regardless
+            b.push(entry(3, 0.0, 1)); // zero for 1 pass: kept at K = 2
+            b.push(entry(4, 0.0, 2)); // zero for 2 passes: dropped at K = 2
+            b.push(entry(5, 0.0, 9)); // long-dead: dropped
+        }
+        let dropped = forget_inactive(&mut set, 2);
+        assert_eq!(dropped, 2);
+        let keys: Vec<u64> = set.iter().map(|e| e.key).collect();
+        assert_eq!(keys, vec![triplet_key(0, 1, 2), triplet_key(0, 1, 3)]);
+    }
+
+    #[test]
+    fn forget_after_zero_is_immediate() {
+        let schedule = Schedule::new(12, 3);
+        let mut set = ActiveSet::new(&schedule);
+        {
+            let b = unsafe { set.bucket_mut(0) };
+            b.push(entry(2, 0.0, 0));
+            b.push(entry(3, 0.3, 0));
+        }
+        assert_eq!(forget_inactive(&mut set, 0), 1);
+        assert_eq!(set.len(), 1);
+        // a nonzero dual is never forgotten, whatever its streak says
+        assert_eq!(forget_inactive(&mut set, 0), 0);
+    }
+
+    #[test]
+    fn order_within_bucket_is_preserved() {
+        // The sweep's merge-scan requires retain() to keep cube order.
+        let schedule = Schedule::new(12, 3);
+        let mut set = ActiveSet::new(&schedule);
+        {
+            let b = unsafe { set.bucket_mut(0) };
+            for k in 2..8 {
+                b.push(entry(k, if k % 2 == 0 { 0.4 } else { 0.0 }, 5));
+            }
+        }
+        forget_inactive(&mut set, 1);
+        let keys: Vec<u64> = set.iter().map(|e| e.key).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted);
+        assert_eq!(keys.len(), 3);
+    }
+}

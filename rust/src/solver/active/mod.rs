@@ -1,0 +1,511 @@
+//! `ActiveDykstra` — the project-and-forget active-set driver.
+//!
+//! After the first few passes of Dykstra's method only a small fraction
+//! of the `3·C(n,3)` metric constraints are violated or carry nonzero
+//! duals (the sparsity §III-D exploits for storage). This subsystem
+//! exploits it for *work*: cheap passes visit only the active set
+//! ([`set::ActiveSet`]), a full discovery sweep ([`sweep`]) runs every
+//! `sweep_every` passes to catch constraints that became violated while
+//! unwatched, and the retention policy ([`forget`]) drops constraints
+//! whose duals stayed zero. Constraints holding a nonzero dual are never
+//! dropped, so no Dykstra correction memory is lost; sweeps make the
+//! visit order quasi-cyclic, which preserves convergence to the same
+//! unique projection as the full solver (Sonthalia & Gilbert 2020).
+//!
+//! Both phases reuse the wave [`Schedule`] and its tile-to-worker
+//! [`Assignment`], so every visit — sparse or dense — stays lock-free and
+//! conflict-free, and results are bitwise independent of the worker
+//! count, exactly like the full parallel solver. With
+//! `sweep_every = 1` and convergence checks off every pass is a sweep
+//! and the driver reproduces the full solver bitwise (tested).
+//!
+//! Termination trusts the last sweep: cheap passes cannot see constraints
+//! outside the active set, so convergence is only ever screened at sweep
+//! passes, using the sweep's measured max violation together with exact
+//! pair/box residuals
+//! ([`termination::compute_residuals_trusting_sweep`]). A stop is
+//! declared only after one exact scan confirms the screen, and final
+//! residuals are always recomputed exactly — the tolerance contract of
+//! the returned solution matches the full solver's.
+
+pub mod forget;
+pub mod set;
+pub mod sweep;
+
+use self::set::{decode_key, ActiveSet};
+use self::sweep::{discovery_sweep, SweepReport};
+use super::dykstra_parallel::run_pair_phase;
+use super::nearness::{NearnessOpts, NearnessSolution};
+use super::projection::visit_triplet;
+use super::schedule::{Assignment, Schedule};
+use super::termination::{compute_residuals, compute_residuals_trusting_sweep};
+use super::{CcState, Residuals, Solution, SolveOpts, Strategy};
+use crate::instance::metric_nearness::MetricNearnessInstance;
+use crate::instance::CcLpInstance;
+use crate::matrix::PackedSym;
+use crate::util::parallel::scoped_workers;
+use crate::util::shared::{PerWorker, SharedMut};
+
+/// Unpacked parameters of [`Strategy::Active`].
+#[derive(Clone, Copy, Debug)]
+pub struct ActiveParams {
+    /// Full discovery sweep every this many passes (clamped to >= 1).
+    pub sweep_every: usize,
+    /// Forget after this many consecutive zero-dual active passes.
+    pub forget_after: usize,
+}
+
+impl ActiveParams {
+    /// Extract from a [`Strategy`]; `None` for [`Strategy::Full`].
+    pub fn from_strategy(s: Strategy) -> Option<ActiveParams> {
+        match s {
+            Strategy::Active { sweep_every, forget_after } => {
+                Some(ActiveParams { sweep_every: sweep_every.max(1), forget_after })
+            }
+            Strategy::Full => None,
+        }
+    }
+}
+
+/// One cheap pass over only the active set. Tile ownership is identical
+/// to the full metric phase, so concurrent visits stay conflict-free;
+/// within a tile, entries sit (and are visited) in cube order. Returns
+/// the number of triplets visited.
+pub(crate) fn active_pass(
+    x: &SharedMut<'_, f64>,
+    winv: &[f64],
+    col_starts: &[usize],
+    schedule: &Schedule,
+    set: &ActiveSet,
+    p: usize,
+    assignment: Assignment,
+) -> u64 {
+    let counts = PerWorker::new(vec![0u64; p]);
+    scoped_workers(p, |tid, barrier| {
+        let mut visited = 0u64;
+        for (wave_idx, wave) in schedule.waves().iter().enumerate() {
+            let mut r = assignment.first_tile(tid, wave_idx, p);
+            while r < wave.len() {
+                let flat = set.flat_index(wave_idx, r);
+                // SAFETY: this worker owns tile `r` of the current wave,
+                // hence bucket `flat`, until the wave barrier.
+                let bucket = unsafe { set.bucket_mut(flat) };
+                for e in bucket.iter_mut() {
+                    let (i, j, k) = decode_key(e.key);
+                    let ci = col_starts[i];
+                    let pij = ci + (j - i - 1);
+                    let pik = ci + (k - i - 1);
+                    let pjk = col_starts[j] + (k - j - 1);
+                    // SAFETY: wave conflict-freeness — same contract as
+                    // the full hot loop.
+                    let th = unsafe { visit_triplet(x, winv, pij, pik, pjk, e.y) };
+                    e.y = th;
+                    if th == [0.0; 3] {
+                        e.zero_passes += 1;
+                    } else {
+                        e.zero_passes = 0;
+                    }
+                }
+                visited += bucket.len() as u64;
+                r += p;
+            }
+            barrier.wait();
+        }
+        // SAFETY: slot `tid` belongs to this worker.
+        unsafe { *counts.get_mut(tid) += visited };
+    });
+    counts.into_inner().into_iter().sum()
+}
+
+/// Solve the CC-LP instance with the active-set strategy.
+///
+/// Called by [`super::dykstra_parallel::solve`] when
+/// `opts.strategy` is [`Strategy::Active`]; panics on [`Strategy::Full`].
+pub fn solve_cc(inst: &CcLpInstance, opts: &SolveOpts) -> Solution {
+    let params = ActiveParams::from_strategy(opts.strategy)
+        .expect("active::solve_cc requires SolveOpts::strategy = Strategy::Active");
+    let schedule = Schedule::new(inst.n, opts.tile);
+    let p = opts.threads.max(1);
+    let mut state = CcState::new(inst, opts.gamma, opts.include_box);
+    let mut active = ActiveSet::new(&schedule);
+    let mut triplet_visits = 0u64;
+    let mut last_sweep: Option<SweepReport> = None;
+    let mut pass_times = Vec::new();
+    let mut passes_done = 0;
+    // Next passes_done at which a convergence check becomes due, honoring
+    // the configured cadence even though checks can only fire at sweeps.
+    let mut next_check = opts.check_every;
+    // Exact residuals of the confirming scan on early stop (state does
+    // not change between that scan and the end of the loop).
+    let mut exact_at_break: Option<Residuals> = None;
+
+    for pass in 0..opts.max_passes {
+        let t0 = std::time::Instant::now();
+        let is_sweep = pass % params.sweep_every == 0; // pass 0 discovers
+        {
+            let x = SharedMut::new(state.x.as_mut_slice());
+            if is_sweep {
+                let report = discovery_sweep(
+                    &x,
+                    &state.winv,
+                    &state.col_starts,
+                    &schedule,
+                    &active,
+                    p,
+                    opts.assignment,
+                );
+                triplet_visits += report.triplet_visits;
+                last_sweep = Some(report);
+            } else {
+                triplet_visits += active_pass(
+                    &x,
+                    &state.winv,
+                    &state.col_starts,
+                    &schedule,
+                    &active,
+                    p,
+                    opts.assignment,
+                );
+            }
+        }
+        if !is_sweep {
+            forget::forget_inactive(&mut active, params.forget_after);
+        }
+        run_pair_phase(&mut state, p);
+        passes_done = pass + 1;
+        if opts.track_pass_times {
+            pass_times.push(t0.elapsed().as_secs_f64());
+        }
+        // Convergence is only decided at sweep passes, where the last
+        // trusted measurement of every metric row is at most one pair
+        // phase old. The trusted residuals are a cheap *screen*: when
+        // they pass, one exact scan confirms before stopping (the pair
+        // phase that ran after the sweep can re-break metric rows the
+        // sweep measured feasible), so the returned tolerance guarantee
+        // is exact. Pass 0 is excluded: its sweep measured the *initial*
+        // point x = 0, which is metric-feasible by construction.
+        if opts.check_every > 0 && is_sweep && pass > 0 && passes_done >= next_check {
+            while next_check <= passes_done {
+                next_check += opts.check_every;
+            }
+            let report = last_sweep.expect("sweep pass recorded a report");
+            let r = compute_residuals_trusting_sweep(&state, p, report.max_violation);
+            if r.max_violation <= opts.tol_violation && r.rel_gap.abs() <= opts.tol_gap {
+                let exact = compute_residuals(&state, p);
+                if exact.max_violation <= opts.tol_violation
+                    && exact.rel_gap.abs() <= opts.tol_gap
+                {
+                    exact_at_break = Some(exact);
+                    break;
+                }
+            }
+        }
+    }
+
+    // Final residuals are always exact (the O(n^3) scan), so active and
+    // full solutions are directly comparable.
+    let mut residuals = exact_at_break.unwrap_or_else(|| compute_residuals(&state, p));
+    let active_now = active.len();
+    residuals.metric_visits = triplet_visits * 3;
+    residuals.active_triplets = active_now;
+    Solution {
+        x: state.x_matrix(),
+        f: Some(state.f_matrix()),
+        passes: passes_done,
+        residuals,
+        pass_times,
+        nnz_duals: active.nnz_duals(),
+        metric_visits: triplet_visits * 3,
+        active_triplets: active_now,
+    }
+}
+
+/// Solve metric nearness with the active-set strategy.
+///
+/// Called by [`super::nearness::solve`] when `opts.strategy` is
+/// [`Strategy::Active`]; panics on [`Strategy::Full`].
+pub fn solve_nearness(inst: &MetricNearnessInstance, opts: &NearnessOpts) -> NearnessSolution {
+    let params = ActiveParams::from_strategy(opts.strategy)
+        .expect("active::solve_nearness requires NearnessOpts::strategy = Strategy::Active");
+    let n = inst.n;
+    let p = opts.threads.max(1);
+    let schedule = Schedule::new(n, opts.tile);
+    let mut x: Vec<f64> = inst.d.as_slice().to_vec();
+    let winv: Vec<f64> = inst.w.as_slice().iter().map(|&v| 1.0 / v).collect();
+    let col_starts = inst.d.col_starts().to_vec();
+    let mut active = ActiveSet::new(&schedule);
+    let mut triplet_visits = 0u64;
+    let mut last_sweep: Option<SweepReport> = None;
+    let mut passes_done = 0;
+    let mut next_check = opts.check_every;
+    // Exact violation of the confirming scan on early stop (x does not
+    // change between that scan and the end of the loop).
+    let mut exact_at_break: Option<f64> = None;
+
+    for pass in 0..opts.max_passes {
+        let is_sweep = pass % params.sweep_every == 0;
+        {
+            let xs = SharedMut::new(x.as_mut_slice());
+            if is_sweep {
+                let report = discovery_sweep(
+                    &xs,
+                    &winv,
+                    &col_starts,
+                    &schedule,
+                    &active,
+                    p,
+                    opts.assignment,
+                );
+                triplet_visits += report.triplet_visits;
+                last_sweep = Some(report);
+            } else {
+                triplet_visits +=
+                    active_pass(&xs, &winv, &col_starts, &schedule, &active, p, opts.assignment);
+            }
+        }
+        if !is_sweep {
+            forget::forget_inactive(&mut active, params.forget_after);
+        }
+        passes_done = pass + 1;
+        // The sweep's mid-pass measurement is a cheap screen (later
+        // projections in the same sweep can re-break rows measured
+        // feasible earlier); when it passes, one exact scan confirms
+        // before stopping, making the tolerance guarantee exact.
+        if opts.check_every > 0 && is_sweep && passes_done >= next_check {
+            while next_check <= passes_done {
+                next_check += opts.check_every;
+            }
+            if last_sweep.is_some_and(|s| s.max_violation <= opts.tol_violation) {
+                let v = super::nearness::violation(&x, &col_starts, n, p);
+                if v <= opts.tol_violation {
+                    exact_at_break = Some(v);
+                    break;
+                }
+            }
+        }
+    }
+
+    let max_violation = exact_at_break
+        .unwrap_or_else(|| super::nearness::violation(&x, &col_starts, n, p));
+    let mut xm = PackedSym::zeros(n);
+    xm.as_mut_slice().copy_from_slice(&x);
+    NearnessSolution {
+        objective: inst.objective(&xm),
+        x: xm,
+        max_violation,
+        passes: passes_done,
+        metric_visits: triplet_visits * 3,
+        active_triplets: active.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::PackedSym;
+    use crate::prop_assert;
+    use crate::solver::{dykstra_parallel, nearness};
+    use crate::util::proptest::check;
+
+    fn active(sweep_every: usize, forget_after: usize) -> Strategy {
+        Strategy::Active { sweep_every, forget_after }
+    }
+
+    fn max_diff(a: &PackedSym, b: &PackedSym) -> f64 {
+        let mut worst = 0.0f64;
+        for (i, j, v) in a.iter_pairs() {
+            worst = worst.max((v - b.get(i, j)).abs());
+        }
+        worst
+    }
+
+    /// Run full and active at growing pass budgets until the iterates
+    /// agree coordinate-wise within `tol`; both converge geometrically to
+    /// the same unique projection, so this terminates. Also checks the
+    /// active run did measurably less metric work.
+    fn cc_agrees(
+        inst: &CcLpInstance,
+        strategy: Strategy,
+        threads: usize,
+        tol: f64,
+    ) -> Result<(), String> {
+        let mut passes = 200usize;
+        let mut last = f64::INFINITY;
+        while passes <= 6400 {
+            let base = SolveOpts {
+                max_passes: passes,
+                threads,
+                tile: 5,
+                check_every: 0,
+                ..Default::default()
+            };
+            let full = dykstra_parallel::solve(inst, &base);
+            let act = dykstra_parallel::solve(inst, &SolveOpts { strategy, ..base });
+            if act.metric_visits >= full.metric_visits {
+                return Err(format!(
+                    "active visited {} >= full {}",
+                    act.metric_visits, full.metric_visits
+                ));
+            }
+            last = max_diff(&full.x, &act.x);
+            if last <= tol {
+                return Ok(());
+            }
+            passes *= 2;
+        }
+        Err(format!("full vs active still differ by {last} after 6400 passes"))
+    }
+
+    fn nearness_agrees(
+        inst: &MetricNearnessInstance,
+        strategy: Strategy,
+        threads: usize,
+        tol: f64,
+    ) -> Result<(), String> {
+        let mut passes = 200usize;
+        let mut last = f64::INFINITY;
+        while passes <= 6400 {
+            let base = NearnessOpts {
+                max_passes: passes,
+                threads,
+                tile: 6,
+                check_every: 0,
+                ..Default::default()
+            };
+            let full = nearness::solve(inst, &base);
+            let act = nearness::solve(inst, &NearnessOpts { strategy, ..base });
+            if act.metric_visits >= full.metric_visits {
+                return Err(format!(
+                    "active visited {} >= full {}",
+                    act.metric_visits, full.metric_visits
+                ));
+            }
+            last = max_diff(&full.x, &act.x);
+            if last <= tol {
+                return Ok(());
+            }
+            passes *= 2;
+        }
+        Err(format!("full vs active still differ by {last} after 6400 passes"))
+    }
+
+    #[test]
+    fn sweep_every_one_is_bitwise_the_full_solver() {
+        let inst = CcLpInstance::random(15, 0.5, 0.8, 1.6, 3);
+        for p in [1usize, 4] {
+            let base =
+                SolveOpts { max_passes: 7, threads: p, tile: 3, ..Default::default() };
+            let full = dykstra_parallel::solve(&inst, &base);
+            let act = dykstra_parallel::solve(
+                &inst,
+                &SolveOpts { strategy: active(1, 2), ..base },
+            );
+            assert_eq!(full.x, act.x, "p={p}");
+            assert_eq!(full.f, act.f, "p={p}");
+            assert_eq!(full.nnz_duals, act.nnz_duals, "p={p}");
+            assert_eq!(full.metric_visits, act.metric_visits, "p={p}");
+        }
+    }
+
+    #[test]
+    fn nearness_sweep_every_one_is_bitwise_full() {
+        let inst = MetricNearnessInstance::random(14, 2.0, 21);
+        let base = NearnessOpts { max_passes: 6, threads: 2, tile: 3, ..Default::default() };
+        let full = nearness::solve(&inst, &base);
+        let act = nearness::solve(&inst, &NearnessOpts { strategy: active(1, 1), ..base });
+        assert_eq!(full.x, act.x);
+        assert_eq!(full.metric_visits, act.metric_visits);
+    }
+
+    #[test]
+    fn active_is_thread_count_invariant_bitwise() {
+        let inst = CcLpInstance::random(14, 0.5, 0.8, 1.6, 9);
+        let mk = |p| SolveOpts {
+            max_passes: 12,
+            threads: p,
+            tile: 3,
+            strategy: active(4, 1),
+            ..Default::default()
+        };
+        let a = dykstra_parallel::solve(&inst, &mk(1));
+        let b = dykstra_parallel::solve(&inst, &mk(4));
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.f, b.f);
+        assert_eq!(a.metric_visits, b.metric_visits);
+        assert_eq!(a.active_triplets, b.active_triplets);
+        assert_eq!(a.nnz_duals, b.nnz_duals);
+    }
+
+    #[test]
+    fn active_matches_full_cc_within_tolerance_property() {
+        // ISSUE acceptance: ActiveDykstra matches the full parallel
+        // solution within 1e-6 on random CC-LP instances, threads {1, 4}.
+        check("active vs full CC-LP", 0xACC1, 3, |rng, _| {
+            let n = rng.usize_in(6, 21);
+            let inst = CcLpInstance::random(n, 0.5, 0.8, 1.6, rng.next_u64());
+            let strategy = active(rng.usize_in(2, 9), rng.usize_in(0, 4));
+            for threads in [1usize, 4] {
+                if let Err(msg) = cc_agrees(&inst, strategy, threads, 1e-6) {
+                    prop_assert!(false, "n={n} {strategy:?} p={threads}: {msg}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn active_matches_full_nearness_within_tolerance_property() {
+        // Same property on metric nearness, instance sizes up to n = 48.
+        check("active vs full nearness", 0xACC2, 3, |rng, _| {
+            let n = rng.usize_in(8, 49);
+            let inst = MetricNearnessInstance::random(n, 2.0, rng.next_u64());
+            let strategy = active(rng.usize_in(2, 9), rng.usize_in(0, 4));
+            for threads in [1usize, 4] {
+                if let Err(msg) = nearness_agrees(&inst, strategy, threads, 1e-6) {
+                    prop_assert!(false, "n={n} {strategy:?} p={threads}: {msg}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn active_set_shrinks_as_the_solve_converges() {
+        let inst = CcLpInstance::random(20, 0.5, 0.8, 1.6, 41);
+        let opts = SolveOpts {
+            max_passes: 800,
+            threads: 2,
+            tile: 4,
+            strategy: active(6, 2),
+            ..Default::default()
+        };
+        let sol = dykstra_parallel::solve(&inst, &opts);
+        let total = crate::solver::schedule::n_triplets(20) as usize;
+        assert!(
+            sol.active_triplets < total,
+            "active set ({}) should be a strict subset of {total}",
+            sol.active_triplets
+        );
+        assert!(sol.metric_visits < 800 * total as u64 * 3, "must beat the full-visit count");
+        assert!(sol.residuals.max_violation < 1e-2, "still must converge");
+    }
+
+    #[test]
+    fn early_stop_via_trusted_sweep() {
+        let inst = MetricNearnessInstance::random(16, 2.0, 77);
+        let opts = NearnessOpts {
+            max_passes: 5_000,
+            check_every: 1,
+            tol_violation: 1e-6,
+            threads: 2,
+            tile: 4,
+            strategy: active(5, 2),
+            ..Default::default()
+        };
+        let sol = nearness::solve(&inst, &opts);
+        assert!(sol.passes < 5_000, "expected early stop, ran {}", sol.passes);
+        // A stop requires an exact confirmation scan, so the reported
+        // final violation honors the tolerance exactly.
+        assert!(sol.max_violation <= 1e-6, "violation {}", sol.max_violation);
+    }
+}

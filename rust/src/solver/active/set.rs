@@ -1,0 +1,194 @@
+//! The active-constraint list: compact `u64` triplet keys plus their
+//! Dykstra duals, bucketed by schedule tile.
+//!
+//! Storing the duals *inside* the active entries (instead of the
+//! per-worker merge-scan arrays of [`crate::solver::duals`]) is what lets
+//! active passes visit an arbitrary sparse subset: there is no cross-pass
+//! visit-order contract to honor, only the per-tile cube order that keeps
+//! discovery sweeps mergeable. Bucketing by tile preserves the wave
+//! schedule's ownership structure, so active passes and sweeps inherit
+//! its conflict-freeness unchanged: the worker that owns a tile owns its
+//! bucket for the duration of the wave.
+
+use crate::solver::schedule::Schedule;
+use std::cell::UnsafeCell;
+
+/// Bits per index in a triplet key — the layout of
+/// [`crate::solver::duals::metric_key`] with the 2 type bits left zero,
+/// so keys are directly comparable across the two stores.
+const INDEX_MASK: u64 = (1 << 20) - 1;
+
+/// Encode triplet `(i, j, k)`, `i < j < k`, as a compact key.
+#[inline(always)]
+pub fn triplet_key(i: usize, j: usize, k: usize) -> u64 {
+    debug_assert!(i < j && j < k);
+    ((i as u64) << 42) | ((j as u64) << 22) | ((k as u64) << 2)
+}
+
+/// Decode a key back to `(i, j, k)`.
+#[inline(always)]
+pub fn decode_key(key: u64) -> (usize, usize, usize) {
+    (
+        ((key >> 42) & INDEX_MASK) as usize,
+        ((key >> 22) & INDEX_MASK) as usize,
+        ((key >> 2) & INDEX_MASK) as usize,
+    )
+}
+
+/// One active triplet: its key, the three scaled Dykstra duals from its
+/// last visit, and how many consecutive active passes those duals have
+/// been all-zero (the forget counter).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ActiveTriplet {
+    pub key: u64,
+    pub y: [f64; 3],
+    pub zero_passes: u32,
+}
+
+/// Active triplets bucketed per schedule tile, in cube order within each
+/// bucket (the order [`crate::solver::tiling::for_each_triplet`] visits a
+/// tile), flat-indexed wave by wave.
+///
+/// Parallel phases hand each worker exclusive access to the buckets of
+/// the tiles it owns in the current wave via [`ActiveSet::bucket_mut`];
+/// all bookkeeping between phases goes through `&mut self` methods.
+pub struct ActiveSet {
+    buckets: Vec<UnsafeCell<Vec<ActiveTriplet>>>,
+    /// `wave_offsets[w]` = flat index of wave `w`'s first tile
+    /// (length = number of waves + 1).
+    wave_offsets: Vec<usize>,
+}
+
+// SAFETY: buckets are only mutated through `bucket_mut`, whose contract
+// (one owner per tile per wave, barriers between waves) is exactly the
+// wave schedule's conflict-freeness argument — same as `SharedMut`.
+unsafe impl Sync for ActiveSet {}
+
+impl ActiveSet {
+    /// An empty active set shaped after `schedule`'s waves and tiles.
+    pub fn new(schedule: &Schedule) -> ActiveSet {
+        let mut wave_offsets = Vec::with_capacity(schedule.waves().len() + 1);
+        let mut flat = 0usize;
+        wave_offsets.push(0);
+        for wave in schedule.waves() {
+            flat += wave.len();
+            wave_offsets.push(flat);
+        }
+        ActiveSet {
+            buckets: (0..flat).map(|_| UnsafeCell::new(Vec::new())).collect(),
+            wave_offsets,
+        }
+    }
+
+    /// Flat bucket index of tile `r` of wave `wave`.
+    #[inline(always)]
+    pub fn flat_index(&self, wave: usize, r: usize) -> usize {
+        debug_assert!(self.wave_offsets[wave] + r < self.wave_offsets[wave + 1]);
+        self.wave_offsets[wave] + r
+    }
+
+    /// Total number of tile buckets.
+    pub fn n_tiles(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Mutable access to one tile's bucket during a parallel phase.
+    ///
+    /// # Safety
+    /// Only the worker owning tile `flat` in the current wave may call
+    /// this, and the reference must not outlive that ownership (wave
+    /// barriers delimit it) — the same discipline as
+    /// [`crate::util::shared::PerWorker::get_mut`].
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn bucket_mut(&self, flat: usize) -> &mut Vec<ActiveTriplet> {
+        &mut *self.buckets[flat].get()
+    }
+
+    /// Exclusive iteration over all buckets (between phases).
+    pub fn buckets_mut(&mut self) -> impl Iterator<Item = &mut Vec<ActiveTriplet>> {
+        self.buckets.iter_mut().map(|c| c.get_mut())
+    }
+
+    /// Iterate over all active triplets (between phases).
+    pub fn iter(&mut self) -> impl Iterator<Item = &ActiveTriplet> {
+        self.buckets.iter_mut().flat_map(|c| c.get_mut().iter())
+    }
+
+    /// Number of active triplets.
+    pub fn len(&mut self) -> usize {
+        self.buckets.iter_mut().map(|c| c.get_mut().len()).sum()
+    }
+
+    /// True iff no triplet is active.
+    pub fn is_empty(&mut self) -> bool {
+        self.len() == 0
+    }
+
+    /// Count of nonzero dual *lanes* across the set — directly comparable
+    /// to the sum of [`crate::solver::duals::DualStore::nnz`] over workers.
+    pub fn nnz_duals(&mut self) -> usize {
+        self.iter().map(|e| e.y.iter().filter(|&&v| v != 0.0).count()).sum()
+    }
+
+    /// Drop every entry (restart).
+    pub fn clear(&mut self) {
+        for bucket in self.buckets_mut() {
+            bucket.clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::duals::metric_key;
+
+    #[test]
+    fn key_roundtrip_and_matches_dual_key_base() {
+        for &(i, j, k) in &[(0usize, 1usize, 2usize), (3, 7, 19), (100, 5000, 900_000)] {
+            let key = triplet_key(i, j, k);
+            assert_eq!(decode_key(key), (i, j, k));
+            if k < (1 << 20) {
+                assert_eq!(key, metric_key(i, j, k, 0));
+                assert_eq!(key & 3, 0, "type bits must be clear");
+            }
+        }
+    }
+
+    #[test]
+    fn buckets_shaped_after_schedule() {
+        let schedule = Schedule::new(20, 3);
+        let mut set = ActiveSet::new(&schedule);
+        assert_eq!(set.n_tiles(), schedule.n_tiles());
+        assert!(set.is_empty());
+        // flat_index enumerates tiles wave-major without gaps or overlaps
+        let mut seen = vec![false; set.n_tiles()];
+        for (w, wave) in schedule.waves().iter().enumerate() {
+            for r in 0..wave.len() {
+                let f = set.flat_index(w, r);
+                assert!(!seen[f], "flat index {f} reused");
+                seen[f] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn len_and_nnz_track_contents() {
+        let schedule = Schedule::new(10, 2);
+        let mut set = ActiveSet::new(&schedule);
+        {
+            // Exclusive context: stuff two buckets by hand.
+            let b0 = unsafe { set.bucket_mut(0) };
+            b0.push(ActiveTriplet { key: triplet_key(0, 1, 9), y: [0.5, 0.0, 0.0], zero_passes: 0 });
+            b0.push(ActiveTriplet { key: triplet_key(0, 2, 9), y: [0.0, 0.0, 0.0], zero_passes: 2 });
+            let b1 = unsafe { set.bucket_mut(1) };
+            b1.push(ActiveTriplet { key: triplet_key(1, 2, 8), y: [0.1, 0.2, 0.0], zero_passes: 0 });
+        }
+        assert_eq!(set.len(), 3);
+        assert_eq!(set.nnz_duals(), 3); // 1 + 0 + 2 nonzero lanes
+        set.clear();
+        assert!(set.is_empty());
+        assert_eq!(set.nnz_duals(), 0);
+    }
+}

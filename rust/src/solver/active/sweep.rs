@@ -1,0 +1,209 @@
+//! Full-sweep violation discovery.
+//!
+//! A discovery sweep is a normal wave-parallel Dykstra pass over **all**
+//! `C(n,3)` triplets that additionally (a) measures the largest metric
+//! violation it encounters (each triplet inspected just before its visit
+//! — the sweep's Gauss–Seidel residual, which [`crate::solver::termination`]
+//! trusts for early stopping) and (b) rebuilds the active set to exactly
+//! the triplets that finish the sweep holding a nonzero dual. A violated
+//! constraint gets projected during the sweep, so it ends with a nonzero
+//! dual and is discovered; a satisfied zero-dual constraint is a no-op
+//! visit and is dropped. Because only zero-dual triplets are ever outside
+//! the set, fetching "no entry" as `y = [0; 3]` is exact — discovery is
+//! just the full pass with a different dual store.
+//!
+//! The sweep reuses the wave [`Schedule`] directly, so discovery itself
+//! is conflict-free and parallel: same tile-to-worker assignment, same
+//! cube order inside each tile, barriers between waves.
+
+use super::set::{triplet_key, ActiveSet, ActiveTriplet};
+use crate::solver::projection::visit_triplet;
+use crate::solver::schedule::{Assignment, Schedule};
+use crate::solver::tiling::for_each_triplet;
+use crate::util::parallel::scoped_workers;
+use crate::util::shared::{PerWorker, SharedMut};
+
+/// What one discovery sweep observed.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepReport {
+    /// Max violation over all metric rows, each measured at the moment
+    /// just before its triplet's visit.
+    pub max_violation: f64,
+    /// Triplets visited (= C(n,3)).
+    pub triplet_visits: u64,
+}
+
+/// Run one discovery sweep over every triplet; rebuilds `set` in place.
+///
+/// `x` must view the packed distance variables; the caller guarantees no
+/// other access to them for the duration (same contract as the full
+/// metric phase).
+pub(crate) fn discovery_sweep(
+    x: &SharedMut<'_, f64>,
+    winv: &[f64],
+    col_starts: &[usize],
+    schedule: &Schedule,
+    set: &ActiveSet,
+    p: usize,
+    assignment: Assignment,
+) -> SweepReport {
+    let b = schedule.tile_size();
+    let maxima = PerWorker::new(vec![f64::NEG_INFINITY; p]);
+    scoped_workers(p, |tid, barrier| {
+        let mut local_max = f64::NEG_INFINITY;
+        for (wave_idx, wave) in schedule.waves().iter().enumerate() {
+            let mut r = assignment.first_tile(tid, wave_idx, p);
+            while r < wave.len() {
+                let flat = set.flat_index(wave_idx, r);
+                // SAFETY: this worker owns tile `r` of the current wave,
+                // hence bucket `flat`, until the wave barrier.
+                let bucket = unsafe { set.bucket_mut(flat) };
+                let old = std::mem::take(bucket);
+                let mut cursor = 0usize;
+                for_each_triplet(&wave[r], b, |i, j, k| {
+                    let key = triplet_key(i, j, k);
+                    // Merge-scan: `old` is in cube order from the last
+                    // rebuild (forgetting preserves order), the exact
+                    // enumeration order here — O(1) per triplet.
+                    let y = if cursor < old.len() && old[cursor].key == key {
+                        cursor += 1;
+                        old[cursor - 1].y
+                    } else {
+                        [0.0; 3]
+                    };
+                    let ci = col_starts[i];
+                    let pij = ci + (j - i - 1);
+                    let pik = ci + (k - i - 1);
+                    let pjk = col_starts[j] + (k - j - 1);
+                    // SAFETY: wave conflict-freeness gives exclusive
+                    // access to the triplet's three variables.
+                    unsafe {
+                        let (x0, x1, x2) = (x.get(pij), x.get(pik), x.get(pjk));
+                        let v = (x0 - x1 - x2).max(x1 - x0 - x2).max(x2 - x0 - x1);
+                        if v > local_max {
+                            local_max = v;
+                        }
+                        let th = visit_triplet(x, winv, pij, pik, pjk, y);
+                        if th[0] != 0.0 || th[1] != 0.0 || th[2] != 0.0 {
+                            bucket.push(ActiveTriplet { key, y: th, zero_passes: 0 });
+                        }
+                    }
+                });
+                debug_assert_eq!(cursor, old.len(), "stale active entries not consumed");
+                r += p;
+            }
+            barrier.wait();
+        }
+        // SAFETY: slot `tid` belongs to this worker.
+        unsafe { *maxima.get_mut(tid) = local_max };
+    });
+    let max_violation =
+        maxima.into_inner().into_iter().fold(f64::NEG_INFINITY, f64::max).max(0.0);
+    SweepReport { max_violation, triplet_visits: schedule.total_triplets() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::CcLpInstance;
+    use crate::solver::duals::DualStore;
+    use crate::solver::dykstra_parallel::run_metric_phase;
+    use crate::solver::CcState;
+
+    /// A sweep is bitwise a full metric pass: same x afterwards, and the
+    /// rebuilt active set holds exactly the constraints a DualStore-based
+    /// pass leaves with nonzero duals.
+    #[test]
+    fn sweep_is_bitwise_a_full_metric_pass() {
+        let inst = CcLpInstance::random(18, 0.5, 0.7, 1.8, 11);
+        let schedule = Schedule::new(18, 4);
+        for p in [1usize, 3] {
+            let mut sa = CcState::new(&inst, 5.0, true);
+            let mut sb = CcState::new(&inst, 5.0, true);
+            // Give the metric phase something to project: pull x toward d.
+            for (xa, (xb, d)) in
+                sa.x.iter_mut().zip(sb.x.iter_mut().zip(inst.d.as_slice()))
+            {
+                *xa = 0.9 * d;
+                *xb = 0.9 * d;
+            }
+            let mut set = ActiveSet::new(&schedule);
+            let stores = PerWorker::new((0..p).map(|_| DualStore::new()).collect());
+            for _pass in 0..3 {
+                {
+                    let xs = SharedMut::new(sa.x.as_mut_slice());
+                    discovery_sweep(
+                        &xs,
+                        &sa.winv,
+                        &sa.col_starts,
+                        &schedule,
+                        &set,
+                        p,
+                        Assignment::RoundRobin,
+                    );
+                }
+                run_metric_phase(&mut sb, &schedule, &stores, p, Assignment::RoundRobin);
+                assert_eq!(sa.x, sb.x, "p={p}");
+            }
+            let mut stores = stores.into_inner();
+            let store_nnz: usize = stores.iter_mut().map(|s| s.nnz()).sum();
+            assert_eq!(set.nnz_duals(), store_nnz, "p={p}");
+        }
+    }
+
+    #[test]
+    fn sweep_reports_initial_violation_and_discovers() {
+        // x = d (0/1 targets): a negative pair inside a positive triangle
+        // violates the metric constraints, so the sweep must observe a
+        // violation of exactly 1 and activate some triplets.
+        let inst = CcLpInstance::unweighted(6, &[(0, 1)]);
+        let mut st = CcState::new(&inst, 5.0, true);
+        st.x.copy_from_slice(inst.d.as_slice());
+        let schedule = Schedule::new(6, 2);
+        let mut set = ActiveSet::new(&schedule);
+        let report = {
+            let xs = SharedMut::new(st.x.as_mut_slice());
+            discovery_sweep(
+                &xs,
+                &st.winv,
+                &st.col_starts,
+                &schedule,
+                &set,
+                1,
+                Assignment::RoundRobin,
+            )
+        };
+        assert_eq!(report.triplet_visits, crate::solver::schedule::n_triplets(6));
+        assert!((report.max_violation - 1.0).abs() < 1e-12, "{}", report.max_violation);
+        assert!(!set.is_empty(), "violated constraints must be discovered");
+        // every activated entry carries a nonzero dual
+        for e in set.iter() {
+            assert!(e.y.iter().any(|&v| v != 0.0));
+            assert_eq!(e.zero_passes, 0);
+        }
+    }
+
+    #[test]
+    fn sweep_on_feasible_point_keeps_set_empty() {
+        // x = 0 satisfies every metric row with zero duals -> no entries.
+        let inst = CcLpInstance::random(9, 0.5, 0.8, 1.6, 5);
+        let mut st = CcState::new(&inst, 5.0, true);
+        let schedule = Schedule::new(9, 3);
+        let mut set = ActiveSet::new(&schedule);
+        let report = {
+            let xs = SharedMut::new(st.x.as_mut_slice());
+            discovery_sweep(
+                &xs,
+                &st.winv,
+                &st.col_starts,
+                &schedule,
+                &set,
+                2,
+                Assignment::RoundRobin,
+            )
+        };
+        assert_eq!(report.max_violation, 0.0);
+        assert!(set.is_empty());
+        assert!(st.x.iter().all(|&v| v == 0.0), "feasible point must not move");
+    }
+}

@@ -23,25 +23,38 @@ use crate::instance::CcLpInstance;
 use crate::util::parallel::{chunk_range, scoped_workers};
 use crate::util::shared::{PerWorker, SharedMut};
 
-/// Solve the CC-LP instance with the parallel projection method.
+/// Solve the CC-LP instance with the parallel projection method,
+/// dispatching on [`super::Strategy`]: full sweeps run here, the active
+/// set runs in [`super::active`].
 pub fn solve(inst: &CcLpInstance, opts: &SolveOpts) -> Solution {
+    if opts.strategy.is_active() {
+        return super::active::solve_cc(inst, opts);
+    }
     let schedule = Schedule::new(inst.n, opts.tile);
     solve_with_schedule(inst, opts, &schedule)
 }
 
-/// Solve with a prebuilt schedule (benchmarks reuse schedules across runs).
+/// Solve with a prebuilt schedule (benchmarks reuse schedules across
+/// runs). Full strategy only; [`solve`] handles strategy dispatch.
 pub fn solve_with_schedule(
     inst: &CcLpInstance,
     opts: &SolveOpts,
     schedule: &Schedule,
 ) -> Solution {
     assert_eq!(schedule.n(), inst.n, "schedule built for wrong n");
+    assert!(
+        !opts.strategy.is_active(),
+        "solve_with_schedule runs the full strategy only; use solve() for Strategy::Active"
+    );
     let p = opts.threads.max(1);
+    let triplets_per_pass = schedule.total_triplets();
     let mut state = CcState::new(inst, opts.gamma, opts.include_box);
     let stores = PerWorker::new((0..p).map(|_| DualStore::new()).collect());
     let mut pass_times = Vec::new();
     let mut residuals = Residuals::default();
     let mut passes_done = 0;
+    // passes_done at which `residuals` was measured (MAX = never).
+    let mut measured_at = usize::MAX;
 
     for pass in 0..opts.max_passes {
         let t0 = std::time::Instant::now();
@@ -53,6 +66,8 @@ pub fn solve_with_schedule(
         }
         if opts.check_every > 0 && passes_done % opts.check_every == 0 {
             residuals = compute_residuals(&state, p);
+            residuals.stamp_full_work(passes_done, triplets_per_pass);
+            measured_at = passes_done;
             if residuals.max_violation <= opts.tol_violation
                 && residuals.rel_gap.abs() <= opts.tol_gap
             {
@@ -60,8 +75,11 @@ pub fn solve_with_schedule(
             }
         }
     }
-    if opts.check_every == 0 {
+    // Re-measure unless the last checkpoint already measured the final
+    // iterate — reported residuals always describe the returned x.
+    if measured_at != passes_done {
         residuals = compute_residuals(&state, p);
+        residuals.stamp_full_work(passes_done, triplets_per_pass);
     }
     let mut stores = stores.into_inner();
     let nnz = stores.iter_mut().map(|s| s.nnz()).sum();
@@ -72,6 +90,8 @@ pub fn solve_with_schedule(
         residuals,
         pass_times,
         nnz_duals: nnz,
+        metric_visits: passes_done as u64 * triplets_per_pass * 3,
+        active_triplets: triplets_per_pass as usize,
     }
 }
 

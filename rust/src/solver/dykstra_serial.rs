@@ -10,13 +10,22 @@ use super::{CcState, Residuals, Solution, SolveOpts};
 use crate::instance::CcLpInstance;
 use crate::util::shared::SharedMut;
 
-/// Solve the CC-LP instance with serial Dykstra.
+/// Solve the CC-LP instance with serial Dykstra. Full strategy only —
+/// the active set requires the wave schedule, so `Strategy::Active`
+/// callers must use [`super::dykstra_parallel::solve`].
 pub fn solve(inst: &CcLpInstance, opts: &SolveOpts) -> Solution {
+    assert!(
+        !opts.strategy.is_active(),
+        "dykstra_serial runs the full strategy only; use dykstra_parallel::solve for Strategy::Active"
+    );
     let mut state = CcState::new(inst, opts.gamma, opts.include_box);
     let mut store = DualStore::new();
+    let triplets_per_pass = super::schedule::n_triplets(inst.n);
     let mut pass_times = Vec::new();
     let mut residuals = Residuals::default();
     let mut passes_done = 0;
+    // passes_done at which `residuals` was measured (MAX = never).
+    let mut measured_at = usize::MAX;
 
     for pass in 0..opts.max_passes {
         let t0 = std::time::Instant::now();
@@ -27,6 +36,8 @@ pub fn solve(inst: &CcLpInstance, opts: &SolveOpts) -> Solution {
         }
         if opts.check_every > 0 && passes_done % opts.check_every == 0 {
             residuals = compute_residuals(&state, 1);
+            residuals.stamp_full_work(passes_done, triplets_per_pass);
+            measured_at = passes_done;
             if residuals.max_violation <= opts.tol_violation
                 && residuals.rel_gap.abs() <= opts.tol_gap
             {
@@ -34,8 +45,11 @@ pub fn solve(inst: &CcLpInstance, opts: &SolveOpts) -> Solution {
             }
         }
     }
-    if opts.check_every == 0 {
+    // Re-measure unless the last checkpoint already measured the final
+    // iterate — reported residuals always describe the returned x.
+    if measured_at != passes_done {
         residuals = compute_residuals(&state, 1);
+        residuals.stamp_full_work(passes_done, triplets_per_pass);
     }
     let nnz = store.nnz();
     Solution {
@@ -45,6 +59,8 @@ pub fn solve(inst: &CcLpInstance, opts: &SolveOpts) -> Solution {
         residuals,
         pass_times,
         nnz_duals: nnz,
+        metric_visits: passes_done as u64 * triplets_per_pass * 3,
+        active_triplets: triplets_per_pass as usize,
     }
 }
 

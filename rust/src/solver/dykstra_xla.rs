@@ -53,8 +53,13 @@ impl TripletRank {
     }
 }
 
-/// Solve the CC-LP instance through the PJRT engine.
+/// Solve the CC-LP instance through the PJRT engine. Full strategy only —
+/// `Strategy::Active` callers must use [`super::dykstra_parallel::solve`].
 pub fn solve(inst: &CcLpInstance, opts: &SolveOpts, engine: &XlaEngine) -> Result<Solution> {
+    anyhow::ensure!(
+        !opts.strategy.is_active(),
+        "the XLA engine runs the full strategy only; use dykstra_parallel::solve for Strategy::Active"
+    );
     let n = inst.n;
     let schedule = BatchSchedule::new(n, crate::runtime::engine::PROJECT_BATCHES[2]);
     let rank = TripletRank::new(n);
@@ -74,6 +79,8 @@ pub fn solve(inst: &CcLpInstance, opts: &SolveOpts, engine: &XlaEngine) -> Resul
     let mut pass_times = Vec::new();
     let mut residuals = Residuals::default();
     let mut passes_done = 0;
+    // passes_done at which `residuals` was measured (MAX = never).
+    let mut measured_at = usize::MAX;
 
     // Reused gather buffers.
     let mut lanes: Vec<(usize, usize, usize, u64)> = Vec::new();
@@ -145,6 +152,8 @@ pub fn solve(inst: &CcLpInstance, opts: &SolveOpts, engine: &XlaEngine) -> Resul
         }
         if opts.check_every > 0 && passes_done % opts.check_every == 0 {
             residuals = compute_residuals(&state, opts.threads.max(1));
+            residuals.stamp_full_work(passes_done, n_triplets as u64);
+            measured_at = passes_done;
             if residuals.max_violation <= opts.tol_violation
                 && residuals.rel_gap.abs() <= opts.tol_gap
             {
@@ -152,8 +161,11 @@ pub fn solve(inst: &CcLpInstance, opts: &SolveOpts, engine: &XlaEngine) -> Resul
             }
         }
     }
-    if opts.check_every == 0 {
+    // Re-measure unless the last checkpoint already measured the final
+    // iterate — reported residuals always describe the returned x.
+    if measured_at != passes_done {
         residuals = compute_residuals(&state, opts.threads.max(1));
+        residuals.stamp_full_work(passes_done, n_triplets as u64);
     }
     let nnz = metric_duals.iter().filter(|&&y| y != 0.0).count();
     Ok(Solution {
@@ -163,6 +175,8 @@ pub fn solve(inst: &CcLpInstance, opts: &SolveOpts, engine: &XlaEngine) -> Resul
         residuals,
         pass_times,
         nnz_duals: nnz,
+        metric_visits: passes_done as u64 * n_triplets as u64 * 3,
+        active_triplets: n_triplets,
     })
 }
 

@@ -5,12 +5,17 @@
 //! * [`dykstra_parallel`] — the paper's contribution: wave-parallel
 //!   execution over the conflict-free [`schedule`], tiled per
 //!   [`tiling`], with per-worker [`duals`] arrays.
+//! * [`active`] — the project-and-forget layer on top of the parallel
+//!   solver: cheap passes visit only an *active set* of metric
+//!   constraints, with periodic full discovery sweeps (Sonthalia &
+//!   Gilbert 2020 style), selected via [`SolveOpts::strategy`].
 //!
-//! Both solvers run the *identical* per-constraint visit
-//! ([`projection`]); they differ only in constraint ordering and
-//! parallelism, exactly as in the paper (§III-A: "this amounts simply to a
-//! re-ordering of constraints").
+//! All solvers run the *identical* per-constraint visit
+//! ([`projection`]); they differ only in constraint ordering, visit
+//! sparsity, and parallelism, exactly as in the paper (§III-A: "this
+//! amounts simply to a re-ordering of constraints").
 
+pub mod active;
 pub mod duals;
 pub mod dykstra_parallel;
 pub mod dykstra_serial;
@@ -25,6 +30,52 @@ pub mod tiling;
 
 use crate::instance::CcLpInstance;
 use crate::matrix::PackedSym;
+
+/// Which metric constraints each pass visits.
+///
+/// `Full` is the paper's method: every pass sweeps all `3·C(n,3)` metric
+/// rows. `Active` is the project-and-forget layer ([`active`]): cheap
+/// passes visit only the active set, a full discovery sweep runs every
+/// `sweep_every` passes, and constraints whose duals stay zero for
+/// `forget_after` consecutive active passes are forgotten until a sweep
+/// rediscovers them. With convergence checks off (`check_every = 0`),
+/// `Active { sweep_every: 1, .. }` degenerates to the full solver
+/// (bitwise — tested); with checks on, the active solver's stopping
+/// decisions trust the sweep's mid-pass measurement instead of the
+/// exact post-pass scan, so stopping passes can differ.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Strategy {
+    /// Visit every metric constraint every pass (the paper's solver).
+    #[default]
+    Full,
+    /// Project-and-forget active set.
+    Active {
+        /// Run a full discovery sweep every this many passes (>= 1).
+        sweep_every: usize,
+        /// Forget a constraint after this many consecutive zero-dual
+        /// active passes (0 = forget the moment its dual hits zero).
+        forget_after: usize,
+    },
+}
+
+impl Strategy {
+    /// True for the active-set strategy.
+    pub fn is_active(self) -> bool {
+        matches!(self, Strategy::Active { .. })
+    }
+
+    /// Parse a CLI name (`full` / `active`), attaching the given active
+    /// parameters when applicable.
+    pub fn parse(s: &str, sweep_every: usize, forget_after: usize) -> Option<Strategy> {
+        match s {
+            "full" => Some(Strategy::Full),
+            "active" | "project-and-forget" => {
+                Some(Strategy::Active { sweep_every, forget_after })
+            }
+            _ => None,
+        }
+    }
+}
 
 /// Solver configuration.
 #[derive(Clone, Copy, Debug)]
@@ -50,6 +101,8 @@ pub struct SolveOpts {
     pub track_pass_times: bool,
     /// Tile-to-worker assignment (paper's Fig 3 round-robin by default).
     pub assignment: schedule::Assignment,
+    /// Metric-constraint visiting strategy (full sweeps vs active set).
+    pub strategy: Strategy,
 }
 
 impl Default for SolveOpts {
@@ -65,6 +118,7 @@ impl Default for SolveOpts {
             include_box: true,
             track_pass_times: false,
             assignment: schedule::Assignment::RoundRobin,
+            strategy: Strategy::Full,
         }
     }
 }
@@ -82,6 +136,21 @@ pub struct Residuals {
     pub rel_gap: f64,
     /// LP objective sum w |x - d| (the quantity the LP relaxation bounds).
     pub lp_objective: f64,
+    /// Cumulative metric-constraint visits when this checkpoint was taken
+    /// (3 per triplet visit) — the work axis for convergence-vs-work plots.
+    pub metric_visits: u64,
+    /// Active metric triplets at the checkpoint (= C(n,3) for the full
+    /// strategy, which visits everything).
+    pub active_triplets: usize,
+}
+
+impl Residuals {
+    /// Stamp the work counters of a full-strategy solver: `passes`
+    /// completed passes at `triplets_per_pass` metric triplets each.
+    pub(crate) fn stamp_full_work(&mut self, passes: usize, triplets_per_pass: u64) {
+        self.metric_visits = passes as u64 * triplets_per_pass * 3;
+        self.active_triplets = triplets_per_pass as usize;
+    }
 }
 
 /// Result of a solve.
@@ -99,6 +168,12 @@ pub struct Solution {
     pub pass_times: Vec<f64>,
     /// Total nonzero metric duals at the end.
     pub nnz_duals: usize,
+    /// Total metric-constraint visits performed over the whole solve
+    /// (3 per triplet visit; the full strategy does `3·C(n,3)` per pass).
+    pub metric_visits: u64,
+    /// Metric triplets in the active set at the end (= C(n,3) for the
+    /// full strategy).
+    pub active_triplets: usize,
 }
 
 /// Mutable state of a CC-LP solve, shared by both solvers.
@@ -199,5 +274,22 @@ mod tests {
         let o = SolveOpts::default();
         assert_eq!(o.max_passes, 20); // Table I runs 20 iterations
         assert_eq!(o.tile, 40); // Table I tile size b = 40
+        assert_eq!(o.strategy, Strategy::Full); // paper's dense sweeps
+    }
+
+    #[test]
+    fn strategy_parses() {
+        assert_eq!(Strategy::parse("full", 8, 3), Some(Strategy::Full));
+        assert_eq!(
+            Strategy::parse("active", 8, 3),
+            Some(Strategy::Active { sweep_every: 8, forget_after: 3 })
+        );
+        assert_eq!(
+            Strategy::parse("project-and-forget", 4, 0),
+            Some(Strategy::Active { sweep_every: 4, forget_after: 0 })
+        );
+        assert_eq!(Strategy::parse("dense", 8, 3), None);
+        assert!(Strategy::Active { sweep_every: 8, forget_after: 3 }.is_active());
+        assert!(!Strategy::Full.is_active());
     }
 }

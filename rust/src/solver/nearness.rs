@@ -10,6 +10,7 @@
 
 use super::duals::DualStore;
 use super::schedule::{Assignment, Schedule};
+use super::Strategy;
 use crate::instance::metric_nearness::MetricNearnessInstance;
 use crate::matrix::PackedSym;
 use crate::util::parallel::{par_reduce_max, scoped_workers};
@@ -24,6 +25,9 @@ pub struct NearnessOpts {
     pub threads: usize,
     pub tile: usize,
     pub assignment: Assignment,
+    /// Metric-constraint visiting strategy (see [`Strategy`]); the active
+    /// variant runs in [`super::active::solve_nearness`].
+    pub strategy: Strategy,
 }
 
 impl Default for NearnessOpts {
@@ -35,6 +39,7 @@ impl Default for NearnessOpts {
             threads: 1,
             tile: 40,
             assignment: Assignment::RoundRobin,
+            strategy: Strategy::Full,
         }
     }
 }
@@ -49,11 +54,18 @@ pub struct NearnessSolution {
     /// Max triangle violation at the end.
     pub max_violation: f64,
     pub passes: usize,
+    /// Total metric-constraint visits (3 per triplet visit).
+    pub metric_visits: u64,
+    /// Active triplets at the end (= C(n,3) for the full strategy).
+    pub active_triplets: usize,
 }
 
 /// Solve with the parallel wave schedule (threads = 1 for serial order use
-/// [`solve_serial_order`]).
+/// [`solve_serial_order`]). Dispatches on [`NearnessOpts::strategy`].
 pub fn solve(inst: &MetricNearnessInstance, opts: &NearnessOpts) -> NearnessSolution {
+    if opts.strategy.is_active() {
+        return super::active::solve_nearness(inst, opts);
+    }
     let n = inst.n;
     let p = opts.threads.max(1);
     let schedule = Schedule::new(n, opts.tile);
@@ -64,6 +76,8 @@ pub fn solve(inst: &MetricNearnessInstance, opts: &NearnessOpts) -> NearnessSolu
 
     let mut passes_done = 0;
     let mut max_violation = f64::INFINITY;
+    // passes_done at which `max_violation` was measured (MAX = never).
+    let mut measured_at = usize::MAX;
     for pass in 0..opts.max_passes {
         {
             let xs = SharedMut::new(x.as_mut_slice());
@@ -91,29 +105,40 @@ pub fn solve(inst: &MetricNearnessInstance, opts: &NearnessOpts) -> NearnessSolu
         passes_done = pass + 1;
         if opts.check_every > 0 && passes_done % opts.check_every == 0 {
             max_violation = violation(&x, &col_starts, n, p);
+            measured_at = passes_done;
             if max_violation <= opts.tol_violation {
                 break;
             }
         }
     }
-    if max_violation.is_infinite() {
+    // Re-measure unless the last checkpoint already measured the final
+    // iterate — the reported violation always describes the returned x.
+    if measured_at != passes_done {
         max_violation = violation(&x, &col_starts, n, p);
     }
     let mut xm = PackedSym::zeros(n);
     xm.as_mut_slice().copy_from_slice(&x);
+    let triplets_per_pass = schedule.total_triplets();
     NearnessSolution {
         objective: inst.objective(&xm),
         x: xm,
         max_violation,
         passes: passes_done,
+        metric_visits: passes_done as u64 * triplets_per_pass * 3,
+        active_triplets: triplets_per_pass as usize,
     }
 }
 
 /// Serial baseline with the standard lexicographic order ([36]/[37]).
+/// Full strategy only — `Strategy::Active` callers must use [`solve`].
 pub fn solve_serial_order(
     inst: &MetricNearnessInstance,
     opts: &NearnessOpts,
 ) -> NearnessSolution {
+    assert!(
+        !opts.strategy.is_active(),
+        "solve_serial_order runs the full strategy only; use nearness::solve for Strategy::Active"
+    );
     let n = inst.n;
     let mut x: Vec<f64> = inst.d.as_slice().to_vec();
     let winv: Vec<f64> = inst.w.as_slice().iter().map(|&v| 1.0 / v).collect();
@@ -121,6 +146,8 @@ pub fn solve_serial_order(
     let mut store = DualStore::new();
     let mut passes_done = 0;
     let mut max_violation = f64::INFINITY;
+    // passes_done at which `max_violation` was measured (MAX = never).
+    let mut measured_at = usize::MAX;
     for pass in 0..opts.max_passes {
         store.begin_pass();
         {
@@ -131,25 +158,33 @@ pub fn solve_serial_order(
         passes_done = pass + 1;
         if opts.check_every > 0 && passes_done % opts.check_every == 0 {
             max_violation = violation(&x, &col_starts, n, 1);
+            measured_at = passes_done;
             if max_violation <= opts.tol_violation {
                 break;
             }
         }
     }
-    if max_violation.is_infinite() {
+    // Re-measure unless the last checkpoint already measured the final
+    // iterate — the reported violation always describes the returned x.
+    if measured_at != passes_done {
         max_violation = violation(&x, &col_starts, n, 1);
     }
     let mut xm = PackedSym::zeros(n);
     xm.as_mut_slice().copy_from_slice(&x);
+    let triplets_per_pass = super::schedule::n_triplets(n);
     NearnessSolution {
         objective: inst.objective(&xm),
         x: xm,
         max_violation,
         passes: passes_done,
+        metric_visits: passes_done as u64 * triplets_per_pass * 3,
+        active_triplets: triplets_per_pass as usize,
     }
 }
 
-fn violation(x: &[f64], col_starts: &[usize], n: usize, p: usize) -> f64 {
+/// Exact max triangle violation over packed `x` (shared with the active
+/// driver's final report).
+pub(crate) fn violation(x: &[f64], col_starts: &[usize], n: usize, p: usize) -> f64 {
     par_reduce_max(p, n, |i| {
         let mut worst = f64::NEG_INFINITY;
         for j in (i + 1)..n {

@@ -6,19 +6,39 @@
 //! `g(y) = -(eps/2) x' W x - eps * b' yhat` with no extra matvec
 //! (DESIGN.md §6). The primal is `P = c'x + (eps/2) x'Wx`. Both are exact
 //! at pass boundaries; `P - g -> 0` as Dykstra converges.
+//!
+//! The metric-violation term is an `O(n^3)` scan. The active strategy
+//! ([`crate::solver::active`]) does not visit every metric row each pass,
+//! so its checkpoints use [`compute_residuals_trusting_sweep`]: identical
+//! objectives and pair/box violations, with the metric violation taken
+//! from the latest discovery sweep — which, by construction, is the last
+//! time every metric row was actually measured.
 
 use super::{CcState, Residuals};
 use crate::util::parallel::{par_reduce_max, par_reduce_sum};
 
-/// Compute all residuals with `p` worker threads.
+/// Compute all residuals with `p` worker threads (exact everywhere).
 pub fn compute_residuals(state: &CcState, p: usize) -> Residuals {
-    let n = state.n;
-    let m = state.x.len();
-    let gamma = state.gamma;
+    finish_residuals(state, p, metric_violation(state, p))
+}
 
-    // --- max constraint violation ---------------------------------------
-    // Metric constraints: for each smallest index i, scan all (j, k).
-    let metric_viol = par_reduce_max(p, n, |i| {
+/// Residuals for the active strategy: every term exact except the metric
+/// violation, which is trusted from the latest discovery sweep instead of
+/// re-running the `O(n^3)` scan. Callers must only pass a violation
+/// measured this pass (the active driver checks at sweep passes only).
+pub fn compute_residuals_trusting_sweep(
+    state: &CcState,
+    p: usize,
+    sweep_metric_violation: f64,
+) -> Residuals {
+    finish_residuals(state, p, sweep_metric_violation)
+}
+
+/// Exact max violation over all `3·C(n,3)` metric rows — the `O(n^3)`
+/// scan: for each smallest index `i`, all `(j, k)`.
+pub fn metric_violation(state: &CcState, p: usize) -> f64 {
+    let n = state.n;
+    par_reduce_max(p, n, |i| {
         let mut worst = f64::NEG_INFINITY;
         let x = state.x.as_slice();
         for j in (i + 1)..n {
@@ -34,7 +54,14 @@ pub fn compute_residuals(state: &CcState, p: usize) -> Residuals {
             }
         }
         worst
-    });
+    })
+}
+
+/// Everything but the metric scan: pair/box violations and objectives.
+fn finish_residuals(state: &CcState, p: usize, metric_viol: f64) -> Residuals {
+    let m = state.x.len();
+    let gamma = state.gamma;
+
     // Pair constraints |x - d| <= f, box x <= 1.
     let pair_viol = par_reduce_max(p, m, |e| {
         let dev = (state.x[e] - state.d[e]).abs() - state.f[e];
@@ -65,7 +92,14 @@ pub fn compute_residuals(state: &CcState, p: usize) -> Residuals {
     let rel_gap = (qp_primal - qp_dual) / qp_primal.abs().max(1.0);
     let lp_objective = par_reduce_sum(p, m, |e| state.w[e] * (state.x[e] - state.d[e]).abs());
 
-    Residuals { max_violation, qp_primal, qp_dual, rel_gap, lp_objective }
+    Residuals {
+        max_violation,
+        qp_primal,
+        qp_dual,
+        rel_gap,
+        lp_objective,
+        ..Residuals::default()
+    }
 }
 
 #[cfg(test)]
@@ -115,6 +149,30 @@ mod tests {
         assert!((a.qp_primal - b.qp_primal).abs() < 1e-9);
         assert!((a.qp_dual - b.qp_dual).abs() < 1e-9);
         assert!((a.lp_objective - b.lp_objective).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trusting_sweep_matches_exact_when_given_exact_violation() {
+        let inst = CcLpInstance::random(12, 0.4, 0.5, 2.0, 13);
+        let mut st = CcState::new(&inst, 5.0, true);
+        let mut rng = crate::util::rng::Rng::new(7);
+        for v in st.x.iter_mut() {
+            *v = rng.f64_in(-0.2, 1.2);
+        }
+        for v in st.f.iter_mut() {
+            *v = rng.f64_in(-0.5, 0.5);
+        }
+        let exact = compute_residuals(&st, 2);
+        let trusted =
+            compute_residuals_trusting_sweep(&st, 2, metric_violation(&st, 2));
+        assert_eq!(exact.max_violation, trusted.max_violation);
+        assert_eq!(exact.qp_primal, trusted.qp_primal);
+        assert_eq!(exact.qp_dual, trusted.qp_dual);
+        assert_eq!(exact.lp_objective, trusted.lp_objective);
+        // A stale (lower) sweep violation must not mask pair violations.
+        let pair_only = compute_residuals_trusting_sweep(&st, 2, 0.0);
+        assert!(pair_only.max_violation <= exact.max_violation);
+        assert!(pair_only.max_violation >= 0.0);
     }
 
     #[test]

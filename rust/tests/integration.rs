@@ -9,7 +9,7 @@ use metric_proj::instance::construction::{build_cc_instance, ConstructionParams}
 use metric_proj::instance::metric_nearness::{max_triangle_violation, MetricNearnessInstance};
 use metric_proj::instance::{cc_objective, CcLpInstance};
 use metric_proj::rounding::{pivot, threshold};
-use metric_proj::solver::{dykstra_parallel, dykstra_serial, nearness, SolveOpts};
+use metric_proj::solver::{dykstra_parallel, dykstra_serial, nearness, SolveOpts, Strategy};
 
 #[test]
 fn full_pipeline_planted_clusters_recovered() {
@@ -78,6 +78,110 @@ fn nearness_pipeline_produces_metric() {
     assert!(sol.max_violation <= 1e-6);
     assert!(max_triangle_violation(&sol.x) <= 1e-6);
     assert!(sol.passes < 2000, "early stop expected, ran {}", sol.passes);
+}
+
+/// ISSUE acceptance: on a random CC-LP instance with n = 200 the active
+/// strategy reaches the same final max_violation / lp_objective (within
+/// 1e-6) as the full solver while performing measurably fewer constraint
+/// visits, all reported through `Solution`.
+#[test]
+fn active_strategy_acceptance_n200() {
+    let inst = CcLpInstance::random(200, 0.5, 0.9, 1.1, 17);
+
+    // (1) sweep_every = 1 degenerates to the full solver, bitwise — the
+    // active machinery's sweeps ARE the paper's passes.
+    let short = SolveOpts { max_passes: 8, threads: 4, tile: 40, ..Default::default() };
+    let full8 = dykstra_parallel::solve(&inst, &short);
+    let act8 = dykstra_parallel::solve(
+        &inst,
+        &SolveOpts {
+            strategy: Strategy::Active { sweep_every: 1, forget_after: 1 },
+            ..short
+        },
+    );
+    assert_eq!(full8.x, act8.x, "sweep_every=1 must be the full solver bitwise");
+    assert_eq!(full8.metric_visits, act8.metric_visits);
+
+    // (2) converged comparison: drive both to the same violation tol,
+    // tightening until the acceptance tolerances hold (both strategies
+    // converge geometrically to the same unique QP projection, so some
+    // level terminates the ladder).
+    let active = Strategy::Active { sweep_every: 5, forget_after: 2 };
+    let mut level = 1e-7f64;
+    loop {
+        let base = SolveOpts {
+            max_passes: 10_000,
+            check_every: 10,
+            tol_violation: level,
+            tol_gap: 1e30, // violation-driven stop
+            threads: 4,
+            tile: 40,
+            ..Default::default()
+        };
+        let full = dykstra_parallel::solve(&inst, &base);
+        let act = dykstra_parallel::solve(&inst, &SolveOpts { strategy: active, ..base });
+        assert!(full.passes < 10_000, "full solver failed to reach tol {level:.0e}");
+        assert!(act.passes < 10_000, "active solver failed to reach tol {level:.0e}");
+        // The work claim holds at every level: fewer total metric visits.
+        assert!(
+            act.metric_visits < full.metric_visits,
+            "active visits {} !< full visits {}",
+            act.metric_visits,
+            full.metric_visits
+        );
+        let dv = (full.residuals.max_violation - act.residuals.max_violation).abs();
+        let lp = full.residuals.lp_objective;
+        let dlp = (lp - act.residuals.lp_objective).abs() / lp.abs().max(1.0);
+        if dv <= 1e-6 && dlp <= 1e-6 {
+            // Both counters are also visible at checkpoint granularity.
+            assert!(act.residuals.metric_visits > 0);
+            assert!(act.active_triplets < full.active_triplets);
+            break;
+        }
+        level /= 10.0;
+        assert!(level >= 1e-12, "ladder exhausted: dv={dv:.3e} dlp={dlp:.3e}");
+    }
+}
+
+#[test]
+fn active_nearness_matches_and_saves_work() {
+    let inst = MetricNearnessInstance::random(40, 2.0, 5);
+    let base = nearness::NearnessOpts {
+        max_passes: 6000,
+        check_every: 5,
+        tol_violation: 1e-9,
+        threads: 2,
+        tile: 8,
+        ..Default::default()
+    };
+    let full = nearness::solve(&inst, &base);
+    let act = nearness::solve(
+        &inst,
+        &nearness::NearnessOpts {
+            strategy: Strategy::Active { sweep_every: 5, forget_after: 2 },
+            ..base
+        },
+    );
+    assert!(full.passes < 6000 && act.passes < 6000, "both must converge");
+    assert!(act.max_violation <= 1e-6, "active violation {}", act.max_violation);
+    assert!(
+        (full.max_violation - act.max_violation).abs() <= 1e-6,
+        "violations differ: {} vs {}",
+        full.max_violation,
+        act.max_violation
+    );
+    assert!(
+        (full.objective - act.objective).abs() <= 1e-6 * full.objective.max(1.0),
+        "objectives differ: {} vs {}",
+        full.objective,
+        act.objective
+    );
+    assert!(
+        act.metric_visits < full.metric_visits,
+        "active visits {} !< full {}",
+        act.metric_visits,
+        full.metric_visits
+    );
 }
 
 #[test]

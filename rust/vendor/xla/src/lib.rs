@@ -1,0 +1,205 @@
+//! Offline compile-only stub of the `xla` crate surface used by
+//! `metric_proj::runtime`.
+//!
+//! The real crate binds PJRT and the XLA compiler, which require native
+//! libraries that cannot be fetched in the offline build environment.
+//! This stub compiles the same API so the CPU solver, CLI, benches,
+//! examples, and tests build and run unchanged; any path that would
+//! actually need a compiled XLA executable fails gracefully at runtime
+//! with a descriptive [`Error`] (callers already treat a missing XLA
+//! backend as "artifacts unavailable" and skip or fall back to the CPU
+//! engine).
+
+use std::fmt;
+
+/// Error type matching the real crate's role: `Display + std::error::Error`,
+/// so it threads through `anyhow` context chains.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} requires the real `xla` PJRT bindings, which are unavailable in this offline build \
+         (vendor/xla is a compile-only stub)"
+    ))
+}
+
+/// PJRT client. The stub reports a 1-device CPU platform so environment
+/// introspection (`metric-proj info`, runtime smoke tests) works; only
+/// compilation/execution is unavailable.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    /// Platform name, e.g. "cpu".
+    pub fn platform_name(&self) -> String {
+        "cpu".to_string()
+    }
+
+    /// Number of addressable devices.
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    /// Compile an HLO computation. Always fails in the stub.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(stub_unavailable("compiling an HLO module"))
+    }
+}
+
+/// Parsed HLO module. Never constructible in the stub (parsing fails),
+/// which keeps every downstream execution path unreachable.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse HLO text from a file. The stub distinguishes a missing file
+    /// (same error callers see from the real crate) from a present one.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        if std::path::Path::new(path).exists() {
+            Err(stub_unavailable("parsing HLO text"))
+        } else {
+            Err(Error(format!("no such file: {path}")))
+        }
+    }
+}
+
+/// An XLA computation wrapping a parsed HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled executable. Unreachable in the stub (compile always fails).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments; returns per-device output buffers.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_unavailable("executing a compiled module"))
+    }
+}
+
+/// A device buffer holding one output.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(stub_unavailable("fetching a device buffer"))
+    }
+}
+
+/// Element types a [`Literal`] can hold. The repo only moves `f32`.
+pub trait NativeType: Copy {
+    fn to_f32(self) -> f32;
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn to_f32(self) -> f32 {
+        self
+    }
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+}
+
+/// Host-side literal: flat data plus dimensions.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(values: &[T]) -> Literal {
+        Literal {
+            data: values.iter().map(|&v| v.to_f32()).collect(),
+            dims: vec![values.len() as i64],
+        }
+    }
+
+    /// Reshape to new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.data.len() {
+            return Err(Error(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Dimensions of the literal.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    /// Split a tuple literal into its elements. Tuple literals only come
+    /// back from executions, which the stub cannot perform.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(stub_unavailable("untupling an execution result"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_cpu() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "cpu");
+        assert_eq!(c.device_count(), 1);
+    }
+
+    #[test]
+    fn missing_file_errors_distinctly() {
+        let e = HloModuleProto::from_text_file("/definitely/not/here.hlo.txt").unwrap_err();
+        assert!(e.to_string().contains("no such file"));
+    }
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.dims(), &[4]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+}
