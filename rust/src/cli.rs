@@ -122,6 +122,20 @@ mod tests {
     }
 
     #[test]
+    fn checkpoint_flags_parse() {
+        // The grammar main.rs uses for the checkpoint subsystem.
+        let a = parse("solve --checkpoint state.ckpt --checkpoint-every 10");
+        assert_eq!(a.get("checkpoint"), Some("state.ckpt"));
+        assert_eq!(a.get_or("checkpoint-every", 0usize).unwrap(), 10);
+        let b = parse("solve --resume state.ckpt");
+        assert_eq!(b.get("resume"), Some("state.ckpt"));
+        assert_eq!(b.get("warm-start"), None);
+        let c = parse("nearness --warm-start old.ckpt --n 200");
+        assert_eq!(c.get("warm-start"), Some("old.ckpt"));
+        assert_eq!(c.get_or("n", 0usize).unwrap(), 200);
+    }
+
+    #[test]
     fn strategy_flags_parse() {
         // The grammar main.rs uses for the active-set strategy.
         let a = parse("solve --strategy active --sweep-every 6 --forget-after 2");

@@ -35,6 +35,17 @@ impl MetricNearnessInstance {
         x.sub(&self.d).weighted_sq_norm(&self.w)
     }
 
+    /// The perturbed re-solve scenario of the warm-start subsystem: same
+    /// dissimilarities, each weight independently rescaled with
+    /// probability `frac` by a factor uniform in `[1 - rel, 1 + rel]`.
+    pub fn perturb_weights(&self, frac: f64, rel: f64, seed: u64) -> MetricNearnessInstance {
+        MetricNearnessInstance {
+            n: self.n,
+            d: self.d.clone(),
+            w: crate::instance::perturbed_weights(&self.w, frac, rel, seed),
+        }
+    }
+
     /// Validate: nonnegative d, positive w.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.d.n() == self.n && self.w.n() == self.n, "dim mismatch");

@@ -86,6 +86,31 @@ impl CcLpInstance {
         }
         CcLpInstance { n, d, w: PackedSym::filled(n, 1.0) }
     }
+
+    /// The perturbed re-solve scenario of the warm-start subsystem: the
+    /// same graph with each weight independently rescaled with
+    /// probability `frac` by a factor uniform in `[1 - rel, 1 + rel]`
+    /// (clamped positive). Targets are unchanged.
+    pub fn perturb_weights(&self, frac: f64, rel: f64, seed: u64) -> CcLpInstance {
+        CcLpInstance {
+            n: self.n,
+            d: self.d.clone(),
+            w: perturbed_weights(&self.w, frac, rel, seed),
+        }
+    }
+}
+
+/// Shared weight-perturbation kernel (see
+/// [`CcLpInstance::perturb_weights`]).
+pub(crate) fn perturbed_weights(w: &PackedSym, frac: f64, rel: f64, seed: u64) -> PackedSym {
+    let mut rng = Rng::new(seed);
+    let mut out = w.clone();
+    for v in out.as_mut_slice().iter_mut() {
+        if rng.bool(frac) {
+            *v *= (1.0 + rng.f64_in(-rel, rel)).max(1e-6);
+        }
+    }
+    out
 }
 
 /// Evaluate the integral correlation-clustering objective (disagreements)
@@ -150,6 +175,29 @@ mod tests {
     fn lp_objective_zero_at_d() {
         let inst = CcLpInstance::random(7, 0.4, 1.0, 2.0, 4);
         assert_eq!(inst.lp_objective(&inst.d), 0.0);
+    }
+
+    #[test]
+    fn perturb_weights_touches_a_fraction_and_stays_valid() {
+        let inst = CcLpInstance::random(20, 0.5, 0.8, 1.6, 4);
+        let pert = inst.perturb_weights(0.1, 0.2, 9);
+        pert.validate().unwrap();
+        assert_eq!(pert.d, inst.d, "targets must be unchanged");
+        let m = inst.w.as_slice().len();
+        let changed = inst
+            .w
+            .as_slice()
+            .iter()
+            .zip(pert.w.as_slice())
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(changed > 0, "something must change");
+        assert!(changed < m / 2, "~10% selected, got {changed}/{m}");
+        for (a, b) in inst.w.as_slice().iter().zip(pert.w.as_slice()) {
+            assert!(b / a >= 0.8 - 1e-12 && b / a <= 1.2 + 1e-12, "{a} -> {b}");
+        }
+        // deterministic in the seed
+        assert_eq!(pert.w, inst.perturb_weights(0.1, 0.2, 9).w);
     }
 
     #[test]

@@ -6,8 +6,13 @@
 //!   solve    --dataset ca-GrQc --n 300 --threads 8 --tile 40 --passes 20
 //!            [--engine cpu|xla] [--assignment rr|rot] [--round] [--serial]
 //!            [--strategy full|active --sweep-every 8 --forget-after 3]
+//!            [--checkpoint state.ckpt --checkpoint-every 10]
+//!            [--resume state.ckpt | --warm-start state.ckpt]
 //!   nearness --n 200 --threads 8 --tile 40 --passes 50
 //!            [--strategy full|active --sweep-every 8 --forget-after 3]
+//!            [--checkpoint ... --checkpoint-every ... --resume ... --warm-start ...]
+//!   warm-ablation --n 120 --perturb-frac 0.1 --perturb-rel 0.2
+//!            [--strategy active] [--tol 1e-6] [--check-every 5]
 //!   generate --dataset power --n 500 --out graph.txt
 //!   table1   [--scale smoke|small|paper] [--passes 20] [--cores 8,16,32]
 //!   fig6     [--dataset ca-HepPh] [--cores 2,4,...] [--scale ...]
@@ -19,12 +24,14 @@ use metric_proj::eval::{self, EvalConfig, Scale};
 use metric_proj::graph::datasets::Dataset;
 use metric_proj::instance::{cc_objective, CcLpInstance};
 use metric_proj::rounding::{pivot, threshold};
+use metric_proj::solver::checkpoint::{self, SolverState, WarmStartOpts};
 use metric_proj::solver::schedule::Assignment;
 use metric_proj::solver::{
     dykstra_parallel, dykstra_serial, dykstra_xla, nearness, SolveOpts, Strategy,
 };
 use metric_proj::util::parallel::available_cores;
 use metric_proj::util::timer::time;
+use std::path::Path;
 
 fn main() -> Result<()> {
     let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
@@ -32,6 +39,7 @@ fn main() -> Result<()> {
         "info" => cmd_info(),
         "solve" => cmd_solve(&args),
         "nearness" => cmd_nearness(&args),
+        "warm-ablation" => cmd_warm_ablation(&args),
         "generate" => cmd_generate(&args),
         "table1" => cmd_table1(&args),
         "fig6" => cmd_fig6(&args),
@@ -50,7 +58,7 @@ fn main() -> Result<()> {
 fn print_help() {
     println!(
         "metric-proj — parallel projection methods for metric-constrained optimization\n\
-         commands: info | solve | nearness | generate | table1 | fig6 | fig7\n\
+         commands: info | solve | nearness | warm-ablation | generate | table1 | fig6 | fig7\n\
          see rust/src/main.rs header or README.md for options"
     );
 }
@@ -77,6 +85,79 @@ fn parse_strategy(args: &Args) -> Result<Strategy> {
     let s = args.get("strategy").unwrap_or("full");
     Strategy::parse(s, sweep_every, forget_after)
         .with_context(|| format!("--strategy must be full|active, got `{s}`"))
+}
+
+/// Checkpoint flags shared by `solve` and `nearness`:
+/// `--checkpoint <path>` (with optional `--checkpoint-every N`) writes
+/// states, `--resume <path>` / `--warm-start <path>` read one.
+struct CheckpointCli {
+    save_path: Option<String>,
+    every: usize,
+    loaded: Option<SolverState>,
+    warm: bool,
+    /// Whether at least one state actually reached the file.
+    written: std::cell::Cell<bool>,
+}
+
+impl CheckpointCli {
+    fn parse(args: &Args) -> Result<CheckpointCli> {
+        let save_path = args.get("checkpoint").map(str::to_string);
+        let mut every =
+            args.get_or("checkpoint-every", 0usize).map_err(|e| anyhow::anyhow!(e))?;
+        if save_path.is_none() && every > 0 {
+            bail!("--checkpoint-every needs --checkpoint <path>");
+        }
+        if save_path.is_some() && every == 0 {
+            every = usize::MAX; // final state only
+        }
+        let resume = args.get("resume");
+        let warm = args.get("warm-start");
+        if resume.is_some() && warm.is_some() {
+            bail!("--resume and --warm-start are mutually exclusive");
+        }
+        let loaded = match resume.or(warm) {
+            Some(p) => Some(
+                SolverState::load_path(Path::new(p))
+                    .with_context(|| format!("loading checkpoint `{p}`"))?,
+            ),
+            None => None,
+        };
+        Ok(CheckpointCli {
+            save_path,
+            every,
+            loaded,
+            warm: warm.is_some(),
+            written: std::cell::Cell::new(false),
+        })
+    }
+
+    fn in_use(&self) -> bool {
+        self.save_path.is_some() || self.loaded.is_some()
+    }
+
+    /// Sink that (re)writes the checkpoint file on every emission.
+    fn sink(&self) -> impl FnMut(&SolverState) + '_ {
+        move |st: &SolverState| {
+            if let Some(p) = &self.save_path {
+                match st.save_path(Path::new(p)) {
+                    Ok(()) => self.written.set(true),
+                    Err(e) => eprintln!("warning: failed to write checkpoint `{p}`: {e}"),
+                }
+            }
+        }
+    }
+
+    /// Truthful end-of-run report: only claim a file exists if a write
+    /// actually succeeded.
+    fn report(&self) {
+        if let Some(p) = &self.save_path {
+            if self.written.get() {
+                println!("checkpoint: final state written to {p}");
+            } else {
+                eprintln!("checkpoint: NO state was written to {p} (see warnings above)");
+            }
+        }
+    }
 }
 
 /// Print the work accounting shared by `solve` and `nearness`.
@@ -152,6 +233,7 @@ fn build_instance_cli(args: &Args) -> Result<(CcLpInstance, String)> {
 
 fn cmd_solve(args: &Args) -> Result<()> {
     let (inst, desc) = build_instance_cli(args)?;
+    let ck = CheckpointCli::parse(args)?;
     let opts = SolveOpts {
         gamma: args.get_or("gamma", 5.0).map_err(|e| anyhow::anyhow!(e))?,
         max_passes: args.get_or("passes", 20usize).map_err(|e| anyhow::anyhow!(e))?,
@@ -161,6 +243,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
         track_pass_times: true,
         assignment: parse_assignment(args)?,
         strategy: parse_strategy(args)?,
+        checkpoint_every: ck.every,
         ..Default::default()
     };
     let engine = args.get("engine").unwrap_or("cpu");
@@ -170,6 +253,29 @@ fn cmd_solve(args: &Args) -> Result<()> {
              (drop --serial / use --engine cpu)"
         );
     }
+    if ck.in_use() && engine != "cpu" {
+        bail!("--checkpoint/--resume/--warm-start run on the CPU engine only");
+    }
+    let start: Option<SolverState> = match ck.loaded.clone() {
+        Some(st) if ck.warm => {
+            let warmed = checkpoint::warm_start_cc(&st, &inst, &opts, &WarmStartOpts::default())?;
+            println!(
+                "warm start: carried {} metric duals into {} active triplets",
+                warmed.metric_duals.len(),
+                warmed.active.len()
+            );
+            Some(warmed)
+        }
+        Some(st) => {
+            println!(
+                "resume    : from pass {} ({} metric duals carried)",
+                st.pass,
+                st.metric_duals.len()
+            );
+            Some(st)
+        }
+        None => None,
+    };
     println!("instance  : {desc}");
     println!("constraints: {:.3e}", inst.n_constraints() as f64);
     println!(
@@ -181,13 +287,22 @@ fn cmd_solve(args: &Args) -> Result<()> {
         opts.strategy
     );
     let (sol, secs) = match engine {
-        "cpu" => time(|| {
-            if args.has_flag("serial") {
-                dykstra_serial::solve(&inst, &opts)
-            } else {
-                dykstra_parallel::solve(&inst, &opts)
-            }
-        }),
+        "cpu" => {
+            let mut sink = ck.sink();
+            let (res, secs) = time(|| {
+                if args.has_flag("serial") {
+                    dykstra_serial::solve_checkpointed(&inst, &opts, start.as_ref(), &mut sink)
+                } else {
+                    dykstra_parallel::solve_checkpointed(
+                        &inst,
+                        &opts,
+                        start.as_ref(),
+                        &mut sink,
+                    )
+                }
+            });
+            (res?, secs)
+        }
         "xla" => {
             let eng = metric_proj::runtime::engine::XlaEngine::load("artifacts")
                 .context("loading XLA engine (run `make artifacts`)")?;
@@ -196,6 +311,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
         }
         other => bail!("--engine must be cpu|xla, got `{other}`"),
     };
+    ck.report();
     let r = &sol.residuals;
     println!(
         "passes    : {} ({secs:.2}s total, {:.3}s/pass pass-time)",
@@ -228,19 +344,83 @@ fn cmd_nearness(args: &Args) -> Result<()> {
     let seed = args.get_or("seed", 42u64).map_err(|e| anyhow::anyhow!(e))?;
     let inst =
         metric_proj::instance::metric_nearness::MetricNearnessInstance::random(n, 2.0, seed);
+    let ck = CheckpointCli::parse(args)?;
     let opts = nearness::NearnessOpts {
         max_passes: args.get_or("passes", 50usize).map_err(|e| anyhow::anyhow!(e))?,
         threads: args.get_or("threads", available_cores()).map_err(|e| anyhow::anyhow!(e))?,
         tile: args.get_or("tile", 40usize).map_err(|e| anyhow::anyhow!(e))?,
         strategy: parse_strategy(args)?,
+        checkpoint_every: ck.every,
         ..Default::default()
     };
-    let (sol, secs) = time(|| nearness::solve(&inst, &opts));
+    let start: Option<SolverState> = match ck.loaded.clone() {
+        Some(st) if ck.warm => {
+            let warmed =
+                checkpoint::warm_start_nearness(&st, &inst, &WarmStartOpts::default())?;
+            println!(
+                "warm start: carried {} metric duals into {} active triplets",
+                warmed.metric_duals.len(),
+                warmed.active.len()
+            );
+            Some(warmed)
+        }
+        Some(st) => {
+            println!("resume    : from pass {}", st.pass);
+            Some(st)
+        }
+        None => None,
+    };
+    let mut sink = ck.sink();
+    let (sol, secs) =
+        time(|| nearness::solve_checkpointed(&inst, &opts, start.as_ref(), &mut sink));
+    let sol = sol?;
+    ck.report();
     println!("metric nearness n={n}: passes={} time={secs:.2}s", sol.passes);
     println!("objective ||X-D||_W^2 = {:.4}", sol.objective);
     println!("max violation = {:.3e}", sol.max_violation);
     let full_per_pass = metric_proj::solver::schedule::n_triplets(n) as u128 * 3;
     print_work(sol.metric_visits, sol.active_triplets, sol.passes, full_per_pass);
+    Ok(())
+}
+
+fn cmd_warm_ablation(args: &Args) -> Result<()> {
+    let n = args.get_or("n", 120usize).map_err(|e| anyhow::anyhow!(e))?;
+    let seed = args.get_or("seed", 42u64).map_err(|e| anyhow::anyhow!(e))?;
+    let frac = args.get_or("perturb-frac", 0.1f64).map_err(|e| anyhow::anyhow!(e))?;
+    let rel = args.get_or("perturb-rel", 0.2f64).map_err(|e| anyhow::anyhow!(e))?;
+    let tol = args.get_or("tol", 1e-6f64).map_err(|e| anyhow::anyhow!(e))?;
+    let inst = CcLpInstance::random(n, 0.5, 0.8, 1.6, seed);
+    let perturbed = inst.perturb_weights(frac, rel, seed ^ 0x9E37);
+    let opts = SolveOpts {
+        max_passes: args.get_or("passes", 10_000usize).map_err(|e| anyhow::anyhow!(e))?,
+        check_every: args.get_or("check-every", 5usize).map_err(|e| anyhow::anyhow!(e))?,
+        tol_violation: tol,
+        tol_gap: 1e30, // violation-driven stop for a clean pass comparison
+        threads: args.get_or("threads", available_cores()).map_err(|e| anyhow::anyhow!(e))?,
+        tile: args.get_or("tile", 40usize).map_err(|e| anyhow::anyhow!(e))?,
+        strategy: parse_strategy(args)?,
+        ..Default::default()
+    };
+    println!(
+        "# warm-start ablation — n={n}, {:.0}% of weights perturbed by up to ±{:.0}%, \
+         tol={tol:.0e}, strategy={:?}",
+        frac * 100.0,
+        rel * 100.0,
+        opts.strategy
+    );
+    let ab = eval::warm_start_ablation(&inst, &perturbed, &opts, &WarmStartOpts::default())?;
+    for row in [&ab.base, &ab.cold, &ab.warm] {
+        println!(
+            "{:<5} passes={:<6} metric visits={:.3e} violation={:.2e} lp={:.4}",
+            row.label, row.passes, row.metric_visits as f64, row.max_violation,
+            row.lp_objective
+        );
+    }
+    println!(
+        "warm start saved {} passes ({:.1}% of cold)",
+        ab.passes_saved(),
+        100.0 * ab.passes_saved() as f64 / ab.cold.passes.max(1) as f64
+    );
     Ok(())
 }
 

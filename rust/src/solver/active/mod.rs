@@ -34,6 +34,7 @@ pub mod sweep;
 
 use self::set::{decode_key, ActiveSet};
 use self::sweep::{discovery_sweep, SweepReport};
+use super::checkpoint::{CheckRecord, SolverState};
 use super::dykstra_parallel::run_pair_phase;
 use super::nearness::{NearnessOpts, NearnessSolution};
 use super::projection::visit_triplet;
@@ -122,26 +123,76 @@ pub(crate) fn active_pass(
 /// Called by [`super::dykstra_parallel::solve`] when
 /// `opts.strategy` is [`Strategy::Active`]; panics on [`Strategy::Full`].
 pub fn solve_cc(inst: &CcLpInstance, opts: &SolveOpts) -> Solution {
+    solve_cc_checkpointed(inst, opts, None, &mut |_| {})
+        .expect("cold active solve cannot fail")
+}
+
+/// Continue a saved CC-LP solve with the active-set strategy. The saved
+/// membership (with forget streaks) is rebuilt into the tile buckets;
+/// states saved by a full-strategy driver seed the set from their
+/// nonzero duals instead. With unchanged options, resuming a state saved
+/// by this driver reproduces the uninterrupted run bitwise.
+pub fn resume_cc(
+    inst: &CcLpInstance,
+    opts: &SolveOpts,
+    state: &SolverState,
+) -> anyhow::Result<Solution> {
+    solve_cc_checkpointed(inst, opts, Some(state), &mut |_| {})
+}
+
+/// Full-control active-set entry point (resume + checkpoint sink); see
+/// [`super::dykstra_parallel::solve_checkpointed`], which dispatches
+/// here for [`Strategy::Active`].
+pub fn solve_cc_checkpointed(
+    inst: &CcLpInstance,
+    opts: &SolveOpts,
+    resume_from: Option<&SolverState>,
+    on_checkpoint: &mut dyn FnMut(&SolverState),
+) -> anyhow::Result<Solution> {
     let params = ActiveParams::from_strategy(opts.strategy)
         .expect("active::solve_cc requires SolveOpts::strategy = Strategy::Active");
     let schedule = Schedule::new(inst.n, opts.tile);
     let p = opts.threads.max(1);
-    let mut state = CcState::new(inst, opts.gamma, opts.include_box);
+    let mut state = match resume_from {
+        Some(st) => {
+            st.validate_cc(inst, opts)?;
+            st.restore_cc_state(inst, opts)
+        }
+        None => CcState::new(inst, opts.gamma, opts.include_box),
+    };
     let mut active = ActiveSet::new(&schedule);
     let mut triplet_visits = 0u64;
-    let mut last_sweep: Option<SweepReport> = None;
-    let mut pass_times = Vec::new();
-    let mut passes_done = 0;
+    let mut start_pass = 0usize;
     // Next passes_done at which a convergence check becomes due, honoring
     // the configured cadence even though checks can only fire at sweeps.
     let mut next_check = opts.check_every;
+    // Warm starts arrive with a seeded set: their first pass is a cheap
+    // pass, deferring discovery to the next scheduled sweep.
+    let mut skip_sweep_at_start = false;
+    let mut history: Vec<CheckRecord> = Vec::new();
+    if let Some(st) = resume_from {
+        active.seed(&schedule, st.active_entries());
+        triplet_visits = st.triplet_visits;
+        start_pass = st.pass as usize;
+        if st.next_check > 0 {
+            next_check = st.next_check as usize;
+        }
+        skip_sweep_at_start = st.skip_initial_sweep;
+        history = st.history.clone();
+    }
+    let mut last_sweep: Option<SweepReport> = None;
+    let mut pass_times = Vec::new();
+    let mut passes_done = start_pass;
+    let mut last_saved = usize::MAX;
     // Exact residuals of the confirming scan on early stop (state does
     // not change between that scan and the end of the loop).
     let mut exact_at_break: Option<Residuals> = None;
 
-    for pass in 0..opts.max_passes {
+    for pass in start_pass..opts.max_passes {
         let t0 = std::time::Instant::now();
-        let is_sweep = pass % params.sweep_every == 0; // pass 0 discovers
+        // Pass 0 discovers — unless a warm start already seeded the set.
+        let is_sweep =
+            pass % params.sweep_every == 0 && !(skip_sweep_at_start && pass == start_pass);
         {
             let x = SharedMut::new(state.x.as_mut_slice());
             if is_sweep {
@@ -184,22 +235,60 @@ pub fn solve_cc(inst: &CcLpInstance, opts: &SolveOpts) -> Solution {
         // sweep measured feasible), so the returned tolerance guarantee
         // is exact. Pass 0 is excluded: its sweep measured the *initial*
         // point x = 0, which is metric-feasible by construction.
+        let mut stop = false;
         if opts.check_every > 0 && is_sweep && pass > 0 && passes_done >= next_check {
             while next_check <= passes_done {
                 next_check += opts.check_every;
             }
             let report = last_sweep.expect("sweep pass recorded a report");
             let r = compute_residuals_trusting_sweep(&state, p, report.max_violation);
+            history.push(CheckRecord {
+                pass: passes_done as u64,
+                max_violation: r.max_violation,
+                rel_gap: r.rel_gap,
+            });
             if r.max_violation <= opts.tol_violation && r.rel_gap.abs() <= opts.tol_gap {
                 let exact = compute_residuals(&state, p);
+                // The exact confirming scan is authoritative: its values
+                // are what the history records and (on a stop) what
+                // `Solution::residuals` reports — never the sweep's
+                // screen, which is one pair phase stale.
+                if let Some(last) = history.last_mut() {
+                    last.max_violation = exact.max_violation;
+                    last.rel_gap = exact.rel_gap;
+                }
                 if exact.max_violation <= opts.tol_violation
                     && exact.rel_gap.abs() <= opts.tol_gap
                 {
                     exact_at_break = Some(exact);
-                    break;
+                    stop = true;
                 }
             }
         }
+        if opts.checkpoint_every > 0 && (passes_done % opts.checkpoint_every == 0 || stop) {
+            on_checkpoint(&SolverState::capture_cc_active(
+                &state,
+                &mut active,
+                passes_done,
+                triplet_visits,
+                next_check,
+                &history,
+            ));
+            last_saved = passes_done;
+        }
+        if stop {
+            break;
+        }
+    }
+    if opts.checkpoint_every > 0 && last_saved != passes_done {
+        on_checkpoint(&SolverState::capture_cc_active(
+            &state,
+            &mut active,
+            passes_done,
+            triplet_visits,
+            next_check,
+            &history,
+        ));
     }
 
     // Final residuals are always exact (the O(n^3) scan), so active and
@@ -208,7 +297,7 @@ pub fn solve_cc(inst: &CcLpInstance, opts: &SolveOpts) -> Solution {
     let active_now = active.len();
     residuals.metric_visits = triplet_visits * 3;
     residuals.active_triplets = active_now;
-    Solution {
+    Ok(Solution {
         x: state.x_matrix(),
         f: Some(state.f_matrix()),
         passes: passes_done,
@@ -217,7 +306,7 @@ pub fn solve_cc(inst: &CcLpInstance, opts: &SolveOpts) -> Solution {
         nnz_duals: active.nnz_duals(),
         metric_visits: triplet_visits * 3,
         active_triplets: active_now,
-    }
+    })
 }
 
 /// Solve metric nearness with the active-set strategy.
@@ -225,6 +314,29 @@ pub fn solve_cc(inst: &CcLpInstance, opts: &SolveOpts) -> Solution {
 /// Called by [`super::nearness::solve`] when `opts.strategy` is
 /// [`Strategy::Active`]; panics on [`Strategy::Full`].
 pub fn solve_nearness(inst: &MetricNearnessInstance, opts: &NearnessOpts) -> NearnessSolution {
+    solve_nearness_checkpointed(inst, opts, None, &mut |_| {})
+        .expect("cold active nearness solve cannot fail")
+}
+
+/// Continue a saved nearness solve with the active-set strategy (see
+/// [`resume_cc`] for the seeding semantics).
+pub fn resume_nearness(
+    inst: &MetricNearnessInstance,
+    opts: &NearnessOpts,
+    state: &SolverState,
+) -> anyhow::Result<NearnessSolution> {
+    solve_nearness_checkpointed(inst, opts, Some(state), &mut |_| {})
+}
+
+/// Full-control active-set nearness entry point (resume + checkpoint
+/// sink); [`super::nearness::solve_checkpointed`] dispatches here for
+/// [`Strategy::Active`].
+pub fn solve_nearness_checkpointed(
+    inst: &MetricNearnessInstance,
+    opts: &NearnessOpts,
+    resume_from: Option<&SolverState>,
+    on_checkpoint: &mut dyn FnMut(&SolverState),
+) -> anyhow::Result<NearnessSolution> {
     let params = ActiveParams::from_strategy(opts.strategy)
         .expect("active::solve_nearness requires NearnessOpts::strategy = Strategy::Active");
     let n = inst.n;
@@ -235,15 +347,32 @@ pub fn solve_nearness(inst: &MetricNearnessInstance, opts: &NearnessOpts) -> Nea
     let col_starts = inst.d.col_starts().to_vec();
     let mut active = ActiveSet::new(&schedule);
     let mut triplet_visits = 0u64;
-    let mut last_sweep: Option<SweepReport> = None;
-    let mut passes_done = 0;
+    let mut start_pass = 0usize;
     let mut next_check = opts.check_every;
+    let mut skip_sweep_at_start = false;
+    let mut history: Vec<CheckRecord> = Vec::new();
+    if let Some(st) = resume_from {
+        st.validate_nearness(inst)?;
+        x.copy_from_slice(&st.x);
+        active.seed(&schedule, st.active_entries());
+        triplet_visits = st.triplet_visits;
+        start_pass = st.pass as usize;
+        if st.next_check > 0 {
+            next_check = st.next_check as usize;
+        }
+        skip_sweep_at_start = st.skip_initial_sweep;
+        history = st.history.clone();
+    }
+    let mut last_sweep: Option<SweepReport> = None;
+    let mut passes_done = start_pass;
+    let mut last_saved = usize::MAX;
     // Exact violation of the confirming scan on early stop (x does not
     // change between that scan and the end of the loop).
     let mut exact_at_break: Option<f64> = None;
 
-    for pass in 0..opts.max_passes {
-        let is_sweep = pass % params.sweep_every == 0;
+    for pass in start_pass..opts.max_passes {
+        let is_sweep =
+            pass % params.sweep_every == 0 && !(skip_sweep_at_start && pass == start_pass);
         {
             let xs = SharedMut::new(x.as_mut_slice());
             if is_sweep {
@@ -270,33 +399,70 @@ pub fn solve_nearness(inst: &MetricNearnessInstance, opts: &NearnessOpts) -> Nea
         // The sweep's mid-pass measurement is a cheap screen (later
         // projections in the same sweep can re-break rows measured
         // feasible earlier); when it passes, one exact scan confirms
-        // before stopping, making the tolerance guarantee exact.
+        // before stopping, making the tolerance guarantee exact. The
+        // history records the exact scan's value whenever one ran.
+        let mut stop = false;
         if opts.check_every > 0 && is_sweep && passes_done >= next_check {
             while next_check <= passes_done {
                 next_check += opts.check_every;
             }
-            if last_sweep.is_some_and(|s| s.max_violation <= opts.tol_violation) {
+            let screened = last_sweep.expect("sweep pass recorded a report").max_violation;
+            history.push(CheckRecord {
+                pass: passes_done as u64,
+                max_violation: screened,
+                rel_gap: 0.0,
+            });
+            if screened <= opts.tol_violation {
                 let v = super::nearness::violation(&x, &col_starts, n, p);
+                if let Some(last) = history.last_mut() {
+                    last.max_violation = v;
+                }
                 if v <= opts.tol_violation {
                     exact_at_break = Some(v);
-                    break;
+                    stop = true;
                 }
             }
         }
+        if opts.checkpoint_every > 0 && (passes_done % opts.checkpoint_every == 0 || stop) {
+            on_checkpoint(&SolverState::capture_nearness_active(
+                inst,
+                &x,
+                &mut active,
+                passes_done,
+                triplet_visits,
+                next_check,
+                &history,
+            ));
+            last_saved = passes_done;
+        }
+        if stop {
+            break;
+        }
+    }
+    if opts.checkpoint_every > 0 && last_saved != passes_done {
+        on_checkpoint(&SolverState::capture_nearness_active(
+            inst,
+            &x,
+            &mut active,
+            passes_done,
+            triplet_visits,
+            next_check,
+            &history,
+        ));
     }
 
     let max_violation = exact_at_break
         .unwrap_or_else(|| super::nearness::violation(&x, &col_starts, n, p));
     let mut xm = PackedSym::zeros(n);
     xm.as_mut_slice().copy_from_slice(&x);
-    NearnessSolution {
+    Ok(NearnessSolution {
         objective: inst.objective(&xm),
         x: xm,
         max_violation,
         passes: passes_done,
         metric_visits: triplet_visits * 3,
         active_triplets: active.len(),
-    }
+    })
 }
 
 #[cfg(test)]

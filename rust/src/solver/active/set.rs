@@ -136,6 +136,39 @@ impl ActiveSet {
             bucket.clear();
         }
     }
+
+    /// Rebuild the set from `entries` (any order), e.g. from a
+    /// checkpoint: each triplet is routed to the tile bucket owning it
+    /// and buckets are ordered by the cube order
+    /// [`crate::solver::tiling::for_each_triplet`] visits — the order the
+    /// sweep merge-scan requires. `schedule` must be the schedule this
+    /// set was shaped after.
+    pub fn seed(&mut self, schedule: &Schedule, entries: Vec<ActiveTriplet>) {
+        assert_eq!(
+            self.n_tiles(),
+            schedule.n_tiles(),
+            "seeding an active set shaped after a different schedule"
+        );
+        self.clear();
+        let router = crate::solver::schedule::TileRouter::new(schedule);
+        let mut routed: Vec<Vec<((usize, u64), ActiveTriplet)>> =
+            (0..self.buckets.len()).map(|_| Vec::new()).collect();
+        for e in entries {
+            let (i, j, k) = decode_key(e.key);
+            let (wi, r, chunk) = router.locate(i, j, k);
+            let flat = self.flat_index(wi, r);
+            // Cube order inside a tile: j-chunks first, then (i, j, k) —
+            // which for a fixed chunk is the key's numeric order.
+            routed[flat].push(((chunk, e.key), e));
+        }
+        for (flat, mut v) in routed.into_iter().enumerate() {
+            if v.is_empty() {
+                continue;
+            }
+            v.sort_unstable_by_key(|&(rank, _)| rank);
+            self.buckets[flat].get_mut().extend(v.into_iter().map(|(_, e)| e));
+        }
+    }
 }
 
 #[cfg(test)]
@@ -171,6 +204,53 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn seed_reproduces_cube_order_in_every_bucket() {
+        use crate::solver::tiling::for_each_triplet;
+        use crate::util::rng::Rng;
+        let schedule = Schedule::new(19, 3);
+        let mut set = ActiveSet::new(&schedule);
+        // Random subset of all triplets, handed to seed() in shuffled order.
+        let mut rng = Rng::new(0x5EED);
+        let mut entries = Vec::new();
+        for i in 0..19usize {
+            for j in (i + 1)..19 {
+                for k in (j + 1)..19 {
+                    if rng.bool(0.3) {
+                        entries.push(ActiveTriplet {
+                            key: triplet_key(i, j, k),
+                            y: [rng.f64_in(0.1, 1.0), 0.0, 0.0],
+                            zero_passes: rng.usize_in(0, 4) as u32,
+                        });
+                    }
+                }
+            }
+        }
+        let expected_len = entries.len();
+        rng.shuffle(&mut entries);
+        let by_key: std::collections::HashMap<u64, ActiveTriplet> =
+            entries.iter().map(|e| (e.key, *e)).collect();
+        set.seed(&schedule, entries);
+        assert_eq!(set.len(), expected_len);
+        // Every bucket must hold exactly its tile's seeded triplets, in
+        // the order for_each_triplet visits that tile.
+        let b = schedule.tile_size();
+        for (w, wave) in schedule.waves().iter().enumerate() {
+            for (r, tile) in wave.iter().enumerate() {
+                let mut want = Vec::new();
+                for_each_triplet(tile, b, |i, j, k| {
+                    let key = triplet_key(i, j, k);
+                    if let Some(e) = by_key.get(&key) {
+                        want.push(*e);
+                    }
+                });
+                let flat = set.flat_index(w, r);
+                let got = unsafe { set.bucket_mut(flat) }.clone();
+                assert_eq!(got, want, "wave {w} tile {r}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,522 @@
+//! The versioned, endian-stable binary encoding of [`SolverState`].
+//!
+//! Layout (all integers little-endian, all floats IEEE-754 bit patterns
+//! written little-endian; offsets in bytes):
+//!
+//! ```text
+//! 0   magic     b"MPROJCKP"
+//! 8   version   u32   (currently 1)
+//! 12  problem   u8    (0 = CC-LP, 1 = metric nearness)
+//! 13  flags     u8    (bit 0 = skip_initial_sweep; other bits reserved 0)
+//! 14  reserved  u16   (0)
+//! 16  n         u64   number of objects
+//! 24  gamma     f64   CC regularization (0 for nearness)
+//! 32  pass      u64   passes completed when saved
+//! 40  visits    u64   cumulative metric-triplet visits
+//! 48  next_check u64  active-driver convergence cadence state
+//! 56  d_hash    u64   FNV-1a over the instance targets' f64 bit patterns
+//! 64  sections  ...   (see below)
+//! end checksum  u64   FNV-1a over every preceding byte
+//! ```
+//!
+//! Sections follow in a fixed order, each a `u64` element count followed
+//! by its payload: `x`, `f`, `y_upper`, `y_lower`, `y_box`, `w` (plain
+//! `f64` arrays; `f`/`y_*` are empty for nearness states, `y_box` is
+//! empty when the solve ran without box constraints), `metric_duals`
+//! (`u64` key + `f64` value per entry, key-sorted), `active` (`u64`
+//! triplet key + `u32` zero-pass streak per entry, key-sorted), and
+//! `history` (`u64` pass + `f64` max violation + `f64` relative gap per
+//! record).
+//!
+//! [`decode`] validates everything it can: magic, version, checksum,
+//! section lengths against the header's `n`, key ordering and range,
+//! finiteness and sign of every float. Truncated, corrupted, or
+//! wrong-version bytes produce a [`CheckpointError`], never a panic.
+//!
+//! [`SolverState`]: super::SolverState
+
+use super::{ActiveMember, CheckRecord, Problem, SolverState};
+use crate::solver::active::set::decode_key;
+use std::fmt;
+
+/// File magic: identifies a metric-proj checkpoint.
+pub const MAGIC: [u8; 8] = *b"MPROJCKP";
+
+/// Current format version.
+pub const VERSION: u32 = 1;
+
+/// Why a checkpoint could not be written, read, or applied.
+#[derive(Debug)]
+pub enum CheckpointError {
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+    /// The bytes do not start with the checkpoint magic.
+    BadMagic,
+    /// The bytes carry a version this build cannot read.
+    UnsupportedVersion(u32),
+    /// Truncated or internally inconsistent bytes (checksum, lengths,
+    /// key order, value ranges).
+    Corrupt(String),
+    /// The state is well-formed but does not apply to the given
+    /// instance/options (wrong problem, size, weights, ...).
+    Mismatch(String),
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "checkpoint I/O error: {e}"),
+            CheckpointError::BadMagic => write!(f, "not a metric-proj checkpoint (bad magic)"),
+            CheckpointError::UnsupportedVersion(v) => {
+                write!(f, "unsupported checkpoint version {v} (this build reads {VERSION})")
+            }
+            CheckpointError::Corrupt(msg) => write!(f, "corrupt checkpoint: {msg}"),
+            CheckpointError::Mismatch(msg) => write!(f, "checkpoint mismatch: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CheckpointError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> CheckpointError {
+        CheckpointError::Io(e)
+    }
+}
+
+/// Incremental FNV-1a hasher — the single hash core behind both the
+/// checkpoint checksum and the instance fingerprint
+/// ([`super::hash_f64s`]).
+pub(super) struct Fnv1a(u64);
+
+impl Fnv1a {
+    pub(super) fn new() -> Fnv1a {
+        Fnv1a(0xcbf29ce484222325)
+    }
+
+    pub(super) fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    pub(super) fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Fnv1a::new()
+    }
+}
+
+/// FNV-1a over a byte slice — the checkpoint checksum (not cryptographic;
+/// guards against truncation and accidental corruption).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.update(bytes);
+    h.finish()
+}
+
+fn corrupt(msg: impl Into<String>) -> CheckpointError {
+    CheckpointError::Corrupt(msg.into())
+}
+
+// --- encoding ---------------------------------------------------------------
+
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.0.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    fn f64_vec(&mut self, xs: &[f64]) {
+        self.u64(xs.len() as u64);
+        for &v in xs {
+            self.f64(v);
+        }
+    }
+}
+
+/// Serialize a state to its canonical byte representation (checksummed).
+pub(super) fn encode(s: &SolverState) -> Vec<u8> {
+    let mut e = Enc(Vec::new());
+    e.0.extend_from_slice(&MAGIC);
+    e.u32(VERSION);
+    e.u8(match s.problem {
+        Problem::CcLp => 0,
+        Problem::Nearness => 1,
+    });
+    e.u8(u8::from(s.skip_initial_sweep));
+    e.u16(0);
+    e.u64(s.n as u64);
+    e.f64(s.gamma);
+    e.u64(s.pass);
+    e.u64(s.triplet_visits);
+    e.u64(s.next_check);
+    e.u64(s.d_hash);
+    e.f64_vec(&s.x);
+    e.f64_vec(&s.f);
+    e.f64_vec(&s.y_upper);
+    e.f64_vec(&s.y_lower);
+    e.f64_vec(&s.y_box);
+    e.f64_vec(&s.w);
+    e.u64(s.metric_duals.len() as u64);
+    for &(key, v) in &s.metric_duals {
+        e.u64(key);
+        e.f64(v);
+    }
+    e.u64(s.active.len() as u64);
+    for m in &s.active {
+        e.u64(m.key);
+        e.u32(m.zero_passes);
+    }
+    e.u64(s.history.len() as u64);
+    for r in &s.history {
+        e.u64(r.pass);
+        e.f64(r.max_violation);
+        e.f64(r.rel_gap);
+    }
+    let sum = fnv1a64(&e.0);
+    e.u64(sum);
+    e.0
+}
+
+// --- decoding ---------------------------------------------------------------
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, len: usize) -> Result<&'a [u8], CheckpointError> {
+        if self.buf.len() - self.pos < len {
+            return Err(corrupt("truncated"));
+        }
+        let out = &self.buf[self.pos..self.pos + len];
+        self.pos += len;
+        Ok(out)
+    }
+    fn u8(&mut self) -> Result<u8, CheckpointError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16, CheckpointError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, CheckpointError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, CheckpointError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64, CheckpointError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    /// Element count for items of `size` bytes, bounded by the remaining
+    /// buffer so a corrupted count cannot trigger a huge allocation.
+    fn count(&mut self, size: usize) -> Result<usize, CheckpointError> {
+        let count = self.u64()?;
+        let remaining = (self.buf.len() - self.pos) as u64;
+        if count > remaining / size as u64 {
+            return Err(corrupt("section count exceeds remaining bytes"));
+        }
+        Ok(count as usize)
+    }
+    fn f64_vec(&mut self) -> Result<Vec<f64>, CheckpointError> {
+        let count = self.count(8)?;
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+}
+
+fn check_finite(name: &str, xs: &[f64]) -> Result<(), CheckpointError> {
+    if xs.iter().any(|v| !v.is_finite()) {
+        return Err(corrupt(format!("non-finite value in {name}")));
+    }
+    Ok(())
+}
+
+fn check_triplet(key: u64, n: usize) -> Result<(), CheckpointError> {
+    let (i, j, k) = decode_key(key);
+    if i < j && j < k && k < n {
+        Ok(())
+    } else {
+        Err(corrupt(format!("key {key:#x} is not a valid triplet for n = {n}")))
+    }
+}
+
+/// Parse and validate a checkpoint byte buffer.
+pub(super) fn decode(buf: &[u8]) -> Result<SolverState, CheckpointError> {
+    if buf.len() < MAGIC.len() + 4 {
+        return Err(corrupt("truncated header"));
+    }
+    if buf[..MAGIC.len()] != MAGIC {
+        return Err(CheckpointError::BadMagic);
+    }
+    let version = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+    if version != VERSION {
+        return Err(CheckpointError::UnsupportedVersion(version));
+    }
+    if buf.len() < 12 + 8 {
+        return Err(corrupt("truncated (no checksum)"));
+    }
+    let body_end = buf.len() - 8;
+    let stored = u64::from_le_bytes(buf[body_end..].try_into().unwrap());
+    if fnv1a64(&buf[..body_end]) != stored {
+        return Err(corrupt("checksum mismatch"));
+    }
+
+    let mut d = Dec { buf: &buf[..body_end], pos: 12 };
+    let problem = match d.u8()? {
+        0 => Problem::CcLp,
+        1 => Problem::Nearness,
+        other => return Err(corrupt(format!("unknown problem tag {other}"))),
+    };
+    let flags = d.u8()?;
+    if flags & !1 != 0 {
+        return Err(corrupt(format!("unknown flags {flags:#x}")));
+    }
+    let skip_initial_sweep = flags & 1 != 0;
+    if d.u16()? != 0 {
+        return Err(corrupt("nonzero reserved field"));
+    }
+    let n = d.u64()?;
+    if n > 1 << 20 {
+        return Err(corrupt(format!("n = {n} exceeds the key encoding limit")));
+    }
+    let n = n as usize;
+    let gamma = d.f64()?;
+    let pass = d.u64()?;
+    let triplet_visits = d.u64()?;
+    let next_check = d.u64()?;
+    let d_hash = d.u64()?;
+    let x = d.f64_vec()?;
+    let f = d.f64_vec()?;
+    let y_upper = d.f64_vec()?;
+    let y_lower = d.f64_vec()?;
+    let y_box = d.f64_vec()?;
+    let w = d.f64_vec()?;
+    let n_duals = d.count(16)?;
+    let mut metric_duals = Vec::with_capacity(n_duals);
+    for _ in 0..n_duals {
+        let key = d.u64()?;
+        let v = d.f64()?;
+        metric_duals.push((key, v));
+    }
+    let n_active = d.count(12)?;
+    let mut active = Vec::with_capacity(n_active);
+    for _ in 0..n_active {
+        let key = d.u64()?;
+        let zero_passes = d.u32()?;
+        active.push(ActiveMember { key, zero_passes });
+    }
+    let n_hist = d.count(24)?;
+    let mut history = Vec::with_capacity(n_hist);
+    for _ in 0..n_hist {
+        let pass = d.u64()?;
+        let max_violation = d.f64()?;
+        let rel_gap = d.f64()?;
+        history.push(CheckRecord { pass, max_violation, rel_gap });
+    }
+    if d.pos != body_end {
+        return Err(corrupt("trailing bytes after the last section"));
+    }
+
+    // --- semantic validation ------------------------------------------------
+    let m = n * n.saturating_sub(1) / 2;
+    if x.len() != m {
+        return Err(corrupt(format!("x has {} entries, expected {m}", x.len())));
+    }
+    if w.len() != m {
+        return Err(corrupt(format!("w has {} entries, expected {m}", w.len())));
+    }
+    match problem {
+        Problem::CcLp => {
+            if f.len() != m || y_upper.len() != m || y_lower.len() != m {
+                return Err(corrupt("CC-LP state is missing slack/pair-dual sections"));
+            }
+            if !(y_box.is_empty() || y_box.len() == m) {
+                return Err(corrupt("y_box has a bad length"));
+            }
+            if !gamma.is_finite() || gamma <= 0.0 {
+                return Err(corrupt(format!("bad gamma {gamma}")));
+            }
+        }
+        Problem::Nearness => {
+            if !(f.is_empty() && y_upper.is_empty() && y_lower.is_empty() && y_box.is_empty()) {
+                return Err(corrupt("nearness state carries CC-only sections"));
+            }
+            if gamma != 0.0 {
+                return Err(corrupt("nearness state carries a nonzero gamma"));
+            }
+        }
+    }
+    check_finite("x", &x)?;
+    check_finite("f", &f)?;
+    if history.iter().any(|r| !r.max_violation.is_finite() || !r.rel_gap.is_finite()) {
+        return Err(corrupt("non-finite value in history"));
+    }
+    for (name, ys) in [("y_upper", &y_upper), ("y_lower", &y_lower), ("y_box", &y_box)] {
+        if ys.iter().any(|v| !v.is_finite() || *v < 0.0) {
+            return Err(corrupt(format!("negative or non-finite dual in {name}")));
+        }
+    }
+    if w.iter().any(|v| !v.is_finite() || *v <= 0.0) {
+        return Err(corrupt("non-positive weight in w"));
+    }
+    let mut prev_key = None;
+    for &(key, v) in &metric_duals {
+        if prev_key.is_some_and(|p| p >= key) {
+            return Err(corrupt("metric duals are not strictly key-sorted"));
+        }
+        prev_key = Some(key);
+        if key & 3 == 3 {
+            return Err(corrupt(format!("key {key:#x} has constraint type 3")));
+        }
+        check_triplet(key, n)?;
+        if !v.is_finite() || v <= 0.0 {
+            return Err(corrupt(format!("metric dual {v} at key {key:#x} is not positive")));
+        }
+    }
+    let mut prev_key = None;
+    for a in &active {
+        if prev_key.is_some_and(|p| p >= a.key) {
+            return Err(corrupt("active members are not strictly key-sorted"));
+        }
+        prev_key = Some(a.key);
+        if a.key & 3 != 0 {
+            return Err(corrupt(format!("active key {:#x} has type bits set", a.key)));
+        }
+        check_triplet(a.key, n)?;
+    }
+
+    Ok(SolverState {
+        problem,
+        n,
+        gamma,
+        pass,
+        triplet_visits,
+        next_check,
+        skip_initial_sweep,
+        x,
+        f,
+        y_upper,
+        y_lower,
+        y_box,
+        w,
+        d_hash,
+        metric_duals,
+        active,
+        history,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_state() -> SolverState {
+        SolverState {
+            problem: Problem::Nearness,
+            n: 4,
+            gamma: 0.0,
+            pass: 3,
+            triplet_visits: 12,
+            next_check: 5,
+            skip_initial_sweep: true,
+            x: vec![0.5; 6],
+            f: vec![],
+            y_upper: vec![],
+            y_lower: vec![],
+            y_box: vec![],
+            w: vec![1.0; 6],
+            d_hash: 0xDEAD,
+            metric_duals: vec![(crate::solver::duals::metric_key(0, 1, 2, 1), 0.25)],
+            active: vec![ActiveMember {
+                key: crate::solver::active::set::triplet_key(0, 1, 2),
+                zero_passes: 2,
+            }],
+            history: vec![CheckRecord { pass: 2, max_violation: 0.1, rel_gap: 0.0 }],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_identity() {
+        let s = tiny_state();
+        let bytes = encode(&s);
+        let back = decode(&bytes).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn truncation_rejected_at_every_length() {
+        let bytes = encode(&tiny_state());
+        for len in 0..bytes.len() {
+            assert!(decode(&bytes[..len]).is_err(), "accepted a {len}-byte prefix");
+        }
+    }
+
+    #[test]
+    fn bitflip_rejected_everywhere() {
+        let bytes = encode(&tiny_state());
+        for pos in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x40;
+            assert!(decode(&bad).is_err(), "accepted a flip at byte {pos}");
+        }
+    }
+
+    #[test]
+    fn wrong_version_rejected_specifically() {
+        let mut bytes = encode(&tiny_state());
+        bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+        // Re-stamp the checksum so the version check (not the checksum)
+        // is what rejects the bytes.
+        let end = bytes.len() - 8;
+        let sum = fnv1a64(&bytes[..end]);
+        bytes[end..].copy_from_slice(&sum.to_le_bytes());
+        match decode(&bytes) {
+            Err(CheckpointError::UnsupportedVersion(99)) => {}
+            other => panic!("expected UnsupportedVersion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = encode(&tiny_state());
+        bytes[0] = b'X';
+        assert!(matches!(decode(&bytes), Err(CheckpointError::BadMagic)));
+    }
+
+    #[test]
+    fn fnv_vectors() {
+        // Standard FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+    }
+}

@@ -1,0 +1,723 @@
+//! Warm-start checkpoints: serializable solver state for interrupted and
+//! perturbed re-solves.
+//!
+//! The early passes of Dykstra's method are where the work is: duals are
+//! dense, the active set is still being discovered, and every pass
+//! touches all `3·C(n,3)` metric rows. Project-and-forget shows the
+//! *final* active set is tiny and stable, and the metric-nearness line of
+//! work motivates re-solving the same graph under perturbed weights. This
+//! module is the state layer that exploits both: a [`SolverState`]
+//! snapshot of everything a solve needs to continue — packed `x` (plus
+//! slacks and pair/box duals for CC-LP), the nonzero metric duals as
+//! key-sorted `(u64, f64)` pairs, active-set membership with forget
+//! streaks, pass/sweep counters, and the termination history — behind a
+//! versioned, endian-stable binary format ([`format`], no external
+//! dependencies) with `save`/`load` over [`std::io::Write`] /
+//! [`std::io::Read`].
+//!
+//! Three ways to use a state:
+//!
+//! * **Periodic checkpointing** — set [`SolveOpts::checkpoint_every`]
+//!   (or [`NearnessOpts::checkpoint_every`]) and call the drivers'
+//!   `solve_checkpointed` entry points with a sink closure; the CLI's
+//!   `--checkpoint <path>` does exactly this with an atomic
+//!   write-then-rename per snapshot.
+//! * **Exact resume** — `resume` entry points on the serial
+//!   ([`dykstra_serial::resume`]), parallel
+//!   ([`dykstra_parallel::resume`]), and active-set
+//!   ([`active::resume_cc`] / [`active::resume_nearness`]) drivers
+//!   continue a saved solve. Resuming with unchanged options reproduces
+//!   the uninterrupted run **bitwise** (tested): duals are redistributed
+//!   into each worker's deterministic visit order
+//!   ([`SolverState::worker_duals`]), so even the thread count may change
+//!   without changing the iterates.
+//! * **Warm start** — [`warm_start_cc`] / [`warm_start_nearness`] take a
+//!   state from instance `A` and a perturbed instance `A'` (same `n`,
+//!   updated weights), rescale the carried duals by the per-constraint
+//!   curvature ratio, drop the ones below a threshold, rebuild the primal
+//!   from the Dykstra invariant `x = x0' − W'⁻¹Aᵀy'`, and seed the active
+//!   set so the first discovery sweep is deferred
+//!   ([`SolverState::skip_initial_sweep`]). Because Dykstra is dual
+//!   block-coordinate ascent for these projection QPs, restarting from
+//!   any nonnegative duals with a consistent primal converges to the same
+//!   unique optimum — warm starting changes the path length, not the
+//!   destination. [`crate::eval::warm_start_ablation`] measures the
+//!   passes-to-tolerance saving.
+//!
+//! [`SolveOpts::checkpoint_every`]: crate::solver::SolveOpts::checkpoint_every
+//! [`NearnessOpts::checkpoint_every`]: crate::solver::nearness::NearnessOpts::checkpoint_every
+//! [`dykstra_serial::resume`]: crate::solver::dykstra_serial::resume
+//! [`dykstra_parallel::resume`]: crate::solver::dykstra_parallel::resume
+//! [`active::resume_cc`]: crate::solver::active::resume_cc
+//! [`active::resume_nearness`]: crate::solver::active::resume_nearness
+
+pub mod format;
+pub mod warm;
+
+pub use format::{CheckpointError, MAGIC, VERSION};
+pub use warm::{warm_start_cc, warm_start_nearness, WarmStartOpts};
+
+use super::active::set::{decode_key, ActiveSet, ActiveTriplet};
+use super::duals::DualStore;
+use super::schedule::{Assignment, Schedule, TileRouter};
+use super::{CcState, SolveOpts};
+use crate::instance::metric_nearness::MetricNearnessInstance;
+use crate::instance::CcLpInstance;
+use crate::util::shared::PerWorker;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Which optimization problem a state belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Problem {
+    /// The CC-LP relaxation (distances + slacks + pair/box constraints).
+    CcLp,
+    /// Metric nearness (distances only).
+    Nearness,
+}
+
+/// Active-set membership of one triplet: its key and how many
+/// consecutive zero-dual active passes it has survived (the forget
+/// streak of [`crate::solver::active::forget`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ActiveMember {
+    pub key: u64,
+    pub zero_passes: u32,
+}
+
+/// One convergence-check measurement, kept as the termination history.
+/// For the active strategy the recorded value is the *exact* scan's when
+/// one ran (the trusted-sweep screen is overwritten by its confirming
+/// scan), so the history never reports a stale sweep violation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CheckRecord {
+    /// Passes completed when the check ran.
+    pub pass: u64,
+    /// Max constraint violation measured at the check.
+    pub max_violation: f64,
+    /// Relative duality gap (0 for nearness, which has no dual gap).
+    pub rel_gap: f64,
+}
+
+/// A complete, serializable snapshot of a solve.
+///
+/// Everything here is strategy-portable: a state saved by the full
+/// solver can seed the active driver (membership is derived from the
+/// nonzero duals) and vice versa (active entries flatten to key-sorted
+/// dual pairs). See the [module docs](self) for the three use cases and
+/// [`format`] for the byte layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SolverState {
+    pub problem: Problem,
+    /// Number of objects (the packed arrays hold `n(n-1)/2` entries).
+    pub n: usize,
+    /// CC regularization gamma at save time (0 for nearness).
+    pub gamma: f64,
+    /// Passes completed.
+    pub pass: u64,
+    /// Cumulative metric-triplet visits (work counter).
+    pub triplet_visits: u64,
+    /// Active-driver convergence cadence state (0 = start from
+    /// `check_every`).
+    pub next_check: u64,
+    /// Warm-start flag: the active set is already seeded, so the active
+    /// driver treats its first pass as a cheap pass instead of a
+    /// discovery sweep. Ignored by the full-strategy drivers.
+    pub skip_initial_sweep: bool,
+    /// Packed distance variables.
+    pub x: Vec<f64>,
+    /// Packed slacks (CC-LP only; empty for nearness).
+    pub f: Vec<f64>,
+    /// Scaled pair-upper duals (CC-LP only).
+    pub y_upper: Vec<f64>,
+    /// Scaled pair-lower duals (CC-LP only).
+    pub y_lower: Vec<f64>,
+    /// Scaled box duals (empty when the solve ran without box rows).
+    pub y_box: Vec<f64>,
+    /// Packed instance weights at save time — what warm starts rescale
+    /// against, and what resume validates against.
+    pub w: Vec<f64>,
+    /// FNV-1a hash of the instance targets' bit patterns (resume guard).
+    pub d_hash: u64,
+    /// Nonzero scaled metric duals, strictly key-sorted
+    /// (key = [`crate::solver::duals::metric_key`]).
+    pub metric_duals: Vec<(u64, f64)>,
+    /// Active-set membership, strictly key-sorted. Empty for states
+    /// saved by a full-strategy driver.
+    pub active: Vec<ActiveMember>,
+    /// Convergence checks observed so far.
+    pub history: Vec<CheckRecord>,
+}
+
+impl SolverState {
+    /// Serialize to a writer (see [`format`] for the layout).
+    pub fn save<W: Write>(&self, w: &mut W) -> Result<(), CheckpointError> {
+        w.write_all(&format::encode(self))?;
+        Ok(())
+    }
+
+    /// Deserialize from a reader, validating magic, version, checksum,
+    /// and every invariant the format promises. Never panics on bad
+    /// bytes.
+    pub fn load<R: Read>(r: &mut R) -> Result<SolverState, CheckpointError> {
+        let mut buf = Vec::new();
+        r.read_to_end(&mut buf)?;
+        format::decode(&buf)
+    }
+
+    /// Save to a file, atomically: write a sibling temp file then
+    /// rename. The temp name is the full file name plus `.tmp` (not a
+    /// replaced extension), so checkpoints sharing a stem in one
+    /// directory never collide on the same temp file.
+    pub fn save_path(&self, path: &Path) -> Result<(), CheckpointError> {
+        let mut tmp_name = path.as_os_str().to_owned();
+        tmp_name.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp_name);
+        {
+            let mut fh = std::fs::File::create(&tmp)?;
+            self.save(&mut fh)?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Load from a file.
+    pub fn load_path(path: &Path) -> Result<SolverState, CheckpointError> {
+        let mut fh = std::fs::File::open(path)?;
+        SolverState::load(&mut fh)
+    }
+
+    /// Number of nonzero metric duals carried.
+    pub fn nnz_duals(&self) -> usize {
+        self.metric_duals.len()
+    }
+
+    // --- captures (called by the drivers at checkpoint boundaries) ----------
+
+    /// Snapshot a full-strategy CC-LP solve. `metric_duals` must be the
+    /// key-sorted nonzero duals written by the pass just completed.
+    pub(crate) fn capture_cc_full(
+        state: &CcState,
+        metric_duals: Vec<(u64, f64)>,
+        pass: usize,
+        triplet_visits: u64,
+        history: &[CheckRecord],
+    ) -> SolverState {
+        debug_assert!(metric_duals.windows(2).all(|p| p[0].0 < p[1].0));
+        SolverState {
+            problem: Problem::CcLp,
+            n: state.n,
+            gamma: state.gamma,
+            pass: pass as u64,
+            triplet_visits,
+            next_check: 0,
+            skip_initial_sweep: false,
+            x: state.x.clone(),
+            f: state.f.clone(),
+            y_upper: state.y_upper.clone(),
+            y_lower: state.y_lower.clone(),
+            y_box: if state.include_box { state.y_box.clone() } else { Vec::new() },
+            w: state.w.clone(),
+            d_hash: hash_f64s(&state.d),
+            metric_duals,
+            active: Vec::new(),
+            history: history.to_vec(),
+        }
+    }
+
+    /// Snapshot an active-strategy CC-LP solve.
+    pub(crate) fn capture_cc_active(
+        state: &CcState,
+        active: &mut ActiveSet,
+        pass: usize,
+        triplet_visits: u64,
+        next_check: usize,
+        history: &[CheckRecord],
+    ) -> SolverState {
+        let (metric_duals, members) = flatten_active(active);
+        SolverState {
+            problem: Problem::CcLp,
+            n: state.n,
+            gamma: state.gamma,
+            pass: pass as u64,
+            triplet_visits,
+            next_check: next_check as u64,
+            skip_initial_sweep: false,
+            x: state.x.clone(),
+            f: state.f.clone(),
+            y_upper: state.y_upper.clone(),
+            y_lower: state.y_lower.clone(),
+            y_box: if state.include_box { state.y_box.clone() } else { Vec::new() },
+            w: state.w.clone(),
+            d_hash: hash_f64s(&state.d),
+            metric_duals,
+            active: members,
+            history: history.to_vec(),
+        }
+    }
+
+    /// Snapshot a full-strategy nearness solve.
+    pub(crate) fn capture_nearness_full(
+        inst: &MetricNearnessInstance,
+        x: &[f64],
+        metric_duals: Vec<(u64, f64)>,
+        pass: usize,
+        triplet_visits: u64,
+        history: &[CheckRecord],
+    ) -> SolverState {
+        SolverState {
+            problem: Problem::Nearness,
+            n: inst.n,
+            gamma: 0.0,
+            pass: pass as u64,
+            triplet_visits,
+            next_check: 0,
+            skip_initial_sweep: false,
+            x: x.to_vec(),
+            f: Vec::new(),
+            y_upper: Vec::new(),
+            y_lower: Vec::new(),
+            y_box: Vec::new(),
+            w: inst.w.as_slice().to_vec(),
+            d_hash: hash_f64s(inst.d.as_slice()),
+            metric_duals,
+            active: Vec::new(),
+            history: history.to_vec(),
+        }
+    }
+
+    /// Snapshot an active-strategy nearness solve.
+    pub(crate) fn capture_nearness_active(
+        inst: &MetricNearnessInstance,
+        x: &[f64],
+        active: &mut ActiveSet,
+        pass: usize,
+        triplet_visits: u64,
+        next_check: usize,
+        history: &[CheckRecord],
+    ) -> SolverState {
+        let (metric_duals, members) = flatten_active(active);
+        SolverState {
+            problem: Problem::Nearness,
+            n: inst.n,
+            gamma: 0.0,
+            pass: pass as u64,
+            triplet_visits,
+            next_check: next_check as u64,
+            skip_initial_sweep: false,
+            x: x.to_vec(),
+            f: Vec::new(),
+            y_upper: Vec::new(),
+            y_lower: Vec::new(),
+            y_box: Vec::new(),
+            w: inst.w.as_slice().to_vec(),
+            d_hash: hash_f64s(inst.d.as_slice()),
+            metric_duals,
+            active: members,
+            history: history.to_vec(),
+        }
+    }
+
+    // --- resume validation and restoration ----------------------------------
+
+    /// Check that this state can resume a CC-LP solve of `inst` under
+    /// `opts`: same problem, size, targets, weights (bitwise — for a
+    /// *changed* instance use [`warm_start_cc`]), gamma, and box setting.
+    pub fn validate_cc(
+        &self,
+        inst: &CcLpInstance,
+        opts: &SolveOpts,
+    ) -> Result<(), CheckpointError> {
+        let mismatch = |msg: String| Err(CheckpointError::Mismatch(msg));
+        if self.problem != Problem::CcLp {
+            return mismatch("state is not a CC-LP checkpoint".into());
+        }
+        if self.n != inst.n {
+            return mismatch(format!("state has n = {}, instance has n = {}", self.n, inst.n));
+        }
+        if self.gamma != opts.gamma {
+            return mismatch(format!(
+                "state was saved with gamma = {}, opts use {}",
+                self.gamma, opts.gamma
+            ));
+        }
+        if opts.include_box != !self.y_box.is_empty() {
+            return mismatch("box-constraint setting differs from the saved state".into());
+        }
+        if self.w != inst.w.as_slice() {
+            return mismatch(
+                "instance weights differ from the saved state (use warm_start_cc)".into(),
+            );
+        }
+        if self.d_hash != hash_f64s(inst.d.as_slice()) {
+            return mismatch("instance targets differ from the saved state".into());
+        }
+        self.check_keys_in_range()
+    }
+
+    /// Check that this state can resume a nearness solve of `inst`.
+    pub fn validate_nearness(
+        &self,
+        inst: &MetricNearnessInstance,
+    ) -> Result<(), CheckpointError> {
+        let mismatch = |msg: String| Err(CheckpointError::Mismatch(msg));
+        if self.problem != Problem::Nearness {
+            return mismatch("state is not a metric-nearness checkpoint".into());
+        }
+        if self.n != inst.n {
+            return mismatch(format!("state has n = {}, instance has n = {}", self.n, inst.n));
+        }
+        if self.w != inst.w.as_slice() {
+            return mismatch(
+                "instance weights differ from the saved state (use warm_start_nearness)".into(),
+            );
+        }
+        if self.d_hash != hash_f64s(inst.d.as_slice()) {
+            return mismatch("instance dissimilarities differ from the saved state".into());
+        }
+        self.check_keys_in_range()
+    }
+
+    /// Guard hand-built states: every carried key must decode to a valid
+    /// triplet below `n` (states from `load` are already validated).
+    fn check_keys_in_range(&self) -> Result<(), CheckpointError> {
+        let valid = |key: u64| {
+            let (i, j, k) = decode_key(key);
+            i < j && j < k && k < self.n
+        };
+        if self.metric_duals.iter().any(|&(key, _)| !valid(key))
+            || self.active.iter().any(|m| !valid(m.key))
+        {
+            return Err(CheckpointError::Corrupt(
+                "state carries a key outside the instance's triplet range".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Rebuild the mutable CC solve state this snapshot describes.
+    pub(crate) fn restore_cc_state(&self, inst: &CcLpInstance, opts: &SolveOpts) -> CcState {
+        let mut st = CcState::new(inst, opts.gamma, opts.include_box);
+        st.x.copy_from_slice(&self.x);
+        st.f.copy_from_slice(&self.f);
+        st.y_upper.copy_from_slice(&self.y_upper);
+        st.y_lower.copy_from_slice(&self.y_lower);
+        if !self.y_box.is_empty() {
+            st.y_box.copy_from_slice(&self.y_box);
+        }
+        st
+    }
+
+    /// The carried constraints as active-set entries: membership drives
+    /// (preserving forget streaks), duals attach to their triplets, and
+    /// for full-strategy states (no membership) every nonzero-dual
+    /// triplet becomes a fresh member.
+    pub(crate) fn active_entries(&self) -> Vec<ActiveTriplet> {
+        // Group key-sorted dual lanes into per-triplet [f64; 3]s.
+        let mut triplets: Vec<(u64, [f64; 3])> = Vec::new();
+        for &(key, v) in &self.metric_duals {
+            let base = key & !3;
+            let t = (key & 3) as usize;
+            match triplets.last_mut() {
+                Some((b, y)) if *b == base => y[t] = v,
+                _ => {
+                    let mut y = [0.0; 3];
+                    y[t] = v;
+                    triplets.push((base, y));
+                }
+            }
+        }
+        if self.active.is_empty() {
+            return triplets
+                .into_iter()
+                .map(|(key, y)| ActiveTriplet { key, y, zero_passes: 0 })
+                .collect();
+        }
+        // Merge two key-sorted lists; stray dual triplets outside the
+        // membership (possible only for hand-built states) join fresh.
+        let mut out = Vec::with_capacity(self.active.len());
+        let mut di = 0;
+        for m in &self.active {
+            while di < triplets.len() && triplets[di].0 < m.key {
+                let (key, y) = triplets[di];
+                out.push(ActiveTriplet { key, y, zero_passes: 0 });
+                di += 1;
+            }
+            let mut y = [0.0; 3];
+            if di < triplets.len() && triplets[di].0 == m.key {
+                y = triplets[di].1;
+                di += 1;
+            }
+            out.push(ActiveTriplet { key: m.key, y, zero_passes: m.zero_passes });
+        }
+        while di < triplets.len() {
+            let (key, y) = triplets[di];
+            out.push(ActiveTriplet { key, y, zero_passes: 0 });
+            di += 1;
+        }
+        out
+    }
+
+    /// Distribute the carried metric duals into per-worker lists, each in
+    /// that worker's deterministic visit order under `schedule` and
+    /// `assignment` — exactly what each worker's [`DualStore`] would hold
+    /// at this point of an uninterrupted run, for any worker count.
+    pub(crate) fn worker_duals(
+        &self,
+        schedule: &Schedule,
+        assignment: Assignment,
+        p: usize,
+    ) -> Vec<Vec<(u64, f64)>> {
+        split_duals(schedule, assignment, p, &self.metric_duals)
+    }
+}
+
+/// Flatten an active set into (key-sorted nonzero duals, key-sorted
+/// membership).
+fn flatten_active(active: &mut ActiveSet) -> (Vec<(u64, f64)>, Vec<ActiveMember>) {
+    let mut duals = Vec::new();
+    let mut members = Vec::new();
+    for e in active.iter() {
+        members.push(ActiveMember { key: e.key, zero_passes: e.zero_passes });
+        for (t, &v) in e.y.iter().enumerate() {
+            if v != 0.0 {
+                duals.push((e.key | t as u64, v));
+            }
+        }
+    }
+    duals.sort_unstable_by_key(|&(k, _)| k);
+    members.sort_unstable_by_key(|m| m.key);
+    (duals, members)
+}
+
+/// Split a key-sorted dual list by owning worker, ordering each worker's
+/// share by its visit order: waves in execution order, owned tiles by
+/// ascending in-wave index, cube order (j-chunks, then `(i, j, k)`)
+/// inside a tile, constraint type ascending — the order
+/// [`crate::solver::hot_loop`] fetches duals in.
+pub(crate) fn split_duals(
+    schedule: &Schedule,
+    assignment: Assignment,
+    p: usize,
+    duals: &[(u64, f64)],
+) -> Vec<Vec<(u64, f64)>> {
+    let router = TileRouter::new(schedule);
+    let mut tagged: Vec<Vec<((usize, usize, usize, u64), (u64, f64))>> =
+        (0..p).map(|_| Vec::new()).collect();
+    for &(key, y) in duals {
+        let (i, j, k) = decode_key(key);
+        let (wi, r, chunk) = router.locate(i, j, k);
+        let tid = assignment.worker_of(r, wi, p);
+        // Within a chunk the cube order is (i, j, k, t) — the key's
+        // numeric order.
+        tagged[tid].push(((wi, r, chunk, key), (key, y)));
+    }
+    tagged
+        .into_iter()
+        .map(|mut v| {
+            v.sort_unstable_by_key(|&(k, _)| k);
+            v.into_iter().map(|(_, e)| e).collect()
+        })
+        .collect()
+}
+
+/// Merge every worker's just-written duals into one key-sorted list —
+/// the canonical checkpoint form.
+pub(crate) fn collect_duals(stores: &mut PerWorker<DualStore>) -> Vec<(u64, f64)> {
+    let mut all = Vec::new();
+    for s in stores.iter_mut() {
+        all.extend(s.iter_next());
+    }
+    all.sort_unstable_by_key(|&(k, _)| k);
+    all
+}
+
+/// FNV-1a over the bit patterns of a float slice (instance
+/// fingerprint). Shares the hash core with the format's checksum.
+pub fn hash_f64s(xs: &[f64]) -> u64 {
+    let mut h = format::Fnv1a::new();
+    for &v in xs {
+        h.update(&v.to_bits().to_le_bytes());
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::active::set::triplet_key;
+    use crate::solver::duals::metric_key;
+    use crate::solver::dykstra_serial;
+    use crate::solver::hot_loop;
+    use crate::util::shared::SharedMut;
+
+    #[test]
+    fn hash_distinguishes_and_is_stable() {
+        let a = vec![1.0, 2.0, 3.0];
+        let mut b = a.clone();
+        assert_eq!(hash_f64s(&a), hash_f64s(&b));
+        b[1] = 2.0 + 1e-15;
+        assert_ne!(hash_f64s(&a), hash_f64s(&b));
+        // -0.0 and 0.0 differ bitwise, so the fingerprint sees them.
+        assert_ne!(hash_f64s(&[0.0]), hash_f64s(&[-0.0]));
+    }
+
+    #[test]
+    fn active_entries_derived_from_full_state_duals() {
+        let base = triplet_key(1, 2, 5);
+        let st = SolverState {
+            problem: Problem::Nearness,
+            n: 8,
+            gamma: 0.0,
+            pass: 0,
+            triplet_visits: 0,
+            next_check: 0,
+            skip_initial_sweep: false,
+            x: vec![0.0; 28],
+            f: vec![],
+            y_upper: vec![],
+            y_lower: vec![],
+            y_box: vec![],
+            w: vec![1.0; 28],
+            d_hash: 0,
+            metric_duals: vec![(base | 1, 0.5), (base | 2, 0.25), (triplet_key(2, 3, 4), 0.1)],
+            active: vec![],
+            history: vec![],
+        };
+        let entries = st.active_entries();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].key, base);
+        assert_eq!(entries[0].y, [0.0, 0.5, 0.25]);
+        assert_eq!(entries[1].key, triplet_key(2, 3, 4));
+        assert_eq!(entries[1].y, [0.1, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn active_entries_membership_preserves_streaks_and_zero_duals() {
+        let st = SolverState {
+            problem: Problem::Nearness,
+            n: 8,
+            gamma: 0.0,
+            pass: 0,
+            triplet_visits: 0,
+            next_check: 0,
+            skip_initial_sweep: false,
+            x: vec![0.0; 28],
+            f: vec![],
+            y_upper: vec![],
+            y_lower: vec![],
+            y_box: vec![],
+            w: vec![1.0; 28],
+            d_hash: 0,
+            metric_duals: vec![(triplet_key(0, 1, 2), 0.7)],
+            active: vec![
+                ActiveMember { key: triplet_key(0, 1, 2), zero_passes: 0 },
+                ActiveMember { key: triplet_key(0, 1, 3), zero_passes: 2 },
+            ],
+            history: vec![],
+        };
+        let entries = st.active_entries();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].y, [0.7, 0.0, 0.0]);
+        assert_eq!(entries[1].y, [0.0; 3]);
+        assert_eq!(entries[1].zero_passes, 2);
+    }
+
+    /// split_duals must reproduce each worker's DualStore contents: run
+    /// one serial-equivalent metric pass per worker layout and compare
+    /// against redistributing the merged list.
+    #[test]
+    fn split_duals_matches_worker_visit_order() {
+        let inst = CcLpInstance::random(17, 0.5, 0.7, 1.9, 23);
+        let schedule = Schedule::new(17, 3);
+        for p in [1usize, 2, 5] {
+            for assignment in [Assignment::RoundRobin, Assignment::Rotated] {
+                // Run one real parallel-order pass to fill per-worker stores.
+                let mut state = CcState::new(&inst, 5.0, true);
+                for (v, d) in state.x.iter_mut().zip(inst.d.as_slice()) {
+                    *v = 0.9 * d;
+                }
+                let mut stores: Vec<DualStore> = (0..p).map(|_| DualStore::new()).collect();
+                for s in stores.iter_mut() {
+                    s.begin_pass();
+                }
+                {
+                    let x = SharedMut::new(state.x.as_mut_slice());
+                    for (wi, wave) in schedule.waves().iter().enumerate() {
+                        // Serial emulation of the wave: workers in any
+                        // order is fine (tiles are conflict-free).
+                        for tid in 0..p {
+                            let mut r = assignment.first_tile(tid, wi, p);
+                            while r < wave.len() {
+                                unsafe {
+                                    hot_loop::process_tile(
+                                        &x,
+                                        &state.winv,
+                                        &state.col_starts,
+                                        &wave[r],
+                                        3,
+                                        &mut stores[tid],
+                                    )
+                                };
+                                r += p;
+                            }
+                        }
+                    }
+                }
+                let per_worker: Vec<Vec<(u64, f64)>> =
+                    stores.iter().map(|s| s.iter_next().collect()).collect();
+                let mut merged: Vec<(u64, f64)> =
+                    per_worker.iter().flatten().copied().collect();
+                merged.sort_unstable_by_key(|&(k, _)| k);
+                let split = split_duals(&schedule, assignment, p, &merged);
+                assert_eq!(split, per_worker, "p={p} {assignment:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrips_a_real_solve_state() {
+        let inst = CcLpInstance::random(12, 0.5, 0.8, 1.6, 7);
+        let opts = SolveOpts { max_passes: 4, checkpoint_every: 2, ..Default::default() };
+        let mut states = Vec::new();
+        dykstra_serial::solve_checkpointed(&inst, &opts, None, &mut |s| states.push(s.clone()))
+            .unwrap();
+        assert!(!states.is_empty());
+        for s in &states {
+            let mut bytes = Vec::new();
+            s.save(&mut bytes).unwrap();
+            let back = SolverState::load(&mut bytes.as_slice()).unwrap();
+            assert_eq!(*s, back);
+            back.validate_cc(&inst, &opts).unwrap();
+        }
+    }
+
+    #[test]
+    fn validate_rejects_wrong_instance_and_opts() {
+        let inst = CcLpInstance::random(10, 0.5, 0.8, 1.6, 7);
+        let opts = SolveOpts { max_passes: 2, checkpoint_every: 1, ..Default::default() };
+        let mut last = None;
+        dykstra_serial::solve_checkpointed(&inst, &opts, None, &mut |s| last = Some(s.clone()))
+            .unwrap();
+        let st = last.unwrap();
+        st.validate_cc(&inst, &opts).unwrap();
+        let other = CcLpInstance::random(10, 0.5, 0.8, 1.6, 8);
+        assert!(st.validate_cc(&other, &opts).is_err(), "different weights must be rejected");
+        let bad_gamma = SolveOpts { gamma: 7.0, ..opts };
+        assert!(st.validate_cc(&inst, &bad_gamma).is_err());
+        let no_box = SolveOpts { include_box: false, ..opts };
+        assert!(st.validate_cc(&inst, &no_box).is_err());
+        let near = MetricNearnessInstance::random(10, 2.0, 3);
+        assert!(st.validate_nearness(&near).is_err());
+    }
+
+    #[test]
+    fn metric_key_and_triplet_key_share_layout() {
+        // The checkpoint relies on duals::metric_key and set::triplet_key
+        // agreeing: base | t IS the dual key.
+        let base = triplet_key(3, 9, 14);
+        for t in 0..3 {
+            assert_eq!(base | t as u64, metric_key(3, 9, 14, t));
+        }
+    }
+}

@@ -1,0 +1,400 @@
+//! Warm starts for perturbed re-solves: carry a solved instance's duals
+//! to an updated-weights instance.
+//!
+//! Dykstra's method for these projection QPs is block-coordinate ascent
+//! on the dual, so any nonnegative dual vector is a valid starting point
+//! *provided the primal is consistent with it*: the iterate invariant
+//! `x = x0 − W⁻¹Aᵀŷ` must hold. A warm start therefore does three
+//! things:
+//!
+//! 1. **Rescale** each carried dual by its constraint's curvature ratio
+//!    `(aᵀW⁻¹a) / (aᵀW'⁻¹a)`, which preserves the constraint-space
+//!    displacement `aᵀ(W'⁻¹a)·ŷ'` each dual contributes — the best
+//!    single-scalar transplant of the old correction when the three
+//!    touched weights move independently.
+//! 2. **Filter** duals at or below `drop_tol` — near-converged duals of
+//!    constraints the perturbation deactivated just slow the first
+//!    passes down.
+//! 3. **Rebuild the primal** from the invariant under the *new* weights,
+//!    so the state handed to the solver is exactly a mid-ascent Dykstra
+//!    state of the perturbed problem.
+//!
+//! The carried nonzero-dual triplets also become the seeded active set,
+//! and [`SolverState::skip_initial_sweep`] defers the first discovery
+//! sweep — the expensive early discovery phase the warm start exists to
+//! skip.
+
+use super::format::CheckpointError;
+use super::{hash_f64s, ActiveMember, Problem, SolverState};
+use crate::instance::metric_nearness::MetricNearnessInstance;
+use crate::instance::CcLpInstance;
+use crate::solver::active::set::decode_key;
+use crate::solver::projection::METRIC_SIGNS;
+use crate::solver::SolveOpts;
+
+/// Warm-start tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct WarmStartOpts {
+    /// Rescale carried duals by the curvature ratio (on by default;
+    /// off carries them verbatim).
+    pub rescale: bool,
+    /// Drop carried duals at or below this value after rescaling
+    /// (0 drops nothing but exact zeros).
+    pub drop_tol: f64,
+}
+
+impl Default for WarmStartOpts {
+    fn default() -> Self {
+        WarmStartOpts { rescale: true, drop_tol: 0.0 }
+    }
+}
+
+fn mismatch(msg: String) -> CheckpointError {
+    CheckpointError::Mismatch(msg)
+}
+
+/// Build a warm-start state for a perturbed CC-LP instance from a state
+/// saved on the original instance (same `n` and targets, updated
+/// weights). `opts` supplies the gamma and box setting of the upcoming
+/// solve. Feed the result to any `resume` entry point.
+pub fn warm_start_cc(
+    state: &SolverState,
+    inst: &CcLpInstance,
+    opts: &SolveOpts,
+    wopts: &WarmStartOpts,
+) -> Result<SolverState, CheckpointError> {
+    if state.problem != Problem::CcLp {
+        return Err(mismatch("warm_start_cc needs a CC-LP state".into()));
+    }
+    if state.n != inst.n {
+        return Err(mismatch(format!(
+            "state has n = {}, perturbed instance has n = {}",
+            state.n, inst.n
+        )));
+    }
+    let m = state.x.len();
+    let w_new = inst.w.as_slice();
+    let w_old = state.w.as_slice();
+    debug_assert_eq!(w_new.len(), m);
+    let winv_new: Vec<f64> = w_new.iter().map(|&v| 1.0 / v).collect();
+    let col_starts = inst.d.col_starts();
+
+    // Pair and box rows touch one pair each: the curvature ratio reduces
+    // to w'_e / w_e.
+    let carry_pair = |ys: &[f64]| -> Vec<f64> {
+        ys.iter()
+            .enumerate()
+            .map(|(e, &y)| {
+                let v = if wopts.rescale { y * w_new[e] / w_old[e] } else { y };
+                if v > wopts.drop_tol {
+                    v
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    };
+    let y_upper = carry_pair(&state.y_upper);
+    let y_lower = carry_pair(&state.y_lower);
+    let y_box = if opts.include_box {
+        if state.y_box.is_empty() {
+            vec![0.0; m]
+        } else {
+            carry_pair(&state.y_box)
+        }
+    } else {
+        Vec::new()
+    };
+
+    let metric_duals = carry_metric(
+        &state.metric_duals,
+        w_old,
+        &winv_new,
+        col_starts,
+        wopts.rescale,
+        wopts.drop_tol,
+    );
+
+    // Rebuild the primal from x0' = (x = 0, f = -gamma) under the new
+    // weights: x = x0' − W'⁻¹ Aᵀ ŷ'.
+    let mut x = vec![0.0; m];
+    let mut f = vec![-opts.gamma; m];
+    for e in 0..m {
+        let yb = if y_box.is_empty() { 0.0 } else { y_box[e] };
+        x[e] += winv_new[e] * (y_lower[e] - y_upper[e] - yb);
+        f[e] += winv_new[e] * (y_upper[e] + y_lower[e]);
+    }
+    apply_metric_duals(&mut x, &metric_duals, &winv_new, col_starts);
+
+    let active = members_of(&metric_duals);
+    Ok(SolverState {
+        problem: Problem::CcLp,
+        n: inst.n,
+        gamma: opts.gamma,
+        pass: 0,
+        triplet_visits: 0,
+        next_check: 0,
+        skip_initial_sweep: true,
+        x,
+        f,
+        y_upper,
+        y_lower,
+        y_box,
+        w: w_new.to_vec(),
+        d_hash: hash_f64s(inst.d.as_slice()),
+        metric_duals,
+        active,
+        history: Vec::new(),
+    })
+}
+
+/// Build a warm-start state for a perturbed metric-nearness instance
+/// (same `n`; weights and/or dissimilarities updated).
+pub fn warm_start_nearness(
+    state: &SolverState,
+    inst: &MetricNearnessInstance,
+    wopts: &WarmStartOpts,
+) -> Result<SolverState, CheckpointError> {
+    if state.problem != Problem::Nearness {
+        return Err(mismatch("warm_start_nearness needs a metric-nearness state".into()));
+    }
+    if state.n != inst.n {
+        return Err(mismatch(format!(
+            "state has n = {}, perturbed instance has n = {}",
+            state.n, inst.n
+        )));
+    }
+    let w_new = inst.w.as_slice();
+    let w_old = state.w.as_slice();
+    let winv_new: Vec<f64> = w_new.iter().map(|&v| 1.0 / v).collect();
+    let col_starts = inst.d.col_starts();
+
+    let metric_duals = carry_metric(
+        &state.metric_duals,
+        w_old,
+        &winv_new,
+        col_starts,
+        wopts.rescale,
+        wopts.drop_tol,
+    );
+
+    // x0' = D' under the new weights: x = D' − W'⁻¹ Aᵀ ŷ'.
+    let mut x = inst.d.as_slice().to_vec();
+    apply_metric_duals(&mut x, &metric_duals, &winv_new, col_starts);
+
+    let active = members_of(&metric_duals);
+    Ok(SolverState {
+        problem: Problem::Nearness,
+        n: inst.n,
+        gamma: 0.0,
+        pass: 0,
+        triplet_visits: 0,
+        next_check: 0,
+        skip_initial_sweep: true,
+        x,
+        f: Vec::new(),
+        y_upper: Vec::new(),
+        y_lower: Vec::new(),
+        y_box: Vec::new(),
+        w: w_new.to_vec(),
+        d_hash: hash_f64s(inst.d.as_slice()),
+        metric_duals,
+        active,
+        history: Vec::new(),
+    })
+}
+
+/// Packed indices of a triplet's three pairs.
+#[inline]
+fn triplet_pairs(col_starts: &[usize], i: usize, j: usize, k: usize) -> (usize, usize, usize) {
+    let ci = col_starts[i];
+    (ci + (j - i - 1), ci + (k - i - 1), col_starts[j] + (k - j - 1))
+}
+
+/// Rescale-and-filter the metric duals (key order preserved).
+fn carry_metric(
+    duals: &[(u64, f64)],
+    w_old: &[f64],
+    winv_new: &[f64],
+    col_starts: &[usize],
+    rescale: bool,
+    drop_tol: f64,
+) -> Vec<(u64, f64)> {
+    let mut out = Vec::with_capacity(duals.len());
+    let mut last_base = u64::MAX;
+    let mut ratio = 1.0;
+    for &(key, y) in duals {
+        let base = key & !3;
+        if base != last_base {
+            last_base = base;
+            ratio = if rescale {
+                let (i, j, k) = decode_key(base);
+                let (pij, pik, pjk) = triplet_pairs(col_starts, i, j, k);
+                let curv_old = 1.0 / w_old[pij] + 1.0 / w_old[pik] + 1.0 / w_old[pjk];
+                let curv_new = winv_new[pij] + winv_new[pik] + winv_new[pjk];
+                curv_old / curv_new
+            } else {
+                1.0
+            };
+        }
+        let v = y * ratio;
+        if v > drop_tol {
+            out.push((key, v));
+        }
+    }
+    out
+}
+
+/// Subtract each dual's correction from `x` (the `− W⁻¹Aᵀŷ` term of the
+/// Dykstra invariant).
+fn apply_metric_duals(
+    x: &mut [f64],
+    duals: &[(u64, f64)],
+    winv: &[f64],
+    col_starts: &[usize],
+) {
+    for &(key, y) in duals {
+        let t = (key & 3) as usize;
+        let (i, j, k) = decode_key(key);
+        let (pij, pik, pjk) = triplet_pairs(col_starts, i, j, k);
+        let [s0, s1, s2] = METRIC_SIGNS[t];
+        x[pij] -= winv[pij] * s0 * y;
+        x[pik] -= winv[pik] * s1 * y;
+        x[pjk] -= winv[pjk] * s2 * y;
+    }
+}
+
+/// Membership list of a key-sorted dual list: one member per distinct
+/// triplet, fresh forget streaks.
+fn members_of(duals: &[(u64, f64)]) -> Vec<ActiveMember> {
+    let mut out: Vec<ActiveMember> = Vec::new();
+    for &(key, _) in duals {
+        let base = key & !3;
+        if out.last().map(|m| m.key) != Some(base) {
+            out.push(ActiveMember { key: base, zero_passes: 0 });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::dykstra_serial;
+    use crate::solver::nearness::{self, NearnessOpts};
+
+    /// Capture the final state of a serial CC solve.
+    fn final_cc_state(inst: &CcLpInstance, opts: &SolveOpts) -> SolverState {
+        let mut last = None;
+        let opts = SolveOpts { checkpoint_every: usize::MAX, ..*opts };
+        dykstra_serial::solve_checkpointed(inst, &opts, None, &mut |s| last = Some(s.clone()))
+            .unwrap();
+        last.expect("final checkpoint emitted")
+    }
+
+    #[test]
+    fn unchanged_instance_carries_everything_and_stays_consistent() {
+        let inst = CcLpInstance::random(12, 0.5, 0.8, 1.6, 5);
+        let opts = SolveOpts { max_passes: 60, ..Default::default() };
+        let st = final_cc_state(&inst, &opts);
+        assert!(!st.metric_duals.is_empty(), "test needs live duals");
+        let warm = warm_start_cc(&st, &inst, &opts, &WarmStartOpts::default()).unwrap();
+        // Same weights: ratios are exactly 1, duals carried verbatim.
+        assert_eq!(warm.metric_duals, st.metric_duals);
+        assert_eq!(warm.y_upper, st.y_upper);
+        // The rebuilt primal satisfies the Dykstra invariant, which the
+        // iterated x also satisfies — they agree to rounding error.
+        for (a, b) in warm.x.iter().zip(st.x.iter()) {
+            assert!((a - b).abs() < 1e-9, "invariant rebuild drifted: {a} vs {b}");
+        }
+        for (a, b) in warm.f.iter().zip(st.f.iter()) {
+            assert!((a - b).abs() < 1e-9);
+        }
+        assert!(warm.skip_initial_sweep);
+        assert_eq!(warm.pass, 0);
+        assert_eq!(warm.active.len(), {
+            let mut bases: Vec<u64> = st.metric_duals.iter().map(|&(k, _)| k & !3).collect();
+            bases.dedup();
+            bases.len()
+        });
+        warm.validate_cc(&inst, &opts).unwrap();
+    }
+
+    #[test]
+    fn perturbed_weights_rescale_by_curvature_ratio() {
+        let inst = CcLpInstance::random(10, 0.5, 0.8, 1.6, 9);
+        let opts = SolveOpts { max_passes: 40, ..Default::default() };
+        let st = final_cc_state(&inst, &opts);
+        assert!(!st.metric_duals.is_empty());
+        let perturbed = inst.perturb_weights(0.5, 0.3, 11);
+        let warm = warm_start_cc(&st, &perturbed, &opts, &WarmStartOpts::default()).unwrap();
+        warm.validate_cc(&perturbed, &opts).unwrap();
+        let col_starts = perturbed.d.col_starts().to_vec();
+        let wn = perturbed.w.as_slice();
+        let wo = inst.w.as_slice();
+        for (&(key, v_new), &(key_old, v_old)) in
+            warm.metric_duals.iter().zip(st.metric_duals.iter())
+        {
+            assert_eq!(key, key_old);
+            let (i, j, k) = decode_key(key);
+            let (pij, pik, pjk) = triplet_pairs(&col_starts, i, j, k);
+            let curv_old = 1.0 / wo[pij] + 1.0 / wo[pik] + 1.0 / wo[pjk];
+            let curv_new = 1.0 / wn[pij] + 1.0 / wn[pik] + 1.0 / wn[pjk];
+            let want = v_old * curv_old / curv_new;
+            assert!((v_new - want).abs() < 1e-12 * want.abs().max(1.0));
+            assert!(v_new > 0.0);
+        }
+    }
+
+    #[test]
+    fn drop_tol_filters_small_duals_and_membership_follows() {
+        let inst = CcLpInstance::random(10, 0.5, 0.8, 1.6, 13);
+        let opts = SolveOpts { max_passes: 40, ..Default::default() };
+        let st = final_cc_state(&inst, &opts);
+        let vals: Vec<f64> = st.metric_duals.iter().map(|&(_, v)| v).collect();
+        assert!(!vals.is_empty());
+        let mut sorted = vals.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let cut = sorted[sorted.len() / 2];
+        let wopts = WarmStartOpts { rescale: false, drop_tol: cut };
+        let warm = warm_start_cc(&st, &inst, &opts, &wopts).unwrap();
+        assert!(warm.metric_duals.len() < st.metric_duals.len());
+        assert!(warm.metric_duals.iter().all(|&(_, v)| v > cut));
+        // every member corresponds to at least one kept dual
+        for m in &warm.active {
+            assert!(warm.metric_duals.iter().any(|&(k, _)| k & !3 == m.key));
+        }
+    }
+
+    #[test]
+    fn nearness_warm_state_resumes_near_the_old_solution() {
+        let inst = MetricNearnessInstance::random(14, 2.0, 3);
+        let opts = NearnessOpts {
+            max_passes: 400,
+            check_every: 5,
+            tol_violation: 1e-8,
+            checkpoint_every: usize::MAX,
+            ..Default::default()
+        };
+        let mut last = None;
+        nearness::solve_checkpointed(&inst, &opts, None, &mut |s| last = Some(s.clone()))
+            .unwrap();
+        let st = last.unwrap();
+        let warm = warm_start_nearness(&st, &inst, &WarmStartOpts::default()).unwrap();
+        warm.validate_nearness(&inst).unwrap();
+        for (a, b) in warm.x.iter().zip(st.x.iter()) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn wrong_problem_or_size_rejected() {
+        let inst = CcLpInstance::random(10, 0.5, 0.8, 1.6, 13);
+        let opts = SolveOpts { max_passes: 5, ..Default::default() };
+        let st = final_cc_state(&inst, &opts);
+        let near = MetricNearnessInstance::random(10, 2.0, 3);
+        assert!(warm_start_nearness(&st, &near, &WarmStartOpts::default()).is_err());
+        let small = CcLpInstance::random(9, 0.5, 0.8, 1.6, 13);
+        assert!(warm_start_cc(&st, &small, &opts, &WarmStartOpts::default()).is_err());
+    }
+}

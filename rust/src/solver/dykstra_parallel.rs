@@ -14,6 +14,7 @@
 //! constraint *order* (hence the iterate sequence) differs from the serial
 //! baseline, which §IV-D discusses; both converge.
 
+use super::checkpoint::{self, CheckRecord, SolverState};
 use super::duals::DualStore;
 use super::projection::{visit_box_upper, visit_pair_lower, visit_pair_upper};
 use super::schedule::{Assignment, Schedule};
@@ -27,11 +28,38 @@ use crate::util::shared::{PerWorker, SharedMut};
 /// dispatching on [`super::Strategy`]: full sweeps run here, the active
 /// set runs in [`super::active`].
 pub fn solve(inst: &CcLpInstance, opts: &SolveOpts) -> Solution {
+    solve_checkpointed(inst, opts, None, &mut |_| {})
+        .expect("cold parallel solve cannot fail")
+}
+
+/// Continue a previously saved solve from its checkpoint, dispatching on
+/// [`super::Strategy`] like [`solve`]. With unchanged options this
+/// reproduces the uninterrupted run bitwise — and because pass results
+/// are bitwise independent of the worker count, `opts.threads` may even
+/// differ from the saving run's.
+pub fn resume(
+    inst: &CcLpInstance,
+    opts: &SolveOpts,
+    state: &SolverState,
+) -> anyhow::Result<Solution> {
+    solve_checkpointed(inst, opts, Some(state), &mut |_| {})
+}
+
+/// Full-control entry point: optionally resume from a saved state and
+/// receive a [`SolverState`] through `on_checkpoint` every
+/// [`SolveOpts::checkpoint_every`] passes (plus one for the final
+/// state). Dispatches on [`super::Strategy`].
+pub fn solve_checkpointed(
+    inst: &CcLpInstance,
+    opts: &SolveOpts,
+    resume_from: Option<&SolverState>,
+    on_checkpoint: &mut dyn FnMut(&SolverState),
+) -> anyhow::Result<Solution> {
     if opts.strategy.is_active() {
-        return super::active::solve_cc(inst, opts);
+        return super::active::solve_cc_checkpointed(inst, opts, resume_from, on_checkpoint);
     }
     let schedule = Schedule::new(inst.n, opts.tile);
-    solve_with_schedule(inst, opts, &schedule)
+    solve_inner(inst, opts, &schedule, resume_from, on_checkpoint)
 }
 
 /// Solve with a prebuilt schedule (benchmarks reuse schedules across
@@ -41,6 +69,17 @@ pub fn solve_with_schedule(
     opts: &SolveOpts,
     schedule: &Schedule,
 ) -> Solution {
+    solve_inner(inst, opts, schedule, None, &mut |_| {})
+        .expect("cold parallel solve cannot fail")
+}
+
+fn solve_inner(
+    inst: &CcLpInstance,
+    opts: &SolveOpts,
+    schedule: &Schedule,
+    resume_from: Option<&SolverState>,
+    on_checkpoint: &mut dyn FnMut(&SolverState),
+) -> anyhow::Result<Solution> {
     assert_eq!(schedule.n(), inst.n, "schedule built for wrong n");
     assert!(
         !opts.strategy.is_active(),
@@ -48,51 +87,101 @@ pub fn solve_with_schedule(
     );
     let p = opts.threads.max(1);
     let triplets_per_pass = schedule.total_triplets();
-    let mut state = CcState::new(inst, opts.gamma, opts.include_box);
-    let stores = PerWorker::new((0..p).map(|_| DualStore::new()).collect());
+    let mut state = match resume_from {
+        Some(st) => {
+            st.validate_cc(inst, opts)?;
+            st.restore_cc_state(inst, opts)
+        }
+        None => CcState::new(inst, opts.gamma, opts.include_box),
+    };
+    let mut stores = PerWorker::new((0..p).map(|_| DualStore::new()).collect());
+    if let Some(st) = resume_from {
+        // Redistribute the saved key-sorted duals into each worker's
+        // deterministic visit order (valid for ANY worker count).
+        let per_worker = st.worker_duals(schedule, opts.assignment, p);
+        for (store, entries) in stores.iter_mut().zip(per_worker) {
+            store.restore(entries);
+        }
+    }
+    let start_pass = resume_from.map_or(0, |st| st.pass as usize);
+    let mut history: Vec<CheckRecord> =
+        resume_from.map(|st| st.history.clone()).unwrap_or_default();
+    // Cumulative work, carried across resumes (an active-strategy
+    // checkpoint's cheap passes keep their true cost).
+    let mut triplet_visits: u64 = resume_from.map_or(0, |st| st.triplet_visits);
     let mut pass_times = Vec::new();
     let mut residuals = Residuals::default();
-    let mut passes_done = 0;
+    let mut passes_done = start_pass;
     // passes_done at which `residuals` was measured (MAX = never).
     let mut measured_at = usize::MAX;
+    let mut last_saved = usize::MAX;
 
-    for pass in 0..opts.max_passes {
+    for pass in start_pass..opts.max_passes {
         let t0 = std::time::Instant::now();
         run_metric_phase(&mut state, schedule, &stores, p, opts.assignment);
         run_pair_phase(&mut state, p);
         passes_done = pass + 1;
+        triplet_visits += triplets_per_pass;
         if opts.track_pass_times {
             pass_times.push(t0.elapsed().as_secs_f64());
         }
+        let mut stop = false;
         if opts.check_every > 0 && passes_done % opts.check_every == 0 {
             residuals = compute_residuals(&state, p);
-            residuals.stamp_full_work(passes_done, triplets_per_pass);
+            residuals.stamp_work(triplet_visits, triplets_per_pass as usize);
             measured_at = passes_done;
+            history.push(CheckRecord {
+                pass: passes_done as u64,
+                max_violation: residuals.max_violation,
+                rel_gap: residuals.rel_gap,
+            });
             if residuals.max_violation <= opts.tol_violation
                 && residuals.rel_gap.abs() <= opts.tol_gap
             {
-                break;
+                stop = true;
             }
         }
+        if opts.checkpoint_every > 0 && (passes_done % opts.checkpoint_every == 0 || stop) {
+            on_checkpoint(&SolverState::capture_cc_full(
+                &state,
+                checkpoint::collect_duals(&mut stores),
+                passes_done,
+                triplet_visits,
+                &history,
+            ));
+            last_saved = passes_done;
+        }
+        if stop {
+            break;
+        }
+    }
+    if opts.checkpoint_every > 0 && last_saved != passes_done {
+        on_checkpoint(&SolverState::capture_cc_full(
+            &state,
+            checkpoint::collect_duals(&mut stores),
+            passes_done,
+            triplet_visits,
+            &history,
+        ));
     }
     // Re-measure unless the last checkpoint already measured the final
     // iterate — reported residuals always describe the returned x.
     if measured_at != passes_done {
         residuals = compute_residuals(&state, p);
-        residuals.stamp_full_work(passes_done, triplets_per_pass);
+        residuals.stamp_work(triplet_visits, triplets_per_pass as usize);
     }
     let mut stores = stores.into_inner();
     let nnz = stores.iter_mut().map(|s| s.nnz()).sum();
-    Solution {
+    Ok(Solution {
         x: state.x_matrix(),
         f: Some(state.f_matrix()),
         passes: passes_done,
         residuals,
         pass_times,
         nnz_duals: nnz,
-        metric_visits: passes_done as u64 * triplets_per_pass * 3,
+        metric_visits: triplet_visits * 3,
         active_triplets: triplets_per_pass as usize,
-    }
+    })
 }
 
 /// One wave-parallel sweep over all metric constraints.

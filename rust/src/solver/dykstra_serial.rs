@@ -3,6 +3,7 @@
 //! lexicographic triplet order with a single sparse dual array, then the
 //! pair (and optional box) constraints per pair.
 
+use super::checkpoint::{CheckRecord, SolverState};
 use super::duals::DualStore;
 use super::dykstra_parallel::run_pair_phase;
 use super::termination::compute_residuals;
@@ -14,54 +15,124 @@ use crate::util::shared::SharedMut;
 /// the active set requires the wave schedule, so `Strategy::Active`
 /// callers must use [`super::dykstra_parallel::solve`].
 pub fn solve(inst: &CcLpInstance, opts: &SolveOpts) -> Solution {
+    solve_checkpointed(inst, opts, None, &mut |_| {})
+        .expect("cold serial solve cannot fail")
+}
+
+/// Continue a previously saved serial solve from its checkpoint. With
+/// unchanged options this reproduces the uninterrupted run bitwise.
+pub fn resume(
+    inst: &CcLpInstance,
+    opts: &SolveOpts,
+    state: &SolverState,
+) -> anyhow::Result<Solution> {
+    solve_checkpointed(inst, opts, Some(state), &mut |_| {})
+}
+
+/// Full-control entry point: optionally resume from a saved state and
+/// receive a [`SolverState`] through `on_checkpoint` every
+/// [`SolveOpts::checkpoint_every`] passes (plus one for the final
+/// state).
+pub fn solve_checkpointed(
+    inst: &CcLpInstance,
+    opts: &SolveOpts,
+    resume_from: Option<&SolverState>,
+    on_checkpoint: &mut dyn FnMut(&SolverState),
+) -> anyhow::Result<Solution> {
     assert!(
         !opts.strategy.is_active(),
         "dykstra_serial runs the full strategy only; use dykstra_parallel::solve for Strategy::Active"
     );
-    let mut state = CcState::new(inst, opts.gamma, opts.include_box);
+    let mut state = match resume_from {
+        Some(st) => {
+            st.validate_cc(inst, opts)?;
+            st.restore_cc_state(inst, opts)
+        }
+        None => CcState::new(inst, opts.gamma, opts.include_box),
+    };
     let mut store = DualStore::new();
+    if let Some(st) = resume_from {
+        // The serial visit order is lexicographic, which IS key order.
+        store.restore(st.metric_duals.clone());
+    }
+    let start_pass = resume_from.map_or(0, |st| st.pass as usize);
+    let mut history: Vec<CheckRecord> =
+        resume_from.map(|st| st.history.clone()).unwrap_or_default();
     let triplets_per_pass = super::schedule::n_triplets(inst.n);
+    // Cumulative work, carried across resumes (an active-strategy
+    // checkpoint's cheap passes keep their true cost).
+    let mut triplet_visits: u64 = resume_from.map_or(0, |st| st.triplet_visits);
     let mut pass_times = Vec::new();
     let mut residuals = Residuals::default();
-    let mut passes_done = 0;
+    let mut passes_done = start_pass;
     // passes_done at which `residuals` was measured (MAX = never).
     let mut measured_at = usize::MAX;
+    let mut last_saved = usize::MAX;
 
-    for pass in 0..opts.max_passes {
+    for pass in start_pass..opts.max_passes {
         let t0 = std::time::Instant::now();
         run_pass(&mut state, &mut store);
         passes_done = pass + 1;
+        triplet_visits += triplets_per_pass;
         if opts.track_pass_times {
             pass_times.push(t0.elapsed().as_secs_f64());
         }
+        let mut stop = false;
         if opts.check_every > 0 && passes_done % opts.check_every == 0 {
             residuals = compute_residuals(&state, 1);
-            residuals.stamp_full_work(passes_done, triplets_per_pass);
+            residuals.stamp_work(triplet_visits, triplets_per_pass as usize);
             measured_at = passes_done;
+            history.push(CheckRecord {
+                pass: passes_done as u64,
+                max_violation: residuals.max_violation,
+                rel_gap: residuals.rel_gap,
+            });
             if residuals.max_violation <= opts.tol_violation
                 && residuals.rel_gap.abs() <= opts.tol_gap
             {
-                break;
+                stop = true;
             }
         }
+        if opts.checkpoint_every > 0 && (passes_done % opts.checkpoint_every == 0 || stop) {
+            on_checkpoint(&SolverState::capture_cc_full(
+                &state,
+                store.iter_next().collect(),
+                passes_done,
+                triplet_visits,
+                &history,
+            ));
+            last_saved = passes_done;
+        }
+        if stop {
+            break;
+        }
+    }
+    if opts.checkpoint_every > 0 && last_saved != passes_done {
+        on_checkpoint(&SolverState::capture_cc_full(
+            &state,
+            store.iter_next().collect(),
+            passes_done,
+            triplet_visits,
+            &history,
+        ));
     }
     // Re-measure unless the last checkpoint already measured the final
     // iterate — reported residuals always describe the returned x.
     if measured_at != passes_done {
         residuals = compute_residuals(&state, 1);
-        residuals.stamp_full_work(passes_done, triplets_per_pass);
+        residuals.stamp_work(triplet_visits, triplets_per_pass as usize);
     }
     let nnz = store.nnz();
-    Solution {
+    Ok(Solution {
         x: state.x_matrix(),
         f: Some(state.f_matrix()),
         passes: passes_done,
         residuals,
         pass_times,
         nnz_duals: nnz,
-        metric_visits: passes_done as u64 * triplets_per_pass * 3,
+        metric_visits: triplet_visits * 3,
         active_triplets: triplets_per_pass as usize,
-    }
+    })
 }
 
 /// One full pass: all metric constraints (lexicographic), then all pair

@@ -152,7 +152,7 @@ pub fn solve(inst: &CcLpInstance, opts: &SolveOpts, engine: &XlaEngine) -> Resul
         }
         if opts.check_every > 0 && passes_done % opts.check_every == 0 {
             residuals = compute_residuals(&state, opts.threads.max(1));
-            residuals.stamp_full_work(passes_done, n_triplets as u64);
+            residuals.stamp_work(passes_done as u64 * n_triplets as u64, n_triplets);
             measured_at = passes_done;
             if residuals.max_violation <= opts.tol_violation
                 && residuals.rel_gap.abs() <= opts.tol_gap
@@ -165,7 +165,7 @@ pub fn solve(inst: &CcLpInstance, opts: &SolveOpts, engine: &XlaEngine) -> Resul
     // iterate — reported residuals always describe the returned x.
     if measured_at != passes_done {
         residuals = compute_residuals(&state, opts.threads.max(1));
-        residuals.stamp_full_work(passes_done, n_triplets as u64);
+        residuals.stamp_work(passes_done as u64 * n_triplets as u64, n_triplets);
     }
     let nnz = metric_duals.iter().filter(|&&y| y != 0.0).count();
     Ok(Solution {

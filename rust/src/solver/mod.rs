@@ -16,6 +16,7 @@
 //! amounts simply to a re-ordering of constraints").
 
 pub mod active;
+pub mod checkpoint;
 pub mod duals;
 pub mod dykstra_parallel;
 pub mod dykstra_serial;
@@ -103,6 +104,10 @@ pub struct SolveOpts {
     pub assignment: schedule::Assignment,
     /// Metric-constraint visiting strategy (full sweeps vs active set).
     pub strategy: Strategy,
+    /// Emit a [`checkpoint::SolverState`] every this many passes through
+    /// the `solve_checkpointed` entry points (0 = never; a final state is
+    /// always emitted when nonzero). Ignored by the plain `solve` calls.
+    pub checkpoint_every: usize,
 }
 
 impl Default for SolveOpts {
@@ -119,6 +124,7 @@ impl Default for SolveOpts {
             track_pass_times: false,
             assignment: schedule::Assignment::RoundRobin,
             strategy: Strategy::Full,
+            checkpoint_every: 0,
         }
     }
 }
@@ -145,11 +151,15 @@ pub struct Residuals {
 }
 
 impl Residuals {
-    /// Stamp the work counters of a full-strategy solver: `passes`
-    /// completed passes at `triplets_per_pass` metric triplets each.
-    pub(crate) fn stamp_full_work(&mut self, passes: usize, triplets_per_pass: u64) {
-        self.metric_visits = passes as u64 * triplets_per_pass * 3;
-        self.active_triplets = triplets_per_pass as usize;
+    /// Stamp the work counters: cumulative `triplet_visits` (3 metric
+    /// rows each) and the current active-triplet count (= C(n,3) for the
+    /// full strategy). Full drivers pass their running counter, which a
+    /// resume seeds from the checkpoint — so a cross-strategy resume
+    /// (active checkpoint continued by a full driver) keeps billing the
+    /// cheap passes at their true cost.
+    pub(crate) fn stamp_work(&mut self, triplet_visits: u64, active_triplets: usize) {
+        self.metric_visits = triplet_visits * 3;
+        self.active_triplets = active_triplets;
     }
 }
 

@@ -8,6 +8,7 @@
 //! orientations `x_ik - x_ij - x_jk <= 0` and `x_jk - x_ij - x_ik <= 0`
 //! gives `x_ij >= 0` at any feasible point.
 
+use super::checkpoint::{self, CheckRecord, SolverState};
 use super::duals::DualStore;
 use super::schedule::{Assignment, Schedule};
 use super::Strategy;
@@ -28,6 +29,10 @@ pub struct NearnessOpts {
     /// Metric-constraint visiting strategy (see [`Strategy`]); the active
     /// variant runs in [`super::active::solve_nearness`].
     pub strategy: Strategy,
+    /// Emit a [`SolverState`] every this many passes through
+    /// [`solve_checkpointed`] (0 = never; a final state is always emitted
+    /// when nonzero). Ignored by the plain [`solve`] call.
+    pub checkpoint_every: usize,
 }
 
 impl Default for NearnessOpts {
@@ -40,6 +45,7 @@ impl Default for NearnessOpts {
             tile: 40,
             assignment: Assignment::RoundRobin,
             strategy: Strategy::Full,
+            checkpoint_every: 0,
         }
     }
 }
@@ -63,8 +69,39 @@ pub struct NearnessSolution {
 /// Solve with the parallel wave schedule (threads = 1 for serial order use
 /// [`solve_serial_order`]). Dispatches on [`NearnessOpts::strategy`].
 pub fn solve(inst: &MetricNearnessInstance, opts: &NearnessOpts) -> NearnessSolution {
+    solve_checkpointed(inst, opts, None, &mut |_| {})
+        .expect("cold nearness solve cannot fail")
+}
+
+/// Continue a previously saved nearness solve from its checkpoint,
+/// dispatching on [`NearnessOpts::strategy`] like [`solve`]. With
+/// unchanged options this reproduces the uninterrupted run bitwise (for
+/// any worker count).
+pub fn resume(
+    inst: &MetricNearnessInstance,
+    opts: &NearnessOpts,
+    state: &SolverState,
+) -> anyhow::Result<NearnessSolution> {
+    solve_checkpointed(inst, opts, Some(state), &mut |_| {})
+}
+
+/// Full-control entry point: optionally resume from a saved state and
+/// receive a [`SolverState`] through `on_checkpoint` every
+/// [`NearnessOpts::checkpoint_every`] passes (plus one for the final
+/// state). Dispatches on [`NearnessOpts::strategy`].
+pub fn solve_checkpointed(
+    inst: &MetricNearnessInstance,
+    opts: &NearnessOpts,
+    resume_from: Option<&SolverState>,
+    on_checkpoint: &mut dyn FnMut(&SolverState),
+) -> anyhow::Result<NearnessSolution> {
     if opts.strategy.is_active() {
-        return super::active::solve_nearness(inst, opts);
+        return super::active::solve_nearness_checkpointed(
+            inst,
+            opts,
+            resume_from,
+            on_checkpoint,
+        );
     }
     let n = inst.n;
     let p = opts.threads.max(1);
@@ -72,13 +109,29 @@ pub fn solve(inst: &MetricNearnessInstance, opts: &NearnessOpts) -> NearnessSolu
     let mut x: Vec<f64> = inst.d.as_slice().to_vec();
     let winv: Vec<f64> = inst.w.as_slice().iter().map(|&v| 1.0 / v).collect();
     let col_starts = inst.d.col_starts().to_vec();
-    let stores = PerWorker::new((0..p).map(|_| DualStore::new()).collect());
+    let mut stores = PerWorker::new((0..p).map(|_| DualStore::new()).collect());
+    if let Some(st) = resume_from {
+        st.validate_nearness(inst)?;
+        x.copy_from_slice(&st.x);
+        let per_worker = st.worker_duals(&schedule, opts.assignment, p);
+        for (store, entries) in stores.iter_mut().zip(per_worker) {
+            store.restore(entries);
+        }
+    }
+    let start_pass = resume_from.map_or(0, |st| st.pass as usize);
+    let mut history: Vec<CheckRecord> =
+        resume_from.map(|st| st.history.clone()).unwrap_or_default();
+    let triplets_per_pass = schedule.total_triplets();
+    // Cumulative work, carried across resumes (an active-strategy
+    // checkpoint's cheap passes keep their true cost).
+    let mut triplet_visits: u64 = resume_from.map_or(0, |st| st.triplet_visits);
 
-    let mut passes_done = 0;
+    let mut passes_done = start_pass;
     let mut max_violation = f64::INFINITY;
     // passes_done at which `max_violation` was measured (MAX = never).
     let mut measured_at = usize::MAX;
-    for pass in 0..opts.max_passes {
+    let mut last_saved = usize::MAX;
+    for pass in start_pass..opts.max_passes {
         {
             let xs = SharedMut::new(x.as_mut_slice());
             let winv = winv.as_slice();
@@ -103,13 +156,44 @@ pub fn solve(inst: &MetricNearnessInstance, opts: &NearnessOpts) -> NearnessSolu
             });
         }
         passes_done = pass + 1;
+        triplet_visits += triplets_per_pass;
+        let mut stop = false;
         if opts.check_every > 0 && passes_done % opts.check_every == 0 {
             max_violation = violation(&x, &col_starts, n, p);
             measured_at = passes_done;
+            history.push(CheckRecord {
+                pass: passes_done as u64,
+                max_violation,
+                rel_gap: 0.0,
+            });
             if max_violation <= opts.tol_violation {
-                break;
+                stop = true;
             }
         }
+        if opts.checkpoint_every > 0 && (passes_done % opts.checkpoint_every == 0 || stop) {
+            on_checkpoint(&SolverState::capture_nearness_full(
+                inst,
+                &x,
+                checkpoint::collect_duals(&mut stores),
+                passes_done,
+                triplet_visits,
+                &history,
+            ));
+            last_saved = passes_done;
+        }
+        if stop {
+            break;
+        }
+    }
+    if opts.checkpoint_every > 0 && last_saved != passes_done {
+        on_checkpoint(&SolverState::capture_nearness_full(
+            inst,
+            &x,
+            checkpoint::collect_duals(&mut stores),
+            passes_done,
+            triplet_visits,
+            &history,
+        ));
     }
     // Re-measure unless the last checkpoint already measured the final
     // iterate — the reported violation always describes the returned x.
@@ -118,15 +202,14 @@ pub fn solve(inst: &MetricNearnessInstance, opts: &NearnessOpts) -> NearnessSolu
     }
     let mut xm = PackedSym::zeros(n);
     xm.as_mut_slice().copy_from_slice(&x);
-    let triplets_per_pass = schedule.total_triplets();
-    NearnessSolution {
+    Ok(NearnessSolution {
         objective: inst.objective(&xm),
         x: xm,
         max_violation,
         passes: passes_done,
-        metric_visits: passes_done as u64 * triplets_per_pass * 3,
+        metric_visits: triplet_visits * 3,
         active_triplets: triplets_per_pass as usize,
-    }
+    })
 }
 
 /// Serial baseline with the standard lexicographic order ([36]/[37]).

@@ -138,6 +138,49 @@ impl Schedule {
     }
 }
 
+/// Maps triplets back to their position in a schedule — the wave and
+/// in-wave tile owning them, plus the j-chunk of the cube iteration —
+/// so consumers can reconstruct the deterministic visit order without
+/// enumerating tiles. Built once per schedule; used by the active-set
+/// seeding and the checkpoint dual redistribution, which must agree on
+/// this geometry exactly (a drift between them would break bitwise
+/// resume equivalence).
+pub struct TileRouter {
+    b: usize,
+    /// (i-block, k-block) -> (wave index, tile index within the wave).
+    map: std::collections::HashMap<(usize, usize), (usize, usize)>,
+}
+
+impl TileRouter {
+    /// Index the schedule's tiles by their block coordinates: tile
+    /// `(a, e)` covers `i ∈ [a·b, (a+1)·b)` and `k ∈ [2+e·b, 2+(e+1)·b)`.
+    pub fn new(schedule: &Schedule) -> TileRouter {
+        let b = schedule.tile_size();
+        let mut map = std::collections::HashMap::new();
+        for (wi, wave) in schedule.waves().iter().enumerate() {
+            for (r, tile) in wave.iter().enumerate() {
+                map.insert((tile.i_lo / b, (tile.k_lo - 2) / b), (wi, r));
+            }
+        }
+        TileRouter { b, map }
+    }
+
+    /// `(wave_idx, tile_idx_in_wave, j_chunk)` of triplet `(i, j, k)`.
+    /// Within a chunk, [`crate::solver::tiling::for_each_triplet`] visits
+    /// in ascending `(i, j, k)` — the triplet key's numeric order.
+    ///
+    /// # Panics
+    /// If the triplet lies outside the schedule's `n` (callers validate
+    /// keys first).
+    pub fn locate(&self, i: usize, j: usize, k: usize) -> (usize, usize, usize) {
+        let a = i / self.b;
+        let (wi, r) = self.map[&(a, (k - 2) / self.b)];
+        // j-chunks of width b start at the tile's j_min = a·b + 1.
+        let chunk = (j - (a * self.b + 1)) / self.b;
+        (wi, r, chunk)
+    }
+}
+
 /// Tile-to-worker assignment policy within a wave.
 ///
 /// `RoundRobin` is the paper's Fig 3: the r-th tile of a wave goes to
@@ -402,6 +445,27 @@ mod tests {
                         }
                     }
                     assert!(owned.iter().all(|&o| o));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn router_locates_every_triplet_in_its_tile_and_chunk() {
+        for (n, b) in [(11usize, 1usize), (16, 3), (20, 7)] {
+            let s = Schedule::new(n, b);
+            let router = TileRouter::new(&s);
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    for k in (j + 1)..n {
+                        let (wi, r, chunk) = router.locate(i, j, k);
+                        let tile = &s.waves()[wi][r];
+                        assert!(tile.i_lo <= i && i < tile.i_hi, "({i},{j},{k}) n={n} b={b}");
+                        assert!(tile.k_lo <= k && k < tile.k_hi, "({i},{j},{k}) n={n} b={b}");
+                        // chunk index matches the cube iteration's j-chunks
+                        let j_min = tile.i_lo + 1;
+                        assert_eq!(chunk, (j - j_min) / b, "({i},{j},{k}) n={n} b={b}");
+                    }
                 }
             }
         }

@@ -1,0 +1,318 @@
+//! Checkpoint acceptance tests: save→load bit-identity mid-solve for
+//! every strategy, resume-equivalence (interrupt at pass `t`, resume,
+//! land bitwise on the uninterrupted run), and rejection of bad bytes.
+
+use metric_proj::instance::metric_nearness::MetricNearnessInstance;
+use metric_proj::instance::CcLpInstance;
+use metric_proj::solver::checkpoint::{CheckpointError, SolverState};
+use metric_proj::solver::nearness::{self, NearnessOpts};
+use metric_proj::solver::{dykstra_parallel, dykstra_serial, SolveOpts, Strategy};
+
+fn cc_inst(seed: u64) -> CcLpInstance {
+    CcLpInstance::random(16, 0.5, 0.8, 1.6, seed)
+}
+
+/// Run to `max_passes` and return the final-state checkpoint alongside
+/// the solution (checkpoint_every = usize::MAX emits only the final
+/// state).
+fn cc_run_with_final_state(
+    inst: &CcLpInstance,
+    opts: &SolveOpts,
+    serial: bool,
+) -> (metric_proj::solver::Solution, SolverState) {
+    let opts = SolveOpts { checkpoint_every: usize::MAX, ..*opts };
+    let mut last = None;
+    let sink = &mut |s: &SolverState| last = Some(s.clone());
+    let sol = if serial {
+        dykstra_serial::solve_checkpointed(inst, &opts, None, sink).unwrap()
+    } else {
+        dykstra_parallel::solve_checkpointed(inst, &opts, None, sink).unwrap()
+    };
+    (sol, last.expect("final state emitted"))
+}
+
+/// Serialize then deserialize — the state must survive the byte format
+/// exactly (this is what makes resume-from-disk equal resume-from-RAM).
+fn through_bytes(st: &SolverState) -> SolverState {
+    let mut bytes = Vec::new();
+    st.save(&mut bytes).unwrap();
+    let back = SolverState::load(&mut bytes.as_slice()).unwrap();
+    assert_eq!(*st, back, "save→load must be bit-identical");
+    back
+}
+
+#[test]
+fn save_load_is_bit_identical_mid_solve_for_all_strategies() {
+    let inst = cc_inst(3);
+    let near = MetricNearnessInstance::random(15, 2.0, 4);
+    let strategies = [
+        ("full", Strategy::Full),
+        ("active", Strategy::Active { sweep_every: 3, forget_after: 1 }),
+    ];
+    for (label, strategy) in strategies {
+        // CC, parallel driver (dispatches to the active driver as needed).
+        let opts = SolveOpts {
+            max_passes: 7,
+            threads: 2,
+            tile: 4,
+            strategy,
+            checkpoint_every: 2,
+            ..Default::default()
+        };
+        let mut states = Vec::new();
+        dykstra_parallel::solve_checkpointed(&inst, &opts, None, &mut |s| {
+            states.push(s.clone())
+        })
+        .unwrap();
+        assert!(states.len() >= 3, "{label}: expected mid-solve snapshots");
+        for st in &states {
+            through_bytes(st);
+        }
+        // Nearness driver.
+        let nopts = NearnessOpts {
+            max_passes: 6,
+            threads: 2,
+            tile: 4,
+            check_every: 0,
+            strategy,
+            checkpoint_every: 2,
+            ..Default::default()
+        };
+        let mut states = Vec::new();
+        nearness::solve_checkpointed(&near, &nopts, None, &mut |s| states.push(s.clone()))
+            .unwrap();
+        assert!(states.len() >= 3, "{label} nearness: expected mid-solve snapshots");
+        for st in &states {
+            through_bytes(st);
+        }
+    }
+    // Serial driver (full only).
+    let opts = SolveOpts { max_passes: 6, checkpoint_every: 2, ..Default::default() };
+    let mut states = Vec::new();
+    dykstra_serial::solve_checkpointed(&inst, &opts, None, &mut |s| states.push(s.clone()))
+        .unwrap();
+    assert!(states.len() >= 3);
+    for st in &states {
+        through_bytes(st);
+    }
+}
+
+/// ISSUE acceptance: for each strategy, solve interrupted at pass `t`
+/// then resumed equals the uninterrupted solve bitwise at the same pass
+/// count.
+#[test]
+fn resume_equivalence_serial() {
+    let inst = cc_inst(11);
+    let base = SolveOpts { max_passes: 10, check_every: 0, ..Default::default() };
+    let full = dykstra_serial::solve(&inst, &base);
+    for t in [1usize, 4, 9] {
+        let interrupted = SolveOpts { max_passes: t, ..base };
+        let (_, st) = cc_run_with_final_state(&inst, &interrupted, true);
+        assert_eq!(st.pass, t as u64);
+        let st = through_bytes(&st);
+        let resumed = dykstra_serial::resume(&inst, &base, &st).unwrap();
+        assert_eq!(resumed.passes, full.passes, "t={t}");
+        assert_eq!(resumed.x, full.x, "t={t}: x diverged");
+        assert_eq!(resumed.f, full.f, "t={t}: f diverged");
+        assert_eq!(resumed.nnz_duals, full.nnz_duals, "t={t}");
+        assert_eq!(resumed.metric_visits, full.metric_visits, "t={t}");
+        assert_eq!(
+            resumed.residuals.max_violation, full.residuals.max_violation,
+            "t={t}: residuals diverged"
+        );
+    }
+}
+
+#[test]
+fn resume_equivalence_parallel_even_across_thread_counts() {
+    let inst = cc_inst(13);
+    let base =
+        SolveOpts { max_passes: 9, check_every: 0, threads: 3, tile: 3, ..Default::default() };
+    let full = dykstra_parallel::solve(&inst, &base);
+    for t in [2usize, 5] {
+        let interrupted = SolveOpts { max_passes: t, ..base };
+        let (_, st) = cc_run_with_final_state(&inst, &interrupted, false);
+        let st = through_bytes(&st);
+        // Resume with the saving thread count AND a different one: pass
+        // results are bitwise p-independent, so both must land exactly
+        // on the uninterrupted run.
+        for threads in [3usize, 1, 5] {
+            let resumed =
+                dykstra_parallel::resume(&inst, &SolveOpts { threads, ..base }, &st).unwrap();
+            assert_eq!(resumed.x, full.x, "t={t} p={threads}: x diverged");
+            assert_eq!(resumed.f, full.f, "t={t} p={threads}: f diverged");
+            assert_eq!(resumed.nnz_duals, full.nnz_duals, "t={t} p={threads}");
+            assert_eq!(resumed.metric_visits, full.metric_visits, "t={t} p={threads}");
+        }
+    }
+}
+
+#[test]
+fn resume_equivalence_active() {
+    let inst = cc_inst(17);
+    let strategy = Strategy::Active { sweep_every: 4, forget_after: 2 };
+    let base = SolveOpts {
+        max_passes: 14,
+        check_every: 0,
+        threads: 2,
+        tile: 3,
+        strategy,
+        ..Default::default()
+    };
+    let full = dykstra_parallel::solve(&inst, &base);
+    // Interrupt both right after a sweep (t = 5) and mid-cycle between
+    // sweeps (t = 6, 7) — the saved membership must carry the forget
+    // streaks for the continuation to forget on the same schedule.
+    for t in [5usize, 6, 7, 12] {
+        let interrupted = SolveOpts { max_passes: t, ..base };
+        let (_, st) = cc_run_with_final_state(&inst, &interrupted, false);
+        let st = through_bytes(&st);
+        for threads in [2usize, 4] {
+            let resumed =
+                dykstra_parallel::resume(&inst, &SolveOpts { threads, ..base }, &st).unwrap();
+            assert_eq!(resumed.x, full.x, "t={t} p={threads}: x diverged");
+            assert_eq!(resumed.f, full.f, "t={t} p={threads}: f diverged");
+            assert_eq!(resumed.nnz_duals, full.nnz_duals, "t={t} p={threads}");
+            assert_eq!(resumed.metric_visits, full.metric_visits, "t={t} p={threads}");
+            assert_eq!(resumed.active_triplets, full.active_triplets, "t={t} p={threads}");
+        }
+    }
+}
+
+#[test]
+fn resume_equivalence_nearness_full_and_active() {
+    let inst = MetricNearnessInstance::random(14, 2.0, 7);
+    for strategy in
+        [Strategy::Full, Strategy::Active { sweep_every: 3, forget_after: 1 }]
+    {
+        let base = NearnessOpts {
+            max_passes: 10,
+            check_every: 0,
+            threads: 2,
+            tile: 3,
+            strategy,
+            ..Default::default()
+        };
+        let full = nearness::solve(&inst, &base);
+        for t in [2usize, 5, 8] {
+            let interrupted =
+                NearnessOpts { max_passes: t, checkpoint_every: usize::MAX, ..base };
+            let mut last = None;
+            nearness::solve_checkpointed(&inst, &interrupted, None, &mut |s| {
+                last = Some(s.clone())
+            })
+            .unwrap();
+            let st = through_bytes(&last.unwrap());
+            let resumed = nearness::resume(&inst, &base, &st).unwrap();
+            assert_eq!(resumed.x, full.x, "{strategy:?} t={t}: x diverged");
+            assert_eq!(resumed.metric_visits, full.metric_visits, "{strategy:?} t={t}");
+            assert_eq!(resumed.passes, full.passes, "{strategy:?} t={t}");
+            assert_eq!(
+                resumed.active_triplets, full.active_triplets,
+                "{strategy:?} t={t}"
+            );
+        }
+    }
+}
+
+/// Early-stopping runs also resume sensibly: the resumed run continues
+/// from the saved pass count and its checks pick up the saved cadence.
+#[test]
+fn resume_continues_convergence_bookkeeping() {
+    let inst = cc_inst(23);
+    let strategy = Strategy::Active { sweep_every: 3, forget_after: 1 };
+    let base = SolveOpts {
+        max_passes: 20_000,
+        check_every: 2,
+        tol_violation: 1e-7,
+        tol_gap: 1e30,
+        threads: 2,
+        tile: 3,
+        strategy,
+        ..Default::default()
+    };
+    let full = dykstra_parallel::solve(&inst, &base);
+    assert!(full.passes < 20_000, "must converge for this test to bite");
+    let t = full.passes / 2;
+    let (_, st) = cc_run_with_final_state(&inst, &SolveOpts { max_passes: t, ..base }, false);
+    let st = through_bytes(&st);
+    let resumed = dykstra_parallel::resume(&inst, &base, &st).unwrap();
+    assert_eq!(resumed.passes, full.passes, "resumed run must stop at the same pass");
+    assert_eq!(resumed.x, full.x);
+    assert_eq!(resumed.residuals.max_violation, full.residuals.max_violation);
+}
+
+/// Cross-strategy portability: a state saved by the full solver seeds
+/// the active driver (membership derived from nonzero duals) and vice
+/// versa. Not bitwise — the visit schedules differ — but both must
+/// converge to the same optimum.
+#[test]
+fn cross_strategy_resume_converges() {
+    let inst = cc_inst(29);
+    let active = Strategy::Active { sweep_every: 4, forget_after: 2 };
+    let mk = |strategy: Strategy, max_passes: usize| SolveOpts {
+        max_passes,
+        check_every: 0,
+        threads: 2,
+        tile: 3,
+        strategy,
+        ..Default::default()
+    };
+    // full -> active
+    let (_, full_state) = cc_run_with_final_state(&inst, &mk(Strategy::Full, 6), false);
+    let resumed = dykstra_parallel::resume(&inst, &mk(active, 2000), &full_state).unwrap();
+    // active -> full
+    let (_, act_state) = cc_run_with_final_state(&inst, &mk(active, 6), false);
+    let resumed2 =
+        dykstra_parallel::resume(&inst, &mk(Strategy::Full, 2000), &act_state).unwrap();
+    let reference = dykstra_parallel::solve(&inst, &mk(Strategy::Full, 2000));
+    for (label, sol) in [("full->active", &resumed), ("active->full", &resumed2)] {
+        let mut worst = 0.0f64;
+        for (i, j, v) in reference.x.iter_pairs() {
+            worst = worst.max((v - sol.x.get(i, j)).abs());
+        }
+        assert!(worst < 1e-4, "{label}: optima differ by {worst}");
+    }
+}
+
+#[test]
+fn file_roundtrip_and_rejection_of_bad_files() {
+    let inst = cc_inst(31);
+    let opts = SolveOpts { max_passes: 4, ..Default::default() };
+    let (_, st) = cc_run_with_final_state(&inst, &opts, true);
+    let dir = std::env::temp_dir().join("metric_proj_ckpt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("state.ckpt");
+    st.save_path(&path).unwrap();
+    let back = SolverState::load_path(&path).unwrap();
+    assert_eq!(st, back);
+    back.validate_cc(&inst, &opts).unwrap();
+
+    // Truncated file -> error, not panic.
+    let bytes = std::fs::read(&path).unwrap();
+    let cut = dir.join("truncated.ckpt");
+    std::fs::write(&cut, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(matches!(SolverState::load_path(&cut), Err(CheckpointError::Corrupt(_))));
+
+    // Flipped byte in the middle -> checksum failure.
+    let mut bad = bytes.clone();
+    let mid = bad.len() / 2;
+    bad[mid] ^= 0xFF;
+    let corrupt = dir.join("corrupt.ckpt");
+    std::fs::write(&corrupt, &bad).unwrap();
+    assert!(matches!(SolverState::load_path(&corrupt), Err(CheckpointError::Corrupt(_))));
+
+    // Wrong magic -> BadMagic.
+    let mut nonsense = bytes.clone();
+    nonsense[0] = b'!';
+    let junk = dir.join("junk.ckpt");
+    std::fs::write(&junk, &nonsense).unwrap();
+    assert!(matches!(SolverState::load_path(&junk), Err(CheckpointError::BadMagic)));
+
+    // Resuming against the wrong instance -> Mismatch before any work.
+    let other = cc_inst(32);
+    assert!(matches!(
+        dykstra_serial::resume(&other, &opts, &st),
+        Err(e) if e.to_string().contains("checkpoint mismatch")
+    ));
+}

@@ -1,0 +1,189 @@
+//! Property tests for the wave schedule and the tile iterators — the
+//! conflict-freeness and coverage invariants every solver (and now the
+//! checkpoint redistribution) builds on.
+
+use metric_proj::prop_assert;
+use metric_proj::solver::schedule::{n_triplets, Schedule, Tile};
+use metric_proj::solver::tiling::{for_each_triplet, for_each_triplet_lex};
+use metric_proj::util::proptest::check;
+use metric_proj::util::rng::Rng;
+use std::collections::{HashMap, HashSet};
+
+/// The three variable pairs a triplet's projections touch.
+fn pairs_of(i: usize, j: usize, k: usize) -> [(usize, usize); 3] {
+    [(i, j), (i, k), (j, k)]
+}
+
+/// Schedule invariant, part 1: within every wave, the `(i, j)` variable
+/// pairs touched by different tiles are pairwise disjoint — the data-race
+/// freedom the lock-free metric phase relies on.
+#[test]
+fn waves_touch_pairwise_disjoint_variable_pairs() {
+    check("wave tiles touch disjoint pairs", 0x5C4ED1, 32, |rng, _| {
+        let n = rng.usize_in(3, 70);
+        let b = rng.usize_in(1, 14);
+        let s = Schedule::new(n, b);
+        for (wi, wave) in s.waves().iter().enumerate() {
+            // pair -> index of the tile that touched it first
+            let mut owner: HashMap<(usize, usize), usize> = HashMap::new();
+            for (r, tile) in wave.iter().enumerate() {
+                let mut touched = Vec::new();
+                for_each_triplet(tile, b, |i, j, k| touched.extend(pairs_of(i, j, k)));
+                for pair in touched {
+                    if let Some(&other) = owner.get(&pair) {
+                        prop_assert!(
+                            other == r,
+                            "n={n} b={b} wave {wi}: pair {pair:?} touched by tiles {other} and {r}"
+                        );
+                    } else {
+                        owner.insert(pair, r);
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Schedule invariant, part 2: the union of all waves covers every
+/// triplet `i < j < k` exactly once.
+#[test]
+fn waves_cover_every_triplet_exactly_once() {
+    check("waves cover C(n,3) exactly once", 0x5C4ED2, 32, |rng, _| {
+        let n = rng.usize_in(3, 70);
+        let b = rng.usize_in(1, 14);
+        let s = Schedule::new(n, b);
+        let mut seen = HashSet::new();
+        for wave in s.waves() {
+            for tile in wave {
+                let mut dup = None;
+                for_each_triplet(tile, b, |i, j, k| {
+                    if !seen.insert((i, j, k)) {
+                        dup = Some((i, j, k));
+                    }
+                });
+                prop_assert!(dup.is_none(), "n={n} b={b}: duplicate triplet {dup:?}");
+            }
+        }
+        prop_assert!(
+            seen.len() as u64 == n_triplets(n),
+            "n={n} b={b}: covered {} of {} triplets",
+            seen.len(),
+            n_triplets(n)
+        );
+        for &(i, j, k) in &seen {
+            prop_assert!(i < j && j < k && k < n, "invalid triplet ({i},{j},{k})");
+        }
+        Ok(())
+    });
+}
+
+/// Brute-force reference for a tile's triplet set: the clipped cube
+/// `{(i, j, k) : i ∈ I, k ∈ K, i < j < k}`.
+fn brute_force_tile(tile: &Tile) -> HashSet<(usize, usize, usize)> {
+    let mut want = HashSet::new();
+    for i in tile.i_lo..tile.i_hi {
+        for k in tile.k_lo..tile.k_hi {
+            for j in (i + 1)..k {
+                want.insert((i, j, k));
+            }
+        }
+    }
+    want
+}
+
+/// `for_each_triplet` over random (not schedule-generated) tiles visits
+/// exactly the clipped cube's triplet set, without duplicates, and
+/// agrees with `Tile::triplet_count`.
+#[test]
+fn for_each_triplet_visits_exactly_the_clipped_cube() {
+    check("for_each_triplet = clipped cube", 0x7113D, 64, |rng, _| {
+        let n = rng.usize_in(3, 60);
+        let i_lo = rng.usize_in(0, n);
+        let i_hi = rng.usize_in(i_lo, n + 1).max(i_lo + 1);
+        let k_lo = rng.usize_in(0, n);
+        let k_hi = rng.usize_in(k_lo, n + 1).max(k_lo + 1);
+        let tile = Tile { i_lo, i_hi, k_lo, k_hi };
+        let b = rng.usize_in(1, 9);
+        let mut got = Vec::new();
+        for_each_triplet(&tile, b, |i, j, k| got.push((i, j, k)));
+        let got_set: HashSet<_> = got.iter().copied().collect();
+        prop_assert!(got_set.len() == got.len(), "{tile:?} b={b}: duplicates visited");
+        let want = brute_force_tile(&tile);
+        prop_assert!(
+            got_set == want,
+            "{tile:?} b={b}: visited {} triplets, brute force finds {}",
+            got_set.len(),
+            want.len()
+        );
+        prop_assert!(
+            tile.triplet_count() == got.len() as u64,
+            "{tile:?}: triplet_count {} != visited {}",
+            tile.triplet_count(),
+            got.len()
+        );
+        Ok(())
+    });
+}
+
+/// The cube iteration order is deterministic and identical across calls
+/// (the per-worker dual stores require it), for random tiles.
+#[test]
+fn for_each_triplet_order_is_deterministic() {
+    let mut rng = Rng::new(0xDE7E12);
+    for _ in 0..50 {
+        let i_lo = rng.usize_in(0, 20);
+        let tile = Tile {
+            i_lo,
+            i_hi: i_lo + rng.usize_in(1, 6),
+            k_lo: rng.usize_in(0, 25),
+            k_hi: rng.usize_in(20, 30),
+        };
+        let b = rng.usize_in(1, 7);
+        let mut a = Vec::new();
+        let mut bb = Vec::new();
+        for_each_triplet(&tile, b, |i, j, k| a.push((i, j, k)));
+        for_each_triplet(&tile, b, |i, j, k| bb.push((i, j, k)));
+        assert_eq!(a, bb);
+    }
+}
+
+/// `for_each_triplet_lex` enumerates all `C(n,3)` triplets in strictly
+/// increasing lexicographic order.
+#[test]
+fn lex_iterator_is_complete_and_lex_ordered() {
+    check("for_each_triplet_lex lex order", 0x13D09, 24, |rng, _| {
+        let n = rng.usize_in(0, 40);
+        let mut got = Vec::new();
+        for_each_triplet_lex(n, |i, j, k| got.push((i, j, k)));
+        prop_assert!(
+            got.len() as u64 == n_triplets(n),
+            "n={n}: {} visited, want C(n,3) = {}",
+            got.len(),
+            n_triplets(n)
+        );
+        for tri in &got {
+            prop_assert!(tri.0 < tri.1 && tri.1 < tri.2 && tri.2 < n, "bad {tri:?}");
+        }
+        for pair in got.windows(2) {
+            prop_assert!(pair[0] < pair[1], "not strictly lex: {:?} then {:?}", pair[0], pair[1]);
+        }
+        Ok(())
+    });
+}
+
+/// Composing both invariants: summing `triplet_count` over any schedule
+/// equals C(n,3), and iterating with the wrong chunk size `b` still
+/// visits the same *set* (chunking only reorders).
+#[test]
+fn chunk_size_changes_order_not_coverage() {
+    let tile = Tile { i_lo: 1, i_hi: 5, k_lo: 4, k_hi: 12 };
+    let reference = brute_force_tile(&tile);
+    for b in 1..10 {
+        let mut got = HashSet::new();
+        for_each_triplet(&tile, b, |i, j, k| {
+            assert!(got.insert((i, j, k)), "b={b}: duplicate");
+        });
+        assert_eq!(got, reference, "b={b}");
+    }
+}
