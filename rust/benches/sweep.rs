@@ -1,0 +1,190 @@
+//! Sweep backend throughput: the screen-then-project engine vs the
+//! scalar callback sweep (EXPERIMENTS.md §Perf).
+//!
+//! For each problem size the harness first runs a short active-set
+//! nearness solve to reach the steady state where the paper's sparsity
+//! argument bites (few violated rows, few nonzero duals), then times
+//! repeated discovery sweeps per [`SweepBackend`] from identical states.
+//! The interesting number is triplet-visits/second: every backend
+//! examines all `C(n,3)` triplets per sweep, so throughput differences
+//! are pure per-triplet overhead.
+//!
+//!     cargo bench --bench sweep
+//!
+//! Environment knobs: `METRIC_PROJ_SWEEP_NS` (comma-separated sizes,
+//! default `120,200,300`), `METRIC_PROJ_SWEEP_REPS` (timed sweeps per
+//! backend, default 5), `METRIC_PROJ_SWEEP_WARMUP` (steady-state solve
+//! passes, default 30), `METRIC_PROJ_SWEEP_THREADS` (default 1 — the
+//! cleanest per-core throughput comparison), `METRIC_PROJ_BENCH_OUT`
+//! (output path, default `../BENCH_sweep.json` = the repo root when run
+//! via `cargo bench`).
+//!
+//! Emits machine-readable `BENCH_sweep.json` for the perf trajectory:
+//! one record per (n, backend) with triplet-visits/sec and the screen
+//! hit rate.
+
+use metric_proj::instance::metric_nearness::MetricNearnessInstance;
+use metric_proj::runtime::engine::XlaEngine;
+use metric_proj::runtime::DEFAULT_ARTIFACTS_DIR;
+use metric_proj::solver::active::set::ActiveSet;
+use metric_proj::solver::active::sweep::{discovery_sweep, SweepReport};
+use metric_proj::solver::nearness::{self, NearnessOpts};
+use metric_proj::solver::schedule::{Assignment, Schedule};
+use metric_proj::solver::{Strategy, SweepBackend};
+use metric_proj::util::shared::SharedMut;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+const BACKENDS: [SweepBackend; 3] =
+    [SweepBackend::Scalar, SweepBackend::Screened, SweepBackend::Engine];
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn env_ns() -> Vec<usize> {
+    match std::env::var("METRIC_PROJ_SWEEP_NS") {
+        Ok(s) => s.split(',').filter_map(|t| t.trim().parse().ok()).collect(),
+        Err(_) => vec![120, 200, 300],
+    }
+}
+
+struct Record {
+    n: usize,
+    backend: &'static str,
+    sweeps: usize,
+    seconds: f64,
+    visits_per_sec: f64,
+    hit_rate: f64,
+    speedup_vs_scalar: f64,
+}
+
+fn main() {
+    let ns = env_ns();
+    let reps = env_usize("METRIC_PROJ_SWEEP_REPS", 5).max(1);
+    let warmup = env_usize("METRIC_PROJ_SWEEP_WARMUP", 30);
+    let threads = env_usize("METRIC_PROJ_SWEEP_THREADS", 1).max(1);
+    let out_path = std::env::var("METRIC_PROJ_BENCH_OUT")
+        .unwrap_or_else(|_| "../BENCH_sweep.json".to_string());
+    println!(
+        "\n### bench sweep: ns={ns:?} reps={reps} warmup={warmup} threads={threads}"
+    );
+
+    let mut records: Vec<Record> = Vec::new();
+    for &n in &ns {
+        let tile = (n / 12).clamp(4, 40);
+        let schedule = Schedule::new(n, tile);
+        let triplets = schedule.total_triplets();
+        let inst = MetricNearnessInstance::random(n, 2.0, 42);
+
+        // Steady state: a short active-set solve sparsifies the dual
+        // support, the regime the screen is built for.
+        let steady = nearness::solve(
+            &inst,
+            &NearnessOpts {
+                max_passes: warmup,
+                check_every: 0,
+                threads,
+                tile,
+                strategy: Strategy::Active { sweep_every: 4, forget_after: 2 },
+                ..Default::default()
+            },
+        );
+        let x_steady: Vec<f64> = steady.x.as_slice().to_vec();
+        let winv: Vec<f64> = inst.w.as_slice().iter().map(|&v| 1.0 / v).collect();
+        let col_starts = inst.d.col_starts().to_vec();
+
+        println!(
+            "\n  n={n} tile={tile}: C(n,3)={triplets} triplets/sweep, \
+             steady-state violation {:.2e}",
+            steady.max_violation
+        );
+        let mut scalar_vps = None;
+        for backend in BACKENDS {
+            // Same resolution as the solver drivers: the engine backend
+            // measures the real PJRT path when artifacts are present and
+            // the (bitwise-equal) screened fallback otherwise.
+            let engine = match backend {
+                SweepBackend::Engine => XlaEngine::load(DEFAULT_ARTIFACTS_DIR).ok(),
+                _ => None,
+            };
+            if backend == SweepBackend::Engine && engine.is_none() {
+                println!("    engine   (no PJRT artifacts — measuring the screened fallback)");
+            }
+            let mut x = x_steady.clone();
+            let set = ActiveSet::new(&schedule);
+            let sweep_once = |x: &mut Vec<f64>, set: &ActiveSet| -> SweepReport {
+                let xs = SharedMut::new(x.as_mut_slice());
+                discovery_sweep(
+                    &xs,
+                    &winv,
+                    &col_starts,
+                    &schedule,
+                    set,
+                    threads,
+                    Assignment::RoundRobin,
+                    backend,
+                    engine.as_ref(),
+                )
+            };
+            // Untimed seed sweep: attaches the steady-state duals to the
+            // set so the timed sweeps carry realistic merge-scan work.
+            sweep_once(&mut x, &set);
+            let t0 = Instant::now();
+            let mut last = None;
+            for _ in 0..reps {
+                last = Some(sweep_once(&mut x, &set));
+            }
+            let dt = t0.elapsed().as_secs_f64().max(1e-9);
+            let report = last.expect("reps >= 1");
+            let vps = (reps as u64 * triplets) as f64 / dt;
+            let speedup = match scalar_vps {
+                None => {
+                    scalar_vps = Some(vps);
+                    1.0
+                }
+                Some(s) => vps / s,
+            };
+            println!(
+                "    {:<8} {:>9.3e} triplet-visits/s ({:>5.2}x scalar), \
+                 hit rate {:>6.3}%, {:.3}s for {} sweeps",
+                backend.name(),
+                vps,
+                speedup,
+                100.0 * report.hit_rate(),
+                dt,
+                reps
+            );
+            records.push(Record {
+                n,
+                backend: backend.name(),
+                sweeps: reps,
+                seconds: dt,
+                visits_per_sec: vps,
+                hit_rate: report.hit_rate(),
+                speedup_vs_scalar: speedup,
+            });
+        }
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"sweep\",\n");
+    json.push_str("  \"unit\": \"triplet_visits_per_sec\",\n");
+    let _ = writeln!(json, "  \"threads\": {threads},");
+    json.push_str("  \"results\": [\n");
+    for (idx, r) in records.iter().enumerate() {
+        let _ = write!(
+            json,
+            "    {{\"n\": {}, \"backend\": \"{}\", \"sweeps\": {}, \"seconds\": {:.6}, \
+             \"triplet_visits_per_sec\": {:.1}, \"screen_hit_rate\": {:.6}, \
+             \"speedup_vs_scalar\": {:.4}}}",
+            r.n, r.backend, r.sweeps, r.seconds, r.visits_per_sec, r.hit_rate,
+            r.speedup_vs_scalar
+        );
+        json.push_str(if idx + 1 < records.len() { ",\n" } else { "\n" });
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("\nwrote {out_path}"),
+        Err(e) => eprintln!("\nwarning: could not write {out_path}: {e}"),
+    }
+}

@@ -146,4 +146,22 @@ mod tests {
         let b = parse("solve --strategy full");
         assert_eq!(b.get_or("sweep-every", 8usize).unwrap(), 8);
     }
+
+    #[test]
+    fn sweep_engine_flags_parse() {
+        // The grammar main.rs uses for the screen-then-project engine.
+        let a = parse(
+            "solve --strategy active --sweep-backend screened --sweep-policy adaptive",
+        );
+        assert_eq!(a.get("sweep-backend"), Some("screened"));
+        assert_eq!(a.get("sweep-policy"), Some("adaptive"));
+        let b = parse("nearness --sweep-backend engine --sweep-policy fixed --sweep-every 4");
+        assert_eq!(b.get("sweep-backend"), Some("engine"));
+        assert_eq!(b.get("sweep-policy"), Some("fixed"));
+        assert_eq!(b.get_or("sweep-every", 8usize).unwrap(), 4);
+        // both default to absent (screened backend / strategy cadence)
+        let c = parse("solve --strategy active");
+        assert_eq!(c.get("sweep-backend"), None);
+        assert_eq!(c.get("sweep-policy"), None);
+    }
 }

@@ -291,6 +291,23 @@ pub struct StrategyRow {
     pub active_triplets: usize,
     pub max_violation: f64,
     pub lp_objective: f64,
+    /// Triplets examined by discovery sweeps (0 for the full strategy).
+    pub sweep_screened: u64,
+    /// Of those, triplets that actually needed a projection.
+    pub sweep_projected: u64,
+}
+
+impl StrategyRow {
+    /// Fraction of screened sweep triplets that needed a projection —
+    /// the number that explains *why* screening wins (None when the
+    /// strategy ran no sweeps).
+    pub fn screen_hit_rate(&self) -> Option<f64> {
+        if self.sweep_screened > 0 {
+            Some(self.sweep_projected as f64 / self.sweep_screened as f64)
+        } else {
+            None
+        }
+    }
 }
 
 /// Solve `inst` once per strategy with otherwise-identical options —
@@ -314,6 +331,8 @@ pub fn strategy_ablation(
                 active_triplets: sol.active_triplets,
                 max_violation: sol.residuals.max_violation,
                 lp_objective: sol.residuals.lp_objective,
+                sweep_screened: sol.sweep_screened,
+                sweep_projected: sol.sweep_projected,
             }
         })
         .collect()
@@ -481,6 +500,13 @@ mod tests {
         // same pass budget, so the full row visits exactly 3·C(n,3)/pass
         let per_pass = crate::solver::schedule::n_triplets(24) * 3;
         assert_eq!(rows[0].metric_visits, 30 * per_pass);
+        // hit-rate instrumentation: the full strategy has no sweeps, the
+        // active one screens C(n,3) per sweep and projects a subset.
+        assert_eq!(rows[0].screen_hit_rate(), None);
+        let hit = rows[1].screen_hit_rate().expect("active rows ran sweeps");
+        assert!(rows[1].sweep_screened % crate::solver::schedule::n_triplets(24) == 0);
+        assert!(rows[1].sweep_projected <= rows[1].sweep_screened);
+        assert!((0.0..=1.0).contains(&hit));
     }
 
     #[test]

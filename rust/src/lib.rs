@@ -20,6 +20,13 @@
 //!   persistently idle constraints. Selected per solve via
 //!   [`solver::SolveOpts::strategy`]; cuts constraint visits by large
 //!   factors once duals sparsify, without changing the fixed point.
+//!   Discovery sweeps themselves run on the screen-then-project engine
+//!   ([`solver::active::sweep`]): a branch-free vectorized violation
+//!   screen per contiguous `k`-run, scalar projection of the compact
+//!   worklist, bitwise identical to the classic sweep and selectable
+//!   per solve via [`solver::SolveOpts::sweep_backend`] (with a PJRT
+//!   batch variant), on a fixed or adaptive cadence
+//!   ([`solver::SolveOpts::sweep_policy`]).
 //! * **L2/L1 (build time)** — a JAX model + Pallas kernel implementing the
 //!   batched projection step, AOT-lowered to HLO text and executed from
 //!   Rust through PJRT ([`runtime`]).

@@ -6,10 +6,12 @@
 //!   solve    --dataset ca-GrQc --n 300 --threads 8 --tile 40 --passes 20
 //!            [--engine cpu|xla] [--assignment rr|rot] [--round] [--serial]
 //!            [--strategy full|active --sweep-every 8 --forget-after 3]
+//!            [--sweep-backend scalar|screened|engine] [--sweep-policy fixed|adaptive]
 //!            [--checkpoint state.ckpt --checkpoint-every 10]
 //!            [--resume state.ckpt | --warm-start state.ckpt]
 //!   nearness --n 200 --threads 8 --tile 40 --passes 50
 //!            [--strategy full|active --sweep-every 8 --forget-after 3]
+//!            [--sweep-backend scalar|screened|engine] [--sweep-policy fixed|adaptive]
 //!            [--checkpoint ... --checkpoint-every ... --resume ... --warm-start ...]
 //!   warm-ablation --n 120 --perturb-frac 0.1 --perturb-rel 0.2
 //!            [--strategy active] [--tol 1e-6] [--check-every 5]
@@ -26,8 +28,10 @@ use metric_proj::instance::{cc_objective, CcLpInstance};
 use metric_proj::rounding::{pivot, threshold};
 use metric_proj::solver::checkpoint::{self, SolverState, WarmStartOpts};
 use metric_proj::solver::schedule::Assignment;
+use metric_proj::runtime::DEFAULT_ARTIFACTS_DIR;
 use metric_proj::solver::{
     dykstra_parallel, dykstra_serial, dykstra_xla, nearness, SolveOpts, Strategy,
+    SweepBackend, SweepPolicy,
 };
 use metric_proj::util::parallel::available_cores;
 use metric_proj::util::timer::time;
@@ -85,6 +89,36 @@ fn parse_strategy(args: &Args) -> Result<Strategy> {
     let s = args.get("strategy").unwrap_or("full");
     Strategy::parse(s, sweep_every, forget_after)
         .with_context(|| format!("--strategy must be full|active, got `{s}`"))
+}
+
+fn parse_sweep_backend(args: &Args) -> Result<SweepBackend> {
+    let s = args.get("sweep-backend").unwrap_or("screened");
+    SweepBackend::parse(s)
+        .with_context(|| format!("--sweep-backend must be scalar|screened|engine, got `{s}`"))
+}
+
+fn parse_sweep_policy(args: &Args) -> Result<Option<SweepPolicy>> {
+    match args.get("sweep-policy") {
+        None => Ok(None),
+        Some(s) => {
+            let sweep_every =
+                args.get_or("sweep-every", 8usize).map_err(|e| anyhow::anyhow!(e))?;
+            SweepPolicy::parse(s, sweep_every)
+                .map(Some)
+                .with_context(|| format!("--sweep-policy must be fixed|adaptive, got `{s}`"))
+        }
+    }
+}
+
+/// Print the screen hit rate when the run had discovery sweeps.
+fn print_sweep_screen(screened: u64, projected: u64) {
+    if screened > 0 {
+        println!(
+            "sweep screen: {projected} of {screened} screened triplets projected \
+             ({:.2}% hit rate)",
+            100.0 * projected as f64 / screened as f64
+        );
+    }
 }
 
 /// Checkpoint flags shared by `solve` and `nearness`:
@@ -199,7 +233,7 @@ fn eval_config(args: &Args) -> Result<EvalConfig> {
 
 fn cmd_info() -> Result<()> {
     println!("cores available : {}", available_cores());
-    match metric_proj::runtime::PjrtRuntime::cpu("artifacts") {
+    match metric_proj::runtime::PjrtRuntime::cpu(DEFAULT_ARTIFACTS_DIR) {
         Ok(rt) => {
             println!("pjrt platform   : {}", rt.platform());
             println!("pjrt devices    : {}", rt.device_count());
@@ -243,6 +277,8 @@ fn cmd_solve(args: &Args) -> Result<()> {
         track_pass_times: true,
         assignment: parse_assignment(args)?,
         strategy: parse_strategy(args)?,
+        sweep_backend: parse_sweep_backend(args)?,
+        sweep_policy: parse_sweep_policy(args)?,
         checkpoint_every: ck.every,
         ..Default::default()
     };
@@ -279,12 +315,17 @@ fn cmd_solve(args: &Args) -> Result<()> {
     println!("instance  : {desc}");
     println!("constraints: {:.3e}", inst.n_constraints() as f64);
     println!(
-        "solver    : {} threads={} tile={} passes={} strategy={:?}",
+        "solver    : {} threads={} tile={} passes={} strategy={:?} sweep-backend={}{}",
         if args.has_flag("serial") { "serial" } else { "parallel" },
         opts.threads,
         opts.tile,
         opts.max_passes,
-        opts.strategy
+        opts.strategy,
+        opts.sweep_backend.name(),
+        match opts.sweep_policy {
+            Some(p) => format!(" sweep-policy={p:?}"),
+            None => String::new(),
+        }
     );
     let (sol, secs) = match engine {
         "cpu" => {
@@ -304,7 +345,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
             (res?, secs)
         }
         "xla" => {
-            let eng = metric_proj::runtime::engine::XlaEngine::load("artifacts")
+            let eng = metric_proj::runtime::engine::XlaEngine::load(DEFAULT_ARTIFACTS_DIR)
                 .context("loading XLA engine (run `make artifacts`)")?;
             let (sol, secs) = time(|| dykstra_xla::solve(&inst, &opts, &eng));
             (sol?, secs)
@@ -323,6 +364,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
     println!("LP objective (lower bound on CC): {:.4}", r.lp_objective);
     println!("nnz metric duals: {}", sol.nnz_duals);
     print_work(sol.metric_visits, sol.active_triplets, sol.passes, inst.n_metric_constraints());
+    print_sweep_screen(sol.sweep_screened, sol.sweep_projected);
 
     if args.has_flag("round") {
         let labels_t = threshold::round(&sol.x, 0.5);
@@ -350,6 +392,8 @@ fn cmd_nearness(args: &Args) -> Result<()> {
         threads: args.get_or("threads", available_cores()).map_err(|e| anyhow::anyhow!(e))?,
         tile: args.get_or("tile", 40usize).map_err(|e| anyhow::anyhow!(e))?,
         strategy: parse_strategy(args)?,
+        sweep_backend: parse_sweep_backend(args)?,
+        sweep_policy: parse_sweep_policy(args)?,
         checkpoint_every: ck.every,
         ..Default::default()
     };
@@ -380,6 +424,7 @@ fn cmd_nearness(args: &Args) -> Result<()> {
     println!("max violation = {:.3e}", sol.max_violation);
     let full_per_pass = metric_proj::solver::schedule::n_triplets(n) as u128 * 3;
     print_work(sol.metric_visits, sol.active_triplets, sol.passes, full_per_pass);
+    print_sweep_screen(sol.sweep_screened, sol.sweep_projected);
     Ok(())
 }
 
@@ -399,6 +444,8 @@ fn cmd_warm_ablation(args: &Args) -> Result<()> {
         threads: args.get_or("threads", available_cores()).map_err(|e| anyhow::anyhow!(e))?,
         tile: args.get_or("tile", 40usize).map_err(|e| anyhow::anyhow!(e))?,
         strategy: parse_strategy(args)?,
+        sweep_backend: parse_sweep_backend(args)?,
+        sweep_policy: parse_sweep_policy(args)?,
         ..Default::default()
     };
     println!(

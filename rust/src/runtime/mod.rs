@@ -12,6 +12,12 @@ pub mod engine;
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 
+/// Where `make artifacts` drops the AOT-compiled HLO-text kernels,
+/// relative to the working directory — shared by the CLI and the solver
+/// paths that load the engine on demand (e.g. the `engine` sweep
+/// backend).
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
 /// A PJRT client plus the artifact directory.
 pub struct PjrtRuntime {
     client: xla::PjRtClient,

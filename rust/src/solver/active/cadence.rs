@@ -1,0 +1,247 @@
+//! When to run the next discovery sweep ([`SweepPolicy`]).
+//!
+//! The fixed cadence reproduces the classic `pass % sweep_every == 0`
+//! schedule exactly (pass indices are absolute, so checkpoint resumes
+//! keep the phase — the bitwise-resume tests rely on it). The adaptive
+//! cadence instead watches the solve:
+//!
+//! * **Shrinkage stall** — after each cheap pass the active set should
+//!   keep losing forgotten entries; when it fails to shrink by
+//!   [`MIN_SHRINK`] for [`STALL_PATIENCE`] consecutive cheap passes, the
+//!   watched constraints have settled and the next sweep is due (either
+//!   the solve converged, or progress now needs constraints outside the
+//!   set).
+//! * **Trusted-violation plateau** — when consecutive sweeps measure
+//!   violations that barely improve (ratio above [`PLATEAU_RATIO`]), the
+//!   active set is likely missing the rows that matter, so the interval
+//!   cap tightens from [`MAX_INTERVAL`] to [`PLATEAU_INTERVAL`].
+//! * **Interval cap** — a sweep always fires after at most
+//!   `MAX_INTERVAL` cheap passes, which bounds how long a violation that
+//!   arose unwatched can go unnoticed (the project-and-forget
+//!   convergence argument needs sweeps to stay quasi-cyclic).
+//!
+//! The controller's observations are runtime-only and not checkpointed:
+//! resuming an adaptive run re-learns its signals, so sweep placement
+//! may differ from the uninterrupted run (fixed cadences resume
+//! bitwise).
+
+use crate::solver::SweepPolicy;
+
+/// Cheap passes without sufficient shrinkage before a sweep is due.
+pub const STALL_PATIENCE: usize = 3;
+/// Relative active-set shrinkage per cheap pass that counts as progress.
+pub const MIN_SHRINK: f64 = 0.005;
+/// Hard cap on cheap passes between sweeps.
+pub const MAX_INTERVAL: usize = 32;
+/// Tightened cap while the trusted violation plateaus.
+pub const PLATEAU_INTERVAL: usize = 8;
+/// Violation ratio between consecutive sweeps that counts as a plateau.
+pub const PLATEAU_RATIO: f64 = 0.95;
+
+/// Decides, pass by pass, whether the active driver sweeps or runs a
+/// cheap pass. Feed it every completed pass via [`note_sweep`] /
+/// [`note_cheap`]; ask [`wants_sweep`] before each pass.
+///
+/// [`note_sweep`]: SweepCadence::note_sweep
+/// [`note_cheap`]: SweepCadence::note_cheap
+/// [`wants_sweep`]: SweepCadence::wants_sweep
+#[derive(Clone, Copy, Debug)]
+pub struct SweepCadence {
+    policy: SweepPolicy,
+    /// Cheap passes since the last sweep.
+    since_sweep: usize,
+    /// Active-set size after the previous cheap pass.
+    prev_active: Option<usize>,
+    /// Consecutive cheap passes without sufficient shrinkage.
+    stall: usize,
+    /// Max violation measured by the previous sweep.
+    last_violation: Option<f64>,
+    /// The last two sweeps plateaued.
+    plateau: bool,
+    /// A stall already marked the next sweep due.
+    due: bool,
+}
+
+impl SweepCadence {
+    /// Fresh controller for a (possibly resumed) solve.
+    pub fn new(policy: SweepPolicy) -> SweepCadence {
+        SweepCadence {
+            policy,
+            since_sweep: 0,
+            prev_active: None,
+            stall: 0,
+            last_violation: None,
+            plateau: false,
+            due: false,
+        }
+    }
+
+    /// Should pass `pass` (absolute index) be a discovery sweep?
+    pub fn wants_sweep(&self, pass: usize) -> bool {
+        match self.policy {
+            SweepPolicy::Fixed(k) => pass % k.max(1) == 0,
+            SweepPolicy::Adaptive => {
+                pass == 0 || self.due || self.since_sweep >= self.interval_cap()
+            }
+        }
+    }
+
+    fn interval_cap(&self) -> usize {
+        if self.plateau {
+            PLATEAU_INTERVAL
+        } else {
+            MAX_INTERVAL
+        }
+    }
+
+    /// Record a completed sweep and the max violation it measured.
+    pub fn note_sweep(&mut self, max_violation: f64) {
+        self.plateau = match self.last_violation {
+            Some(prev) => prev.is_finite() && max_violation > prev * PLATEAU_RATIO,
+            None => false,
+        };
+        self.last_violation = Some(max_violation);
+        self.since_sweep = 0;
+        self.prev_active = None;
+        self.stall = 0;
+        self.due = false;
+    }
+
+    /// Record a completed cheap pass and the active-set size after its
+    /// forget step.
+    pub fn note_cheap(&mut self, active_len: usize) {
+        self.since_sweep += 1;
+        if let Some(prev) = self.prev_active {
+            // Strict `<`: an unchanged size is a stall — in particular a
+            // set frozen at 0 (everything forgotten, solve likely done)
+            // must trip the trigger rather than wait out the full cap.
+            let shrunk = (active_len as f64) < (prev as f64) * (1.0 - MIN_SHRINK);
+            if shrunk {
+                self.stall = 0;
+            } else {
+                self.stall += 1;
+            }
+            if self.stall >= STALL_PATIENCE {
+                self.due = true;
+            }
+        }
+        self.prev_active = Some(active_len);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_cadence_reproduces_modular_schedule() {
+        let c = SweepCadence::new(SweepPolicy::Fixed(4));
+        for pass in 0..20 {
+            assert_eq!(c.wants_sweep(pass), pass % 4 == 0, "pass {pass}");
+        }
+        // Period 0 is clamped like ActiveParams clamps sweep_every.
+        let c0 = SweepCadence::new(SweepPolicy::Fixed(0));
+        assert!((0..5).all(|p| c0.wants_sweep(p)));
+    }
+
+    /// The ISSUE's synthetic stall trace: a steadily shrinking active set
+    /// never triggers an early sweep, a plateaued one does after
+    /// STALL_PATIENCE cheap passes.
+    #[test]
+    fn adaptive_triggers_on_shrinkage_stall() {
+        let mut c = SweepCadence::new(SweepPolicy::Adaptive);
+        assert!(c.wants_sweep(0), "pass 0 must discover");
+        c.note_sweep(1.0);
+        // Healthy shrinkage: 1000 -> 990 -> 980 ... never due early.
+        let mut size = 1000usize;
+        for pass in 1..=10 {
+            assert!(!c.wants_sweep(pass), "healthy shrinkage must not sweep (pass {pass})");
+            size -= 10;
+            c.note_cheap(size);
+        }
+        // Stall: the size freezes; after STALL_PATIENCE frozen cheap
+        // passes the next sweep is due.
+        let mut fired_at = None;
+        for extra in 1..=STALL_PATIENCE + 2 {
+            if c.wants_sweep(10 + extra) {
+                fired_at = Some(extra);
+                break;
+            }
+            c.note_cheap(size);
+        }
+        // note_cheap compares against the previous cheap pass, so the
+        // first frozen observation lands one pass after the freeze.
+        assert_eq!(fired_at, Some(STALL_PATIENCE + 1), "stall must trigger a sweep");
+        // A sweep resets the signals.
+        c.note_sweep(0.5);
+        assert!(!c.wants_sweep(99));
+    }
+
+    /// Regression: a set frozen at size 0 (everything forgotten) must
+    /// count as stalled, not as "shrunk to target" — `0 <= 0·(1-ε)`
+    /// would hold forever and defer the sweep to the interval cap.
+    #[test]
+    fn adaptive_triggers_on_an_empty_frozen_set() {
+        let mut c = SweepCadence::new(SweepPolicy::Adaptive);
+        c.note_sweep(1.0);
+        let mut fired_at = None;
+        for pass in 1..=STALL_PATIENCE + 3 {
+            if c.wants_sweep(pass) {
+                fired_at = Some(pass);
+                break;
+            }
+            c.note_cheap(0);
+        }
+        assert_eq!(fired_at, Some(STALL_PATIENCE + 2), "empty set must stall-trigger");
+    }
+
+    #[test]
+    fn adaptive_interval_cap_bounds_staleness() {
+        let mut c = SweepCadence::new(SweepPolicy::Adaptive);
+        c.note_sweep(1.0);
+        let mut size = 1_000_000usize;
+        let mut swept_at = None;
+        for pass in 1..=MAX_INTERVAL + 1 {
+            if c.wants_sweep(pass) {
+                swept_at = Some(pass);
+                break;
+            }
+            // keep shrinking briskly so no stall fires
+            size = (size as f64 * 0.9) as usize;
+            c.note_cheap(size);
+        }
+        assert_eq!(swept_at, Some(MAX_INTERVAL + 1), "cap must force a sweep");
+    }
+
+    #[test]
+    fn violation_plateau_tightens_the_cap() {
+        let mut c = SweepCadence::new(SweepPolicy::Adaptive);
+        c.note_sweep(1.0);
+        c.note_sweep(0.999); // barely improved: plateau
+        let mut size = 1_000_000usize;
+        let mut swept_at = None;
+        for pass in 1..=MAX_INTERVAL {
+            if c.wants_sweep(pass) {
+                swept_at = Some(pass);
+                break;
+            }
+            size = (size as f64 * 0.9) as usize;
+            c.note_cheap(size);
+        }
+        assert_eq!(swept_at, Some(PLATEAU_INTERVAL + 1));
+        // A clear improvement clears the plateau.
+        c.note_sweep(0.1);
+        assert!(!c.wants_sweep(1));
+        let mut later = None;
+        let mut sz = 1_000_000usize;
+        for pass in 1..=MAX_INTERVAL + 1 {
+            if c.wants_sweep(pass) {
+                later = Some(pass);
+                break;
+            }
+            sz = (sz as f64 * 0.9) as usize;
+            c.note_cheap(sz);
+        }
+        assert_eq!(later, Some(MAX_INTERVAL + 1));
+    }
+}

@@ -19,6 +19,13 @@
 //! `sweep_every = 1` and convergence checks off every pass is a sweep
 //! and the driver reproduces the full solver bitwise (tested).
 //!
+//! Discovery sweeps run on a pluggable [`SweepBackend`] (the
+//! screen-then-project engine of [`sweep`]; the screened and scalar
+//! backends are bitwise interchangeable) and fire on a [`SweepPolicy`]
+//! cadence ([`cadence`]): the classic fixed `sweep_every`, or an
+//! adaptive trigger driven by active-set shrinkage stalls and
+//! trusted-violation plateaus.
+//!
 //! Termination trusts the last sweep: cheap passes cannot see constraints
 //! outside the active set, so convergence is only ever screened at sweep
 //! passes, using the sweep's measured max violation together with exact
@@ -28,10 +35,12 @@
 //! residuals are always recomputed exactly — the tolerance contract of
 //! the returned solution matches the full solver's.
 
+pub mod cadence;
 pub mod forget;
 pub mod set;
 pub mod sweep;
 
+use self::cadence::SweepCadence;
 use self::set::{decode_key, ActiveSet};
 use self::sweep::{discovery_sweep, SweepReport};
 use super::checkpoint::{CheckRecord, SolverState};
@@ -40,10 +49,11 @@ use super::nearness::{NearnessOpts, NearnessSolution};
 use super::projection::visit_triplet;
 use super::schedule::{Assignment, Schedule};
 use super::termination::{compute_residuals, compute_residuals_trusting_sweep};
-use super::{CcState, Residuals, Solution, SolveOpts, Strategy};
+use super::{CcState, Residuals, Solution, SolveOpts, Strategy, SweepBackend, SweepPolicy};
 use crate::instance::metric_nearness::MetricNearnessInstance;
 use crate::instance::CcLpInstance;
 use crate::matrix::PackedSym;
+use crate::runtime::engine::XlaEngine;
 use crate::util::parallel::scoped_workers;
 use crate::util::shared::{PerWorker, SharedMut};
 
@@ -65,6 +75,23 @@ impl ActiveParams {
             }
             Strategy::Full => None,
         }
+    }
+
+    /// The cadence policy: an explicit option wins, otherwise the
+    /// strategy's fixed `sweep_every`.
+    pub fn policy(&self, opt: Option<SweepPolicy>) -> SweepPolicy {
+        opt.unwrap_or(SweepPolicy::Fixed(self.sweep_every))
+    }
+}
+
+/// Resolve the engine the sweep backend needs: `Engine` tries to load
+/// the PJRT artifacts once per solve and silently falls back to the
+/// (bitwise-equal) screened path when they are unavailable — which is
+/// always the case under the offline `xla` stub.
+fn load_sweep_engine(backend: SweepBackend) -> Option<XlaEngine> {
+    match backend {
+        SweepBackend::Engine => XlaEngine::load(crate::runtime::DEFAULT_ARTIFACTS_DIR).ok(),
+        _ => None,
     }
 }
 
@@ -151,6 +178,8 @@ pub fn solve_cc_checkpointed(
 ) -> anyhow::Result<Solution> {
     let params = ActiveParams::from_strategy(opts.strategy)
         .expect("active::solve_cc requires SolveOpts::strategy = Strategy::Active");
+    let mut cadence = SweepCadence::new(params.policy(opts.sweep_policy));
+    let engine = load_sweep_engine(opts.sweep_backend);
     let schedule = Schedule::new(inst.n, opts.tile);
     let p = opts.threads.max(1);
     let mut state = match resume_from {
@@ -184,6 +213,9 @@ pub fn solve_cc_checkpointed(
     let mut pass_times = Vec::new();
     let mut passes_done = start_pass;
     let mut last_saved = usize::MAX;
+    // Screen hit-rate accounting for this run segment (sweeps only).
+    let mut sweep_screened = 0u64;
+    let mut sweep_projected = 0u64;
     // Exact residuals of the confirming scan on early stop (state does
     // not change between that scan and the end of the loop).
     let mut exact_at_break: Option<Residuals> = None;
@@ -192,7 +224,7 @@ pub fn solve_cc_checkpointed(
         let t0 = std::time::Instant::now();
         // Pass 0 discovers — unless a warm start already seeded the set.
         let is_sweep =
-            pass % params.sweep_every == 0 && !(skip_sweep_at_start && pass == start_pass);
+            cadence.wants_sweep(pass) && !(skip_sweep_at_start && pass == start_pass);
         {
             let x = SharedMut::new(state.x.as_mut_slice());
             if is_sweep {
@@ -204,8 +236,12 @@ pub fn solve_cc_checkpointed(
                     &active,
                     p,
                     opts.assignment,
+                    opts.sweep_backend,
+                    engine.as_ref(),
                 );
                 triplet_visits += report.triplet_visits;
+                sweep_screened += report.triplet_visits;
+                sweep_projected += report.triplets_projected;
                 last_sweep = Some(report);
             } else {
                 triplet_visits += active_pass(
@@ -219,8 +255,11 @@ pub fn solve_cc_checkpointed(
                 );
             }
         }
-        if !is_sweep {
+        if is_sweep {
+            cadence.note_sweep(last_sweep.expect("sweep pass recorded a report").max_violation);
+        } else {
             forget::forget_inactive(&mut active, params.forget_after);
+            cadence.note_cheap(active.len());
         }
         run_pair_phase(&mut state, p);
         passes_done = pass + 1;
@@ -297,6 +336,8 @@ pub fn solve_cc_checkpointed(
     let active_now = active.len();
     residuals.metric_visits = triplet_visits * 3;
     residuals.active_triplets = active_now;
+    residuals.sweep_screened = sweep_screened;
+    residuals.sweep_projected = sweep_projected;
     Ok(Solution {
         x: state.x_matrix(),
         f: Some(state.f_matrix()),
@@ -306,6 +347,8 @@ pub fn solve_cc_checkpointed(
         nnz_duals: active.nnz_duals(),
         metric_visits: triplet_visits * 3,
         active_triplets: active_now,
+        sweep_screened,
+        sweep_projected,
     })
 }
 
@@ -339,6 +382,8 @@ pub fn solve_nearness_checkpointed(
 ) -> anyhow::Result<NearnessSolution> {
     let params = ActiveParams::from_strategy(opts.strategy)
         .expect("active::solve_nearness requires NearnessOpts::strategy = Strategy::Active");
+    let mut cadence = SweepCadence::new(params.policy(opts.sweep_policy));
+    let engine = load_sweep_engine(opts.sweep_backend);
     let n = inst.n;
     let p = opts.threads.max(1);
     let schedule = Schedule::new(n, opts.tile);
@@ -366,13 +411,16 @@ pub fn solve_nearness_checkpointed(
     let mut last_sweep: Option<SweepReport> = None;
     let mut passes_done = start_pass;
     let mut last_saved = usize::MAX;
+    // Screen hit-rate accounting for this run segment (sweeps only).
+    let mut sweep_screened = 0u64;
+    let mut sweep_projected = 0u64;
     // Exact violation of the confirming scan on early stop (x does not
     // change between that scan and the end of the loop).
     let mut exact_at_break: Option<f64> = None;
 
     for pass in start_pass..opts.max_passes {
         let is_sweep =
-            pass % params.sweep_every == 0 && !(skip_sweep_at_start && pass == start_pass);
+            cadence.wants_sweep(pass) && !(skip_sweep_at_start && pass == start_pass);
         {
             let xs = SharedMut::new(x.as_mut_slice());
             if is_sweep {
@@ -384,16 +432,23 @@ pub fn solve_nearness_checkpointed(
                     &active,
                     p,
                     opts.assignment,
+                    opts.sweep_backend,
+                    engine.as_ref(),
                 );
                 triplet_visits += report.triplet_visits;
+                sweep_screened += report.triplet_visits;
+                sweep_projected += report.triplets_projected;
                 last_sweep = Some(report);
             } else {
                 triplet_visits +=
                     active_pass(&xs, &winv, &col_starts, &schedule, &active, p, opts.assignment);
             }
         }
-        if !is_sweep {
+        if is_sweep {
+            cadence.note_sweep(last_sweep.expect("sweep pass recorded a report").max_violation);
+        } else {
             forget::forget_inactive(&mut active, params.forget_after);
+            cadence.note_cheap(active.len());
         }
         passes_done = pass + 1;
         // The sweep's mid-pass measurement is a cheap screen (later
@@ -462,6 +517,8 @@ pub fn solve_nearness_checkpointed(
         passes: passes_done,
         metric_visits: triplet_visits * 3,
         active_triplets: active.len(),
+        sweep_screened,
+        sweep_projected,
     })
 }
 

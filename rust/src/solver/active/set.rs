@@ -35,6 +35,21 @@ pub fn decode_key(key: u64) -> (usize, usize, usize) {
     )
 }
 
+/// High bits shared by every key of the `k`-run with fixed `(i, j)` —
+/// what the screened sweep's merge-scan segments bucket entries by.
+#[inline(always)]
+pub fn run_prefix(i: usize, j: usize) -> u64 {
+    ((i as u64) << 20) | (j as u64)
+}
+
+/// The [`run_prefix`] of an existing key (drops `k` and the type bits).
+/// Keeping this next to [`triplet_key`] means the bit layout lives in
+/// exactly one module.
+#[inline(always)]
+pub fn key_run_prefix(key: u64) -> u64 {
+    key >> 22
+}
+
 /// One active triplet: its key, the three scaled Dykstra duals from its
 /// last visit, and how many consecutive active passes those duals have
 /// been all-zero (the forget counter).
@@ -181,6 +196,7 @@ mod tests {
         for &(i, j, k) in &[(0usize, 1usize, 2usize), (3, 7, 19), (100, 5000, 900_000)] {
             let key = triplet_key(i, j, k);
             assert_eq!(decode_key(key), (i, j, k));
+            assert_eq!(key_run_prefix(key), run_prefix(i, j), "run prefix mismatch");
             if k < (1 << 20) {
                 assert_eq!(key, metric_key(i, j, k, 0));
                 assert_eq!(key & 3, 0, "type bits must be clear");

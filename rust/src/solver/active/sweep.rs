@@ -1,4 +1,4 @@
-//! Full-sweep violation discovery.
+//! Full-sweep violation discovery — the screen-then-project engine.
 //!
 //! A discovery sweep is a normal wave-parallel Dykstra pass over **all**
 //! `C(n,3)` triplets that additionally (a) measures the largest metric
@@ -15,11 +15,51 @@
 //! The sweep reuses the wave [`Schedule`] directly, so discovery itself
 //! is conflict-free and parallel: same tile-to-worker assignment, same
 //! cube order inside each tile, barriers between waves.
+//!
+//! # Screen-then-project
+//!
+//! After the first few rounds only a vanishing fraction of triplets are
+//! violated or carry a nonzero dual, so almost every sweep visit is a
+//! provable no-op. The [`SweepBackend::Screened`] path exploits this in
+//! two phases, working one contiguous `k`-run at a time
+//! ([`for_each_run`]):
+//!
+//! 1. **Screen** — broadcast `x_ij`, stream the contiguous `x[p_ik..]` /
+//!    `x[p_jk..]` column segments, and compute each triplet's worst
+//!    metric residual into a stripe buffer: a branch-free,
+//!    auto-vectorizable loop with no key construction and no per-triplet
+//!    index arithmetic. Merged with the bucket's ordered entries (the
+//!    same merge-scan the scalar sweep uses), this yields a compact
+//!    worklist of triplets that actually need work: violated now, or
+//!    holding a nonzero dual.
+//! 2. **Project** — visit only the worklist with the fused scalar kernel
+//!    ([`visit_triplet`]), in cube order. A visit that moves `x` rewrites
+//!    `x_ij`, which the rest of the run reads, so the tail of the stripe
+//!    is re-screened after every projecting visit; between re-screens the
+//!    stripe holds exactly the value the scalar sweep would measure just
+//!    before each visit.
+//!
+//! Skipped triplets are satisfied with zero duals at the moment their
+//! visit would have happened, so skipping them is an exact no-op — the
+//! same invariant that lets the sweep drop them from the set. The
+//! screened sweep is therefore **bitwise identical** to the scalar sweep:
+//! same `x`, same rebuilt active set, same `max_violation` (tested, and
+//! pinned by `tests/sweep_backends.rs`).
+//!
+//! [`SweepBackend::Engine`] runs the phase-1 screen through the
+//! PJRT-compiled batch kernels instead (one [`XlaEngine::project_batch`]
+//! probe per tile, f32), keeping phase 2 on the exact scalar kernel; it
+//! falls back to `Screened` whenever no engine is supplied, which is
+//! always the case under the offline `xla` stub. See
+//! [`sweep_tile_engine`] for the f32 screen's accuracy caveats (it is a
+//! throughput backend, not a tight-tolerance one).
 
-use super::set::{triplet_key, ActiveSet, ActiveTriplet};
+use super::set::{decode_key, key_run_prefix, run_prefix, triplet_key, ActiveSet, ActiveTriplet};
+use crate::runtime::engine::XlaEngine;
 use crate::solver::projection::visit_triplet;
-use crate::solver::schedule::{Assignment, Schedule};
-use crate::solver::tiling::for_each_triplet;
+use crate::solver::schedule::{Assignment, Schedule, Tile};
+use crate::solver::tiling::{for_each_run, for_each_triplet};
+use crate::solver::SweepBackend;
 use crate::util::parallel::scoped_workers;
 use crate::util::shared::{PerWorker, SharedMut};
 
@@ -29,16 +69,34 @@ pub struct SweepReport {
     /// Max violation over all metric rows, each measured at the moment
     /// just before its triplet's visit.
     pub max_violation: f64,
-    /// Triplets visited (= C(n,3)).
+    /// Triplets screened (= C(n,3)): every triplet is examined by every
+    /// backend, so this is the stable work axis across backends and
+    /// checkpoint resumes.
     pub triplet_visits: u64,
+    /// Triplets that actually reached the projection kernel — violated
+    /// at their visit, or holding a nonzero dual. The scalar backend
+    /// projects everything, so there `triplets_projected ==
+    /// triplet_visits`; `triplets_projected / triplet_visits` is the
+    /// screen hit rate.
+    pub triplets_projected: u64,
+}
+
+impl SweepReport {
+    /// Fraction of screened triplets that needed a projection.
+    pub fn hit_rate(&self) -> f64 {
+        self.triplets_projected as f64 / (self.triplet_visits.max(1)) as f64
+    }
 }
 
 /// Run one discovery sweep over every triplet; rebuilds `set` in place.
 ///
 /// `x` must view the packed distance variables; the caller guarantees no
 /// other access to them for the duration (same contract as the full
-/// metric phase).
-pub(crate) fn discovery_sweep(
+/// metric phase). `engine` is consulted only by
+/// [`SweepBackend::Engine`]; passing `None` there falls back to the
+/// (bitwise-equal) screened path.
+#[allow(clippy::too_many_arguments)]
+pub fn discovery_sweep(
     x: &SharedMut<'_, f64>,
     winv: &[f64],
     col_starts: &[usize],
@@ -46,60 +104,478 @@ pub(crate) fn discovery_sweep(
     set: &ActiveSet,
     p: usize,
     assignment: Assignment,
+    backend: SweepBackend,
+    engine: Option<&XlaEngine>,
 ) -> SweepReport {
     let b = schedule.tile_size();
     let maxima = PerWorker::new(vec![f64::NEG_INFINITY; p]);
+    let projected = PerWorker::new(vec![0u64; p]);
     scoped_workers(p, |tid, barrier| {
         let mut local_max = f64::NEG_INFINITY;
+        let mut local_projected = 0u64;
+        // Stripe buffer for the screen; runs never exceed the tile's
+        // k-span, which the schedule caps at b.
+        let mut stripe = vec![0.0f64; b];
+        let mut lanes = EngineLanes::default();
         for (wave_idx, wave) in schedule.waves().iter().enumerate() {
             let mut r = assignment.first_tile(tid, wave_idx, p);
             while r < wave.len() {
+                let tile = &wave[r];
+                let span = tile.k_hi - tile.k_lo;
+                if stripe.len() < span {
+                    stripe.resize(span, 0.0);
+                }
                 let flat = set.flat_index(wave_idx, r);
                 // SAFETY: this worker owns tile `r` of the current wave,
-                // hence bucket `flat`, until the wave barrier.
+                // hence bucket `flat`, until the wave barrier. Wave
+                // conflict-freeness gives exclusive access to every
+                // variable reachable from the tile (all tile fns below).
                 let bucket = unsafe { set.bucket_mut(flat) };
                 let old = std::mem::take(bucket);
-                let mut cursor = 0usize;
-                for_each_triplet(&wave[r], b, |i, j, k| {
-                    let key = triplet_key(i, j, k);
-                    // Merge-scan: `old` is in cube order from the last
-                    // rebuild (forgetting preserves order), the exact
-                    // enumeration order here — O(1) per triplet.
-                    let y = if cursor < old.len() && old[cursor].key == key {
-                        cursor += 1;
-                        old[cursor - 1].y
-                    } else {
-                        [0.0; 3]
-                    };
-                    let ci = col_starts[i];
-                    let pij = ci + (j - i - 1);
-                    let pik = ci + (k - i - 1);
-                    let pjk = col_starts[j] + (k - j - 1);
-                    // SAFETY: wave conflict-freeness gives exclusive
-                    // access to the triplet's three variables.
-                    unsafe {
-                        let (x0, x1, x2) = (x.get(pij), x.get(pik), x.get(pjk));
-                        let v = (x0 - x1 - x2).max(x1 - x0 - x2).max(x2 - x0 - x1);
-                        if v > local_max {
-                            local_max = v;
-                        }
-                        let th = visit_triplet(x, winv, pij, pik, pjk, y);
-                        if th[0] != 0.0 || th[1] != 0.0 || th[2] != 0.0 {
-                            bucket.push(ActiveTriplet { key, y: th, zero_passes: 0 });
+                local_projected += unsafe {
+                    match backend {
+                        SweepBackend::Scalar => sweep_tile_scalar(
+                            x, winv, col_starts, tile, b, &old, bucket, &mut local_max,
+                        ),
+                        SweepBackend::Screened => sweep_tile_screened(
+                            x,
+                            winv,
+                            col_starts,
+                            tile,
+                            b,
+                            &old,
+                            bucket,
+                            &mut stripe,
+                            &mut local_max,
+                        ),
+                        SweepBackend::Engine => {
+                            // The probe mutates only scratch lanes, so a
+                            // failure (or no engine) cleanly falls back
+                            // to the screened path before any visit.
+                            let probed = match engine {
+                                Some(eng) => engine_screen_flags(
+                                    eng, x, winv, col_starts, tile, b, &mut lanes,
+                                )
+                                .is_ok(),
+                                None => false,
+                            };
+                            if probed {
+                                sweep_tile_engine(
+                                    x,
+                                    winv,
+                                    col_starts,
+                                    tile,
+                                    b,
+                                    &lanes.flags,
+                                    &old,
+                                    bucket,
+                                    &mut local_max,
+                                )
+                            } else {
+                                sweep_tile_screened(
+                                    x,
+                                    winv,
+                                    col_starts,
+                                    tile,
+                                    b,
+                                    &old,
+                                    bucket,
+                                    &mut stripe,
+                                    &mut local_max,
+                                )
+                            }
                         }
                     }
-                });
-                debug_assert_eq!(cursor, old.len(), "stale active entries not consumed");
+                };
                 r += p;
             }
             barrier.wait();
         }
         // SAFETY: slot `tid` belongs to this worker.
-        unsafe { *maxima.get_mut(tid) = local_max };
+        unsafe {
+            *maxima.get_mut(tid) = local_max;
+            *projected.get_mut(tid) = local_projected;
+        }
     });
     let max_violation =
         maxima.into_inner().into_iter().fold(f64::NEG_INFINITY, f64::max).max(0.0);
-    SweepReport { max_violation, triplet_visits: schedule.total_triplets() }
+    SweepReport {
+        max_violation,
+        triplet_visits: schedule.total_triplets(),
+        triplets_projected: projected.into_inner().into_iter().sum(),
+    }
+}
+
+/// The original callback sweep over one tile: visit every triplet.
+///
+/// # Safety
+/// Exclusive access to the tile's variables and bucket (wave invariant).
+#[allow(clippy::too_many_arguments)]
+unsafe fn sweep_tile_scalar(
+    x: &SharedMut<'_, f64>,
+    winv: &[f64],
+    col_starts: &[usize],
+    tile: &Tile,
+    b: usize,
+    old: &[ActiveTriplet],
+    bucket: &mut Vec<ActiveTriplet>,
+    local_max: &mut f64,
+) -> u64 {
+    let mut cursor = 0usize;
+    let mut projected = 0u64;
+    for_each_triplet(tile, b, |i, j, k| {
+        let key = triplet_key(i, j, k);
+        // Merge-scan: `old` is in cube order from the last rebuild
+        // (forgetting preserves order), the exact enumeration order here
+        // — O(1) per triplet.
+        let y = if cursor < old.len() && old[cursor].key == key {
+            cursor += 1;
+            old[cursor - 1].y
+        } else {
+            [0.0; 3]
+        };
+        let ci = col_starts[i];
+        let pij = ci + (j - i - 1);
+        let pik = ci + (k - i - 1);
+        let pjk = col_starts[j] + (k - j - 1);
+        // SAFETY: wave conflict-freeness gives exclusive access to the
+        // triplet's three variables.
+        unsafe {
+            let (x0, x1, x2) = (x.get(pij), x.get(pik), x.get(pjk));
+            let v = (x0 - x1 - x2).max(x1 - x0 - x2).max(x2 - x0 - x1);
+            if v > *local_max {
+                *local_max = v;
+            }
+            let th = visit_triplet(x, winv, pij, pik, pjk, y);
+            projected += 1;
+            if th[0] != 0.0 || th[1] != 0.0 || th[2] != 0.0 {
+                bucket.push(ActiveTriplet { key, y: th, zero_passes: 0 });
+            }
+        }
+    });
+    debug_assert_eq!(cursor, old.len(), "stale active entries not consumed");
+    projected
+}
+
+/// Screen-then-project over one tile, run by run (bitwise equal to
+/// [`sweep_tile_scalar`]).
+///
+/// # Safety
+/// Exclusive access to the tile's variables and bucket (wave invariant).
+#[allow(clippy::too_many_arguments)]
+unsafe fn sweep_tile_screened(
+    x: &SharedMut<'_, f64>,
+    winv: &[f64],
+    col_starts: &[usize],
+    tile: &Tile,
+    b: usize,
+    old: &[ActiveTriplet],
+    bucket: &mut Vec<ActiveTriplet>,
+    stripe: &mut [f64],
+    local_max: &mut f64,
+) -> u64 {
+    let mut cursor = 0usize;
+    let mut projected = 0u64;
+    for_each_run(tile, b, |i, j, k0, k1| {
+        // The bucket's entries for this run sit contiguously at the
+        // cursor: cube order enumerates runs in this exact order, and a
+        // key's run prefix identifies the run.
+        let run_hi = run_prefix(i, j);
+        let e_start = cursor;
+        while cursor < old.len() && key_run_prefix(old[cursor].key) == run_hi {
+            cursor += 1;
+        }
+        let ci = col_starts[i];
+        let pij = ci + (j - i - 1);
+        let pik0 = ci + (k0 - i - 1);
+        let pjk0 = col_starts[j] + (k0 - j - 1);
+        // SAFETY: forwarded wave invariant.
+        projected += unsafe {
+            project_run(
+                x,
+                winv,
+                i,
+                j,
+                pij,
+                pik0,
+                pjk0,
+                k0,
+                k1 - k0,
+                &old[e_start..cursor],
+                bucket,
+                stripe,
+                local_max,
+            )
+        };
+    });
+    debug_assert_eq!(cursor, old.len(), "stale active entries not consumed");
+    projected
+}
+
+/// Branch-free violation screen of (part of) one run: `stripe[t]` gets
+/// the worst metric residual of triplet `(i, j, k0 + t)` for
+/// `t ∈ [lo, hi)`, computed with the exact expression (and operation
+/// order) of the scalar sweep. `x_ij` is broadcast; `x[p_ik..]` and
+/// `x[p_jk..]` stream down contiguous column segments.
+///
+/// # Safety
+/// Indices in bounds; exclusive access to the run's variables.
+#[inline]
+unsafe fn screen_run(
+    x: &SharedMut<'_, f64>,
+    pij: usize,
+    pik0: usize,
+    pjk0: usize,
+    lo: usize,
+    hi: usize,
+    stripe: &mut [f64],
+) {
+    let x0 = x.get(pij);
+    for t in lo..hi {
+        let x1 = x.get(pik0 + t);
+        let x2 = x.get(pjk0 + t);
+        stripe[t] = (x0 - x1 - x2).max(x1 - x0 - x2).max(x2 - x0 - x1);
+    }
+}
+
+/// Phase 2 for one run: walk the screened stripe in cube order, visiting
+/// only triplets that are violated or hold a dual. A projecting visit
+/// rewrites `x_ij`, which the rest of the stripe reads, so positions
+/// past the last write are stale; the walk consumes each position
+/// exactly once in order, so a stale position is recomputed lazily at
+/// the moment it is consumed (O(1) each, O(len) per run total — not the
+/// O(len · writes) an eager tail re-screen would cost on the dense
+/// early sweeps). Either way the consumed value is exactly the
+/// pre-visit residual the scalar sweep would measure.
+///
+/// # Safety
+/// Exclusive access to the run's variables and the bucket.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+unsafe fn project_run(
+    x: &SharedMut<'_, f64>,
+    winv: &[f64],
+    i: usize,
+    j: usize,
+    pij: usize,
+    pik0: usize,
+    pjk0: usize,
+    k0: usize,
+    len: usize,
+    entries: &[ActiveTriplet],
+    bucket: &mut Vec<ActiveTriplet>,
+    stripe: &mut [f64],
+    local_max: &mut f64,
+) -> u64 {
+    screen_run(x, pij, pik0, pjk0, 0, len, stripe);
+    // Positions >= stale_from were screened before the latest write to
+    // `x_ij` and must be recomputed when consumed.
+    let mut stale_from = len;
+    let mut projected = 0u64;
+    let mut pos = 0usize;
+    let mut ei = 0usize;
+    loop {
+        // Next triplet holding a dual (entries are in ascending k).
+        let next_ek = if ei < entries.len() {
+            decode_key(entries[ei].key).2 - k0
+        } else {
+            usize::MAX
+        };
+        // Scan to the next triplet needing work; everything passed over
+        // is satisfied with zero duals — an exact no-op to skip, after
+        // folding its residual into the running max.
+        let mut f = pos;
+        loop {
+            if f >= len {
+                break;
+            }
+            if f >= stale_from {
+                screen_run(x, pij, pik0, pjk0, f, f + 1, stripe);
+            }
+            if f == next_ek || stripe[f] > 0.0 {
+                break;
+            }
+            if stripe[f] > *local_max {
+                *local_max = stripe[f];
+            }
+            f += 1;
+        }
+        if f >= len {
+            break;
+        }
+        if stripe[f] > *local_max {
+            *local_max = stripe[f];
+        }
+        let y = if f == next_ek {
+            ei += 1;
+            entries[ei - 1].y
+        } else {
+            [0.0; 3]
+        };
+        let th = visit_triplet(x, winv, pij, pik0 + f, pjk0 + f, y);
+        projected += 1;
+        if th != [0.0; 3] {
+            bucket.push(ActiveTriplet {
+                key: triplet_key(i, j, k0 + f),
+                y: th,
+                zero_passes: 0,
+            });
+        }
+        pos = f + 1;
+        if pos >= len {
+            break;
+        }
+        // `visit_triplet` wrote back iff it had a dual to correct or
+        // projected something; everything after this position is stale.
+        if y != [0.0; 3] || th != [0.0; 3] {
+            stale_from = pos;
+        }
+    }
+    debug_assert_eq!(ei, entries.len(), "stale run entries not consumed");
+    projected
+}
+
+/// Scratch for the engine probe: one f32 lane per triplet of a tile.
+#[derive(Default)]
+struct EngineLanes {
+    x3: Vec<f32>,
+    w3: Vec<f32>,
+    y3: Vec<f32>,
+    /// `flags[lane]` = the probe kernel emitted a dual for the lane,
+    /// i.e. the triplet screened as violated (in f32).
+    flags: Vec<bool>,
+}
+
+/// Phase-1 screen of one tile through the PJRT engine: pack every
+/// triplet into an f32 lane, run one [`XlaEngine::project_batch`] probe
+/// on scratch copies (zero duals in), and flag the lanes the kernel
+/// projected. Mutates only `lanes`, so a failure leaves the sweep free
+/// to fall back to the screened path.
+///
+/// # Safety
+/// Exclusive read access to the tile's variables.
+unsafe fn engine_screen_flags(
+    eng: &XlaEngine,
+    x: &SharedMut<'_, f64>,
+    winv: &[f64],
+    col_starts: &[usize],
+    tile: &Tile,
+    b: usize,
+    lanes: &mut EngineLanes,
+) -> anyhow::Result<()> {
+    lanes.x3.clear();
+    lanes.w3.clear();
+    lanes.y3.clear();
+    for_each_run(tile, b, |i, j, k0, k1| {
+        let ci = col_starts[i];
+        let pij = ci + (j - i - 1);
+        let pik0 = ci + (k0 - i - 1);
+        let pjk0 = col_starts[j] + (k0 - j - 1);
+        for t in 0..k1 - k0 {
+            // SAFETY: forwarded from the caller's wave invariant.
+            unsafe {
+                lanes.x3.extend([
+                    x.get(pij) as f32,
+                    x.get(pik0 + t) as f32,
+                    x.get(pjk0 + t) as f32,
+                ]);
+                lanes.w3.extend([
+                    winv[pij] as f32,
+                    winv[pik0 + t] as f32,
+                    winv[pjk0 + t] as f32,
+                ]);
+            }
+            lanes.y3.extend([0.0f32; 3]);
+        }
+    });
+    eng.project_batch(&mut lanes.x3, &lanes.w3, &mut lanes.y3)?;
+    lanes.flags.clear();
+    lanes
+        .flags
+        .extend(lanes.y3.chunks_exact(3).map(|y| y[0] != 0.0 || y[1] != 0.0 || y[2] != 0.0));
+    Ok(())
+}
+
+/// Phase 2 of the engine sweep: visit flagged-or-dual triplets with the
+/// exact scalar kernel, in cube order. Two approximations, both of
+/// which the exact confirming scan guards against ever producing a
+/// falsely-converged result: (a) flags are not refreshed after writes,
+/// so a violation created mid-tile surfaces one sweep late; (b) a
+/// violation below f32 resolution screens as satisfied, and — because
+/// every engine sweep repeats the same f32 probe — keeps screening as
+/// satisfied, so the engine backend cannot drive such a row feasible at
+/// all and a solve with `tol_violation` near f32 resolution may never
+/// pass its confirming scan (it runs to `max_passes` instead of
+/// terminating early). Use `Screened` for tight tolerances; the engine
+/// backend targets throughput at f32-scale accuracy. The measured
+/// violation covers visited rows only.
+///
+/// # Safety
+/// Exclusive access to the tile's variables and bucket (wave invariant).
+#[allow(clippy::too_many_arguments)]
+unsafe fn sweep_tile_engine(
+    x: &SharedMut<'_, f64>,
+    winv: &[f64],
+    col_starts: &[usize],
+    tile: &Tile,
+    b: usize,
+    flags: &[bool],
+    old: &[ActiveTriplet],
+    bucket: &mut Vec<ActiveTriplet>,
+    local_max: &mut f64,
+) -> u64 {
+    let mut cursor = 0usize;
+    let mut lane = 0usize;
+    let mut projected = 0u64;
+    for_each_run(tile, b, |i, j, k0, k1| {
+        let run_hi = run_prefix(i, j);
+        let e_start = cursor;
+        while cursor < old.len() && key_run_prefix(old[cursor].key) == run_hi {
+            cursor += 1;
+        }
+        let entries = &old[e_start..cursor];
+        let mut ei = 0usize;
+        let ci = col_starts[i];
+        let pij = ci + (j - i - 1);
+        let pik0 = ci + (k0 - i - 1);
+        let pjk0 = col_starts[j] + (k0 - j - 1);
+        for t in 0..k1 - k0 {
+            let has_dual = ei < entries.len() && decode_key(entries[ei].key).2 == k0 + t;
+            if !(flags[lane] || has_dual) {
+                lane += 1;
+                continue;
+            }
+            let y = if has_dual {
+                ei += 1;
+                entries[ei - 1].y
+            } else {
+                [0.0; 3]
+            };
+            // SAFETY: forwarded wave invariant.
+            unsafe {
+                let (pik, pjk) = (pik0 + t, pjk0 + t);
+                let (x0, x1, x2) = (x.get(pij), x.get(pik), x.get(pjk));
+                let v = (x0 - x1 - x2).max(x1 - x0 - x2).max(x2 - x0 - x1);
+                if v > *local_max {
+                    *local_max = v;
+                }
+                let th = visit_triplet(x, winv, pij, pik, pjk, y);
+                projected += 1;
+                if th != [0.0; 3] {
+                    bucket.push(ActiveTriplet {
+                        key: triplet_key(i, j, k0 + t),
+                        y: th,
+                        zero_passes: 0,
+                    });
+                }
+            }
+            lane += 1;
+        }
+        debug_assert_eq!(ei, entries.len(), "stale run entries not consumed");
+    });
+    debug_assert_eq!(cursor, old.len(), "stale active entries not consumed");
+    debug_assert_eq!(lane, flags.len(), "engine lanes out of step with the tile");
+    projected
 }
 
 #[cfg(test)]
@@ -110,45 +586,133 @@ mod tests {
     use crate::solver::dykstra_parallel::run_metric_phase;
     use crate::solver::CcState;
 
+    const ALL_BACKENDS: [SweepBackend; 3] =
+        [SweepBackend::Scalar, SweepBackend::Screened, SweepBackend::Engine];
+
+    fn sweep(
+        st: &mut CcState,
+        schedule: &Schedule,
+        set: &ActiveSet,
+        p: usize,
+        backend: SweepBackend,
+    ) -> SweepReport {
+        let xs = SharedMut::new(st.x.as_mut_slice());
+        discovery_sweep(
+            &xs,
+            &st.winv,
+            &st.col_starts,
+            schedule,
+            set,
+            p,
+            Assignment::RoundRobin,
+            backend,
+            None,
+        )
+    }
+
     /// A sweep is bitwise a full metric pass: same x afterwards, and the
     /// rebuilt active set holds exactly the constraints a DualStore-based
-    /// pass leaves with nonzero duals.
+    /// pass leaves with nonzero duals. Holds for every backend.
     #[test]
     fn sweep_is_bitwise_a_full_metric_pass() {
         let inst = CcLpInstance::random(18, 0.5, 0.7, 1.8, 11);
         let schedule = Schedule::new(18, 4);
-        for p in [1usize, 3] {
-            let mut sa = CcState::new(&inst, 5.0, true);
-            let mut sb = CcState::new(&inst, 5.0, true);
-            // Give the metric phase something to project: pull x toward d.
-            for (xa, (xb, d)) in
-                sa.x.iter_mut().zip(sb.x.iter_mut().zip(inst.d.as_slice()))
-            {
-                *xa = 0.9 * d;
-                *xb = 0.9 * d;
-            }
-            let mut set = ActiveSet::new(&schedule);
-            let stores = PerWorker::new((0..p).map(|_| DualStore::new()).collect());
-            for _pass in 0..3 {
+        for backend in ALL_BACKENDS {
+            for p in [1usize, 3] {
+                let mut sa = CcState::new(&inst, 5.0, true);
+                let mut sb = CcState::new(&inst, 5.0, true);
+                // Give the metric phase something to project: pull x toward d.
+                for (xa, (xb, d)) in
+                    sa.x.iter_mut().zip(sb.x.iter_mut().zip(inst.d.as_slice()))
                 {
-                    let xs = SharedMut::new(sa.x.as_mut_slice());
-                    discovery_sweep(
-                        &xs,
-                        &sa.winv,
-                        &sa.col_starts,
-                        &schedule,
-                        &set,
-                        p,
-                        Assignment::RoundRobin,
-                    );
+                    *xa = 0.9 * d;
+                    *xb = 0.9 * d;
                 }
-                run_metric_phase(&mut sb, &schedule, &stores, p, Assignment::RoundRobin);
-                assert_eq!(sa.x, sb.x, "p={p}");
+                let mut set = ActiveSet::new(&schedule);
+                let stores = PerWorker::new((0..p).map(|_| DualStore::new()).collect());
+                for _pass in 0..3 {
+                    sweep(&mut sa, &schedule, &set, p, backend);
+                    run_metric_phase(&mut sb, &schedule, &stores, p, Assignment::RoundRobin);
+                    assert_eq!(sa.x, sb.x, "{backend:?} p={p}");
+                }
+                let mut stores = stores.into_inner();
+                let store_nnz: usize = stores.iter_mut().map(|s| s.nnz()).sum();
+                assert_eq!(set.nnz_duals(), store_nnz, "{backend:?} p={p}");
             }
-            let mut stores = stores.into_inner();
-            let store_nnz: usize = stores.iter_mut().map(|s| s.nnz()).sum();
-            assert_eq!(set.nnz_duals(), store_nnz, "p={p}");
         }
+    }
+
+    /// The acceptance pin of the screened engine: every backend (Engine
+    /// without artifacts falls back to Screened) reproduces the scalar
+    /// sweep bitwise — same x trajectory, same rebuilt set, same
+    /// max_violation — across tile sizes and worker counts, over several
+    /// consecutive sweeps of a live solve state.
+    #[test]
+    fn screened_and_engine_sweeps_bitwise_match_scalar() {
+        for (n, tile) in [(17usize, 2usize), (18, 4), (19, 7)] {
+            let inst = CcLpInstance::random(n, 0.5, 0.7, 1.8, n as u64);
+            let schedule = Schedule::new(n, tile);
+            for p in [1usize, 3] {
+                let mut st_ref = CcState::new(&inst, 5.0, true);
+                for (v, d) in st_ref.x.iter_mut().zip(inst.d.as_slice()) {
+                    *v = 0.9 * d;
+                }
+                let mut st_scr = CcState::new(&inst, 5.0, true);
+                st_scr.x.copy_from_slice(&st_ref.x);
+                let mut st_eng = CcState::new(&inst, 5.0, true);
+                st_eng.x.copy_from_slice(&st_ref.x);
+                let mut set_ref = ActiveSet::new(&schedule);
+                let mut set_scr = ActiveSet::new(&schedule);
+                let mut set_eng = ActiveSet::new(&schedule);
+                for pass in 0..4 {
+                    let ra = sweep(&mut st_ref, &schedule, &set_ref, p, SweepBackend::Scalar);
+                    let rb =
+                        sweep(&mut st_scr, &schedule, &set_scr, p, SweepBackend::Screened);
+                    let rc = sweep(&mut st_eng, &schedule, &set_eng, p, SweepBackend::Engine);
+                    let ctx = format!("n={n} tile={tile} p={p} pass={pass}");
+                    assert_eq!(st_ref.x, st_scr.x, "screened x diverged ({ctx})");
+                    assert_eq!(st_ref.x, st_eng.x, "engine-fallback x diverged ({ctx})");
+                    assert_eq!(ra.max_violation, rb.max_violation, "{ctx}");
+                    assert_eq!(ra.max_violation, rc.max_violation, "{ctx}");
+                    assert_eq!(ra.triplet_visits, rb.triplet_visits, "{ctx}");
+                    assert_eq!(rb.triplets_projected, rc.triplets_projected, "{ctx}");
+                    // The scalar backend projects everything; the screen
+                    // must do no more than that.
+                    assert_eq!(ra.triplets_projected, ra.triplet_visits, "{ctx}");
+                    assert!(rb.triplets_projected <= rb.triplet_visits, "{ctx}");
+                    let entries = |s: &mut ActiveSet| -> Vec<ActiveTriplet> {
+                        s.iter().copied().collect()
+                    };
+                    assert_eq!(entries(&mut set_ref), entries(&mut set_scr), "{ctx}");
+                    assert_eq!(entries(&mut set_ref), entries(&mut set_eng), "{ctx}");
+                }
+            }
+        }
+    }
+
+    /// Once the dual support has sparsified, the screen projects only a
+    /// small fraction of the triplets it examines.
+    #[test]
+    fn screen_hit_rate_drops_as_the_solve_converges() {
+        let inst = CcLpInstance::random(20, 0.5, 0.7, 1.8, 31);
+        let schedule = Schedule::new(20, 4);
+        let mut st = CcState::new(&inst, 5.0, true);
+        for (v, d) in st.x.iter_mut().zip(inst.d.as_slice()) {
+            *v = 0.9 * d;
+        }
+        let set = ActiveSet::new(&schedule);
+        let first = sweep(&mut st, &schedule, &set, 2, SweepBackend::Screened);
+        let mut last = first;
+        for _ in 0..30 {
+            last = sweep(&mut st, &schedule, &set, 2, SweepBackend::Screened);
+        }
+        assert!(
+            last.triplets_projected < first.triplets_projected,
+            "late sweeps must project less: first {} vs last {}",
+            first.triplets_projected,
+            last.triplets_projected
+        );
+        assert!(last.hit_rate() < 0.5, "late hit rate {}", last.hit_rate());
     }
 
     #[test]
@@ -156,54 +720,44 @@ mod tests {
         // x = d (0/1 targets): a negative pair inside a positive triangle
         // violates the metric constraints, so the sweep must observe a
         // violation of exactly 1 and activate some triplets.
-        let inst = CcLpInstance::unweighted(6, &[(0, 1)]);
-        let mut st = CcState::new(&inst, 5.0, true);
-        st.x.copy_from_slice(inst.d.as_slice());
-        let schedule = Schedule::new(6, 2);
-        let mut set = ActiveSet::new(&schedule);
-        let report = {
-            let xs = SharedMut::new(st.x.as_mut_slice());
-            discovery_sweep(
-                &xs,
-                &st.winv,
-                &st.col_starts,
-                &schedule,
-                &set,
-                1,
-                Assignment::RoundRobin,
-            )
-        };
-        assert_eq!(report.triplet_visits, crate::solver::schedule::n_triplets(6));
-        assert!((report.max_violation - 1.0).abs() < 1e-12, "{}", report.max_violation);
-        assert!(!set.is_empty(), "violated constraints must be discovered");
-        // every activated entry carries a nonzero dual
-        for e in set.iter() {
-            assert!(e.y.iter().any(|&v| v != 0.0));
-            assert_eq!(e.zero_passes, 0);
+        for backend in ALL_BACKENDS {
+            let inst = CcLpInstance::unweighted(6, &[(0, 1)]);
+            let mut st = CcState::new(&inst, 5.0, true);
+            st.x.copy_from_slice(inst.d.as_slice());
+            let schedule = Schedule::new(6, 2);
+            let mut set = ActiveSet::new(&schedule);
+            let report = sweep(&mut st, &schedule, &set, 1, backend);
+            assert_eq!(report.triplet_visits, crate::solver::schedule::n_triplets(6));
+            assert!(
+                (report.max_violation - 1.0).abs() < 1e-12,
+                "{backend:?}: {}",
+                report.max_violation
+            );
+            assert!(!set.is_empty(), "violated constraints must be discovered");
+            // every activated entry carries a nonzero dual
+            for e in set.iter() {
+                assert!(e.y.iter().any(|&v| v != 0.0));
+                assert_eq!(e.zero_passes, 0);
+            }
         }
     }
 
     #[test]
     fn sweep_on_feasible_point_keeps_set_empty() {
-        // x = 0 satisfies every metric row with zero duals -> no entries.
-        let inst = CcLpInstance::random(9, 0.5, 0.8, 1.6, 5);
-        let mut st = CcState::new(&inst, 5.0, true);
-        let schedule = Schedule::new(9, 3);
-        let mut set = ActiveSet::new(&schedule);
-        let report = {
-            let xs = SharedMut::new(st.x.as_mut_slice());
-            discovery_sweep(
-                &xs,
-                &st.winv,
-                &st.col_starts,
-                &schedule,
-                &set,
-                2,
-                Assignment::RoundRobin,
-            )
-        };
-        assert_eq!(report.max_violation, 0.0);
-        assert!(set.is_empty());
-        assert!(st.x.iter().all(|&v| v == 0.0), "feasible point must not move");
+        // x = 0 satisfies every metric row with zero duals -> no entries,
+        // and the screen projects nothing at all.
+        for backend in ALL_BACKENDS {
+            let inst = CcLpInstance::random(9, 0.5, 0.8, 1.6, 5);
+            let mut st = CcState::new(&inst, 5.0, true);
+            let schedule = Schedule::new(9, 3);
+            let mut set = ActiveSet::new(&schedule);
+            let report = sweep(&mut st, &schedule, &set, 2, backend);
+            assert_eq!(report.max_violation, 0.0, "{backend:?}");
+            assert!(set.is_empty(), "{backend:?}");
+            assert!(st.x.iter().all(|&v| v == 0.0), "feasible point must not move");
+            if backend != SweepBackend::Scalar {
+                assert_eq!(report.triplets_projected, 0, "{backend:?}");
+            }
+        }
     }
 }

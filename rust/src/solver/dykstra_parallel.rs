@@ -181,6 +181,8 @@ fn solve_inner(
         nnz_duals: nnz,
         metric_visits: triplet_visits * 3,
         active_triplets: triplets_per_pass as usize,
+        sweep_screened: 0,
+        sweep_projected: 0,
     })
 }
 

@@ -177,6 +177,8 @@ pub fn solve(inst: &CcLpInstance, opts: &SolveOpts, engine: &XlaEngine) -> Resul
         nnz_duals: nnz,
         metric_visits: passes_done as u64 * n_triplets as u64 * 3,
         active_triplets: n_triplets,
+        sweep_screened: 0,
+        sweep_projected: 0,
     })
 }
 

@@ -8,6 +8,11 @@
 //! * incremental packed indices — inside the innermost `k` loop, `p_ik`
 //!   and `p_jk` advance by 1 (both walk contiguous column segments) and
 //!   the dual key advances by 4, so no per-visit index arithmetic.
+//!
+//! Discovery sweeps use the same incremental-index idea but hoist the
+//! whole innermost `k` loop into a vectorized violation screen — see
+//! [`crate::solver::active::sweep`] (screen-then-project) and
+//! [`crate::solver::tiling::for_each_run`].
 
 use super::duals::{metric_key, DualStore};
 use super::projection::visit_triplet;

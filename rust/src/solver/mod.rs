@@ -78,6 +78,96 @@ impl Strategy {
     }
 }
 
+/// How a discovery sweep walks the `C(n,3)` triplets
+/// (EXPERIMENTS.md §Perf, "screen-then-project").
+///
+/// `Scalar` is the original callback sweep: per-triplet index arithmetic,
+/// key construction, and a branchy scalar visit for every triplet.
+/// `Screened` splits each tile into contiguous `k`-runs and runs a
+/// branch-free vectorizable *screen* over each run first; only triplets
+/// that actually need work — violated at the moment of their visit, or
+/// holding a nonzero dual — are projected with the fused scalar kernel,
+/// in cube order. Skipping a satisfied zero-dual triplet is an exact
+/// no-op ([`projection::visit_triplet`] would not move `x` or emit a
+/// dual), so `Screened` is **bitwise identical** to `Scalar` (tested).
+/// `Engine` additionally routes the phase-1 screen through the
+/// PJRT-compiled batch kernels ([`crate::runtime::engine::XlaEngine`])
+/// when artifacts are loaded, falling back to `Screened` when they are
+/// not (the offline stub always falls back, which keeps `Engine` bitwise
+/// equal to `Scalar` there). With real artifacts the engine screen is
+/// f32-quantized: projections stay exact f64, and the active drivers
+/// still confirm every stop with an exact scan — so `Engine` can never
+/// report a falsely-converged solution — but a violation below f32
+/// resolution screens as satisfied on *every* sweep, so tolerances near
+/// f32 resolution may never be reached (the solve runs to `max_passes`).
+/// Prefer `Screened` for tight tolerances; `Engine` targets throughput
+/// at f32-scale accuracy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SweepBackend {
+    /// The original per-triplet callback sweep.
+    Scalar,
+    /// Vectorized screen, then scalar projection of the worklist
+    /// (bitwise equal to `Scalar`; the default).
+    #[default]
+    Screened,
+    /// Screen through the PJRT engine in large batches; falls back to
+    /// `Screened` when no artifacts are loaded.
+    Engine,
+}
+
+impl SweepBackend {
+    /// Parse a CLI name (`scalar` / `screened` / `engine`).
+    pub fn parse(s: &str) -> Option<SweepBackend> {
+        match s {
+            "scalar" => Some(SweepBackend::Scalar),
+            "screened" | "screen" => Some(SweepBackend::Screened),
+            "engine" | "xla" => Some(SweepBackend::Engine),
+            _ => None,
+        }
+    }
+
+    /// CLI name of the backend.
+    pub fn name(self) -> &'static str {
+        match self {
+            SweepBackend::Scalar => "scalar",
+            SweepBackend::Screened => "screened",
+            SweepBackend::Engine => "engine",
+        }
+    }
+}
+
+/// When the active-set driver runs its next discovery sweep.
+///
+/// `Fixed(k)` is the classic cadence: a sweep every `k` passes (pass
+/// indices divisible by `k`, so resumes preserve the phase). `Adaptive`
+/// triggers the next sweep from observed signals instead — an active-set
+/// shrinkage stall across cheap passes, a trusted-violation plateau in
+/// the termination history, or an interval cap — so well-conditioned
+/// stretches run long cheap-pass trains while stalls are re-examined
+/// promptly. Adaptive decisions depend on runtime observations that are
+/// not checkpointed, so a resumed adaptive run may schedule sweeps
+/// differently than the uninterrupted one (fixed cadences resume
+/// bitwise).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SweepPolicy {
+    /// Sweep on every pass index divisible by the given period (>= 1).
+    Fixed(usize),
+    /// Sweep when observed signals say the active set went stale.
+    Adaptive,
+}
+
+impl SweepPolicy {
+    /// Parse a CLI name (`fixed` / `adaptive`); `fixed` takes its period
+    /// from the strategy's `sweep_every`.
+    pub fn parse(s: &str, sweep_every: usize) -> Option<SweepPolicy> {
+        match s {
+            "fixed" => Some(SweepPolicy::Fixed(sweep_every.max(1))),
+            "adaptive" => Some(SweepPolicy::Adaptive),
+            _ => None,
+        }
+    }
+}
+
 /// Solver configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct SolveOpts {
@@ -104,6 +194,11 @@ pub struct SolveOpts {
     pub assignment: schedule::Assignment,
     /// Metric-constraint visiting strategy (full sweeps vs active set).
     pub strategy: Strategy,
+    /// How discovery sweeps walk the triplets (active strategy only).
+    pub sweep_backend: SweepBackend,
+    /// When discovery sweeps fire (active strategy only). `None` derives
+    /// [`SweepPolicy::Fixed`] from the strategy's `sweep_every`.
+    pub sweep_policy: Option<SweepPolicy>,
     /// Emit a [`checkpoint::SolverState`] every this many passes through
     /// the `solve_checkpointed` entry points (0 = never; a final state is
     /// always emitted when nonzero). Ignored by the plain `solve` calls.
@@ -124,6 +219,8 @@ impl Default for SolveOpts {
             track_pass_times: false,
             assignment: schedule::Assignment::RoundRobin,
             strategy: Strategy::Full,
+            sweep_backend: SweepBackend::default(),
+            sweep_policy: None,
             checkpoint_every: 0,
         }
     }
@@ -144,10 +241,19 @@ pub struct Residuals {
     pub lp_objective: f64,
     /// Cumulative metric-constraint visits when this checkpoint was taken
     /// (3 per triplet visit) — the work axis for convergence-vs-work plots.
+    /// Screened sweeps bill every screened triplet here, so the counter
+    /// stays comparable across backends and across checkpoint resumes.
     pub metric_visits: u64,
     /// Active metric triplets at the checkpoint (= C(n,3) for the full
     /// strategy, which visits everything).
     pub active_triplets: usize,
+    /// Triplets examined by discovery sweeps over this run segment
+    /// (0 for the full strategy, which has no sweeps).
+    pub sweep_screened: u64,
+    /// Of those, triplets that actually needed a projection (violated or
+    /// holding a nonzero dual) — `sweep_projected / sweep_screened` is the
+    /// screen hit rate that explains why screening wins.
+    pub sweep_projected: u64,
 }
 
 impl Residuals {
@@ -180,10 +286,18 @@ pub struct Solution {
     pub nnz_duals: usize,
     /// Total metric-constraint visits performed over the whole solve
     /// (3 per triplet visit; the full strategy does `3·C(n,3)` per pass).
+    /// Screened sweeps bill every screened triplet, keeping the counter
+    /// comparable across [`SweepBackend`]s and checkpoint resumes.
     pub metric_visits: u64,
     /// Metric triplets in the active set at the end (= C(n,3) for the
     /// full strategy).
     pub active_triplets: usize,
+    /// Triplets examined by discovery sweeps (this run segment; 0 for the
+    /// full strategy).
+    pub sweep_screened: u64,
+    /// Sweep triplets that actually needed a projection — see
+    /// [`Residuals::sweep_projected`].
+    pub sweep_projected: u64,
 }
 
 /// Mutable state of a CC-LP solve, shared by both solvers.
@@ -301,5 +415,28 @@ mod tests {
         assert_eq!(Strategy::parse("dense", 8, 3), None);
         assert!(Strategy::Active { sweep_every: 8, forget_after: 3 }.is_active());
         assert!(!Strategy::Full.is_active());
+    }
+
+    #[test]
+    fn sweep_backend_parses_and_defaults_to_screened() {
+        assert_eq!(SweepBackend::parse("scalar"), Some(SweepBackend::Scalar));
+        assert_eq!(SweepBackend::parse("screened"), Some(SweepBackend::Screened));
+        assert_eq!(SweepBackend::parse("engine"), Some(SweepBackend::Engine));
+        assert_eq!(SweepBackend::parse("xla"), Some(SweepBackend::Engine));
+        assert_eq!(SweepBackend::parse("gpu"), None);
+        assert_eq!(SweepBackend::default(), SweepBackend::Screened);
+        assert_eq!(SolveOpts::default().sweep_backend, SweepBackend::Screened);
+        for b in [SweepBackend::Scalar, SweepBackend::Screened, SweepBackend::Engine] {
+            assert_eq!(SweepBackend::parse(b.name()), Some(b));
+        }
+    }
+
+    #[test]
+    fn sweep_policy_parses() {
+        assert_eq!(SweepPolicy::parse("fixed", 6), Some(SweepPolicy::Fixed(6)));
+        assert_eq!(SweepPolicy::parse("fixed", 0), Some(SweepPolicy::Fixed(1)));
+        assert_eq!(SweepPolicy::parse("adaptive", 6), Some(SweepPolicy::Adaptive));
+        assert_eq!(SweepPolicy::parse("auto", 6), None);
+        assert_eq!(SolveOpts::default().sweep_policy, None);
     }
 }

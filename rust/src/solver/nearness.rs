@@ -11,7 +11,7 @@
 use super::checkpoint::{self, CheckRecord, SolverState};
 use super::duals::DualStore;
 use super::schedule::{Assignment, Schedule};
-use super::Strategy;
+use super::{Strategy, SweepBackend, SweepPolicy};
 use crate::instance::metric_nearness::MetricNearnessInstance;
 use crate::matrix::PackedSym;
 use crate::util::parallel::{par_reduce_max, scoped_workers};
@@ -29,6 +29,11 @@ pub struct NearnessOpts {
     /// Metric-constraint visiting strategy (see [`Strategy`]); the active
     /// variant runs in [`super::active::solve_nearness`].
     pub strategy: Strategy,
+    /// How discovery sweeps walk the triplets (active strategy only).
+    pub sweep_backend: SweepBackend,
+    /// When discovery sweeps fire (active strategy only). `None` derives
+    /// [`SweepPolicy::Fixed`] from the strategy's `sweep_every`.
+    pub sweep_policy: Option<SweepPolicy>,
     /// Emit a [`SolverState`] every this many passes through
     /// [`solve_checkpointed`] (0 = never; a final state is always emitted
     /// when nonzero). Ignored by the plain [`solve`] call.
@@ -45,6 +50,8 @@ impl Default for NearnessOpts {
             tile: 40,
             assignment: Assignment::RoundRobin,
             strategy: Strategy::Full,
+            sweep_backend: SweepBackend::default(),
+            sweep_policy: None,
             checkpoint_every: 0,
         }
     }
@@ -64,6 +71,11 @@ pub struct NearnessSolution {
     pub metric_visits: u64,
     /// Active triplets at the end (= C(n,3) for the full strategy).
     pub active_triplets: usize,
+    /// Triplets examined by discovery sweeps (0 for the full strategy).
+    pub sweep_screened: u64,
+    /// Sweep triplets that actually needed a projection — see
+    /// [`super::Residuals::sweep_projected`].
+    pub sweep_projected: u64,
 }
 
 /// Solve with the parallel wave schedule (threads = 1 for serial order use
@@ -209,6 +221,8 @@ pub fn solve_checkpointed(
         passes: passes_done,
         metric_visits: triplet_visits * 3,
         active_triplets: triplets_per_pass as usize,
+        sweep_screened: 0,
+        sweep_projected: 0,
     })
 }
 
@@ -262,6 +276,8 @@ pub fn solve_serial_order(
         passes: passes_done,
         metric_visits: passes_done as u64 * triplets_per_pass * 3,
         active_triplets: triplets_per_pass as usize,
+        sweep_screened: 0,
+        sweep_projected: 0,
     }
 }
 

@@ -79,6 +79,16 @@ pub unsafe fn visit_metric(
 /// precomputed reciprocal (one division per triplet, not three). This is
 /// the solver hot path (~10 cycles/constraint); see EXPERIMENTS.md §Perf.
 ///
+/// **No-op contract** (load-bearing): with `y = [0; 3]` and all three
+/// residuals `<= 0`, this function returns `[0; 3]` and does not touch
+/// `x` — and the residuals it tests are exactly
+/// `(x0 - x1 - x2, x1 - x0 - x2, x2 - x0 - x1)` on the raw values. The
+/// screen-then-project sweep ([`crate::solver::active::sweep`]) skips
+/// precisely the triplets this contract covers; weakening it (e.g.
+/// reordering the residual arithmetic, or writing back on the fast
+/// path) would silently break the screened sweep's bitwise equivalence
+/// with the scalar sweep, which `tests/sweep_backends.rs` pins.
+///
 /// Returns the three new scaled duals.
 ///
 /// # Safety

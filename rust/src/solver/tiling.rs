@@ -13,21 +13,40 @@ use super::schedule::Tile;
 
 /// Visit every triplet `(i, j, k)` of `tile` in the cube order, calling
 /// `f(i, j, k)` for each. The order is deterministic — a requirement for
-/// the per-worker dual-variable arrays (§III-D).
+/// the per-worker dual-variable arrays (§III-D). Defined as the
+/// expansion of [`for_each_run`], so the two enumeration orders agree by
+/// construction (the screened sweep's bitwise-equivalence argument
+/// needs them to match visit for visit).
 #[inline]
 pub fn for_each_triplet<F: FnMut(usize, usize, usize)>(tile: &Tile, b: usize, mut f: F) {
+    for_each_run(tile, b, |i, j, k_lo, k_hi| {
+        for k in k_lo..k_hi {
+            f(i, j, k);
+        }
+    });
+}
+
+/// Visit every contiguous `k`-run of `tile` in cube order, calling
+/// `f(i, j, k_lo, k_hi)` once per nonempty run — [`for_each_triplet`]
+/// with the innermost loop hoisted out. A run fixes `(i, j)` and spans
+/// `k ∈ [k_lo, k_hi)`; both packed indices `p_ik` and `p_jk` walk
+/// contiguous column segments along it, which is what makes a run the
+/// natural unit for the vectorized violation screen
+/// ([`crate::solver::active::sweep`]).
+#[inline]
+pub fn for_each_run<F: FnMut(usize, usize, usize, usize)>(tile: &Tile, b: usize, mut f: F) {
     let j_min = tile.i_lo + 1;
     let j_end = tile.k_hi.saturating_sub(1); // j < k <= k_hi - 1
     let mut chunk_lo = j_min;
     while chunk_lo < j_end {
         let chunk_hi = (chunk_lo + b).min(j_end);
-        // One b×b×b cube: i-range × j-chunk × k-range, clipped to i<j<k.
+        // One b×b×b cube: i-range × j-chunk × k-runs, clipped to i<j<k.
         for i in tile.i_lo..tile.i_hi {
             let j_lo = chunk_lo.max(i + 1);
             for j in j_lo..chunk_hi {
                 let k_lo = tile.k_lo.max(j + 1);
-                for k in k_lo..tile.k_hi {
-                    f(i, j, k);
+                if k_lo < tile.k_hi {
+                    f(i, j, k_lo, tile.k_hi);
                 }
             }
         }
@@ -116,6 +135,45 @@ mod tests {
         for_each_triplet(&tile, 4, |i, j, k| a.push((i, j, k)));
         for_each_triplet(&tile, 4, |i, j, k| b_.push((i, j, k)));
         assert_eq!(a, b_);
+    }
+
+    #[test]
+    fn runs_expand_to_the_triplet_order_exactly() {
+        // for_each_run is for_each_triplet with the k loop hoisted: the
+        // screened sweep relies on the orders matching visit for visit.
+        for (n, b) in [(10usize, 1usize), (14, 3), (19, 4), (23, 7)] {
+            let s = Schedule::new(n, b);
+            for wave in s.waves() {
+                for tile in wave {
+                    let mut via_triplets = Vec::new();
+                    for_each_triplet(tile, b, |i, j, k| via_triplets.push((i, j, k)));
+                    let mut via_runs = Vec::new();
+                    for_each_run(tile, b, |i, j, k_lo, k_hi| {
+                        assert!(k_lo < k_hi, "empty run emitted n={n} b={b}");
+                        assert!(i < j && j < k_lo, "bad run ({i},{j},{k_lo}..{k_hi})");
+                        for k in k_lo..k_hi {
+                            via_runs.push((i, j, k));
+                        }
+                    });
+                    assert_eq!(via_runs, via_triplets, "n={n} b={b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_length_never_exceeds_tile_size() {
+        for (n, b) in [(15usize, 2usize), (30, 5), (12, 40)] {
+            let s = Schedule::new(n, b);
+            for wave in s.waves() {
+                for tile in wave {
+                    for_each_run(tile, b, |_, _, k_lo, k_hi| {
+                        assert!(k_hi - k_lo <= b.max(tile.k_hi - tile.k_lo));
+                        assert!(k_hi - k_lo <= tile.k_hi - tile.k_lo);
+                    });
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! ISSUE 3 acceptance: the screen-then-project sweep backends are
+//! bitwise interchangeable. `Screened` (and `Engine`, which falls back
+//! to `Screened` under the offline PJRT stub) must reproduce the
+//! `Scalar` callback sweep exactly — same `x` trajectory, same rebuilt
+//! active set, same measured violations, same work counters — across
+//! thread counts, tile sizes, and both the CC-LP and nearness drivers.
+
+use metric_proj::instance::metric_nearness::MetricNearnessInstance;
+use metric_proj::instance::CcLpInstance;
+use metric_proj::prop_assert;
+use metric_proj::solver::nearness::{self, NearnessOpts};
+use metric_proj::solver::{
+    dykstra_parallel, SolveOpts, Strategy, SweepBackend, SweepPolicy,
+};
+use metric_proj::util::proptest::check;
+
+const BACKENDS: [SweepBackend; 3] =
+    [SweepBackend::Scalar, SweepBackend::Screened, SweepBackend::Engine];
+
+fn active(sweep_every: usize, forget_after: usize) -> Strategy {
+    Strategy::Active { sweep_every, forget_after }
+}
+
+/// CC-LP driver: every backend produces the identical Solution, for the
+/// ISSUE's grid of thread counts and tile sizes. check_every exercises
+/// the trusted-sweep termination path (identical iterates => identical
+/// stopping decisions).
+#[test]
+fn cc_backends_bitwise_identical() {
+    for &tile in &[2usize, 4, 7] {
+        for &p in &[1usize, 3] {
+            let inst = CcLpInstance::random(16, 0.5, 0.8, 1.6, 7 + tile as u64);
+            let base = SolveOpts {
+                max_passes: 14,
+                check_every: 3,
+                threads: p,
+                tile,
+                strategy: active(3, 2),
+                ..Default::default()
+            };
+            let sols: Vec<_> = BACKENDS
+                .iter()
+                .map(|&b| dykstra_parallel::solve(&inst, &SolveOpts { sweep_backend: b, ..base }))
+                .collect();
+            let scalar = &sols[0];
+            assert_eq!(scalar.sweep_projected, scalar.sweep_screened, "scalar projects all");
+            for (sol, backend) in sols.iter().zip(BACKENDS).skip(1) {
+                let ctx = format!("{backend:?} p={p} tile={tile}");
+                assert_eq!(scalar.x, sol.x, "x diverged ({ctx})");
+                assert_eq!(scalar.f, sol.f, "slacks diverged ({ctx})");
+                assert_eq!(scalar.passes, sol.passes, "{ctx}");
+                assert_eq!(scalar.nnz_duals, sol.nnz_duals, "{ctx}");
+                assert_eq!(scalar.metric_visits, sol.metric_visits, "{ctx}");
+                assert_eq!(scalar.active_triplets, sol.active_triplets, "{ctx}");
+                assert_eq!(
+                    scalar.residuals.max_violation, sol.residuals.max_violation,
+                    "{ctx}"
+                );
+                assert_eq!(scalar.sweep_screened, sol.sweep_screened, "{ctx}");
+                assert!(sol.sweep_projected <= sol.sweep_screened, "{ctx}");
+                // The screen only skips provable no-ops, so both screened
+                // backends agree on what needed projecting.
+                assert_eq!(sols[1].sweep_projected, sol.sweep_projected, "{ctx}");
+            }
+        }
+    }
+}
+
+/// Nearness driver: same grid, same bitwise pin.
+#[test]
+fn nearness_backends_bitwise_identical() {
+    for &tile in &[2usize, 4, 7] {
+        for &p in &[1usize, 3] {
+            let inst = MetricNearnessInstance::random(18, 2.0, 19 + tile as u64);
+            let base = NearnessOpts {
+                max_passes: 14,
+                check_every: 3,
+                threads: p,
+                tile,
+                strategy: active(4, 1),
+                ..Default::default()
+            };
+            let sols: Vec<_> = BACKENDS
+                .iter()
+                .map(|&b| nearness::solve(&inst, &NearnessOpts { sweep_backend: b, ..base }))
+                .collect();
+            let scalar = &sols[0];
+            for (sol, backend) in sols.iter().zip(BACKENDS).skip(1) {
+                let ctx = format!("{backend:?} p={p} tile={tile}");
+                assert_eq!(scalar.x, sol.x, "x diverged ({ctx})");
+                assert_eq!(scalar.passes, sol.passes, "{ctx}");
+                assert_eq!(scalar.max_violation, sol.max_violation, "{ctx}");
+                assert_eq!(scalar.metric_visits, sol.metric_visits, "{ctx}");
+                assert_eq!(scalar.active_triplets, sol.active_triplets, "{ctx}");
+                assert_eq!(scalar.sweep_screened, sol.sweep_screened, "{ctx}");
+                assert!(sol.sweep_projected <= sol.sweep_screened, "{ctx}");
+            }
+        }
+    }
+}
+
+/// Property form: random instances, strategies, and shapes — the
+/// screened backend never diverges from scalar by a single bit.
+#[test]
+fn backend_equivalence_property() {
+    check("screened sweep == scalar sweep", 0x5C2EE7, 10, |rng, _| {
+        let n = rng.usize_in(6, 22);
+        let tile = rng.usize_in(1, 8);
+        let p = rng.usize_in(1, 4);
+        let strategy = active(rng.usize_in(1, 6), rng.usize_in(0, 4));
+        let cc = rng.bool(0.5);
+        if cc {
+            let inst = CcLpInstance::random(n, 0.5, 0.8, 1.6, rng.next_u64());
+            let base = SolveOpts {
+                max_passes: 10,
+                threads: p,
+                tile,
+                strategy,
+                ..Default::default()
+            };
+            let a = dykstra_parallel::solve(
+                &inst,
+                &SolveOpts { sweep_backend: SweepBackend::Scalar, ..base },
+            );
+            let b = dykstra_parallel::solve(
+                &inst,
+                &SolveOpts { sweep_backend: SweepBackend::Screened, ..base },
+            );
+            prop_assert!(a.x == b.x, "CC x diverged (n={n} tile={tile} p={p})");
+            prop_assert!(a.nnz_duals == b.nnz_duals, "CC duals diverged (n={n})");
+        } else {
+            let inst = MetricNearnessInstance::random(n.max(8), 2.0, rng.next_u64());
+            let base = NearnessOpts {
+                max_passes: 10,
+                threads: p,
+                tile,
+                strategy,
+                ..Default::default()
+            };
+            let a = nearness::solve(
+                &inst,
+                &NearnessOpts { sweep_backend: SweepBackend::Scalar, ..base },
+            );
+            let b = nearness::solve(
+                &inst,
+                &NearnessOpts { sweep_backend: SweepBackend::Screened, ..base },
+            );
+            prop_assert!(a.x == b.x, "nearness x diverged (n={n} tile={tile} p={p})");
+        }
+        Ok(())
+    });
+}
+
+/// The adaptive cadence is a drop-in replacement: it converges to the
+/// same tolerance and runs fewer sweeps than an every-other-pass fixed
+/// cadence on a well-behaved instance.
+#[test]
+fn adaptive_cadence_converges_with_fewer_sweeps() {
+    let inst = MetricNearnessInstance::random(24, 2.0, 33);
+    let base = NearnessOpts {
+        max_passes: 4000,
+        check_every: 2,
+        tol_violation: 1e-7,
+        threads: 2,
+        tile: 6,
+        strategy: active(2, 2),
+        ..Default::default()
+    };
+    let fixed = nearness::solve(&inst, &base);
+    let adaptive = nearness::solve(
+        &inst,
+        &NearnessOpts { sweep_policy: Some(SweepPolicy::Adaptive), ..base },
+    );
+    assert!(fixed.passes < 4000, "fixed cadence failed to converge");
+    assert!(adaptive.passes < 4000, "adaptive cadence failed to converge");
+    assert!(adaptive.max_violation <= 1e-7, "violation {}", adaptive.max_violation);
+    let sweeps = |screened: u64| screened / metric_proj::solver::schedule::n_triplets(24);
+    assert!(
+        sweeps(adaptive.sweep_screened) < sweeps(fixed.sweep_screened),
+        "adaptive ran {} sweeps vs fixed {}",
+        sweeps(adaptive.sweep_screened),
+        sweeps(fixed.sweep_screened)
+    );
+}
+
+/// Adaptive stays bitwise thread-count invariant: its signals (set
+/// sizes, sweep violations) are themselves p-invariant.
+#[test]
+fn adaptive_cadence_is_thread_count_invariant() {
+    let inst = CcLpInstance::random(14, 0.5, 0.8, 1.6, 91);
+    let mk = |p: usize| SolveOpts {
+        max_passes: 25,
+        threads: p,
+        tile: 3,
+        strategy: active(4, 1),
+        sweep_policy: Some(SweepPolicy::Adaptive),
+        ..Default::default()
+    };
+    let a = dykstra_parallel::solve(&inst, &mk(1));
+    let b = dykstra_parallel::solve(&inst, &mk(4));
+    assert_eq!(a.x, b.x);
+    assert_eq!(a.metric_visits, b.metric_visits);
+    assert_eq!(a.sweep_screened, b.sweep_screened);
+    assert_eq!(a.sweep_projected, b.sweep_projected);
+}
