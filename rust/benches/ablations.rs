@@ -129,14 +129,15 @@ fn main() {
             None => "    -".to_string(),
         };
         println!(
-            "  {:<16} visits/pass={:>10.3e} total={:>10.3e} ({:>5.1}% of full) active={:<8} screen-hit={hit} viol={:.2e} lp={:.4}",
+            "  {:<16} visits/pass={:>10.3e} total={:>10.3e} ({:>5.1}% of full) active={:<8} screen-hit={hit} viol={:.2e} lp={:.4} resident~{:.1}MiB",
             r.label,
             r.visits_per_pass,
             r.metric_visits as f64,
             100.0 * r.metric_visits as f64 / full_visits,
             r.active_triplets,
             r.max_violation,
-            r.lp_objective
+            r.lp_objective,
+            r.resident_mb_est
         );
     }
     println!(

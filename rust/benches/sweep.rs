@@ -1,5 +1,6 @@
 //! Sweep backend throughput: the screen-then-project engine vs the
-//! scalar callback sweep (EXPERIMENTS.md §Perf).
+//! scalar callback sweep (EXPERIMENTS.md §Perf), plus the out-of-core
+//! tile store.
 //!
 //! For each problem size the harness first runs a short active-set
 //! nearness solve to reach the steady state where the paper's sparsity
@@ -7,7 +8,15 @@
 //! repeated discovery sweeps per [`SweepBackend`] from identical states.
 //! The interesting number is triplet-visits/second: every backend
 //! examines all `C(n,3)` triplets per sweep, so throughput differences
-//! are pure per-triplet overhead.
+//! are pure per-triplet overhead. A final `screened+disk` row repeats
+//! the screened sweep with `X` streamed from a [`DiskStore`] under a
+//! cache budget of one quarter of the packed matrix — the out-of-core
+//! throughput tax, measured against the same steady state.
+//!
+//! Every row also reports a **peak resident-set estimate** for the `X`
+//! path (packed `x` + `winv` for the in-memory backends; the measured
+//! peak block cache + resident `winv` for the disk store), so the bench
+//! doubles as the memory column of the out-of-core story.
 //!
 //!     cargo bench --bench sweep
 //!
@@ -20,10 +29,11 @@
 //! via `cargo bench`).
 //!
 //! Emits machine-readable `BENCH_sweep.json` for the perf trajectory:
-//! one record per (n, backend) with triplet-visits/sec and the screen
-//! hit rate.
+//! one record per (n, backend) with triplet-visits/sec, the screen hit
+//! rate, and the resident-set estimate in MiB.
 
 use metric_proj::instance::metric_nearness::MetricNearnessInstance;
+use metric_proj::matrix::store::{DiskStore, MemStore};
 use metric_proj::runtime::engine::XlaEngine;
 use metric_proj::runtime::DEFAULT_ARTIFACTS_DIR;
 use metric_proj::solver::active::set::ActiveSet;
@@ -31,7 +41,6 @@ use metric_proj::solver::active::sweep::{discovery_sweep, SweepReport};
 use metric_proj::solver::nearness::{self, NearnessOpts};
 use metric_proj::solver::schedule::{Assignment, Schedule};
 use metric_proj::solver::{Strategy, SweepBackend};
-use metric_proj::util::shared::SharedMut;
 use std::fmt::Write as _;
 use std::time::Instant;
 
@@ -57,6 +66,11 @@ struct Record {
     visits_per_sec: f64,
     hit_rate: f64,
     speedup_vs_scalar: f64,
+    resident_mb: f64,
+}
+
+fn mib(bytes: f64) -> f64 {
+    bytes / (1u64 << 20) as f64
 }
 
 fn main() {
@@ -93,6 +107,8 @@ fn main() {
         let x_steady: Vec<f64> = steady.x.as_slice().to_vec();
         let winv: Vec<f64> = inst.w.as_slice().iter().map(|&v| 1.0 / v).collect();
         let col_starts = inst.d.col_starts().to_vec();
+        // The in-memory X path: packed x plus packed 1/w.
+        let mem_resident_mb = mib((2 * x_steady.len() * 8) as f64);
 
         println!(
             "\n  n={n} tile={tile}: C(n,3)={triplets} triplets/sweep, \
@@ -114,11 +130,9 @@ fn main() {
             let mut x = x_steady.clone();
             let set = ActiveSet::new(&schedule);
             let sweep_once = |x: &mut Vec<f64>, set: &ActiveSet| -> SweepReport {
-                let xs = SharedMut::new(x.as_mut_slice());
+                let store = MemStore::new(x.as_mut_slice(), &col_starts, &winv);
                 discovery_sweep(
-                    &xs,
-                    &winv,
-                    &col_starts,
+                    &store,
                     &schedule,
                     set,
                     threads,
@@ -146,14 +160,15 @@ fn main() {
                 Some(s) => vps / s,
             };
             println!(
-                "    {:<8} {:>9.3e} triplet-visits/s ({:>5.2}x scalar), \
-                 hit rate {:>6.3}%, {:.3}s for {} sweeps",
+                "    {:<13} {:>9.3e} triplet-visits/s ({:>5.2}x scalar), \
+                 hit rate {:>6.3}%, {:.3}s for {} sweeps, ~{:.1} MiB resident X",
                 backend.name(),
                 vps,
                 speedup,
                 100.0 * report.hit_rate(),
                 dt,
-                reps
+                reps,
+                mem_resident_mb
             );
             records.push(Record {
                 n,
@@ -163,7 +178,80 @@ fn main() {
                 visits_per_sec: vps,
                 hit_rate: report.hit_rate(),
                 speedup_vs_scalar: speedup,
+                resident_mb: mem_resident_mb,
             });
+        }
+
+        // Out-of-core row: the screened sweep with X streamed from a
+        // disk tile store under a quarter-of-packed-X cache budget.
+        {
+            let path = std::env::temp_dir().join(format!(
+                "metric_proj_bench_sweep_{n}_{}.tiles",
+                std::process::id()
+            ));
+            let budget = (x_steady.len() * 8 / 4).max(1 << 12);
+            let store = DiskStore::create(
+                &path,
+                n,
+                tile,
+                budget,
+                winv.clone(),
+                &mut |c, r| x_steady[col_starts[c] + (r - c - 1)],
+            )
+            .expect("create bench tile store");
+            let set = ActiveSet::new(&schedule);
+            let sweep_disk = |set: &ActiveSet| -> SweepReport {
+                discovery_sweep(
+                    &store,
+                    &schedule,
+                    set,
+                    threads,
+                    Assignment::RoundRobin,
+                    SweepBackend::Screened,
+                    None,
+                )
+            };
+            sweep_disk(&set);
+            let t0 = Instant::now();
+            let mut last = None;
+            for _ in 0..reps {
+                last = Some(sweep_disk(&set));
+            }
+            let dt = t0.elapsed().as_secs_f64().max(1e-9);
+            let report = last.expect("reps >= 1");
+            let vps = (reps as u64 * triplets) as f64 / dt;
+            let speedup = scalar_vps.map_or(1.0, |s| vps / s);
+            let stats = store.stats();
+            // Measured peak cache + the resident winv the store keeps.
+            let resident_mb =
+                mib((stats.peak_resident_bytes + (winv.len() * 8) as u64) as f64);
+            println!(
+                "    {:<13} {:>9.3e} triplet-visits/s ({:>5.2}x scalar), \
+                 hit rate {:>6.3}%, {:.3}s for {} sweeps, ~{:.1} MiB resident X \
+                 ({} loads, {} evictions)",
+                "screened+disk",
+                vps,
+                speedup,
+                100.0 * report.hit_rate(),
+                dt,
+                reps,
+                resident_mb,
+                stats.loads,
+                stats.evictions
+            );
+            records.push(Record {
+                n,
+                backend: "screened+disk",
+                sweeps: reps,
+                seconds: dt,
+                visits_per_sec: vps,
+                hit_rate: report.hit_rate(),
+                speedup_vs_scalar: speedup,
+                resident_mb,
+            });
+            let store_path = store.path().to_path_buf();
+            drop(store);
+            let _ = std::fs::remove_file(store_path);
         }
     }
 
@@ -176,9 +264,9 @@ fn main() {
             json,
             "    {{\"n\": {}, \"backend\": \"{}\", \"sweeps\": {}, \"seconds\": {:.6}, \
              \"triplet_visits_per_sec\": {:.1}, \"screen_hit_rate\": {:.6}, \
-             \"speedup_vs_scalar\": {:.4}}}",
+             \"speedup_vs_scalar\": {:.4}, \"resident_mb\": {:.3}}}",
             r.n, r.backend, r.sweeps, r.seconds, r.visits_per_sec, r.hit_rate,
-            r.speedup_vs_scalar
+            r.speedup_vs_scalar, r.resident_mb
         );
         json.push_str(if idx + 1 < records.len() { ",\n" } else { "\n" });
     }

@@ -148,6 +148,19 @@ mod tests {
     }
 
     #[test]
+    fn store_flags_parse() {
+        // The grammar main.rs uses for the out-of-core tile store.
+        let a = parse("nearness --store disk --store-dir /tmp/run1 --store-budget-mb 128");
+        assert_eq!(a.get("store"), Some("disk"));
+        assert_eq!(a.get("store-dir"), Some("/tmp/run1"));
+        assert_eq!(a.get_or("store-budget-mb", 64usize).unwrap(), 128);
+        // defaults apply when absent
+        let b = parse("nearness --n 200");
+        assert_eq!(b.get("store"), None);
+        assert_eq!(b.get_or("store-budget-mb", 64usize).unwrap(), 64);
+    }
+
+    #[test]
     fn sweep_engine_flags_parse() {
         // The grammar main.rs uses for the screen-then-project engine.
         let a = parse(

@@ -280,8 +280,11 @@ pub fn times_for_cores(
 /// strategy spent and where it landed.
 #[derive(Clone, Debug)]
 pub struct StrategyRow {
+    /// Human-readable strategy label for table output.
     pub label: &'static str,
+    /// The strategy this row measured.
     pub strategy: Strategy,
+    /// Passes executed.
     pub passes: usize,
     /// Total metric-constraint visits over the solve.
     pub metric_visits: u64,
@@ -289,12 +292,20 @@ pub struct StrategyRow {
     pub visits_per_pass: f64,
     /// Active triplets at the end (= C(n,3) for the full strategy).
     pub active_triplets: usize,
+    /// Final exact max constraint violation.
     pub max_violation: f64,
+    /// Final LP objective (the CC lower bound).
     pub lp_objective: f64,
     /// Triplets examined by discovery sweeps (0 for the full strategy).
     pub sweep_screened: u64,
     /// Of those, triplets that actually needed a projection.
     pub sweep_projected: u64,
+    /// Peak resident-set estimate for the solve's packed state in MiB —
+    /// the memory column next to the visits/sec work column. CC-LP
+    /// keeps eight packed `O(n²)` arrays resident (`x`, `f`, `winv`,
+    /// `d`, `w`, and the three pair/box dual lanes); metric duals and
+    /// the active set are sparse and excluded.
+    pub resident_mb_est: f64,
 }
 
 impl StrategyRow {
@@ -308,6 +319,13 @@ impl StrategyRow {
             None
         }
     }
+}
+
+/// Peak resident-set estimate of a resident CC-LP solve in MiB (the
+/// eight packed `f64` arrays of [`crate::solver::CcState`]).
+pub fn cc_resident_mb_est(n: usize) -> f64 {
+    let m = n * n.saturating_sub(1) / 2;
+    (8 * m * 8) as f64 / (1u64 << 20) as f64
 }
 
 /// Solve `inst` once per strategy with otherwise-identical options —
@@ -333,6 +351,7 @@ pub fn strategy_ablation(
                 lp_objective: sol.residuals.lp_objective,
                 sweep_screened: sol.sweep_screened,
                 sweep_projected: sol.sweep_projected,
+                resident_mb_est: cc_resident_mb_est(inst.n),
             }
         })
         .collect()

@@ -27,9 +27,21 @@
 //!   per solve via [`solver::SolveOpts::sweep_backend`] (with a PJRT
 //!   batch variant), on a fixed or adaptive cadence
 //!   ([`solver::SolveOpts::sweep_policy`]).
+//! * **Storage layer** ([`matrix::store`]) — the packed distance matrix
+//!   behind a [`matrix::store::TileStore`]: the resident array
+//!   ([`matrix::store::MemStore`], free pass-through leases) or an
+//!   out-of-core [`matrix::store::DiskStore`] that streams `(i, k)`
+//!   tile blocks from disk under a bounded LRU working set with
+//!   write-back and sweep-order prefetch — solves run at `n` beyond
+//!   RAM, bitwise identical to the resident path, and checkpoints
+//!   reference the store file instead of re-serializing `x`.
 //! * **L2/L1 (build time)** — a JAX model + Pallas kernel implementing the
 //!   batched projection step, AOT-lowered to HLO text and executed from
 //!   Rust through PJRT ([`runtime`]).
+//!
+//! `README.md` maps the crate layout; `docs/ARCHITECTURE.md` documents
+//! the solver data flow, the load-bearing `visit_triplet` no-op
+//! contract, and the checkpoint / tile-store binary formats.
 
 pub mod cli;
 pub mod eval;

@@ -12,6 +12,7 @@
 //!   nearness --n 200 --threads 8 --tile 40 --passes 50
 //!            [--strategy full|active --sweep-every 8 --forget-after 3]
 //!            [--sweep-backend scalar|screened|engine] [--sweep-policy fixed|adaptive]
+//!            [--store mem|disk --store-dir store --store-budget-mb 64]
 //!            [--checkpoint ... --checkpoint-every ... --resume ... --warm-start ...]
 //!   warm-ablation --n 120 --perturb-frac 0.1 --perturb-rel 0.2
 //!            [--strategy active] [--tol 1e-6] [--check-every 5]
@@ -25,6 +26,7 @@ use metric_proj::cli::Args;
 use metric_proj::eval::{self, EvalConfig, Scale};
 use metric_proj::graph::datasets::Dataset;
 use metric_proj::instance::{cc_objective, CcLpInstance};
+use metric_proj::matrix::store::{StoreCfg, StoreKind};
 use metric_proj::rounding::{pivot, threshold};
 use metric_proj::solver::checkpoint::{self, SolverState, WarmStartOpts};
 use metric_proj::solver::schedule::Assignment;
@@ -95,6 +97,22 @@ fn parse_sweep_backend(args: &Args) -> Result<SweepBackend> {
     let s = args.get("sweep-backend").unwrap_or("screened");
     SweepBackend::parse(s)
         .with_context(|| format!("--sweep-backend must be scalar|screened|engine, got `{s}`"))
+}
+
+/// Storage flags shared by the solve commands: `--store mem|disk`,
+/// `--store-dir <dir>` (default `store`), `--store-budget-mb <MiB>`
+/// (default 64) — the out-of-core tile store for `X`.
+fn parse_store_cfg(args: &Args) -> Result<StoreCfg> {
+    let kind_str = args.get("store").unwrap_or("mem");
+    let kind = StoreKind::parse(kind_str)
+        .with_context(|| format!("--store must be mem|disk, got `{kind_str}`"))?;
+    let budget_mb =
+        args.get_or("store-budget-mb", 64usize).map_err(|e| anyhow::anyhow!(e))?.max(1);
+    Ok(StoreCfg {
+        kind,
+        dir: args.get("store-dir").unwrap_or("store").into(),
+        budget_bytes: budget_mb << 20,
+    })
 }
 
 fn parse_sweep_policy(args: &Args) -> Result<Option<SweepPolicy>> {
@@ -282,6 +300,14 @@ fn cmd_solve(args: &Args) -> Result<()> {
         checkpoint_every: ck.every,
         ..Default::default()
     };
+    let store_cfg = parse_store_cfg(args)?;
+    if store_cfg.kind == StoreKind::Disk {
+        bail!(
+            "--store disk is currently supported by the `nearness` command only; the \
+             CC-LP metric phase is already store-generic, but its pair phase and \
+             residual scans still address a resident x (see ROADMAP)"
+        );
+    }
     let engine = args.get("engine").unwrap_or("cpu");
     if opts.strategy.is_active() && (args.has_flag("serial") || engine != "cpu") {
         bail!(
@@ -414,9 +440,17 @@ fn cmd_nearness(args: &Args) -> Result<()> {
         }
         None => None,
     };
+    let store_cfg = parse_store_cfg(args)?;
+    if store_cfg.kind == StoreKind::Disk {
+        println!(
+            "store     : disk ({}, cache budget {} MiB)",
+            store_cfg.x_path().display(),
+            store_cfg.budget_bytes >> 20
+        );
+    }
     let mut sink = ck.sink();
     let (sol, secs) =
-        time(|| nearness::solve_checkpointed(&inst, &opts, start.as_ref(), &mut sink));
+        time(|| nearness::solve_stored(&inst, &opts, &store_cfg, start.as_ref(), &mut sink));
     let sol = sol?;
     ck.report();
     println!("metric nearness n={n}: passes={} time={secs:.2}s", sol.passes);
@@ -425,6 +459,17 @@ fn cmd_nearness(args: &Args) -> Result<()> {
     let full_per_pass = metric_proj::solver::schedule::n_triplets(n) as u128 * 3;
     print_work(sol.metric_visits, sol.active_triplets, sol.passes, full_per_pass);
     print_sweep_screen(sol.sweep_screened, sol.sweep_projected);
+    if let Some(stats) = sol.store_stats {
+        println!(
+            "store I/O : {} block loads, {} evictions ({} write-backs), {} prefetched, \
+             peak cache {:.2} MiB",
+            stats.loads,
+            stats.evictions,
+            stats.writebacks,
+            stats.prefetched,
+            stats.peak_resident_bytes as f64 / (1u64 << 20) as f64
+        );
+    }
     Ok(())
 }
 

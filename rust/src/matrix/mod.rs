@@ -6,7 +6,14 @@
 //! **column-major** — the layout the paper's tiled schedule (§III-C) is
 //! designed around: for a fixed column `i`, the entries `x_{ij}` for
 //! consecutive `j` are contiguous.
+//!
+//! [`store`] abstracts *where* the packed entries live: resident
+//! ([`store::MemStore`], the classic path) or on disk as `(i, k)` tile
+//! blocks with a bounded working set ([`store::DiskStore`]), leased tile
+//! by tile to the solvers.
 
 pub mod packed;
+pub mod store;
 
 pub use packed::PackedSym;
+pub use store::{DiskStore, MemStore, StoreCfg, StoreKind, TileScratch, TileStore};

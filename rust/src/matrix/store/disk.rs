@@ -1,0 +1,940 @@
+//! The file-backed [`TileStore`]: `X` on disk as `(i, k)` tile blocks,
+//! behind a bounded LRU block cache.
+//!
+//! # File format (`x.tiles`, all integers little-endian)
+//!
+//! ```text
+//! 0   magic      b"MPROJTIL"
+//! 8   version    u32  (currently 1)
+//! 12  reserved   u32  (0)
+//! 16  n          u64  problem dimension
+//! 24  block      u64  block side length of the layout
+//! 32  entries    u64  total stored pairs (= n(n-1)/2)
+//! 40  pass       u64  solver pass stamped at the last flush (0 = fresh)
+//! 48  x_fnv      u64  FNV-1a of the block-checksum table at the last
+//!                     stamp (the store fingerprint)
+//! 56  hdr_fnv    u64  FNV-1a over bytes 0..56
+//! 64  checksums  u64 × n_blocks   per-block FNV-1a, in block order
+//! ..  data       f64 × entries    blocks in block order (layout offsets)
+//! ```
+//!
+//! [`DiskStore::open`] validates the header, the exact file size
+//! (truncation), and **every** block checksum, so a corrupted or
+//! truncated store is rejected before a solve starts — mirroring the
+//! checkpoint format's guarantees. Block writes re-stamp the block's
+//! checksum; [`DiskStore::flush_and_stamp`] additionally records the
+//! solver pass and a store fingerprint in the header, which is what
+//! lets a checkpoint *reference* the store instead of re-serializing `x`
+//! (see [`crate::solver::checkpoint`]).
+//!
+//! # Caching
+//!
+//! Blocks are cached in memory up to a byte budget with exact LRU
+//! eviction and write-back of dirty blocks. All gather/scatter copying
+//! happens under one lock; the projection work between them runs on
+//! worker-private arenas, so workers only serialize on the (short) copy
+//! phases. A background thread warms the cache for
+//! [`TileStore::prefetch`] hints — loads only, so results are
+//! unaffected. Mid-solve I/O errors are unrecoverable and panic;
+//! everything on the setup/teardown path returns [`StoreError`].
+
+use super::layout::BlockLayout;
+use super::{Seg, TileScratch, TileStore};
+use crate::matrix::packed::n_pairs;
+use crate::solver::schedule::Tile;
+use crate::solver::tiling::for_each_tile_col;
+use crate::util::hash::{fnv1a64, Fnv1a};
+use crate::util::shared::SharedMut;
+use std::fmt;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// File magic: identifies a metric-proj tile store.
+pub const STORE_MAGIC: [u8; 8] = *b"MPROJTIL";
+
+/// Current tile-file format version.
+pub const STORE_VERSION: u32 = 1;
+
+const HEADER_LEN: u64 = 64;
+
+/// Why a tile store could not be created, opened, or flushed.
+#[derive(Debug)]
+pub enum StoreError {
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+    /// The file does not start with the tile-store magic.
+    BadMagic,
+    /// The file carries a version this build cannot read.
+    UnsupportedVersion(u32),
+    /// Truncated or internally inconsistent bytes (size, header
+    /// checksum, block checksums).
+    Corrupt(String),
+    /// The file is well-formed but does not match the caller's problem
+    /// (wrong `n`, wrong stamp, ...).
+    Mismatch(String),
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::Io(e) => write!(f, "tile store I/O error: {e}"),
+            StoreError::BadMagic => write!(f, "not a metric-proj tile store (bad magic)"),
+            StoreError::UnsupportedVersion(v) => {
+                write!(f, "unsupported tile store version {v} (this build reads {STORE_VERSION})")
+            }
+            StoreError::Corrupt(msg) => write!(f, "corrupt tile store: {msg}"),
+            StoreError::Mismatch(msg) => write!(f, "tile store mismatch: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StoreError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for StoreError {
+    fn from(e: std::io::Error) -> StoreError {
+        StoreError::Io(e)
+    }
+}
+
+fn corrupt(msg: impl Into<String>) -> StoreError {
+    StoreError::Corrupt(msg.into())
+}
+
+/// Cache counters, for diagnostics, benches, and the eviction-churn
+/// assertions in `tests/store_equivalence.rs`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StoreStats {
+    /// Blocks read from the file into the cache.
+    pub loads: u64,
+    /// Blocks evicted from the cache.
+    pub evictions: u64,
+    /// Evicted dirty blocks written back to the file.
+    pub writebacks: u64,
+    /// Blocks loaded by the background prefetcher.
+    pub prefetched: u64,
+    /// High-water mark of resident cache bytes.
+    pub peak_resident_bytes: u64,
+}
+
+struct CachedBlock {
+    data: Vec<f64>,
+    tick: u64,
+    dirty: bool,
+}
+
+struct Cache {
+    file: File,
+    blocks: Vec<Option<CachedBlock>>,
+    tick: u64,
+    resident_entries: usize,
+    budget_entries: usize,
+    /// Header stamp: (solver pass, store fingerprint) at the last
+    /// `flush_and_stamp` (or as read at `open`).
+    stamp: (u64, u64),
+    stats: StoreStats,
+}
+
+impl Cache {
+    /// Make block `idx` resident (LRU-touching it) and return nothing;
+    /// the caller re-borrows `self.blocks[idx]`.
+    fn load_block(&mut self, lay: &BlockLayout, idx: usize) -> std::io::Result<()> {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(b) = self.blocks[idx].as_mut() {
+            b.tick = tick;
+            return Ok(());
+        }
+        let data = read_block(&mut self.file, lay, idx)?;
+        self.resident_entries += data.len();
+        self.stats.loads += 1;
+        let bytes = (self.resident_entries * 8) as u64;
+        if bytes > self.stats.peak_resident_bytes {
+            self.stats.peak_resident_bytes = bytes;
+        }
+        self.blocks[idx] = Some(CachedBlock { data, tick, dirty: false });
+        self.evict_to_budget(lay, idx)
+    }
+
+    /// Evict least-recently-used blocks (never `keep`) until the budget
+    /// holds, writing dirty victims back to the file.
+    fn evict_to_budget(&mut self, lay: &BlockLayout, keep: usize) -> std::io::Result<()> {
+        while self.resident_entries > self.budget_entries {
+            let mut victim: Option<(usize, u64)> = None;
+            for (i, slot) in self.blocks.iter().enumerate() {
+                if i == keep {
+                    continue;
+                }
+                if let Some(b) = slot {
+                    match victim {
+                        Some((_, t)) if b.tick >= t => {}
+                        _ => victim = Some((i, b.tick)),
+                    }
+                }
+            }
+            let Some((vi, _)) = victim else { break };
+            let b = self.blocks[vi].take().expect("victim is resident");
+            self.resident_entries -= b.data.len();
+            self.stats.evictions += 1;
+            if b.dirty {
+                write_block(&mut self.file, lay, vi, &b.data)?;
+                self.stats.writebacks += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Write every dirty block back to the file (blocks stay resident).
+    fn flush_dirty(&mut self, lay: &BlockLayout) -> std::io::Result<()> {
+        for idx in 0..self.blocks.len() {
+            let dirty = self.blocks[idx].as_ref().is_some_and(|b| b.dirty);
+            if dirty {
+                let data = {
+                    let b = self.blocks[idx].as_mut().expect("checked resident");
+                    b.dirty = false;
+                    std::mem::take(&mut b.data)
+                };
+                let res = write_block(&mut self.file, lay, idx, &data);
+                self.blocks[idx].as_mut().expect("still resident").data = data;
+                res?;
+                self.stats.writebacks += 1;
+            }
+        }
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// File-backed tile store (see the [module docs](self) for the format).
+pub struct DiskStore {
+    layout: Arc<BlockLayout>,
+    cache: Arc<Mutex<Cache>>,
+    /// Global inverse weights, gathered alongside `x` so kernels address
+    /// both identically. Weights stay resident: only the *mutated* state
+    /// streams from disk (streaming `W` too is a ROADMAP follow-up).
+    winv: Vec<f64>,
+    /// Global packed column offsets (for `winv` gathers).
+    col_starts: Vec<usize>,
+    path: PathBuf,
+    prefetch_tx: Option<Mutex<mpsc::Sender<PrefetchMsg>>>,
+    prefetch_join: Option<std::thread::JoinHandle<()>>,
+}
+
+enum PrefetchMsg {
+    Tile(Tile),
+    Stop,
+}
+
+impl DiskStore {
+    /// Create a fresh store at `path` (parent directories are created),
+    /// dimension `n`, block side `block`, cache budget `budget_bytes`,
+    /// initialized entry by entry from `src(c, r)` (`c < r`). `winv`
+    /// must hold the `n(n-1)/2` packed inverse weights.
+    pub fn create(
+        path: &Path,
+        n: usize,
+        block: usize,
+        budget_bytes: usize,
+        winv: Vec<f64>,
+        src: &mut dyn FnMut(usize, usize) -> f64,
+    ) -> Result<DiskStore, StoreError> {
+        if winv.len() != n_pairs(n) {
+            return Err(StoreError::Mismatch(format!(
+                "winv has {} entries, expected {}",
+                winv.len(),
+                n_pairs(n)
+            )));
+        }
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let layout = BlockLayout::new(n, block.max(1));
+        let mut file =
+            OpenOptions::new().read(true).write(true).create(true).truncate(true).open(path)?;
+        file.write_all(&header_bytes(&layout, 0, 0))?;
+        // Reserve the checksum table, stream the blocks one buffer at a
+        // time (never materializing the full matrix), then go back and
+        // fill the table in.
+        let n_blocks = layout.n_blocks();
+        file.write_all(&vec![0u8; n_blocks * 8])?;
+        let mut coords = Vec::with_capacity(n_blocks);
+        layout.for_each_block(|cb, rb, _idx| coords.push((cb, rb)));
+        let mut sums = Vec::with_capacity(n_blocks);
+        let mut buf: Vec<f64> = Vec::new();
+        for &(cb, rb) in &coords {
+            buf.clear();
+            layout.for_each_block_col(cb, rb, |c, lo, hi, _base| {
+                for r in lo..hi {
+                    buf.push(src(c, r));
+                }
+            });
+            let bytes = f64s_to_bytes(&buf);
+            sums.push(fnv1a64(&bytes));
+            file.write_all(&bytes)?;
+        }
+        file.seek(SeekFrom::Start(HEADER_LEN))?;
+        for sum in &sums {
+            file.write_all(&sum.to_le_bytes())?;
+        }
+        file.flush()?;
+        let cache = Cache {
+            file,
+            blocks: (0..n_blocks).map(|_| None).collect(),
+            tick: 0,
+            resident_entries: 0,
+            budget_entries: (budget_bytes / 8).max(1),
+            stamp: (0, 0),
+            stats: StoreStats::default(),
+        };
+        Ok(DiskStore::assemble(layout, cache, winv, path))
+    }
+
+    /// Open an existing store, validating the header, the exact file
+    /// size, and every block checksum. `winv` must match the problem's
+    /// `n(n-1)/2` packed inverse weights.
+    pub fn open(
+        path: &Path,
+        budget_bytes: usize,
+        winv: Vec<f64>,
+    ) -> Result<DiskStore, StoreError> {
+        let mut file = OpenOptions::new().read(true).write(true).open(path)?;
+        let mut header = [0u8; HEADER_LEN as usize];
+        file.read_exact(&mut header).map_err(|_| corrupt("truncated header"))?;
+        if header[..8] != STORE_MAGIC {
+            return Err(StoreError::BadMagic);
+        }
+        let version = u32::from_le_bytes(header[8..12].try_into().expect("4 bytes"));
+        if version != STORE_VERSION {
+            return Err(StoreError::UnsupportedVersion(version));
+        }
+        let stored_sum = u64::from_le_bytes(header[56..64].try_into().expect("8 bytes"));
+        if fnv1a64(&header[..56]) != stored_sum {
+            return Err(corrupt("header checksum mismatch"));
+        }
+        let n = u64::from_le_bytes(header[16..24].try_into().expect("8 bytes"));
+        let block = u64::from_le_bytes(header[24..32].try_into().expect("8 bytes"));
+        let entries = u64::from_le_bytes(header[32..40].try_into().expect("8 bytes"));
+        let pass = u64::from_le_bytes(header[40..48].try_into().expect("8 bytes"));
+        let x_fnv = u64::from_le_bytes(header[48..56].try_into().expect("8 bytes"));
+        if n < 1 || n > 1 << 20 || block < 1 {
+            return Err(corrupt(format!("implausible geometry n={n} block={block}")));
+        }
+        let (n, block) = (n as usize, block as usize);
+        if winv.len() != n_pairs(n) {
+            return Err(StoreError::Mismatch(format!(
+                "winv has {} entries, store has n = {n}",
+                winv.len()
+            )));
+        }
+        let layout = BlockLayout::new(n, block);
+        if entries != layout.total_entries() {
+            return Err(corrupt(format!(
+                "entry count {entries} does not match n = {n} (expected {})",
+                layout.total_entries()
+            )));
+        }
+        let n_blocks = layout.n_blocks();
+        let expect_len = data_start(&layout) + entries * 8;
+        let actual_len = file.metadata()?.len();
+        if actual_len != expect_len {
+            return Err(corrupt(format!(
+                "file is {actual_len} bytes, expected {expect_len} (truncated or padded)"
+            )));
+        }
+        // Read the checksum table, then verify every block.
+        let mut table = vec![0u8; n_blocks * 8];
+        file.read_exact(&mut table).map_err(|_| corrupt("truncated checksum table"))?;
+        for idx in 0..n_blocks {
+            let want = u64::from_le_bytes(table[idx * 8..idx * 8 + 8].try_into().expect("8"));
+            let len = layout.block_len(idx);
+            let mut bytes = vec![0u8; len * 8];
+            file.read_exact(&mut bytes)
+                .map_err(|_| corrupt(format!("truncated data for block {idx}")))?;
+            if fnv1a64(&bytes) != want {
+                return Err(corrupt(format!("checksum mismatch in block {idx}")));
+            }
+        }
+        let cache = Cache {
+            file,
+            blocks: (0..n_blocks).map(|_| None).collect(),
+            tick: 0,
+            resident_entries: 0,
+            budget_entries: (budget_bytes / 8).max(1),
+            stamp: (pass, x_fnv),
+            stats: StoreStats::default(),
+        };
+        Ok(DiskStore::assemble(layout, cache, winv, path))
+    }
+
+    fn assemble(layout: BlockLayout, cache: Cache, winv: Vec<f64>, path: &Path) -> DiskStore {
+        let n = layout.n();
+        let mut col_starts = Vec::with_capacity(n);
+        let mut acc = 0usize;
+        for i in 0..n {
+            col_starts.push(acc);
+            acc += n - 1 - i;
+        }
+        let layout = Arc::new(layout);
+        let cache = Arc::new(Mutex::new(cache));
+        let (tx, rx) = mpsc::channel::<PrefetchMsg>();
+        let join = {
+            let layout = Arc::clone(&layout);
+            let cache = Arc::clone(&cache);
+            std::thread::spawn(move || prefetch_loop(&layout, &cache, &rx))
+        };
+        DiskStore {
+            layout,
+            cache,
+            winv,
+            col_starts,
+            path: path.to_path_buf(),
+            prefetch_tx: Some(Mutex::new(tx)),
+            prefetch_join: Some(join),
+        }
+    }
+
+    /// Path of the backing file.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Block side length of the on-disk layout.
+    pub fn block(&self) -> usize {
+        self.layout.block()
+    }
+
+    /// Cache counters so far.
+    pub fn stats(&self) -> StoreStats {
+        self.lock().stats
+    }
+
+    /// Currently resident cache bytes.
+    pub fn resident_bytes(&self) -> usize {
+        self.lock().resident_entries * 8
+    }
+
+    /// The `(pass, x_fnv)` header stamp of the last
+    /// [`DiskStore::flush_and_stamp`] (or as read at open).
+    pub fn stamp(&self) -> (u64, u64) {
+        self.lock().stamp
+    }
+
+    /// Write all dirty blocks back to the file.
+    pub fn flush(&self) -> Result<(), StoreError> {
+        let mut cache = self.lock();
+        cache.flush_dirty(&self.layout)?;
+        Ok(())
+    }
+
+    /// Flush, fingerprint the store, and stamp the header with
+    /// `(pass, fingerprint)`. Returns the fingerprint. This is the
+    /// consistency anchor for external-x checkpoints: a resume verifies
+    /// the store still matches the checkpoint's stamp exactly.
+    ///
+    /// The fingerprint hashes the **block-checksum table**, which every
+    /// block write maintains incrementally — so stamping costs
+    /// `O(n_blocks)`, not an `O(n²)` data scan, per checkpoint. The
+    /// table↔data coupling itself is verified by the full read
+    /// [`DiskStore::open`] performs once on the (rare) resume path.
+    pub fn flush_and_stamp(&self, pass: u64) -> Result<u64, StoreError> {
+        let mut cache = self.lock();
+        cache.flush_dirty(&self.layout)?;
+        let x_fnv = hash_checksum_table(&mut cache.file, &self.layout)?;
+        cache.file.seek(SeekFrom::Start(0))?;
+        cache.file.write_all(&header_bytes(&self.layout, pass, x_fnv))?;
+        cache.file.flush()?;
+        cache.stamp = (pass, x_fnv);
+        Ok(x_fnv)
+    }
+
+    /// Recompute the store fingerprint (the block-checksum-table hash)
+    /// after flushing dirty blocks — what a resume compares against the
+    /// checkpoint's stamp.
+    pub fn data_fingerprint(&self) -> Result<u64, StoreError> {
+        let mut cache = self.lock();
+        cache.flush_dirty(&self.layout)?;
+        Ok(hash_checksum_table(&mut cache.file, &self.layout)?)
+    }
+
+    /// Materialize the full packed array in global column-major order
+    /// (for final solution extraction and tests; resident `O(n²)`).
+    pub fn read_full(&self) -> Result<Vec<f64>, StoreError> {
+        let mut out = vec![0.0f64; n_pairs(self.layout.n())];
+        let mut guard = self.lock();
+        let cache = &mut *guard;
+        let lay = self.layout.as_ref();
+        let mut coords = Vec::with_capacity(lay.n_blocks());
+        lay.for_each_block(|cb, rb, idx| coords.push((cb, rb, idx)));
+        for (cb, rb, idx) in coords {
+            let cached: Option<Vec<f64>> = cache.blocks[idx].as_ref().map(|b| b.data.clone());
+            let data = match cached {
+                Some(d) => d,
+                None => read_block(&mut cache.file, lay, idx)?,
+            };
+            let mut pos = 0usize;
+            lay.for_each_block_col(cb, rb, |c, lo, hi, _base| {
+                let g = self.col_starts[c] + (lo - c - 1);
+                out[g..g + (hi - lo)].copy_from_slice(&data[pos..pos + (hi - lo)]);
+                pos += hi - lo;
+            });
+        }
+        Ok(out)
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Cache> {
+        self.cache.lock().expect("tile store lock poisoned")
+    }
+
+    /// Stage `tile`'s footprint into `scratch` (arena + address table +
+    /// segment list), loading blocks through the cache under the lock.
+    fn gather_tile(&self, tile: &Tile, scratch: &mut TileScratch) {
+        let lay = &self.layout;
+        let n = lay.n();
+        if scratch.cols.len() < n {
+            scratch.cols.resize(n, 0);
+        }
+        scratch.x.clear();
+        scratch.winv.clear();
+        scratch.segs.clear();
+        let mut cache = self.lock();
+        let scratch = &mut *scratch;
+        for_each_tile_col(tile, |c, lo, hi| {
+            let start = scratch.x.len();
+            // Non-negative by construction: the first footprint column
+            // starts at offset 0 with `lo == c + 1`, and every later
+            // column's start exceeds its `lo - c - 1` shift (the first
+            // column's span alone is longer).
+            debug_assert!(start >= lo - c - 1, "arena base underflow for {tile:?}");
+            scratch.cols[c] = start - (lo - c - 1);
+            scratch.segs.push(Seg { col: c, row_lo: lo, row_hi: hi, start });
+            let g = self.col_starts[c] + (lo - c - 1);
+            scratch.winv.extend_from_slice(&self.winv[g..g + (hi - lo)]);
+            let cb = lay.block_of(c);
+            let mut r = lo;
+            while r < hi {
+                let rb = lay.block_of(r);
+                let take_hi = hi.min(((rb + 1) * lay.block()).min(n));
+                let idx = lay.block_index(cb, rb);
+                cache
+                    .load_block(lay, idx)
+                    .expect("tile store I/O failed while loading a block");
+                let (base, blo) = lay.block_col_base(cb, rb, c);
+                let data = &cache.blocks[idx].as_ref().expect("just loaded").data;
+                scratch.x.extend_from_slice(&data[base + (r - blo)..base + (take_hi - blo)]);
+                r = take_hi;
+            }
+        });
+    }
+}
+
+impl Drop for DiskStore {
+    fn drop(&mut self) {
+        if let Some(tx) = self.prefetch_tx.take() {
+            let _ = tx.lock().expect("prefetch sender lock poisoned").send(PrefetchMsg::Stop);
+        }
+        if let Some(join) = self.prefetch_join.take() {
+            let _ = join.join();
+        }
+        // Best-effort durability for un-flushed writes.
+        let _ = self.lock().flush_dirty(&self.layout);
+    }
+}
+
+impl TileStore for DiskStore {
+    fn n(&self) -> usize {
+        self.layout.n()
+    }
+
+    fn n_pairs(&self) -> usize {
+        self.layout.total_entries() as usize
+    }
+
+    unsafe fn with_tile(
+        &self,
+        tile: &Tile,
+        scratch: &mut TileScratch,
+        f: &mut dyn FnMut(&SharedMut<'_, f64>, &[usize], &[f64]),
+    ) {
+        let lay = &self.layout;
+        let n = lay.n();
+        // Gather: per-column segments of the tile footprint, copied from
+        // the cached blocks under the lock.
+        self.gather_tile(tile, scratch);
+        // Compute on the private arena — no lock held.
+        {
+            let view = SharedMut::new(scratch.x.as_mut_slice());
+            f(&view, &scratch.cols, &scratch.winv);
+        }
+        // Scatter: write the whole footprint back (it equals the set of
+        // pairs this tile may touch — disjoint from every concurrent
+        // lease by the wave invariant, which `tiling` tests pin) and
+        // mark the blocks dirty.
+        {
+            let mut cache = self.lock();
+            for seg in &scratch.segs {
+                let cb = lay.block_of(seg.col);
+                let mut r = seg.row_lo;
+                let mut pos = seg.start;
+                while r < seg.row_hi {
+                    let rb = lay.block_of(r);
+                    let take_hi = seg.row_hi.min(((rb + 1) * lay.block()).min(n));
+                    let idx = lay.block_index(cb, rb);
+                    cache
+                        .load_block(lay, idx)
+                        .expect("tile store I/O failed while loading a block");
+                    let (base, blo) = lay.block_col_base(cb, rb, seg.col);
+                    let block = cache.blocks[idx].as_mut().expect("just loaded");
+                    let dst = &mut block.data[base + (r - blo)..base + (take_hi - blo)];
+                    dst.copy_from_slice(&scratch.x[pos..pos + (take_hi - r)]);
+                    block.dirty = true;
+                    pos += take_hi - r;
+                    r = take_hi;
+                }
+            }
+        }
+    }
+
+    unsafe fn with_tile_read(
+        &self,
+        tile: &Tile,
+        scratch: &mut TileScratch,
+        f: &mut dyn FnMut(&SharedMut<'_, f64>, &[usize], &[f64]),
+    ) {
+        // Gather only — no scatter, no dirty marks: a read-only scan
+        // must not turn the whole store dirty.
+        self.gather_tile(tile, scratch);
+        let view = SharedMut::new(scratch.x.as_mut_slice());
+        f(&view, &scratch.cols, &scratch.winv);
+    }
+
+    fn prefetch(&self, tile: &Tile) {
+        if let Some(tx) = &self.prefetch_tx {
+            let _ = tx
+                .lock()
+                .expect("prefetch sender lock poisoned")
+                .send(PrefetchMsg::Tile(*tile));
+        }
+    }
+}
+
+/// Background cache warmer: loads the blocks of hinted tiles. Loads
+/// only — never writes entries — so it cannot change results; I/O
+/// failures are ignored (the foreground gather will surface them).
+fn prefetch_loop(
+    lay: &BlockLayout,
+    cache: &Mutex<Cache>,
+    rx: &mpsc::Receiver<PrefetchMsg>,
+) {
+    while let Ok(PrefetchMsg::Tile(tile)) = rx.recv() {
+        let mut blocks: Vec<usize> = Vec::new();
+        for_each_tile_col(&tile, |c, lo, hi| {
+            let cb = lay.block_of(c);
+            let mut rb = lay.block_of(lo);
+            while rb <= lay.block_of(hi - 1) {
+                let idx = lay.block_index(cb, rb);
+                if !blocks.contains(&idx) {
+                    blocks.push(idx);
+                }
+                rb += 1;
+            }
+        });
+        for idx in blocks {
+            // Lock per block so foreground gathers interleave freely.
+            let Ok(mut guard) = cache.lock() else { return };
+            let fresh = guard.blocks[idx].is_none();
+            if guard.load_block(lay, idx).is_ok() && fresh {
+                guard.stats.prefetched += 1;
+            }
+        }
+    }
+}
+
+fn data_start(lay: &BlockLayout) -> u64 {
+    HEADER_LEN + lay.n_blocks() as u64 * 8
+}
+
+fn header_bytes(lay: &BlockLayout, pass: u64, x_fnv: u64) -> [u8; HEADER_LEN as usize] {
+    let mut h = [0u8; HEADER_LEN as usize];
+    h[..8].copy_from_slice(&STORE_MAGIC);
+    h[8..12].copy_from_slice(&STORE_VERSION.to_le_bytes());
+    h[16..24].copy_from_slice(&(lay.n() as u64).to_le_bytes());
+    h[24..32].copy_from_slice(&(lay.block() as u64).to_le_bytes());
+    h[32..40].copy_from_slice(&lay.total_entries().to_le_bytes());
+    h[40..48].copy_from_slice(&pass.to_le_bytes());
+    h[48..56].copy_from_slice(&x_fnv.to_le_bytes());
+    let sum = fnv1a64(&h[..56]);
+    h[56..64].copy_from_slice(&sum.to_le_bytes());
+    h
+}
+
+fn block_file_offset(lay: &BlockLayout, idx: usize) -> u64 {
+    data_start(lay) + lay.block_offset(idx) * 8
+}
+
+fn read_block(file: &mut File, lay: &BlockLayout, idx: usize) -> std::io::Result<Vec<f64>> {
+    let len = lay.block_len(idx);
+    let mut bytes = vec![0u8; len * 8];
+    file.seek(SeekFrom::Start(block_file_offset(lay, idx)))?;
+    file.read_exact(&mut bytes)?;
+    Ok(bytes_to_f64s(&bytes))
+}
+
+/// Write a block's data and re-stamp its checksum table entry.
+fn write_block(
+    file: &mut File,
+    lay: &BlockLayout,
+    idx: usize,
+    data: &[f64],
+) -> std::io::Result<()> {
+    debug_assert_eq!(data.len(), lay.block_len(idx));
+    let bytes = f64s_to_bytes(data);
+    file.seek(SeekFrom::Start(block_file_offset(lay, idx)))?;
+    file.write_all(&bytes)?;
+    file.seek(SeekFrom::Start(HEADER_LEN + idx as u64 * 8))?;
+    file.write_all(&fnv1a64(&bytes).to_le_bytes())?;
+    Ok(())
+}
+
+/// FNV-1a over the block-checksum table — the store fingerprint. The
+/// table is re-stamped by every [`write_block`], so hashing it reflects
+/// the data content without re-reading the `O(n²)` data region; the
+/// table↔data coupling is what [`DiskStore::open`]'s full verification
+/// pins down.
+fn hash_checksum_table(file: &mut File, lay: &BlockLayout) -> std::io::Result<u64> {
+    file.seek(SeekFrom::Start(HEADER_LEN))?;
+    let mut h = Fnv1a::new();
+    let mut remaining = lay.n_blocks() as u64 * 8;
+    let mut buf = vec![0u8; 1 << 16];
+    while remaining > 0 {
+        let take = (buf.len() as u64).min(remaining) as usize;
+        file.read_exact(&mut buf[..take])?;
+        h.update(&buf[..take]);
+        remaining -= take as u64;
+    }
+    Ok(h.finish())
+}
+
+fn f64s_to_bytes(data: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() * 8);
+    for &v in data {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_f64s(bytes: &[u8]) -> Vec<f64> {
+    bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().expect("8 bytes"))))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::PackedSym;
+    use crate::solver::schedule::Schedule;
+    use crate::solver::tiling::for_each_triplet;
+    use crate::util::rng::Rng;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        let pid = std::process::id();
+        std::env::temp_dir().join(format!("metric_proj_store_{tag}_{pid}"))
+    }
+
+    fn make(tag: &str, n: usize, block: usize, budget: usize, seed: u64) -> (DiskStore, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let d = PackedSym::from_fn(n, |_, _| rng.f64_in(-3.0, 3.0));
+        let winv = vec![1.0; d.len()];
+        let path = tmp_path(tag);
+        let src = d.clone();
+        let store = DiskStore::create(&path, n, block, budget, winv, &mut |c, r| {
+            src.get(c, r)
+        })
+        .expect("create");
+        (store, d.as_slice().to_vec())
+    }
+
+    #[test]
+    fn create_read_full_roundtrips() {
+        for (n, b) in [(6usize, 2usize), (13, 3), (20, 7), (9, 40)] {
+            let (store, want) = make(&format!("rt{n}_{b}"), n, b, 1 << 20, n as u64);
+            assert_eq!(store.read_full().expect("read_full"), want, "n={n} b={b}");
+            let path = store.path().to_path_buf();
+            drop(store);
+            let _ = std::fs::remove_file(path);
+        }
+    }
+
+    #[test]
+    #[allow(unused_unsafe)]
+    fn leases_see_and_mutate_the_right_entries_under_churn() {
+        // Tiny budget forces load/evict/write-back churn while a serial
+        // walk mutates every pair through leases; the result must equal
+        // the same walk over a flat array.
+        let (n, b) = (17usize, 4usize);
+        let (store, mut flat) = make("churn", n, b, 64 * 8, 7);
+        let m = PackedSym::zeros(n);
+        let schedule = Schedule::new(n, b);
+        let mut scratch = TileScratch::default();
+        for pass in 0..2 {
+            for wave in schedule.waves() {
+                for tile in wave {
+                    // SAFETY: single thread owns every tile.
+                    unsafe {
+                        store.with_tile(tile, &mut scratch, &mut |x, cols, winv| {
+                            for_each_triplet(tile, b, |i, j, k| {
+                                for (a, bb) in [(i, j), (i, k), (j, k)] {
+                                    let p = cols[a] + (bb - a - 1);
+                                    // SAFETY: in-bounds lease addressing.
+                                    assert_eq!(
+                                        unsafe { x.get(p) },
+                                        flat[m.idx(a, bb)],
+                                        "pass={pass} pair ({a},{bb})"
+                                    );
+                                    assert_eq!(winv[p], 1.0);
+                                }
+                                let p = cols[i] + (j - i - 1);
+                                // SAFETY: in-bounds, single thread.
+                                unsafe {
+                                    let v = x.get(p) * 0.5 + (i + j + k) as f64 * 0.001;
+                                    x.set(p, v);
+                                    flat[m.idx(i, j)] = v;
+                                }
+                            });
+                        });
+                    }
+                }
+            }
+        }
+        assert_eq!(store.read_full().expect("read_full"), flat);
+        let stats = store.stats();
+        assert!(stats.evictions > 0, "budget was too generous to exercise eviction");
+        assert!(stats.writebacks > 0, "dirty blocks must be written back");
+        let path = store.path().to_path_buf();
+        drop(store);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn open_validates_and_rejects_corruption() {
+        let (store, want) = make("corrupt", 12, 3, 1 << 20, 3);
+        let path = store.path().to_path_buf();
+        store.flush_and_stamp(5).expect("stamp");
+        drop(store);
+        let winv = vec![1.0; want.len()];
+
+        // Clean reopen works and carries the stamp.
+        let reopened = DiskStore::open(&path, 1 << 20, winv.clone()).expect("reopen");
+        assert_eq!(reopened.stamp().0, 5);
+        assert_eq!(reopened.read_full().expect("read_full"), want);
+        drop(reopened);
+
+        let bytes = std::fs::read(&path).expect("read file");
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        std::fs::write(&path, &bad).expect("write");
+        assert!(matches!(
+            DiskStore::open(&path, 1 << 20, winv.clone()),
+            Err(StoreError::BadMagic)
+        ));
+        // Unsupported version (header checksum re-stamped so the version
+        // check is what fires).
+        let mut bad = bytes.clone();
+        bad[8..12].copy_from_slice(&9u32.to_le_bytes());
+        let sum = fnv1a64(&bad[..56]);
+        bad[56..64].copy_from_slice(&sum.to_le_bytes());
+        std::fs::write(&path, &bad).expect("write");
+        assert!(matches!(
+            DiskStore::open(&path, 1 << 20, winv.clone()),
+            Err(StoreError::UnsupportedVersion(9))
+        ));
+        // Header bitflip.
+        let mut bad = bytes.clone();
+        bad[17] ^= 0x10;
+        std::fs::write(&path, &bad).expect("write");
+        assert!(DiskStore::open(&path, 1 << 20, winv.clone()).is_err());
+        // Data bitflip (caught by the block checksum).
+        let mut bad = bytes.clone();
+        let last = bad.len() - 3;
+        bad[last] ^= 0x40;
+        std::fs::write(&path, &bad).expect("write");
+        assert!(matches!(
+            DiskStore::open(&path, 1 << 20, winv.clone()),
+            Err(StoreError::Corrupt(_))
+        ));
+        // Truncation at several lengths.
+        for cut in [bytes.len() - 1, bytes.len() / 2, 40, 7] {
+            std::fs::write(&path, &bytes[..cut]).expect("write");
+            assert!(
+                DiskStore::open(&path, 1 << 20, winv.clone()).is_err(),
+                "accepted a {cut}-byte prefix"
+            );
+        }
+        // Restore and confirm it opens again.
+        std::fs::write(&path, &bytes).expect("write");
+        assert!(DiskStore::open(&path, 1 << 20, winv.clone()).is_ok());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    #[allow(unused_unsafe)]
+    fn stamp_and_fingerprint_track_content() {
+        let (store, _want) = make("stamp", 10, 3, 1 << 20, 11);
+        let f1 = store.flush_and_stamp(3).expect("stamp");
+        assert_eq!(store.stamp(), (3, f1));
+        assert_eq!(store.data_fingerprint().expect("fp"), f1);
+        // Mutate one entry through a lease; the fingerprint must change.
+        let schedule = Schedule::new(10, 3);
+        let tile = schedule.waves()[0][0];
+        let mut scratch = TileScratch::default();
+        unsafe {
+            store.with_tile(&tile, &mut scratch, &mut |x, cols, _| {
+                let p = cols[tile.i_lo] + (tile.k_lo - tile.i_lo - 1);
+                // SAFETY: in-bounds lease addressing, single thread.
+                unsafe { x.set(p, x.get(p) + 1.0) };
+            });
+        }
+        let f2 = store.data_fingerprint().expect("fp");
+        assert_ne!(f1, f2, "fingerprint must react to content changes");
+        let path = store.path().to_path_buf();
+        drop(store);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn prefetch_warms_the_cache_without_changing_content() {
+        let (store, want) = make("prefetch", 14, 3, 1 << 20, 17);
+        let schedule = Schedule::new(14, 3);
+        for wave in schedule.waves() {
+            for tile in wave {
+                store.prefetch(tile);
+            }
+        }
+        // Drain: drop joins the prefetcher; poll until it has loaded
+        // something or give up quickly (the assertion below is on
+        // content, which must hold either way).
+        for _ in 0..50 {
+            if store.stats().prefetched > 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(store.read_full().expect("read_full"), want);
+        let path = store.path().to_path_buf();
+        drop(store);
+        let _ = std::fs::remove_file(path);
+    }
+}

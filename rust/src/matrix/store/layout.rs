@@ -1,0 +1,240 @@
+//! Block decomposition of the packed strict-lower triangle for the
+//! on-disk tile store.
+//!
+//! Columns are grouped into **column blocks** of `block` consecutive
+//! columns, rows into **row blocks** of `block` consecutive rows. Block
+//! `(cb, rb)` (valid for `rb >= cb`, since stored pairs have
+//! `row > col`) holds, for each column `c` of its column range, the
+//! contiguous rows `[max(rb·block, c+1), min((rb+1)·block, n))` —
+//! column-major within the block, exactly like the packed matrix itself.
+//!
+//! This is the `(i, k)` blocking of the wave schedule: a solver tile
+//! with `i`-block `a` and `k`-block `e` touches only the block row
+//! `(a, a..=e)` and the block column `(a..=e, e)` of this grid, and
+//! every per-column span of its footprint
+//! ([`crate::solver::tiling::for_each_tile_col`]) maps to a short run of
+//! consecutive blocks down one block column. Diagonal blocks are
+//! triangular; all offsets are precomputed so block I/O is one seek.
+
+/// Immutable geometry of a blocked packed triangle.
+#[derive(Clone, Debug)]
+pub struct BlockLayout {
+    n: usize,
+    block: usize,
+    /// Number of blocks per side: `ceil(n / block)`.
+    nb: usize,
+    /// Entry offset of each block in block order, plus one final total
+    /// (`offsets.len() == n_blocks() + 1`).
+    offsets: Vec<u64>,
+}
+
+impl BlockLayout {
+    /// Build the layout for dimension `n` and block size `block >= 1`.
+    pub fn new(n: usize, block: usize) -> BlockLayout {
+        assert!(n >= 1, "BlockLayout needs n >= 1");
+        assert!(block >= 1, "BlockLayout needs block >= 1");
+        let nb = n.div_ceil(block);
+        let mut offsets = Vec::with_capacity(nb * (nb + 1) / 2 + 1);
+        let mut acc = 0u64;
+        for cb in 0..nb {
+            for rb in cb..nb {
+                offsets.push(acc);
+                let mut cnt = 0u64;
+                Self::block_cols(n, block, cb, rb, |_, lo, hi| cnt += (hi - lo) as u64);
+                acc += cnt;
+            }
+        }
+        offsets.push(acc);
+        debug_assert_eq!(acc as usize, n * (n - 1) / 2);
+        BlockLayout { n, block, nb, offsets }
+    }
+
+    /// Dimension `n`.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Block side length.
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Blocks per side of the grid.
+    pub fn blocks_per_side(&self) -> usize {
+        self.nb
+    }
+
+    /// Total number of blocks (`nb·(nb+1)/2`, including empty ones).
+    pub fn n_blocks(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Total stored entries (`n(n-1)/2`).
+    pub fn total_entries(&self) -> u64 {
+        *self.offsets.last().expect("offsets holds a final total")
+    }
+
+    /// Linear index of block `(cb, rb)`, `cb <= rb < nb`.
+    #[inline]
+    pub fn block_index(&self, cb: usize, rb: usize) -> usize {
+        debug_assert!(cb <= rb && rb < self.nb);
+        cb * self.nb - cb * (cb.saturating_sub(1)) / 2 - cb + rb
+    }
+
+    /// Entry offset of block `idx` within the data region.
+    #[inline]
+    pub fn block_offset(&self, idx: usize) -> u64 {
+        self.offsets[idx]
+    }
+
+    /// Entry count of block `idx`.
+    #[inline]
+    pub fn block_len(&self, idx: usize) -> usize {
+        (self.offsets[idx + 1] - self.offsets[idx]) as usize
+    }
+
+    /// Visit every block as `(cb, rb, idx)` in block order.
+    pub fn for_each_block<F: FnMut(usize, usize, usize)>(&self, mut f: F) {
+        let mut idx = 0usize;
+        for cb in 0..self.nb {
+            for rb in cb..self.nb {
+                f(cb, rb, idx);
+                idx += 1;
+            }
+        }
+    }
+
+    /// Visit the nonempty columns of block `(cb, rb)` as
+    /// `(c, row_lo, row_hi, base)`: rows `[row_lo, row_hi)` of column `c`
+    /// sit at `[base, base + row_hi - row_lo)` within the block buffer.
+    #[inline]
+    pub fn for_each_block_col<F: FnMut(usize, usize, usize, usize)>(
+        &self,
+        cb: usize,
+        rb: usize,
+        mut f: F,
+    ) {
+        let mut base = 0usize;
+        Self::block_cols(self.n, self.block, cb, rb, |c, lo, hi| {
+            f(c, lo, hi, base);
+            base += hi - lo;
+        });
+    }
+
+    /// Block coordinate of a row or column index.
+    #[inline]
+    pub fn block_of(&self, index: usize) -> usize {
+        index / self.block
+    }
+
+    /// Where column `c` sits inside block `(cb, rb)`: returns
+    /// `(base, row_lo)` such that the block buffer holds rows
+    /// `[row_lo, min((rb+1)·block, n))` of column `c` starting at
+    /// `base`. `c` must belong to column block `cb`.
+    #[inline]
+    pub fn block_col_base(&self, cb: usize, rb: usize, c: usize) -> (usize, usize) {
+        debug_assert_eq!(self.block_of(c), cb);
+        let r_cap = ((rb + 1) * self.block).min(self.n);
+        let mut base = 0usize;
+        for cc in (cb * self.block)..c {
+            let lo = (rb * self.block).max(cc + 1);
+            base += r_cap.saturating_sub(lo);
+        }
+        (base, (rb * self.block).max(c + 1))
+    }
+
+    fn block_cols<F: FnMut(usize, usize, usize)>(
+        n: usize,
+        block: usize,
+        cb: usize,
+        rb: usize,
+        mut f: F,
+    ) {
+        let c_hi = ((cb + 1) * block).min(n);
+        let r_cap = ((rb + 1) * block).min(n);
+        for c in (cb * block)..c_hi {
+            let lo = (rb * block).max(c + 1);
+            if lo < r_cap {
+                f(c, lo, r_cap);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::packed::n_pairs;
+
+    #[test]
+    fn totals_match_n_pairs() {
+        for (n, b) in [(1usize, 1usize), (2, 1), (6, 2), (10, 3), (17, 5), (23, 7), (30, 40)] {
+            let lay = BlockLayout::new(n, b);
+            assert_eq!(lay.total_entries() as usize, n_pairs(n), "n={n} b={b}");
+            assert_eq!(lay.n_blocks(), lay.blocks_per_side() * (lay.blocks_per_side() + 1) / 2);
+        }
+    }
+
+    #[test]
+    fn block_index_is_block_order() {
+        for (n, b) in [(10usize, 3usize), (23, 7), (9, 2)] {
+            let lay = BlockLayout::new(n, b);
+            let mut expect = 0usize;
+            lay.for_each_block(|cb, rb, idx| {
+                assert_eq!(idx, expect, "n={n} b={b} ({cb},{rb})");
+                assert_eq!(lay.block_index(cb, rb), idx, "n={n} b={b} ({cb},{rb})");
+                expect += 1;
+            });
+            assert_eq!(expect, lay.n_blocks());
+        }
+    }
+
+    #[test]
+    fn blocks_partition_every_pair_exactly_once() {
+        for (n, b) in [(7usize, 2usize), (14, 3), (19, 4), (12, 12), (11, 40)] {
+            let lay = BlockLayout::new(n, b);
+            let mut seen = vec![false; n_pairs(n)];
+            let m = crate::matrix::PackedSym::zeros(n);
+            lay.for_each_block(|cb, rb, idx| {
+                let mut within = 0usize;
+                lay.for_each_block_col(cb, rb, |c, lo, hi, base| {
+                    assert_eq!(base, within, "column bases must be prefix sums");
+                    for r in lo..hi {
+                        assert!(c < r && r < n);
+                        assert_eq!(lay.block_of(c), cb);
+                        assert_eq!(lay.block_of(r), rb);
+                        let g = m.idx(c, r);
+                        assert!(!seen[g], "pair ({c},{r}) covered twice (n={n} b={b})");
+                        seen[g] = true;
+                    }
+                    within += hi - lo;
+                });
+                assert_eq!(within, lay.block_len(idx), "n={n} b={b} block ({cb},{rb})");
+            });
+            assert!(seen.iter().all(|&s| s), "n={n} b={b}: uncovered pairs");
+        }
+    }
+
+    #[test]
+    fn block_col_base_matches_enumeration() {
+        for (n, b) in [(9usize, 2usize), (14, 3), (23, 7)] {
+            let lay = BlockLayout::new(n, b);
+            lay.for_each_block(|cb, rb, _| {
+                lay.for_each_block_col(cb, rb, |c, lo, _hi, base| {
+                    assert_eq!(lay.block_col_base(cb, rb, c), (base, lo), "n={n} b={b}");
+                });
+            });
+        }
+    }
+
+    #[test]
+    fn offsets_are_contiguous() {
+        let lay = BlockLayout::new(20, 6);
+        let mut acc = 0u64;
+        for idx in 0..lay.n_blocks() {
+            assert_eq!(lay.block_offset(idx), acc);
+            acc += lay.block_len(idx) as u64;
+        }
+        assert_eq!(acc, lay.total_entries());
+    }
+}

@@ -1,0 +1,119 @@
+//! The resident [`TileStore`]: a pass-through over the classic packed
+//! array. Leasing a tile costs nothing — the callback receives the
+//! global `x` view, the global `col_starts`, and the global `winv`, so
+//! every kernel runs exactly as it did before the store abstraction
+//! existed (same pointers, same indices, same numbers).
+
+use super::{TileScratch, TileStore};
+use crate::solver::schedule::Tile;
+use crate::util::shared::SharedMut;
+
+/// Borrowed in-memory store over the caller's packed arrays.
+///
+/// Constructed fresh for each solver phase from the phase's exclusive
+/// borrow of `x` (mirroring how the drivers built their [`SharedMut`]
+/// views before), so the aliasing discipline is unchanged.
+pub struct MemStore<'a> {
+    x: SharedMut<'a, f64>,
+    col_starts: &'a [usize],
+    winv: &'a [f64],
+    n: usize,
+    m: usize,
+}
+
+impl<'a> MemStore<'a> {
+    /// Wrap the packed distance slice (`n(n-1)/2` entries), its column
+    /// offsets, and the matching inverse weights.
+    pub fn new(x: &'a mut [f64], col_starts: &'a [usize], winv: &'a [f64]) -> MemStore<'a> {
+        let n = col_starts.len();
+        let m = x.len();
+        debug_assert_eq!(m, n * n.saturating_sub(1) / 2);
+        debug_assert_eq!(winv.len(), m);
+        MemStore { x: SharedMut::new(x), col_starts, winv, n, m }
+    }
+}
+
+impl TileStore for MemStore<'_> {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn n_pairs(&self) -> usize {
+        self.m
+    }
+
+    unsafe fn with_tile(
+        &self,
+        _tile: &Tile,
+        _scratch: &mut TileScratch,
+        f: &mut dyn FnMut(&SharedMut<'_, f64>, &[usize], &[f64]),
+    ) {
+        f(&self.x, self.col_starts, self.winv);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::PackedSym;
+    use crate::solver::schedule::Schedule;
+    use crate::solver::tiling::for_each_tile_col;
+
+    #[test]
+    #[allow(unused_unsafe)]
+    fn lease_is_the_global_view() {
+        let n = 9;
+        let d = PackedSym::from_fn(n, |i, j| (i * 10 + j) as f64);
+        let mut x: Vec<f64> = d.as_slice().to_vec();
+        let winv = vec![1.0; x.len()];
+        let cs = d.col_starts().to_vec();
+        let store = MemStore::new(x.as_mut_slice(), &cs, &winv);
+        assert_eq!(store.n(), n);
+        assert_eq!(store.n_pairs(), n * (n - 1) / 2);
+        let schedule = Schedule::new(n, 3);
+        let mut scratch = TileScratch::default();
+        for wave in schedule.waves() {
+            for tile in wave {
+                // SAFETY: single thread owns every tile.
+                unsafe {
+                    store.with_tile(tile, &mut scratch, &mut |xv, cols, wv| {
+                        for_each_tile_col(tile, |c, lo, hi| {
+                            for r in lo..hi {
+                                let p = cols[c] + (r - c - 1);
+                                // SAFETY: in-bounds lease addressing.
+                                assert_eq!(unsafe { xv.get(p) }, d.get(c, r));
+                                assert_eq!(wv[p], 1.0);
+                            }
+                        });
+                    });
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[allow(unused_unsafe)]
+    fn writes_through_the_lease_are_durable() {
+        let n = 6;
+        let mut x = vec![0.0f64; n * (n - 1) / 2];
+        let winv = vec![1.0; x.len()];
+        let cs: Vec<usize> = {
+            let m = PackedSym::zeros(n);
+            m.col_starts().to_vec()
+        };
+        let schedule = Schedule::new(n, 2);
+        {
+            let store = MemStore::new(x.as_mut_slice(), &cs, &winv);
+            let mut scratch = TileScratch::default();
+            let tile = &schedule.waves()[0][0];
+            unsafe {
+                store.with_tile(tile, &mut scratch, &mut |xv, cols, _| {
+                    let p = cols[tile.i_lo] + (tile.k_lo - tile.i_lo - 1);
+                    // SAFETY: in-bounds lease addressing, single thread.
+                    unsafe { xv.set(p, 7.5) };
+                });
+            }
+        }
+        assert!(x.iter().any(|&v| v == 7.5));
+    }
+}

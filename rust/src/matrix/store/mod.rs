@@ -1,0 +1,235 @@
+//! Pluggable storage backends for the packed distance matrix `X`.
+//!
+//! The paper's headline scale (trillions of constraints) works because a
+//! projection solver only ever needs `O(n²)` *variables* resident, never
+//! the `O(n³)` constraints — and once the duals sparsify, the packed `X`
+//! itself becomes the binding memory limit. This module inverts the
+//! ownership of that hot-path array: solvers no longer address a flat
+//! `&mut [f64]` directly but lease **tile working sets** from a
+//! [`TileStore`], so `X` can live wherever the store decides:
+//!
+//! * [`MemStore`] — the classic resident packed array. Leases are free
+//!   pass-throughs (the solver sees the exact same pointer and the exact
+//!   same global `col_starts` addressing as before), so the in-memory
+//!   path is unchanged.
+//! * [`DiskStore`] — `X` on disk, laid out as the same `(i, k)` tile
+//!   blocks the wave schedule iterates ([`layout::BlockLayout`]), behind
+//!   a bounded LRU block cache with write-back on eviction and
+//!   prefetching of the next tile in sweep order. Leases gather the
+//!   tile's per-column segments ([`for_each_tile_col`]) into a
+//!   worker-local arena and scatter them back afterwards.
+//!
+//! # The lease contract
+//!
+//! [`TileStore::with_tile`] hands the callback `(x, cols, winv)` such
+//! that the entry of pair `{c, r}` (`c < r`) lives at
+//! `x[cols[c] + (r - c - 1)]`, and `winv` is indexed identically — the
+//! exact addressing every kernel already uses with the global
+//! `col_starts`. Because a lease hands the kernels bit-identical values
+//! under bit-identical arithmetic (a gather/scatter copies, it never
+//! rounds), a disk-backed solve is **bitwise identical** to the
+//! in-memory solve (pinned by `tests/store_equivalence.rs`).
+//!
+//! The safety story is the wave schedule's, unchanged: a worker may only
+//! lease a tile it owns for the current wave, so concurrent leases touch
+//! disjoint pairs. Stores may still share cache *blocks* between workers
+//! (block granularity is coarser than pair granularity); [`DiskStore`]
+//! therefore serializes all gather/scatter copying on one lock while the
+//! compute between them stays fully parallel on private arenas.
+//!
+//! [`for_each_tile_col`]: crate::solver::tiling::for_each_tile_col
+
+pub mod disk;
+pub mod layout;
+pub mod mem;
+
+pub use disk::{DiskStore, StoreError, StoreStats};
+pub use mem::MemStore;
+
+use crate::solver::schedule::Tile;
+use crate::util::shared::SharedMut;
+use std::path::PathBuf;
+
+/// One leased per-column segment of a tile footprint (disk gathers).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Seg {
+    /// Column index.
+    pub col: usize,
+    /// First touched row (`> col`).
+    pub row_lo: usize,
+    /// One past the last touched row.
+    pub row_hi: usize,
+    /// Arena offset of the segment's first entry.
+    pub start: usize,
+}
+
+/// Worker-local scratch a store may use to stage a tile's working set.
+///
+/// Created once per worker ([`TileScratch::default`]) and reused across
+/// tiles; [`MemStore`] ignores it entirely, [`DiskStore`] keeps the
+/// gathered `x`/`winv` arenas and the per-column address table here.
+#[derive(Default)]
+pub struct TileScratch {
+    /// Gathered distance entries (read-write).
+    pub(crate) x: Vec<f64>,
+    /// Gathered inverse weights (read-only mirror of `x`'s layout).
+    pub(crate) winv: Vec<f64>,
+    /// Per-column arena bases in `col_starts` form: the entry of pair
+    /// `{c, r}` sits at `cols[c] + (r - c - 1)`. Only columns of the
+    /// currently leased tile hold valid values.
+    pub(crate) cols: Vec<usize>,
+    /// The leased segments, for the write-back scatter.
+    pub(crate) segs: Vec<Seg>,
+}
+
+/// A storage backend for the packed distance matrix, leased tile by tile.
+///
+/// Implementations must be [`Sync`]: one store is shared by every worker
+/// of a wave-parallel pass.
+pub trait TileStore: Sync {
+    /// Problem dimension `n` (the matrix stores `n(n-1)/2` pairs).
+    fn n(&self) -> usize;
+
+    /// Number of stored pairs (`n(n-1)/2`).
+    fn n_pairs(&self) -> usize;
+
+    /// Lease the working set of `tile` and run `f(x, cols, winv)` on it,
+    /// where the entry of pair `{c, r}` lives at
+    /// `x[cols[c] + (r - c - 1)]` and `winv` mirrors that addressing.
+    /// Writes through `x` are durable once `with_tile` returns.
+    ///
+    /// # Safety
+    ///
+    /// The caller must own `tile` for the duration (the wave schedule
+    /// invariant): no other thread may concurrently lease a tile whose
+    /// footprint shares a *pair* with this one. Concurrent leases of
+    /// pair-disjoint tiles are always safe, even when they share storage
+    /// blocks.
+    unsafe fn with_tile(
+        &self,
+        tile: &Tile,
+        scratch: &mut TileScratch,
+        f: &mut dyn FnMut(&SharedMut<'_, f64>, &[usize], &[f64]),
+    );
+
+    /// Like [`TileStore::with_tile`] for callbacks that only **read**:
+    /// any writes through `x` are discarded rather than written back.
+    /// Residual scans use this so a disk store does not dirty (and
+    /// later re-write) every block a read-only pass visits. The default
+    /// forwards to [`TileStore::with_tile`], which is correct for
+    /// stores whose leases alias the backing directly.
+    ///
+    /// # Safety
+    /// Same contract as [`TileStore::with_tile`].
+    unsafe fn with_tile_read(
+        &self,
+        tile: &Tile,
+        scratch: &mut TileScratch,
+        f: &mut dyn FnMut(&SharedMut<'_, f64>, &[usize], &[f64]),
+    ) {
+        // SAFETY: forwarded contract.
+        unsafe { self.with_tile(tile, scratch, f) }
+    }
+
+    /// Hint that the caller will lease `tile` soon (the next tile in its
+    /// sweep order). Stores may warm their cache asynchronously; values
+    /// are never modified, so prefetching cannot change results.
+    fn prefetch(&self, _tile: &Tile) {}
+}
+
+/// Which [`TileStore`] backend a solve uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum StoreKind {
+    /// Resident packed array (the classic path; the default).
+    #[default]
+    Mem,
+    /// File-backed tile blocks with a bounded resident working set.
+    Disk,
+}
+
+impl StoreKind {
+    /// Parse a CLI name (`mem` / `disk`).
+    pub fn parse(s: &str) -> Option<StoreKind> {
+        match s {
+            "mem" | "memory" => Some(StoreKind::Mem),
+            "disk" | "file" => Some(StoreKind::Disk),
+            _ => None,
+        }
+    }
+
+    /// CLI name of the backend.
+    pub fn name(self) -> &'static str {
+        match self {
+            StoreKind::Mem => "mem",
+            StoreKind::Disk => "disk",
+        }
+    }
+}
+
+/// Storage configuration for a solve (`--store`, `--store-dir`,
+/// `--store-budget-mb` on the CLI).
+#[derive(Clone, Debug)]
+pub struct StoreCfg {
+    /// Backend selection.
+    pub kind: StoreKind,
+    /// Directory holding the store file (disk backend; created on
+    /// demand). The tile file itself is `<dir>/x.tiles`.
+    pub dir: PathBuf,
+    /// Resident block-cache budget in bytes (disk backend; the CLI flag
+    /// is in MiB). The true resident footprint adds one `O(n · b)`
+    /// gather arena per worker plus the `O(n)` address tables. Budgets
+    /// smaller than a single block still work — the block being copied
+    /// is exempt from eviction — they just churn harder.
+    pub budget_bytes: usize,
+}
+
+impl Default for StoreCfg {
+    fn default() -> Self {
+        StoreCfg { kind: StoreKind::Mem, dir: PathBuf::from("store"), budget_bytes: 64 << 20 }
+    }
+}
+
+impl StoreCfg {
+    /// The in-memory configuration (what every plain `solve` call uses).
+    pub fn mem() -> StoreCfg {
+        StoreCfg::default()
+    }
+
+    /// A disk configuration rooted at `dir` with the given cache budget
+    /// in bytes.
+    pub fn disk(dir: impl Into<PathBuf>, budget_bytes: usize) -> StoreCfg {
+        StoreCfg { kind: StoreKind::Disk, dir: dir.into(), budget_bytes }
+    }
+
+    /// Path of the tile file this configuration addresses.
+    pub fn x_path(&self) -> PathBuf {
+        self.dir.join("x.tiles")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_kind_parses() {
+        assert_eq!(StoreKind::parse("mem"), Some(StoreKind::Mem));
+        assert_eq!(StoreKind::parse("memory"), Some(StoreKind::Mem));
+        assert_eq!(StoreKind::parse("disk"), Some(StoreKind::Disk));
+        assert_eq!(StoreKind::parse("file"), Some(StoreKind::Disk));
+        assert_eq!(StoreKind::parse("tape"), None);
+        for k in [StoreKind::Mem, StoreKind::Disk] {
+            assert_eq!(StoreKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(StoreKind::default(), StoreKind::Mem);
+    }
+
+    #[test]
+    fn cfg_paths_and_budget() {
+        let cfg = StoreCfg::disk("/tmp/xyz", 2 << 20);
+        assert_eq!(cfg.kind, StoreKind::Disk);
+        assert_eq!(cfg.x_path(), PathBuf::from("/tmp/xyz/x.tiles"));
+        assert_eq!(cfg.budget_bytes, 2 << 20);
+        assert_eq!(StoreCfg::mem().kind, StoreKind::Mem);
+    }
+}

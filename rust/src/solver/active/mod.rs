@@ -45,17 +45,18 @@ use self::set::{decode_key, ActiveSet};
 use self::sweep::{discovery_sweep, SweepReport};
 use super::checkpoint::{CheckRecord, SolverState};
 use super::dykstra_parallel::run_pair_phase;
-use super::nearness::{NearnessOpts, NearnessSolution};
+use super::nearness::{NearnessOpts, NearnessSolution, XBacking};
 use super::projection::visit_triplet;
 use super::schedule::{Assignment, Schedule};
 use super::termination::{compute_residuals, compute_residuals_trusting_sweep};
 use super::{CcState, Residuals, Solution, SolveOpts, Strategy, SweepBackend, SweepPolicy};
 use crate::instance::metric_nearness::MetricNearnessInstance;
 use crate::instance::CcLpInstance;
+use crate::matrix::store::{MemStore, StoreCfg, TileScratch, TileStore};
 use crate::matrix::PackedSym;
 use crate::runtime::engine::XlaEngine;
 use crate::util::parallel::scoped_workers;
-use crate::util::shared::{PerWorker, SharedMut};
+use crate::util::shared::PerWorker;
 
 /// Unpacked parameters of [`Strategy::Active`].
 #[derive(Clone, Copy, Debug)]
@@ -97,12 +98,14 @@ fn load_sweep_engine(backend: SweepBackend) -> Option<XlaEngine> {
 
 /// One cheap pass over only the active set. Tile ownership is identical
 /// to the full metric phase, so concurrent visits stay conflict-free;
-/// within a tile, entries sit (and are visited) in cube order. Returns
-/// the number of triplets visited.
+/// within a tile, entries sit (and are visited) in cube order. Tiles
+/// whose bucket is empty are skipped without leasing their working set,
+/// so on a disk-backed [`TileStore`] a cheap pass only touches the
+/// blocks of tiles that still hold duals. Returns the number of
+/// triplets visited.
+#[allow(unused_unsafe)]
 pub(crate) fn active_pass(
-    x: &SharedMut<'_, f64>,
-    winv: &[f64],
-    col_starts: &[usize],
+    store: &dyn TileStore,
     schedule: &Schedule,
     set: &ActiveSet,
     p: usize,
@@ -111,27 +114,39 @@ pub(crate) fn active_pass(
     let counts = PerWorker::new(vec![0u64; p]);
     scoped_workers(p, |tid, barrier| {
         let mut visited = 0u64;
+        let mut scratch = TileScratch::default();
         for (wave_idx, wave) in schedule.waves().iter().enumerate() {
             let mut r = assignment.first_tile(tid, wave_idx, p);
             while r < wave.len() {
+                let tile = &wave[r];
                 let flat = set.flat_index(wave_idx, r);
                 // SAFETY: this worker owns tile `r` of the current wave,
                 // hence bucket `flat`, until the wave barrier.
                 let bucket = unsafe { set.bucket_mut(flat) };
-                for e in bucket.iter_mut() {
-                    let (i, j, k) = decode_key(e.key);
-                    let ci = col_starts[i];
-                    let pij = ci + (j - i - 1);
-                    let pik = ci + (k - i - 1);
-                    let pjk = col_starts[j] + (k - j - 1);
-                    // SAFETY: wave conflict-freeness — same contract as
-                    // the full hot loop.
-                    let th = unsafe { visit_triplet(x, winv, pij, pik, pjk, e.y) };
-                    e.y = th;
-                    if th == [0.0; 3] {
-                        e.zero_passes += 1;
-                    } else {
-                        e.zero_passes = 0;
+                if !bucket.is_empty() {
+                    // SAFETY: wave conflict-freeness gives exclusive
+                    // access to every pair reachable from the tile — the
+                    // lease contract of `with_tile`.
+                    unsafe {
+                        store.with_tile(tile, &mut scratch, &mut |x, col_starts, winv| {
+                            for e in bucket.iter_mut() {
+                                let (i, j, k) = decode_key(e.key);
+                                let ci = col_starts[i];
+                                let pij = ci + (j - i - 1);
+                                let pik = ci + (k - i - 1);
+                                let pjk = col_starts[j] + (k - j - 1);
+                                // SAFETY: same contract as the full hot
+                                // loop, forwarded through the lease.
+                                let th =
+                                    unsafe { visit_triplet(x, winv, pij, pik, pjk, e.y) };
+                                e.y = th;
+                                if th == [0.0; 3] {
+                                    e.zero_passes += 1;
+                                } else {
+                                    e.zero_passes = 0;
+                                }
+                            }
+                        });
                     }
                 }
                 visited += bucket.len() as u64;
@@ -226,12 +241,11 @@ pub fn solve_cc_checkpointed(
         let is_sweep =
             cadence.wants_sweep(pass) && !(skip_sweep_at_start && pass == start_pass);
         {
-            let x = SharedMut::new(state.x.as_mut_slice());
+            let store =
+                MemStore::new(state.x.as_mut_slice(), &state.col_starts, &state.winv);
             if is_sweep {
                 let report = discovery_sweep(
-                    &x,
-                    &state.winv,
-                    &state.col_starts,
+                    &store,
                     &schedule,
                     &active,
                     p,
@@ -244,15 +258,7 @@ pub fn solve_cc_checkpointed(
                 sweep_projected += report.triplets_projected;
                 last_sweep = Some(report);
             } else {
-                triplet_visits += active_pass(
-                    &x,
-                    &state.winv,
-                    &state.col_starts,
-                    &schedule,
-                    &active,
-                    p,
-                    opts.assignment,
-                );
+                triplet_visits += active_pass(&store, &schedule, &active, p, opts.assignment);
             }
         }
         if is_sweep {
@@ -373,10 +379,28 @@ pub fn resume_nearness(
 
 /// Full-control active-set nearness entry point (resume + checkpoint
 /// sink); [`super::nearness::solve_checkpointed`] dispatches here for
-/// [`Strategy::Active`].
+/// [`Strategy::Active`]. Runs on the in-memory store; use
+/// [`solve_nearness_stored`] to pick the backend.
 pub fn solve_nearness_checkpointed(
     inst: &MetricNearnessInstance,
     opts: &NearnessOpts,
+    resume_from: Option<&SolverState>,
+    on_checkpoint: &mut dyn FnMut(&SolverState),
+) -> anyhow::Result<NearnessSolution> {
+    solve_nearness_stored(inst, opts, &StoreCfg::mem(), resume_from, on_checkpoint)
+}
+
+/// The active-set nearness driver, generic over the `X` storage backend
+/// ([`StoreCfg`]): the in-memory configuration reproduces the classic
+/// driver exactly, the disk configuration streams `X` from a
+/// [`crate::matrix::store::DiskStore`] so the solve runs at `n` beyond
+/// RAM — bitwise identically (pinned by `tests/store_equivalence.rs`).
+/// With a disk store, checkpoints reference the store file (flushed and
+/// stamped at each capture) instead of re-serializing `x`.
+pub fn solve_nearness_stored(
+    inst: &MetricNearnessInstance,
+    opts: &NearnessOpts,
+    store_cfg: &StoreCfg,
     resume_from: Option<&SolverState>,
     on_checkpoint: &mut dyn FnMut(&SolverState),
 ) -> anyhow::Result<NearnessSolution> {
@@ -387,9 +411,12 @@ pub fn solve_nearness_checkpointed(
     let n = inst.n;
     let p = opts.threads.max(1);
     let schedule = Schedule::new(n, opts.tile);
-    let mut x: Vec<f64> = inst.d.as_slice().to_vec();
     let winv: Vec<f64> = inst.w.as_slice().iter().map(|&v| 1.0 / v).collect();
     let col_starts = inst.d.col_starts().to_vec();
+    if let Some(st) = resume_from {
+        st.validate_nearness(inst)?;
+    }
+    let mut backing = XBacking::init(inst, opts.tile, store_cfg, resume_from)?;
     let mut active = ActiveSet::new(&schedule);
     let mut triplet_visits = 0u64;
     let mut start_pass = 0usize;
@@ -397,8 +424,6 @@ pub fn solve_nearness_checkpointed(
     let mut skip_sweep_at_start = false;
     let mut history: Vec<CheckRecord> = Vec::new();
     if let Some(st) = resume_from {
-        st.validate_nearness(inst)?;
-        x.copy_from_slice(&st.x);
         active.seed(&schedule, st.active_entries());
         triplet_visits = st.triplet_visits;
         start_pass = st.pass as usize;
@@ -421,28 +446,26 @@ pub fn solve_nearness_checkpointed(
     for pass in start_pass..opts.max_passes {
         let is_sweep =
             cadence.wants_sweep(pass) && !(skip_sweep_at_start && pass == start_pass);
-        {
-            let xs = SharedMut::new(x.as_mut_slice());
-            if is_sweep {
-                let report = discovery_sweep(
-                    &xs,
-                    &winv,
-                    &col_starts,
+        if is_sweep {
+            let report = backing.with_store(&col_starts, &winv, |store| {
+                discovery_sweep(
+                    store,
                     &schedule,
                     &active,
                     p,
                     opts.assignment,
                     opts.sweep_backend,
                     engine.as_ref(),
-                );
-                triplet_visits += report.triplet_visits;
-                sweep_screened += report.triplet_visits;
-                sweep_projected += report.triplets_projected;
-                last_sweep = Some(report);
-            } else {
-                triplet_visits +=
-                    active_pass(&xs, &winv, &col_starts, &schedule, &active, p, opts.assignment);
-            }
+                )
+            });
+            triplet_visits += report.triplet_visits;
+            sweep_screened += report.triplet_visits;
+            sweep_projected += report.triplets_projected;
+            last_sweep = Some(report);
+        } else {
+            triplet_visits += backing.with_store(&col_starts, &winv, |store| {
+                active_pass(store, &schedule, &active, p, opts.assignment)
+            });
         }
         if is_sweep {
             cadence.note_sweep(last_sweep.expect("sweep pass recorded a report").max_violation);
@@ -468,7 +491,7 @@ pub fn solve_nearness_checkpointed(
                 rel_gap: 0.0,
             });
             if screened <= opts.tol_violation {
-                let v = super::nearness::violation(&x, &col_starts, n, p);
+                let v = backing.violation(&col_starts, n, p, &schedule);
                 if let Some(last) = history.last_mut() {
                     last.max_violation = v;
                 }
@@ -479,15 +502,15 @@ pub fn solve_nearness_checkpointed(
             }
         }
         if opts.checkpoint_every > 0 && (passes_done % opts.checkpoint_every == 0 || stop) {
-            on_checkpoint(&SolverState::capture_nearness_active(
+            on_checkpoint(&capture_nearness_active_backed(
                 inst,
-                &x,
+                &mut backing,
                 &mut active,
                 passes_done,
                 triplet_visits,
                 next_check,
                 &history,
-            ));
+            )?);
             last_saved = passes_done;
         }
         if stop {
@@ -495,21 +518,22 @@ pub fn solve_nearness_checkpointed(
         }
     }
     if opts.checkpoint_every > 0 && last_saved != passes_done {
-        on_checkpoint(&SolverState::capture_nearness_active(
+        on_checkpoint(&capture_nearness_active_backed(
             inst,
-            &x,
+            &mut backing,
             &mut active,
             passes_done,
             triplet_visits,
             next_check,
             &history,
-        ));
+        )?);
     }
 
     let max_violation = exact_at_break
-        .unwrap_or_else(|| super::nearness::violation(&x, &col_starts, n, p));
+        .unwrap_or_else(|| backing.violation(&col_starts, n, p, &schedule));
+    let x_final = backing.extract()?;
     let mut xm = PackedSym::zeros(n);
-    xm.as_mut_slice().copy_from_slice(&x);
+    xm.as_mut_slice().copy_from_slice(&x_final);
     Ok(NearnessSolution {
         objective: inst.objective(&xm),
         x: xm,
@@ -519,6 +543,44 @@ pub fn solve_nearness_checkpointed(
         active_triplets: active.len(),
         sweep_screened,
         sweep_projected,
+        store_stats: backing.store_stats(),
+    })
+}
+
+/// Capture an active-strategy nearness checkpoint against either
+/// backing: inline `x` for the memory store, a flush-and-stamp reference
+/// for the disk store.
+fn capture_nearness_active_backed(
+    inst: &MetricNearnessInstance,
+    backing: &mut XBacking,
+    active: &mut ActiveSet,
+    passes_done: usize,
+    triplet_visits: u64,
+    next_check: usize,
+    history: &[CheckRecord],
+) -> anyhow::Result<SolverState> {
+    Ok(match backing {
+        XBacking::Mem { x } => SolverState::capture_nearness_active(
+            inst,
+            x,
+            active,
+            passes_done,
+            triplet_visits,
+            next_check,
+            history,
+        ),
+        XBacking::Disk { store } => {
+            let x_fnv = store.flush_and_stamp(passes_done as u64)?;
+            SolverState::capture_nearness_active_external(
+                inst,
+                x_fnv,
+                active,
+                passes_done,
+                triplet_visits,
+                next_check,
+                history,
+            )
+        }
     })
 }
 

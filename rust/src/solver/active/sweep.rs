@@ -55,9 +55,10 @@
 //! throughput backend, not a tight-tolerance one).
 
 use super::set::{decode_key, key_run_prefix, run_prefix, triplet_key, ActiveSet, ActiveTriplet};
+use crate::matrix::store::{TileScratch, TileStore};
 use crate::runtime::engine::XlaEngine;
 use crate::solver::projection::visit_triplet;
-use crate::solver::schedule::{Assignment, Schedule, Tile};
+use crate::solver::schedule::{next_owned_tile, Assignment, Schedule, Tile};
 use crate::solver::tiling::{for_each_run, for_each_triplet};
 use crate::solver::SweepBackend;
 use crate::util::parallel::scoped_workers;
@@ -90,16 +91,20 @@ impl SweepReport {
 
 /// Run one discovery sweep over every triplet; rebuilds `set` in place.
 ///
-/// `x` must view the packed distance variables; the caller guarantees no
-/// other access to them for the duration (same contract as the full
-/// metric phase). `engine` is consulted only by
-/// [`SweepBackend::Engine`]; passing `None` there falls back to the
-/// (bitwise-equal) screened path.
+/// `store` holds the packed distance variables ([`TileStore`]); each
+/// tile's working set is leased for exactly the duration of its visits,
+/// so the sweep runs unchanged over the resident array and the
+/// disk-backed store alike (and prefetches the worker's next tile in
+/// sweep order). The caller guarantees no other access to the variables
+/// for the duration (same contract as the full metric phase). `engine`
+/// is consulted only by [`SweepBackend::Engine`]; passing `None` there
+/// falls back to the (bitwise-equal) screened path.
+// The lease callbacks carry their own `unsafe` blocks so they stay sound
+// whether or not the enclosing block's context reaches into the closure.
+#[allow(unused_unsafe)]
 #[allow(clippy::too_many_arguments)]
 pub fn discovery_sweep(
-    x: &SharedMut<'_, f64>,
-    winv: &[f64],
-    col_starts: &[usize],
+    store: &dyn TileStore,
     schedule: &Schedule,
     set: &ActiveSet,
     p: usize,
@@ -117,10 +122,15 @@ pub fn discovery_sweep(
         // k-span, which the schedule caps at b.
         let mut stripe = vec![0.0f64; b];
         let mut lanes = EngineLanes::default();
+        let mut scratch = TileScratch::default();
         for (wave_idx, wave) in schedule.waves().iter().enumerate() {
             let mut r = assignment.first_tile(tid, wave_idx, p);
             while r < wave.len() {
                 let tile = &wave[r];
+                if let Some(next) = next_owned_tile(schedule, assignment, tid, p, wave_idx, r)
+                {
+                    store.prefetch(next);
+                }
                 let span = tile.k_hi - tile.k_lo;
                 if stripe.len() < span {
                     stripe.resize(span, 0.0);
@@ -129,50 +139,21 @@ pub fn discovery_sweep(
                 // SAFETY: this worker owns tile `r` of the current wave,
                 // hence bucket `flat`, until the wave barrier. Wave
                 // conflict-freeness gives exclusive access to every
-                // variable reachable from the tile (all tile fns below).
+                // variable reachable from the tile (all tile fns below),
+                // which is exactly the lease contract of `with_tile`.
                 let bucket = unsafe { set.bucket_mut(flat) };
                 let old = std::mem::take(bucket);
-                local_projected += unsafe {
-                    match backend {
-                        SweepBackend::Scalar => sweep_tile_scalar(
-                            x, winv, col_starts, tile, b, &old, bucket, &mut local_max,
-                        ),
-                        SweepBackend::Screened => sweep_tile_screened(
-                            x,
-                            winv,
-                            col_starts,
-                            tile,
-                            b,
-                            &old,
-                            bucket,
-                            &mut stripe,
-                            &mut local_max,
-                        ),
-                        SweepBackend::Engine => {
-                            // The probe mutates only scratch lanes, so a
-                            // failure (or no engine) cleanly falls back
-                            // to the screened path before any visit.
-                            let probed = match engine {
-                                Some(eng) => engine_screen_flags(
-                                    eng, x, winv, col_starts, tile, b, &mut lanes,
-                                )
-                                .is_ok(),
-                                None => false,
-                            };
-                            if probed {
-                                sweep_tile_engine(
-                                    x,
-                                    winv,
-                                    col_starts,
-                                    tile,
-                                    b,
-                                    &lanes.flags,
-                                    &old,
-                                    bucket,
+                let mut tile_projected = 0u64;
+                unsafe {
+                    store.with_tile(tile, &mut scratch, &mut |x, col_starts, winv| {
+                        // SAFETY: forwarded from the lease contract.
+                        tile_projected = unsafe {
+                            match backend {
+                                SweepBackend::Scalar => sweep_tile_scalar(
+                                    x, winv, col_starts, tile, b, &old, bucket,
                                     &mut local_max,
-                                )
-                            } else {
-                                sweep_tile_screened(
+                                ),
+                                SweepBackend::Screened => sweep_tile_screened(
                                     x,
                                     winv,
                                     col_starts,
@@ -182,11 +163,50 @@ pub fn discovery_sweep(
                                     bucket,
                                     &mut stripe,
                                     &mut local_max,
-                                )
+                                ),
+                                SweepBackend::Engine => {
+                                    // The probe mutates only scratch
+                                    // lanes, so a failure (or no engine)
+                                    // cleanly falls back to the screened
+                                    // path before any visit.
+                                    let probed = match engine {
+                                        Some(eng) => engine_screen_flags(
+                                            eng, x, winv, col_starts, tile, b, &mut lanes,
+                                        )
+                                        .is_ok(),
+                                        None => false,
+                                    };
+                                    if probed {
+                                        sweep_tile_engine(
+                                            x,
+                                            winv,
+                                            col_starts,
+                                            tile,
+                                            b,
+                                            &lanes.flags,
+                                            &old,
+                                            bucket,
+                                            &mut local_max,
+                                        )
+                                    } else {
+                                        sweep_tile_screened(
+                                            x,
+                                            winv,
+                                            col_starts,
+                                            tile,
+                                            b,
+                                            &old,
+                                            bucket,
+                                            &mut stripe,
+                                            &mut local_max,
+                                        )
+                                    }
+                                }
                             }
-                        }
-                    }
-                };
+                        };
+                    });
+                }
+                local_projected += tile_projected;
                 r += p;
             }
             barrier.wait();
@@ -204,6 +224,56 @@ pub fn discovery_sweep(
         triplet_visits: schedule.total_triplets(),
         triplets_projected: projected.into_inner().into_iter().sum(),
     }
+}
+
+/// Exact max metric violation over all `C(n,3)` triplets, measured
+/// through tile leases — the confirming/final residual scan of the
+/// disk-backed drivers. The in-memory drivers keep their direct
+/// lexicographic scan (`nearness::violation`); both compute a plain
+/// max of the same residuals, so the values agree exactly.
+#[allow(unused_unsafe)]
+pub fn exact_violation(store: &dyn TileStore, schedule: &Schedule, p: usize) -> f64 {
+    let b = schedule.tile_size();
+    let maxima = PerWorker::new(vec![f64::NEG_INFINITY; p]);
+    scoped_workers(p, |tid, barrier| {
+        let mut local_max = f64::NEG_INFINITY;
+        let mut scratch = TileScratch::default();
+        for (wave_idx, wave) in schedule.waves().iter().enumerate() {
+            let mut r = Assignment::RoundRobin.first_tile(tid, wave_idx, p);
+            while r < wave.len() {
+                let tile = &wave[r];
+                // SAFETY: tile ownership per wave. The read-only lease
+                // keeps a disk store clean — a residual scan must not
+                // dirty every block it visits.
+                unsafe {
+                    store.with_tile_read(tile, &mut scratch, &mut |x, col_starts, _winv| {
+                        for_each_run(tile, b, |i, j, k0, k1| {
+                            let ci = col_starts[i];
+                            let pij = ci + (j - i - 1);
+                            let pik0 = ci + (k0 - i - 1);
+                            let pjk0 = col_starts[j] + (k0 - j - 1);
+                            for t in 0..k1 - k0 {
+                                // SAFETY: lease addressing is in bounds.
+                                let (x0, x1, x2) = unsafe {
+                                    (x.get(pij), x.get(pik0 + t), x.get(pjk0 + t))
+                                };
+                                let v =
+                                    (x0 - x1 - x2).max(x1 - x0 - x2).max(x2 - x0 - x1);
+                                if v > local_max {
+                                    local_max = v;
+                                }
+                            }
+                        });
+                    });
+                }
+                r += p;
+            }
+            barrier.wait();
+        }
+        // SAFETY: slot `tid` belongs to this worker.
+        unsafe { *maxima.get_mut(tid) = local_max };
+    });
+    maxima.into_inner().into_iter().fold(f64::NEG_INFINITY, f64::max).max(0.0)
 }
 
 /// The original callback sweep over one tile: visit every triplet.
@@ -582,6 +652,7 @@ unsafe fn sweep_tile_engine(
 mod tests {
     use super::*;
     use crate::instance::CcLpInstance;
+    use crate::matrix::store::MemStore;
     use crate::solver::duals::DualStore;
     use crate::solver::dykstra_parallel::run_metric_phase;
     use crate::solver::CcState;
@@ -596,18 +667,8 @@ mod tests {
         p: usize,
         backend: SweepBackend,
     ) -> SweepReport {
-        let xs = SharedMut::new(st.x.as_mut_slice());
-        discovery_sweep(
-            &xs,
-            &st.winv,
-            &st.col_starts,
-            schedule,
-            set,
-            p,
-            Assignment::RoundRobin,
-            backend,
-            None,
-        )
+        let store = MemStore::new(st.x.as_mut_slice(), &st.col_starts, &st.winv);
+        discovery_sweep(&store, schedule, set, p, Assignment::RoundRobin, backend, None)
     }
 
     /// A sweep is bitwise a full metric pass: same x afterwards, and the
@@ -739,6 +800,24 @@ mod tests {
                 assert!(e.y.iter().any(|&v| v != 0.0));
                 assert_eq!(e.zero_passes, 0);
             }
+        }
+    }
+
+    #[test]
+    fn exact_violation_matches_the_direct_scan() {
+        // The store-addressed residual scan must agree exactly with the
+        // lexicographic scan the in-memory drivers use (plain max of the
+        // same residuals, order-independent).
+        let inst = CcLpInstance::random(15, 0.5, 0.7, 1.8, 23);
+        let mut st = CcState::new(&inst, 5.0, true);
+        for (v, d) in st.x.iter_mut().zip(inst.d.as_slice()) {
+            *v = 0.9 * d;
+        }
+        let schedule = Schedule::new(15, 4);
+        for p in [1usize, 3] {
+            let direct = crate::solver::nearness::violation(&st.x, &st.col_starts, 15, p);
+            let store = MemStore::new(st.x.as_mut_slice(), &st.col_starts, &st.winv);
+            assert_eq!(exact_violation(&store, &schedule, p), direct, "p={p}");
         }
     }
 

@@ -5,9 +5,10 @@
 //!
 //! ```text
 //! 0   magic     b"MPROJCKP"
-//! 8   version   u32   (currently 1)
+//! 8   version   u32   (currently 2; version-1 bytes are still read)
 //! 12  problem   u8    (0 = CC-LP, 1 = metric nearness)
-//! 13  flags     u8    (bit 0 = skip_initial_sweep; other bits reserved 0)
+//! 13  flags     u8    (bit 0 = skip_initial_sweep; bit 1 = x_external;
+//!                      other bits reserved 0)
 //! 14  reserved  u16   (0)
 //! 16  n         u64   number of objects
 //! 24  gamma     f64   CC regularization (0 for nearness)
@@ -15,7 +16,9 @@
 //! 40  visits    u64   cumulative metric-triplet visits
 //! 48  next_check u64  active-driver convergence cadence state
 //! 56  d_hash    u64   FNV-1a over the instance targets' f64 bit patterns
-//! 64  sections  ...   (see below)
+//! 64  x_fnv     u64   tile-store fingerprint (version >= 2; 0
+//!                     unless x_external — see below)
+//! 72  sections  ...   (see below)
 //! end checksum  u64   FNV-1a over every preceding byte
 //! ```
 //!
@@ -28,10 +31,22 @@
 //! `history` (`u64` pass + `f64` max violation + `f64` relative gap per
 //! record).
 //!
+//! **External x** (version 2, nearness only): when flags bit 1 is set
+//! the `x` section is empty and the packed distances live in a
+//! [`crate::matrix::store::DiskStore`] tile file instead; `x_fnv` holds
+//! the store fingerprint stamped by
+//! [`crate::matrix::store::DiskStore::flush_and_stamp`] at the moment
+//! this state was captured, and the store header carries the matching
+//! `pass`. A resume re-derives the fingerprint from the store file and
+//! refuses to continue from a store that drifted past (or behind) the
+//! checkpoint. Version-1 bytes decode with `x_external = false` and
+//! `x_fnv = 0`.
+//!
 //! [`decode`] validates everything it can: magic, version, checksum,
 //! section lengths against the header's `n`, key ordering and range,
-//! finiteness and sign of every float. Truncated, corrupted, or
-//! wrong-version bytes produce a [`CheckpointError`], never a panic.
+//! finiteness and sign of every float, and the external-x coupling
+//! rules. Truncated, corrupted, or wrong-version bytes produce a
+//! [`CheckpointError`], never a panic.
 //!
 //! [`SolverState`]: super::SolverState
 
@@ -42,8 +57,9 @@ use std::fmt;
 /// File magic: identifies a metric-proj checkpoint.
 pub const MAGIC: [u8; 8] = *b"MPROJCKP";
 
-/// Current format version.
-pub const VERSION: u32 = 1;
+/// Current format version (2 added the `x_fnv` header field and the
+/// external-x flag; version-1 bytes are still decoded).
+pub const VERSION: u32 = 2;
 
 /// Why a checkpoint could not be written, read, or applied.
 #[derive(Debug)]
@@ -91,41 +107,14 @@ impl From<std::io::Error> for CheckpointError {
     }
 }
 
-/// Incremental FNV-1a hasher — the single hash core behind both the
-/// checkpoint checksum and the instance fingerprint
-/// ([`super::hash_f64s`]).
-pub(super) struct Fnv1a(u64);
-
-impl Fnv1a {
-    pub(super) fn new() -> Fnv1a {
-        Fnv1a(0xcbf29ce484222325)
-    }
-
-    pub(super) fn update(&mut self, bytes: &[u8]) {
-        for &b in bytes {
-            self.0 ^= b as u64;
-            self.0 = self.0.wrapping_mul(0x100000001b3);
-        }
-    }
-
-    pub(super) fn finish(&self) -> u64 {
-        self.0
-    }
-}
-
-impl Default for Fnv1a {
-    fn default() -> Self {
-        Fnv1a::new()
-    }
-}
+/// The hash core behind both the checkpoint checksum and the instance
+/// fingerprint ([`super::hash_f64s`]) — shared with the tile-store file
+/// format ([`crate::matrix::store`]).
+pub(super) use crate::util::hash::Fnv1a;
 
 /// FNV-1a over a byte slice — the checkpoint checksum (not cryptographic;
 /// guards against truncation and accidental corruption).
-pub fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h = Fnv1a::new();
-    h.update(bytes);
-    h.finish()
-}
+pub use crate::util::hash::fnv1a64;
 
 fn corrupt(msg: impl Into<String>) -> CheckpointError {
     CheckpointError::Corrupt(msg.into())
@@ -168,7 +157,7 @@ pub(super) fn encode(s: &SolverState) -> Vec<u8> {
         Problem::CcLp => 0,
         Problem::Nearness => 1,
     });
-    e.u8(u8::from(s.skip_initial_sweep));
+    e.u8(u8::from(s.skip_initial_sweep) | (u8::from(s.x_external) << 1));
     e.u16(0);
     e.u64(s.n as u64);
     e.f64(s.gamma);
@@ -176,6 +165,7 @@ pub(super) fn encode(s: &SolverState) -> Vec<u8> {
     e.u64(s.triplet_visits);
     e.u64(s.next_check);
     e.u64(s.d_hash);
+    e.u64(s.x_fnv);
     e.f64_vec(&s.x);
     e.f64_vec(&s.f);
     e.f64_vec(&s.y_upper);
@@ -279,7 +269,7 @@ pub(super) fn decode(buf: &[u8]) -> Result<SolverState, CheckpointError> {
         return Err(CheckpointError::BadMagic);
     }
     let version = u32::from_le_bytes(buf[8..12].try_into().unwrap());
-    if version != VERSION {
+    if version != 1 && version != VERSION {
         return Err(CheckpointError::UnsupportedVersion(version));
     }
     if buf.len() < 12 + 8 {
@@ -298,10 +288,12 @@ pub(super) fn decode(buf: &[u8]) -> Result<SolverState, CheckpointError> {
         other => return Err(corrupt(format!("unknown problem tag {other}"))),
     };
     let flags = d.u8()?;
-    if flags & !1 != 0 {
+    let known_flags: u8 = if version >= 2 { 3 } else { 1 };
+    if flags & !known_flags != 0 {
         return Err(corrupt(format!("unknown flags {flags:#x}")));
     }
     let skip_initial_sweep = flags & 1 != 0;
+    let x_external = flags & 2 != 0;
     if d.u16()? != 0 {
         return Err(corrupt("nonzero reserved field"));
     }
@@ -315,6 +307,7 @@ pub(super) fn decode(buf: &[u8]) -> Result<SolverState, CheckpointError> {
     let triplet_visits = d.u64()?;
     let next_check = d.u64()?;
     let d_hash = d.u64()?;
+    let x_fnv = if version >= 2 { d.u64()? } else { 0 };
     let x = d.f64_vec()?;
     let f = d.f64_vec()?;
     let y_upper = d.f64_vec()?;
@@ -349,8 +342,20 @@ pub(super) fn decode(buf: &[u8]) -> Result<SolverState, CheckpointError> {
 
     // --- semantic validation ------------------------------------------------
     let m = n * n.saturating_sub(1) / 2;
-    if x.len() != m {
-        return Err(corrupt(format!("x has {} entries, expected {m}", x.len())));
+    if x_external {
+        if problem != Problem::Nearness {
+            return Err(corrupt("external x is only defined for nearness states"));
+        }
+        if !x.is_empty() {
+            return Err(corrupt("external-x state carries an inline x section"));
+        }
+    } else {
+        if x_fnv != 0 {
+            return Err(corrupt("x fingerprint set without the external-x flag"));
+        }
+        if x.len() != m {
+            return Err(corrupt(format!("x has {} entries, expected {m}", x.len())));
+        }
     }
     if w.len() != m {
         return Err(corrupt(format!("w has {} entries, expected {m}", w.len())));
@@ -423,6 +428,8 @@ pub(super) fn decode(buf: &[u8]) -> Result<SolverState, CheckpointError> {
         triplet_visits,
         next_check,
         skip_initial_sweep,
+        x_external,
+        x_fnv,
         x,
         f,
         y_upper,
@@ -449,6 +456,8 @@ mod tests {
             triplet_visits: 12,
             next_check: 5,
             skip_initial_sweep: true,
+            x_external: false,
+            x_fnv: 0,
             x: vec![0.5; 6],
             f: vec![],
             y_upper: vec![],
@@ -489,6 +498,49 @@ mod tests {
             bad[pos] ^= 0x40;
             assert!(decode(&bad).is_err(), "accepted a flip at byte {pos}");
         }
+    }
+
+    #[test]
+    fn external_x_state_roundtrips() {
+        let mut s = tiny_state();
+        s.x_external = true;
+        s.x_fnv = 0x1234_5678_9ABC_DEF0;
+        s.x = Vec::new();
+        let back = decode(&encode(&s)).unwrap();
+        assert_eq!(s, back);
+        assert!(back.x_external);
+        assert_eq!(back.x_fnv, 0x1234_5678_9ABC_DEF0);
+    }
+
+    #[test]
+    fn external_x_coupling_rules_enforced() {
+        // Inline x together with the external flag must be rejected.
+        let mut s = tiny_state();
+        s.x_external = true;
+        s.x_fnv = 1;
+        assert!(decode(&encode(&s)).is_err(), "external flag with inline x accepted");
+        // A fingerprint without the flag must be rejected.
+        let mut s = tiny_state();
+        s.x_fnv = 1;
+        assert!(decode(&encode(&s)).is_err(), "fingerprint without external flag accepted");
+    }
+
+    #[test]
+    fn version1_bytes_still_decode() {
+        // Synthesize version-1 bytes from the v2 encoder: drop the x_fnv
+        // header field, rewrite the version, restamp the checksum.
+        let s = tiny_state();
+        let v2 = encode(&s);
+        let mut v1 = Vec::with_capacity(v2.len() - 8);
+        v1.extend_from_slice(&v2[..64]);
+        v1.extend_from_slice(&v2[72..v2.len() - 8]);
+        v1[8..12].copy_from_slice(&1u32.to_le_bytes());
+        let sum = fnv1a64(&v1);
+        v1.extend_from_slice(&sum.to_le_bytes());
+        let back = decode(&v1).unwrap();
+        assert_eq!(back, s, "a version-1 checkpoint must restore identically");
+        assert!(!back.x_external);
+        assert_eq!(back.x_fnv, 0);
     }
 
     #[test]

@@ -124,7 +124,16 @@ pub struct SolverState {
     /// driver treats its first pass as a cheap pass instead of a
     /// discovery sweep. Ignored by the full-strategy drivers.
     pub skip_initial_sweep: bool,
-    /// Packed distance variables.
+    /// True when the packed distances live in an external
+    /// [`crate::matrix::store::DiskStore`] tile file instead of the
+    /// inline `x` section (nearness only). The store's header carries
+    /// the matching `pass` and `x_fnv` stamp.
+    pub x_external: bool,
+    /// Tile-store fingerprint at capture time (0 unless
+    /// `x_external`); a resume recomputes the store's fingerprint and
+    /// refuses a store that no longer matches.
+    pub x_fnv: u64,
+    /// Packed distance variables (empty when `x_external`).
     pub x: Vec<f64>,
     /// Packed slacks (CC-LP only; empty for nearness).
     pub f: Vec<f64>,
@@ -212,6 +221,8 @@ impl SolverState {
             triplet_visits,
             next_check: 0,
             skip_initial_sweep: false,
+            x_external: false,
+            x_fnv: 0,
             x: state.x.clone(),
             f: state.f.clone(),
             y_upper: state.y_upper.clone(),
@@ -243,6 +254,8 @@ impl SolverState {
             triplet_visits,
             next_check: next_check as u64,
             skip_initial_sweep: false,
+            x_external: false,
+            x_fnv: 0,
             x: state.x.clone(),
             f: state.f.clone(),
             y_upper: state.y_upper.clone(),
@@ -273,6 +286,8 @@ impl SolverState {
             triplet_visits,
             next_check: 0,
             skip_initial_sweep: false,
+            x_external: false,
+            x_fnv: 0,
             x: x.to_vec(),
             f: Vec::new(),
             y_upper: Vec::new(),
@@ -305,6 +320,8 @@ impl SolverState {
             triplet_visits,
             next_check: next_check as u64,
             skip_initial_sweep: false,
+            x_external: false,
+            x_fnv: 0,
             x: x.to_vec(),
             f: Vec::new(),
             y_upper: Vec::new(),
@@ -316,6 +333,58 @@ impl SolverState {
             active: members,
             history: history.to_vec(),
         }
+    }
+
+    /// Snapshot a full-strategy nearness solve whose `x` lives in an
+    /// external tile store. `x_fnv` must be the fingerprint returned by
+    /// [`crate::matrix::store::DiskStore::flush_and_stamp`] for this
+    /// exact pass, so the checkpoint and the store file form a
+    /// consistent pair.
+    pub(crate) fn capture_nearness_full_external(
+        inst: &MetricNearnessInstance,
+        x_fnv: u64,
+        metric_duals: Vec<(u64, f64)>,
+        pass: usize,
+        triplet_visits: u64,
+        history: &[CheckRecord],
+    ) -> SolverState {
+        let mut st = SolverState::capture_nearness_full(
+            inst,
+            &[],
+            metric_duals,
+            pass,
+            triplet_visits,
+            history,
+        );
+        st.x_external = true;
+        st.x_fnv = x_fnv;
+        st
+    }
+
+    /// Snapshot an active-strategy nearness solve whose `x` lives in an
+    /// external tile store (see
+    /// [`SolverState::capture_nearness_full_external`]).
+    pub(crate) fn capture_nearness_active_external(
+        inst: &MetricNearnessInstance,
+        x_fnv: u64,
+        active: &mut ActiveSet,
+        pass: usize,
+        triplet_visits: u64,
+        next_check: usize,
+        history: &[CheckRecord],
+    ) -> SolverState {
+        let mut st = SolverState::capture_nearness_active(
+            inst,
+            &[],
+            active,
+            pass,
+            triplet_visits,
+            next_check,
+            history,
+        );
+        st.x_external = true;
+        st.x_fnv = x_fnv;
+        st
     }
 
     // --- resume validation and restoration ----------------------------------
@@ -573,6 +642,8 @@ mod tests {
             triplet_visits: 0,
             next_check: 0,
             skip_initial_sweep: false,
+            x_external: false,
+            x_fnv: 0,
             x: vec![0.0; 28],
             f: vec![],
             y_upper: vec![],
@@ -602,6 +673,8 @@ mod tests {
             triplet_visits: 0,
             next_check: 0,
             skip_initial_sweep: false,
+            x_external: false,
+            x_fnv: 0,
             x: vec![0.0; 28],
             f: vec![],
             y_upper: vec![],

@@ -135,6 +135,8 @@ pub fn warm_start_cc(
         triplet_visits: 0,
         next_check: 0,
         skip_initial_sweep: true,
+        x_external: false,
+        x_fnv: 0,
         x,
         f,
         y_upper,
@@ -191,6 +193,8 @@ pub fn warm_start_nearness(
         triplet_visits: 0,
         next_check: 0,
         skip_initial_sweep: true,
+        x_external: false,
+        x_fnv: 0,
         x,
         f: Vec::new(),
         y_upper: Vec::new(),

@@ -17,10 +17,11 @@
 use super::checkpoint::{self, CheckRecord, SolverState};
 use super::duals::DualStore;
 use super::projection::{visit_box_upper, visit_pair_lower, visit_pair_upper};
-use super::schedule::{Assignment, Schedule};
+use super::schedule::{next_owned_tile, Assignment, Schedule};
 use super::termination::compute_residuals;
 use super::{CcState, Residuals, Solution, SolveOpts};
 use crate::instance::CcLpInstance;
+use crate::matrix::store::{MemStore, TileScratch, TileStore};
 use crate::util::parallel::{chunk_range, scoped_workers};
 use crate::util::shared::{PerWorker, SharedMut};
 
@@ -186,7 +187,7 @@ fn solve_inner(
     })
 }
 
-/// One wave-parallel sweep over all metric constraints.
+/// One wave-parallel sweep over all metric constraints (resident `x`).
 pub(crate) fn run_metric_phase(
     state: &mut CcState,
     schedule: &Schedule,
@@ -194,24 +195,49 @@ pub(crate) fn run_metric_phase(
     p: usize,
     assignment: Assignment,
 ) {
+    let store = MemStore::new(state.x.as_mut_slice(), &state.col_starts, &state.winv);
+    run_metric_phase_store(&store, schedule, stores, p, assignment);
+}
+
+/// One wave-parallel sweep over all metric constraints, leasing each
+/// tile's working set from a [`TileStore`] — the same pass for the
+/// resident array (free pass-through leases) and the disk-backed store
+/// (bounded working set, next-tile prefetch).
+#[allow(unused_unsafe)]
+pub(crate) fn run_metric_phase_store(
+    store: &dyn TileStore,
+    schedule: &Schedule,
+    stores: &PerWorker<DualStore>,
+    p: usize,
+    assignment: Assignment,
+) {
     let b = schedule.tile_size();
-    let x = SharedMut::new(state.x.as_mut_slice());
-    let winv = state.winv.as_slice();
-    let col_starts = state.col_starts.as_slice();
     scoped_workers(p, |tid, barrier| {
         // SAFETY: slot `tid` is touched by this worker only.
-        let store = unsafe { stores.get_mut(tid) };
-        store.begin_pass();
+        let duals = unsafe { stores.get_mut(tid) };
+        duals.begin_pass();
+        let mut scratch = TileScratch::default();
         for (wave_idx, wave) in schedule.waves().iter().enumerate() {
             // Fig 3: the r-th tile of the wave goes to worker r mod p
             // (optionally rotated per wave for better load balance).
             let mut r = assignment.first_tile(tid, wave_idx, p);
             while r < wave.len() {
+                let tile = &wave[r];
+                if let Some(next) = next_owned_tile(schedule, assignment, tid, p, wave_idx, r)
+                {
+                    store.prefetch(next);
+                }
                 // SAFETY: wave tiles are conflict-free (schedule invariant,
-                // tested exhaustively) -> this worker's writes are disjoint.
+                // tested exhaustively) -> this worker's writes are disjoint,
+                // which is the lease contract of `with_tile`.
                 unsafe {
-                    super::hot_loop::process_tile(&x, winv, col_starts, &wave[r], b, store)
-                };
+                    store.with_tile(tile, &mut scratch, &mut |x, col_starts, winv| {
+                        // SAFETY: forwarded from the lease contract.
+                        unsafe {
+                            super::hot_loop::process_tile(x, winv, col_starts, tile, b, duals)
+                        };
+                    });
+                }
                 r += p;
             }
             // Wave boundary: all workers must finish before the next wave

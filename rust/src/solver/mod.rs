@@ -14,6 +14,12 @@
 //! ([`projection`]); they differ only in constraint ordering, visit
 //! sparsity, and parallelism, exactly as in the paper (§III-A: "this
 //! amounts simply to a re-ordering of constraints").
+//!
+//! The metric phases lease each tile's working set from a
+//! [`crate::matrix::store::TileStore`] rather than addressing a flat
+//! array, so the same passes run over the resident packed matrix or an
+//! out-of-core disk store (`--store disk`) — bitwise identically. See
+//! `docs/ARCHITECTURE.md` for the full data-flow picture.
 
 pub mod active;
 pub mod checkpoint;

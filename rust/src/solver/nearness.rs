@@ -10,21 +10,33 @@
 
 use super::checkpoint::{self, CheckRecord, SolverState};
 use super::duals::DualStore;
+use super::dykstra_parallel::run_metric_phase_store;
 use super::schedule::{Assignment, Schedule};
 use super::{Strategy, SweepBackend, SweepPolicy};
 use crate::instance::metric_nearness::MetricNearnessInstance;
+use crate::matrix::store::{DiskStore, MemStore, StoreCfg, StoreKind, TileStore};
 use crate::matrix::PackedSym;
-use crate::util::parallel::{par_reduce_max, scoped_workers};
+use crate::util::parallel::par_reduce_max;
 use crate::util::shared::{PerWorker, SharedMut};
+use anyhow::bail;
 
 /// Options for a nearness solve (subset of the CC-LP options).
 #[derive(Clone, Copy, Debug)]
 pub struct NearnessOpts {
+    /// Maximum passes through the metric constraints.
     pub max_passes: usize,
+    /// Stop early once the max triangle violation falls below this
+    /// (checked every `check_every` passes).
     pub tol_violation: f64,
+    /// Check convergence every this many passes (0 = never; run the
+    /// fixed `max_passes`).
     pub check_every: usize,
+    /// Worker threads (1 = serial execution of the parallel schedule;
+    /// results are bitwise independent of this).
     pub threads: usize,
+    /// Tile size `b` of the wave schedule.
     pub tile: usize,
+    /// Tile-to-worker assignment policy within a wave.
     pub assignment: Assignment,
     /// Metric-constraint visiting strategy (see [`Strategy`]); the active
     /// variant runs in [`super::active::solve_nearness`].
@@ -76,6 +88,10 @@ pub struct NearnessSolution {
     /// Sweep triplets that actually needed a projection — see
     /// [`super::Residuals::sweep_projected`].
     pub sweep_projected: u64,
+    /// Tile-store cache counters when the solve ran on a disk store
+    /// (`None` for the resident path) — loads, evictions, write-backs,
+    /// and the peak resident cache bytes.
+    pub store_stats: Option<crate::matrix::store::StoreStats>,
 }
 
 /// Solve with the parallel wave schedule (threads = 1 for serial order use
@@ -100,17 +116,37 @@ pub fn resume(
 /// Full-control entry point: optionally resume from a saved state and
 /// receive a [`SolverState`] through `on_checkpoint` every
 /// [`NearnessOpts::checkpoint_every`] passes (plus one for the final
-/// state). Dispatches on [`NearnessOpts::strategy`].
+/// state). Dispatches on [`NearnessOpts::strategy`]. Runs on the
+/// in-memory store; use [`solve_stored`] to pick the backend.
 pub fn solve_checkpointed(
     inst: &MetricNearnessInstance,
     opts: &NearnessOpts,
     resume_from: Option<&SolverState>,
     on_checkpoint: &mut dyn FnMut(&SolverState),
 ) -> anyhow::Result<NearnessSolution> {
+    solve_stored(inst, opts, &StoreCfg::mem(), resume_from, on_checkpoint)
+}
+
+/// [`solve_checkpointed`] with an explicit `X` storage backend
+/// ([`StoreCfg`]): the memory configuration is the classic resident
+/// solve; the disk configuration streams `X` through a bounded
+/// [`DiskStore`] working set so the solve runs at `n` beyond RAM,
+/// bitwise identically (pinned by `tests/store_equivalence.rs`). With a
+/// disk store, checkpoints reference the flushed-and-stamped store file
+/// instead of re-serializing `x`. Dispatches on
+/// [`NearnessOpts::strategy`].
+pub fn solve_stored(
+    inst: &MetricNearnessInstance,
+    opts: &NearnessOpts,
+    store_cfg: &StoreCfg,
+    resume_from: Option<&SolverState>,
+    on_checkpoint: &mut dyn FnMut(&SolverState),
+) -> anyhow::Result<NearnessSolution> {
     if opts.strategy.is_active() {
-        return super::active::solve_nearness_checkpointed(
+        return super::active::solve_nearness_stored(
             inst,
             opts,
+            store_cfg,
             resume_from,
             on_checkpoint,
         );
@@ -118,18 +154,17 @@ pub fn solve_checkpointed(
     let n = inst.n;
     let p = opts.threads.max(1);
     let schedule = Schedule::new(n, opts.tile);
-    let mut x: Vec<f64> = inst.d.as_slice().to_vec();
     let winv: Vec<f64> = inst.w.as_slice().iter().map(|&v| 1.0 / v).collect();
     let col_starts = inst.d.col_starts().to_vec();
     let mut stores = PerWorker::new((0..p).map(|_| DualStore::new()).collect());
     if let Some(st) = resume_from {
         st.validate_nearness(inst)?;
-        x.copy_from_slice(&st.x);
         let per_worker = st.worker_duals(&schedule, opts.assignment, p);
         for (store, entries) in stores.iter_mut().zip(per_worker) {
             store.restore(entries);
         }
     }
+    let mut backing = XBacking::init(inst, opts.tile, store_cfg, resume_from)?;
     let start_pass = resume_from.map_or(0, |st| st.pass as usize);
     let mut history: Vec<CheckRecord> =
         resume_from.map(|st| st.history.clone()).unwrap_or_default();
@@ -144,34 +179,14 @@ pub fn solve_checkpointed(
     let mut measured_at = usize::MAX;
     let mut last_saved = usize::MAX;
     for pass in start_pass..opts.max_passes {
-        {
-            let xs = SharedMut::new(x.as_mut_slice());
-            let winv = winv.as_slice();
-            let col_starts = col_starts.as_slice();
-            scoped_workers(p, |tid, barrier| {
-                // SAFETY: slot tid used by this worker only.
-                let store = unsafe { stores.get_mut(tid) };
-                store.begin_pass();
-                for (wave_idx, wave) in schedule.waves().iter().enumerate() {
-                    let mut r = opts.assignment.first_tile(tid, wave_idx, p);
-                    while r < wave.len() {
-                        // SAFETY: wave conflict-freeness.
-                        unsafe {
-                            super::hot_loop::process_tile(
-                                &xs, winv, col_starts, &wave[r], opts.tile, store,
-                            )
-                        };
-                        r += p;
-                    }
-                    barrier.wait();
-                }
-            });
-        }
+        backing.with_store(&col_starts, &winv, |store| {
+            run_metric_phase_store(store, &schedule, &stores, p, opts.assignment)
+        });
         passes_done = pass + 1;
         triplet_visits += triplets_per_pass;
         let mut stop = false;
         if opts.check_every > 0 && passes_done % opts.check_every == 0 {
-            max_violation = violation(&x, &col_starts, n, p);
+            max_violation = backing.violation(&col_starts, n, p, &schedule);
             measured_at = passes_done;
             history.push(CheckRecord {
                 pass: passes_done as u64,
@@ -183,14 +198,14 @@ pub fn solve_checkpointed(
             }
         }
         if opts.checkpoint_every > 0 && (passes_done % opts.checkpoint_every == 0 || stop) {
-            on_checkpoint(&SolverState::capture_nearness_full(
+            on_checkpoint(&capture_nearness_full_backed(
                 inst,
-                &x,
-                checkpoint::collect_duals(&mut stores),
+                &mut backing,
+                &mut stores,
                 passes_done,
                 triplet_visits,
                 &history,
-            ));
+            )?);
             last_saved = passes_done;
         }
         if stop {
@@ -198,22 +213,23 @@ pub fn solve_checkpointed(
         }
     }
     if opts.checkpoint_every > 0 && last_saved != passes_done {
-        on_checkpoint(&SolverState::capture_nearness_full(
+        on_checkpoint(&capture_nearness_full_backed(
             inst,
-            &x,
-            checkpoint::collect_duals(&mut stores),
+            &mut backing,
+            &mut stores,
             passes_done,
             triplet_visits,
             &history,
-        ));
+        )?);
     }
     // Re-measure unless the last checkpoint already measured the final
     // iterate — the reported violation always describes the returned x.
     if measured_at != passes_done {
-        max_violation = violation(&x, &col_starts, n, p);
+        max_violation = backing.violation(&col_starts, n, p, &schedule);
     }
+    let x_final = backing.extract()?;
     let mut xm = PackedSym::zeros(n);
-    xm.as_mut_slice().copy_from_slice(&x);
+    xm.as_mut_slice().copy_from_slice(&x_final);
     Ok(NearnessSolution {
         objective: inst.objective(&xm),
         x: xm,
@@ -223,7 +239,223 @@ pub fn solve_checkpointed(
         active_triplets: triplets_per_pass as usize,
         sweep_screened: 0,
         sweep_projected: 0,
+        store_stats: backing.store_stats(),
     })
+}
+
+/// Capture a full-strategy nearness checkpoint against either backing:
+/// inline `x` for the memory store, a flush-and-stamp reference for the
+/// disk store.
+fn capture_nearness_full_backed(
+    inst: &MetricNearnessInstance,
+    backing: &mut XBacking,
+    stores: &mut PerWorker<DualStore>,
+    passes_done: usize,
+    triplet_visits: u64,
+    history: &[CheckRecord],
+) -> anyhow::Result<SolverState> {
+    let duals = checkpoint::collect_duals(stores);
+    Ok(match backing {
+        XBacking::Mem { x } => SolverState::capture_nearness_full(
+            inst,
+            x,
+            duals,
+            passes_done,
+            triplet_visits,
+            history,
+        ),
+        XBacking::Disk { store } => {
+            let x_fnv = store.flush_and_stamp(passes_done as u64)?;
+            SolverState::capture_nearness_full_external(
+                inst,
+                x_fnv,
+                duals,
+                passes_done,
+                triplet_visits,
+                history,
+            )
+        }
+    })
+}
+
+/// Creating a fresh store must never clobber an existing file: an
+/// `x.tiles` on disk may be the only copy of an earlier run's iterate
+/// (external-x checkpoints reference it rather than inlining `x`).
+fn refuse_store_overwrite(path: &std::path::Path) -> anyhow::Result<()> {
+    if path.exists() {
+        bail!(
+            "refusing to overwrite the existing tile store {}: it may back an earlier \
+             run's checkpoint. Resume it (--resume <ckpt>), point --store-dir somewhere \
+             fresh, or delete the file to discard that state",
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+/// Where the packed distance variables of a nearness solve live —
+/// resident vector (the classic path) or disk-backed tile store with a
+/// bounded working set. Shared by the full and active nearness drivers;
+/// both lease tiles through [`TileStore`], so the numerics are
+/// backend-independent bit for bit.
+pub(crate) enum XBacking {
+    /// Resident packed `x`, leased through a fresh [`MemStore`] per
+    /// solver phase (the exact aliasing discipline of the classic
+    /// drivers).
+    Mem {
+        /// The packed iterate.
+        x: Vec<f64>,
+    },
+    /// `x` lives in a [`DiskStore`]; only the block cache plus one
+    /// gather arena per worker stays resident.
+    Disk {
+        /// The tile store (owns the file handle and cache).
+        store: DiskStore,
+    },
+}
+
+impl XBacking {
+    /// Build the backing for a solve: fresh from `inst.d`, or seeded
+    /// from a resume state. An inline-x state seeds either backend; an
+    /// external-x state requires the disk backend, whose file must match
+    /// the checkpoint's `(pass, x_fnv)` stamp — including a re-derived
+    /// content fingerprint, so a store that advanced past (or fell
+    /// behind) the checkpoint is refused instead of silently resuming
+    /// from the wrong iterate.
+    pub(crate) fn init(
+        inst: &MetricNearnessInstance,
+        block: usize,
+        cfg: &StoreCfg,
+        resume: Option<&SolverState>,
+    ) -> anyhow::Result<XBacking> {
+        match cfg.kind {
+            StoreKind::Mem => {
+                if resume.is_some_and(|st| st.x_external) {
+                    bail!(
+                        "checkpoint references an external x store; resume with the disk \
+                         store (--store disk --store-dir <dir>)"
+                    );
+                }
+                let mut x: Vec<f64> = inst.d.as_slice().to_vec();
+                if let Some(st) = resume {
+                    x.copy_from_slice(&st.x);
+                }
+                Ok(XBacking::Mem { x })
+            }
+            StoreKind::Disk => {
+                let winv: Vec<f64> = inst.w.as_slice().iter().map(|&v| 1.0 / v).collect();
+                let path = cfg.x_path();
+                match resume {
+                    Some(st) if st.x_external => {
+                        let store = DiskStore::open(&path, cfg.budget_bytes.max(8), winv)?;
+                        let (pass, fnv) = store.stamp();
+                        if pass != st.pass || fnv != st.x_fnv {
+                            bail!(
+                                "store {} is stamped (pass {pass}, fnv {fnv:#x}) but the \
+                                 checkpoint expects (pass {}, fnv {:#x}); they are not a \
+                                 consistent pair",
+                                path.display(),
+                                st.pass,
+                                st.x_fnv
+                            );
+                        }
+                        let actual = store.data_fingerprint()?;
+                        if actual != st.x_fnv {
+                            bail!(
+                                "store {} content (fnv {actual:#x}) no longer matches its \
+                                 stamp (fnv {:#x}); it cannot resume this checkpoint",
+                                path.display(),
+                                st.x_fnv
+                            );
+                        }
+                        Ok(XBacking::Disk { store })
+                    }
+                    Some(st) => {
+                        refuse_store_overwrite(&path)?;
+                        let src = &st.x;
+                        let cs = inst.d.col_starts();
+                        let store = DiskStore::create(
+                            &path,
+                            inst.n,
+                            block,
+                            cfg.budget_bytes.max(8),
+                            winv,
+                            &mut |c, r| src[cs[c] + (r - c - 1)],
+                        )?;
+                        Ok(XBacking::Disk { store })
+                    }
+                    None => {
+                        refuse_store_overwrite(&path)?;
+                        let d = &inst.d;
+                        let store = DiskStore::create(
+                            &path,
+                            inst.n,
+                            block,
+                            cfg.budget_bytes.max(8),
+                            winv,
+                            &mut |c, r| d.get(c, r),
+                        )?;
+                        Ok(XBacking::Disk { store })
+                    }
+                }
+            }
+        }
+    }
+
+    /// Run one solver phase against the backing's [`TileStore`] view.
+    pub(crate) fn with_store<R>(
+        &mut self,
+        col_starts: &[usize],
+        winv: &[f64],
+        f: impl FnOnce(&dyn TileStore) -> R,
+    ) -> R {
+        match self {
+            XBacking::Mem { x } => {
+                let store = MemStore::new(x.as_mut_slice(), col_starts, winv);
+                f(&store)
+            }
+            XBacking::Disk { store } => f(&*store),
+        }
+    }
+
+    /// Exact max triangle violation of the current iterate (direct scan
+    /// for the resident backing, lease-addressed scan for the disk
+    /// backing; the values agree exactly).
+    pub(crate) fn violation(
+        &self,
+        col_starts: &[usize],
+        n: usize,
+        p: usize,
+        schedule: &Schedule,
+    ) -> f64 {
+        match self {
+            XBacking::Mem { x } => violation(x, col_starts, n, p),
+            XBacking::Disk { store } => {
+                super::active::sweep::exact_violation(store, schedule, p)
+            }
+        }
+    }
+
+    /// Materialize the packed iterate (`O(n²)` resident — final
+    /// extraction only).
+    pub(crate) fn extract(&self) -> anyhow::Result<Vec<f64>> {
+        match self {
+            XBacking::Mem { x } => Ok(x.clone()),
+            XBacking::Disk { store } => {
+                store.flush()?;
+                Ok(store.read_full()?)
+            }
+        }
+    }
+
+    /// Cache counters of the disk backing (`None` for the resident
+    /// path) — surfaced on [`NearnessSolution::store_stats`].
+    pub(crate) fn store_stats(&self) -> Option<crate::matrix::store::StoreStats> {
+        match self {
+            XBacking::Mem { .. } => None,
+            XBacking::Disk { store } => Some(store.stats()),
+        }
+    }
 }
 
 /// Serial baseline with the standard lexicographic order ([36]/[37]).
@@ -278,6 +510,7 @@ pub fn solve_serial_order(
         active_triplets: triplets_per_pass as usize,
         sweep_screened: 0,
         sweep_projected: 0,
+        store_stats: None,
     }
 }
 

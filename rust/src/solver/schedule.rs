@@ -221,6 +221,31 @@ impl Assignment {
     }
 }
 
+/// The next tile worker `tid` will process after tile `r` of wave
+/// `wave_idx` under `assignment` — the prefetch target that keeps a
+/// disk-backed tile store ([`crate::matrix::store`]) one tile ahead of a
+/// streaming pass.
+pub fn next_owned_tile<'a>(
+    schedule: &'a Schedule,
+    assignment: Assignment,
+    tid: usize,
+    p: usize,
+    wave_idx: usize,
+    r: usize,
+) -> Option<&'a Tile> {
+    let waves = schedule.waves();
+    if r + p < waves[wave_idx].len() {
+        return Some(&waves[wave_idx][r + p]);
+    }
+    for (w, wave) in waves.iter().enumerate().skip(wave_idx + 1) {
+        let nr = assignment.first_tile(tid, w, p);
+        if nr < wave.len() {
+            return Some(&wave[nr]);
+        }
+    }
+    None
+}
+
 /// C(n, 3) as u64.
 pub fn n_triplets(n: usize) -> u64 {
     if n < 3 {
@@ -445,6 +470,34 @@ mod tests {
                         }
                     }
                     assert!(owned.iter().all(|&o| o));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn next_owned_tile_walks_each_workers_visit_order() {
+        let s = Schedule::new(20, 3);
+        for policy in [Assignment::RoundRobin, Assignment::Rotated] {
+            for p in [1usize, 3] {
+                for tid in 0..p {
+                    let mut order = Vec::new();
+                    for (wi, wave) in s.waves().iter().enumerate() {
+                        let mut r = policy.first_tile(tid, wi, p);
+                        while r < wave.len() {
+                            order.push((wi, r));
+                            r += p;
+                        }
+                    }
+                    for w in order.windows(2) {
+                        let ((wi, r), (nwi, nr)) = (w[0], w[1]);
+                        let got = next_owned_tile(&s, policy, tid, p, wi, r)
+                            .expect("successor exists");
+                        assert_eq!(got, &s.waves()[nwi][nr], "p={p} tid={tid}");
+                    }
+                    if let Some(&(wi, r)) = order.last() {
+                        assert!(next_owned_tile(&s, policy, tid, p, wi, r).is_none());
+                    }
                 }
             }
         }

@@ -54,6 +54,35 @@ pub fn for_each_run<F: FnMut(usize, usize, usize, usize)>(tile: &Tile, b: usize,
     }
 }
 
+/// Visit the **pair footprint** of a tile: one `(c, row_lo, row_hi)` call
+/// per column `c` whose packed entries a visit of the tile can touch,
+/// with the touched rows spanning exactly `[row_lo, row_hi)`.
+///
+/// A triplet `(i, j, k)` of the tile reads/writes pairs `(i, j)`,
+/// `(i, k)`, `(j, k)`. With `i ∈ [i_lo, i_hi)`, `k ∈ [k_lo, k_hi)` and
+/// `j` free in between, the union over the tile is, per column:
+///
+/// * columns `c ∈ [i_lo, i_hi)` (tile `i`-columns): rows `(c, k_hi)` —
+///   `x_cj` for every middle `j` plus `x_ck` for the tile's `k`s;
+/// * columns `c ∈ [i_hi, k_hi - 1)` (middle `j`-columns): rows
+///   `[max(k_lo, c + 1), k_hi)` — only `x_jk` entries.
+///
+/// Every span is **contiguous** in the column-major packed layout, which
+/// is what lets an out-of-core store ([`crate::matrix::store`]) stage a
+/// tile's working set as one gather of per-column segments. Callers that
+/// need the global flat range of a span can compute
+/// `col_starts[c] + (row_lo - c - 1) ..` as usual.
+#[inline]
+pub fn for_each_tile_col<F: FnMut(usize, usize, usize)>(tile: &Tile, mut f: F) {
+    let hi = tile.k_hi.saturating_sub(1);
+    for c in tile.i_lo..hi {
+        let row_lo = if c < tile.i_hi { c + 1 } else { tile.k_lo.max(c + 1) };
+        if row_lo < tile.k_hi {
+            f(c, row_lo, tile.k_hi);
+        }
+    }
+}
+
 /// The serial baseline order of [37]: plain lexicographic `(i, j, k)`.
 #[inline]
 pub fn for_each_triplet_lex<F: FnMut(usize, usize, usize)>(n: usize, mut f: F) {
@@ -171,6 +200,50 @@ mod tests {
                         assert!(k_hi - k_lo <= b.max(tile.k_hi - tile.k_lo));
                         assert!(k_hi - k_lo <= tile.k_hi - tile.k_lo);
                     });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_footprint_equals_the_reachable_pair_set() {
+        // The safety contract of the out-of-core store, in BOTH
+        // directions. Coverage (footprint ⊇ touched pairs) makes a
+        // lease's arena sufficient; exactness (footprint ⊆ touched
+        // pairs) is what lets the disk store scatter the *whole*
+        // footprint back — same-wave reachable sets are disjoint (the
+        // wave invariant), so equal footprints are disjoint too, and a
+        // blanket write-back can never clobber a concurrent lease.
+        for (n, b) in [(8usize, 2usize), (14, 3), (19, 4), (23, 7), (12, 40)] {
+            let s = Schedule::new(n, b);
+            for wave in s.waves() {
+                for tile in wave {
+                    let mut cover = std::collections::HashSet::new();
+                    let mut seen_cols = std::collections::HashSet::new();
+                    for_each_tile_col(tile, |c, lo, hi| {
+                        assert!(lo < hi, "empty span emitted n={n} b={b}");
+                        assert!(c < lo, "span must sit below the diagonal");
+                        assert!(hi <= n, "span exceeds n={n}");
+                        assert!(seen_cols.insert(c), "column {c} emitted twice");
+                        for r in lo..hi {
+                            cover.insert((c, r));
+                        }
+                    });
+                    let mut touched = std::collections::HashSet::new();
+                    for_each_triplet(tile, b, |i, j, k| {
+                        for (a, bb) in [(i, j), (i, k), (j, k)] {
+                            assert!(
+                                cover.contains(&(a, bb)),
+                                "pair ({a},{bb}) of triplet ({i},{j},{k}) outside \
+                                 footprint of {tile:?} (n={n} b={b})"
+                            );
+                            touched.insert((a, bb));
+                        }
+                    });
+                    assert_eq!(
+                        cover, touched,
+                        "footprint of {tile:?} exceeds its reachable pairs (n={n} b={b})"
+                    );
                 }
             }
         }

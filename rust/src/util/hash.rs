@@ -1,0 +1,59 @@
+//! FNV-1a hashing — the one non-cryptographic hash the repo uses for
+//! checksums and fingerprints (checkpoint files, tile-store files,
+//! instance fingerprints). Guards against truncation and accidental
+//! corruption, not against adversaries.
+
+/// Incremental FNV-1a hasher over bytes.
+pub struct Fnv1a(u64);
+
+impl Fnv1a {
+    /// Start a fresh hash (FNV-1a offset basis).
+    pub fn new() -> Fnv1a {
+        Fnv1a(0xcbf29ce484222325)
+    }
+
+    /// Fold `bytes` into the running hash.
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    /// The current hash value.
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Fnv1a::new()
+    }
+}
+
+/// FNV-1a over a byte slice in one call.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.update(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+    }
+
+    #[test]
+    fn incremental_equals_one_shot() {
+        let mut h = Fnv1a::new();
+        h.update(b"hello ");
+        h.update(b"world");
+        assert_eq!(h.finish(), fnv1a64(b"hello world"));
+    }
+}

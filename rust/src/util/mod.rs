@@ -1,6 +1,7 @@
 //! Shared utilities: deterministic RNG, parallel helpers, timing, stats,
 //! and a minimal property-testing harness (no external crates offline).
 
+pub mod hash;
 pub mod parallel;
 pub mod proptest;
 pub mod rng;

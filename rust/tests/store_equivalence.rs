@@ -1,0 +1,337 @@
+//! Out-of-core acceptance tests: a nearness solve backed by the disk
+//! tile store — under a cache budget small enough to force eviction
+//! churn — must be **bitwise identical** to the in-memory solve, for
+//! any tile size, thread count, and strategy; disk-backed checkpoints
+//! reference the store file (no inline `x`) and resume bitwise; and a
+//! corrupted, truncated, or drifted store file is refused, mirroring
+//! `tests/checkpoint_roundtrip.rs`.
+
+use metric_proj::instance::metric_nearness::MetricNearnessInstance;
+use metric_proj::matrix::store::{DiskStore, StoreCfg, TileScratch, TileStore};
+use metric_proj::solver::checkpoint::SolverState;
+use metric_proj::solver::nearness::{self, NearnessOpts, NearnessSolution};
+use metric_proj::solver::schedule::Schedule;
+use metric_proj::solver::Strategy;
+use std::path::PathBuf;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("metric_proj_store_eq_{tag}_{}", std::process::id()))
+}
+
+fn solve_collecting(
+    inst: &MetricNearnessInstance,
+    opts: &NearnessOpts,
+    cfg: &StoreCfg,
+    resume: Option<&SolverState>,
+) -> (NearnessSolution, Vec<SolverState>) {
+    let mut states = Vec::new();
+    let sol = nearness::solve_stored(inst, opts, cfg, resume, &mut |s| states.push(s.clone()))
+        .expect("solve_stored");
+    (sol, states)
+}
+
+fn assert_same_solution(a: &NearnessSolution, b: &NearnessSolution, ctx: &str) {
+    assert_eq!(a.x, b.x, "{ctx}: x diverged");
+    assert_eq!(a.passes, b.passes, "{ctx}: pass counts diverged");
+    assert_eq!(a.metric_visits, b.metric_visits, "{ctx}: work accounting diverged");
+    assert_eq!(a.max_violation, b.max_violation, "{ctx}: reported violation diverged");
+    assert_eq!(a.objective, b.objective, "{ctx}: objective diverged");
+}
+
+#[test]
+fn disk_and_mem_solves_are_bitwise_identical_under_churn() {
+    // Tiny cache budgets force continuous load/evict/write-back while
+    // the solve runs; the result must not change by a single bit.
+    let cases = [
+        // (n, tile, threads, strategy, budget_bytes, check_every)
+        (24usize, 4usize, 1usize, Strategy::Full, 1 << 11, 5usize),
+        (24, 4, 3, Strategy::Full, 1 << 11, 5),
+        (30, 7, 2, Strategy::Active { sweep_every: 3, forget_after: 1 }, 1 << 11, 4),
+        (37, 5, 3, Strategy::Active { sweep_every: 4, forget_after: 2 }, 1 << 12, 0),
+        // tile > n: the whole matrix is one block — no eviction possible,
+        // but the single-block path must still be bitwise clean.
+        (19, 40, 2, Strategy::Active { sweep_every: 2, forget_after: 0 }, 1 << 10, 3),
+    ];
+    for (idx, &(n, tile, threads, strategy, budget, check_every)) in cases.iter().enumerate() {
+        let inst = MetricNearnessInstance::random(n, 2.0, 7 + idx as u64);
+        let opts = NearnessOpts {
+            max_passes: 12,
+            check_every,
+            tol_violation: 1e-9,
+            threads,
+            tile,
+            strategy,
+            ..Default::default()
+        };
+        let ctx = format!("case {idx}: n={n} tile={tile} p={threads} {strategy:?}");
+        let (mem, _) = solve_collecting(&inst, &opts, &StoreCfg::mem(), None);
+        let dir = tmp_dir(&format!("prop{idx}"));
+        let (disk, _) = solve_collecting(&inst, &opts, &StoreCfg::disk(&dir, budget), None);
+        assert_same_solution(&mem, &disk, &ctx);
+        let stats = disk.store_stats.expect("disk solve reports store stats");
+        assert!(stats.loads > 0, "{ctx}: no blocks were ever loaded");
+        // Eviction is only possible with more than one block and a
+        // budget below the packed total.
+        let evictable = n.div_ceil(tile) > 1 && budget < n * (n - 1) / 2 * 8;
+        if evictable {
+            assert!(
+                stats.evictions > 0,
+                "{ctx}: budget {budget} was too generous to exercise eviction"
+            );
+            assert!(stats.writebacks > 0, "{ctx}: dirty blocks must be written back");
+        }
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}
+
+#[test]
+fn acceptance_n200_disk_solve_under_budget_matches_mem_bitwise() {
+    // ISSUE acceptance: an n >= 200 instance solved with a store budget
+    // smaller than the full packed X (19900 entries = 155.5 KiB here,
+    // budget 32 KiB), forcing tile eviction, lands bitwise on the
+    // in-memory solution.
+    let n = 200;
+    let inst = MetricNearnessInstance::random(n, 2.0, 42);
+    let opts = NearnessOpts {
+        max_passes: 7,
+        check_every: 3,
+        tol_violation: 1e-12,
+        threads: 2,
+        tile: 40,
+        strategy: Strategy::Active { sweep_every: 3, forget_after: 2 },
+        ..Default::default()
+    };
+    let (mem, _) = solve_collecting(&inst, &opts, &StoreCfg::mem(), None);
+    let dir = tmp_dir("n200");
+    let budget = 32 << 10;
+    assert!(budget < n * (n - 1) / 2 * 8, "budget must undercut the packed X");
+    let (disk, _) = solve_collecting(&inst, &opts, &StoreCfg::disk(&dir, budget), None);
+    assert_same_solution(&mem, &disk, "n=200 acceptance");
+    let stats = disk.store_stats.expect("disk solve reports store stats");
+    assert!(stats.evictions > 0, "n=200 run must churn the cache (budget {budget})");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn disk_checkpoints_reference_the_store_and_resume_bitwise() {
+    let n = 32;
+    let inst = MetricNearnessInstance::random(n, 2.0, 11);
+    let strategy = Strategy::Active { sweep_every: 3, forget_after: 1 };
+    let base = NearnessOpts {
+        check_every: 2,
+        tol_violation: 1e-12,
+        threads: 2,
+        tile: 5,
+        strategy,
+        checkpoint_every: 2,
+        ..Default::default()
+    };
+    let budget = 1 << 12;
+
+    // Uninterrupted references, memory and disk.
+    let full_opts = NearnessOpts { max_passes: 9, ..base };
+    let (mem_ref, _) = solve_collecting(&inst, &full_opts, &StoreCfg::mem(), None);
+    let dir_ref = tmp_dir("ckpt_ref");
+    let (disk_ref, _) =
+        solve_collecting(&inst, &full_opts, &StoreCfg::disk(&dir_ref, budget), None);
+    assert_same_solution(&mem_ref, &disk_ref, "uninterrupted disk run");
+
+    // Interrupt at pass 4: the emitted states must reference the store
+    // instead of re-serializing x.
+    let dir = tmp_dir("ckpt_resume");
+    let cfg = StoreCfg::disk(&dir, budget);
+    let half_opts = NearnessOpts { max_passes: 4, ..base };
+    let (_half, states) = solve_collecting(&inst, &half_opts, &cfg, None);
+    let last = states.last().expect("checkpoints were emitted");
+    assert_eq!(last.pass, 4);
+    assert!(last.x_external, "disk checkpoints must reference the store");
+    assert!(last.x.is_empty(), "external checkpoints must not inline x");
+    for st in &states[..states.len() - 1] {
+        assert!(st.x_external, "every disk checkpoint references the store");
+    }
+    // The state survives its byte format (save -> load).
+    let mut bytes = Vec::new();
+    last.save(&mut bytes).expect("save");
+    let reloaded = SolverState::load(&mut bytes.as_slice()).expect("load");
+    assert_eq!(*last, reloaded);
+
+    // Resume against the same store: lands bitwise on the references.
+    let (resumed, _) = solve_collecting(&inst, &full_opts, &cfg, Some(&reloaded));
+    assert_same_solution(&mem_ref, &resumed, "interrupt/resume vs uninterrupted");
+
+    let _ = std::fs::remove_dir_all(dir);
+    let _ = std::fs::remove_dir_all(dir_ref);
+}
+
+#[test]
+fn inline_checkpoint_seeds_a_disk_resume() {
+    // A classic (inline-x) checkpoint can move a solve onto the disk
+    // store mid-flight; the combined run still matches the
+    // uninterrupted in-memory run bitwise.
+    let n = 26;
+    let inst = MetricNearnessInstance::random(n, 2.0, 23);
+    let base = NearnessOpts {
+        check_every: 0,
+        threads: 2,
+        tile: 4,
+        strategy: Strategy::Full,
+        checkpoint_every: 3,
+        ..Default::default()
+    };
+    let (mem_ref, _) = solve_collecting(
+        &inst,
+        &NearnessOpts { max_passes: 8, ..base },
+        &StoreCfg::mem(),
+        None,
+    );
+    let (_, states) = solve_collecting(
+        &inst,
+        &NearnessOpts { max_passes: 3, ..base },
+        &StoreCfg::mem(),
+        None,
+    );
+    let st = states.last().expect("checkpoint emitted");
+    assert!(!st.x_external);
+    let dir = tmp_dir("inline_to_disk");
+    let (resumed, _) = solve_collecting(
+        &inst,
+        &NearnessOpts { max_passes: 8, ..base },
+        &StoreCfg::disk(&dir, 1 << 11),
+        Some(st),
+    );
+    assert_same_solution(&mem_ref, &resumed, "inline checkpoint -> disk resume");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn fresh_solve_refuses_to_overwrite_an_existing_store() {
+    // An x.tiles on disk may be the only copy of an earlier run's
+    // iterate; a fresh (non-resuming) solve must refuse to clobber it.
+    let n = 18;
+    let inst = MetricNearnessInstance::random(n, 2.0, 97);
+    let opts = NearnessOpts {
+        max_passes: 3,
+        check_every: 0,
+        threads: 1,
+        tile: 4,
+        strategy: Strategy::Full,
+        ..Default::default()
+    };
+    let dir = tmp_dir("no_clobber");
+    let cfg = StoreCfg::disk(&dir, 1 << 11);
+    let (first, _) = solve_collecting(&inst, &opts, &cfg, None);
+    let err = nearness::solve_stored(&inst, &opts, &cfg, None, &mut |_| {})
+        .expect_err("second fresh solve must refuse the existing store");
+    assert!(
+        format!("{err:?}").contains("refusing to overwrite"),
+        "error should explain the refusal: {err:?}"
+    );
+    // The original file is untouched and still matches the first run.
+    let winv: Vec<f64> = inst.w.as_slice().iter().map(|&v| 1.0 / v).collect();
+    let store = DiskStore::open(&cfg.x_path(), 1 << 11, winv).expect("still opens");
+    let mut survived = metric_proj::matrix::PackedSym::zeros(n);
+    survived.as_mut_slice().copy_from_slice(&store.read_full().expect("read"));
+    assert_eq!(survived, first.x);
+    drop(store);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn mem_resume_of_an_external_checkpoint_is_refused() {
+    let n = 20;
+    let inst = MetricNearnessInstance::random(n, 2.0, 31);
+    let opts = NearnessOpts {
+        max_passes: 4,
+        check_every: 0,
+        threads: 1,
+        tile: 4,
+        strategy: Strategy::Full,
+        checkpoint_every: 2,
+        ..Default::default()
+    };
+    let dir = tmp_dir("mem_refuse");
+    let (_, states) = solve_collecting(&inst, &opts, &StoreCfg::disk(&dir, 1 << 11), None);
+    let st = states.last().expect("checkpoint emitted");
+    assert!(st.x_external);
+    let err = nearness::solve_stored(&inst, &opts, &StoreCfg::mem(), Some(st), &mut |_| {})
+        .expect_err("memory backend must refuse an external-x checkpoint");
+    assert!(
+        format!("{err:?}").contains("external"),
+        "error should explain the external reference: {err:?}"
+    );
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+#[allow(unused_unsafe)]
+fn corrupted_truncated_or_drifted_stores_are_refused_on_resume() {
+    let n = 22;
+    let inst = MetricNearnessInstance::random(n, 2.0, 57);
+    let opts = NearnessOpts {
+        max_passes: 4,
+        check_every: 0,
+        threads: 1,
+        tile: 4,
+        strategy: Strategy::Active { sweep_every: 2, forget_after: 1 },
+        checkpoint_every: 2,
+        ..Default::default()
+    };
+    let dir = tmp_dir("refuse");
+    let cfg = StoreCfg::disk(&dir, 1 << 11);
+    let (_, states) = solve_collecting(&inst, &opts, &cfg, None);
+    let st = states.last().expect("checkpoint emitted").clone();
+    let path = cfg.x_path();
+    let pristine = std::fs::read(&path).expect("store file exists");
+    let resume = |cfg: &StoreCfg| {
+        nearness::solve_stored(
+            &inst,
+            &NearnessOpts { max_passes: 8, ..opts },
+            cfg,
+            Some(&st),
+            &mut |_| {},
+        )
+    };
+
+    // Sanity: the pristine pair resumes.
+    assert!(resume(&cfg).is_ok(), "pristine store must resume");
+    std::fs::write(&path, &pristine).expect("restore");
+
+    // Data bit flip -> block checksum rejects at open.
+    let mut bad = pristine.clone();
+    let last = bad.len() - 5;
+    bad[last] ^= 0x20;
+    std::fs::write(&path, &bad).expect("write");
+    assert!(resume(&cfg).is_err(), "corrupted store must be refused");
+
+    // Truncation -> size check rejects at open.
+    std::fs::write(&path, &pristine[..pristine.len() / 2]).expect("write");
+    assert!(resume(&cfg).is_err(), "truncated store must be refused");
+
+    // Drift: restore the file, then advance its content through a
+    // legitimate lease (valid checksums, unchanged stamp). The
+    // fingerprint no longer matches the checkpoint -> refused.
+    std::fs::write(&path, &pristine).expect("restore");
+    {
+        let winv: Vec<f64> = inst.w.as_slice().iter().map(|&v| 1.0 / v).collect();
+        let store = DiskStore::open(&path, 1 << 11, winv).expect("reopen");
+        let schedule = Schedule::new(n, 4);
+        let tile = schedule.waves()[0][0];
+        let mut scratch = TileScratch::default();
+        // SAFETY: single thread owns the tile.
+        unsafe {
+            store.with_tile(&tile, &mut scratch, &mut |x, cols, _| {
+                let p = cols[tile.i_lo] + (tile.k_lo - tile.i_lo - 1);
+                // SAFETY: in-bounds lease addressing, single thread.
+                unsafe { x.set(p, x.get(p) + 0.125) };
+            });
+        }
+        store.flush().expect("flush");
+    }
+    let err = resume(&cfg).expect_err("drifted store must be refused");
+    assert!(
+        format!("{err:?}").contains("stamp"),
+        "error should mention the stamp mismatch: {err:?}"
+    );
+
+    let _ = std::fs::remove_dir_all(dir);
+}
