@@ -112,7 +112,7 @@ fn main() {
         check_every: 0,
         ..Default::default()
     };
-    let rows = strategy_ablation(
+    let mut rows = strategy_ablation(
         &small,
         &base,
         &[
@@ -122,6 +122,25 @@ fn main() {
             ("active s=16 k=3", Strategy::Active { sweep_every: 16, forget_after: 3 }),
         ],
     );
+    // One out-of-core row: the same active solve streaming X and W from
+    // a disk tile store under a quarter-of-packed budget — identical
+    // numerics (disk == mem bitwise), honest resident-memory column.
+    {
+        let dir = std::env::temp_dir()
+            .join(format!("metric_proj_ablations_a4_{}", std::process::id()));
+        let m = small.n * small.n.saturating_sub(1) / 2;
+        let store = metric_proj::matrix::store::StoreCfg::disk(&dir, (m * 8 / 4).max(1 << 12));
+        match metric_proj::eval::strategy_ablation_stored(
+            &small,
+            &base,
+            &store,
+            &[("active s=8 +disk", Strategy::Active { sweep_every: 8, forget_after: 3 })],
+        ) {
+            Ok(mut disk_rows) => rows.append(&mut disk_rows),
+            Err(e) => println!("  (disk row skipped: {e})"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
     let full_visits = rows[0].metric_visits.max(1) as f64;
     for r in &rows {
         let hit = match r.screen_hit_rate() {

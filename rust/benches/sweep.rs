@@ -15,8 +15,9 @@
 //!
 //! Every row also reports a **peak resident-set estimate** for the `X`
 //! path (packed `x` + `winv` for the in-memory backends; the measured
-//! peak block cache + resident `winv` for the disk store), so the bench
-//! doubles as the memory column of the out-of-core story.
+//! peak block caches — the `X` plane plus the streamed-`W` plane — for
+//! the disk store, which keeps no packed array resident at all), so the
+//! bench doubles as the memory column of the out-of-core story.
 //!
 //!     cargo bench --bench sweep
 //!
@@ -222,13 +223,14 @@ fn main() {
             let vps = (reps as u64 * triplets) as f64 / dt;
             let speedup = scalar_vps.map_or(1.0, |s| vps / s);
             let stats = store.stats();
-            // Measured peak cache + the resident winv the store keeps.
-            let resident_mb =
-                mib((stats.peak_resident_bytes + (winv.len() * 8) as u64) as f64);
+            // Measured peak caches only: since PR 5 the store streams
+            // winv from its W plane instead of keeping it resident, so
+            // the honest resident figure is the two planes' peak.
+            let resident_mb = mib(stats.peak_resident_bytes as f64);
             println!(
                 "    {:<13} {:>9.3e} triplet-visits/s ({:>5.2}x scalar), \
                  hit rate {:>6.3}%, {:.3}s for {} sweeps, ~{:.1} MiB resident X \
-                 ({} loads, {} evictions)",
+                 ({} loads + {} W-plane, {} evictions)",
                 "screened+disk",
                 vps,
                 speedup,
@@ -237,6 +239,7 @@ fn main() {
                 reps,
                 resident_mb,
                 stats.loads,
+                stats.w_loads,
                 stats.evictions
             );
             records.push(Record {

@@ -149,7 +149,8 @@ mod tests {
 
     #[test]
     fn store_flags_parse() {
-        // The grammar main.rs uses for the out-of-core tile store.
+        // The grammar main.rs uses for the out-of-core tile store (the
+        // nearness and — since PR 5 — solve commands both accept it).
         let a = parse("nearness --store disk --store-dir /tmp/run1 --store-budget-mb 128");
         assert_eq!(a.get("store"), Some("disk"));
         assert_eq!(a.get("store-dir"), Some("/tmp/run1"));
@@ -158,6 +159,14 @@ mod tests {
         let b = parse("nearness --n 200");
         assert_eq!(b.get("store"), None);
         assert_eq!(b.get_or("store-budget-mb", 64usize).unwrap(), 64);
+        // the CC-LP driver takes the same flags, combined with strategy
+        let c = parse(
+            "solve --store disk --store-dir /tmp/cc --store-budget-mb 8 --strategy active",
+        );
+        assert_eq!(c.get("store"), Some("disk"));
+        assert_eq!(c.get("store-dir"), Some("/tmp/cc"));
+        assert_eq!(c.get_or("store-budget-mb", 64usize).unwrap(), 8);
+        assert_eq!(c.get("strategy"), Some("active"));
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub mod simulate;
 use crate::graph::datasets::Dataset;
 use crate::instance::construction::{build_cc_instance, ConstructionParams};
 use crate::instance::CcLpInstance;
+use crate::matrix::store::{StoreCfg, StoreKind};
 use crate::solver::checkpoint::{self, SolverState, WarmStartOpts};
 use crate::solver::schedule::{Assignment, Schedule};
 use crate::solver::{dykstra_parallel, dykstra_serial, SolveOpts, Strategy};
@@ -301,10 +302,13 @@ pub struct StrategyRow {
     /// Of those, triplets that actually needed a projection.
     pub sweep_projected: u64,
     /// Peak resident-set estimate for the solve's packed state in MiB —
-    /// the memory column next to the visits/sec work column. CC-LP
-    /// keeps eight packed `O(n²)` arrays resident (`x`, `f`, `winv`,
-    /// `d`, `w`, and the three pair/box dual lanes); metric duals and
-    /// the active set are sparse and excluded.
+    /// the memory column next to the visits/sec work column. The
+    /// resident backend keeps eight packed `O(n²)` arrays (`x`, `f`,
+    /// `winv`, `d`, `w`, and the three pair/box dual lanes); the disk
+    /// backend streams `x` **and** `winv` through bounded block caches,
+    /// leaving six packed arrays plus the configured cache budget — see
+    /// [`cc_resident_mb_est_stored`]. Metric duals and the active set
+    /// are sparse and excluded.
     pub resident_mb_est: f64,
 }
 
@@ -328,33 +332,80 @@ pub fn cc_resident_mb_est(n: usize) -> f64 {
     (8 * m * 8) as f64 / (1u64 << 20) as f64
 }
 
+/// Peak resident-set estimate of a CC-LP solve in MiB under a given `X`
+/// storage backend. The resident backend keeps eight packed `O(n²)`
+/// arrays; the disk backend streams `x` **and** the inverse weights
+/// through two bounded block caches, leaving six packed arrays resident
+/// plus the configured budget (capped at the two planes' total) — this
+/// is what keeps the memory column honest for weighted instances, whose
+/// `W` used to be counted as free.
+pub fn cc_resident_mb_est_stored(n: usize, cfg: &StoreCfg) -> f64 {
+    let m = n * n.saturating_sub(1) / 2;
+    let bytes = match cfg.kind {
+        StoreKind::Mem => 8 * m * 8,
+        StoreKind::Disk => 6 * m * 8 + cfg.budget_bytes.min(2 * m * 8),
+    };
+    bytes as f64 / (1u64 << 20) as f64
+}
+
 /// Solve `inst` once per strategy with otherwise-identical options —
 /// convergence-vs-work data for the [A4] ablation bench and for plotting
-/// (each [`crate::solver::Solution`] carries the same counters).
+/// (each [`crate::solver::Solution`] carries the same counters). Runs on
+/// the in-memory store; use [`strategy_ablation_stored`] to pick the
+/// backend.
 pub fn strategy_ablation(
     inst: &CcLpInstance,
     base: &SolveOpts,
     strategies: &[(&'static str, Strategy)],
 ) -> Vec<StrategyRow> {
-    strategies
-        .iter()
-        .map(|&(label, strategy)| {
-            let sol = dykstra_parallel::solve(inst, &SolveOpts { strategy, ..*base });
-            StrategyRow {
-                label,
-                strategy,
-                passes: sol.passes,
-                metric_visits: sol.metric_visits,
-                visits_per_pass: sol.metric_visits as f64 / sol.passes.max(1) as f64,
-                active_triplets: sol.active_triplets,
-                max_violation: sol.residuals.max_violation,
-                lp_objective: sol.residuals.lp_objective,
-                sweep_screened: sol.sweep_screened,
-                sweep_projected: sol.sweep_projected,
-                resident_mb_est: cc_resident_mb_est(inst.n),
+    strategy_ablation_stored(inst, base, &StoreCfg::mem(), strategies)
+        .expect("in-memory ablation cannot fail")
+}
+
+/// [`strategy_ablation`] with an explicit `X` storage backend. Disk
+/// rows get a per-row subdirectory under the configured store dir
+/// (removed afterwards), so several strategies can stream from disk in
+/// one ablation without tripping the store-overwrite guard; their
+/// `resident_mb_est` reflects the streamed `x`/`winv` planes.
+pub fn strategy_ablation_stored(
+    inst: &CcLpInstance,
+    base: &SolveOpts,
+    store: &StoreCfg,
+    strategies: &[(&'static str, Strategy)],
+) -> anyhow::Result<Vec<StrategyRow>> {
+    let mut rows = Vec::with_capacity(strategies.len());
+    for (idx, &(label, strategy)) in strategies.iter().enumerate() {
+        let cfg = match store.kind {
+            StoreKind::Mem => store.clone(),
+            StoreKind::Disk => {
+                StoreCfg { dir: store.dir.join(format!("ablation_{idx}")), ..store.clone() }
             }
-        })
-        .collect()
+        };
+        let sol = dykstra_parallel::solve_stored(
+            inst,
+            &SolveOpts { strategy, ..*base },
+            &cfg,
+            None,
+            &mut |_| {},
+        )?;
+        if store.kind == StoreKind::Disk {
+            let _ = std::fs::remove_dir_all(&cfg.dir);
+        }
+        rows.push(StrategyRow {
+            label,
+            strategy,
+            passes: sol.passes,
+            metric_visits: sol.metric_visits,
+            visits_per_pass: sol.metric_visits as f64 / sol.passes.max(1) as f64,
+            active_triplets: sol.active_triplets,
+            max_violation: sol.residuals.max_violation,
+            lp_objective: sol.residuals.lp_objective,
+            sweep_screened: sol.sweep_screened,
+            sweep_projected: sol.sweep_projected,
+            resident_mb_est: cc_resident_mb_est_stored(inst.n, &cfg),
+        });
+    }
+    Ok(rows)
 }
 
 /// One run of the warm-start ablation.
@@ -526,6 +577,33 @@ mod tests {
         assert!(rows[1].sweep_screened % crate::solver::schedule::n_triplets(24) == 0);
         assert!(rows[1].sweep_projected <= rows[1].sweep_screened);
         assert!((0.0..=1.0).contains(&hit));
+    }
+
+    #[test]
+    fn stored_ablation_matches_mem_and_reports_honest_memory() {
+        let inst = CcLpInstance::random(22, 0.5, 0.8, 1.6, 5);
+        let base = SolveOpts { max_passes: 8, threads: 2, tile: 4, ..Default::default() };
+        let strategies: &[(&'static str, Strategy)] = &[
+            ("full", Strategy::Full),
+            ("active", Strategy::Active { sweep_every: 3, forget_after: 1 }),
+        ];
+        let mem_rows = strategy_ablation(&inst, &base, strategies);
+        let dir = std::env::temp_dir()
+            .join(format!("metric_proj_ablation_{}", std::process::id()));
+        let disk_rows =
+            strategy_ablation_stored(&inst, &base, &StoreCfg::disk(&dir, 1 << 11), strategies)
+                .expect("disk ablation");
+        let _ = std::fs::remove_dir_all(&dir);
+        for (m, d) in mem_rows.iter().zip(&disk_rows) {
+            assert_eq!(m.metric_visits, d.metric_visits, "{}", m.label);
+            assert_eq!(m.max_violation, d.max_violation, "{}", m.label);
+            assert_eq!(m.lp_objective, d.lp_objective, "{}", m.label);
+            assert!(
+                d.resident_mb_est < m.resident_mb_est,
+                "{}: a streamed-x/W row must report a smaller resident set",
+                m.label
+            );
+        }
     }
 
     #[test]

@@ -32,9 +32,14 @@
 //!   ([`matrix::store::MemStore`], free pass-through leases) or an
 //!   out-of-core [`matrix::store::DiskStore`] that streams `(i, k)`
 //!   tile blocks from disk under a bounded LRU working set with
-//!   write-back and sweep-order prefetch — solves run at `n` beyond
-//!   RAM, bitwise identical to the resident path, and checkpoints
-//!   reference the store file instead of re-serializing `x`.
+//!   write-back and sweep-order prefetch, plus a second read-only plane
+//!   streaming the inverse weights. Tile leases carry the metric
+//!   phases; pair-range leases
+//!   ([`matrix::store::TileStore::with_pair_range`]) carry the CC-LP
+//!   pair phase and the residual scans — so both `solve` and `nearness`
+//!   run at `n` beyond RAM, bitwise identical to the resident path, and
+//!   checkpoints reference the store file instead of re-serializing
+//!   `x`.
 //! * **L2/L1 (build time)** — a JAX model + Pallas kernel implementing the
 //!   batched projection step, AOT-lowered to HLO text and executed from
 //!   Rust through PJRT ([`runtime`]).

@@ -7,6 +7,7 @@
 //!            [--engine cpu|xla] [--assignment rr|rot] [--round] [--serial]
 //!            [--strategy full|active --sweep-every 8 --forget-after 3]
 //!            [--sweep-backend scalar|screened|engine] [--sweep-policy fixed|adaptive]
+//!            [--store mem|disk --store-dir store --store-budget-mb 64]
 //!            [--checkpoint state.ckpt --checkpoint-every 10]
 //!            [--resume state.ckpt | --warm-start state.ckpt]
 //!   nearness --n 200 --threads 8 --tile 40 --passes 50
@@ -125,6 +126,33 @@ fn parse_sweep_policy(args: &Args) -> Result<Option<SweepPolicy>> {
                 .map(Some)
                 .with_context(|| format!("--sweep-policy must be fixed|adaptive, got `{s}`"))
         }
+    }
+}
+
+/// Print the storage line for a disk-backed solve (silent for mem).
+fn print_store_cfg(cfg: &StoreCfg) {
+    if cfg.kind == StoreKind::Disk {
+        println!(
+            "store     : disk ({}, cache budget {} MiB split over the X and streamed-W planes)",
+            cfg.x_path().display(),
+            cfg.budget_bytes >> 20
+        );
+    }
+}
+
+/// Print the tile-store I/O counters when the solve ran out of core.
+fn print_store_io(stats: Option<metric_proj::matrix::store::StoreStats>) {
+    if let Some(stats) = stats {
+        println!(
+            "store I/O : {} block loads ({} W-plane), {} evictions ({} write-backs), \
+             {} prefetched, peak cache {:.2} MiB",
+            stats.loads,
+            stats.w_loads,
+            stats.evictions,
+            stats.writebacks,
+            stats.prefetched,
+            stats.peak_resident_bytes as f64 / (1u64 << 20) as f64
+        );
     }
 }
 
@@ -301,13 +329,6 @@ fn cmd_solve(args: &Args) -> Result<()> {
         ..Default::default()
     };
     let store_cfg = parse_store_cfg(args)?;
-    if store_cfg.kind == StoreKind::Disk {
-        bail!(
-            "--store disk is currently supported by the `nearness` command only; the \
-             CC-LP metric phase is already store-generic, but its pair phase and \
-             residual scans still address a resident x (see ROADMAP)"
-        );
-    }
     let engine = args.get("engine").unwrap_or("cpu");
     if opts.strategy.is_active() && (args.has_flag("serial") || engine != "cpu") {
         bail!(
@@ -317,6 +338,12 @@ fn cmd_solve(args: &Args) -> Result<()> {
     }
     if ck.in_use() && engine != "cpu" {
         bail!("--checkpoint/--resume/--warm-start run on the CPU engine only");
+    }
+    if store_cfg.kind == StoreKind::Disk && (args.has_flag("serial") || engine != "cpu") {
+        bail!(
+            "--store disk runs on the parallel CPU engine only \
+             (drop --serial / use --engine cpu)"
+        );
     }
     let start: Option<SolverState> = match ck.loaded.clone() {
         Some(st) if ck.warm => {
@@ -340,6 +367,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
     };
     println!("instance  : {desc}");
     println!("constraints: {:.3e}", inst.n_constraints() as f64);
+    print_store_cfg(&store_cfg);
     println!(
         "solver    : {} threads={} tile={} passes={} strategy={:?} sweep-backend={}{}",
         if args.has_flag("serial") { "serial" } else { "parallel" },
@@ -360,9 +388,10 @@ fn cmd_solve(args: &Args) -> Result<()> {
                 if args.has_flag("serial") {
                     dykstra_serial::solve_checkpointed(&inst, &opts, start.as_ref(), &mut sink)
                 } else {
-                    dykstra_parallel::solve_checkpointed(
+                    dykstra_parallel::solve_stored(
                         &inst,
                         &opts,
+                        &store_cfg,
                         start.as_ref(),
                         &mut sink,
                     )
@@ -391,6 +420,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
     println!("nnz metric duals: {}", sol.nnz_duals);
     print_work(sol.metric_visits, sol.active_triplets, sol.passes, inst.n_metric_constraints());
     print_sweep_screen(sol.sweep_screened, sol.sweep_projected);
+    print_store_io(sol.store_stats);
 
     if args.has_flag("round") {
         let labels_t = threshold::round(&sol.x, 0.5);
@@ -441,13 +471,7 @@ fn cmd_nearness(args: &Args) -> Result<()> {
         None => None,
     };
     let store_cfg = parse_store_cfg(args)?;
-    if store_cfg.kind == StoreKind::Disk {
-        println!(
-            "store     : disk ({}, cache budget {} MiB)",
-            store_cfg.x_path().display(),
-            store_cfg.budget_bytes >> 20
-        );
-    }
+    print_store_cfg(&store_cfg);
     let mut sink = ck.sink();
     let (sol, secs) =
         time(|| nearness::solve_stored(&inst, &opts, &store_cfg, start.as_ref(), &mut sink));
@@ -459,17 +483,7 @@ fn cmd_nearness(args: &Args) -> Result<()> {
     let full_per_pass = metric_proj::solver::schedule::n_triplets(n) as u128 * 3;
     print_work(sol.metric_visits, sol.active_triplets, sol.passes, full_per_pass);
     print_sweep_screen(sol.sweep_screened, sol.sweep_projected);
-    if let Some(stats) = sol.store_stats {
-        println!(
-            "store I/O : {} block loads, {} evictions ({} write-backs), {} prefetched, \
-             peak cache {:.2} MiB",
-            stats.loads,
-            stats.evictions,
-            stats.writebacks,
-            stats.prefetched,
-            stats.peak_resident_bytes as f64 / (1u64 << 20) as f64
-        );
-    }
+    print_store_io(sol.store_stats);
     Ok(())
 }
 

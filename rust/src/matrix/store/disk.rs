@@ -1,5 +1,11 @@
 //! The file-backed [`TileStore`]: `X` on disk as `(i, k)` tile blocks,
-//! behind a bounded LRU block cache.
+//! behind a bounded LRU block cache — plus a second, **read-only plane**
+//! streaming the packed inverse weights `1/w` from a sibling spill file
+//! (`<x file>.w`, same format and block layout), so weighted instances
+//! keep nothing `O(n²)` resident either. The `w` spill is derived data:
+//! it is (re)written from the caller's weights at [`DiskStore::create`]
+//! *and* [`DiskStore::open`], never trusted across runs, and removed on
+//! drop.
 //!
 //! # File format (`x.tiles`, all integers little-endian)
 //!
@@ -114,16 +120,22 @@ fn corrupt(msg: impl Into<String>) -> StoreError {
 /// assertions in `tests/store_equivalence.rs`.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StoreStats {
-    /// Blocks read from the file into the cache.
+    /// Blocks read from the `X` file into the cache.
     pub loads: u64,
-    /// Blocks evicted from the cache.
+    /// Blocks evicted from the `X` cache.
     pub evictions: u64,
-    /// Evicted dirty blocks written back to the file.
+    /// Evicted dirty blocks written back to the `X` file.
     pub writebacks: u64,
-    /// Blocks loaded by the background prefetcher.
+    /// Blocks loaded by the background prefetcher (both planes).
     pub prefetched: u64,
-    /// High-water mark of resident cache bytes.
+    /// High-water mark of resident cache bytes, summed over the `X` and
+    /// streamed-`W` planes (sum of per-plane peaks — an upper bound on
+    /// the combined instantaneous peak).
     pub peak_resident_bytes: u64,
+    /// Blocks read into the streamed-`W` plane's cache.
+    pub w_loads: u64,
+    /// Blocks evicted from the streamed-`W` plane (never dirty).
+    pub w_evictions: u64,
 }
 
 struct CachedBlock {
@@ -218,13 +230,15 @@ impl Cache {
 pub struct DiskStore {
     layout: Arc<BlockLayout>,
     cache: Arc<Mutex<Cache>>,
-    /// Global inverse weights, gathered alongside `x` so kernels address
-    /// both identically. Weights stay resident: only the *mutated* state
-    /// streams from disk (streaming `W` too is a ROADMAP follow-up).
-    winv: Vec<f64>,
-    /// Global packed column offsets (for `winv` gathers).
+    /// Read-only block cache over the sibling `w` spill file streaming
+    /// the packed inverse weights. It shares the `X` plane's layout, so
+    /// block indices and in-block offsets coincide and the gathered
+    /// `winv` arena mirrors the `x` arena exactly.
+    wcache: Arc<Mutex<Cache>>,
+    /// Global packed column offsets (lease addressing and range walks).
     col_starts: Vec<usize>,
     path: PathBuf,
+    w_path: PathBuf,
     prefetch_tx: Option<Mutex<mpsc::Sender<PrefetchMsg>>>,
     prefetch_join: Option<std::thread::JoinHandle<()>>,
 }
@@ -260,44 +274,22 @@ impl DiskStore {
             }
         }
         let layout = BlockLayout::new(n, block.max(1));
-        let mut file =
-            OpenOptions::new().read(true).write(true).create(true).truncate(true).open(path)?;
-        file.write_all(&header_bytes(&layout, 0, 0))?;
-        // Reserve the checksum table, stream the blocks one buffer at a
-        // time (never materializing the full matrix), then go back and
-        // fill the table in.
-        let n_blocks = layout.n_blocks();
-        file.write_all(&vec![0u8; n_blocks * 8])?;
-        let mut coords = Vec::with_capacity(n_blocks);
-        layout.for_each_block(|cb, rb, _idx| coords.push((cb, rb)));
-        let mut sums = Vec::with_capacity(n_blocks);
-        let mut buf: Vec<f64> = Vec::new();
-        for &(cb, rb) in &coords {
-            buf.clear();
-            layout.for_each_block_col(cb, rb, |c, lo, hi, _base| {
-                for r in lo..hi {
-                    buf.push(src(c, r));
-                }
-            });
-            let bytes = f64s_to_bytes(&buf);
-            sums.push(fnv1a64(&bytes));
-            file.write_all(&bytes)?;
-        }
-        file.seek(SeekFrom::Start(HEADER_LEN))?;
-        for sum in &sums {
-            file.write_all(&sum.to_le_bytes())?;
-        }
-        file.flush()?;
-        let cache = Cache {
+        let file = write_store_file(path, &layout, src)?;
+        let col_starts = packed_col_starts(n);
+        let w_path = w_sibling(path);
+        let cs = col_starts.clone();
+        let wfile =
+            write_store_file(&w_path, &layout, &mut |c, r| winv[cs[c] + (r - c - 1)])?;
+        Ok(DiskStore::assemble(
+            layout,
             file,
-            blocks: (0..n_blocks).map(|_| None).collect(),
-            tick: 0,
-            resident_entries: 0,
-            budget_entries: (budget_bytes / 8).max(1),
-            stamp: (0, 0),
-            stats: StoreStats::default(),
-        };
-        Ok(DiskStore::assemble(layout, cache, winv, path))
+            wfile,
+            budget_bytes,
+            (0, 0),
+            col_starts,
+            path,
+            w_path,
+        ))
     }
 
     /// Open an existing store, validating the header, the exact file
@@ -365,40 +357,65 @@ impl DiskStore {
                 return Err(corrupt(format!("checksum mismatch in block {idx}")));
             }
         }
-        let cache = Cache {
+        // The W spill is derived data: recreate it fresh from the
+        // caller's weights rather than trusting a leftover file.
+        let col_starts = packed_col_starts(n);
+        let w_path = w_sibling(path);
+        let cs = col_starts.clone();
+        let wfile =
+            write_store_file(&w_path, &layout, &mut |c, r| winv[cs[c] + (r - c - 1)])?;
+        Ok(DiskStore::assemble(
+            layout,
+            file,
+            wfile,
+            budget_bytes,
+            (pass, x_fnv),
+            col_starts,
+            path,
+            w_path,
+        ))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn assemble(
+        layout: BlockLayout,
+        file: File,
+        wfile: File,
+        budget_bytes: usize,
+        stamp: (u64, u64),
+        col_starts: Vec<usize>,
+        path: &Path,
+        w_path: PathBuf,
+    ) -> DiskStore {
+        let n_blocks = layout.n_blocks();
+        // The byte budget is split evenly between the X and W planes.
+        let plane_budget = (budget_bytes / 2 / 8).max(1);
+        let mk_cache = |file: File, stamp: (u64, u64)| Cache {
             file,
             blocks: (0..n_blocks).map(|_| None).collect(),
             tick: 0,
             resident_entries: 0,
-            budget_entries: (budget_bytes / 8).max(1),
-            stamp: (pass, x_fnv),
+            budget_entries: plane_budget,
+            stamp,
             stats: StoreStats::default(),
         };
-        Ok(DiskStore::assemble(layout, cache, winv, path))
-    }
-
-    fn assemble(layout: BlockLayout, cache: Cache, winv: Vec<f64>, path: &Path) -> DiskStore {
-        let n = layout.n();
-        let mut col_starts = Vec::with_capacity(n);
-        let mut acc = 0usize;
-        for i in 0..n {
-            col_starts.push(acc);
-            acc += n - 1 - i;
-        }
         let layout = Arc::new(layout);
-        let cache = Arc::new(Mutex::new(cache));
+        let cache = Arc::new(Mutex::new(mk_cache(file, stamp)));
+        let wcache = Arc::new(Mutex::new(mk_cache(wfile, (0, 0))));
         let (tx, rx) = mpsc::channel::<PrefetchMsg>();
         let join = {
             let layout = Arc::clone(&layout);
             let cache = Arc::clone(&cache);
-            std::thread::spawn(move || prefetch_loop(&layout, &cache, &rx))
+            let wcache = Arc::clone(&wcache);
+            std::thread::spawn(move || prefetch_loop(&layout, &cache, &wcache, &rx))
         };
         DiskStore {
             layout,
             cache,
-            winv,
+            wcache,
             col_starts,
             path: path.to_path_buf(),
+            w_path,
             prefetch_tx: Some(Mutex::new(tx)),
             prefetch_join: Some(join),
         }
@@ -409,19 +426,36 @@ impl DiskStore {
         &self.path
     }
 
+    /// Path of the streamed-`W` sibling spill file (derived data,
+    /// recreated on every create/open and removed on drop).
+    pub fn w_spill_path(&self) -> &Path {
+        &self.w_path
+    }
+
     /// Block side length of the on-disk layout.
     pub fn block(&self) -> usize {
         self.layout.block()
     }
 
-    /// Cache counters so far.
+    /// Cache counters so far, combined over the `X` and streamed-`W`
+    /// planes (see [`StoreStats`] for which field counts which plane).
     pub fn stats(&self) -> StoreStats {
-        self.lock().stats
+        let x = self.lock().stats;
+        let w = self.wlock().stats;
+        StoreStats {
+            loads: x.loads,
+            evictions: x.evictions,
+            writebacks: x.writebacks,
+            prefetched: x.prefetched + w.prefetched,
+            peak_resident_bytes: x.peak_resident_bytes + w.peak_resident_bytes,
+            w_loads: w.loads,
+            w_evictions: w.evictions,
+        }
     }
 
-    /// Currently resident cache bytes.
+    /// Currently resident cache bytes (both planes).
     pub fn resident_bytes(&self) -> usize {
-        self.lock().resident_entries * 8
+        (self.lock().resident_entries + self.wlock().resident_entries) * 8
     }
 
     /// The `(pass, x_fnv)` header stamp of the last
@@ -496,8 +530,13 @@ impl DiskStore {
         self.cache.lock().expect("tile store lock poisoned")
     }
 
+    fn wlock(&self) -> std::sync::MutexGuard<'_, Cache> {
+        self.wcache.lock().expect("tile store W-plane lock poisoned")
+    }
+
     /// Stage `tile`'s footprint into `scratch` (arena + address table +
-    /// segment list), loading blocks through the cache under the lock.
+    /// segment list), loading blocks through the caches under their
+    /// locks — one plane at a time, never nested.
     fn gather_tile(&self, tile: &Tile, scratch: &mut TileScratch) {
         let lay = &self.layout;
         let n = lay.n();
@@ -507,34 +546,56 @@ impl DiskStore {
         scratch.x.clear();
         scratch.winv.clear();
         scratch.segs.clear();
-        let mut cache = self.lock();
-        let scratch = &mut *scratch;
-        for_each_tile_col(tile, |c, lo, hi| {
-            let start = scratch.x.len();
-            // Non-negative by construction: the first footprint column
-            // starts at offset 0 with `lo == c + 1`, and every later
-            // column's start exceeds its `lo - c - 1` shift (the first
-            // column's span alone is longer).
-            debug_assert!(start >= lo - c - 1, "arena base underflow for {tile:?}");
-            scratch.cols[c] = start - (lo - c - 1);
-            scratch.segs.push(Seg { col: c, row_lo: lo, row_hi: hi, start });
-            let g = self.col_starts[c] + (lo - c - 1);
-            scratch.winv.extend_from_slice(&self.winv[g..g + (hi - lo)]);
-            let cb = lay.block_of(c);
-            let mut r = lo;
-            while r < hi {
-                let rb = lay.block_of(r);
-                let take_hi = hi.min(((rb + 1) * lay.block()).min(n));
-                let idx = lay.block_index(cb, rb);
-                cache
-                    .load_block(lay, idx)
-                    .expect("tile store I/O failed while loading a block");
-                let (base, blo) = lay.block_col_base(cb, rb, c);
-                let data = &cache.blocks[idx].as_ref().expect("just loaded").data;
-                scratch.x.extend_from_slice(&data[base + (r - blo)..base + (take_hi - blo)]);
-                r = take_hi;
+        {
+            let mut cache = self.lock();
+            let scratch = &mut *scratch;
+            for_each_tile_col(tile, |c, lo, hi| {
+                let start = scratch.x.len();
+                // Non-negative by construction: the first footprint column
+                // starts at offset 0 with `lo == c + 1`, and every later
+                // column's start exceeds its `lo - c - 1` shift (the first
+                // column's span alone is longer).
+                debug_assert!(start >= lo - c - 1, "arena base underflow for {tile:?}");
+                scratch.cols[c] = start - (lo - c - 1);
+                scratch.segs.push(Seg { col: c, row_lo: lo, row_hi: hi, start });
+                copy_col_span(&mut cache, lay, c, lo, hi, &mut scratch.x);
+            });
+        }
+        // Second plane: replay the recorded segments against the W
+        // spill. Same layout, same append order -> the winv arena
+        // mirrors the x arena offset for offset.
+        {
+            let mut wc = self.wlock();
+            let scratch = &mut *scratch;
+            for seg in &scratch.segs {
+                copy_col_span(&mut wc, lay, seg.col, seg.row_lo, seg.row_hi, &mut scratch.winv);
             }
-        });
+        }
+    }
+}
+
+/// Append rows `[lo, hi)` of column `c` to `out`, loading the covering
+/// blocks through `cache` (the caller holds the plane's lock).
+fn copy_col_span(
+    cache: &mut Cache,
+    lay: &BlockLayout,
+    c: usize,
+    lo: usize,
+    hi: usize,
+    out: &mut Vec<f64>,
+) {
+    let n = lay.n();
+    let cb = lay.block_of(c);
+    let mut r = lo;
+    while r < hi {
+        let rb = lay.block_of(r);
+        let take_hi = hi.min(((rb + 1) * lay.block()).min(n));
+        let idx = lay.block_index(cb, rb);
+        cache.load_block(lay, idx).expect("tile store I/O failed while loading a block");
+        let (base, blo) = lay.block_col_base(cb, rb, c);
+        let data = &cache.blocks[idx].as_ref().expect("just loaded").data;
+        out.extend_from_slice(&data[base + (r - blo)..base + (take_hi - blo)]);
+        r = take_hi;
     }
 }
 
@@ -548,6 +609,9 @@ impl Drop for DiskStore {
         }
         // Best-effort durability for un-flushed writes.
         let _ = self.lock().flush_dirty(&self.layout);
+        // The W spill is derived data, recreated on every create/open —
+        // don't leave it behind.
+        let _ = std::fs::remove_file(&self.w_path);
     }
 }
 
@@ -618,6 +682,85 @@ impl TileStore for DiskStore {
         f(&view, &scratch.cols, &scratch.winv);
     }
 
+    unsafe fn with_pair_range(
+        &self,
+        lo: usize,
+        hi: usize,
+        write: bool,
+        scratch: &mut TileScratch,
+        f: &mut dyn FnMut(usize, &mut [f64], &[f64]),
+    ) {
+        if lo >= hi {
+            return;
+        }
+        let lay = &self.layout;
+        let n = lay.n();
+        debug_assert!(hi as u64 <= lay.total_entries());
+        // Column containing `lo`: col_starts is strictly increasing over
+        // the nonempty columns, so binary search lands on (or just past)
+        // the owning column.
+        let mut c = match self.col_starts.binary_search(&lo) {
+            Ok(c) => c,
+            Err(ins) => ins - 1,
+        };
+        let mut g = lo;
+        while g < hi {
+            let c_start = self.col_starts[c];
+            let c_end = c_start + (n - 1 - c);
+            debug_assert!(g >= c_start && g < c_end, "range walk lost its column");
+            let seg_hi = c_end.min(hi);
+            let cb = lay.block_of(c);
+            let mut r = c + 1 + (g - c_start);
+            let r_hi = c + 1 + (seg_hi - c_start);
+            while r < r_hi {
+                let rb = lay.block_of(r);
+                let take_hi = r_hi.min(((rb + 1) * lay.block()).min(n));
+                let len = take_hi - r;
+                let idx = lay.block_index(cb, rb);
+                let (base, blo) = lay.block_col_base(cb, rb, c);
+                // Gather the piece — one plane locked at a time.
+                scratch.x.clear();
+                scratch.winv.clear();
+                {
+                    let mut cache = self.lock();
+                    cache
+                        .load_block(lay, idx)
+                        .expect("tile store I/O failed while loading a block");
+                    let data = &cache.blocks[idx].as_ref().expect("just loaded").data;
+                    scratch
+                        .x
+                        .extend_from_slice(&data[base + (r - blo)..base + (take_hi - blo)]);
+                }
+                {
+                    let mut wc = self.wlock();
+                    wc.load_block(lay, idx)
+                        .expect("tile store I/O failed while loading a block");
+                    let data = &wc.blocks[idx].as_ref().expect("just loaded").data;
+                    scratch
+                        .winv
+                        .extend_from_slice(&data[base + (r - blo)..base + (take_hi - blo)]);
+                }
+                // Compute on the private piece — no lock held.
+                f(g, &mut scratch.x, &scratch.winv);
+                if write {
+                    // The block may have been (cleanly) evicted while the
+                    // callback ran; reload and write the piece back.
+                    let mut cache = self.lock();
+                    cache
+                        .load_block(lay, idx)
+                        .expect("tile store I/O failed while loading a block");
+                    let block = cache.blocks[idx].as_mut().expect("just loaded");
+                    block.data[base + (r - blo)..base + (take_hi - blo)]
+                        .copy_from_slice(&scratch.x);
+                    block.dirty = true;
+                }
+                g += len;
+                r = take_hi;
+            }
+            c += 1;
+        }
+    }
+
     fn prefetch(&self, tile: &Tile) {
         if let Some(tx) = &self.prefetch_tx {
             let _ = tx
@@ -628,12 +771,14 @@ impl TileStore for DiskStore {
     }
 }
 
-/// Background cache warmer: loads the blocks of hinted tiles. Loads
-/// only — never writes entries — so it cannot change results; I/O
-/// failures are ignored (the foreground gather will surface them).
+/// Background cache warmer: loads the blocks of hinted tiles into both
+/// planes. Loads only — never writes entries — so it cannot change
+/// results; I/O failures are ignored (the foreground gather will surface
+/// them).
 fn prefetch_loop(
     lay: &BlockLayout,
     cache: &Mutex<Cache>,
+    wcache: &Mutex<Cache>,
     rx: &mpsc::Receiver<PrefetchMsg>,
 ) {
     while let Ok(PrefetchMsg::Tile(tile)) = rx.recv() {
@@ -650,11 +795,13 @@ fn prefetch_loop(
             }
         });
         for idx in blocks {
-            // Lock per block so foreground gathers interleave freely.
-            let Ok(mut guard) = cache.lock() else { return };
-            let fresh = guard.blocks[idx].is_none();
-            if guard.load_block(lay, idx).is_ok() && fresh {
-                guard.stats.prefetched += 1;
+            for plane in [cache, wcache] {
+                // Lock per block so foreground gathers interleave freely.
+                let Ok(mut guard) = plane.lock() else { return };
+                let fresh = guard.blocks[idx].is_none();
+                if guard.load_block(lay, idx).is_ok() && fresh {
+                    guard.stats.prefetched += 1;
+                }
             }
         }
     }
@@ -662,6 +809,64 @@ fn prefetch_loop(
 
 fn data_start(lay: &BlockLayout) -> u64 {
     HEADER_LEN + lay.n_blocks() as u64 * 8
+}
+
+/// Path of the streamed-`W` spill sibling: the store file name plus a
+/// `.w` suffix (appended, not a replaced extension, so distinct stores
+/// never collide on the same spill).
+fn w_sibling(path: &Path) -> PathBuf {
+    let mut name = path.as_os_str().to_owned();
+    name.push(".w");
+    PathBuf::from(name)
+}
+
+/// Global packed column offsets for dimension `n` (column `c` starts at
+/// `sum_{i<c} (n - 1 - i)`).
+fn packed_col_starts(n: usize) -> Vec<usize> {
+    let mut col_starts = Vec::with_capacity(n);
+    let mut acc = 0usize;
+    for i in 0..n {
+        col_starts.push(acc);
+        acc += n - 1 - i;
+    }
+    col_starts
+}
+
+/// Write a fresh store file at `path` (truncating any existing one):
+/// header with a zero stamp, reserved checksum table, blocks streamed
+/// from `src(c, r)` one buffer at a time (never materializing the full
+/// matrix), then the filled-in table. Returns the open read-write handle.
+fn write_store_file(
+    path: &Path,
+    layout: &BlockLayout,
+    src: &mut dyn FnMut(usize, usize) -> f64,
+) -> Result<File, StoreError> {
+    let mut file =
+        OpenOptions::new().read(true).write(true).create(true).truncate(true).open(path)?;
+    file.write_all(&header_bytes(layout, 0, 0))?;
+    let n_blocks = layout.n_blocks();
+    file.write_all(&vec![0u8; n_blocks * 8])?;
+    let mut coords = Vec::with_capacity(n_blocks);
+    layout.for_each_block(|cb, rb, _idx| coords.push((cb, rb)));
+    let mut sums = Vec::with_capacity(n_blocks);
+    let mut buf: Vec<f64> = Vec::new();
+    for &(cb, rb) in &coords {
+        buf.clear();
+        layout.for_each_block_col(cb, rb, |c, lo, hi, _base| {
+            for r in lo..hi {
+                buf.push(src(c, r));
+            }
+        });
+        let bytes = f64s_to_bytes(&buf);
+        sums.push(fnv1a64(&bytes));
+        file.write_all(&bytes)?;
+    }
+    file.seek(SeekFrom::Start(HEADER_LEN))?;
+    for sum in &sums {
+        file.write_all(&sum.to_le_bytes())?;
+    }
+    file.flush()?;
+    Ok(file)
 }
 
 fn header_bytes(lay: &BlockLayout, pass: u64, x_fnv: u64) -> [u8; HEADER_LEN as usize] {
@@ -822,6 +1027,94 @@ mod tests {
         let stats = store.stats();
         assert!(stats.evictions > 0, "budget was too generous to exercise eviction");
         assert!(stats.writebacks > 0, "dirty blocks must be written back");
+        let path = store.path().to_path_buf();
+        drop(store);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    #[allow(unused_unsafe)]
+    fn pair_range_streams_and_mutates_under_churn() {
+        // Mutate every packed entry through ascending pair-range leases
+        // with a budget that forces churn; compare against the same walk
+        // over a flat array, and check the streamed W plane hands back
+        // the weighted values exactly.
+        let (n, b) = (19usize, 4usize);
+        let mut rng = Rng::new(33);
+        let d = PackedSym::from_fn(n, |_, _| rng.f64_in(-2.0, 2.0));
+        let winv: Vec<f64> = (0..d.len()).map(|_| rng.f64_in(0.25, 4.0)).collect();
+        let path = tmp_path("pair_range");
+        let src = d.clone();
+        let store =
+            DiskStore::create(&path, n, b, 96 * 8, winv.clone(), &mut |c, r| src.get(c, r))
+                .expect("create");
+        let m = d.len();
+        let mut flat: Vec<f64> = d.as_slice().to_vec();
+        let mut scratch = TileScratch::default();
+        // Three disjoint chunks, like the pair phase's chunk split.
+        for (lo, hi) in [(0usize, m / 3), (m / 3, 2 * m / 3), (2 * m / 3, m)] {
+            // SAFETY: single thread owns every range.
+            unsafe {
+                store.with_pair_range(lo, hi, true, &mut scratch, &mut |g, xs, wv| {
+                    for (t, v) in xs.iter_mut().enumerate() {
+                        let e = g + t;
+                        assert_eq!(*v, flat[e], "entry {e} before write");
+                        assert_eq!(wv[t], winv[e], "winv {e} must stream exactly");
+                        *v = *v * 0.5 + wv[t];
+                        flat[e] = flat[e] * 0.5 + winv[e];
+                    }
+                });
+            }
+        }
+        assert_eq!(store.read_full().expect("read_full"), flat);
+        let stats = store.stats();
+        assert!(stats.w_loads > 0, "the W plane must stream");
+        // Read-only ranges keep the store clean: fingerprint unchanged.
+        let f1 = store.data_fingerprint().expect("fp");
+        // SAFETY: single thread, read-only callback.
+        unsafe {
+            store.with_pair_range(0, m, false, &mut scratch, &mut |_g, _xs, _wv| {});
+        }
+        assert_eq!(store.data_fingerprint().expect("fp"), f1);
+        let path = store.path().to_path_buf();
+        let w_path = store.w_spill_path().to_path_buf();
+        drop(store);
+        assert!(!w_path.exists(), "drop must remove the W spill");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    #[allow(unused_unsafe)]
+    fn tile_leases_stream_weighted_winv() {
+        let (n, b) = (13usize, 3usize);
+        let mut rng = Rng::new(44);
+        let d = PackedSym::from_fn(n, |_, _| rng.f64_in(-1.0, 1.0));
+        let winv: Vec<f64> = (0..d.len()).map(|_| rng.f64_in(0.5, 2.0)).collect();
+        let path = tmp_path("wtile");
+        let src = d.clone();
+        let store =
+            DiskStore::create(&path, n, b, 1 << 20, winv.clone(), &mut |c, r| src.get(c, r))
+                .expect("create");
+        let schedule = Schedule::new(n, b);
+        let m = PackedSym::zeros(n);
+        let mut scratch = TileScratch::default();
+        for wave in schedule.waves() {
+            for tile in wave {
+                // SAFETY: single thread owns every tile; reads only.
+                unsafe {
+                    store.with_tile_read(tile, &mut scratch, &mut |x, cols, wv| {
+                        for_each_triplet(tile, b, |i, j, k| {
+                            for (a, bb) in [(i, j), (i, k), (j, k)] {
+                                let p = cols[a] + (bb - a - 1);
+                                // SAFETY: in-bounds lease addressing.
+                                assert_eq!(unsafe { x.get(p) }, d.get(a, bb));
+                                assert_eq!(wv[p], winv[m.idx(a, bb)]);
+                            }
+                        });
+                    });
+                }
+            }
+        }
         let path = store.path().to_path_buf();
         drop(store);
         let _ = std::fs::remove_file(path);

@@ -50,6 +50,23 @@ impl TileStore for MemStore<'_> {
     ) {
         f(&self.x, self.col_starts, self.winv);
     }
+
+    unsafe fn with_pair_range(
+        &self,
+        lo: usize,
+        hi: usize,
+        _write: bool,
+        _scratch: &mut TileScratch,
+        f: &mut dyn FnMut(usize, &mut [f64], &[f64]),
+    ) {
+        debug_assert!(lo <= hi && hi <= self.m);
+        // SAFETY: the caller guarantees disjoint ranges across threads
+        // (the lease contract), so reborrowing the chunk is race-free.
+        // Writes land in the backing directly, which also means a
+        // `write = false` caller must honor its read-only promise.
+        let xs = unsafe { self.x.slice_mut(lo, hi) };
+        f(lo, xs, &self.winv[lo..hi]);
+    }
 }
 
 #[cfg(test)]
@@ -88,6 +105,40 @@ mod tests {
                     });
                 }
             }
+        }
+    }
+
+    #[test]
+    #[allow(unused_unsafe)]
+    fn pair_range_lease_is_the_global_chunk() {
+        let n = 8;
+        let mut x: Vec<f64> = (0..n * (n - 1) / 2).map(|e| e as f64).collect();
+        let winv: Vec<f64> = (0..x.len()).map(|e| 1.0 + e as f64).collect();
+        let cs: Vec<usize> = PackedSym::zeros(n).col_starts().to_vec();
+        let m = x.len();
+        {
+            let store = MemStore::new(x.as_mut_slice(), &cs, &winv);
+            let mut scratch = TileScratch::default();
+            let mut calls = 0usize;
+            // SAFETY: single thread owns the whole range.
+            unsafe {
+                store.with_pair_range(3, m - 2, true, &mut scratch, &mut |g, xs, wv| {
+                    calls += 1;
+                    assert_eq!(g, 3, "mem lease is one global chunk");
+                    assert_eq!(xs.len(), m - 5);
+                    for (t, v) in xs.iter_mut().enumerate() {
+                        assert_eq!(*v, (g + t) as f64);
+                        assert_eq!(wv[t], 1.0 + (g + t) as f64);
+                        *v += 100.0;
+                    }
+                });
+            }
+            assert_eq!(calls, 1);
+        }
+        for (e, v) in x.iter().enumerate() {
+            let expect =
+                if (3..m - 2).contains(&e) { e as f64 + 100.0 } else { e as f64 };
+            assert_eq!(*v, expect, "entry {e}");
         }
     }
 

@@ -17,7 +17,17 @@
 //!   a bounded LRU block cache with write-back on eviction and
 //!   prefetching of the next tile in sweep order. Leases gather the
 //!   tile's per-column segments ([`for_each_tile_col`]) into a
-//!   worker-local arena and scatter them back afterwards.
+//!   worker-local arena and scatter them back afterwards. The packed
+//!   inverse weights stream from a second **read-only plane** (a sibling
+//!   `w` spill file with the same block layout) instead of staying
+//!   resident, so weighted instances pay the same bounded footprint as
+//!   unweighted ones.
+//!
+//! Besides tile leases, stores hand out **pair-range leases**
+//! ([`TileStore::with_pair_range`]): ascending contiguous segments of
+//! the packed order, which is what the CC-LP pair phase and the
+//! elementwise residual scans stream — the last solver phases that used
+//! to address the flat array directly.
 //!
 //! # The lease contract
 //!
@@ -131,6 +141,38 @@ pub trait TileStore: Sync {
         unsafe { self.with_tile(tile, scratch, f) }
     }
 
+    /// Lease the packed entries `[lo, hi)` (global column-major packed
+    /// order) as a sequence of contiguous segments, ascending: each
+    /// `f(g, x, winv)` call receives the global packed index of `x[0]`,
+    /// the segment's entries, and the matching inverse weights. Every
+    /// entry of the range is handed out exactly once, in ascending
+    /// order. With `write = true`, mutations through `x` are durable
+    /// once the call returns; with `write = false` the callback must
+    /// treat `x` as read-only (a [`MemStore`] lease aliases the live
+    /// backing, so writes would leak through; [`DiskStore`] discards
+    /// them and keeps its blocks clean).
+    ///
+    /// This is the lease the CC-LP **pair phase** and the elementwise
+    /// residual scans run on: pair updates are independent per entry, so
+    /// concurrent calls over disjoint ranges (the classic
+    /// [`chunk_range`] partition) are race-free and the disk-backed pass
+    /// is bitwise identical to the resident one.
+    ///
+    /// # Safety
+    ///
+    /// Concurrent calls must use pairwise-disjoint `[lo, hi)` ranges,
+    /// and no tile lease may overlap the range for the duration.
+    ///
+    /// [`chunk_range`]: crate::util::parallel::chunk_range
+    unsafe fn with_pair_range(
+        &self,
+        lo: usize,
+        hi: usize,
+        write: bool,
+        scratch: &mut TileScratch,
+        f: &mut dyn FnMut(usize, &mut [f64], &[f64]),
+    );
+
     /// Hint that the caller will lease `tile` soon (the next tile in its
     /// sweep order). Stores may warm their cache asynchronously; values
     /// are never modified, so prefetching cannot change results.
@@ -176,10 +218,13 @@ pub struct StoreCfg {
     /// demand). The tile file itself is `<dir>/x.tiles`.
     pub dir: PathBuf,
     /// Resident block-cache budget in bytes (disk backend; the CLI flag
-    /// is in MiB). The true resident footprint adds one `O(n · b)`
-    /// gather arena per worker plus the `O(n)` address tables. Budgets
-    /// smaller than a single block still work — the block being copied
-    /// is exempt from eviction — they just churn harder.
+    /// is in MiB), split evenly between the `X` plane and the streamed
+    /// read-only `W` plane (the packed inverse weights live in a sibling
+    /// spill file rather than staying resident — see [`DiskStore`]). The
+    /// true resident footprint adds one `O(n · b)` gather arena per
+    /// worker plus the `O(n)` address tables. Budgets smaller than a
+    /// single block still work — the block being copied is exempt from
+    /// eviction — they just churn harder.
     pub budget_bytes: usize,
 }
 

@@ -43,16 +43,17 @@ pub mod sweep;
 use self::cadence::SweepCadence;
 use self::set::{decode_key, ActiveSet};
 use self::sweep::{discovery_sweep, SweepReport};
+use super::backing::XBacking;
 use super::checkpoint::{CheckRecord, SolverState};
-use super::dykstra_parallel::run_pair_phase;
-use super::nearness::{NearnessOpts, NearnessSolution, XBacking};
+use super::dykstra_parallel::run_pair_phase_store;
+use super::nearness::{NearnessOpts, NearnessSolution};
 use super::projection::visit_triplet;
 use super::schedule::{Assignment, Schedule};
-use super::termination::{compute_residuals, compute_residuals_trusting_sweep};
+use super::termination::{compute_residuals_stored, compute_residuals_trusting_sweep_stored};
 use super::{CcState, Residuals, Solution, SolveOpts, Strategy, SweepBackend, SweepPolicy};
 use crate::instance::metric_nearness::MetricNearnessInstance;
 use crate::instance::CcLpInstance;
-use crate::matrix::store::{MemStore, StoreCfg, TileScratch, TileStore};
+use crate::matrix::store::{StoreCfg, TileScratch, TileStore};
 use crate::matrix::PackedSym;
 use crate::runtime::engine::XlaEngine;
 use crate::util::parallel::scoped_workers;
@@ -184,10 +185,30 @@ pub fn resume_cc(
 
 /// Full-control active-set entry point (resume + checkpoint sink); see
 /// [`super::dykstra_parallel::solve_checkpointed`], which dispatches
-/// here for [`Strategy::Active`].
+/// here for [`Strategy::Active`]. Runs on the in-memory store; use
+/// [`solve_cc_stored`] to pick the backend.
 pub fn solve_cc_checkpointed(
     inst: &CcLpInstance,
     opts: &SolveOpts,
+    resume_from: Option<&SolverState>,
+    on_checkpoint: &mut dyn FnMut(&SolverState),
+) -> anyhow::Result<Solution> {
+    solve_cc_stored(inst, opts, &StoreCfg::mem(), resume_from, on_checkpoint)
+}
+
+/// The active-set CC-LP driver, generic over the `X` storage backend
+/// ([`StoreCfg`]): the in-memory configuration reproduces the classic
+/// driver exactly; the disk configuration streams `X` (and the inverse
+/// weights) from a [`crate::matrix::store::DiskStore`] through every
+/// phase — sweeps, cheap active passes, the pair phase, and the
+/// residual scans — so the solve runs at `n` beyond RAM **bitwise
+/// identically** (pinned by `tests/store_equivalence.rs`). With a disk
+/// store, checkpoints reference the store file (flushed and stamped at
+/// each capture) instead of re-serializing `x`.
+pub fn solve_cc_stored(
+    inst: &CcLpInstance,
+    opts: &SolveOpts,
+    store_cfg: &StoreCfg,
     resume_from: Option<&SolverState>,
     on_checkpoint: &mut dyn FnMut(&SolverState),
 ) -> anyhow::Result<Solution> {
@@ -204,6 +225,9 @@ pub fn solve_cc_checkpointed(
         }
         None => CcState::new(inst, opts.gamma, opts.include_box),
     };
+    // The backing takes ownership of the packed iterate (state.x is left
+    // empty); every phase below leases it back through a TileStore.
+    let mut backing = XBacking::init_cc(&mut state, opts.tile, store_cfg, resume_from)?;
     let mut active = ActiveSet::new(&schedule);
     let mut triplet_visits = 0u64;
     let mut start_pass = 0usize;
@@ -240,26 +264,26 @@ pub fn solve_cc_checkpointed(
         // Pass 0 discovers — unless a warm start already seeded the set.
         let is_sweep =
             cadence.wants_sweep(pass) && !(skip_sweep_at_start && pass == start_pass);
-        {
-            let store =
-                MemStore::new(state.x.as_mut_slice(), &state.col_starts, &state.winv);
-            if is_sweep {
-                let report = discovery_sweep(
-                    &store,
+        if is_sweep {
+            let report = backing.with_store(&state.col_starts, &state.winv, |store| {
+                discovery_sweep(
+                    store,
                     &schedule,
                     &active,
                     p,
                     opts.assignment,
                     opts.sweep_backend,
                     engine.as_ref(),
-                );
-                triplet_visits += report.triplet_visits;
-                sweep_screened += report.triplet_visits;
-                sweep_projected += report.triplets_projected;
-                last_sweep = Some(report);
-            } else {
-                triplet_visits += active_pass(&store, &schedule, &active, p, opts.assignment);
-            }
+                )
+            });
+            triplet_visits += report.triplet_visits;
+            sweep_screened += report.triplet_visits;
+            sweep_projected += report.triplets_projected;
+            last_sweep = Some(report);
+        } else {
+            triplet_visits += backing.with_store(&state.col_starts, &state.winv, |store| {
+                active_pass(store, &schedule, &active, p, opts.assignment)
+            });
         }
         if is_sweep {
             cadence.note_sweep(last_sweep.expect("sweep pass recorded a report").max_violation);
@@ -267,7 +291,14 @@ pub fn solve_cc_checkpointed(
             forget::forget_inactive(&mut active, params.forget_after);
             cadence.note_cheap(active.len());
         }
-        run_pair_phase(&mut state, p);
+        {
+            let CcState { col_starts, winv, f, y_upper, y_lower, y_box, d, include_box, .. } =
+                &mut state;
+            let ib = *include_box;
+            backing.with_store(col_starts.as_slice(), winv.as_slice(), |store| {
+                run_pair_phase_store(store, f, y_upper, y_lower, y_box, d, ib, p)
+            });
+        }
         passes_done = pass + 1;
         if opts.track_pass_times {
             pass_times.push(t0.elapsed().as_secs_f64());
@@ -286,14 +317,18 @@ pub fn solve_cc_checkpointed(
                 next_check += opts.check_every;
             }
             let report = last_sweep.expect("sweep pass recorded a report");
-            let r = compute_residuals_trusting_sweep(&state, p, report.max_violation);
+            let r = backing.with_store(&state.col_starts, &state.winv, |store| {
+                compute_residuals_trusting_sweep_stored(&state, store, p, report.max_violation)
+            });
             history.push(CheckRecord {
                 pass: passes_done as u64,
                 max_violation: r.max_violation,
                 rel_gap: r.rel_gap,
             });
             if r.max_violation <= opts.tol_violation && r.rel_gap.abs() <= opts.tol_gap {
-                let exact = compute_residuals(&state, p);
+                let exact = backing.with_store(&state.col_starts, &state.winv, |store| {
+                    compute_residuals_stored(&state, store, &schedule, p)
+                });
                 // The exact confirming scan is authoritative: its values
                 // are what the history records and (on a stop) what
                 // `Solution::residuals` reports — never the sweep's
@@ -311,14 +346,15 @@ pub fn solve_cc_checkpointed(
             }
         }
         if opts.checkpoint_every > 0 && (passes_done % opts.checkpoint_every == 0 || stop) {
-            on_checkpoint(&SolverState::capture_cc_active(
+            on_checkpoint(&capture_cc_active_backed(
                 &state,
+                &mut backing,
                 &mut active,
                 passes_done,
                 triplet_visits,
                 next_check,
                 &history,
-            ));
+            )?);
             last_saved = passes_done;
         }
         if stop {
@@ -326,26 +362,34 @@ pub fn solve_cc_checkpointed(
         }
     }
     if opts.checkpoint_every > 0 && last_saved != passes_done {
-        on_checkpoint(&SolverState::capture_cc_active(
+        on_checkpoint(&capture_cc_active_backed(
             &state,
+            &mut backing,
             &mut active,
             passes_done,
             triplet_visits,
             next_check,
             &history,
-        ));
+        )?);
     }
 
     // Final residuals are always exact (the O(n^3) scan), so active and
     // full solutions are directly comparable.
-    let mut residuals = exact_at_break.unwrap_or_else(|| compute_residuals(&state, p));
+    let mut residuals = exact_at_break.unwrap_or_else(|| {
+        backing.with_store(&state.col_starts, &state.winv, |store| {
+            compute_residuals_stored(&state, store, &schedule, p)
+        })
+    });
     let active_now = active.len();
     residuals.metric_visits = triplet_visits * 3;
     residuals.active_triplets = active_now;
     residuals.sweep_screened = sweep_screened;
     residuals.sweep_projected = sweep_projected;
+    let x_final = backing.extract()?;
+    let mut xm = PackedSym::zeros(inst.n);
+    xm.as_mut_slice().copy_from_slice(&x_final);
     Ok(Solution {
-        x: state.x_matrix(),
+        x: xm,
         f: Some(state.f_matrix()),
         passes: passes_done,
         residuals,
@@ -355,6 +399,44 @@ pub fn solve_cc_checkpointed(
         active_triplets: active_now,
         sweep_screened,
         sweep_projected,
+        store_stats: backing.store_stats(),
+    })
+}
+
+/// Capture an active-strategy CC-LP checkpoint against either backing:
+/// inline `x` for the memory store, a flush-and-stamp reference for the
+/// disk store.
+fn capture_cc_active_backed(
+    state: &CcState,
+    backing: &mut XBacking,
+    active: &mut ActiveSet,
+    passes_done: usize,
+    triplet_visits: u64,
+    next_check: usize,
+    history: &[CheckRecord],
+) -> anyhow::Result<SolverState> {
+    Ok(match backing {
+        XBacking::Mem { x } => SolverState::capture_cc_active(
+            state,
+            x,
+            active,
+            passes_done,
+            triplet_visits,
+            next_check,
+            history,
+        ),
+        XBacking::Disk { store } => {
+            let x_fnv = store.flush_and_stamp(passes_done as u64)?;
+            SolverState::capture_cc_active_external(
+                state,
+                x_fnv,
+                active,
+                passes_done,
+                triplet_visits,
+                next_check,
+                history,
+            )
+        }
     })
 }
 
@@ -416,7 +498,7 @@ pub fn solve_nearness_stored(
     if let Some(st) = resume_from {
         st.validate_nearness(inst)?;
     }
-    let mut backing = XBacking::init(inst, opts.tile, store_cfg, resume_from)?;
+    let mut backing = XBacking::init_nearness(inst, opts.tile, store_cfg, resume_from)?;
     let mut active = ActiveSet::new(&schedule);
     let mut triplet_visits = 0u64;
     let mut start_pass = 0usize;

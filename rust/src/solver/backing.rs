@@ -1,0 +1,264 @@
+//! Where the packed distance variables of a solve live — resident
+//! vector (the classic path) or a disk-backed tile store with a bounded
+//! working set.
+//!
+//! [`XBacking`] is shared by every store-generic driver: the nearness
+//! solvers (full + active) and, since PR 5, the CC-LP solvers (full
+//! parallel + active). All of them lease `X` through
+//! [`TileStore`] — tile leases for the metric phases, pair-range leases
+//! for the CC pair phase and the elementwise residual scans — so the
+//! numerics are backend-independent bit for bit (pinned by
+//! `tests/store_equivalence.rs`).
+
+use super::checkpoint::SolverState;
+use super::schedule::Schedule;
+use super::CcState;
+use crate::instance::metric_nearness::MetricNearnessInstance;
+use crate::matrix::store::{DiskStore, MemStore, StoreCfg, StoreKind, TileStore};
+use anyhow::bail;
+use std::path::Path;
+
+/// Creating a fresh store must never clobber an existing file: an
+/// `x.tiles` on disk may be the only copy of an earlier run's iterate
+/// (external-x checkpoints reference it rather than inlining `x`).
+pub(crate) fn refuse_store_overwrite(path: &Path) -> anyhow::Result<()> {
+    if path.exists() {
+        bail!(
+            "refusing to overwrite the existing tile store {}: it may back an earlier \
+             run's checkpoint. Resume it (--resume <ckpt>), point --store-dir somewhere \
+             fresh, or delete the file to discard that state",
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+/// Check that an opened store and an external-x checkpoint form a
+/// consistent pair: the header stamp must match the checkpoint's
+/// `(pass, x_fnv)` exactly, and the re-derived content fingerprint must
+/// confirm the stamp — a store that advanced past (or fell behind) the
+/// checkpoint is refused instead of silently resuming from the wrong
+/// iterate.
+fn verify_stamp(store: &DiskStore, st: &SolverState, path: &Path) -> anyhow::Result<()> {
+    let (pass, fnv) = store.stamp();
+    if pass != st.pass || fnv != st.x_fnv {
+        bail!(
+            "store {} is stamped (pass {pass}, fnv {fnv:#x}) but the checkpoint expects \
+             (pass {}, fnv {:#x}); they are not a consistent pair",
+            path.display(),
+            st.pass,
+            st.x_fnv
+        );
+    }
+    let actual = store.data_fingerprint()?;
+    if actual != st.x_fnv {
+        bail!(
+            "store {} content (fnv {actual:#x}) no longer matches its stamp (fnv {:#x}); \
+             it cannot resume this checkpoint",
+            path.display(),
+            st.x_fnv
+        );
+    }
+    Ok(())
+}
+
+/// Where the packed distance variables of a solve live — resident vector
+/// (the classic path) or disk-backed tile store with a bounded working
+/// set. Shared by the CC-LP and nearness drivers; every phase leases
+/// tiles (or pair ranges) through [`TileStore`], so the numerics are
+/// backend-independent bit for bit.
+pub(crate) enum XBacking {
+    /// Resident packed `x`, leased through a fresh [`MemStore`] per
+    /// solver phase (the exact aliasing discipline of the classic
+    /// drivers).
+    Mem {
+        /// The packed iterate.
+        x: Vec<f64>,
+    },
+    /// `x` lives in a [`DiskStore`]; only the bounded block caches (the
+    /// `X` plane plus the streamed-`W` plane) and one gather arena per
+    /// worker stay resident.
+    Disk {
+        /// The tile store (owns the file handles and caches).
+        store: DiskStore,
+    },
+}
+
+impl XBacking {
+    /// Build the backing for a nearness solve: fresh from `inst.d`, or
+    /// seeded from a resume state. An inline-x state seeds either
+    /// backend; an external-x state requires the disk backend, whose
+    /// file must match the checkpoint's `(pass, x_fnv)` stamp (see
+    /// [`verify_stamp`]).
+    pub(crate) fn init_nearness(
+        inst: &MetricNearnessInstance,
+        block: usize,
+        cfg: &StoreCfg,
+        resume: Option<&SolverState>,
+    ) -> anyhow::Result<XBacking> {
+        match cfg.kind {
+            StoreKind::Mem => {
+                if resume.is_some_and(|st| st.x_external) {
+                    bail!(
+                        "checkpoint references an external x store; resume with the disk \
+                         store (--store disk --store-dir <dir>)"
+                    );
+                }
+                let mut x: Vec<f64> = inst.d.as_slice().to_vec();
+                if let Some(st) = resume {
+                    x.copy_from_slice(&st.x);
+                }
+                Ok(XBacking::Mem { x })
+            }
+            StoreKind::Disk => {
+                let winv: Vec<f64> = inst.w.as_slice().iter().map(|&v| 1.0 / v).collect();
+                let path = cfg.x_path();
+                match resume {
+                    Some(st) if st.x_external => {
+                        let store = DiskStore::open(&path, cfg.budget_bytes.max(8), winv)?;
+                        verify_stamp(&store, st, &path)?;
+                        Ok(XBacking::Disk { store })
+                    }
+                    Some(st) => {
+                        refuse_store_overwrite(&path)?;
+                        let src = &st.x;
+                        let cs = inst.d.col_starts();
+                        let store = DiskStore::create(
+                            &path,
+                            inst.n,
+                            block,
+                            cfg.budget_bytes.max(8),
+                            winv,
+                            &mut |c, r| src[cs[c] + (r - c - 1)],
+                        )?;
+                        Ok(XBacking::Disk { store })
+                    }
+                    None => {
+                        refuse_store_overwrite(&path)?;
+                        let d = &inst.d;
+                        let store = DiskStore::create(
+                            &path,
+                            inst.n,
+                            block,
+                            cfg.budget_bytes.max(8),
+                            winv,
+                            &mut |c, r| d.get(c, r),
+                        )?;
+                        Ok(XBacking::Disk { store })
+                    }
+                }
+            }
+        }
+    }
+
+    /// Build the backing for a CC-LP solve, taking ownership of the
+    /// packed `x` that [`CcState::new`] / `restore_cc_state` produced —
+    /// the state's own `x` is left empty and every further access goes
+    /// through the backing. On the disk backend the state's `winv` is
+    /// taken too (the store streams it from its W spill plane and hands
+    /// it back through every lease), so neither `O(n²)` plane stays
+    /// resident. A fresh or inline-resumed iterate seeds either backend;
+    /// an external-x state requires the disk backend and a store
+    /// matching the checkpoint stamp.
+    pub(crate) fn init_cc(
+        state: &mut CcState,
+        block: usize,
+        cfg: &StoreCfg,
+        resume: Option<&SolverState>,
+    ) -> anyhow::Result<XBacking> {
+        let x = std::mem::take(&mut state.x);
+        match cfg.kind {
+            StoreKind::Mem => {
+                if resume.is_some_and(|st| st.x_external) {
+                    bail!(
+                        "checkpoint references an external x store; resume with the disk \
+                         store (--store disk --store-dir <dir>)"
+                    );
+                }
+                Ok(XBacking::Mem { x })
+            }
+            StoreKind::Disk => {
+                // The store consumes winv to write its W spill and drops
+                // it; the disk drivers read weights back through leases,
+                // never through CcState::winv (left empty).
+                let winv = std::mem::take(&mut state.winv);
+                let path = cfg.x_path();
+                match resume {
+                    Some(st) if st.x_external => {
+                        let store = DiskStore::open(&path, cfg.budget_bytes.max(8), winv)?;
+                        verify_stamp(&store, st, &path)?;
+                        Ok(XBacking::Disk { store })
+                    }
+                    _ => {
+                        refuse_store_overwrite(&path)?;
+                        let cs = &state.col_starts;
+                        let store = DiskStore::create(
+                            &path,
+                            state.n,
+                            block,
+                            cfg.budget_bytes.max(8),
+                            winv,
+                            &mut |c, r| x[cs[c] + (r - c - 1)],
+                        )?;
+                        Ok(XBacking::Disk { store })
+                    }
+                }
+            }
+        }
+    }
+
+    /// Run one solver phase against the backing's [`TileStore`] view.
+    pub(crate) fn with_store<R>(
+        &mut self,
+        col_starts: &[usize],
+        winv: &[f64],
+        f: impl FnOnce(&dyn TileStore) -> R,
+    ) -> R {
+        match self {
+            XBacking::Mem { x } => {
+                let store = MemStore::new(x.as_mut_slice(), col_starts, winv);
+                f(&store)
+            }
+            XBacking::Disk { store } => f(&*store),
+        }
+    }
+
+    /// Exact max triangle violation of the current iterate (direct scan
+    /// for the resident backing, lease-addressed scan for the disk
+    /// backing; the values agree exactly).
+    pub(crate) fn violation(
+        &self,
+        col_starts: &[usize],
+        n: usize,
+        p: usize,
+        schedule: &Schedule,
+    ) -> f64 {
+        match self {
+            XBacking::Mem { x } => super::nearness::violation(x, col_starts, n, p),
+            XBacking::Disk { store } => {
+                super::active::sweep::exact_violation(store, schedule, p)
+            }
+        }
+    }
+
+    /// Materialize the packed iterate (`O(n²)` resident — final
+    /// extraction only).
+    pub(crate) fn extract(&self) -> anyhow::Result<Vec<f64>> {
+        match self {
+            XBacking::Mem { x } => Ok(x.clone()),
+            XBacking::Disk { store } => {
+                store.flush()?;
+                Ok(store.read_full()?)
+            }
+        }
+    }
+
+    /// Cache counters of the disk backing (`None` for the resident
+    /// path) — surfaced on `store_stats` of the solutions.
+    pub(crate) fn store_stats(&self) -> Option<crate::matrix::store::StoreStats> {
+        match self {
+            XBacking::Mem { .. } => None,
+            XBacking::Disk { store } => Some(store.stats()),
+        }
+    }
+}

@@ -31,16 +31,18 @@
 //! `history` (`u64` pass + `f64` max violation + `f64` relative gap per
 //! record).
 //!
-//! **External x** (version 2, nearness only): when flags bit 1 is set
-//! the `x` section is empty and the packed distances live in a
+//! **External x** (version 2): when flags bit 1 is set the `x` section
+//! is empty and the packed distances live in a
 //! [`crate::matrix::store::DiskStore`] tile file instead; `x_fnv` holds
 //! the store fingerprint stamped by
 //! [`crate::matrix::store::DiskStore::flush_and_stamp`] at the moment
 //! this state was captured, and the store header carries the matching
 //! `pass`. A resume re-derives the fingerprint from the store file and
 //! refuses to continue from a store that drifted past (or behind) the
-//! checkpoint. Version-1 bytes decode with `x_external = false` and
-//! `x_fnv = 0`.
+//! checkpoint. Originally defined for nearness states only; PR 5 allows
+//! it for CC-LP states too (only `x` goes external — slacks and
+//! pair/box duals stay inline, so their length checks are unchanged).
+//! Version-1 bytes decode with `x_external = false` and `x_fnv = 0`.
 //!
 //! [`decode`] validates everything it can: magic, version, checksum,
 //! section lengths against the header's `n`, key ordering and range,
@@ -343,9 +345,6 @@ pub(super) fn decode(buf: &[u8]) -> Result<SolverState, CheckpointError> {
     // --- semantic validation ------------------------------------------------
     let m = n * n.saturating_sub(1) / 2;
     if x_external {
-        if problem != Problem::Nearness {
-            return Err(corrupt("external x is only defined for nearness states"));
-        }
         if !x.is_empty() {
             return Err(corrupt("external-x state carries an inline x section"));
         }
@@ -510,6 +509,41 @@ mod tests {
         assert_eq!(s, back);
         assert!(back.x_external);
         assert_eq!(back.x_fnv, 0x1234_5678_9ABC_DEF0);
+    }
+
+    #[test]
+    fn cc_external_x_state_roundtrips() {
+        // Since PR 5, CC-LP states may also reference an external store:
+        // x empty, slacks and pair/box duals still inline.
+        let m = 6; // n = 4
+        let s = SolverState {
+            problem: Problem::CcLp,
+            n: 4,
+            gamma: 5.0,
+            pass: 3,
+            triplet_visits: 12,
+            next_check: 5,
+            skip_initial_sweep: false,
+            x_external: true,
+            x_fnv: 0xFEED,
+            x: vec![],
+            f: vec![-5.0; m],
+            y_upper: vec![0.0; m],
+            y_lower: vec![0.0; m],
+            y_box: vec![0.0; m],
+            w: vec![1.0; m],
+            d_hash: 0xBEEF,
+            metric_duals: vec![],
+            active: vec![],
+            history: vec![],
+        };
+        let back = decode(&encode(&s)).unwrap();
+        assert_eq!(s, back);
+        assert!(back.x_external);
+        // An inline x alongside the flag is still rejected for CC.
+        let mut bad = s;
+        bad.x = vec![0.0; m];
+        assert!(decode(&encode(&bad)).is_err());
     }
 
     #[test]

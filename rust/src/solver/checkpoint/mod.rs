@@ -126,8 +126,9 @@ pub struct SolverState {
     pub skip_initial_sweep: bool,
     /// True when the packed distances live in an external
     /// [`crate::matrix::store::DiskStore`] tile file instead of the
-    /// inline `x` section (nearness only). The store's header carries
-    /// the matching `pass` and `x_fnv` stamp.
+    /// inline `x` section (nearness and, since format revision 2 of
+    /// PR 5, CC-LP states — CC slacks and pair/box duals stay inline).
+    /// The store's header carries the matching `pass` and `x_fnv` stamp.
     pub x_external: bool,
     /// Tile-store fingerprint at capture time (0 unless
     /// `x_external`); a resume recomputes the store's fingerprint and
@@ -204,9 +205,12 @@ impl SolverState {
     // --- captures (called by the drivers at checkpoint boundaries) ----------
 
     /// Snapshot a full-strategy CC-LP solve. `metric_duals` must be the
-    /// key-sorted nonzero duals written by the pass just completed.
+    /// key-sorted nonzero duals written by the pass just completed; `x`
+    /// is the packed iterate (held by the driver's `XBacking`, no longer
+    /// by `CcState` itself).
     pub(crate) fn capture_cc_full(
         state: &CcState,
+        x: &[f64],
         metric_duals: Vec<(u64, f64)>,
         pass: usize,
         triplet_visits: u64,
@@ -223,7 +227,7 @@ impl SolverState {
             skip_initial_sweep: false,
             x_external: false,
             x_fnv: 0,
-            x: state.x.clone(),
+            x: x.to_vec(),
             f: state.f.clone(),
             y_upper: state.y_upper.clone(),
             y_lower: state.y_lower.clone(),
@@ -236,9 +240,11 @@ impl SolverState {
         }
     }
 
-    /// Snapshot an active-strategy CC-LP solve.
+    /// Snapshot an active-strategy CC-LP solve (`x` supplied by the
+    /// driver's backing, as in [`SolverState::capture_cc_full`]).
     pub(crate) fn capture_cc_active(
         state: &CcState,
+        x: &[f64],
         active: &mut ActiveSet,
         pass: usize,
         triplet_visits: u64,
@@ -256,7 +262,7 @@ impl SolverState {
             skip_initial_sweep: false,
             x_external: false,
             x_fnv: 0,
-            x: state.x.clone(),
+            x: x.to_vec(),
             f: state.f.clone(),
             y_upper: state.y_upper.clone(),
             y_lower: state.y_lower.clone(),
@@ -267,6 +273,57 @@ impl SolverState {
             active: members,
             history: history.to_vec(),
         }
+    }
+
+    /// Snapshot a full-strategy CC-LP solve whose `x` lives in an
+    /// external tile store. `x_fnv` must be the fingerprint returned by
+    /// [`crate::matrix::store::DiskStore::flush_and_stamp`] for this
+    /// exact pass, so the checkpoint and the store file form a
+    /// consistent pair. Slacks and pair/box duals stay inline.
+    pub(crate) fn capture_cc_full_external(
+        state: &CcState,
+        x_fnv: u64,
+        metric_duals: Vec<(u64, f64)>,
+        pass: usize,
+        triplet_visits: u64,
+        history: &[CheckRecord],
+    ) -> SolverState {
+        let mut st = SolverState::capture_cc_full(
+            state,
+            &[],
+            metric_duals,
+            pass,
+            triplet_visits,
+            history,
+        );
+        st.x_external = true;
+        st.x_fnv = x_fnv;
+        st
+    }
+
+    /// Snapshot an active-strategy CC-LP solve whose `x` lives in an
+    /// external tile store (see [`SolverState::capture_cc_full_external`]).
+    pub(crate) fn capture_cc_active_external(
+        state: &CcState,
+        x_fnv: u64,
+        active: &mut ActiveSet,
+        pass: usize,
+        triplet_visits: u64,
+        next_check: usize,
+        history: &[CheckRecord],
+    ) -> SolverState {
+        let mut st = SolverState::capture_cc_active(
+            state,
+            &[],
+            active,
+            pass,
+            triplet_visits,
+            next_check,
+            history,
+        );
+        st.x_external = true;
+        st.x_fnv = x_fnv;
+        st
     }
 
     /// Snapshot a full-strategy nearness solve.
@@ -464,10 +521,15 @@ impl SolverState {
         Ok(())
     }
 
-    /// Rebuild the mutable CC solve state this snapshot describes.
+    /// Rebuild the mutable CC solve state this snapshot describes. For
+    /// external-x states the packed distances live in the tile store the
+    /// driver's backing opens, so the state's `x` is left at its
+    /// placeholder (the backing takes it over either way).
     pub(crate) fn restore_cc_state(&self, inst: &CcLpInstance, opts: &SolveOpts) -> CcState {
         let mut st = CcState::new(inst, opts.gamma, opts.include_box);
-        st.x.copy_from_slice(&self.x);
+        if !self.x_external {
+            st.x.copy_from_slice(&self.x);
+        }
         st.f.copy_from_slice(&self.f);
         st.y_upper.copy_from_slice(&self.y_upper);
         st.y_lower.copy_from_slice(&self.y_lower);

@@ -72,7 +72,10 @@ pub fn warm_start_cc(
             state.n, inst.n
         )));
     }
-    let m = state.x.len();
+    // Sized off the (always-inline) weights, not `x`: the primal is
+    // rebuilt from the Dykstra invariant below, so external-x states —
+    // whose `x` section is empty — warm start like inline ones.
+    let m = state.w.len();
     let w_new = inst.w.as_slice();
     let w_old = state.w.as_slice();
     debug_assert_eq!(w_new.len(), m);

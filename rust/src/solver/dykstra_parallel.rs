@@ -14,14 +14,16 @@
 //! constraint *order* (hence the iterate sequence) differs from the serial
 //! baseline, which §IV-D discusses; both converge.
 
+use super::backing::XBacking;
 use super::checkpoint::{self, CheckRecord, SolverState};
 use super::duals::DualStore;
-use super::projection::{visit_box_upper, visit_pair_lower, visit_pair_upper};
+use super::projection::{visit_box_upper_val, visit_pair_lower_val, visit_pair_upper_val};
 use super::schedule::{next_owned_tile, Assignment, Schedule};
-use super::termination::compute_residuals;
+use super::termination::compute_residuals_stored;
 use super::{CcState, Residuals, Solution, SolveOpts};
 use crate::instance::CcLpInstance;
-use crate::matrix::store::{MemStore, TileScratch, TileStore};
+use crate::matrix::store::{MemStore, StoreCfg, TileScratch, TileStore};
+use crate::matrix::PackedSym;
 use crate::util::parallel::{chunk_range, scoped_workers};
 use crate::util::shared::{PerWorker, SharedMut};
 
@@ -49,18 +51,40 @@ pub fn resume(
 /// Full-control entry point: optionally resume from a saved state and
 /// receive a [`SolverState`] through `on_checkpoint` every
 /// [`SolveOpts::checkpoint_every`] passes (plus one for the final
-/// state). Dispatches on [`super::Strategy`].
+/// state). Dispatches on [`super::Strategy`]. Runs on the in-memory
+/// store; use [`solve_stored`] to pick the backend.
 pub fn solve_checkpointed(
     inst: &CcLpInstance,
     opts: &SolveOpts,
     resume_from: Option<&SolverState>,
     on_checkpoint: &mut dyn FnMut(&SolverState),
 ) -> anyhow::Result<Solution> {
+    solve_stored(inst, opts, &StoreCfg::mem(), resume_from, on_checkpoint)
+}
+
+/// [`solve_checkpointed`] with an explicit `X` storage backend
+/// ([`StoreCfg`]): the memory configuration is the classic resident
+/// solve; the disk configuration streams `X` (and the instance's
+/// inverse weights) through a bounded
+/// [`crate::matrix::store::DiskStore`] working set — every phase,
+/// including the pair phase and the residual scans, leases its entries
+/// from the store, so the CC-LP solve runs at `n` beyond RAM bitwise
+/// identically to the resident solve (pinned by
+/// `tests/store_equivalence.rs`). With a disk store, checkpoints
+/// reference the flushed-and-stamped store file instead of
+/// re-serializing `x`. Dispatches on [`super::Strategy`].
+pub fn solve_stored(
+    inst: &CcLpInstance,
+    opts: &SolveOpts,
+    store_cfg: &StoreCfg,
+    resume_from: Option<&SolverState>,
+    on_checkpoint: &mut dyn FnMut(&SolverState),
+) -> anyhow::Result<Solution> {
     if opts.strategy.is_active() {
-        return super::active::solve_cc_checkpointed(inst, opts, resume_from, on_checkpoint);
+        return super::active::solve_cc_stored(inst, opts, store_cfg, resume_from, on_checkpoint);
     }
     let schedule = Schedule::new(inst.n, opts.tile);
-    solve_inner(inst, opts, &schedule, resume_from, on_checkpoint)
+    solve_inner(inst, opts, &schedule, store_cfg, resume_from, on_checkpoint)
 }
 
 /// Solve with a prebuilt schedule (benchmarks reuse schedules across
@@ -70,7 +94,7 @@ pub fn solve_with_schedule(
     opts: &SolveOpts,
     schedule: &Schedule,
 ) -> Solution {
-    solve_inner(inst, opts, schedule, None, &mut |_| {})
+    solve_inner(inst, opts, schedule, &StoreCfg::mem(), None, &mut |_| {})
         .expect("cold parallel solve cannot fail")
 }
 
@@ -78,6 +102,7 @@ fn solve_inner(
     inst: &CcLpInstance,
     opts: &SolveOpts,
     schedule: &Schedule,
+    store_cfg: &StoreCfg,
     resume_from: Option<&SolverState>,
     on_checkpoint: &mut dyn FnMut(&SolverState),
 ) -> anyhow::Result<Solution> {
@@ -95,6 +120,9 @@ fn solve_inner(
         }
         None => CcState::new(inst, opts.gamma, opts.include_box),
     };
+    // The backing takes ownership of the packed iterate (state.x is left
+    // empty); every phase below leases it back through a TileStore.
+    let mut backing = XBacking::init_cc(&mut state, opts.tile, store_cfg, resume_from)?;
     let mut stores = PerWorker::new((0..p).map(|_| DualStore::new()).collect());
     if let Some(st) = resume_from {
         // Redistribute the saved key-sorted duals into each worker's
@@ -119,8 +147,17 @@ fn solve_inner(
 
     for pass in start_pass..opts.max_passes {
         let t0 = std::time::Instant::now();
-        run_metric_phase(&mut state, schedule, &stores, p, opts.assignment);
-        run_pair_phase(&mut state, p);
+        backing.with_store(&state.col_starts, &state.winv, |store| {
+            run_metric_phase_store(store, schedule, &stores, p, opts.assignment)
+        });
+        {
+            let CcState { col_starts, winv, f, y_upper, y_lower, y_box, d, include_box, .. } =
+                &mut state;
+            let ib = *include_box;
+            backing.with_store(col_starts.as_slice(), winv.as_slice(), |store| {
+                run_pair_phase_store(store, f, y_upper, y_lower, y_box, d, ib, p)
+            });
+        }
         passes_done = pass + 1;
         triplet_visits += triplets_per_pass;
         if opts.track_pass_times {
@@ -128,7 +165,9 @@ fn solve_inner(
         }
         let mut stop = false;
         if opts.check_every > 0 && passes_done % opts.check_every == 0 {
-            residuals = compute_residuals(&state, p);
+            residuals = backing.with_store(&state.col_starts, &state.winv, |store| {
+                compute_residuals_stored(&state, store, schedule, p)
+            });
             residuals.stamp_work(triplet_visits, triplets_per_pass as usize);
             measured_at = passes_done;
             history.push(CheckRecord {
@@ -143,13 +182,14 @@ fn solve_inner(
             }
         }
         if opts.checkpoint_every > 0 && (passes_done % opts.checkpoint_every == 0 || stop) {
-            on_checkpoint(&SolverState::capture_cc_full(
+            on_checkpoint(&capture_cc_full_backed(
                 &state,
+                &mut backing,
                 checkpoint::collect_duals(&mut stores),
                 passes_done,
                 triplet_visits,
                 &history,
-            ));
+            )?);
             last_saved = passes_done;
         }
         if stop {
@@ -157,24 +197,30 @@ fn solve_inner(
         }
     }
     if opts.checkpoint_every > 0 && last_saved != passes_done {
-        on_checkpoint(&SolverState::capture_cc_full(
+        on_checkpoint(&capture_cc_full_backed(
             &state,
+            &mut backing,
             checkpoint::collect_duals(&mut stores),
             passes_done,
             triplet_visits,
             &history,
-        ));
+        )?);
     }
     // Re-measure unless the last checkpoint already measured the final
     // iterate — reported residuals always describe the returned x.
     if measured_at != passes_done {
-        residuals = compute_residuals(&state, p);
+        residuals = backing.with_store(&state.col_starts, &state.winv, |store| {
+            compute_residuals_stored(&state, store, schedule, p)
+        });
         residuals.stamp_work(triplet_visits, triplets_per_pass as usize);
     }
     let mut stores = stores.into_inner();
     let nnz = stores.iter_mut().map(|s| s.nnz()).sum();
+    let x_final = backing.extract()?;
+    let mut xm = PackedSym::zeros(inst.n);
+    xm.as_mut_slice().copy_from_slice(&x_final);
     Ok(Solution {
-        x: state.x_matrix(),
+        x: xm,
         f: Some(state.f_matrix()),
         passes: passes_done,
         residuals,
@@ -184,10 +230,49 @@ fn solve_inner(
         active_triplets: triplets_per_pass as usize,
         sweep_screened: 0,
         sweep_projected: 0,
+        store_stats: backing.store_stats(),
+    })
+}
+
+/// Capture a full-strategy CC-LP checkpoint against either backing:
+/// inline `x` for the memory store, a flush-and-stamp reference for the
+/// disk store.
+fn capture_cc_full_backed(
+    state: &CcState,
+    backing: &mut XBacking,
+    metric_duals: Vec<(u64, f64)>,
+    passes_done: usize,
+    triplet_visits: u64,
+    history: &[CheckRecord],
+) -> anyhow::Result<SolverState> {
+    Ok(match backing {
+        XBacking::Mem { x } => SolverState::capture_cc_full(
+            state,
+            x,
+            metric_duals,
+            passes_done,
+            triplet_visits,
+            history,
+        ),
+        XBacking::Disk { store } => {
+            let x_fnv = store.flush_and_stamp(passes_done as u64)?;
+            SolverState::capture_cc_full_external(
+                state,
+                x_fnv,
+                metric_duals,
+                passes_done,
+                triplet_visits,
+                history,
+            )
+        }
     })
 }
 
 /// One wave-parallel sweep over all metric constraints (resident `x`).
+/// The drivers now lease `x` through their backing and call
+/// [`run_metric_phase_store`] directly; this wrapper remains for tests
+/// that pin the sweep against the classic resident pass.
+#[cfg_attr(not(test), allow(dead_code))]
 pub(crate) fn run_metric_phase(
     state: &mut CcState,
     schedule: &Schedule,
@@ -247,33 +332,74 @@ pub(crate) fn run_metric_phase_store(
     });
 }
 
-/// Pair (+ box) constraints: one independent 2-3 constraint block per pair,
-/// embarrassingly parallel over contiguous chunks.
+/// Pair (+ box) constraints: one independent 2-3 constraint block per
+/// pair, embarrassingly parallel over contiguous chunks of the resident
+/// state (classic entry point, used by the serial-order and XLA drivers
+/// and the timing simulator). Implemented as a [`MemStore`] pass through
+/// [`run_pair_phase_store`] — bitwise identical to the historic direct
+/// loop, since the mem lease hands each worker its exact global chunk.
 pub(crate) fn run_pair_phase(state: &mut CcState, p: usize) {
-    let m = state.x.len();
-    let include_box = state.include_box;
-    let x = SharedMut::new(state.x.as_mut_slice());
-    let f = SharedMut::new(state.f.as_mut_slice());
-    let yu = SharedMut::new(state.y_upper.as_mut_slice());
-    let yl = SharedMut::new(state.y_lower.as_mut_slice());
-    let yb = SharedMut::new(state.y_box.as_mut_slice());
-    let winv = state.winv.as_slice();
-    let d = state.d.as_slice();
+    let CcState { x, col_starts, winv, f, y_upper, y_lower, y_box, d, include_box, .. } = state;
+    let store = MemStore::new(x.as_mut_slice(), col_starts.as_slice(), winv.as_slice());
+    run_pair_phase_store(&store, f, y_upper, y_lower, y_box, d, *include_box, p);
+}
+
+/// Pair (+ box) constraints against a [`TileStore`]: each worker leases
+/// its contiguous chunk of the packed order
+/// ([`TileStore::with_pair_range`]) and runs the same independent 2-3
+/// constraint block per pair. The partition, per-entry visit order, and
+/// arithmetic match the classic resident phase exactly — elementwise
+/// updates are order-independent across entries — so the disk-backed
+/// pair phase is bitwise identical to the resident one. Slacks, pair
+/// and box duals, and the targets stay resident (`O(n²)` each); only
+/// `x` and the inverse weights stream.
+#[allow(unused_unsafe)]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_pair_phase_store(
+    store: &dyn TileStore,
+    f: &mut [f64],
+    y_upper: &mut [f64],
+    y_lower: &mut [f64],
+    y_box: &mut [f64],
+    d: &[f64],
+    include_box: bool,
+    p: usize,
+) {
+    let m = store.n_pairs();
+    debug_assert_eq!(f.len(), m);
+    let fs = SharedMut::new(f);
+    let yu = SharedMut::new(y_upper);
+    let yl = SharedMut::new(y_lower);
+    let yb = SharedMut::new(y_box);
     scoped_workers(p, |tid, _| {
         let (lo, hi) = chunk_range(m, p, tid);
-        for e in lo..hi {
-            // SAFETY: chunks are disjoint; each pair's variables are
-            // touched only by this worker.
-            unsafe {
-                let t = visit_pair_upper(&x, &f, winv, d, e, yu.get(e));
-                yu.set(e, t);
-                let t = visit_pair_lower(&x, &f, winv, d, e, yl.get(e));
-                yl.set(e, t);
-                if include_box {
-                    let t = visit_box_upper(&x, winv, e, yb.get(e));
-                    yb.set(e, t);
+        let mut scratch = TileScratch::default();
+        // SAFETY: chunks are disjoint -> the pair-range lease contract
+        // holds, and each pair's variables (the leased x entry plus the
+        // resident f/y lanes at the same index) are touched by this
+        // worker only.
+        unsafe {
+            store.with_pair_range(lo, hi, true, &mut scratch, &mut |g, xs, wv| {
+                for (t, xv) in xs.iter_mut().enumerate() {
+                    let e = g + t;
+                    let w = wv[t];
+                    // SAFETY: e lies inside this worker's chunk and in
+                    // bounds of every packed array.
+                    unsafe {
+                        let de = *d.get_unchecked(e);
+                        let mut fv = fs.get(e);
+                        let th = visit_pair_upper_val(xv, &mut fv, w, de, yu.get(e));
+                        yu.set(e, th);
+                        let th = visit_pair_lower_val(xv, &mut fv, w, de, yl.get(e));
+                        yl.set(e, th);
+                        fs.set(e, fv);
+                        if include_box {
+                            let th = visit_box_upper_val(xv, w, yb.get(e));
+                            yb.set(e, th);
+                        }
+                    }
                 }
-            }
+            });
         }
     });
 }

@@ -43,6 +43,12 @@ pub fn solve_checkpointed(
         !opts.strategy.is_active(),
         "dykstra_serial runs the full strategy only; use dykstra_parallel::solve for Strategy::Active"
     );
+    if resume_from.is_some_and(|st| st.x_external) {
+        anyhow::bail!(
+            "checkpoint references an external x store; resume through the parallel \
+             driver's disk backend (dykstra_parallel::solve_stored / --store disk)"
+        );
+    }
     let mut state = match resume_from {
         Some(st) => {
             st.validate_cc(inst, opts)?;
@@ -94,9 +100,11 @@ pub fn solve_checkpointed(
             }
         }
         if opts.checkpoint_every > 0 && (passes_done % opts.checkpoint_every == 0 || stop) {
+            let duals = store.iter_next().collect();
             on_checkpoint(&SolverState::capture_cc_full(
                 &state,
-                store.iter_next().collect(),
+                &state.x,
+                duals,
                 passes_done,
                 triplet_visits,
                 &history,
@@ -108,9 +116,11 @@ pub fn solve_checkpointed(
         }
     }
     if opts.checkpoint_every > 0 && last_saved != passes_done {
+        let duals = store.iter_next().collect();
         on_checkpoint(&SolverState::capture_cc_full(
             &state,
-            store.iter_next().collect(),
+            &state.x,
+            duals,
             passes_done,
             triplet_visits,
             &history,
@@ -134,6 +144,7 @@ pub fn solve_checkpointed(
         active_triplets: triplets_per_pass as usize,
         sweep_screened: 0,
         sweep_projected: 0,
+        store_stats: None,
     })
 }
 

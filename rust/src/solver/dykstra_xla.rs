@@ -179,6 +179,7 @@ pub fn solve(inst: &CcLpInstance, opts: &SolveOpts, engine: &XlaEngine) -> Resul
         active_triplets: n_triplets,
         sweep_screened: 0,
         sweep_projected: 0,
+        store_stats: None,
     })
 }
 

@@ -15,13 +15,17 @@
 //! sparsity, and parallelism, exactly as in the paper (§III-A: "this
 //! amounts simply to a re-ordering of constraints").
 //!
-//! The metric phases lease each tile's working set from a
-//! [`crate::matrix::store::TileStore`] rather than addressing a flat
-//! array, so the same passes run over the resident packed matrix or an
-//! out-of-core disk store (`--store disk`) — bitwise identically. See
+//! Every phase leases `x` from a [`crate::matrix::store::TileStore`]
+//! rather than addressing a flat array — the metric phases through tile
+//! leases, the CC pair phase and the residual scans through ascending
+//! pair-range leases — so the same passes run over the resident packed
+//! matrix or an out-of-core disk store (`--store disk`, for `solve` and
+//! `nearness` alike) bitwise identically. The per-driver `x` ownership
+//! lives in the crate-private `backing` module (`XBacking`). See
 //! `docs/ARCHITECTURE.md` for the full data-flow picture.
 
 pub mod active;
+pub(crate) mod backing;
 pub mod checkpoint;
 pub mod duals;
 pub mod dykstra_parallel;
@@ -304,6 +308,12 @@ pub struct Solution {
     /// Sweep triplets that actually needed a projection — see
     /// [`Residuals::sweep_projected`].
     pub sweep_projected: u64,
+    /// Tile-store cache counters when the solve ran on a disk store
+    /// (`None` for the resident path) — block loads, evictions,
+    /// write-backs, streamed-`W` loads, and the peak resident cache
+    /// bytes, mirroring
+    /// [`nearness::NearnessSolution::store_stats`].
+    pub store_stats: Option<crate::matrix::store::StoreStats>,
 }
 
 /// Mutable state of a CC-LP solve, shared by both solvers.

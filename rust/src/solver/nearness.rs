@@ -8,17 +8,17 @@
 //! orientations `x_ik - x_ij - x_jk <= 0` and `x_jk - x_ij - x_ik <= 0`
 //! gives `x_ij >= 0` at any feasible point.
 
+use super::backing::XBacking;
 use super::checkpoint::{self, CheckRecord, SolverState};
 use super::duals::DualStore;
 use super::dykstra_parallel::run_metric_phase_store;
 use super::schedule::{Assignment, Schedule};
 use super::{Strategy, SweepBackend, SweepPolicy};
 use crate::instance::metric_nearness::MetricNearnessInstance;
-use crate::matrix::store::{DiskStore, MemStore, StoreCfg, StoreKind, TileStore};
+use crate::matrix::store::StoreCfg;
 use crate::matrix::PackedSym;
 use crate::util::parallel::par_reduce_max;
 use crate::util::shared::{PerWorker, SharedMut};
-use anyhow::bail;
 
 /// Options for a nearness solve (subset of the CC-LP options).
 #[derive(Clone, Copy, Debug)]
@@ -130,7 +130,8 @@ pub fn solve_checkpointed(
 /// [`solve_checkpointed`] with an explicit `X` storage backend
 /// ([`StoreCfg`]): the memory configuration is the classic resident
 /// solve; the disk configuration streams `X` through a bounded
-/// [`DiskStore`] working set so the solve runs at `n` beyond RAM,
+/// [`crate::matrix::store::DiskStore`] working set so the solve runs at
+/// `n` beyond RAM,
 /// bitwise identically (pinned by `tests/store_equivalence.rs`). With a
 /// disk store, checkpoints reference the flushed-and-stamped store file
 /// instead of re-serializing `x`. Dispatches on
@@ -164,7 +165,7 @@ pub fn solve_stored(
             store.restore(entries);
         }
     }
-    let mut backing = XBacking::init(inst, opts.tile, store_cfg, resume_from)?;
+    let mut backing = XBacking::init_nearness(inst, opts.tile, store_cfg, resume_from)?;
     let start_pass = resume_from.map_or(0, |st| st.pass as usize);
     let mut history: Vec<CheckRecord> =
         resume_from.map(|st| st.history.clone()).unwrap_or_default();
@@ -276,186 +277,6 @@ fn capture_nearness_full_backed(
             )
         }
     })
-}
-
-/// Creating a fresh store must never clobber an existing file: an
-/// `x.tiles` on disk may be the only copy of an earlier run's iterate
-/// (external-x checkpoints reference it rather than inlining `x`).
-fn refuse_store_overwrite(path: &std::path::Path) -> anyhow::Result<()> {
-    if path.exists() {
-        bail!(
-            "refusing to overwrite the existing tile store {}: it may back an earlier \
-             run's checkpoint. Resume it (--resume <ckpt>), point --store-dir somewhere \
-             fresh, or delete the file to discard that state",
-            path.display()
-        );
-    }
-    Ok(())
-}
-
-/// Where the packed distance variables of a nearness solve live —
-/// resident vector (the classic path) or disk-backed tile store with a
-/// bounded working set. Shared by the full and active nearness drivers;
-/// both lease tiles through [`TileStore`], so the numerics are
-/// backend-independent bit for bit.
-pub(crate) enum XBacking {
-    /// Resident packed `x`, leased through a fresh [`MemStore`] per
-    /// solver phase (the exact aliasing discipline of the classic
-    /// drivers).
-    Mem {
-        /// The packed iterate.
-        x: Vec<f64>,
-    },
-    /// `x` lives in a [`DiskStore`]; only the block cache plus one
-    /// gather arena per worker stays resident.
-    Disk {
-        /// The tile store (owns the file handle and cache).
-        store: DiskStore,
-    },
-}
-
-impl XBacking {
-    /// Build the backing for a solve: fresh from `inst.d`, or seeded
-    /// from a resume state. An inline-x state seeds either backend; an
-    /// external-x state requires the disk backend, whose file must match
-    /// the checkpoint's `(pass, x_fnv)` stamp — including a re-derived
-    /// content fingerprint, so a store that advanced past (or fell
-    /// behind) the checkpoint is refused instead of silently resuming
-    /// from the wrong iterate.
-    pub(crate) fn init(
-        inst: &MetricNearnessInstance,
-        block: usize,
-        cfg: &StoreCfg,
-        resume: Option<&SolverState>,
-    ) -> anyhow::Result<XBacking> {
-        match cfg.kind {
-            StoreKind::Mem => {
-                if resume.is_some_and(|st| st.x_external) {
-                    bail!(
-                        "checkpoint references an external x store; resume with the disk \
-                         store (--store disk --store-dir <dir>)"
-                    );
-                }
-                let mut x: Vec<f64> = inst.d.as_slice().to_vec();
-                if let Some(st) = resume {
-                    x.copy_from_slice(&st.x);
-                }
-                Ok(XBacking::Mem { x })
-            }
-            StoreKind::Disk => {
-                let winv: Vec<f64> = inst.w.as_slice().iter().map(|&v| 1.0 / v).collect();
-                let path = cfg.x_path();
-                match resume {
-                    Some(st) if st.x_external => {
-                        let store = DiskStore::open(&path, cfg.budget_bytes.max(8), winv)?;
-                        let (pass, fnv) = store.stamp();
-                        if pass != st.pass || fnv != st.x_fnv {
-                            bail!(
-                                "store {} is stamped (pass {pass}, fnv {fnv:#x}) but the \
-                                 checkpoint expects (pass {}, fnv {:#x}); they are not a \
-                                 consistent pair",
-                                path.display(),
-                                st.pass,
-                                st.x_fnv
-                            );
-                        }
-                        let actual = store.data_fingerprint()?;
-                        if actual != st.x_fnv {
-                            bail!(
-                                "store {} content (fnv {actual:#x}) no longer matches its \
-                                 stamp (fnv {:#x}); it cannot resume this checkpoint",
-                                path.display(),
-                                st.x_fnv
-                            );
-                        }
-                        Ok(XBacking::Disk { store })
-                    }
-                    Some(st) => {
-                        refuse_store_overwrite(&path)?;
-                        let src = &st.x;
-                        let cs = inst.d.col_starts();
-                        let store = DiskStore::create(
-                            &path,
-                            inst.n,
-                            block,
-                            cfg.budget_bytes.max(8),
-                            winv,
-                            &mut |c, r| src[cs[c] + (r - c - 1)],
-                        )?;
-                        Ok(XBacking::Disk { store })
-                    }
-                    None => {
-                        refuse_store_overwrite(&path)?;
-                        let d = &inst.d;
-                        let store = DiskStore::create(
-                            &path,
-                            inst.n,
-                            block,
-                            cfg.budget_bytes.max(8),
-                            winv,
-                            &mut |c, r| d.get(c, r),
-                        )?;
-                        Ok(XBacking::Disk { store })
-                    }
-                }
-            }
-        }
-    }
-
-    /// Run one solver phase against the backing's [`TileStore`] view.
-    pub(crate) fn with_store<R>(
-        &mut self,
-        col_starts: &[usize],
-        winv: &[f64],
-        f: impl FnOnce(&dyn TileStore) -> R,
-    ) -> R {
-        match self {
-            XBacking::Mem { x } => {
-                let store = MemStore::new(x.as_mut_slice(), col_starts, winv);
-                f(&store)
-            }
-            XBacking::Disk { store } => f(&*store),
-        }
-    }
-
-    /// Exact max triangle violation of the current iterate (direct scan
-    /// for the resident backing, lease-addressed scan for the disk
-    /// backing; the values agree exactly).
-    pub(crate) fn violation(
-        &self,
-        col_starts: &[usize],
-        n: usize,
-        p: usize,
-        schedule: &Schedule,
-    ) -> f64 {
-        match self {
-            XBacking::Mem { x } => violation(x, col_starts, n, p),
-            XBacking::Disk { store } => {
-                super::active::sweep::exact_violation(store, schedule, p)
-            }
-        }
-    }
-
-    /// Materialize the packed iterate (`O(n²)` resident — final
-    /// extraction only).
-    pub(crate) fn extract(&self) -> anyhow::Result<Vec<f64>> {
-        match self {
-            XBacking::Mem { x } => Ok(x.clone()),
-            XBacking::Disk { store } => {
-                store.flush()?;
-                Ok(store.read_full()?)
-            }
-        }
-    }
-
-    /// Cache counters of the disk backing (`None` for the resident
-    /// path) — surfaced on [`NearnessSolution::store_stats`].
-    pub(crate) fn store_stats(&self) -> Option<crate::matrix::store::StoreStats> {
-        match self {
-            XBacking::Mem { .. } => None,
-            XBacking::Disk { store } => Some(store.stats()),
-        }
-    }
 }
 
 /// Serial baseline with the standard lexicographic order ([36]/[37]).

@@ -297,6 +297,50 @@ pub unsafe fn visit_box_upper(x: &SharedMut<f64>, winv: &[f64], e: usize, y: f64
     theta
 }
 
+/// Value-based [`visit_pair_upper`]: identical arithmetic with the
+/// distance entry supplied directly — the streamed pair phase holds `x`
+/// in a leased segment ([`TileStore::with_pair_range`]) rather than a
+/// global view. Bitwise equal to the indexed variant by construction
+/// (same reads, same operation order, same writes).
+///
+/// [`TileStore::with_pair_range`]: crate::matrix::store::TileStore::with_pair_range
+#[inline(always)]
+pub fn visit_pair_upper_val(xv: &mut f64, fv: &mut f64, w: f64, d: f64, y: f64) -> f64 {
+    let delta = *xv - *fv - d + 2.0 * y * w;
+    let theta = if delta > 0.0 { delta / (2.0 * w) } else { 0.0 };
+    let c = y - theta;
+    if c != 0.0 {
+        *xv += c * w;
+        *fv -= c * w;
+    }
+    theta
+}
+
+/// Value-based [`visit_pair_lower`] (see [`visit_pair_upper_val`]).
+#[inline(always)]
+pub fn visit_pair_lower_val(xv: &mut f64, fv: &mut f64, w: f64, d: f64, y: f64) -> f64 {
+    let delta = d - *xv - *fv + 2.0 * y * w;
+    let theta = if delta > 0.0 { delta / (2.0 * w) } else { 0.0 };
+    let c = y - theta;
+    if c != 0.0 {
+        *xv -= c * w;
+        *fv -= c * w;
+    }
+    theta
+}
+
+/// Value-based [`visit_box_upper`] (see [`visit_pair_upper_val`]).
+#[inline(always)]
+pub fn visit_box_upper_val(xv: &mut f64, w: f64, y: f64) -> f64 {
+    let delta = *xv + y * w - 1.0;
+    let theta = if delta > 0.0 { delta / w } else { 0.0 };
+    let c = y - theta;
+    if c != 0.0 {
+        *xv += c * w;
+    }
+    theta
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -468,6 +512,46 @@ mod tests {
         let theta = unsafe { visit_box_upper(&x, &winv, 0, 0.0) };
         assert!((theta - 0.25).abs() < 1e-12); // delta 0.5 / w 2.0
         assert!((xv[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn value_based_pair_visits_match_indexed_bitwise() {
+        // The streamed pair phase relies on the _val variants being
+        // bitwise interchangeable with the indexed visits — pin it.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(77);
+        for _ in 0..2000 {
+            let x0 = rng.f64_in(-1.5, 2.5);
+            let f0 = rng.f64_in(-1.0, 1.0);
+            let w = rng.f64_in(0.3, 3.0);
+            let d = rng.f64_in(0.0, 1.0);
+            let yu = if rng.bool(0.5) { rng.f64_in(0.0, 0.8) } else { 0.0 };
+            let yl = if rng.bool(0.5) { rng.f64_in(0.0, 0.8) } else { 0.0 };
+            let ybx = if rng.bool(0.5) { rng.f64_in(0.0, 0.8) } else { 0.0 };
+            let mut xa = vec![x0];
+            let mut fa = vec![f0];
+            let winv = vec![w];
+            let dd = vec![d];
+            let (tu_a, tl_a, tb_a);
+            {
+                let xs = SharedMut::new(xa.as_mut_slice());
+                let fs = SharedMut::new(fa.as_mut_slice());
+                unsafe {
+                    tu_a = visit_pair_upper(&xs, &fs, &winv, &dd, 0, yu);
+                    tl_a = visit_pair_lower(&xs, &fs, &winv, &dd, 0, yl);
+                    tb_a = visit_box_upper(&xs, &winv, 0, ybx);
+                }
+            }
+            let (mut xb, mut fb) = (x0, f0);
+            let tu_b = visit_pair_upper_val(&mut xb, &mut fb, w, d, yu);
+            let tl_b = visit_pair_lower_val(&mut xb, &mut fb, w, d, yl);
+            let tb_b = visit_box_upper_val(&mut xb, w, ybx);
+            assert_eq!(xa[0].to_bits(), xb.to_bits());
+            assert_eq!(fa[0].to_bits(), fb.to_bits());
+            assert_eq!(tu_a.to_bits(), tu_b.to_bits());
+            assert_eq!(tl_a.to_bits(), tl_b.to_bits());
+            assert_eq!(tb_a.to_bits(), tb_b.to_bits());
+        }
     }
 
     #[test]

@@ -14,8 +14,11 @@
 //! from the latest discovery sweep — which, by construction, is the last
 //! time every metric row was actually measured.
 
+use super::schedule::Schedule;
 use super::{CcState, Residuals};
-use crate::util::parallel::{par_reduce_max, par_reduce_sum};
+use crate::matrix::store::{TileScratch, TileStore};
+use crate::util::parallel::{chunk_range, par_reduce_max, par_reduce_sum, scoped_workers};
+use crate::util::shared::PerWorker;
 
 /// Compute all residuals with `p` worker threads (exact everywhere).
 pub fn compute_residuals(state: &CcState, p: usize) -> Residuals {
@@ -32,6 +35,36 @@ pub fn compute_residuals_trusting_sweep(
     sweep_metric_violation: f64,
 ) -> Residuals {
     finish_residuals(state, p, sweep_metric_violation)
+}
+
+/// [`compute_residuals`] against a [`TileStore`] instead of the resident
+/// `state.x`: the metric term is the lease-addressed exact scan
+/// ([`crate::solver::active::sweep::exact_violation`], a plain max of
+/// the same residuals as [`metric_violation`]), and every elementwise
+/// term streams `x` through pair-range leases while reproducing the
+/// exact chunking and accumulation order of the resident reductions —
+/// so a disk-backed solve reports residuals **bitwise identical** to the
+/// resident solve's (pinned by a test below and by
+/// `tests/store_equivalence.rs`).
+pub(crate) fn compute_residuals_stored(
+    state: &CcState,
+    store: &dyn TileStore,
+    schedule: &Schedule,
+    p: usize,
+) -> Residuals {
+    let viol = super::active::sweep::exact_violation(store, schedule, p);
+    finish_residuals_stored(state, store, p, viol)
+}
+
+/// [`compute_residuals_trusting_sweep`] against a [`TileStore`] (see
+/// [`compute_residuals_stored`] for the bitwise contract).
+pub(crate) fn compute_residuals_trusting_sweep_stored(
+    state: &CcState,
+    store: &dyn TileStore,
+    p: usize,
+    sweep_metric_violation: f64,
+) -> Residuals {
+    finish_residuals_stored(state, store, p, sweep_metric_violation)
 }
 
 /// Exact max violation over all `3·C(n,3)` metric rows — the `O(n^3)`
@@ -91,6 +124,92 @@ fn finish_residuals(state: &CcState, p: usize, metric_viol: f64) -> Residuals {
     let qp_dual = -0.5 * eps * xwx - eps * b_yhat;
     let rel_gap = (qp_primal - qp_dual) / qp_primal.abs().max(1.0);
     let lp_objective = par_reduce_sum(p, m, |e| state.w[e] * (state.x[e] - state.d[e]).abs());
+
+    Residuals {
+        max_violation,
+        qp_primal,
+        qp_dual,
+        rel_gap,
+        lp_objective,
+        ..Residuals::default()
+    }
+}
+
+/// Everything but the metric scan, streaming `x` from a store.
+///
+/// The terms that never read `x` (`c'x` — which is `w·f` here — and
+/// `b'yhat`) run through the classic [`par_reduce_sum`]. The terms that
+/// do (pair/box violation, `x'Wx`, the LP objective) stream `x` in
+/// ascending order over the **same** chunk partition the resident
+/// reductions use — including their small-`m` serial fallback — with
+/// per-chunk accumulation in ascending entry order and cross-chunk
+/// combination in chunk order. Floating-point addition is not
+/// associative, so reproducing the grouping exactly is what makes the
+/// disk-backed residuals bitwise equal to the resident ones.
+fn finish_residuals_stored(
+    state: &CcState,
+    store: &dyn TileStore,
+    p: usize,
+    metric_viol: f64,
+) -> Residuals {
+    let m = store.n_pairs();
+    let gamma = state.gamma;
+    let include_box = state.include_box;
+
+    let cx = par_reduce_sum(p, m, |e| state.w[e] * state.f[e]);
+    // b' yhat: metric rows have b = 0; pair rows b = +d / -d; box rows b = 1.
+    let b_yhat = par_reduce_sum(p, m, |e| {
+        let mut acc = state.d[e] * (state.y_upper[e] - state.y_lower[e]);
+        if include_box {
+            acc += state.y_box[e];
+        }
+        acc
+    });
+
+    // The x-dependent terms: same chunks (and serial fallback) as
+    // par_reduce_sum / par_reduce_max over m entries.
+    let ranges: Vec<(usize, usize)> = if p <= 1 || m < 1024 {
+        vec![(0, m)]
+    } else {
+        (0..p).map(|tid| chunk_range(m, p, tid)).collect()
+    };
+    let k = ranges.len();
+    let parts = PerWorker::new(vec![(f64::NEG_INFINITY, 0.0f64, 0.0f64); k]);
+    scoped_workers(k, |tid, _| {
+        let (lo, hi) = ranges[tid];
+        let mut viol = f64::NEG_INFINITY;
+        let mut xwx = 0.0f64;
+        let mut lp = 0.0f64;
+        let mut scratch = TileScratch::default();
+        // SAFETY: chunks are disjoint across workers; the callback only
+        // reads (write = false keeps a disk store clean).
+        unsafe {
+            store.with_pair_range(lo, hi, false, &mut scratch, &mut |g, xs, _wv| {
+                for (t, &xv) in xs.iter().enumerate() {
+                    let e = g + t;
+                    let dev = (xv - state.d[e]).abs() - state.f[e];
+                    let v = if include_box { dev.max(xv - 1.0) } else { dev };
+                    if v > viol {
+                        viol = v;
+                    }
+                    xwx += state.w[e] * (xv * xv + state.f[e] * state.f[e]);
+                    lp += state.w[e] * (xv - state.d[e]).abs();
+                }
+            });
+        }
+        // SAFETY: slot `tid` belongs to this worker.
+        unsafe { *parts.get_mut(tid) = (viol, xwx, lp) };
+    });
+    let parts = parts.into_inner();
+    let pair_viol = parts.iter().map(|&(v, _, _)| v).fold(f64::NEG_INFINITY, f64::max);
+    let xwx: f64 = parts.iter().map(|&(_, s, _)| s).sum();
+    let lp_objective: f64 = parts.iter().map(|&(_, _, s)| s).sum();
+
+    let max_violation = metric_viol.max(pair_viol).max(0.0);
+    let eps = 1.0 / gamma;
+    let qp_primal = cx + 0.5 * eps * xwx;
+    let qp_dual = -0.5 * eps * xwx - eps * b_yhat;
+    let rel_gap = (qp_primal - qp_dual) / qp_primal.abs().max(1.0);
 
     Residuals {
         max_violation,
@@ -173,6 +292,61 @@ mod tests {
         let pair_only = compute_residuals_trusting_sweep(&st, 2, 0.0);
         assert!(pair_only.max_violation <= exact.max_violation);
         assert!(pair_only.max_violation >= 0.0);
+    }
+
+    #[test]
+    fn stored_residuals_match_the_classic_scan() {
+        // The store-addressed residual computation must agree with the
+        // resident scan on every field (the disk==mem bitwise contract).
+        // n = 18 (m = 153) drives the serial-fallback path; n = 50
+        // (m = 1225 >= 1024) drives the chunked parallel branch whose
+        // summation-order reproduction is the delicate part.
+        for (n, tile) in [(18usize, 4usize), (50, 8)] {
+            let inst = CcLpInstance::random(n, 0.4, 0.5, 2.0, 17);
+            let mut st = CcState::new(&inst, 5.0, true);
+            let mut rng = crate::util::rng::Rng::new(9 + n as u64);
+            for v in st.x.iter_mut() {
+                *v = rng.f64_in(-0.2, 1.2);
+            }
+            for v in st.f.iter_mut() {
+                *v = rng.f64_in(-0.5, 0.5);
+            }
+            for v in st.y_upper.iter_mut() {
+                *v = rng.f64_in(0.0, 0.3);
+            }
+            for v in st.y_lower.iter_mut() {
+                *v = rng.f64_in(0.0, 0.2);
+            }
+            for v in st.y_box.iter_mut() {
+                *v = rng.f64_in(0.0, 0.2);
+            }
+            let schedule = Schedule::new(n, tile);
+            for p in [1usize, 3] {
+                let classic = compute_residuals(&st, p);
+                let trusted_classic =
+                    compute_residuals_trusting_sweep(&st, p, metric_violation(&st, p));
+                let mut x = st.x.clone();
+                let store = crate::matrix::store::MemStore::new(
+                    x.as_mut_slice(),
+                    &st.col_starts,
+                    &st.winv,
+                );
+                let stored = compute_residuals_stored(&st, &store, &schedule, p);
+                let trusted_stored = compute_residuals_trusting_sweep_stored(
+                    &st,
+                    &store,
+                    p,
+                    metric_violation(&st, p),
+                );
+                for (a, b) in [(&classic, &stored), (&trusted_classic, &trusted_stored)] {
+                    assert_eq!(a.max_violation, b.max_violation, "n={n} p={p}");
+                    assert_eq!(a.qp_primal, b.qp_primal, "n={n} p={p}");
+                    assert_eq!(a.qp_dual, b.qp_dual, "n={n} p={p}");
+                    assert_eq!(a.rel_gap, b.rel_gap, "n={n} p={p}");
+                    assert_eq!(a.lp_objective, b.lp_objective, "n={n} p={p}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -115,6 +115,19 @@ where
     partials.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
 
+/// Worker-thread count for tests: the `METRIC_PROJ_TEST_THREADS`
+/// environment variable overrides `default` when set to a positive
+/// integer. CI re-runs the suite at several counts (e.g. 1 and 8) to
+/// catch wave-schedule/ordering bugs that only appear off the default —
+/// safe to apply anywhere results are bitwise thread-count independent.
+pub fn env_threads(default: usize) -> usize {
+    std::env::var("METRIC_PROJ_TEST_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .filter(|&p| p >= 1)
+        .unwrap_or(default)
+}
+
 /// Number of hardware threads available to this process.
 pub fn available_cores() -> usize {
     std::thread::available_parallelism()

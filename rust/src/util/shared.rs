@@ -76,6 +76,19 @@ impl<'a, T> SharedMut<'a, T> {
         debug_assert!(i < self.len);
         *self.ptr.add(i) += v;
     }
+
+    /// Reborrow the contiguous range `[lo, hi)` as a plain mutable slice
+    /// (the streamed pair phase hands workers their chunk directly).
+    ///
+    /// # Safety
+    /// `lo <= hi <= len`, and no other thread may access any element of
+    /// the range while the returned borrow lives.
+    #[allow(clippy::mut_from_ref)]
+    #[inline(always)]
+    pub unsafe fn slice_mut(&self, lo: usize, hi: usize) -> &mut [T] {
+        debug_assert!(lo <= hi && hi <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
+    }
 }
 
 /// Per-worker mutable state: each worker `tid` may access only slot `tid`.
