@@ -18,7 +18,7 @@
 mod common;
 
 use metric_proj::eval::simulate::instrument;
-use metric_proj::eval::{build_instance, strategy_ablation, time_serial};
+use metric_proj::eval::{build_instance, regression, strategy_ablation, time_serial};
 use metric_proj::graph::datasets::Dataset;
 use metric_proj::solver::schedule::{Assignment, Schedule};
 use metric_proj::solver::{dykstra_parallel, dykstra_xla, SolveOpts, Strategy};
@@ -112,16 +112,18 @@ fn main() {
         check_every: 0,
         ..Default::default()
     };
-    let mut rows = strategy_ablation(
-        &small,
-        &base,
-        &[
-            ("full", Strategy::Full),
-            ("active s=4 k=2", Strategy::Active { sweep_every: 4, forget_after: 2 }),
-            ("active s=8 k=3", Strategy::Active { sweep_every: 8, forget_after: 3 }),
-            ("active s=16 k=3", Strategy::Active { sweep_every: 16, forget_after: 3 }),
-        ],
-    );
+    // Each row solved (and timed) separately so the regression rows get
+    // an honest per-strategy wall time next to the work counters.
+    let mut rows: Vec<(metric_proj::eval::StrategyRow, f64)> = Vec::new();
+    for (label, strategy) in [
+        ("full", Strategy::Full),
+        ("active s=4 k=2", Strategy::Active { sweep_every: 4, forget_after: 2 }),
+        ("active s=8 k=3", Strategy::Active { sweep_every: 8, forget_after: 3 }),
+        ("active s=16 k=3", Strategy::Active { sweep_every: 16, forget_after: 3 }),
+    ] {
+        let (mut r, secs) = time(|| strategy_ablation(&small, &base, &[(label, strategy)]));
+        rows.push((r.remove(0), secs));
+    }
     // One out-of-core row: the same active solve streaming X and W from
     // a disk tile store under a quarter-of-packed budget — identical
     // numerics (disk == mem bitwise), honest resident-memory column.
@@ -130,19 +132,22 @@ fn main() {
             .join(format!("metric_proj_ablations_a4_{}", std::process::id()));
         let m = small.n * small.n.saturating_sub(1) / 2;
         let store = metric_proj::matrix::store::StoreCfg::disk(&dir, (m * 8 / 4).max(1 << 12));
-        match metric_proj::eval::strategy_ablation_stored(
-            &small,
-            &base,
-            &store,
-            &[("active s=8 +disk", Strategy::Active { sweep_every: 8, forget_after: 3 })],
-        ) {
-            Ok(mut disk_rows) => rows.append(&mut disk_rows),
+        let (res, secs) = time(|| {
+            metric_proj::eval::strategy_ablation_stored(
+                &small,
+                &base,
+                &store,
+                &[("active s=8 +disk", Strategy::Active { sweep_every: 8, forget_after: 3 })],
+            )
+        });
+        match res {
+            Ok(mut disk_rows) => rows.push((disk_rows.remove(0), secs)),
             Err(e) => println!("  (disk row skipped: {e})"),
         }
         let _ = std::fs::remove_dir_all(&dir);
     }
-    let full_visits = rows[0].metric_visits.max(1) as f64;
-    for r in &rows {
+    let full_visits = rows[0].0.metric_visits.max(1) as f64;
+    for (r, _) in &rows {
         let hit = match r.screen_hit_rate() {
             Some(h) => format!("{:>5.1}%", 100.0 * h),
             None => "    -".to_string(),
@@ -162,6 +167,41 @@ fn main() {
     println!(
         "  -> finding: once duals sparsify, cheap passes touch a small fraction\n     of the 3*C(n,3) rows; sweep cadence trades staleness (violation\n     discovered late) against the dominant sweep cost. The screen hit\n     rate shows why the screened sweep backend wins: almost every sweep\n     visit is a provable no-op (cargo bench --bench sweep quantifies it)."
     );
+
+    // Machine-normalized regression rows (same contract as the sweep
+    // bench): visits per calibration unit per (n, strategy, store) cell,
+    // merged into `bench/baseline.json` under `--commit-baseline`.
+    let calib_ns = regression::calibrate();
+    println!("\ncalibration: {calib_ns:.3} ns/op (throughput normalized by this)");
+    let reg_rows: Vec<regression::BaselineRow> = rows
+        .iter()
+        .map(|(r, secs)| regression::BaselineRow {
+            bench: "ablations".to_string(),
+            n: small.n as u64,
+            cell: r.label.to_string(),
+            store: if r.label.contains("+disk") { "disk" } else { "mem" }.to_string(),
+            visits_per_unit: regression::normalize(
+                r.metric_visits as f64 / secs.max(1e-9),
+                calib_ns,
+            ),
+            hit_rate: r.screen_hit_rate().unwrap_or(0.0),
+            store_loads: 0,
+            peak_resident_bytes: (r.resident_mb_est * (1u64 << 20) as f64) as u64,
+        })
+        .collect();
+    let rows_path = std::env::var("METRIC_PROJ_BENCH_ROWS")
+        .unwrap_or_else(|_| "../BENCH_ablations.rows.json".to_string());
+    let baseline_path = std::env::var("METRIC_PROJ_BASELINE")
+        .unwrap_or_else(|_| "../bench/baseline.json".to_string());
+    let commit = std::env::args().any(|a| a == "--commit-baseline");
+    if let Err(e) = regression::emit_rows(
+        reg_rows,
+        std::path::Path::new(&rows_path),
+        commit,
+        std::path::Path::new(&baseline_path),
+    ) {
+        eprintln!("warning: could not emit regression rows: {e}");
+    }
 }
 
 fn build_instance_small() -> metric_proj::instance::CcLpInstance {

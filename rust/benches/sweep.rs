@@ -32,7 +32,16 @@
 //! Emits machine-readable `BENCH_sweep.json` for the perf trajectory:
 //! one record per (n, backend) with triplet-visits/sec, the screen hit
 //! rate, and the resident-set estimate in MiB.
+//!
+//! Also emits machine-**normalized** regression rows (visits per
+//! calibration unit — see [`metric_proj::eval::regression`]) to
+//! `METRIC_PROJ_BENCH_ROWS` (default `../BENCH_sweep.rows.json`) for the
+//! CI gate (`metric-proj bench-gate`). Pass `--commit-baseline`
+//! (`cargo bench --bench sweep -- --commit-baseline`) to merge the rows
+//! into the committed baseline at `METRIC_PROJ_BASELINE` (default
+//! `../bench/baseline.json`).
 
+use metric_proj::eval::regression;
 use metric_proj::instance::metric_nearness::MetricNearnessInstance;
 use metric_proj::matrix::store::{DiskStore, MemStore};
 use metric_proj::runtime::engine::XlaEngine;
@@ -62,12 +71,17 @@ fn env_ns() -> Vec<usize> {
 struct Record {
     n: usize,
     backend: &'static str,
+    /// `X` storage backend of the row (`mem` / `disk`), for the
+    /// regression-row key.
+    store: &'static str,
     sweeps: usize,
     seconds: f64,
     visits_per_sec: f64,
     hit_rate: f64,
     speedup_vs_scalar: f64,
     resident_mb: f64,
+    /// Tile-store block loads over the timed sweeps (0 for mem rows).
+    store_loads: u64,
 }
 
 fn mib(bytes: f64) -> f64 {
@@ -174,12 +188,14 @@ fn main() {
             records.push(Record {
                 n,
                 backend: backend.name(),
+                store: "mem",
                 sweeps: reps,
                 seconds: dt,
                 visits_per_sec: vps,
                 hit_rate: report.hit_rate(),
                 speedup_vs_scalar: speedup,
                 resident_mb: mem_resident_mb,
+                store_loads: 0,
             });
         }
 
@@ -244,13 +260,15 @@ fn main() {
             );
             records.push(Record {
                 n,
-                backend: "screened+disk",
+                backend: "screened",
+                store: "disk",
                 sweeps: reps,
                 seconds: dt,
                 visits_per_sec: vps,
                 hit_rate: report.hit_rate(),
                 speedup_vs_scalar: speedup,
                 resident_mb,
+                store_loads: stats.loads,
             });
             let store_path = store.path().to_path_buf();
             drop(store);
@@ -263,12 +281,17 @@ fn main() {
     let _ = writeln!(json, "  \"threads\": {threads},");
     json.push_str("  \"results\": [\n");
     for (idx, r) in records.iter().enumerate() {
+        let label = if r.store == "disk" {
+            format!("{}+disk", r.backend)
+        } else {
+            r.backend.to_string()
+        };
         let _ = write!(
             json,
             "    {{\"n\": {}, \"backend\": \"{}\", \"sweeps\": {}, \"seconds\": {:.6}, \
              \"triplet_visits_per_sec\": {:.1}, \"screen_hit_rate\": {:.6}, \
              \"speedup_vs_scalar\": {:.4}, \"resident_mb\": {:.3}}}",
-            r.n, r.backend, r.sweeps, r.seconds, r.visits_per_sec, r.hit_rate,
+            r.n, label, r.sweeps, r.seconds, r.visits_per_sec, r.hit_rate,
             r.speedup_vs_scalar, r.resident_mb
         );
         json.push_str(if idx + 1 < records.len() { ",\n" } else { "\n" });
@@ -277,5 +300,36 @@ fn main() {
     match std::fs::write(&out_path, &json) {
         Ok(()) => println!("\nwrote {out_path}"),
         Err(e) => eprintln!("\nwarning: could not write {out_path}: {e}"),
+    }
+
+    // Machine-normalized regression rows for the CI gate, committed into
+    // the baseline under `--commit-baseline`.
+    let calib_ns = regression::calibrate();
+    println!("calibration: {calib_ns:.3} ns/op (throughput normalized by this)");
+    let rows: Vec<regression::BaselineRow> = records
+        .iter()
+        .map(|r| regression::BaselineRow {
+            bench: "sweep".to_string(),
+            n: r.n as u64,
+            cell: r.backend.to_string(),
+            store: r.store.to_string(),
+            visits_per_unit: regression::normalize(r.visits_per_sec, calib_ns),
+            hit_rate: r.hit_rate,
+            store_loads: r.store_loads,
+            peak_resident_bytes: (r.resident_mb * (1u64 << 20) as f64) as u64,
+        })
+        .collect();
+    let rows_path = std::env::var("METRIC_PROJ_BENCH_ROWS")
+        .unwrap_or_else(|_| "../BENCH_sweep.rows.json".to_string());
+    let baseline_path = std::env::var("METRIC_PROJ_BASELINE")
+        .unwrap_or_else(|_| "../bench/baseline.json".to_string());
+    let commit = std::env::args().any(|a| a == "--commit-baseline");
+    if let Err(e) = regression::emit_rows(
+        rows,
+        std::path::Path::new(&rows_path),
+        commit,
+        std::path::Path::new(&baseline_path),
+    ) {
+        eprintln!("warning: could not emit regression rows: {e}");
     }
 }

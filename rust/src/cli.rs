@@ -170,6 +170,27 @@ mod tests {
     }
 
     #[test]
+    fn telemetry_flags_parse() {
+        // The grammar main.rs uses for the telemetry layer: trace capture
+        // on solve/nearness, the trace summarizer, and the perf gate.
+        let a = parse("solve --n 300 --strategy active --trace-out run.jsonl --progress");
+        assert_eq!(a.get("trace-out"), Some("run.jsonl"));
+        assert!(a.has_flag("progress"));
+        // both default to off (NullRecorder: zero-cost path)
+        let b = parse("solve --n 300");
+        assert_eq!(b.get("trace-out"), None);
+        assert!(!b.has_flag("progress"));
+        // `report` takes a comma-separated list of trace files
+        let c = parse("report --trace a.jsonl,b.jsonl");
+        assert_eq!(c.get("trace"), Some("a.jsonl,b.jsonl"));
+        // `bench-gate` compares fresh rows against the committed baseline
+        let d = parse("bench-gate --fresh rows.json --baseline bench/baseline.json --tolerance 0.25");
+        assert_eq!(d.get("fresh"), Some("rows.json"));
+        assert_eq!(d.get("baseline"), Some("bench/baseline.json"));
+        assert_eq!(d.get_or("tolerance", 0.5f64).unwrap(), 0.25);
+    }
+
+    #[test]
     fn sweep_engine_flags_parse() {
         // The grammar main.rs uses for the screen-then-project engine.
         let a = parse(

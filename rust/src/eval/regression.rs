@@ -1,0 +1,472 @@
+//! Machine-normalized perf baselines and the bench regression gate.
+//!
+//! The benches (`cargo bench --bench sweep` / `--bench ablations`) emit
+//! one [`BaselineRow`] per measured cell — a `(bench, n, cell, store)`
+//! key carrying throughput, screen hit rate, store I/O, and the peak
+//! resident-set figure. Raw wall-clock throughput is useless across
+//! machines, so every emitting process first runs [`calibrate`]: a fixed
+//! arithmetic workload shaped like the projection hot loop, measured in
+//! ns/op. Throughput is then stored as *triplet-visits per calibration
+//! unit* ([`normalize`]) — a machine that runs the calibration loop 2×
+//! faster is expected to sweep ~2× faster too, and the normalized number
+//! cancels that out to first order.
+//!
+//! `bench/baseline.json` at the repo root is the committed history: the
+//! benches merge into it under `--commit-baseline`, and the CI gate
+//! (`metric-proj bench-gate`) compares a fresh nightly run against it
+//! with a relative tolerance band, failing the job when any committed
+//! cell degrades beyond the band (or vanishes from the fresh run). See
+//! `bench/README.md` and `docs/OBSERVABILITY.md`.
+
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Schema version of `bench/baseline.json`.
+pub const BASELINE_VERSION: u64 = 1;
+
+/// Default relative tolerance band of the gate (25% — wide enough for
+/// shared CI runners, tight enough to catch a real 2× regression).
+pub const DEFAULT_TOLERANCE: f64 = 0.25;
+
+/// One measured perf cell, keyed by `(bench, n, cell, store)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BaselineRow {
+    /// Emitting bench (`sweep`, `ablations`).
+    pub bench: String,
+    /// Problem size.
+    pub n: u64,
+    /// Strategy/backend label within the bench (e.g. `screened`,
+    /// `active s=8 k=3`).
+    pub cell: String,
+    /// `X` storage backend (`mem` / `disk`).
+    pub store: String,
+    /// Triplet-visits per calibration unit ([`normalize`]d throughput;
+    /// higher is better).
+    pub visits_per_unit: f64,
+    /// Screen hit rate in `[0, 1]` (0 when the cell runs no sweeps).
+    pub hit_rate: f64,
+    /// Tile-store block loads (0 for in-memory cells).
+    pub store_loads: u64,
+    /// Peak resident bytes for the cell's `X` path.
+    pub peak_resident_bytes: u64,
+}
+
+impl BaselineRow {
+    /// The unique key a fresh row is matched on.
+    pub fn key(&self) -> String {
+        format!("{}/n={}/{}/{}", self.bench, self.n, self.cell, self.store)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("bench".into(), Json::Str(self.bench.clone())),
+            ("n".into(), json::unum(self.n)),
+            ("cell".into(), Json::Str(self.cell.clone())),
+            ("store".into(), Json::Str(self.store.clone())),
+            ("visits_per_unit".into(), json::num(self.visits_per_unit)),
+            ("hit_rate".into(), json::num(self.hit_rate)),
+            ("store_loads".into(), json::unum(self.store_loads)),
+            ("peak_resident_bytes".into(), json::unum(self.peak_resident_bytes)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<BaselineRow> {
+        let str_field = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .with_context(|| format!("baseline row: missing string field `{k}`"))
+        };
+        let u64_field = |k: &str| -> Result<u64> {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .with_context(|| format!("baseline row: missing counter field `{k}`"))
+        };
+        let f64_field = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("baseline row: missing number field `{k}`"))
+        };
+        Ok(BaselineRow {
+            bench: str_field("bench")?,
+            n: u64_field("n")?,
+            cell: str_field("cell")?,
+            store: str_field("store")?,
+            visits_per_unit: f64_field("visits_per_unit")?,
+            hit_rate: f64_field("hit_rate")?,
+            store_loads: u64_field("store_loads")?,
+            peak_resident_bytes: u64_field("peak_resident_bytes")?,
+        })
+    }
+}
+
+/// A baseline (or fresh-run) row set plus its schema version.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BaselineFile {
+    /// Rows keyed by [`BaselineRow::key`]; order preserved.
+    pub rows: Vec<BaselineRow>,
+}
+
+impl BaselineFile {
+    /// Serialize (pretty enough to diff in review: one row per line).
+    pub fn to_json_string(&self) -> String {
+        let mut out = String::from("{\n");
+        let _ = writeln!(out, "  \"version\": {BASELINE_VERSION},");
+        out.push_str("  \"rows\": [");
+        for (i, row) in self.rows.iter().enumerate() {
+            out.push_str(if i == 0 { "\n    " } else { ",\n    " });
+            row.to_json().write(&mut out);
+        }
+        out.push_str(if self.rows.is_empty() { "]\n}\n" } else { "\n  ]\n}\n" });
+        out
+    }
+
+    /// Parse a serialized baseline, rejecting unknown schema versions.
+    pub fn parse(text: &str) -> Result<BaselineFile> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("baseline JSON: {e}"))?;
+        let version = j
+            .get("version")
+            .and_then(Json::as_u64)
+            .context("baseline JSON: missing `version`")?;
+        if version != BASELINE_VERSION {
+            bail!("baseline schema version {version} (this build reads {BASELINE_VERSION})");
+        }
+        let rows = j
+            .get("rows")
+            .and_then(Json::as_arr)
+            .context("baseline JSON: missing `rows` array")?
+            .iter()
+            .map(BaselineRow::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(BaselineFile { rows })
+    }
+
+    /// Load from disk.
+    pub fn load(path: &std::path::Path) -> Result<BaselineFile> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading baseline {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing baseline {}", path.display()))
+    }
+
+    /// Write to disk.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json_string())
+            .with_context(|| format!("writing baseline {}", path.display()))
+    }
+
+    /// Merge `fresh` in: rows with a known key replace the old
+    /// measurement, new keys append (the `--commit-baseline` operation).
+    pub fn merge(&mut self, fresh: &BaselineFile) {
+        for row in &fresh.rows {
+            match self.rows.iter_mut().find(|r| r.key() == row.key()) {
+                Some(slot) => *slot = row.clone(),
+                None => self.rows.push(row.clone()),
+            }
+        }
+    }
+
+    /// Look a row up by key.
+    pub fn find(&self, key: &str) -> Option<&BaselineRow> {
+        self.rows.iter().find(|r| r.key() == key)
+    }
+}
+
+/// ns/op of the fixed calibration workload on this machine.
+///
+/// The loop is shaped like the solver's triple-projection hot path —
+/// fused multiply-adds, a compare, and a data-dependent accumulate over
+/// values kept live through [`std::hint::black_box`] — so its speed
+/// tracks the speed the sweeps actually run at. Best of three trials,
+/// ~10⁷ ops each (a few ms total).
+pub fn calibrate() -> f64 {
+    const OPS: u64 = 8_000_000;
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let mut x = std::hint::black_box(1.000_000_1f64);
+        let mut acc = 0.0f64;
+        for i in 0..OPS {
+            // fma-shaped update + branchy clamp, like visit_triplet
+            x = x * 1.000_000_01 + 1.0e-9;
+            if x > 2.0 {
+                x -= 1.0;
+            }
+            acc += x * ((i & 7) as f64 + 1.0);
+        }
+        std::hint::black_box(acc);
+        let ns = t0.elapsed().as_nanos() as f64 / OPS as f64;
+        best = best.min(ns);
+    }
+    best
+}
+
+/// Convert a raw visits/second into visits per calibration unit, given
+/// this machine's [`calibrate`] figure. One "unit" is the time the
+/// calibration loop takes for 10⁹ ops (≈1 s on a ~1 ns/op machine), so
+/// the numbers stay in a human scale.
+pub fn normalize(raw_per_sec: f64, calib_ns_per_op: f64) -> f64 {
+    raw_per_sec * calib_ns_per_op
+}
+
+/// Bench-side row emission: write `rows` as a gate-comparable rows file
+/// at `rows_path` and, when `commit` is set (the bench saw
+/// `--commit-baseline`), merge them into the committed baseline at
+/// `baseline_path` — creating it when absent, replacing matching cells
+/// otherwise.
+pub fn emit_rows(
+    rows: Vec<BaselineRow>,
+    rows_path: &std::path::Path,
+    commit: bool,
+    baseline_path: &std::path::Path,
+) -> Result<()> {
+    let fresh = BaselineFile { rows };
+    fresh.save(rows_path)?;
+    println!("wrote {} bench row(s) to {}", fresh.rows.len(), rows_path.display());
+    if commit {
+        let mut baseline = if baseline_path.exists() {
+            BaselineFile::load(baseline_path)?
+        } else {
+            BaselineFile::default()
+        };
+        baseline.merge(&fresh);
+        baseline.save(baseline_path)?;
+        println!(
+            "committed {} cell(s) into baseline {} ({} total)",
+            fresh.rows.len(),
+            baseline_path.display(),
+            baseline.rows.len()
+        );
+    }
+    Ok(())
+}
+
+/// The gate's verdict on one fresh run vs the committed baseline.
+#[derive(Clone, Debug, Default)]
+pub struct GateReport {
+    /// Baseline rows with a matching fresh measurement.
+    pub checked: usize,
+    /// Human-readable failure lines (regression beyond tolerance).
+    pub failures: Vec<String>,
+    /// Baseline keys the fresh run did not measure (coverage loss —
+    /// also a failure).
+    pub missing: Vec<String>,
+    /// Fresh keys not yet in the baseline (informational; commit them
+    /// with `--commit-baseline`).
+    pub added: Vec<String>,
+}
+
+impl GateReport {
+    /// True when no committed cell regressed or vanished.
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty() && self.missing.is_empty()
+    }
+
+    /// The gate's stdout block.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "bench gate: {} baseline cell{} checked",
+            self.checked,
+            if self.checked == 1 { "" } else { "s" }
+        );
+        for f in &self.failures {
+            let _ = writeln!(out, "  FAIL {f}");
+        }
+        for m in &self.missing {
+            let _ = writeln!(out, "  MISSING {m} (baseline cell not measured by the fresh run)");
+        }
+        for a in &self.added {
+            let _ = writeln!(out, "  new {a} (not in baseline; commit with --commit-baseline)");
+        }
+        let _ = writeln!(out, "bench gate: {}", if self.passed() { "PASS" } else { "FAIL" });
+        out
+    }
+}
+
+/// Compare a fresh run against the committed baseline with a relative
+/// tolerance band `tol` (e.g. 0.25 = 25%).
+///
+/// Per matched cell: normalized throughput may not drop below
+/// `(1 - tol)×` baseline; the screen hit rate may not drift more than
+/// `tol` absolutely (it is a deterministic algorithm property — drift
+/// means behavior changed); store loads and peak resident bytes may not
+/// grow beyond `(1 + tol)×` baseline. Improvements always pass — refresh
+/// the baseline to ratchet them in. An empty baseline passes trivially
+/// (the bootstrap state before the first `--commit-baseline`).
+pub fn gate(baseline: &BaselineFile, fresh: &BaselineFile, tol: f64) -> GateReport {
+    let mut report = GateReport::default();
+    for base in &baseline.rows {
+        let key = base.key();
+        let Some(new) = fresh.find(&key) else {
+            report.missing.push(key);
+            continue;
+        };
+        report.checked += 1;
+        if new.visits_per_unit < base.visits_per_unit * (1.0 - tol) {
+            report.failures.push(format!(
+                "{key}: throughput {:.3e} < {:.3e} visits/unit (-{:.1}%, tolerance {:.0}%)",
+                new.visits_per_unit,
+                base.visits_per_unit,
+                100.0 * (1.0 - new.visits_per_unit / base.visits_per_unit),
+                100.0 * tol
+            ));
+        }
+        if (new.hit_rate - base.hit_rate).abs() > tol {
+            report.failures.push(format!(
+                "{key}: screen hit rate {:.4} drifted from {:.4} (> {:.2} absolute)",
+                new.hit_rate, base.hit_rate, tol
+            ));
+        }
+        if base.store_loads > 0 && new.store_loads as f64 > base.store_loads as f64 * (1.0 + tol)
+        {
+            report.failures.push(format!(
+                "{key}: store loads {} > {} (+{:.1}%, tolerance {:.0}%)",
+                new.store_loads,
+                base.store_loads,
+                100.0 * (new.store_loads as f64 / base.store_loads as f64 - 1.0),
+                100.0 * tol
+            ));
+        }
+        if base.peak_resident_bytes > 0
+            && new.peak_resident_bytes as f64 > base.peak_resident_bytes as f64 * (1.0 + tol)
+        {
+            report.failures.push(format!(
+                "{key}: peak resident {} B > {} B (+{:.1}%, tolerance {:.0}%)",
+                new.peak_resident_bytes,
+                base.peak_resident_bytes,
+                100.0 * (new.peak_resident_bytes as f64 / base.peak_resident_bytes as f64
+                    - 1.0),
+                100.0 * tol
+            ));
+        }
+    }
+    for row in &fresh.rows {
+        let key = row.key();
+        if baseline.find(&key).is_none() {
+            report.added.push(key);
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(cell: &str, vpu: f64, hit: f64, loads: u64, peak: u64) -> BaselineRow {
+        BaselineRow {
+            bench: "sweep".into(),
+            n: 120,
+            cell: cell.into(),
+            store: if loads > 0 { "disk".into() } else { "mem".into() },
+            visits_per_unit: vpu,
+            hit_rate: hit,
+            store_loads: loads,
+            peak_resident_bytes: peak,
+        }
+    }
+
+    #[test]
+    fn baseline_json_roundtrips() {
+        let file = BaselineFile {
+            rows: vec![row("screened", 1.25e8, 0.013, 0, 230_400), row("scalar", 2.0e7, 0.013, 42, 65_536)],
+        };
+        let text = file.to_json_string();
+        let back = BaselineFile::parse(&text).unwrap();
+        assert_eq!(back, file);
+        // one row per line keeps diffs reviewable
+        assert_eq!(text.lines().filter(|l| l.contains("\"bench\"")).count(), 2);
+    }
+
+    #[test]
+    fn empty_baseline_roundtrips_and_passes() {
+        let empty = BaselineFile::default();
+        let back = BaselineFile::parse(&empty.to_json_string()).unwrap();
+        assert_eq!(back, empty);
+        let fresh = BaselineFile { rows: vec![row("screened", 1e8, 0.0, 0, 100)] };
+        let rep = gate(&empty, &fresh, DEFAULT_TOLERANCE);
+        assert!(rep.passed());
+        assert_eq!(rep.checked, 0);
+        assert_eq!(rep.added.len(), 1);
+    }
+
+    #[test]
+    fn unknown_version_rejected() {
+        assert!(BaselineFile::parse("{\"version\": 99, \"rows\": []}").is_err());
+        assert!(BaselineFile::parse("{\"rows\": []}").is_err());
+        assert!(BaselineFile::parse("not json").is_err());
+    }
+
+    #[test]
+    fn merge_replaces_matching_keys_and_appends_new() {
+        let mut base = BaselineFile { rows: vec![row("screened", 1e8, 0.01, 0, 100)] };
+        let fresh = BaselineFile {
+            rows: vec![row("screened", 2e8, 0.01, 0, 100), row("scalar", 3e7, 0.01, 0, 100)],
+        };
+        base.merge(&fresh);
+        assert_eq!(base.rows.len(), 2);
+        assert_eq!(base.find("sweep/n=120/screened/mem").unwrap().visits_per_unit, 2e8);
+        assert_eq!(base.find("sweep/n=120/scalar/mem").unwrap().visits_per_unit, 3e7);
+    }
+
+    #[test]
+    fn identical_run_passes() {
+        let base = BaselineFile { rows: vec![row("screened", 1e8, 0.013, 10, 4096)] };
+        let rep = gate(&base, &base.clone(), DEFAULT_TOLERANCE);
+        assert!(rep.passed(), "{}", rep.render());
+        assert_eq!(rep.checked, 1);
+    }
+
+    #[test]
+    fn improvements_pass() {
+        let base = BaselineFile { rows: vec![row("screened", 1e8, 0.013, 10, 4096)] };
+        let fresh = BaselineFile { rows: vec![row("screened", 3e8, 0.013, 8, 2048)] };
+        assert!(gate(&base, &fresh, DEFAULT_TOLERANCE).passed());
+    }
+
+    #[test]
+    fn degraded_throughput_fails_the_gate() {
+        // The ISSUE's required negative test: a committed cell degraded
+        // beyond tolerance must fail.
+        let base = BaselineFile { rows: vec![row("screened", 1.0e8, 0.013, 0, 4096)] };
+        let fresh = BaselineFile { rows: vec![row("screened", 0.5e8, 0.013, 0, 4096)] };
+        let rep = gate(&base, &fresh, DEFAULT_TOLERANCE);
+        assert!(!rep.passed());
+        assert_eq!(rep.failures.len(), 1);
+        assert!(rep.failures[0].contains("throughput"), "{}", rep.failures[0]);
+        assert!(rep.render().contains("FAIL"));
+        // …while a drop inside the band passes.
+        let ok = BaselineFile { rows: vec![row("screened", 0.8e8, 0.013, 0, 4096)] };
+        assert!(gate(&base, &ok, DEFAULT_TOLERANCE).passed());
+    }
+
+    #[test]
+    fn regressions_in_other_columns_fail_too() {
+        let base = BaselineFile { rows: vec![row("disked", 1e8, 0.010, 100, 1 << 20)] };
+        let drift = BaselineFile { rows: vec![row("disked", 1e8, 0.500, 100, 1 << 20)] };
+        assert!(!gate(&base, &drift, DEFAULT_TOLERANCE).passed());
+        let loads = BaselineFile { rows: vec![row("disked", 1e8, 0.010, 200, 1 << 20)] };
+        assert!(!gate(&base, &loads, DEFAULT_TOLERANCE).passed());
+        let bloat = BaselineFile { rows: vec![row("disked", 1e8, 0.010, 100, 1 << 22)] };
+        assert!(!gate(&base, &bloat, DEFAULT_TOLERANCE).passed());
+    }
+
+    #[test]
+    fn missing_cell_fails_the_gate() {
+        let base = BaselineFile { rows: vec![row("screened", 1e8, 0.013, 0, 4096)] };
+        let rep = gate(&base, &BaselineFile::default(), DEFAULT_TOLERANCE);
+        assert!(!rep.passed());
+        assert_eq!(rep.missing.len(), 1);
+    }
+
+    #[test]
+    fn calibration_is_positive_and_normalization_scales() {
+        let ns = calibrate();
+        assert!(ns.is_finite() && ns > 0.0, "calibrate() -> {ns}");
+        // a machine 2x slower (2x the ns/op) credits 2x the units
+        assert!((normalize(100.0, 2.0) - 2.0 * normalize(100.0, 1.0)).abs() < 1e-12);
+    }
+}

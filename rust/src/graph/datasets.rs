@@ -91,10 +91,10 @@ impl Dataset {
         if path.exists() {
             match io::load_edge_list(&path) {
                 Ok(g) => return largest_component(&g),
-                Err(e) => eprintln!(
-                    "warning: failed to load {} ({e}); falling back to synthetic analogue",
+                Err(e) => crate::telemetry::warn(&format!(
+                    "failed to load {} ({e}); falling back to synthetic analogue",
                     path.display()
-                ),
+                )),
             }
         }
         self.generate(n_target, seed)

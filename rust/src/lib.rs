@@ -56,4 +56,5 @@ pub mod matrix;
 pub mod rounding;
 pub mod runtime;
 pub mod solver;
+pub mod telemetry;
 pub mod util;

@@ -10,11 +10,16 @@
 //!            [--store mem|disk --store-dir store --store-budget-mb 64]
 //!            [--checkpoint state.ckpt --checkpoint-every 10]
 //!            [--resume state.ckpt | --warm-start state.ckpt]
+//!            [--trace-out run.jsonl] [--progress]
 //!   nearness --n 200 --threads 8 --tile 40 --passes 50
 //!            [--strategy full|active --sweep-every 8 --forget-after 3]
 //!            [--sweep-backend scalar|screened|engine] [--sweep-policy fixed|adaptive]
 //!            [--store mem|disk --store-dir store --store-budget-mb 64]
 //!            [--checkpoint ... --checkpoint-every ... --resume ... --warm-start ...]
+//!            [--trace-out run.jsonl] [--progress]
+//!   report   --trace run.jsonl[,run2.jsonl...]
+//!   bench-gate --fresh rows.json[,rows2.json...] [--baseline bench/baseline.json]
+//!            [--tolerance 0.25]
 //!   warm-ablation --n 120 --perturb-frac 0.1 --perturb-rel 0.2
 //!            [--strategy active] [--tol 1e-6] [--check-every 5]
 //!   generate --dataset power --n 500 --out graph.txt
@@ -36,11 +41,26 @@ use metric_proj::solver::{
     dykstra_parallel, dykstra_serial, dykstra_xla, nearness, SolveOpts, Strategy,
     SweepBackend, SweepPolicy,
 };
+use metric_proj::telemetry::{self, JsonlRecorder, ProgressRecorder, Recorder, Tee};
 use metric_proj::util::parallel::available_cores;
 use metric_proj::util::timer::time;
 use std::path::Path;
 
+/// Process-wide recorder behind [`telemetry::warn`]: the CLI prints
+/// library notices to stderr (embedders who install nothing stay silent
+/// unless `METRIC_PROJ_LOG` is set).
+struct StderrWarnRecorder;
+
+impl Recorder for StderrWarnRecorder {
+    fn record(&self, ev: &telemetry::Event) {
+        if let telemetry::Event::Warn { msg } = ev {
+            eprintln!("warning: {msg}");
+        }
+    }
+}
+
 fn main() -> Result<()> {
+    telemetry::set_global(Box::new(StderrWarnRecorder));
     let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
     match args.command.as_str() {
         "info" => cmd_info(),
@@ -51,6 +71,8 @@ fn main() -> Result<()> {
         "table1" => cmd_table1(&args),
         "fig6" => cmd_fig6(&args),
         "fig7" => cmd_fig7(&args),
+        "report" => cmd_report(&args),
+        "bench-gate" => cmd_bench_gate(&args),
         "" | "help" | "--help" => {
             print_help();
             Ok(())
@@ -65,7 +87,7 @@ fn main() -> Result<()> {
 fn print_help() {
     println!(
         "metric-proj — parallel projection methods for metric-constrained optimization\n\
-         commands: info | solve | nearness | warm-ablation | generate | table1 | fig6 | fig7\n\
+         commands: info | solve | nearness | warm-ablation | generate | table1 | fig6 | fig7 | report | bench-gate\n\
          see rust/src/main.rs header or README.md for options"
     );
 }
@@ -240,6 +262,48 @@ impl CheckpointCli {
     }
 }
 
+/// Telemetry flags shared by `solve` and `nearness`: `--trace-out
+/// <path>` streams structured JSONL events, `--progress` prints one
+/// stderr line per pass. Both may be combined (a [`Tee`] fans out).
+struct TraceCli {
+    jsonl: Option<JsonlRecorder>,
+    progress: Option<ProgressRecorder>,
+}
+
+impl TraceCli {
+    fn parse(args: &Args) -> Result<TraceCli> {
+        let jsonl = match args.get("trace-out") {
+            Some(p) => Some(JsonlRecorder::create(Path::new(p))?),
+            None => None,
+        };
+        let progress = if args.has_flag("progress") { Some(ProgressRecorder::new()) } else { None };
+        Ok(TraceCli { jsonl, progress })
+    }
+
+    /// The recorder to hand the solver (disabled when no flag was given,
+    /// which pins the untraced path).
+    fn recorder(&self) -> Tee<'_> {
+        let mut recs: Vec<&dyn Recorder> = Vec::new();
+        if let Some(j) = &self.jsonl {
+            recs.push(j);
+        }
+        if let Some(p) = &self.progress {
+            recs.push(p);
+        }
+        Tee::new(recs)
+    }
+
+    /// Flush the trace file, surfacing any latched I/O error.
+    fn finish(self) -> Result<()> {
+        if let Some(j) = self.jsonl {
+            let path = j.path().display().to_string();
+            j.finish()?;
+            println!("trace     : events written to {path}");
+        }
+        Ok(())
+    }
+}
+
 /// Print the work accounting shared by `solve` and `nearness`.
 fn print_work(metric_visits: u64, active_triplets: usize, passes: usize, full_per_pass: u128) {
     let full_total = full_per_pass as f64 * passes.max(1) as f64;
@@ -381,32 +445,44 @@ fn cmd_solve(args: &Args) -> Result<()> {
             None => String::new(),
         }
     );
-    let (sol, secs) = match engine {
-        "cpu" => {
-            let mut sink = ck.sink();
-            let (res, secs) = time(|| {
-                if args.has_flag("serial") {
-                    dykstra_serial::solve_checkpointed(&inst, &opts, start.as_ref(), &mut sink)
-                } else {
-                    dykstra_parallel::solve_stored(
-                        &inst,
-                        &opts,
-                        &store_cfg,
-                        start.as_ref(),
-                        &mut sink,
-                    )
-                }
-            });
-            (res?, secs)
+    let trace = TraceCli::parse(args)?;
+    let (sol, secs) = {
+        let rec = trace.recorder();
+        match engine {
+            "cpu" => {
+                let mut sink = ck.sink();
+                let (res, secs) = time(|| {
+                    if args.has_flag("serial") {
+                        dykstra_serial::solve_traced(
+                            &inst,
+                            &opts,
+                            start.as_ref(),
+                            &mut sink,
+                            &rec,
+                        )
+                    } else {
+                        dykstra_parallel::solve_traced(
+                            &inst,
+                            &opts,
+                            &store_cfg,
+                            start.as_ref(),
+                            &mut sink,
+                            &rec,
+                        )
+                    }
+                });
+                (res?, secs)
+            }
+            "xla" => {
+                let eng = metric_proj::runtime::engine::XlaEngine::load(DEFAULT_ARTIFACTS_DIR)
+                    .context("loading XLA engine (run `make artifacts`)")?;
+                let (sol, secs) = time(|| dykstra_xla::solve_traced(&inst, &opts, &eng, &rec));
+                (sol?, secs)
+            }
+            other => bail!("--engine must be cpu|xla, got `{other}`"),
         }
-        "xla" => {
-            let eng = metric_proj::runtime::engine::XlaEngine::load(DEFAULT_ARTIFACTS_DIR)
-                .context("loading XLA engine (run `make artifacts`)")?;
-            let (sol, secs) = time(|| dykstra_xla::solve(&inst, &opts, &eng));
-            (sol?, secs)
-        }
-        other => bail!("--engine must be cpu|xla, got `{other}`"),
     };
+    trace.finish()?;
     ck.report();
     let r = &sol.residuals;
     println!(
@@ -472,10 +548,14 @@ fn cmd_nearness(args: &Args) -> Result<()> {
     };
     let store_cfg = parse_store_cfg(args)?;
     print_store_cfg(&store_cfg);
-    let mut sink = ck.sink();
-    let (sol, secs) =
-        time(|| nearness::solve_stored(&inst, &opts, &store_cfg, start.as_ref(), &mut sink));
+    let trace = TraceCli::parse(args)?;
+    let (sol, secs) = {
+        let rec = trace.recorder();
+        let mut sink = ck.sink();
+        time(|| nearness::solve_traced(&inst, &opts, &store_cfg, start.as_ref(), &mut sink, &rec))
+    };
     let sol = sol?;
+    trace.finish()?;
     ck.report();
     println!("metric nearness n={n}: passes={} time={secs:.2}s", sol.passes);
     println!("objective ||X-D||_W^2 = {:.4}", sol.objective);
@@ -591,5 +671,55 @@ fn cmd_fig7(args: &Args) -> Result<()> {
     eval::fig7(&cfg, d, cores, &tiles, |b, t, s| {
         println!("tile={b:<3} time={t:>9.2}s speedup={s:.2}");
     });
+    Ok(())
+}
+
+/// `report --trace a.jsonl[,b.jsonl...]` — summarize solver traces.
+fn cmd_report(args: &Args) -> Result<()> {
+    let traces = args
+        .get("trace")
+        .context("report needs --trace <file[,file...]> (a --trace-out capture)")?;
+    let paths: Vec<&str> = traces.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    if paths.is_empty() {
+        bail!("--trace: no paths given");
+    }
+    print!("{}", metric_proj::telemetry::report::render_files(&paths)?);
+    Ok(())
+}
+
+/// `bench-gate --fresh rows.json[,...]` — compare fresh bench rows
+/// against the committed baseline, failing the process on regression.
+fn cmd_bench_gate(args: &Args) -> Result<()> {
+    use metric_proj::eval::regression::{self, BaselineFile};
+    let baseline_path = args.get("baseline").unwrap_or("bench/baseline.json");
+    let fresh_arg = args
+        .get("fresh")
+        .context("bench-gate needs --fresh <rows.json[,rows2.json...]> (bench row output)")?;
+    let tol = args
+        .get_or("tolerance", regression::DEFAULT_TOLERANCE)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    if !(0.0..1.0).contains(&tol) {
+        bail!("--tolerance must be in [0, 1), got {tol}");
+    }
+    let baseline = BaselineFile::load(Path::new(baseline_path))?;
+    let mut fresh = BaselineFile::default();
+    for p in fresh_arg.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        fresh.merge(&BaselineFile::load(Path::new(p))?);
+    }
+    if baseline.rows.is_empty() {
+        println!(
+            "bench gate: baseline {baseline_path} has no rows yet (bootstrap) — \
+             run `cargo bench --bench sweep -- --commit-baseline` to seed it"
+        );
+    }
+    let report = regression::gate(&baseline, &fresh, tol);
+    print!("{}", report.render());
+    if !report.passed() {
+        bail!(
+            "bench gate failed: {} regression(s), {} missing cell(s) vs {baseline_path}",
+            report.failures.len(),
+            report.missing.len()
+        );
+    }
     Ok(())
 }

@@ -118,7 +118,7 @@ fn corrupt(msg: impl Into<String>) -> StoreError {
 
 /// Cache counters, for diagnostics, benches, and the eviction-churn
 /// assertions in `tests/store_equivalence.rs`.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct StoreStats {
     /// Blocks read from the `X` file into the cache.
     pub loads: u64,

@@ -194,7 +194,7 @@ mod tests {
 
     fn engine() -> Option<XlaEngine> {
         if !Path::new("artifacts/project_b1024.hlo.txt").exists() {
-            eprintln!("skipping: run `make artifacts` first");
+            crate::telemetry::warn("skipping: run `make artifacts` first");
             return None;
         }
         Some(XlaEngine::load("artifacts").unwrap())

@@ -137,7 +137,7 @@ mod tests {
     #[test]
     fn project_artifact_roundtrip() {
         if !artifacts_available() {
-            eprintln!("skipping: run `make artifacts` first");
+            crate::telemetry::warn("skipping: run `make artifacts` first");
             return;
         }
         let rt = PjrtRuntime::cpu("artifacts").unwrap();
@@ -170,7 +170,7 @@ mod tests {
     #[test]
     fn objective_artifact_matches_rust_formula() {
         if !artifacts_available() {
-            eprintln!("skipping: run `make artifacts` first");
+            crate::telemetry::warn("skipping: run `make artifacts` first");
             return;
         }
         let rt = PjrtRuntime::cpu("artifacts").unwrap();

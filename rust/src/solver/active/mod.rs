@@ -42,10 +42,10 @@ pub mod sweep;
 
 use self::cadence::SweepCadence;
 use self::set::{decode_key, ActiveSet};
-use self::sweep::{discovery_sweep, SweepReport};
+use self::sweep::{discovery_sweep_timed, SweepReport};
 use super::backing::XBacking;
 use super::checkpoint::{CheckRecord, SolverState};
-use super::dykstra_parallel::run_pair_phase_store;
+use super::dykstra_parallel::run_pair_phase_timed;
 use super::nearness::{NearnessOpts, NearnessSolution};
 use super::projection::visit_triplet;
 use super::schedule::{Assignment, Schedule};
@@ -56,6 +56,9 @@ use crate::instance::CcLpInstance;
 use crate::matrix::store::{StoreCfg, TileScratch, TileStore};
 use crate::matrix::PackedSym;
 use crate::runtime::engine::XlaEngine;
+use crate::telemetry::{
+    self, Counters, Event, NullRecorder, PassKind, PhaseName, PhaseProbe, Recorder,
+};
 use crate::util::parallel::scoped_workers;
 use crate::util::shared::PerWorker;
 
@@ -87,12 +90,30 @@ impl ActiveParams {
 }
 
 /// Resolve the engine the sweep backend needs: `Engine` tries to load
-/// the PJRT artifacts once per solve and silently falls back to the
+/// the PJRT artifacts once per solve and falls back to the
 /// (bitwise-equal) screened path when they are unavailable — which is
-/// always the case under the offline `xla` stub.
-fn load_sweep_engine(backend: SweepBackend) -> Option<XlaEngine> {
+/// always the case under the offline `xla` stub. The fallback is
+/// reported as a [`Event::Warn`] through the solve's recorder (or the
+/// global [`telemetry::warn`] channel), never printed directly.
+fn load_sweep_engine(backend: SweepBackend, rec: &dyn Recorder) -> Option<XlaEngine> {
     match backend {
-        SweepBackend::Engine => XlaEngine::load(crate::runtime::DEFAULT_ARTIFACTS_DIR).ok(),
+        SweepBackend::Engine => {
+            match XlaEngine::load(crate::runtime::DEFAULT_ARTIFACTS_DIR) {
+                Ok(engine) => Some(engine),
+                Err(e) => {
+                    let msg = format!(
+                        "sweep backend `engine`: PJRT artifacts unavailable ({e}); \
+                         falling back to the bitwise-equal screened backend"
+                    );
+                    if rec.enabled() {
+                        rec.record(&Event::Warn { msg });
+                    } else {
+                        telemetry::warn(&msg);
+                    }
+                    None
+                }
+            }
+        }
         _ => None,
     }
 }
@@ -104,7 +125,6 @@ fn load_sweep_engine(backend: SweepBackend) -> Option<XlaEngine> {
 /// so on a disk-backed [`TileStore`] a cheap pass only touches the
 /// blocks of tiles that still hold duals. Returns the number of
 /// triplets visited.
-#[allow(unused_unsafe)]
 pub(crate) fn active_pass(
     store: &dyn TileStore,
     schedule: &Schedule,
@@ -112,11 +132,27 @@ pub(crate) fn active_pass(
     p: usize,
     assignment: Assignment,
 ) -> u64 {
+    active_pass_timed(store, schedule, set, p, assignment, None)
+}
+
+/// [`active_pass`] with optional per-worker busy-seconds accumulation
+/// (`worker_secs[tid]` gains each worker's in-wave wall time; barrier
+/// waits are excluded). `None` adds no timing work at all.
+#[allow(unused_unsafe)]
+pub(crate) fn active_pass_timed(
+    store: &dyn TileStore,
+    schedule: &Schedule,
+    set: &ActiveSet,
+    p: usize,
+    assignment: Assignment,
+    worker_secs: Option<&PerWorker<f64>>,
+) -> u64 {
     let counts = PerWorker::new(vec![0u64; p]);
     scoped_workers(p, |tid, barrier| {
         let mut visited = 0u64;
         let mut scratch = TileScratch::default();
         for (wave_idx, wave) in schedule.waves().iter().enumerate() {
+            let tb = telemetry::busy_start(worker_secs);
             let mut r = assignment.first_tile(tid, wave_idx, p);
             while r < wave.len() {
                 let tile = &wave[r];
@@ -153,6 +189,8 @@ pub(crate) fn active_pass(
                 visited += bucket.len() as u64;
                 r += p;
             }
+            // SAFETY: slot `tid` belongs to this worker.
+            unsafe { telemetry::add_busy(worker_secs, tid, tb) };
             barrier.wait();
         }
         // SAFETY: slot `tid` belongs to this worker.
@@ -212,10 +250,25 @@ pub fn solve_cc_stored(
     resume_from: Option<&SolverState>,
     on_checkpoint: &mut dyn FnMut(&SolverState),
 ) -> anyhow::Result<Solution> {
+    solve_cc_traced(inst, opts, store_cfg, resume_from, on_checkpoint, &NullRecorder)
+}
+
+/// [`solve_cc_stored`] with a telemetry [`Recorder`] attached. All
+/// instrumentation is gated on [`Recorder::enabled`], so passing
+/// [`NullRecorder`] reproduces the untraced solve bitwise (pinned by
+/// `tests/telemetry.rs`).
+pub fn solve_cc_traced(
+    inst: &CcLpInstance,
+    opts: &SolveOpts,
+    store_cfg: &StoreCfg,
+    resume_from: Option<&SolverState>,
+    on_checkpoint: &mut dyn FnMut(&SolverState),
+    rec: &dyn Recorder,
+) -> anyhow::Result<Solution> {
     let params = ActiveParams::from_strategy(opts.strategy)
         .expect("active::solve_cc requires SolveOpts::strategy = Strategy::Active");
     let mut cadence = SweepCadence::new(params.policy(opts.sweep_policy));
-    let engine = load_sweep_engine(opts.sweep_backend);
+    let engine = load_sweep_engine(opts.sweep_backend, rec);
     let schedule = Schedule::new(inst.n, opts.tile);
     let p = opts.threads.max(1);
     let mut state = match resume_from {
@@ -258,15 +311,24 @@ pub fn solve_cc_stored(
     // Exact residuals of the confirming scan on early stop (state does
     // not change between that scan and the end of the loop).
     let mut exact_at_break: Option<Residuals> = None;
+    let pairs_per_pass = (inst.n * (inst.n - 1) / 2) as u64;
+    let mut probe = PhaseProbe::new(rec, p);
 
     for pass in start_pass..opts.max_passes {
         let t0 = std::time::Instant::now();
         // Pass 0 discovers — unless a warm start already seeded the set.
         let is_sweep =
             cadence.wants_sweep(pass) && !(skip_sweep_at_start && pass == start_pass);
+        let pass_no = (pass + 1) as u64;
+        probe.emit(Event::PassStart {
+            pass: pass_no,
+            kind: if is_sweep { PassKind::Sweep } else { PassKind::Cheap },
+        });
         if is_sweep {
+            let pt = probe.start();
+            let ws = probe.workers();
             let report = backing.with_store(&state.col_starts, &state.winv, |store| {
-                discovery_sweep(
+                discovery_sweep_timed(
                     store,
                     &schedule,
                     &active,
@@ -274,30 +336,60 @@ pub fn solve_cc_stored(
                     opts.assignment,
                     opts.sweep_backend,
                     engine.as_ref(),
+                    ws.as_ref(),
                 )
             });
             triplet_visits += report.triplet_visits;
             sweep_screened += report.triplet_visits;
             sweep_projected += report.triplets_projected;
+            probe.finish(pass_no, PhaseName::Sweep, pt, report.triplet_visits, ws);
+            probe.emit(Event::Sweep {
+                pass: pass_no,
+                screened: report.triplet_visits,
+                projected: report.triplets_projected,
+                max_violation: report.max_violation,
+            });
             last_sweep = Some(report);
         } else {
-            triplet_visits += backing.with_store(&state.col_starts, &state.winv, |store| {
-                active_pass(store, &schedule, &active, p, opts.assignment)
+            let pt = probe.start();
+            let ws = probe.workers();
+            let visited = backing.with_store(&state.col_starts, &state.winv, |store| {
+                active_pass_timed(store, &schedule, &active, p, opts.assignment, ws.as_ref())
             });
+            triplet_visits += visited;
+            probe.finish(pass_no, PhaseName::Metric, pt, visited, ws);
         }
         if is_sweep {
             cadence.note_sweep(last_sweep.expect("sweep pass recorded a report").max_violation);
+            if probe.on() {
+                probe.emit(Event::ActiveSet {
+                    pass: pass_no,
+                    size: active.len() as u64,
+                    forgotten: 0,
+                });
+            }
         } else {
-            forget::forget_inactive(&mut active, params.forget_after);
-            cadence.note_cheap(active.len());
+            let dropped = forget::forget_inactive(&mut active, params.forget_after);
+            let size = active.len();
+            cadence.note_cheap(size);
+            if probe.on() {
+                probe.emit(Event::ActiveSet {
+                    pass: pass_no,
+                    size: size as u64,
+                    forgotten: dropped as u64,
+                });
+            }
         }
         {
+            let pt = probe.start();
+            let ws = probe.workers();
             let CcState { col_starts, winv, f, y_upper, y_lower, y_box, d, include_box, .. } =
                 &mut state;
             let ib = *include_box;
             backing.with_store(col_starts.as_slice(), winv.as_slice(), |store| {
-                run_pair_phase_store(store, f, y_upper, y_lower, y_box, d, ib, p)
+                run_pair_phase_timed(store, f, y_upper, y_lower, y_box, d, ib, p, ws.as_ref())
             });
+            probe.finish(pass_no, PhaseName::Pair, pt, pairs_per_pass, ws);
         }
         passes_done = pass + 1;
         if opts.track_pass_times {
@@ -317,8 +409,17 @@ pub fn solve_cc_stored(
                 next_check += opts.check_every;
             }
             let report = last_sweep.expect("sweep pass recorded a report");
+            let pt = probe.start();
             let r = backing.with_store(&state.col_starts, &state.winv, |store| {
                 compute_residuals_trusting_sweep_stored(&state, store, p, report.max_violation)
+            });
+            probe.finish(pass_no, PhaseName::ResidualScan, pt, 0, None);
+            probe.emit(Event::Residuals {
+                pass: pass_no,
+                max_violation: r.max_violation,
+                rel_gap: r.rel_gap,
+                lp_objective: r.lp_objective,
+                exact: false,
             });
             history.push(CheckRecord {
                 pass: passes_done as u64,
@@ -326,8 +427,23 @@ pub fn solve_cc_stored(
                 rel_gap: r.rel_gap,
             });
             if r.max_violation <= opts.tol_violation && r.rel_gap.abs() <= opts.tol_gap {
+                let pt = probe.start();
                 let exact = backing.with_store(&state.col_starts, &state.winv, |store| {
                     compute_residuals_stored(&state, store, &schedule, p)
+                });
+                probe.finish(
+                    pass_no,
+                    PhaseName::ResidualScan,
+                    pt,
+                    schedule.total_triplets(),
+                    None,
+                );
+                probe.emit(Event::Residuals {
+                    pass: pass_no,
+                    max_violation: exact.max_violation,
+                    rel_gap: exact.rel_gap,
+                    lp_objective: exact.lp_objective,
+                    exact: true,
                 });
                 // The exact confirming scan is authoritative: its values
                 // are what the history records and (on a stop) what
@@ -346,6 +462,7 @@ pub fn solve_cc_stored(
             }
         }
         if opts.checkpoint_every > 0 && (passes_done % opts.checkpoint_every == 0 || stop) {
+            let pt = probe.start();
             on_checkpoint(&capture_cc_active_backed(
                 &state,
                 &mut backing,
@@ -355,13 +472,26 @@ pub fn solve_cc_stored(
                 next_check,
                 &history,
             )?);
+            probe.finish(pass_no, PhaseName::Checkpoint, pt, 0, None);
             last_saved = passes_done;
+        }
+        if probe.on() {
+            if let Some(stats) = backing.store_stats() {
+                probe.emit(Event::StoreIo { pass: pass_no, stats });
+            }
+            probe.emit(Event::PassEnd {
+                pass: pass_no,
+                secs: t0.elapsed().as_secs_f64(),
+                triplet_visits,
+                active_triplets: active.len() as u64,
+            });
         }
         if stop {
             break;
         }
     }
     if opts.checkpoint_every > 0 && last_saved != passes_done {
+        let pt = probe.start();
         on_checkpoint(&capture_cc_active_backed(
             &state,
             &mut backing,
@@ -371,20 +501,58 @@ pub fn solve_cc_stored(
             next_check,
             &history,
         )?);
+        probe.finish(passes_done as u64, PhaseName::Checkpoint, pt, 0, None);
     }
 
     // Final residuals are always exact (the O(n^3) scan), so active and
     // full solutions are directly comparable.
-    let mut residuals = exact_at_break.unwrap_or_else(|| {
-        backing.with_store(&state.col_starts, &state.winv, |store| {
-            compute_residuals_stored(&state, store, &schedule, p)
-        })
-    });
+    let mut residuals = match exact_at_break {
+        Some(r) => r,
+        None => {
+            let pt = probe.start();
+            let r = backing.with_store(&state.col_starts, &state.winv, |store| {
+                compute_residuals_stored(&state, store, &schedule, p)
+            });
+            probe.finish(
+                passes_done as u64,
+                PhaseName::ResidualScan,
+                pt,
+                schedule.total_triplets(),
+                None,
+            );
+            probe.emit(Event::Residuals {
+                pass: passes_done as u64,
+                max_violation: r.max_violation,
+                rel_gap: r.rel_gap,
+                lp_objective: r.lp_objective,
+                exact: true,
+            });
+            r
+        }
+    };
     let active_now = active.len();
+    let nnz_duals = active.nnz_duals();
     residuals.metric_visits = triplet_visits * 3;
     residuals.active_triplets = active_now;
     residuals.sweep_screened = sweep_screened;
     residuals.sweep_projected = sweep_projected;
+    if probe.on() {
+        probe.emit(Event::Footer {
+            counters: Counters {
+                passes: passes_done as u64,
+                metric_visits: triplet_visits * 3,
+                active_triplets: active_now as u64,
+                sweep_screened,
+                sweep_projected,
+                nnz_duals: nnz_duals as u64,
+                max_violation: residuals.max_violation,
+                rel_gap: residuals.rel_gap,
+                phase_secs: probe.wall_totals(),
+                worker_busy_secs: probe.busy_totals(),
+                store: backing.store_stats(),
+            },
+        });
+    }
     let x_final = backing.extract()?;
     let mut xm = PackedSym::zeros(inst.n);
     xm.as_mut_slice().copy_from_slice(&x_final);
@@ -394,7 +562,7 @@ pub fn solve_cc_stored(
         passes: passes_done,
         residuals,
         pass_times,
-        nnz_duals: active.nnz_duals(),
+        nnz_duals,
         metric_visits: triplet_visits * 3,
         active_triplets: active_now,
         sweep_screened,
@@ -486,10 +654,25 @@ pub fn solve_nearness_stored(
     resume_from: Option<&SolverState>,
     on_checkpoint: &mut dyn FnMut(&SolverState),
 ) -> anyhow::Result<NearnessSolution> {
+    solve_nearness_traced(inst, opts, store_cfg, resume_from, on_checkpoint, &NullRecorder)
+}
+
+/// [`solve_nearness_stored`] with a telemetry [`Recorder`] attached.
+/// All instrumentation is gated on [`Recorder::enabled`], so passing
+/// [`NullRecorder`] reproduces the untraced solve bitwise (pinned by
+/// `tests/telemetry.rs`).
+pub fn solve_nearness_traced(
+    inst: &MetricNearnessInstance,
+    opts: &NearnessOpts,
+    store_cfg: &StoreCfg,
+    resume_from: Option<&SolverState>,
+    on_checkpoint: &mut dyn FnMut(&SolverState),
+    rec: &dyn Recorder,
+) -> anyhow::Result<NearnessSolution> {
     let params = ActiveParams::from_strategy(opts.strategy)
         .expect("active::solve_nearness requires NearnessOpts::strategy = Strategy::Active");
     let mut cadence = SweepCadence::new(params.policy(opts.sweep_policy));
-    let engine = load_sweep_engine(opts.sweep_backend);
+    let engine = load_sweep_engine(opts.sweep_backend, rec);
     let n = inst.n;
     let p = opts.threads.max(1);
     let schedule = Schedule::new(n, opts.tile);
@@ -524,13 +707,22 @@ pub fn solve_nearness_stored(
     // Exact violation of the confirming scan on early stop (x does not
     // change between that scan and the end of the loop).
     let mut exact_at_break: Option<f64> = None;
+    let mut probe = PhaseProbe::new(rec, p);
 
     for pass in start_pass..opts.max_passes {
+        let t_pass = probe.start();
         let is_sweep =
             cadence.wants_sweep(pass) && !(skip_sweep_at_start && pass == start_pass);
+        let pass_no = (pass + 1) as u64;
+        probe.emit(Event::PassStart {
+            pass: pass_no,
+            kind: if is_sweep { PassKind::Sweep } else { PassKind::Cheap },
+        });
         if is_sweep {
+            let pt = probe.start();
+            let ws = probe.workers();
             let report = backing.with_store(&col_starts, &winv, |store| {
-                discovery_sweep(
+                discovery_sweep_timed(
                     store,
                     &schedule,
                     &active,
@@ -538,22 +730,49 @@ pub fn solve_nearness_stored(
                     opts.assignment,
                     opts.sweep_backend,
                     engine.as_ref(),
+                    ws.as_ref(),
                 )
             });
             triplet_visits += report.triplet_visits;
             sweep_screened += report.triplet_visits;
             sweep_projected += report.triplets_projected;
+            probe.finish(pass_no, PhaseName::Sweep, pt, report.triplet_visits, ws);
+            probe.emit(Event::Sweep {
+                pass: pass_no,
+                screened: report.triplet_visits,
+                projected: report.triplets_projected,
+                max_violation: report.max_violation,
+            });
             last_sweep = Some(report);
         } else {
-            triplet_visits += backing.with_store(&col_starts, &winv, |store| {
-                active_pass(store, &schedule, &active, p, opts.assignment)
+            let pt = probe.start();
+            let ws = probe.workers();
+            let visited = backing.with_store(&col_starts, &winv, |store| {
+                active_pass_timed(store, &schedule, &active, p, opts.assignment, ws.as_ref())
             });
+            triplet_visits += visited;
+            probe.finish(pass_no, PhaseName::Metric, pt, visited, ws);
         }
         if is_sweep {
             cadence.note_sweep(last_sweep.expect("sweep pass recorded a report").max_violation);
+            if probe.on() {
+                probe.emit(Event::ActiveSet {
+                    pass: pass_no,
+                    size: active.len() as u64,
+                    forgotten: 0,
+                });
+            }
         } else {
-            forget::forget_inactive(&mut active, params.forget_after);
-            cadence.note_cheap(active.len());
+            let dropped = forget::forget_inactive(&mut active, params.forget_after);
+            let size = active.len();
+            cadence.note_cheap(size);
+            if probe.on() {
+                probe.emit(Event::ActiveSet {
+                    pass: pass_no,
+                    size: size as u64,
+                    forgotten: dropped as u64,
+                });
+            }
         }
         passes_done = pass + 1;
         // The sweep's mid-pass measurement is a cheap screen (later
@@ -567,13 +786,35 @@ pub fn solve_nearness_stored(
                 next_check += opts.check_every;
             }
             let screened = last_sweep.expect("sweep pass recorded a report").max_violation;
+            probe.emit(Event::Residuals {
+                pass: pass_no,
+                max_violation: screened,
+                rel_gap: 0.0,
+                lp_objective: 0.0,
+                exact: false,
+            });
             history.push(CheckRecord {
                 pass: passes_done as u64,
                 max_violation: screened,
                 rel_gap: 0.0,
             });
             if screened <= opts.tol_violation {
+                let pt = probe.start();
                 let v = backing.violation(&col_starts, n, p, &schedule);
+                probe.finish(
+                    pass_no,
+                    PhaseName::ResidualScan,
+                    pt,
+                    schedule.total_triplets(),
+                    None,
+                );
+                probe.emit(Event::Residuals {
+                    pass: pass_no,
+                    max_violation: v,
+                    rel_gap: 0.0,
+                    lp_objective: 0.0,
+                    exact: true,
+                });
                 if let Some(last) = history.last_mut() {
                     last.max_violation = v;
                 }
@@ -584,6 +825,7 @@ pub fn solve_nearness_stored(
             }
         }
         if opts.checkpoint_every > 0 && (passes_done % opts.checkpoint_every == 0 || stop) {
+            let pt = probe.start();
             on_checkpoint(&capture_nearness_active_backed(
                 inst,
                 &mut backing,
@@ -593,13 +835,26 @@ pub fn solve_nearness_stored(
                 next_check,
                 &history,
             )?);
+            probe.finish(pass_no, PhaseName::Checkpoint, pt, 0, None);
             last_saved = passes_done;
+        }
+        if probe.on() {
+            if let Some(stats) = backing.store_stats() {
+                probe.emit(Event::StoreIo { pass: pass_no, stats });
+            }
+            probe.emit(Event::PassEnd {
+                pass: pass_no,
+                secs: t_pass.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0),
+                triplet_visits,
+                active_triplets: active.len() as u64,
+            });
         }
         if stop {
             break;
         }
     }
     if opts.checkpoint_every > 0 && last_saved != passes_done {
+        let pt = probe.start();
         on_checkpoint(&capture_nearness_active_backed(
             inst,
             &mut backing,
@@ -609,10 +864,49 @@ pub fn solve_nearness_stored(
             next_check,
             &history,
         )?);
+        probe.finish(passes_done as u64, PhaseName::Checkpoint, pt, 0, None);
     }
 
-    let max_violation = exact_at_break
-        .unwrap_or_else(|| backing.violation(&col_starts, n, p, &schedule));
+    let max_violation = match exact_at_break {
+        Some(v) => v,
+        None => {
+            let pt = probe.start();
+            let v = backing.violation(&col_starts, n, p, &schedule);
+            probe.finish(
+                passes_done as u64,
+                PhaseName::ResidualScan,
+                pt,
+                schedule.total_triplets(),
+                None,
+            );
+            probe.emit(Event::Residuals {
+                pass: passes_done as u64,
+                max_violation: v,
+                rel_gap: 0.0,
+                lp_objective: 0.0,
+                exact: true,
+            });
+            v
+        }
+    };
+    let active_now = active.len();
+    if probe.on() {
+        probe.emit(Event::Footer {
+            counters: Counters {
+                passes: passes_done as u64,
+                metric_visits: triplet_visits * 3,
+                active_triplets: active_now as u64,
+                sweep_screened,
+                sweep_projected,
+                nnz_duals: active.nnz_duals() as u64,
+                max_violation,
+                rel_gap: 0.0,
+                phase_secs: probe.wall_totals(),
+                worker_busy_secs: probe.busy_totals(),
+                store: backing.store_stats(),
+            },
+        });
+    }
     let x_final = backing.extract()?;
     let mut xm = PackedSym::zeros(n);
     xm.as_mut_slice().copy_from_slice(&x_final);
@@ -622,7 +916,7 @@ pub fn solve_nearness_stored(
         max_violation,
         passes: passes_done,
         metric_visits: triplet_visits * 3,
-        active_triplets: active.len(),
+        active_triplets: active_now,
         sweep_screened,
         sweep_projected,
         store_stats: backing.store_stats(),

@@ -99,9 +99,6 @@ impl SweepReport {
 /// for the duration (same contract as the full metric phase). `engine`
 /// is consulted only by [`SweepBackend::Engine`]; passing `None` there
 /// falls back to the (bitwise-equal) screened path.
-// The lease callbacks carry their own `unsafe` blocks so they stay sound
-// whether or not the enclosing block's context reaches into the closure.
-#[allow(unused_unsafe)]
 #[allow(clippy::too_many_arguments)]
 pub fn discovery_sweep(
     store: &dyn TileStore,
@@ -111,6 +108,26 @@ pub fn discovery_sweep(
     assignment: Assignment,
     backend: SweepBackend,
     engine: Option<&XlaEngine>,
+) -> SweepReport {
+    discovery_sweep_timed(store, schedule, set, p, assignment, backend, engine, None)
+}
+
+/// [`discovery_sweep`] with optional per-worker busy-seconds
+/// accumulation (`worker_secs[tid]` gains each worker's in-wave wall
+/// time; barrier waits are excluded). `None` adds no timing work.
+// The lease callbacks carry their own `unsafe` blocks so they stay sound
+// whether or not the enclosing block's context reaches into the closure.
+#[allow(unused_unsafe)]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn discovery_sweep_timed(
+    store: &dyn TileStore,
+    schedule: &Schedule,
+    set: &ActiveSet,
+    p: usize,
+    assignment: Assignment,
+    backend: SweepBackend,
+    engine: Option<&XlaEngine>,
+    worker_secs: Option<&PerWorker<f64>>,
 ) -> SweepReport {
     let b = schedule.tile_size();
     let maxima = PerWorker::new(vec![f64::NEG_INFINITY; p]);
@@ -124,6 +141,7 @@ pub fn discovery_sweep(
         let mut lanes = EngineLanes::default();
         let mut scratch = TileScratch::default();
         for (wave_idx, wave) in schedule.waves().iter().enumerate() {
+            let tb = crate::telemetry::busy_start(worker_secs);
             let mut r = assignment.first_tile(tid, wave_idx, p);
             while r < wave.len() {
                 let tile = &wave[r];
@@ -209,6 +227,8 @@ pub fn discovery_sweep(
                 local_projected += tile_projected;
                 r += p;
             }
+            // SAFETY: slot `tid` belongs to this worker.
+            unsafe { crate::telemetry::add_busy(worker_secs, tid, tb) };
             barrier.wait();
         }
         // SAFETY: slot `tid` belongs to this worker.

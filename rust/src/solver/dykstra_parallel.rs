@@ -24,6 +24,9 @@ use super::{CcState, Residuals, Solution, SolveOpts};
 use crate::instance::CcLpInstance;
 use crate::matrix::store::{MemStore, StoreCfg, TileScratch, TileStore};
 use crate::matrix::PackedSym;
+use crate::telemetry::{
+    self, Counters, Event, NullRecorder, PassKind, PhaseName, PhaseProbe, Recorder,
+};
 use crate::util::parallel::{chunk_range, scoped_workers};
 use crate::util::shared::{PerWorker, SharedMut};
 
@@ -80,11 +83,36 @@ pub fn solve_stored(
     resume_from: Option<&SolverState>,
     on_checkpoint: &mut dyn FnMut(&SolverState),
 ) -> anyhow::Result<Solution> {
+    solve_traced(inst, opts, store_cfg, resume_from, on_checkpoint, &NullRecorder)
+}
+
+/// [`solve_stored`] with a [`Recorder`] receiving structured trace
+/// events (pass boundaries, phase timings with per-worker busy seconds,
+/// residual timeline, store I/O snapshots, and a
+/// [`crate::telemetry::Counters`] footer). With [`NullRecorder`] — the
+/// default behind every other entry point — no instrumentation runs at
+/// all and the solve is bitwise identical to an untraced one (pinned by
+/// `tests/telemetry.rs`). Dispatches on [`super::Strategy`].
+pub fn solve_traced(
+    inst: &CcLpInstance,
+    opts: &SolveOpts,
+    store_cfg: &StoreCfg,
+    resume_from: Option<&SolverState>,
+    on_checkpoint: &mut dyn FnMut(&SolverState),
+    rec: &dyn Recorder,
+) -> anyhow::Result<Solution> {
     if opts.strategy.is_active() {
-        return super::active::solve_cc_stored(inst, opts, store_cfg, resume_from, on_checkpoint);
+        return super::active::solve_cc_traced(
+            inst,
+            opts,
+            store_cfg,
+            resume_from,
+            on_checkpoint,
+            rec,
+        );
     }
     let schedule = Schedule::new(inst.n, opts.tile);
-    solve_inner(inst, opts, &schedule, store_cfg, resume_from, on_checkpoint)
+    solve_inner(inst, opts, &schedule, store_cfg, resume_from, on_checkpoint, rec)
 }
 
 /// Solve with a prebuilt schedule (benchmarks reuse schedules across
@@ -94,10 +122,11 @@ pub fn solve_with_schedule(
     opts: &SolveOpts,
     schedule: &Schedule,
 ) -> Solution {
-    solve_inner(inst, opts, schedule, &StoreCfg::mem(), None, &mut |_| {})
+    solve_inner(inst, opts, schedule, &StoreCfg::mem(), None, &mut |_| {}, &NullRecorder)
         .expect("cold parallel solve cannot fail")
 }
 
+#[allow(clippy::too_many_arguments)]
 fn solve_inner(
     inst: &CcLpInstance,
     opts: &SolveOpts,
@@ -105,6 +134,7 @@ fn solve_inner(
     store_cfg: &StoreCfg,
     resume_from: Option<&SolverState>,
     on_checkpoint: &mut dyn FnMut(&SolverState),
+    rec: &dyn Recorder,
 ) -> anyhow::Result<Solution> {
     assert_eq!(schedule.n(), inst.n, "schedule built for wrong n");
     assert!(
@@ -144,19 +174,29 @@ fn solve_inner(
     // passes_done at which `residuals` was measured (MAX = never).
     let mut measured_at = usize::MAX;
     let mut last_saved = usize::MAX;
+    let pairs_per_pass = (inst.n * (inst.n - 1) / 2) as u64;
+    let mut probe = PhaseProbe::new(rec, p);
 
     for pass in start_pass..opts.max_passes {
+        let pass_no = (pass + 1) as u64;
+        probe.emit(Event::PassStart { pass: pass_no, kind: PassKind::Full });
         let t0 = std::time::Instant::now();
+        let pt = probe.start();
+        let ws = probe.workers();
         backing.with_store(&state.col_starts, &state.winv, |store| {
-            run_metric_phase_store(store, schedule, &stores, p, opts.assignment)
+            run_metric_phase_timed(store, schedule, &stores, p, opts.assignment, ws.as_ref())
         });
+        probe.finish(pass_no, PhaseName::Metric, pt, triplets_per_pass, ws);
         {
             let CcState { col_starts, winv, f, y_upper, y_lower, y_box, d, include_box, .. } =
                 &mut state;
             let ib = *include_box;
+            let pt = probe.start();
+            let ws = probe.workers();
             backing.with_store(col_starts.as_slice(), winv.as_slice(), |store| {
-                run_pair_phase_store(store, f, y_upper, y_lower, y_box, d, ib, p)
+                run_pair_phase_timed(store, f, y_upper, y_lower, y_box, d, ib, p, ws.as_ref())
             });
+            probe.finish(pass_no, PhaseName::Pair, pt, pairs_per_pass, ws);
         }
         passes_done = pass + 1;
         triplet_visits += triplets_per_pass;
@@ -165,15 +205,24 @@ fn solve_inner(
         }
         let mut stop = false;
         if opts.check_every > 0 && passes_done % opts.check_every == 0 {
+            let pt = probe.start();
             residuals = backing.with_store(&state.col_starts, &state.winv, |store| {
                 compute_residuals_stored(&state, store, schedule, p)
             });
             residuals.stamp_work(triplet_visits, triplets_per_pass as usize);
+            probe.finish(pass_no, PhaseName::ResidualScan, pt, triplets_per_pass, None);
             measured_at = passes_done;
             history.push(CheckRecord {
                 pass: passes_done as u64,
                 max_violation: residuals.max_violation,
                 rel_gap: residuals.rel_gap,
+            });
+            probe.emit(Event::Residuals {
+                pass: pass_no,
+                max_violation: residuals.max_violation,
+                rel_gap: residuals.rel_gap,
+                lp_objective: residuals.lp_objective,
+                exact: true,
             });
             if residuals.max_violation <= opts.tol_violation
                 && residuals.rel_gap.abs() <= opts.tol_gap
@@ -182,6 +231,7 @@ fn solve_inner(
             }
         }
         if opts.checkpoint_every > 0 && (passes_done % opts.checkpoint_every == 0 || stop) {
+            let pt = probe.start();
             on_checkpoint(&capture_cc_full_backed(
                 &state,
                 &mut backing,
@@ -190,8 +240,20 @@ fn solve_inner(
                 triplet_visits,
                 &history,
             )?);
+            probe.finish(pass_no, PhaseName::Checkpoint, pt, 0, None);
             last_saved = passes_done;
         }
+        if probe.on() {
+            if let Some(stats) = backing.store_stats() {
+                probe.emit(Event::StoreIo { pass: pass_no, stats });
+            }
+        }
+        probe.emit(Event::PassEnd {
+            pass: pass_no,
+            secs: t0.elapsed().as_secs_f64(),
+            triplet_visits,
+            active_triplets: triplets_per_pass,
+        });
         if stop {
             break;
         }
@@ -216,6 +278,23 @@ fn solve_inner(
     }
     let mut stores = stores.into_inner();
     let nnz = stores.iter_mut().map(|s| s.nnz()).sum();
+    if probe.on() {
+        probe.emit(Event::Footer {
+            counters: Counters {
+                passes: passes_done as u64,
+                metric_visits: triplet_visits * 3,
+                active_triplets: triplets_per_pass,
+                sweep_screened: 0,
+                sweep_projected: 0,
+                nnz_duals: nnz as u64,
+                max_violation: residuals.max_violation,
+                rel_gap: residuals.rel_gap,
+                phase_secs: probe.wall_totals(),
+                worker_busy_secs: probe.busy_totals(),
+                store: backing.store_stats(),
+            },
+        });
+    }
     let x_final = backing.extract()?;
     let mut xm = PackedSym::zeros(inst.n);
     xm.as_mut_slice().copy_from_slice(&x_final);
@@ -296,6 +375,22 @@ pub(crate) fn run_metric_phase_store(
     p: usize,
     assignment: Assignment,
 ) {
+    run_metric_phase_timed(store, schedule, stores, p, assignment, None)
+}
+
+/// [`run_metric_phase_store`] with optional per-worker busy-seconds
+/// accumulation: when `worker_secs` is attached, each worker adds the
+/// wall time it spent processing tiles (excluding barrier waits) into
+/// its slot, once per wave — no locking, no hot-loop instrumentation.
+#[allow(unused_unsafe)]
+pub(crate) fn run_metric_phase_timed(
+    store: &dyn TileStore,
+    schedule: &Schedule,
+    stores: &PerWorker<DualStore>,
+    p: usize,
+    assignment: Assignment,
+    worker_secs: Option<&PerWorker<f64>>,
+) {
     let b = schedule.tile_size();
     scoped_workers(p, |tid, barrier| {
         // SAFETY: slot `tid` is touched by this worker only.
@@ -303,6 +398,7 @@ pub(crate) fn run_metric_phase_store(
         duals.begin_pass();
         let mut scratch = TileScratch::default();
         for (wave_idx, wave) in schedule.waves().iter().enumerate() {
+            let tb = telemetry::busy_start(worker_secs);
             // Fig 3: the r-th tile of the wave goes to worker r mod p
             // (optionally rotated per wave for better load balance).
             let mut r = assignment.first_tile(tid, wave_idx, p);
@@ -325,6 +421,8 @@ pub(crate) fn run_metric_phase_store(
                 }
                 r += p;
             }
+            // SAFETY: busy slot `tid` is touched by this worker only.
+            unsafe { telemetry::add_busy(worker_secs, tid, tb) };
             // Wave boundary: all workers must finish before the next wave
             // may touch variables this wave wrote.
             barrier.wait();
@@ -353,7 +451,6 @@ pub(crate) fn run_pair_phase(state: &mut CcState, p: usize) {
 /// pair phase is bitwise identical to the resident one. Slacks, pair
 /// and box duals, and the targets stay resident (`O(n²)` each); only
 /// `x` and the inverse weights stream.
-#[allow(unused_unsafe)]
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_pair_phase_store(
     store: &dyn TileStore,
@@ -365,6 +462,25 @@ pub(crate) fn run_pair_phase_store(
     include_box: bool,
     p: usize,
 ) {
+    run_pair_phase_timed(store, f, y_upper, y_lower, y_box, d, include_box, p, None)
+}
+
+/// [`run_pair_phase_store`] with optional per-worker busy-seconds
+/// accumulation (same contract as
+/// [`run_metric_phase_timed`]'s `worker_secs`).
+#[allow(unused_unsafe)]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_pair_phase_timed(
+    store: &dyn TileStore,
+    f: &mut [f64],
+    y_upper: &mut [f64],
+    y_lower: &mut [f64],
+    y_box: &mut [f64],
+    d: &[f64],
+    include_box: bool,
+    p: usize,
+    worker_secs: Option<&PerWorker<f64>>,
+) {
     let m = store.n_pairs();
     debug_assert_eq!(f.len(), m);
     let fs = SharedMut::new(f);
@@ -372,6 +488,7 @@ pub(crate) fn run_pair_phase_store(
     let yl = SharedMut::new(y_lower);
     let yb = SharedMut::new(y_box);
     scoped_workers(p, |tid, _| {
+        let tb = telemetry::busy_start(worker_secs);
         let (lo, hi) = chunk_range(m, p, tid);
         let mut scratch = TileScratch::default();
         // SAFETY: chunks are disjoint -> the pair-range lease contract
@@ -401,6 +518,8 @@ pub(crate) fn run_pair_phase_store(
                 }
             });
         }
+        // SAFETY: busy slot `tid` is touched by this worker only.
+        unsafe { telemetry::add_busy(worker_secs, tid, tb) };
     });
 }
 

@@ -9,6 +9,7 @@ use super::dykstra_parallel::run_pair_phase;
 use super::termination::compute_residuals;
 use super::{CcState, Residuals, Solution, SolveOpts};
 use crate::instance::CcLpInstance;
+use crate::telemetry::{Counters, Event, NullRecorder, PassKind, PhaseName, PhaseProbe, Recorder};
 use crate::util::shared::SharedMut;
 
 /// Solve the CC-LP instance with serial Dykstra. Full strategy only —
@@ -38,6 +39,21 @@ pub fn solve_checkpointed(
     opts: &SolveOpts,
     resume_from: Option<&SolverState>,
     on_checkpoint: &mut dyn FnMut(&SolverState),
+) -> anyhow::Result<Solution> {
+    solve_traced(inst, opts, resume_from, on_checkpoint, &NullRecorder)
+}
+
+/// [`solve_checkpointed`] with a telemetry [`Recorder`] attached. All
+/// instrumentation is gated on [`Recorder::enabled`], so passing
+/// [`NullRecorder`] reproduces the untraced solve bitwise (pinned by
+/// `tests/telemetry.rs`). Serial phases report no per-worker busy
+/// timings (the `workers` array of each phase event is empty).
+pub fn solve_traced(
+    inst: &CcLpInstance,
+    opts: &SolveOpts,
+    resume_from: Option<&SolverState>,
+    on_checkpoint: &mut dyn FnMut(&SolverState),
+    rec: &dyn Recorder,
 ) -> anyhow::Result<Solution> {
     assert!(
         !opts.strategy.is_active(),
@@ -74,10 +90,19 @@ pub fn solve_checkpointed(
     // passes_done at which `residuals` was measured (MAX = never).
     let mut measured_at = usize::MAX;
     let mut last_saved = usize::MAX;
+    let pairs_per_pass = (inst.n * (inst.n - 1) / 2) as u64;
+    let mut probe = PhaseProbe::new(rec, 1);
 
     for pass in start_pass..opts.max_passes {
         let t0 = std::time::Instant::now();
-        run_pass(&mut state, &mut store);
+        let pass_no = (pass + 1) as u64;
+        probe.emit(Event::PassStart { pass: pass_no, kind: PassKind::Full });
+        let pt = probe.start();
+        run_metric_lex(&mut state, &mut store);
+        probe.finish(pass_no, PhaseName::Metric, pt, triplets_per_pass, None);
+        let pt = probe.start();
+        run_pair_phase(&mut state, 1);
+        probe.finish(pass_no, PhaseName::Pair, pt, pairs_per_pass, None);
         passes_done = pass + 1;
         triplet_visits += triplets_per_pass;
         if opts.track_pass_times {
@@ -85,8 +110,17 @@ pub fn solve_checkpointed(
         }
         let mut stop = false;
         if opts.check_every > 0 && passes_done % opts.check_every == 0 {
+            let pt = probe.start();
             residuals = compute_residuals(&state, 1);
             residuals.stamp_work(triplet_visits, triplets_per_pass as usize);
+            probe.finish(pass_no, PhaseName::ResidualScan, pt, triplets_per_pass, None);
+            probe.emit(Event::Residuals {
+                pass: pass_no,
+                max_violation: residuals.max_violation,
+                rel_gap: residuals.rel_gap,
+                lp_objective: residuals.lp_objective,
+                exact: true,
+            });
             measured_at = passes_done;
             history.push(CheckRecord {
                 pass: passes_done as u64,
@@ -100,6 +134,7 @@ pub fn solve_checkpointed(
             }
         }
         if opts.checkpoint_every > 0 && (passes_done % opts.checkpoint_every == 0 || stop) {
+            let pt = probe.start();
             let duals = store.iter_next().collect();
             on_checkpoint(&SolverState::capture_cc_full(
                 &state,
@@ -109,13 +144,23 @@ pub fn solve_checkpointed(
                 triplet_visits,
                 &history,
             ));
+            probe.finish(pass_no, PhaseName::Checkpoint, pt, 0, None);
             last_saved = passes_done;
+        }
+        if probe.on() {
+            probe.emit(Event::PassEnd {
+                pass: pass_no,
+                secs: t0.elapsed().as_secs_f64(),
+                triplet_visits,
+                active_triplets: triplets_per_pass,
+            });
         }
         if stop {
             break;
         }
     }
     if opts.checkpoint_every > 0 && last_saved != passes_done {
+        let pt = probe.start();
         let duals = store.iter_next().collect();
         on_checkpoint(&SolverState::capture_cc_full(
             &state,
@@ -125,14 +170,41 @@ pub fn solve_checkpointed(
             triplet_visits,
             &history,
         ));
+        probe.finish(passes_done as u64, PhaseName::Checkpoint, pt, 0, None);
     }
     // Re-measure unless the last checkpoint already measured the final
     // iterate — reported residuals always describe the returned x.
     if measured_at != passes_done {
+        let pt = probe.start();
         residuals = compute_residuals(&state, 1);
         residuals.stamp_work(triplet_visits, triplets_per_pass as usize);
+        probe.finish(passes_done as u64, PhaseName::ResidualScan, pt, triplets_per_pass, None);
+        probe.emit(Event::Residuals {
+            pass: passes_done as u64,
+            max_violation: residuals.max_violation,
+            rel_gap: residuals.rel_gap,
+            lp_objective: residuals.lp_objective,
+            exact: true,
+        });
     }
     let nnz = store.nnz();
+    if probe.on() {
+        probe.emit(Event::Footer {
+            counters: Counters {
+                passes: passes_done as u64,
+                metric_visits: triplet_visits * 3,
+                active_triplets: triplets_per_pass,
+                sweep_screened: 0,
+                sweep_projected: 0,
+                nnz_duals: nnz as u64,
+                max_violation: residuals.max_violation,
+                rel_gap: residuals.rel_gap,
+                phase_secs: probe.wall_totals(),
+                worker_busy_secs: probe.busy_totals(),
+                store: None,
+            },
+        });
+    }
     Ok(Solution {
         x: state.x_matrix(),
         f: Some(state.f_matrix()),
@@ -151,6 +223,15 @@ pub fn solve_checkpointed(
 /// One full pass: all metric constraints (lexicographic), then all pair
 /// constraints.
 pub fn run_pass(state: &mut CcState, store: &mut DualStore) {
+    run_metric_lex(state, store);
+    // Pair constraints: identical code path as the parallel solver, p = 1.
+    run_pair_phase(state, 1);
+}
+
+/// The metric half of [`run_pass`]: one lexicographic sweep over every
+/// triplet (split out so the traced driver can time the metric and pair
+/// phases separately).
+pub fn run_metric_lex(state: &mut CcState, store: &mut DualStore) {
     store.begin_pass();
     let n = state.n;
     let col_starts = std::mem::take(&mut state.col_starts);
@@ -160,8 +241,6 @@ pub fn run_pass(state: &mut CcState, store: &mut DualStore) {
         unsafe { super::hot_loop::process_lex(&x, &state.winv, &col_starts, n, store) };
     }
     state.col_starts = col_starts;
-    // Pair constraints: identical code path as the parallel solver, p = 1.
-    run_pair_phase(state, 1);
 }
 
 #[cfg(test)]

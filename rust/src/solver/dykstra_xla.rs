@@ -21,6 +21,7 @@ use super::termination::compute_residuals;
 use super::{CcState, Residuals, Solution, SolveOpts};
 use crate::instance::CcLpInstance;
 use crate::runtime::engine::XlaEngine;
+use crate::telemetry::{Counters, Event, NullRecorder, PassKind, PhaseName, PhaseProbe, Recorder};
 use anyhow::Result;
 
 /// Lexicographic rank of triplet (i, j, k) among all i<j<k over n nodes.
@@ -56,6 +57,18 @@ impl TripletRank {
 /// Solve the CC-LP instance through the PJRT engine. Full strategy only —
 /// `Strategy::Active` callers must use [`super::dykstra_parallel::solve`].
 pub fn solve(inst: &CcLpInstance, opts: &SolveOpts, engine: &XlaEngine) -> Result<Solution> {
+    solve_traced(inst, opts, engine, &NullRecorder)
+}
+
+/// [`solve`] with a telemetry [`Recorder`] attached. All instrumentation
+/// is gated on [`Recorder::enabled`]; the engine path is single-threaded
+/// on the host side, so phase events carry no per-worker busy timings.
+pub fn solve_traced(
+    inst: &CcLpInstance,
+    opts: &SolveOpts,
+    engine: &XlaEngine,
+    rec: &dyn Recorder,
+) -> Result<Solution> {
     anyhow::ensure!(
         !opts.strategy.is_active(),
         "the XLA engine runs the full strategy only; use dykstra_parallel::solve for Strategy::Active"
@@ -88,8 +101,12 @@ pub fn solve(inst: &CcLpInstance, opts: &SolveOpts, engine: &XlaEngine) -> Resul
     let mut w3: Vec<f32> = Vec::new();
     let mut y3: Vec<f32> = Vec::new();
 
+    let mut probe = PhaseProbe::new(rec, 1);
     for pass in 0..opts.max_passes {
         let t0 = std::time::Instant::now();
+        let pass_no = (pass + 1) as u64;
+        probe.emit(Event::PassStart { pass: pass_no, kind: PassKind::Full });
+        let pt = probe.start();
         for batch in schedule.batches() {
             // Gather the batch (lanes are pairwise variable-disjoint).
             lanes.clear();
@@ -130,8 +147,10 @@ pub fn solve(inst: &CcLpInstance, opts: &SolveOpts, engine: &XlaEngine) -> Resul
                 metric_duals[db..db + 3].copy_from_slice(&y3[b..b + 3]);
             }
         }
+        probe.finish(pass_no, PhaseName::Metric, pt, n_triplets as u64, None);
         // Pair phase through the pair artifact.
         {
+            let pt = probe.start();
             let mut x32: Vec<f32> = state.x.iter().map(|&v| v as f32).collect();
             let mut f32v: Vec<f32> = state.f.iter().map(|&v| v as f32).collect();
             let mut yu: Vec<f32> = state.y_upper.iter().map(|&v| v as f32).collect();
@@ -145,29 +164,77 @@ pub fn solve(inst: &CcLpInstance, opts: &SolveOpts, engine: &XlaEngine) -> Resul
                 state.y_lower[e] = yl[e] as f64;
                 state.y_box[e] = yb[e] as f64;
             }
+            probe.finish(pass_no, PhaseName::Pair, pt, m as u64, None);
         }
         passes_done = pass + 1;
         if opts.track_pass_times {
             pass_times.push(t0.elapsed().as_secs_f64());
         }
+        let mut stop = false;
         if opts.check_every > 0 && passes_done % opts.check_every == 0 {
+            let pt = probe.start();
             residuals = compute_residuals(&state, opts.threads.max(1));
             residuals.stamp_work(passes_done as u64 * n_triplets as u64, n_triplets);
+            probe.finish(pass_no, PhaseName::ResidualScan, pt, n_triplets as u64, None);
+            probe.emit(Event::Residuals {
+                pass: pass_no,
+                max_violation: residuals.max_violation,
+                rel_gap: residuals.rel_gap,
+                lp_objective: residuals.lp_objective,
+                exact: true,
+            });
             measured_at = passes_done;
             if residuals.max_violation <= opts.tol_violation
                 && residuals.rel_gap.abs() <= opts.tol_gap
             {
-                break;
+                stop = true;
             }
+        }
+        if probe.on() {
+            probe.emit(Event::PassEnd {
+                pass: pass_no,
+                secs: t0.elapsed().as_secs_f64(),
+                triplet_visits: passes_done as u64 * n_triplets as u64,
+                active_triplets: n_triplets as u64,
+            });
+        }
+        if stop {
+            break;
         }
     }
     // Re-measure unless the last checkpoint already measured the final
     // iterate — reported residuals always describe the returned x.
     if measured_at != passes_done {
+        let pt = probe.start();
         residuals = compute_residuals(&state, opts.threads.max(1));
         residuals.stamp_work(passes_done as u64 * n_triplets as u64, n_triplets);
+        probe.finish(passes_done as u64, PhaseName::ResidualScan, pt, n_triplets as u64, None);
+        probe.emit(Event::Residuals {
+            pass: passes_done as u64,
+            max_violation: residuals.max_violation,
+            rel_gap: residuals.rel_gap,
+            lp_objective: residuals.lp_objective,
+            exact: true,
+        });
     }
     let nnz = metric_duals.iter().filter(|&&y| y != 0.0).count();
+    if probe.on() {
+        probe.emit(Event::Footer {
+            counters: Counters {
+                passes: passes_done as u64,
+                metric_visits: passes_done as u64 * n_triplets as u64 * 3,
+                active_triplets: n_triplets as u64,
+                sweep_screened: 0,
+                sweep_projected: 0,
+                nnz_duals: nnz as u64,
+                max_violation: residuals.max_violation,
+                rel_gap: residuals.rel_gap,
+                phase_secs: probe.wall_totals(),
+                worker_busy_secs: probe.busy_totals(),
+                store: None,
+            },
+        });
+    }
     Ok(Solution {
         x: state.x_matrix(),
         f: Some(state.f_matrix()),
@@ -207,7 +274,7 @@ mod tests {
 
     fn engine() -> Option<XlaEngine> {
         if !std::path::Path::new("artifacts/project_b1024.hlo.txt").exists() {
-            eprintln!("skipping: run `make artifacts` first");
+            crate::telemetry::warn("skipping: run `make artifacts` first");
             return None;
         }
         Some(XlaEngine::load("artifacts").unwrap())

@@ -316,6 +316,30 @@ pub struct Solution {
     pub store_stats: Option<crate::matrix::store::StoreStats>,
 }
 
+impl Solution {
+    /// Snapshot the run's unified counters ([`crate::telemetry::Counters`]).
+    ///
+    /// Mirrors the `footer` event a traced run writes, minus the phase /
+    /// worker-time breakdowns (those exist only when a recorder observed
+    /// the run) — so untraced embedders still get one struct with the
+    /// work, sweep, dual, and store-I/O totals.
+    pub fn counters(&self) -> crate::telemetry::Counters {
+        crate::telemetry::Counters {
+            passes: self.passes as u64,
+            metric_visits: self.metric_visits,
+            active_triplets: self.active_triplets as u64,
+            sweep_screened: self.sweep_screened,
+            sweep_projected: self.sweep_projected,
+            nnz_duals: self.nnz_duals as u64,
+            max_violation: self.residuals.max_violation,
+            rel_gap: self.residuals.rel_gap,
+            phase_secs: Vec::new(),
+            worker_busy_secs: Vec::new(),
+            store: self.store_stats,
+        }
+    }
+}
+
 /// Mutable state of a CC-LP solve, shared by both solvers.
 ///
 /// Variable layout follows DESIGN.md §6: packed `x` (distances) and `f`

@@ -11,12 +11,13 @@
 use super::backing::XBacking;
 use super::checkpoint::{self, CheckRecord, SolverState};
 use super::duals::DualStore;
-use super::dykstra_parallel::run_metric_phase_store;
+use super::dykstra_parallel::run_metric_phase_timed;
 use super::schedule::{Assignment, Schedule};
 use super::{Strategy, SweepBackend, SweepPolicy};
 use crate::instance::metric_nearness::MetricNearnessInstance;
 use crate::matrix::store::StoreCfg;
 use crate::matrix::PackedSym;
+use crate::telemetry::{Counters, Event, NullRecorder, PassKind, PhaseName, PhaseProbe, Recorder};
 use crate::util::parallel::par_reduce_max;
 use crate::util::shared::{PerWorker, SharedMut};
 
@@ -94,6 +95,29 @@ pub struct NearnessSolution {
     pub store_stats: Option<crate::matrix::store::StoreStats>,
 }
 
+impl NearnessSolution {
+    /// The unified [`Counters`] snapshot of this solve — the same shape
+    /// as a trace footer ([`Event::Footer`]). Nearness solves have no
+    /// duality gap and do not track nonzero duals, so `rel_gap` and
+    /// `nnz_duals` are 0; the phase timing vectors are empty (they exist
+    /// only inside a traced run's footer).
+    pub fn counters(&self) -> Counters {
+        Counters {
+            passes: self.passes as u64,
+            metric_visits: self.metric_visits,
+            active_triplets: self.active_triplets as u64,
+            sweep_screened: self.sweep_screened,
+            sweep_projected: self.sweep_projected,
+            nnz_duals: 0,
+            max_violation: self.max_violation,
+            rel_gap: 0.0,
+            phase_secs: Vec::new(),
+            worker_busy_secs: Vec::new(),
+            store: self.store_stats,
+        }
+    }
+}
+
 /// Solve with the parallel wave schedule (threads = 1 for serial order use
 /// [`solve_serial_order`]). Dispatches on [`NearnessOpts::strategy`].
 pub fn solve(inst: &MetricNearnessInstance, opts: &NearnessOpts) -> NearnessSolution {
@@ -143,13 +167,29 @@ pub fn solve_stored(
     resume_from: Option<&SolverState>,
     on_checkpoint: &mut dyn FnMut(&SolverState),
 ) -> anyhow::Result<NearnessSolution> {
+    solve_traced(inst, opts, store_cfg, resume_from, on_checkpoint, &NullRecorder)
+}
+
+/// [`solve_stored`] with a telemetry [`Recorder`] attached. All
+/// instrumentation is gated on [`Recorder::enabled`], so passing
+/// [`NullRecorder`] reproduces the untraced solve bitwise (pinned by
+/// `tests/telemetry.rs`).
+pub fn solve_traced(
+    inst: &MetricNearnessInstance,
+    opts: &NearnessOpts,
+    store_cfg: &StoreCfg,
+    resume_from: Option<&SolverState>,
+    on_checkpoint: &mut dyn FnMut(&SolverState),
+    rec: &dyn Recorder,
+) -> anyhow::Result<NearnessSolution> {
     if opts.strategy.is_active() {
-        return super::active::solve_nearness_stored(
+        return super::active::solve_nearness_traced(
             inst,
             opts,
             store_cfg,
             resume_from,
             on_checkpoint,
+            rec,
         );
     }
     let n = inst.n;
@@ -179,15 +219,33 @@ pub fn solve_stored(
     // passes_done at which `max_violation` was measured (MAX = never).
     let mut measured_at = usize::MAX;
     let mut last_saved = usize::MAX;
+    let mut probe = PhaseProbe::new(rec, p);
     for pass in start_pass..opts.max_passes {
-        backing.with_store(&col_starts, &winv, |store| {
-            run_metric_phase_store(store, &schedule, &stores, p, opts.assignment)
-        });
+        let t_pass = probe.start();
+        let pass_no = (pass + 1) as u64;
+        probe.emit(Event::PassStart { pass: pass_no, kind: PassKind::Full });
+        {
+            let pt = probe.start();
+            let ws = probe.workers();
+            backing.with_store(&col_starts, &winv, |store| {
+                run_metric_phase_timed(store, &schedule, &stores, p, opts.assignment, ws.as_ref())
+            });
+            probe.finish(pass_no, PhaseName::Metric, pt, triplets_per_pass, ws);
+        }
         passes_done = pass + 1;
         triplet_visits += triplets_per_pass;
         let mut stop = false;
         if opts.check_every > 0 && passes_done % opts.check_every == 0 {
+            let pt = probe.start();
             max_violation = backing.violation(&col_starts, n, p, &schedule);
+            probe.finish(pass_no, PhaseName::ResidualScan, pt, triplets_per_pass, None);
+            probe.emit(Event::Residuals {
+                pass: pass_no,
+                max_violation,
+                rel_gap: 0.0,
+                lp_objective: 0.0,
+                exact: true,
+            });
             measured_at = passes_done;
             history.push(CheckRecord {
                 pass: passes_done as u64,
@@ -199,6 +257,7 @@ pub fn solve_stored(
             }
         }
         if opts.checkpoint_every > 0 && (passes_done % opts.checkpoint_every == 0 || stop) {
+            let pt = probe.start();
             on_checkpoint(&capture_nearness_full_backed(
                 inst,
                 &mut backing,
@@ -207,13 +266,26 @@ pub fn solve_stored(
                 triplet_visits,
                 &history,
             )?);
+            probe.finish(pass_no, PhaseName::Checkpoint, pt, 0, None);
             last_saved = passes_done;
+        }
+        if probe.on() {
+            if let Some(stats) = backing.store_stats() {
+                probe.emit(Event::StoreIo { pass: pass_no, stats });
+            }
+            probe.emit(Event::PassEnd {
+                pass: pass_no,
+                secs: t_pass.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0),
+                triplet_visits,
+                active_triplets: triplets_per_pass,
+            });
         }
         if stop {
             break;
         }
     }
     if opts.checkpoint_every > 0 && last_saved != passes_done {
+        let pt = probe.start();
         on_checkpoint(&capture_nearness_full_backed(
             inst,
             &mut backing,
@@ -222,11 +294,39 @@ pub fn solve_stored(
             triplet_visits,
             &history,
         )?);
+        probe.finish(passes_done as u64, PhaseName::Checkpoint, pt, 0, None);
     }
     // Re-measure unless the last checkpoint already measured the final
     // iterate — the reported violation always describes the returned x.
     if measured_at != passes_done {
+        let pt = probe.start();
         max_violation = backing.violation(&col_starts, n, p, &schedule);
+        probe.finish(passes_done as u64, PhaseName::ResidualScan, pt, triplets_per_pass, None);
+        probe.emit(Event::Residuals {
+            pass: passes_done as u64,
+            max_violation,
+            rel_gap: 0.0,
+            lp_objective: 0.0,
+            exact: true,
+        });
+    }
+    if probe.on() {
+        let nnz: usize = stores.iter_mut().map(|s| s.nnz()).sum();
+        probe.emit(Event::Footer {
+            counters: Counters {
+                passes: passes_done as u64,
+                metric_visits: triplet_visits * 3,
+                active_triplets: triplets_per_pass,
+                sweep_screened: 0,
+                sweep_projected: 0,
+                nnz_duals: nnz as u64,
+                max_violation,
+                rel_gap: 0.0,
+                phase_secs: probe.wall_totals(),
+                worker_busy_secs: probe.busy_totals(),
+                store: backing.store_stats(),
+            },
+        });
     }
     let x_final = backing.extract()?;
     let mut xm = PackedSym::zeros(n);

@@ -1,0 +1,470 @@
+//! The typed trace event vocabulary and its JSONL (de)serialization.
+//!
+//! Each event serializes to exactly one JSON object per line with an
+//! `"ev"` discriminator field; [`Event::parse`] is the exact inverse of
+//! [`Event::to_json_line`] (pinned by the schema-roundtrip tests), so a
+//! trace file can be re-read into typed events by `report` or by any
+//! external consumer.
+
+use crate::matrix::store::StoreStats;
+use crate::util::json::{self, Json};
+
+use super::Counters;
+
+/// What kind of solver pass a [`Event::PassStart`] opens.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PassKind {
+    /// A full pass visiting every metric constraint (the classic
+    /// Dykstra schedule; also every pass of the non-active drivers).
+    Full,
+    /// A cheap active-set pass visiting only retained constraints.
+    Cheap,
+    /// A discovery-sweep pass (screen-then-project over everything).
+    Sweep,
+}
+
+impl PassKind {
+    /// The wire spelling used in the JSONL stream.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PassKind::Full => "full",
+            PassKind::Cheap => "cheap",
+            PassKind::Sweep => "sweep",
+        }
+    }
+
+    /// Inverse of [`Self::as_str`].
+    pub fn parse(s: &str) -> Option<PassKind> {
+        match s {
+            "full" => Some(PassKind::Full),
+            "cheap" => Some(PassKind::Cheap),
+            "sweep" => Some(PassKind::Sweep),
+            _ => None,
+        }
+    }
+}
+
+/// Which solver phase a [`Event::Phase`] measured.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PhaseName {
+    /// The metric (triangle-constraint) projection phase.
+    Metric,
+    /// The CC-LP pair (`[0,1]`-box + pair slack) phase.
+    Pair,
+    /// An exact residual scan (violation / gap measurement).
+    ResidualScan,
+    /// A discovery sweep (screen + project).
+    Sweep,
+    /// Checkpoint capture and sink invocation.
+    Checkpoint,
+}
+
+impl PhaseName {
+    /// The wire spelling used in the JSONL stream.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PhaseName::Metric => "metric",
+            PhaseName::Pair => "pair",
+            PhaseName::ResidualScan => "residual-scan",
+            PhaseName::Sweep => "sweep",
+            PhaseName::Checkpoint => "checkpoint",
+        }
+    }
+
+    /// Inverse of [`Self::as_str`].
+    pub fn parse(s: &str) -> Option<PhaseName> {
+        match s {
+            "metric" => Some(PhaseName::Metric),
+            "pair" => Some(PhaseName::Pair),
+            "residual-scan" => Some(PhaseName::ResidualScan),
+            "sweep" => Some(PhaseName::Sweep),
+            "checkpoint" => Some(PhaseName::Checkpoint),
+            _ => None,
+        }
+    }
+}
+
+/// One structured trace event. Passes are numbered from 1 in the trace
+/// (matching the CLI's human-facing output), and cumulative counters
+/// (`triplet_visits`, store I/O) are monotone snapshots, so consumers
+/// can difference adjacent passes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// A solver pass begins.
+    PassStart {
+        /// 1-based pass number.
+        pass: u64,
+        /// What kind of pass this is.
+        kind: PassKind,
+    },
+    /// One timed phase within a pass.
+    Phase {
+        /// 1-based pass number.
+        pass: u64,
+        /// Which phase was measured.
+        name: PhaseName,
+        /// Wall seconds for the phase (driver-side, includes barriers).
+        secs: f64,
+        /// Constraint visits performed by the phase (0 when the phase
+        /// does not visit constraints, e.g. checkpointing).
+        visits: u64,
+        /// Per-worker busy seconds (tile/chunk work, excluding barrier
+        /// waits); empty when the phase ran without worker timing
+        /// (serial / XLA drivers, residual scans).
+        workers: Vec<f64>,
+    },
+    /// A discovery sweep's screen/project outcome.
+    Sweep {
+        /// 1-based pass number.
+        pass: u64,
+        /// Constraints screened by the vectorized violation check.
+        screened: u64,
+        /// Constraints that survived the screen and were projected.
+        projected: u64,
+        /// Maximum violation observed by the sweep.
+        max_violation: f64,
+    },
+    /// Active-set dynamics after a pass (active strategies only).
+    ActiveSet {
+        /// 1-based pass number.
+        pass: u64,
+        /// Triplets retained in the active set after the pass.
+        size: u64,
+        /// Triplets dropped by the retention policy this pass.
+        forgotten: u64,
+    },
+    /// A residual measurement (the convergence timeline).
+    Residuals {
+        /// 1-based pass number.
+        pass: u64,
+        /// Maximum metric-constraint violation.
+        max_violation: f64,
+        /// Relative duality gap (0 for nearness solves).
+        rel_gap: f64,
+        /// LP objective value (0 for nearness solves).
+        lp_objective: f64,
+        /// True for an exact scan; false for a sweep-trusted estimate.
+        exact: bool,
+    },
+    /// A cumulative tile-store I/O snapshot (disk-backed solves only).
+    StoreIo {
+        /// 1-based pass number.
+        pass: u64,
+        /// Cumulative cache counters at the end of the pass.
+        stats: StoreStats,
+    },
+    /// A solver pass ends.
+    PassEnd {
+        /// 1-based pass number.
+        pass: u64,
+        /// Wall seconds for the whole pass.
+        secs: f64,
+        /// Cumulative triplet visits at the end of the pass.
+        triplet_visits: u64,
+        /// Active triplets after the pass (the full constraint count for
+        /// non-active strategies).
+        active_triplets: u64,
+    },
+    /// A non-fatal notice (fallbacks, skipped work).
+    Warn {
+        /// Human-readable message.
+        msg: String,
+    },
+    /// End-of-solve summary: the unified counter snapshot.
+    Footer {
+        /// Final counters for the whole solve.
+        counters: Counters,
+    },
+}
+
+impl Event {
+    /// Serialize as one JSON line (no trailing newline).
+    pub fn to_json_line(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    fn to_json(&self) -> Json {
+        let obj = |ev: &str, mut fields: Vec<(String, Json)>| {
+            fields.insert(0, ("ev".to_string(), Json::Str(ev.to_string())));
+            Json::Obj(fields)
+        };
+        let f = |k: &str, v: Json| (k.to_string(), v);
+        match self {
+            Event::PassStart { pass, kind } => obj(
+                "pass_start",
+                vec![
+                    f("pass", json::unum(*pass)),
+                    f("kind", Json::Str(kind.as_str().to_string())),
+                ],
+            ),
+            Event::Phase { pass, name, secs, visits, workers } => obj(
+                "phase",
+                vec![
+                    f("pass", json::unum(*pass)),
+                    f("name", Json::Str(name.as_str().to_string())),
+                    f("secs", json::num(*secs)),
+                    f("visits", json::unum(*visits)),
+                    f(
+                        "workers",
+                        Json::Arr(workers.iter().map(|w| json::num(*w)).collect()),
+                    ),
+                ],
+            ),
+            Event::Sweep { pass, screened, projected, max_violation } => obj(
+                "sweep",
+                vec![
+                    f("pass", json::unum(*pass)),
+                    f("screened", json::unum(*screened)),
+                    f("projected", json::unum(*projected)),
+                    f("max_violation", json::num(*max_violation)),
+                ],
+            ),
+            Event::ActiveSet { pass, size, forgotten } => obj(
+                "active_set",
+                vec![
+                    f("pass", json::unum(*pass)),
+                    f("size", json::unum(*size)),
+                    f("forgotten", json::unum(*forgotten)),
+                ],
+            ),
+            Event::Residuals { pass, max_violation, rel_gap, lp_objective, exact } => obj(
+                "residuals",
+                vec![
+                    f("pass", json::unum(*pass)),
+                    f("max_violation", json::num(*max_violation)),
+                    f("rel_gap", json::num(*rel_gap)),
+                    f("lp_objective", json::num(*lp_objective)),
+                    f("exact", Json::Bool(*exact)),
+                ],
+            ),
+            Event::StoreIo { pass, stats } => {
+                let mut fields = vec![f("pass", json::unum(*pass))];
+                fields.extend(store_stats_fields(stats));
+                obj("store_io", fields)
+            }
+            Event::PassEnd { pass, secs, triplet_visits, active_triplets } => obj(
+                "pass_end",
+                vec![
+                    f("pass", json::unum(*pass)),
+                    f("secs", json::num(*secs)),
+                    f("triplet_visits", json::unum(*triplet_visits)),
+                    f("active_triplets", json::unum(*active_triplets)),
+                ],
+            ),
+            Event::Warn { msg } => obj("warn", vec![f("msg", Json::Str(msg.clone()))]),
+            Event::Footer { counters } => {
+                obj("footer", counters.to_json_fields())
+            }
+        }
+    }
+
+    /// Parse one JSONL trace line back into a typed event.
+    pub fn parse(line: &str) -> Result<Event, String> {
+        let v = Json::parse(line)?;
+        let ev = v
+            .get("ev")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "missing `ev` discriminator".to_string())?;
+        let pass = || {
+            v.get("pass")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| format!("{ev}: missing `pass`"))
+        };
+        let num = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("{ev}: missing `{k}`"))
+        };
+        let unum = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| format!("{ev}: missing `{k}`"))
+        };
+        let text = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("{ev}: missing `{k}`"))
+        };
+        match ev {
+            "pass_start" => Ok(Event::PassStart {
+                pass: pass()?,
+                kind: PassKind::parse(text("kind")?)
+                    .ok_or_else(|| format!("bad pass kind `{}`", text("kind").unwrap()))?,
+            }),
+            "phase" => Ok(Event::Phase {
+                pass: pass()?,
+                name: PhaseName::parse(text("name")?)
+                    .ok_or_else(|| format!("bad phase name `{}`", text("name").unwrap()))?,
+                secs: num("secs")?,
+                visits: unum("visits")?,
+                workers: v
+                    .get("workers")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| "phase: missing `workers`".to_string())?
+                    .iter()
+                    .map(|w| w.as_f64().ok_or_else(|| "bad worker seconds".to_string()))
+                    .collect::<Result<Vec<f64>, String>>()?,
+            }),
+            "sweep" => Ok(Event::Sweep {
+                pass: pass()?,
+                screened: unum("screened")?,
+                projected: unum("projected")?,
+                max_violation: num("max_violation")?,
+            }),
+            "active_set" => Ok(Event::ActiveSet {
+                pass: pass()?,
+                size: unum("size")?,
+                forgotten: unum("forgotten")?,
+            }),
+            "residuals" => Ok(Event::Residuals {
+                pass: pass()?,
+                max_violation: num("max_violation")?,
+                rel_gap: num("rel_gap")?,
+                lp_objective: num("lp_objective")?,
+                exact: v
+                    .get("exact")
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| "residuals: missing `exact`".to_string())?,
+            }),
+            "store_io" => Ok(Event::StoreIo {
+                pass: pass()?,
+                stats: parse_store_stats(&v).map_err(|k| format!("store_io: missing `{k}`"))?,
+            }),
+            "pass_end" => Ok(Event::PassEnd {
+                pass: pass()?,
+                secs: num("secs")?,
+                triplet_visits: unum("triplet_visits")?,
+                active_triplets: unum("active_triplets")?,
+            }),
+            "warn" => Ok(Event::Warn { msg: text("msg")?.to_string() }),
+            "footer" => Ok(Event::Footer { counters: Counters::from_json(&v)? }),
+            other => Err(format!("unknown event `{other}`")),
+        }
+    }
+}
+
+/// Serialize [`StoreStats`] as flat object fields (shared by the
+/// `store_io` event and the footer's `store` sub-object).
+pub(crate) fn store_stats_fields(stats: &StoreStats) -> Vec<(String, Json)> {
+    let f = |k: &str, v: u64| (k.to_string(), json::unum(v));
+    vec![
+        f("loads", stats.loads),
+        f("evictions", stats.evictions),
+        f("writebacks", stats.writebacks),
+        f("prefetched", stats.prefetched),
+        f("peak_resident_bytes", stats.peak_resident_bytes),
+        f("w_loads", stats.w_loads),
+        f("w_evictions", stats.w_evictions),
+    ]
+}
+
+/// Inverse of [`store_stats_fields`]; `Err` carries the missing key.
+pub(crate) fn parse_store_stats(v: &Json) -> Result<StoreStats, &'static str> {
+    let get = |k: &'static str| v.get(k).and_then(Json::as_u64).ok_or(k);
+    Ok(StoreStats {
+        loads: get("loads")?,
+        evictions: get("evictions")?,
+        writebacks: get("writebacks")?,
+        prefetched: get("prefetched")?,
+        w_loads: get("w_loads")?,
+        w_evictions: get("w_evictions")?,
+        peak_resident_bytes: get("peak_resident_bytes")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event::PassStart { pass: 1, kind: PassKind::Sweep },
+            Event::Phase {
+                pass: 1,
+                name: PhaseName::Metric,
+                secs: 0.125,
+                visits: 455,
+                workers: vec![0.0625, 0.03125],
+            },
+            Event::Phase {
+                pass: 1,
+                name: PhaseName::ResidualScan,
+                secs: 0.5,
+                visits: 455,
+                workers: vec![],
+            },
+            Event::Sweep { pass: 1, screened: 455, projected: 20, max_violation: 0.75 },
+            Event::ActiveSet { pass: 2, size: 20, forgotten: 3 },
+            Event::Residuals {
+                pass: 2,
+                max_violation: 0.25,
+                rel_gap: 0.0078125,
+                lp_objective: 12.5,
+                exact: true,
+            },
+            Event::StoreIo {
+                pass: 2,
+                stats: StoreStats {
+                    loads: 10,
+                    evictions: 4,
+                    writebacks: 2,
+                    prefetched: 6,
+                    peak_resident_bytes: 65536,
+                    w_loads: 3,
+                    w_evictions: 1,
+                },
+            },
+            Event::PassEnd { pass: 2, secs: 0.25, triplet_visits: 910, active_triplets: 20 },
+            Event::Warn { msg: "engine \"fallback\"\nsecond line".to_string() },
+            Event::Footer {
+                counters: Counters {
+                    passes: 2,
+                    metric_visits: 2730,
+                    active_triplets: 20,
+                    sweep_screened: 455,
+                    sweep_projected: 20,
+                    nnz_duals: 17,
+                    max_violation: 0.25,
+                    rel_gap: 0.0078125,
+                    phase_secs: vec![("metric".to_string(), 0.625)],
+                    worker_busy_secs: vec![("metric".to_string(), 0.09375)],
+                    store: Some(StoreStats { loads: 10, ..StoreStats::default() }),
+                },
+            },
+        ]
+    }
+
+    #[test]
+    fn every_variant_roundtrips_typed() {
+        for ev in sample_events() {
+            let line = ev.to_json_line();
+            let back = Event::parse(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert_eq!(back, ev, "{line}");
+        }
+    }
+
+    #[test]
+    fn every_variant_roundtrips_textually() {
+        for ev in sample_events() {
+            let line = ev.to_json_line();
+            assert!(!line.contains('\n'), "one line per event: {line}");
+            let reline = Event::parse(&line).unwrap().to_json_line();
+            assert_eq!(reline, line);
+        }
+    }
+
+    #[test]
+    fn footer_without_store_roundtrips() {
+        let ev = Event::Footer { counters: Counters::default() };
+        assert_eq!(Event::parse(&ev.to_json_line()).unwrap(), ev);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines() {
+        assert!(Event::parse("{}").is_err());
+        assert!(Event::parse(r#"{"ev":"nope"}"#).is_err());
+        assert!(Event::parse(r#"{"ev":"pass_start","pass":1,"kind":"weird"}"#).is_err());
+        assert!(Event::parse(r#"{"ev":"sweep","pass":1}"#).is_err());
+        assert!(Event::parse("not json").is_err());
+    }
+}

@@ -1,0 +1,112 @@
+//! The JSONL trace writer.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::Context as _;
+
+use super::{Event, Recorder};
+
+/// Writes one JSON object per line to a trace file.
+///
+/// Events are buffered and flushed on [`JsonlRecorder::finish`] (or on
+/// drop, best-effort). I/O errors are latched — recording never panics
+/// mid-solve — and surfaced by `finish`, so a solve completes even if
+/// the trace disk fills up.
+pub struct JsonlRecorder {
+    path: PathBuf,
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    out: BufWriter<File>,
+    err: Option<std::io::Error>,
+}
+
+impl JsonlRecorder {
+    /// Create (truncate) the trace file at `path`.
+    pub fn create(path: &Path) -> anyhow::Result<Self> {
+        let file = File::create(path)
+            .with_context(|| format!("creating trace file {}", path.display()))?;
+        Ok(JsonlRecorder {
+            path: path.to_path_buf(),
+            inner: Mutex::new(Inner { out: BufWriter::new(file), err: None }),
+        })
+    }
+
+    /// The trace file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Flush and close, surfacing the first I/O error hit while
+    /// recording (if any).
+    pub fn finish(self) -> anyhow::Result<()> {
+        let path = self.path.clone();
+        let mut inner = self.inner.into_inner().unwrap_or_else(|e| e.into_inner());
+        let latched = inner.err.take();
+        let flush = inner.out.flush();
+        if let Some(e) = latched {
+            return Err(anyhow::Error::from(e)
+                .context(format!("writing trace file {}", path.display())));
+        }
+        flush.with_context(|| format!("flushing trace file {}", path.display()))
+    }
+}
+
+impl Recorder for JsonlRecorder {
+    fn record(&self, ev: &Event) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.err.is_some() {
+            return;
+        }
+        let mut line = ev.to_json_line();
+        line.push('\n');
+        if let Err(e) = inner.out.write_all(line.as_bytes()) {
+            inner.err = Some(e);
+        }
+    }
+}
+
+impl Drop for JsonlRecorder {
+    fn drop(&mut self) {
+        if let Ok(mut inner) = self.inner.lock() {
+            let _ = inner.out.flush();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("metric_proj_jsonl_{tag}_{}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn writes_one_line_per_event() {
+        let path = temp_path("basic");
+        let rec = JsonlRecorder::create(&path).unwrap();
+        assert!(rec.enabled());
+        rec.record(&Event::Warn { msg: "a".to_string() });
+        rec.record(&Event::PassStart { pass: 1, kind: super::super::PassKind::Full });
+        rec.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            Event::parse(line).unwrap();
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn create_fails_on_bad_path() {
+        let bad = Path::new("/nonexistent-dir-for-sure/trace.jsonl");
+        assert!(JsonlRecorder::create(bad).is_err());
+    }
+}

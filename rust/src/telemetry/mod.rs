@@ -1,0 +1,484 @@
+//! Structured solver telemetry: trace events, recorders, and the
+//! unified counter snapshot.
+//!
+//! Every driver (`dykstra_serial`, `dykstra_parallel`, the active-set
+//! drivers, `nearness`, `dykstra_xla`) has a `*_traced` entry point
+//! taking a [`Recorder`]; the plain entry points delegate with
+//! [`NullRecorder`]. All instrumentation is gated on
+//! [`Recorder::enabled`], so a null-recorded solve does no extra work —
+//! no timestamps, no allocation — and is pinned bitwise identical to an
+//! untraced one (`tests/telemetry.rs`).
+//!
+//! The moving parts:
+//! * [`event::Event`] — the typed event vocabulary, one JSON object per
+//!   line on the wire (schema in `docs/OBSERVABILITY.md`).
+//! * [`JsonlRecorder`] — appends events to a line-delimited trace file.
+//! * [`ProgressRecorder`] — renders a one-line stderr progress report
+//!   per pass (the CLI's `--progress`).
+//! * [`Counters`] — the end-of-solve snapshot unifying the previously
+//!   scattered fields (`metric_visits`, `sweep_*`, `StoreStats`);
+//!   surfaced by `Solution::counters()` / `NearnessSolution::counters()`
+//!   and serialized as the trace footer.
+//! * [`warn`] — the library-wide notice channel: routed to the global
+//!   recorder when one is installed, else to stderr only when
+//!   `METRIC_PROJ_LOG` is set, so library code never prints
+//!   unconditionally.
+
+pub mod event;
+mod jsonl;
+pub mod report;
+
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::matrix::store::StoreStats;
+use crate::util::json::{self, Json};
+use crate::util::shared::PerWorker;
+use crate::util::timer::PhaseTimer;
+
+pub use event::{Event, PassKind, PhaseName};
+pub use jsonl::JsonlRecorder;
+
+/// A sink for trace events.
+///
+/// Implementations must be cheap to call from the driver thread between
+/// phases (they are never called from inside the hot loops) and
+/// thread-safe: a recorder may be shared by a solve and the global
+/// [`warn`] channel simultaneously.
+pub trait Recorder: Send + Sync {
+    /// Whether this recorder wants events. Drivers skip all
+    /// instrumentation — including timestamps — when this is false, so
+    /// it must be constant for the lifetime of a solve.
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    /// Consume one event.
+    fn record(&self, ev: &Event);
+}
+
+/// The default recorder: discards everything and reports itself
+/// disabled, so traced drivers behave exactly like untraced ones.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullRecorder;
+
+impl Recorder for NullRecorder {
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    fn record(&self, _ev: &Event) {}
+}
+
+/// Fan events out to several recorders (e.g. a trace file plus the
+/// stderr progress line). Disabled members are skipped; the tee is
+/// enabled iff any member is.
+pub struct Tee<'a> {
+    recs: Vec<&'a dyn Recorder>,
+}
+
+impl<'a> Tee<'a> {
+    /// Combine `recs`; an empty list yields a disabled recorder.
+    pub fn new(recs: Vec<&'a dyn Recorder>) -> Self {
+        Tee { recs }
+    }
+}
+
+impl Recorder for Tee<'_> {
+    fn enabled(&self) -> bool {
+        self.recs.iter().any(|r| r.enabled())
+    }
+
+    fn record(&self, ev: &Event) {
+        for r in &self.recs {
+            if r.enabled() {
+                r.record(ev);
+            }
+        }
+    }
+}
+
+/// Unified end-of-solve counter snapshot.
+///
+/// Collects the work and convergence counters that were previously
+/// scattered across `Solution` fields and `StoreStats` into one type;
+/// the traced drivers serialize it as the trace footer
+/// ([`Event::Footer`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Counters {
+    /// Passes executed.
+    pub passes: u64,
+    /// Scalar metric-constraint visits (3 per triplet visit).
+    pub metric_visits: u64,
+    /// Active triplets at termination (full constraint count for
+    /// non-active strategies).
+    pub active_triplets: u64,
+    /// Constraints screened by discovery sweeps.
+    pub sweep_screened: u64,
+    /// Screened constraints that were actually projected.
+    pub sweep_projected: u64,
+    /// Nonzero dual variables at termination.
+    pub nnz_duals: u64,
+    /// Final maximum constraint violation.
+    pub max_violation: f64,
+    /// Final relative duality gap (0 for nearness solves).
+    pub rel_gap: f64,
+    /// Per-phase wall seconds, driver-side (empty for untraced solves).
+    pub phase_secs: Vec<(String, f64)>,
+    /// Per-phase busy seconds summed over workers (empty when no
+    /// per-worker timing was collected).
+    pub worker_busy_secs: Vec<(String, f64)>,
+    /// Cumulative tile-store I/O (disk-backed solves only).
+    pub store: Option<StoreStats>,
+}
+
+impl Counters {
+    /// Fraction of screened constraints that needed projection, if any
+    /// sweep ran.
+    pub fn screen_hit_rate(&self) -> Option<f64> {
+        if self.sweep_screened > 0 {
+            Some(self.sweep_projected as f64 / self.sweep_screened as f64)
+        } else {
+            None
+        }
+    }
+
+    pub(crate) fn to_json_fields(&self) -> Vec<(String, Json)> {
+        let phases = |pairs: &[(String, f64)]| {
+            Json::Arr(
+                pairs
+                    .iter()
+                    .map(|(n, s)| Json::Arr(vec![Json::Str(n.clone()), json::num(*s)]))
+                    .collect(),
+            )
+        };
+        let f = |k: &str, v: Json| (k.to_string(), v);
+        vec![
+            f("passes", json::unum(self.passes)),
+            f("metric_visits", json::unum(self.metric_visits)),
+            f("active_triplets", json::unum(self.active_triplets)),
+            f("sweep_screened", json::unum(self.sweep_screened)),
+            f("sweep_projected", json::unum(self.sweep_projected)),
+            f("nnz_duals", json::unum(self.nnz_duals)),
+            f("max_violation", json::num(self.max_violation)),
+            f("rel_gap", json::num(self.rel_gap)),
+            f("phase_secs", phases(&self.phase_secs)),
+            f("worker_busy_secs", phases(&self.worker_busy_secs)),
+            f(
+                "store",
+                match &self.store {
+                    Some(stats) => Json::Obj(event::store_stats_fields(stats)),
+                    None => Json::Null,
+                },
+            ),
+        ]
+    }
+
+    pub(crate) fn from_json(v: &Json) -> Result<Counters, String> {
+        let unum = |k: &str| {
+            v.get(k).and_then(Json::as_u64).ok_or_else(|| format!("footer: missing `{k}`"))
+        };
+        let num = |k: &str| {
+            v.get(k).and_then(Json::as_f64).ok_or_else(|| format!("footer: missing `{k}`"))
+        };
+        let phases = |k: &str| -> Result<Vec<(String, f64)>, String> {
+            v.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("footer: missing `{k}`"))?
+                .iter()
+                .map(|pair| {
+                    let pair = pair.as_arr().filter(|a| a.len() == 2);
+                    let name = pair.and_then(|a| a[0].as_str());
+                    let secs = pair.and_then(|a| a[1].as_f64());
+                    match (name, secs) {
+                        (Some(n), Some(s)) => Ok((n.to_string(), s)),
+                        _ => Err(format!("footer: bad `{k}` entry")),
+                    }
+                })
+                .collect()
+        };
+        let store = match v.get("store") {
+            None | Some(Json::Null) => None,
+            Some(obj) => Some(
+                event::parse_store_stats(obj)
+                    .map_err(|k| format!("footer store: missing `{k}`"))?,
+            ),
+        };
+        Ok(Counters {
+            passes: unum("passes")?,
+            metric_visits: unum("metric_visits")?,
+            active_triplets: unum("active_triplets")?,
+            sweep_screened: unum("sweep_screened")?,
+            sweep_projected: unum("sweep_projected")?,
+            nnz_duals: unum("nnz_duals")?,
+            max_violation: num("max_violation")?,
+            rel_gap: num("rel_gap")?,
+            phase_secs: phases("phase_secs")?,
+            worker_busy_secs: phases("worker_busy_secs")?,
+            store,
+        })
+    }
+}
+
+/// Streams a one-line progress report to stderr after every pass: pass
+/// number, latest max violation and gap, active triplets, and the
+/// pass's metric-visit throughput. Composes with [`JsonlRecorder`] via
+/// [`Tee`].
+#[derive(Debug, Default)]
+pub struct ProgressRecorder {
+    state: Mutex<ProgressState>,
+}
+
+#[derive(Debug, Default)]
+struct ProgressState {
+    residuals: Option<(f64, f64)>,
+    last_visits: u64,
+}
+
+impl ProgressRecorder {
+    /// A fresh progress reporter (call once per solve).
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Recorder for ProgressRecorder {
+    fn record(&self, ev: &Event) {
+        let mut st = self.state.lock().unwrap();
+        match ev {
+            Event::Residuals { max_violation, rel_gap, .. } => {
+                st.residuals = Some((*max_violation, *rel_gap));
+            }
+            Event::PassEnd { pass, secs, triplet_visits, active_triplets } => {
+                let delta = triplet_visits.saturating_sub(st.last_visits);
+                st.last_visits = *triplet_visits;
+                let vps = if *secs > 0.0 { (delta * 3) as f64 / secs } else { 0.0 };
+                let (viol, gap) = match st.residuals {
+                    Some((v, g)) => (format!("{v:9.3e}"), format!("{g:9.3e}")),
+                    None => ("        –".to_string(), "        –".to_string()),
+                };
+                eprintln!(
+                    "pass {pass:>4}  viol {viol}  gap {gap}  active {active_triplets:>10}  visits/s {vps:9.3e}"
+                );
+            }
+            _ => {}
+        }
+    }
+}
+
+static GLOBAL: OnceLock<Box<dyn Recorder>> = OnceLock::new();
+
+/// Install the process-wide recorder used by [`warn`]. First caller
+/// wins; later calls are ignored (the CLI installs once at startup).
+pub fn set_global(rec: Box<dyn Recorder>) {
+    let _ = GLOBAL.set(rec);
+}
+
+/// Emit a non-fatal library notice.
+///
+/// Routed to the global recorder when one is installed and enabled;
+/// otherwise printed to stderr only if the `METRIC_PROJ_LOG`
+/// environment variable is set. Library code must use this instead of
+/// `eprintln!` so embedding applications stay silent by default.
+pub fn warn(msg: &str) {
+    if let Some(rec) = GLOBAL.get() {
+        if rec.enabled() {
+            rec.record(&Event::Warn { msg: msg.to_string() });
+            return;
+        }
+    }
+    if std::env::var_os("METRIC_PROJ_LOG").is_some() {
+        eprintln!("warn: {msg}");
+    }
+}
+
+/// Driver-side phase instrumentation helper.
+///
+/// Owns the master wall-clock [`PhaseTimer`] plus one busy-seconds
+/// timer per worker; drivers bracket each phase with
+/// [`PhaseProbe::start`] / [`PhaseProbe::finish`]. Everything is a
+/// no-op (and allocation-free) when the recorder is disabled.
+pub(crate) struct PhaseProbe<'a> {
+    rec: &'a dyn Recorder,
+    p: usize,
+    wall: PhaseTimer,
+    busy: Vec<PhaseTimer>,
+}
+
+impl<'a> PhaseProbe<'a> {
+    /// A probe for a solve with `p` workers recording into `rec`.
+    pub fn new(rec: &'a dyn Recorder, p: usize) -> Self {
+        let workers = if rec.enabled() { p } else { 0 };
+        PhaseProbe { rec, p, wall: PhaseTimer::new(), busy: vec![PhaseTimer::new(); workers] }
+    }
+
+    /// Whether instrumentation is live.
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.rec.enabled()
+    }
+
+    /// Begin timing a phase (`None` when disabled — pass it straight to
+    /// [`Self::finish`]).
+    #[inline]
+    pub fn start(&self) -> Option<Instant> {
+        if self.on() {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Fresh per-worker busy-seconds accumulators for one phase, when
+    /// instrumentation is live. Hand the reference to the timed phase
+    /// function and return the value to [`Self::finish`].
+    pub fn workers(&self) -> Option<PerWorker<f64>> {
+        if self.on() {
+            Some(PerWorker::new(vec![0.0f64; self.p]))
+        } else {
+            None
+        }
+    }
+
+    /// Close a phase: accumulate wall and per-worker busy time, emit the
+    /// [`Event::Phase`]. No-op when `t0` is `None`.
+    pub fn finish(
+        &mut self,
+        pass: u64,
+        name: PhaseName,
+        t0: Option<Instant>,
+        visits: u64,
+        workers: Option<PerWorker<f64>>,
+    ) {
+        let Some(t0) = t0 else { return };
+        let secs = t0.elapsed().as_secs_f64();
+        self.wall.add(name.as_str(), secs);
+        let worker_secs = workers.map(PerWorker::into_inner).unwrap_or_default();
+        for (tid, s) in worker_secs.iter().enumerate() {
+            self.busy[tid].add(name.as_str(), *s);
+        }
+        self.rec.record(&Event::Phase { pass, name, secs, visits, workers: worker_secs });
+    }
+
+    /// Pass an event through to the recorder (when enabled).
+    #[inline]
+    pub fn emit(&self, ev: Event) {
+        if self.on() {
+            self.rec.record(&ev);
+        }
+    }
+
+    /// The accumulated per-phase wall seconds.
+    pub fn wall_totals(&self) -> Vec<(String, f64)> {
+        self.wall.phases().to_vec()
+    }
+
+    /// Per-phase busy seconds, reduced over workers with
+    /// [`PhaseTimer::absorb`].
+    pub fn busy_totals(&self) -> Vec<(String, f64)> {
+        let mut merged = PhaseTimer::new();
+        for t in &self.busy {
+            merged.absorb(t);
+        }
+        merged.phases().to_vec()
+    }
+}
+
+/// Add a worker's elapsed busy time into its slot.
+///
+/// # Safety
+/// Caller must be worker `tid` with exclusive use of slot `tid` (the
+/// same contract as [`PerWorker::get_mut`]).
+#[inline]
+pub(crate) unsafe fn add_busy(acc: Option<&PerWorker<f64>>, tid: usize, t0: Option<Instant>) {
+    if let (Some(acc), Some(t0)) = (acc, t0) {
+        *acc.get_mut(tid) += t0.elapsed().as_secs_f64();
+    }
+}
+
+/// Start a busy-time measurement iff an accumulator is attached.
+#[inline]
+pub(crate) fn busy_start(acc: Option<&PerWorker<f64>>) -> Option<Instant> {
+    acc.map(|_| Instant::now())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct VecRecorder(Mutex<Vec<Event>>);
+
+    impl Recorder for VecRecorder {
+        fn record(&self, ev: &Event) {
+            self.0.lock().unwrap().push(ev.clone());
+        }
+    }
+
+    #[test]
+    fn null_recorder_is_disabled() {
+        assert!(!NullRecorder.enabled());
+    }
+
+    #[test]
+    fn tee_fans_out_and_skips_disabled() {
+        let sink = VecRecorder(Mutex::new(Vec::new()));
+        let null = NullRecorder;
+        let tee = Tee::new(vec![&null, &sink]);
+        assert!(tee.enabled());
+        tee.record(&Event::Warn { msg: "x".to_string() });
+        assert_eq!(sink.0.lock().unwrap().len(), 1);
+        assert!(!Tee::new(vec![&null]).enabled());
+        assert!(!Tee::new(vec![]).enabled());
+    }
+
+    #[test]
+    fn probe_disabled_is_inert() {
+        let mut probe = PhaseProbe::new(&NullRecorder, 4);
+        assert!(!probe.on());
+        assert!(probe.start().is_none());
+        assert!(probe.workers().is_none());
+        probe.finish(1, PhaseName::Metric, None, 10, None);
+        assert!(probe.wall_totals().is_empty());
+        assert!(probe.busy_totals().is_empty());
+    }
+
+    #[test]
+    fn probe_accumulates_and_emits() {
+        let sink = VecRecorder(Mutex::new(Vec::new()));
+        let mut probe = PhaseProbe::new(&sink, 2);
+        let t0 = probe.start();
+        let ws = probe.workers();
+        if let Some(ws) = &ws {
+            unsafe {
+                *ws.get_mut(0) += 0.5;
+                *ws.get_mut(1) += 0.25;
+            }
+        }
+        probe.finish(1, PhaseName::Metric, t0, 42, ws);
+        let t1 = probe.start();
+        probe.finish(2, PhaseName::Metric, t1, 7, None);
+        let events = sink.0.lock().unwrap();
+        assert_eq!(events.len(), 2);
+        match &events[0] {
+            Event::Phase { pass: 1, name: PhaseName::Metric, visits: 42, workers, .. } => {
+                assert_eq!(workers, &vec![0.5, 0.25]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Wall totals accumulate across both finishes; busy totals only
+        // saw the first (merged via PhaseTimer::absorb).
+        assert_eq!(probe.wall_totals().len(), 1);
+        let busy = probe.busy_totals();
+        assert_eq!(busy.len(), 1);
+        assert!((busy[0].1 - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counters_hit_rate() {
+        let mut c = Counters::default();
+        assert_eq!(c.screen_hit_rate(), None);
+        c.sweep_screened = 100;
+        c.sweep_projected = 25;
+        assert_eq!(c.screen_hit_rate(), Some(0.25));
+    }
+}

@@ -1,0 +1,321 @@
+//! Trace-file summarization for the CLI `report` subcommand.
+//!
+//! Reads one or more JSONL traces written by [`super::JsonlRecorder`],
+//! folds the events into a [`TraceSummary`], and renders a fixed-width
+//! phase-time / convergence table (documented with a worked example in
+//! `docs/OBSERVABILITY.md`).
+
+use std::fmt::Write as _;
+
+use anyhow::Context as _;
+
+use super::{Counters, Event, PassKind};
+
+/// Aggregates derived from one trace file.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSummary {
+    /// Passes seen (count of `pass_end` events).
+    pub passes: u64,
+    /// Full / cheap / sweep pass counts, from `pass_start` kinds.
+    pub pass_kinds: [u64; 3],
+    /// Total wall seconds across passes (sum of `pass_end` secs).
+    pub total_secs: f64,
+    /// Per-phase `(name, wall secs, busy secs, visits)` in first-seen
+    /// order, folded over every `phase` event.
+    pub phases: Vec<(String, f64, f64, u64)>,
+    /// `(pass, max_violation, rel_gap, exact)` timeline.
+    pub residuals: Vec<(u64, f64, f64, bool)>,
+    /// Cumulative screened / projected constraints over all sweeps.
+    pub sweeps: (u64, u64),
+    /// `(last size, peak size, total forgotten)` of the active set.
+    pub active: Option<(u64, u64, u64)>,
+    /// Final cumulative triplet visits.
+    pub triplet_visits: u64,
+    /// Last store I/O snapshot, if the solve was disk-backed.
+    pub store: Option<crate::matrix::store::StoreStats>,
+    /// Warn messages, in order.
+    pub warns: Vec<String>,
+    /// The footer counters, when the trace has one.
+    pub footer: Option<Counters>,
+}
+
+impl TraceSummary {
+    /// Fold a stream of events into a summary.
+    pub fn from_events(events: &[Event]) -> TraceSummary {
+        let mut s = TraceSummary::default();
+        for ev in events {
+            match ev {
+                Event::PassStart { kind, .. } => {
+                    let slot = match kind {
+                        PassKind::Full => 0,
+                        PassKind::Cheap => 1,
+                        PassKind::Sweep => 2,
+                    };
+                    s.pass_kinds[slot] += 1;
+                }
+                Event::Phase { name, secs, visits, workers, .. } => {
+                    let busy: f64 = workers.iter().sum();
+                    let key = name.as_str();
+                    if let Some(slot) = s.phases.iter_mut().find(|(n, ..)| n == key) {
+                        slot.1 += secs;
+                        slot.2 += busy;
+                        slot.3 += visits;
+                    } else {
+                        s.phases.push((key.to_string(), *secs, busy, *visits));
+                    }
+                }
+                Event::Sweep { screened, projected, .. } => {
+                    s.sweeps.0 += screened;
+                    s.sweeps.1 += projected;
+                }
+                Event::ActiveSet { size, forgotten, .. } => {
+                    let entry = s.active.get_or_insert((0, 0, 0));
+                    entry.0 = *size;
+                    entry.1 = entry.1.max(*size);
+                    entry.2 += forgotten;
+                }
+                Event::Residuals { pass, max_violation, rel_gap, exact, .. } => {
+                    s.residuals.push((*pass, *max_violation, *rel_gap, *exact));
+                }
+                Event::StoreIo { stats, .. } => s.store = Some(*stats),
+                Event::PassEnd { secs, triplet_visits, .. } => {
+                    s.passes += 1;
+                    s.total_secs += secs;
+                    s.triplet_visits = *triplet_visits;
+                }
+                Event::Warn { msg } => s.warns.push(msg.clone()),
+                Event::Footer { counters } => s.footer = Some(counters.clone()),
+            }
+        }
+        s
+    }
+}
+
+/// Read a trace file into typed events, failing with the offending line
+/// number on schema errors.
+pub fn read_trace(path: &str) -> anyhow::Result<Vec<Event>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace file {path}"))?;
+    let mut events = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let ev = Event::parse(line)
+            .map_err(|e| anyhow::anyhow!("{path}:{}: {e}", lineno + 1))?;
+        events.push(ev);
+    }
+    Ok(events)
+}
+
+/// Render the summary table for one trace.
+pub fn render(path: &str, summary: &TraceSummary) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "trace {path}");
+    let [full, cheap, sweep] = summary.pass_kinds;
+    let _ = writeln!(
+        out,
+        "  passes    : {} ({} full, {} cheap, {} sweep) in {:.3}s wall",
+        summary.passes, full, cheap, sweep, summary.total_secs
+    );
+    let metric_visits = summary
+        .footer
+        .as_ref()
+        .map(|c| c.metric_visits)
+        .unwrap_or(summary.triplet_visits * 3);
+    if summary.total_secs > 0.0 {
+        let _ = writeln!(
+            out,
+            "  work      : {} metric visits ({:.3e} visits/s)",
+            metric_visits,
+            metric_visits as f64 / summary.total_secs
+        );
+    } else {
+        let _ = writeln!(out, "  work      : {metric_visits} metric visits");
+    }
+    if !summary.phases.is_empty() {
+        let phase_total: f64 = summary.phases.iter().map(|(_, w, ..)| w).sum();
+        let _ = writeln!(out, "  phase           wall      share    busy      visits");
+        for (name, wall, busy, visits) in &summary.phases {
+            let share = if phase_total > 0.0 { wall / phase_total * 100.0 } else { 0.0 };
+            let busy_text =
+                if *busy > 0.0 { format!("{busy:8.3}s") } else { "       –".to_string() };
+            let _ = writeln!(
+                out,
+                "    {name:<13} {wall:8.3}s  {share:5.1}%  {busy_text}  {visits:>10}"
+            );
+        }
+    }
+    if summary.sweeps.0 > 0 {
+        let (screened, projected) = summary.sweeps;
+        let _ = writeln!(
+            out,
+            "  sweeps    : {} screened, {} projected ({:.2}% hit rate)",
+            screened,
+            projected,
+            projected as f64 / screened as f64 * 100.0
+        );
+    }
+    if let Some((last, peak, forgotten)) = summary.active {
+        let _ = writeln!(
+            out,
+            "  active set: {last} at exit (peak {peak}), {forgotten} forgotten"
+        );
+    }
+    if !summary.residuals.is_empty() {
+        let _ = writeln!(out, "  convergence (pass, max violation, rel gap):");
+        // First point, up to four most recent points.
+        let n = summary.residuals.len();
+        let mut shown: Vec<usize> = if n <= 5 {
+            (0..n).collect()
+        } else {
+            let mut idx = vec![0usize];
+            idx.extend(n - 4..n);
+            idx
+        };
+        shown.dedup();
+        let mut elided = false;
+        for (i, &r) in shown.iter().enumerate() {
+            if i > 0 && r > shown[i - 1] + 1 && !elided {
+                let _ = writeln!(out, "    ...");
+                elided = true;
+            }
+            let (pass, viol, gap, exact) = summary.residuals[r];
+            let tag = if exact { "" } else { "  (sweep estimate)" };
+            let _ = writeln!(out, "    {pass:>6}  {viol:11.4e}  {gap:11.4e}{tag}");
+        }
+    }
+    if let Some(stats) = &summary.store {
+        let _ = writeln!(
+            out,
+            "  store io  : {} loads, {} evictions, {} writebacks, {} prefetched, {} W-loads, peak {:.1} MiB",
+            stats.loads,
+            stats.evictions,
+            stats.writebacks,
+            stats.prefetched,
+            stats.w_loads,
+            stats.peak_resident_bytes as f64 / (1024.0 * 1024.0)
+        );
+    }
+    if let Some(c) = &summary.footer {
+        let _ = writeln!(
+            out,
+            "  final     : viol {:.4e}, gap {:.4e}, {} active, {} nnz duals",
+            c.max_violation, c.rel_gap, c.active_triplets, c.nnz_duals
+        );
+    }
+    for msg in &summary.warns {
+        let _ = writeln!(out, "  warn      : {msg}");
+    }
+    out
+}
+
+/// Read and render one or more trace files (the `report` subcommand
+/// body). Output concatenates one table per file.
+pub fn render_files(paths: &[&str]) -> anyhow::Result<String> {
+    let mut out = String::new();
+    for (i, path) in paths.iter().enumerate() {
+        if i > 0 {
+            out.push('\n');
+        }
+        let events = read_trace(path)?;
+        let summary = TraceSummary::from_events(&events);
+        out.push_str(&render(path, &summary));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{PassKind, PhaseName};
+
+    fn sample() -> Vec<Event> {
+        vec![
+            Event::PassStart { pass: 1, kind: PassKind::Sweep },
+            Event::Phase {
+                pass: 1,
+                name: PhaseName::Sweep,
+                secs: 0.5,
+                visits: 100,
+                workers: vec![0.25, 0.2],
+            },
+            Event::Sweep { pass: 1, screened: 100, projected: 25, max_violation: 1.0 },
+            Event::Residuals {
+                pass: 1,
+                max_violation: 1.0,
+                rel_gap: 0.5,
+                lp_objective: 3.0,
+                exact: false,
+            },
+            Event::PassEnd { pass: 1, secs: 0.6, triplet_visits: 100, active_triplets: 25 },
+            Event::PassStart { pass: 2, kind: PassKind::Cheap },
+            Event::Phase {
+                pass: 2,
+                name: PhaseName::Metric,
+                secs: 0.1,
+                visits: 25,
+                workers: vec![],
+            },
+            Event::ActiveSet { pass: 2, size: 20, forgotten: 5 },
+            Event::Residuals {
+                pass: 2,
+                max_violation: 0.25,
+                rel_gap: 0.125,
+                lp_objective: 3.5,
+                exact: true,
+            },
+            Event::PassEnd { pass: 2, secs: 0.2, triplet_visits: 125, active_triplets: 20 },
+        ]
+    }
+
+    #[test]
+    fn summary_folds_events() {
+        let s = TraceSummary::from_events(&sample());
+        assert_eq!(s.passes, 2);
+        assert_eq!(s.pass_kinds, [0, 1, 1]);
+        assert!((s.total_secs - 0.8).abs() < 1e-12);
+        assert_eq!(s.sweeps, (100, 25));
+        assert_eq!(s.active, Some((20, 20, 5)));
+        assert_eq!(s.residuals.len(), 2);
+        assert_eq!(s.triplet_visits, 125);
+        let sweep_phase = s.phases.iter().find(|(n, ..)| n == "sweep").unwrap();
+        assert!((sweep_phase.2 - 0.45).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_mentions_key_sections() {
+        let s = TraceSummary::from_events(&sample());
+        let text = render("trace.jsonl", &s);
+        for needle in ["passes", "sweep", "active set", "convergence", "hit rate"] {
+            assert!(text.contains(needle), "missing `{needle}` in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn read_trace_roundtrip_via_file() {
+        let path = std::env::temp_dir()
+            .join(format!("metric_proj_report_{}.jsonl", std::process::id()));
+        let mut text = String::new();
+        for ev in sample() {
+            text.push_str(&ev.to_json_line());
+            text.push('\n');
+        }
+        std::fs::write(&path, text).unwrap();
+        let events = read_trace(path.to_str().unwrap()).unwrap();
+        assert_eq!(events, sample());
+        let rendered = render_files(&[path.to_str().unwrap()]).unwrap();
+        assert!(rendered.contains("trace "));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn read_trace_reports_line_numbers() {
+        let path = std::env::temp_dir()
+            .join(format!("metric_proj_report_bad_{}.jsonl", std::process::id()));
+        std::fs::write(&path, "{\"ev\":\"warn\",\"msg\":\"ok\"}\nnot json\n").unwrap();
+        let err = read_trace(path.to_str().unwrap()).unwrap_err();
+        assert!(err.to_string().contains(":2:"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+}

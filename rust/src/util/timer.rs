@@ -10,7 +10,7 @@ pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
 }
 
 /// A named phase timer that accumulates durations across calls.
-#[derive(Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct PhaseTimer {
     phases: Vec<(String, f64)>,
 }
@@ -49,6 +49,18 @@ impl PhaseTimer {
     pub fn phases(&self) -> &[(String, f64)] {
         &self.phases
     }
+
+    /// Merge another timer into this one, phase by phase.
+    ///
+    /// Lets each worker keep a private `PhaseTimer` in the hot loop (no
+    /// locking) and have the driver reduce them after the barrier:
+    /// phases present in both accumulate, phases only in `other` are
+    /// appended in `other`'s order.
+    pub fn absorb(&mut self, other: &PhaseTimer) {
+        for (name, secs) in other.phases() {
+            self.add(name, *secs);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -72,5 +84,34 @@ mod tests {
         assert!((t.total("b") - 2.0).abs() < 1e-12);
         assert_eq!(t.total("missing"), 0.0);
         assert_eq!(t.phases().len(), 2);
+    }
+
+    #[test]
+    fn absorb_merges_and_appends() {
+        let mut a = PhaseTimer::new();
+        a.add("metric", 1.0);
+        a.add("pair", 0.25);
+        let mut b = PhaseTimer::new();
+        b.add("pair", 0.75);
+        b.add("sweep", 2.0);
+        a.absorb(&b);
+        assert!((a.total("metric") - 1.0).abs() < 1e-12);
+        assert!((a.total("pair") - 1.0).abs() < 1e-12);
+        assert!((a.total("sweep") - 2.0).abs() < 1e-12);
+        // First-seen order preserved; b-only phases appended.
+        let names: Vec<&str> = a.phases().iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["metric", "pair", "sweep"]);
+    }
+
+    #[test]
+    fn absorb_empty_is_noop() {
+        let mut a = PhaseTimer::new();
+        a.add("x", 1.0);
+        let before = a.phases().to_vec();
+        a.absorb(&PhaseTimer::new());
+        assert_eq!(a.phases(), before.as_slice());
+        let mut empty = PhaseTimer::new();
+        empty.absorb(&a);
+        assert_eq!(empty.phases(), a.phases());
     }
 }

@@ -1,0 +1,274 @@
+//! Telemetry acceptance tests (ISSUE 6).
+//!
+//! The recorder contract: tracing is pure observation. A solve run with
+//! a [`JsonlRecorder`] attached must land **bitwise** on the untraced
+//! ([`NullRecorder`]) solution — same `x`, duals, pass counts, and work
+//! accounting — across thread counts and strategies. A disk-backed
+//! active CC solve must emit a parseable JSONL stream covering every
+//! event family (passes, phases, sweeps, active set, residuals, store
+//! I/O, footer), each line surviving a parse → re-serialize round trip,
+//! and the `report` renderer must summarize it.
+//!
+//! Thread counts marked with [`env_threads`] honor the CI matrix's
+//! `METRIC_PROJ_TEST_THREADS` override — results are bitwise
+//! thread-count independent, so any override keeps the assertions valid.
+
+use metric_proj::instance::metric_nearness::MetricNearnessInstance;
+use metric_proj::instance::CcLpInstance;
+use metric_proj::matrix::store::StoreCfg;
+use metric_proj::solver::nearness::{self, NearnessOpts};
+use metric_proj::solver::{dykstra_parallel, SolveOpts, Strategy};
+use metric_proj::telemetry::{report, Event, JsonlRecorder, NullRecorder, PassKind, PhaseName};
+use metric_proj::util::parallel::env_threads;
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("metric_proj_telemetry_{tag}_{}.jsonl", std::process::id()))
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("metric_proj_telemetry_{tag}_{}", std::process::id()))
+}
+
+#[test]
+fn traced_cc_solve_is_bitwise_identical_to_untraced() {
+    let cases = [
+        (1usize, Strategy::Full),
+        (env_threads(3), Strategy::Full),
+        (1, Strategy::Active { sweep_every: 3, forget_after: 1 }),
+        (env_threads(3), Strategy::Active { sweep_every: 3, forget_after: 1 }),
+    ];
+    for (idx, &(threads, strategy)) in cases.iter().enumerate() {
+        let inst = CcLpInstance::random(24, 0.5, 0.8, 1.6, 61 + idx as u64);
+        let opts = SolveOpts {
+            max_passes: 8,
+            check_every: 3,
+            tol_violation: 1e-12,
+            tol_gap: 1e-12,
+            threads,
+            tile: 5,
+            strategy,
+            ..Default::default()
+        };
+        let ctx = format!("case {idx}: p={threads} {strategy:?}");
+        let plain = dykstra_parallel::solve_traced(
+            &inst,
+            &opts,
+            &StoreCfg::mem(),
+            None,
+            &mut |_| {},
+            &NullRecorder,
+        )
+        .expect("untraced solve");
+        let path = tmp_path(&format!("cc{idx}"));
+        let rec = JsonlRecorder::create(&path).expect("create trace");
+        let traced = dykstra_parallel::solve_traced(
+            &inst,
+            &opts,
+            &StoreCfg::mem(),
+            None,
+            &mut |_| {},
+            &rec,
+        )
+        .expect("traced solve");
+        rec.finish().expect("flush trace");
+        assert_eq!(plain.x, traced.x, "{ctx}: x diverged under tracing");
+        assert_eq!(plain.f, traced.f, "{ctx}: slacks diverged under tracing");
+        assert_eq!(plain.passes, traced.passes, "{ctx}: pass counts diverged");
+        assert_eq!(plain.nnz_duals, traced.nnz_duals, "{ctx}: dual counts diverged");
+        assert_eq!(plain.metric_visits, traced.metric_visits, "{ctx}: work diverged");
+        assert_eq!(
+            plain.residuals.max_violation, traced.residuals.max_violation,
+            "{ctx}: violation diverged"
+        );
+        assert_eq!(plain.residuals.rel_gap, traced.residuals.rel_gap, "{ctx}: gap diverged");
+        // the counters snapshot mirrors the solution's own fields
+        let c = traced.counters();
+        assert_eq!(c.passes, traced.passes as u64, "{ctx}");
+        assert_eq!(c.metric_visits, traced.metric_visits, "{ctx}");
+        assert_eq!(c.nnz_duals, traced.nnz_duals as u64, "{ctx}");
+        let _ = std::fs::remove_file(path);
+    }
+}
+
+#[test]
+fn traced_nearness_solve_is_bitwise_identical_to_untraced() {
+    for (idx, &(threads, strategy)) in [
+        (1usize, Strategy::Full),
+        (env_threads(3), Strategy::Active { sweep_every: 3, forget_after: 1 }),
+    ]
+    .iter()
+    .enumerate()
+    {
+        let inst = MetricNearnessInstance::random(26, 2.0, 17 + idx as u64);
+        let opts = NearnessOpts {
+            max_passes: 8,
+            check_every: 3,
+            tol_violation: 1e-12,
+            threads,
+            tile: 5,
+            strategy,
+            ..Default::default()
+        };
+        let ctx = format!("case {idx}: p={threads} {strategy:?}");
+        let plain = nearness::solve_traced(
+            &inst,
+            &opts,
+            &StoreCfg::mem(),
+            None,
+            &mut |_| {},
+            &NullRecorder,
+        )
+        .expect("untraced solve");
+        let path = tmp_path(&format!("near{idx}"));
+        let rec = JsonlRecorder::create(&path).expect("create trace");
+        let traced =
+            nearness::solve_traced(&inst, &opts, &StoreCfg::mem(), None, &mut |_| {}, &rec)
+                .expect("traced solve");
+        rec.finish().expect("flush trace");
+        assert_eq!(plain.x, traced.x, "{ctx}: x diverged under tracing");
+        assert_eq!(plain.passes, traced.passes, "{ctx}: pass counts diverged");
+        assert_eq!(plain.metric_visits, traced.metric_visits, "{ctx}: work diverged");
+        assert_eq!(plain.max_violation, traced.max_violation, "{ctx}: violation diverged");
+        assert_eq!(plain.objective, traced.objective, "{ctx}: objective diverged");
+        let _ = std::fs::remove_file(path);
+    }
+}
+
+/// The ISSUE's trace-coverage acceptance: a disk-backed active-strategy
+/// CC solve with a trace attached emits parseable JSONL covering passes,
+/// phases, sweeps, the active set, residuals, store I/O, and the footer
+/// — and every line survives parse → re-serialize unchanged.
+#[test]
+fn disk_backed_active_cc_trace_covers_the_schema() {
+    let inst = CcLpInstance::random(26, 0.5, 0.8, 1.6, 77);
+    let opts = SolveOpts {
+        max_passes: 7,
+        check_every: 3,
+        tol_violation: 1e-12,
+        tol_gap: 1e-12,
+        threads: env_threads(2),
+        tile: 5,
+        strategy: Strategy::Active { sweep_every: 3, forget_after: 1 },
+        checkpoint_every: 3,
+        ..Default::default()
+    };
+    let dir = tmp_dir("cc_schema");
+    let path = tmp_path("cc_schema");
+    let rec = JsonlRecorder::create(&path).expect("create trace");
+    let sol = dykstra_parallel::solve_traced(
+        &inst,
+        &opts,
+        &StoreCfg::disk(&dir, 1 << 11),
+        None,
+        &mut |_| {},
+        &rec,
+    )
+    .expect("traced disk solve");
+    rec.finish().expect("flush trace");
+
+    let text = std::fs::read_to_string(&path).expect("read trace");
+    let mut kinds: BTreeSet<&'static str> = BTreeSet::new();
+    let mut phase_names: BTreeSet<String> = BTreeSet::new();
+    let mut pass_kinds: BTreeSet<String> = BTreeSet::new();
+    let mut footer = None;
+    let mut lines = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        lines += 1;
+        let ev = Event::parse(line)
+            .unwrap_or_else(|e| panic!("line {}: unparseable event ({e}): {line}", lineno + 1));
+        assert_eq!(
+            ev.to_json_line(),
+            line,
+            "line {}: parse -> re-serialize must round-trip",
+            lineno + 1
+        );
+        kinds.insert(match &ev {
+            Event::PassStart { kind, .. } => {
+                pass_kinds.insert(format!("{kind:?}"));
+                "pass_start"
+            }
+            Event::Phase { name, secs, visits: _, workers, .. } => {
+                phase_names.insert(name.as_str().to_string());
+                assert!(secs.is_finite() && *secs >= 0.0, "negative phase time");
+                // Parallel phases carry one busy time per worker;
+                // single-threaded scans/checkpoints carry none.
+                assert!(
+                    workers.is_empty() || workers.len() == opts.threads,
+                    "per-worker busy times: {workers:?}"
+                );
+                "phase"
+            }
+            Event::Sweep { screened, projected, .. } => {
+                assert!(projected <= screened, "hit rate above 1");
+                "sweep"
+            }
+            Event::ActiveSet { .. } => "active_set",
+            Event::Residuals { .. } => "residuals",
+            Event::StoreIo { stats, .. } => {
+                assert!(stats.loads > 0, "disk solve must load blocks");
+                "store_io"
+            }
+            Event::PassEnd { .. } => "pass_end",
+            Event::Warn { .. } => "warn",
+            Event::Footer { counters } => {
+                footer = Some(counters.clone());
+                "footer"
+            }
+        });
+    }
+    assert!(lines > 0, "trace is empty");
+    for required in
+        ["pass_start", "phase", "sweep", "active_set", "residuals", "store_io", "pass_end", "footer"]
+    {
+        assert!(kinds.contains(required), "trace never emitted `{required}` (got {kinds:?})");
+    }
+    for required in ["metric", "pair", "sweep", "residual-scan", "checkpoint"] {
+        assert!(
+            phase_names.contains(required),
+            "trace never emitted phase `{required}` (got {phase_names:?})"
+        );
+    }
+    assert!(
+        pass_kinds.contains(&format!("{:?}", PassKind::Sweep))
+            && pass_kinds.contains(&format!("{:?}", PassKind::Cheap)),
+        "active run must mark sweep and cheap passes (got {pass_kinds:?})"
+    );
+    // The footer agrees with the returned solution's counters.
+    let footer = footer.expect("footer captured");
+    assert_eq!(footer.passes, sol.passes as u64);
+    assert_eq!(footer.metric_visits, sol.metric_visits);
+    assert_eq!(footer.sweep_screened, sol.sweep_screened);
+    assert_eq!(footer.sweep_projected, sol.sweep_projected);
+    assert_eq!(footer.nnz_duals, sol.nnz_duals as u64);
+    assert_eq!(footer.store, sol.store_stats);
+    assert!(!footer.phase_secs.is_empty(), "footer carries the phase breakdown");
+    assert!(!footer.worker_busy_secs.is_empty(), "footer carries worker busy times");
+
+    // `report` digests the same file.
+    let path_str = path.display().to_string();
+    let summary = report::render_files(&[path_str.as_str()]).expect("report renders");
+    assert!(summary.contains("passes"), "report should summarize passes:\n{summary}");
+    assert!(summary.contains("metric"), "report should show the phase table:\n{summary}");
+
+    let _ = std::fs::remove_file(path);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn phase_names_match_the_documented_schema() {
+    // docs/OBSERVABILITY.md documents these exact spellings; the report
+    // and any external consumer key on them.
+    let spellings: Vec<&str> = [
+        PhaseName::Metric,
+        PhaseName::Pair,
+        PhaseName::ResidualScan,
+        PhaseName::Sweep,
+        PhaseName::Checkpoint,
+    ]
+    .iter()
+    .map(|p| p.as_str())
+    .collect();
+    assert_eq!(spellings, ["metric", "pair", "residual-scan", "sweep", "checkpoint"]);
+}
