@@ -187,6 +187,8 @@ fn main() {
             hit_rate: r.screen_hit_rate().unwrap_or(0.0),
             store_loads: 0,
             peak_resident_bytes: (r.resident_mb_est * (1u64 << 20) as f64) as u64,
+            entry_loads: 0,
+            blocks_skipped: 0,
         })
         .collect();
     let rows_path = std::env::var("METRIC_PROJ_BENCH_ROWS")

@@ -51,6 +51,12 @@ pub struct BaselineRow {
     pub store_loads: u64,
     /// Peak resident bytes for the cell's `X` path.
     pub peak_resident_bytes: u64,
+    /// Entries gathered through entry-granular leases (0 for in-memory
+    /// cells and whole-tile paths).
+    pub entry_loads: u64,
+    /// Footprint blocks entry leases skipped — the gate fails when this
+    /// *shrinks* past tolerance (the lease stopped saving I/O).
+    pub blocks_skipped: u64,
 }
 
 impl BaselineRow {
@@ -69,6 +75,8 @@ impl BaselineRow {
             ("hit_rate".into(), json::num(self.hit_rate)),
             ("store_loads".into(), json::unum(self.store_loads)),
             ("peak_resident_bytes".into(), json::unum(self.peak_resident_bytes)),
+            ("entry_loads".into(), json::unum(self.entry_loads)),
+            ("blocks_skipped".into(), json::unum(self.blocks_skipped)),
         ])
     }
 
@@ -98,6 +106,10 @@ impl BaselineRow {
             hit_rate: f64_field("hit_rate")?,
             store_loads: u64_field("store_loads")?,
             peak_resident_bytes: u64_field("peak_resident_bytes")?,
+            // Entry-lease counters postdate the schema's first rows:
+            // absent means "measured before entry leases existed" = 0.
+            entry_loads: j.get("entry_loads").and_then(Json::as_u64).unwrap_or(0),
+            blocks_skipped: j.get("blocks_skipped").and_then(Json::as_u64).unwrap_or(0),
         })
     }
 }
@@ -342,6 +354,33 @@ pub fn gate(baseline: &BaselineFile, fresh: &BaselineFile, tol: f64) -> GateRepo
                 100.0 * tol
             ));
         }
+        // Entry-lease counters: gathering more entries than the baseline
+        // means cheap passes got less sparse (or fell back to wider
+        // leases); skipping fewer blocks means the lease stopped saving
+        // I/O. Both directions are regressions of the active-set I/O
+        // model, gated like store loads.
+        if base.entry_loads > 0 && new.entry_loads as f64 > base.entry_loads as f64 * (1.0 + tol)
+        {
+            report.failures.push(format!(
+                "{key}: entry loads {} > {} (+{:.1}%, tolerance {:.0}%)",
+                new.entry_loads,
+                base.entry_loads,
+                100.0 * (new.entry_loads as f64 / base.entry_loads as f64 - 1.0),
+                100.0 * tol
+            ));
+        }
+        if base.blocks_skipped > 0
+            && (new.blocks_skipped as f64) < base.blocks_skipped as f64 * (1.0 - tol)
+        {
+            report.failures.push(format!(
+                "{key}: blocks skipped {} < {} (-{:.1}%, tolerance {:.0}%) — entry leases \
+                 are saving less I/O",
+                new.blocks_skipped,
+                base.blocks_skipped,
+                100.0 * (1.0 - new.blocks_skipped as f64 / base.blocks_skipped as f64),
+                100.0 * tol
+            ));
+        }
     }
     for row in &fresh.rows {
         let key = row.key();
@@ -366,7 +405,13 @@ mod tests {
             hit_rate: hit,
             store_loads: loads,
             peak_resident_bytes: peak,
+            entry_loads: 0,
+            blocks_skipped: 0,
         }
+    }
+
+    fn entry_row(entry_loads: u64, blocks_skipped: u64) -> BaselineRow {
+        BaselineRow { entry_loads, blocks_skipped, ..row("cheap-pass", 1e8, 0.0, 10, 4096) }
     }
 
     #[test]
@@ -452,6 +497,42 @@ mod tests {
         assert!(!gate(&base, &loads, DEFAULT_TOLERANCE).passed());
         let bloat = BaselineFile { rows: vec![row("disked", 1e8, 0.010, 100, 1 << 22)] };
         assert!(!gate(&base, &bloat, DEFAULT_TOLERANCE).passed());
+    }
+
+    #[test]
+    fn entry_lease_counters_gate_both_directions() {
+        let base = BaselineFile { rows: vec![entry_row(100, 50)] };
+        // Identical counters pass.
+        assert!(gate(&base, &base.clone(), DEFAULT_TOLERANCE).passed());
+        // Gathering more entries than tolerated fails.
+        let more = BaselineFile { rows: vec![entry_row(200, 50)] };
+        let rep = gate(&base, &more, DEFAULT_TOLERANCE);
+        assert!(!rep.passed());
+        assert!(rep.failures[0].contains("entry loads"), "{}", rep.failures[0]);
+        // Skipping fewer blocks (lease saving less I/O) fails.
+        let fewer = BaselineFile { rows: vec![entry_row(100, 10)] };
+        let rep = gate(&base, &fewer, DEFAULT_TOLERANCE);
+        assert!(!rep.passed());
+        assert!(rep.failures[0].contains("blocks skipped"), "{}", rep.failures[0]);
+        // Improvements (fewer entries, more skips) pass.
+        let better = BaselineFile { rows: vec![entry_row(40, 90)] };
+        assert!(gate(&base, &better, DEFAULT_TOLERANCE).passed());
+        // Old rows without the counters (parsed as 0) never arm the rule.
+        let legacy = BaselineFile { rows: vec![entry_row(0, 0)] };
+        let fresh = BaselineFile { rows: vec![entry_row(500, 0)] };
+        assert!(gate(&legacy, &fresh, DEFAULT_TOLERANCE).passed());
+    }
+
+    #[test]
+    fn rows_parse_without_entry_lease_counters() {
+        // A baseline committed before the counters existed still loads.
+        let text = "{\n  \"version\": 1,\n  \"rows\": [\n    {\"bench\": \"sweep\", \
+                    \"n\": 120, \"cell\": \"screened\", \"store\": \"mem\", \
+                    \"visits_per_unit\": 1.0, \"hit_rate\": 0.5, \"store_loads\": 3, \
+                    \"peak_resident_bytes\": 64}\n  ]\n}\n";
+        let file = BaselineFile::parse(text).unwrap();
+        assert_eq!(file.rows[0].entry_loads, 0);
+        assert_eq!(file.rows[0].blocks_skipped, 0);
     }
 
     #[test]

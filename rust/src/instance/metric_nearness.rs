@@ -21,6 +21,7 @@ impl MetricNearnessInstance {
     /// Uniform-weight instance from a dissimilarity matrix.
     pub fn new(d: PackedSym) -> Self {
         let n = d.n();
+        crate::instance::assert_size_representable(n);
         MetricNearnessInstance { n, d, w: PackedSym::filled(n, 1.0) }
     }
 
@@ -46,8 +47,16 @@ impl MetricNearnessInstance {
         }
     }
 
-    /// Validate: nonnegative d, positive w.
+    /// Validate: size representable, nonnegative d, positive w.
     pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.n < crate::solver::active::set::MAX_N,
+            "instance size n = {} exceeds the solver limit of {} \
+             (constraint indices are packed into 20-bit key fields; \
+             larger n would silently collide keys and corrupt duals)",
+            self.n,
+            crate::solver::active::set::MAX_N - 1,
+        );
         anyhow::ensure!(self.d.n() == self.n && self.w.n() == self.n, "dim mismatch");
         for (i, j, v) in self.d.iter_pairs() {
             anyhow::ensure!(v >= 0.0 && v.is_finite(), "d[{i},{j}] = {v} negative");
@@ -107,6 +116,17 @@ mod tests {
     #[test]
     fn random_is_valid() {
         MetricNearnessInstance::random(10, 3.0, 4).validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_unrepresentable_n() {
+        let inst = MetricNearnessInstance {
+            n: 1 << 20,
+            d: PackedSym::zeros(2),
+            w: PackedSym::zeros(2),
+        };
+        let err = inst.validate().unwrap_err().to_string();
+        assert!(err.contains("20-bit key fields"), "{err}");
     }
 
     #[test]

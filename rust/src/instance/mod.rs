@@ -32,8 +32,17 @@ pub struct CcLpInstance {
 }
 
 impl CcLpInstance {
-    /// Validate invariants (weights positive, targets 0/1).
+    /// Validate invariants (size representable, weights positive,
+    /// targets 0/1).
     pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.n < crate::solver::active::set::MAX_N,
+            "instance size n = {} exceeds the solver limit of {} \
+             (constraint indices are packed into 20-bit key fields; \
+             larger n would silently collide keys and corrupt duals)",
+            self.n,
+            crate::solver::active::set::MAX_N - 1,
+        );
         anyhow::ensure!(self.d.n() == self.n && self.w.n() == self.n, "dim mismatch");
         for (i, j, v) in self.d.iter_pairs() {
             anyhow::ensure!(v == 0.0 || v == 1.0, "d[{i},{j}] = {v} not 0/1");
@@ -71,6 +80,7 @@ impl CcLpInstance {
     /// Random dense instance for tests: each pair negative with prob
     /// `p_neg`, weights uniform in `[w_lo, w_hi]`.
     pub fn random(n: usize, p_neg: f64, w_lo: f64, w_hi: f64, seed: u64) -> Self {
+        assert_size_representable(n);
         let mut rng = Rng::new(seed);
         let d = PackedSym::from_fn(n, |_, _| f64::from(rng.bool(p_neg)));
         let w = PackedSym::from_fn(n, |_, _| rng.f64_in(w_lo, w_hi));
@@ -80,6 +90,7 @@ impl CcLpInstance {
     /// Unweighted instance from an explicit signed partition of pairs:
     /// pairs in `neg` get d = 1; everything else d = 0; all weights 1.
     pub fn unweighted(n: usize, neg: &[(usize, usize)]) -> Self {
+        assert_size_representable(n);
         let mut d = PackedSym::zeros(n);
         for &(i, j) in neg {
             d.set(i, j, 1.0);
@@ -98,6 +109,18 @@ impl CcLpInstance {
             w: perturbed_weights(&self.w, frac, rel, seed),
         }
     }
+}
+
+/// Reject instance sizes whose indices would overflow the solver's
+/// 20-bit key fields (see [`crate::solver::active::set::MAX_N`]) before
+/// any O(n²) allocation happens.
+pub(crate) fn assert_size_representable(n: usize) {
+    assert!(
+        n < crate::solver::active::set::MAX_N,
+        "instance size n = {n} exceeds the solver limit of {} \
+         (constraint indices are packed into 20-bit key fields)",
+        crate::solver::active::set::MAX_N - 1,
+    );
 }
 
 /// Shared weight-perturbation kernel (see
@@ -155,6 +178,16 @@ mod tests {
     #[test]
     fn validate_accepts_random() {
         CcLpInstance::random(8, 0.3, 0.5, 1.5, 2).validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_unrepresentable_n() {
+        // Struct literal on purpose: the constructors assert before the
+        // O(n²) allocation, so this is the only way to reach validate().
+        let inst =
+            CcLpInstance { n: 1 << 20, d: PackedSym::zeros(2), w: PackedSym::zeros(2) };
+        let err = inst.validate().unwrap_err().to_string();
+        assert!(err.contains("20-bit key fields"), "{err}");
     }
 
     #[test]

@@ -175,6 +175,13 @@ fn print_store_io(stats: Option<metric_proj::matrix::store::StoreStats>) {
             stats.prefetched,
             stats.peak_resident_bytes as f64 / (1u64 << 20) as f64
         );
+        if stats.entry_loads > 0 {
+            println!(
+                "entry I/O : {} entries gathered via entry-granular leases, \
+                 {} footprint blocks skipped",
+                stats.entry_loads, stats.blocks_skipped
+            );
+        }
     }
 }
 

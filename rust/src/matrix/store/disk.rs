@@ -136,6 +136,14 @@ pub struct StoreStats {
     pub w_loads: u64,
     /// Blocks evicted from the streamed-`W` plane (never dirty).
     pub w_evictions: u64,
+    /// Entries gathered through entry-granular leases
+    /// ([`super::TileStore::with_entries`]) — the active-set I/O
+    /// footprint, as opposed to whole-tile gathers.
+    pub entry_loads: u64,
+    /// Tile-footprint blocks an entry-granular lease did **not** have to
+    /// touch (whole-tile footprint blocks minus blocks intersecting the
+    /// requested entries) — the I/O the lease avoided.
+    pub blocks_skipped: u64,
 }
 
 struct CachedBlock {
@@ -450,6 +458,8 @@ impl DiskStore {
             peak_resident_bytes: x.peak_resident_bytes + w.peak_resident_bytes,
             w_loads: w.loads,
             w_evictions: w.evictions,
+            entry_loads: x.entry_loads,
+            blocks_skipped: x.blocks_skipped,
         }
     }
 
@@ -599,6 +609,41 @@ fn copy_col_span(
     }
 }
 
+/// Copy rows `[lo, hi)` of column `c` into the pre-sized `out`, loading
+/// the covering blocks through `cache` (the caller holds the plane's
+/// lock). Every loaded-or-resident block index is recorded once in
+/// `touched` (the entry lease's block-skip accounting).
+fn copy_col_span_into(
+    cache: &mut Cache,
+    lay: &BlockLayout,
+    c: usize,
+    lo: usize,
+    hi: usize,
+    out: &mut [f64],
+    touched: &mut Vec<usize>,
+) {
+    debug_assert_eq!(out.len(), hi - lo);
+    let n = lay.n();
+    let cb = lay.block_of(c);
+    let mut r = lo;
+    let mut pos = 0usize;
+    while r < hi {
+        let rb = lay.block_of(r);
+        let take_hi = hi.min(((rb + 1) * lay.block()).min(n));
+        let idx = lay.block_index(cb, rb);
+        if !touched.contains(&idx) {
+            touched.push(idx);
+        }
+        cache.load_block(lay, idx).expect("tile store I/O failed while loading a block");
+        let (base, blo) = lay.block_col_base(cb, rb, c);
+        let data = &cache.blocks[idx].as_ref().expect("just loaded").data;
+        out[pos..pos + (take_hi - r)]
+            .copy_from_slice(&data[base + (r - blo)..base + (take_hi - blo)]);
+        pos += take_hi - r;
+        r = take_hi;
+    }
+}
+
 impl Drop for DiskStore {
     fn drop(&mut self) {
         if let Some(tx) = self.prefetch_tx.take() {
@@ -680,6 +725,147 @@ impl TileStore for DiskStore {
         self.gather_tile(tile, scratch);
         let view = SharedMut::new(scratch.x.as_mut_slice());
         f(&view, &scratch.cols, &scratch.winv);
+    }
+
+    unsafe fn with_entries(
+        &self,
+        tile: &Tile,
+        each_pair: &mut dyn FnMut(&mut dyn FnMut(usize, usize)),
+        scratch: &mut TileScratch,
+        f: &mut dyn FnMut(&SharedMut<'_, f64>, &[usize], &[f64]),
+    ) {
+        let lay = &self.layout;
+        let n = lay.n();
+        if scratch.cols.len() < n {
+            scratch.cols.resize(n, 0);
+        }
+        scratch.x.clear();
+        scratch.winv.clear();
+        scratch.segs.clear();
+        scratch.pairs.clear();
+        {
+            let pairs = &mut scratch.pairs;
+            each_pair(&mut |c, r| {
+                debug_assert!(c < r && r < n, "entry lease pair ({c}, {r}) out of range");
+                pairs.push((c as u32, r as u32));
+            });
+        }
+        scratch.pairs.sort_unstable();
+        scratch.pairs.dedup();
+        // Footprint-shaped arena: the same `cols[]` address table and
+        // arena length `with_tile` would build (so the kernel's
+        // `cols[c] + (r - c - 1)` addressing is untouched), but
+        // zero-filled — only the requested entries are gathered into it,
+        // and only blocks intersecting them are faulted. Also count the
+        // footprint's block set, so we can report how many blocks the
+        // entry lease skipped.
+        let footprint_blocks;
+        {
+            let mut arena_len = 0usize;
+            let mut foot_idx: Vec<usize> = Vec::new();
+            let cols = &mut scratch.cols;
+            for_each_tile_col(tile, |c, lo, hi| {
+                // Non-negative by construction — see `gather_tile`.
+                debug_assert!(arena_len >= lo - c - 1, "arena base underflow for {tile:?}");
+                cols[c] = arena_len - (lo - c - 1);
+                let cb = lay.block_of(c);
+                let mut r = lo;
+                while r < hi {
+                    let rb = lay.block_of(r);
+                    let take_hi = hi.min(((rb + 1) * lay.block()).min(n));
+                    let idx = lay.block_index(cb, rb);
+                    if !foot_idx.contains(&idx) {
+                        foot_idx.push(idx);
+                    }
+                    r = take_hi;
+                }
+                arena_len += hi - lo;
+            });
+            footprint_blocks = foot_idx.len() as u64;
+            scratch.x.resize(arena_len, 0.0);
+            scratch.winv.resize(arena_len, 0.0);
+        }
+        let TileScratch { x, winv, cols, segs, pairs } = &mut *scratch;
+        // Coalesce the sorted pairs into per-column runs of consecutive
+        // rows — each run is one contiguous arena segment, gathered and
+        // scattered like a (shorter) `gather_tile` segment.
+        let mut i = 0usize;
+        while i < pairs.len() {
+            let c = pairs[i].0;
+            let mut j = i + 1;
+            while j < pairs.len() && pairs[j].0 == c && pairs[j].1 == pairs[j - 1].1 + 1 {
+                j += 1;
+            }
+            let cc = c as usize;
+            let (lo, hi) = (pairs[i].1 as usize, pairs[j - 1].1 as usize + 1);
+            segs.push(Seg { col: cc, row_lo: lo, row_hi: hi, start: cols[cc] + (lo - cc - 1) });
+            i = j;
+        }
+        // Gather only the blocks the requested entries live in, one plane
+        // locked at a time; account the entry-lease counters on the X
+        // plane.
+        {
+            let mut cache = self.lock();
+            let mut touched: Vec<usize> = Vec::new();
+            for seg in segs.iter() {
+                copy_col_span_into(
+                    &mut cache,
+                    lay,
+                    seg.col,
+                    seg.row_lo,
+                    seg.row_hi,
+                    &mut x[seg.start..seg.start + (seg.row_hi - seg.row_lo)],
+                    &mut touched,
+                );
+            }
+            cache.stats.entry_loads += pairs.len() as u64;
+            cache.stats.blocks_skipped += footprint_blocks.saturating_sub(touched.len() as u64);
+        }
+        {
+            let mut wc = self.wlock();
+            let mut wtouched: Vec<usize> = Vec::new();
+            for seg in segs.iter() {
+                copy_col_span_into(
+                    &mut wc,
+                    lay,
+                    seg.col,
+                    seg.row_lo,
+                    seg.row_hi,
+                    &mut winv[seg.start..seg.start + (seg.row_hi - seg.row_lo)],
+                    &mut wtouched,
+                );
+            }
+        }
+        // Compute on the private arena — no lock held.
+        {
+            let view = SharedMut::new(x.as_mut_slice());
+            f(&view, cols, winv);
+        }
+        // Scatter only the requested segments back, dirtying only their
+        // blocks (same block walk as the `with_tile` scatter).
+        {
+            let mut cache = self.lock();
+            for seg in segs.iter() {
+                let cb = lay.block_of(seg.col);
+                let mut r = seg.row_lo;
+                let mut pos = seg.start;
+                while r < seg.row_hi {
+                    let rb = lay.block_of(r);
+                    let take_hi = seg.row_hi.min(((rb + 1) * lay.block()).min(n));
+                    let idx = lay.block_index(cb, rb);
+                    cache
+                        .load_block(lay, idx)
+                        .expect("tile store I/O failed while loading a block");
+                    let (base, blo) = lay.block_col_base(cb, rb, seg.col);
+                    let block = cache.blocks[idx].as_mut().expect("just loaded");
+                    block.data[base + (r - blo)..base + (take_hi - blo)]
+                        .copy_from_slice(&x[pos..pos + (take_hi - r)]);
+                    block.dirty = true;
+                    pos += take_hi - r;
+                    r = take_hi;
+                }
+            }
+        }
     }
 
     unsafe fn with_pair_range(
@@ -1205,6 +1391,84 @@ mod tests {
         let path = store.path().to_path_buf();
         drop(store);
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    #[allow(unused_unsafe)]
+    fn entry_leases_touch_only_requested_blocks_and_write_back() {
+        // A sparse entry request must gather and scatter only the blocks
+        // its pairs intersect, skip the rest of the footprint, and count
+        // both through the stats so telemetry can surface the saving.
+        let (n, b, block) = (40usize, 8usize, 4usize);
+        let (store, mut flat) = make("entry", n, block, 1 << 20, 23);
+        let m = PackedSym::zeros(n);
+        let schedule = Schedule::new(n, b);
+        let tile = schedule.waves()[0][0];
+        let mut footprint: Vec<(usize, usize)> = Vec::new();
+        crate::solver::tiling::for_each_tile_col(&tile, |c, lo, hi| {
+            for r in lo..hi {
+                footprint.push((c, r));
+            }
+        });
+        let first = footprint[0];
+        let last = *footprint.last().unwrap();
+        assert_ne!(first, last);
+        let mut scratch = TileScratch::default();
+        let mut seen = 0usize;
+        // SAFETY: single thread owns the tile.
+        unsafe {
+            store.with_entries(
+                &tile,
+                // Duplicates are legal; the store dedups before gathering.
+                &mut |emit| {
+                    for &(c, r) in &[first, last, first, last] {
+                        emit(c, r);
+                    }
+                },
+                &mut scratch,
+                &mut |x, cols, winv| {
+                    for &(c, r) in &[first, last] {
+                        let p = cols[c] + (r - c - 1);
+                        // SAFETY: in-bounds lease addressing, single thread.
+                        unsafe {
+                            assert_eq!(x.get(p), flat[m.idx(c, r)], "pair ({c},{r})");
+                            x.set(p, 7.25);
+                        }
+                        assert_eq!(winv[p], 1.0);
+                        seen += 1;
+                    }
+                },
+            );
+        }
+        assert_eq!(seen, 2);
+        let stats = store.stats();
+        assert_eq!(stats.entry_loads, 2, "deduped request count");
+        assert!(
+            stats.blocks_skipped > 0,
+            "the footprint spans more blocks than two pairs touch"
+        );
+        let sparse_loads = stats.loads;
+        // Write-back covers exactly the requested entries, nothing else.
+        flat[m.idx(first.0, first.1)] = 7.25;
+        flat[m.idx(last.0, last.1)] = 7.25;
+        assert_eq!(store.read_full().expect("read_full"), flat);
+        // A whole-tile lease on an identical cold store must load
+        // strictly more X blocks than the sparse entry lease did.
+        let (tile_store, _) = make("entry_tile", n, block, 1 << 20, 23);
+        // SAFETY: single thread, read-only callback.
+        unsafe {
+            tile_store.with_tile_read(&tile, &mut scratch, &mut |_x, _cols, _wv| {});
+        }
+        assert!(
+            sparse_loads < tile_store.stats().loads,
+            "sparse lease loaded {sparse_loads} X blocks, whole tile loaded {}",
+            tile_store.stats().loads
+        );
+        for s in [store, tile_store] {
+            let path = s.path().to_path_buf();
+            drop(s);
+            let _ = std::fs::remove_file(path);
+        }
     }
 
     #[test]

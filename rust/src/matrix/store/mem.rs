@@ -51,6 +51,18 @@ impl TileStore for MemStore<'_> {
         f(&self.x, self.col_starts, self.winv);
     }
 
+    unsafe fn with_entries(
+        &self,
+        _tile: &Tile,
+        _each_pair: &mut dyn FnMut(&mut dyn FnMut(usize, usize)),
+        _scratch: &mut TileScratch,
+        f: &mut dyn FnMut(&SharedMut<'_, f64>, &[usize], &[f64]),
+    ) {
+        // Zero cost, same as `with_tile`: the enumerator is never even
+        // invoked — the resident array already holds every entry.
+        f(&self.x, self.col_starts, self.winv);
+    }
+
     unsafe fn with_pair_range(
         &self,
         lo: usize,

@@ -29,6 +29,18 @@
 //! elementwise residual scans stream — the last solver phases that used
 //! to address the flat array directly.
 //!
+//! Cheap active-set passes use the finer-grained **entry lease**
+//! ([`TileStore::with_entries`]): the caller names exactly the pairs its
+//! kernel will touch (a tile bucket's active keys expand to at most
+//! three pairs per triplet), and the store only has to materialize
+//! those. [`MemStore`] still passes the resident array through at zero
+//! cost; [`DiskStore`] gathers from only the blocks intersecting the
+//! requested entries — blocks of the tile footprint holding no requested
+//! pair are neither read nor written, which is what makes cheap-pass I/O
+//! scale with the active set instead of tile geometry
+//! ([`StoreStats::entry_loads`] / [`StoreStats::blocks_skipped`] count
+//! it).
+//!
 //! # The lease contract
 //!
 //! [`TileStore::with_tile`] hands the callback `(x, cols, winv)` such
@@ -90,6 +102,10 @@ pub struct TileScratch {
     pub(crate) cols: Vec<usize>,
     /// The leased segments, for the write-back scatter.
     pub(crate) segs: Vec<Seg>,
+    /// Requested `(col, row)` pairs of an entry lease (disk stores
+    /// collect, sort, and coalesce them here; see
+    /// [`TileStore::with_entries`]).
+    pub(crate) pairs: Vec<(u32, u32)>,
 }
 
 /// A storage backend for the packed distance matrix, leased tile by tile.
@@ -138,6 +154,44 @@ pub trait TileStore: Sync {
         f: &mut dyn FnMut(&SharedMut<'_, f64>, &[usize], &[f64]),
     ) {
         // SAFETY: forwarded contract.
+        unsafe { self.with_tile(tile, scratch, f) }
+    }
+
+    /// Lease exactly the entries a kernel will touch within `tile`'s
+    /// footprint, instead of the whole footprint.
+    ///
+    /// `each_pair` is an enumerator: the store may invoke it (at most
+    /// once, strictly **before** `f`, never concurrently with it) with an
+    /// `emit(c, r)` sink, and the caller must emit every pair `{c, r}`
+    /// (`c < r`, inside `tile`'s footprint) its kernel will read or
+    /// write. Duplicates and arbitrary order are fine. The callback `f`
+    /// then sees the exact [`TileStore::with_tile`] contract —
+    /// `x[cols[c] + (r - c - 1)]`, `winv` mirroring it — but only the
+    /// *emitted* entries are guaranteed to hold real values; touching a
+    /// non-emitted pair is a contract violation (a disk store hands back
+    /// unspecified garbage there, a memory store the live array).
+    ///
+    /// The default forwards to [`TileStore::with_tile`] (every emitted
+    /// entry is in the footprint, so a whole-footprint lease is always
+    /// correct). [`MemStore`] overrides it with the same zero-cost
+    /// pass-through as `with_tile` without ever calling `each_pair`;
+    /// [`DiskStore`] gathers/scatters only the blocks that intersect the
+    /// emitted entries and skips the rest of the footprint entirely.
+    /// Because every implementation hands the kernel bit-identical
+    /// values (gathers copy, they never round), switching a pass from
+    /// `with_tile` to `with_entries` cannot change results.
+    ///
+    /// # Safety
+    /// Same contract as [`TileStore::with_tile`].
+    unsafe fn with_entries(
+        &self,
+        tile: &Tile,
+        _each_pair: &mut dyn FnMut(&mut dyn FnMut(usize, usize)),
+        scratch: &mut TileScratch,
+        f: &mut dyn FnMut(&SharedMut<'_, f64>, &[usize], &[f64]),
+    ) {
+        // SAFETY: forwarded contract; the footprint is a superset of any
+        // legal entry request.
         unsafe { self.with_tile(tile, scratch, f) }
     }
 

@@ -43,6 +43,18 @@ impl XlaEngine {
                 .with_context(|| format!("loading project_b{b} (run `make artifacts`)"))?;
             project.push((b, exe));
         }
+        // `project_batch` picks the smallest fitting batch by scanning in
+        // order, so the list must be non-empty and strictly ascending —
+        // validate here instead of trusting the artifact enumeration.
+        project.sort_by_key(|&(b, _)| b);
+        anyhow::ensure!(
+            !project.is_empty(),
+            "no project executables compiled (run `make artifacts`)"
+        );
+        anyhow::ensure!(
+            project.windows(2).all(|w| w[0].0 < w[1].0),
+            "duplicate project batch sizes in artifacts"
+        );
         let pair = rt.load(&format!("pair_b{PAIR_BATCH}"), 5)?;
         let objective = rt.load(&format!("objective_b{OBJECTIVE_BATCH}"), 1)?;
         Ok(XlaEngine { project, pair, objective, platform: rt.platform() })
@@ -64,15 +76,14 @@ impl XlaEngine {
     ) -> Result<()> {
         let n_lanes = x3.len() / 3;
         anyhow::ensure!(x3.len() == n_lanes * 3 && winv3.len() == x3.len());
+        let sizes: Vec<usize> = self.project.iter().map(|p| p.0).collect();
         let mut done = 0usize;
         while done < n_lanes {
             let remaining = n_lanes - done;
-            // Smallest compiled batch that fits, else the largest (chunk).
-            let (b, exe) = self
-                .project
-                .iter()
-                .find(|(b, _)| *b >= remaining)
-                .unwrap_or(self.project.last().unwrap());
+            let idx = pick_batch(&sizes, remaining).ok_or_else(|| {
+                anyhow::anyhow!("engine holds no project executables (run `make artifacts`)")
+            })?;
+            let (b, exe) = &self.project[idx];
             let lanes = remaining.min(*b);
             let (lo, hi) = (done * 3, (done + lanes) * 3);
             // Pad with identity lanes: x=0 satisfies all metric rows, y=0.
@@ -187,6 +198,17 @@ impl XlaEngine {
     }
 }
 
+/// Batch choice for `remaining` lanes over ascending `batches`: index of
+/// the smallest compiled batch that fits, else of the largest (which the
+/// caller chunks through). `None` iff `batches` is empty — the caller
+/// turns that into an error instead of the old `last().unwrap()` panic.
+fn pick_batch(batches: &[usize], remaining: usize) -> Option<usize> {
+    if batches.is_empty() {
+        return None;
+    }
+    Some(batches.iter().position(|&b| b >= remaining).unwrap_or(batches.len() - 1))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,6 +220,19 @@ mod tests {
             return None;
         }
         Some(XlaEngine::load("artifacts").unwrap())
+    }
+
+    #[test]
+    fn pick_batch_prefers_smallest_fit_then_chunks() {
+        let sizes = [1024usize, 4096, 16384];
+        assert_eq!(pick_batch(&sizes, 1), Some(0));
+        assert_eq!(pick_batch(&sizes, 1024), Some(0));
+        assert_eq!(pick_batch(&sizes, 1025), Some(1));
+        assert_eq!(pick_batch(&sizes, 16384), Some(2));
+        // Oversized batches chunk through the largest executable.
+        assert_eq!(pick_batch(&sizes, 100_000), Some(2));
+        // Zero executables is an error at the caller, never a panic.
+        assert_eq!(pick_batch(&[], 7), None);
     }
 
     #[test]

@@ -122,10 +122,12 @@ fn load_sweep_engine(backend: SweepBackend, rec: &dyn Recorder) -> Option<XlaEng
 /// to the full metric phase, so concurrent visits stay conflict-free;
 /// within a tile, entries sit (and are visited) in cube order. Tiles
 /// whose bucket is empty are skipped without leasing their working set,
-/// so on a disk-backed [`TileStore`] a cheap pass only touches the
-/// blocks of tiles that still hold duals. Returns the number of
-/// triplets visited.
-pub(crate) fn active_pass(
+/// and non-empty tiles go through the entry-granular
+/// [`TileStore::with_entries`] lease, so on a disk-backed [`TileStore`]
+/// a cheap pass only touches the blocks holding the pairs its duals
+/// actually name — I/O scales with the active set, not tile geometry.
+/// Returns the number of triplets visited.
+pub fn active_pass(
     store: &dyn TileStore,
     schedule: &Schedule,
     set: &ActiveSet,
@@ -151,6 +153,9 @@ pub(crate) fn active_pass_timed(
     scoped_workers(p, |tid, barrier| {
         let mut visited = 0u64;
         let mut scratch = TileScratch::default();
+        // Reusable copy of the bucket's keys: the enumerator borrows it
+        // immutably while the kernel callback holds the bucket `&mut`.
+        let mut keys: Vec<u64> = Vec::new();
         for (wave_idx, wave) in schedule.waves().iter().enumerate() {
             let tb = telemetry::busy_start(worker_secs);
             let mut r = assignment.first_tile(tid, wave_idx, p);
@@ -161,29 +166,46 @@ pub(crate) fn active_pass_timed(
                 // hence bucket `flat`, until the wave barrier.
                 let bucket = unsafe { set.bucket_mut(flat) };
                 if !bucket.is_empty() {
+                    keys.clear();
+                    keys.extend(bucket.iter().map(|e| e.key));
                     // SAFETY: wave conflict-freeness gives exclusive
                     // access to every pair reachable from the tile — the
-                    // lease contract of `with_tile`.
+                    // lease contract of `with_entries`; the enumerator
+                    // names every pair the kernel below touches (the
+                    // three sides of each active triplet).
                     unsafe {
-                        store.with_tile(tile, &mut scratch, &mut |x, col_starts, winv| {
-                            for e in bucket.iter_mut() {
-                                let (i, j, k) = decode_key(e.key);
-                                let ci = col_starts[i];
-                                let pij = ci + (j - i - 1);
-                                let pik = ci + (k - i - 1);
-                                let pjk = col_starts[j] + (k - j - 1);
-                                // SAFETY: same contract as the full hot
-                                // loop, forwarded through the lease.
-                                let th =
-                                    unsafe { visit_triplet(x, winv, pij, pik, pjk, e.y) };
-                                e.y = th;
-                                if th == [0.0; 3] {
-                                    e.zero_passes += 1;
-                                } else {
-                                    e.zero_passes = 0;
+                        store.with_entries(
+                            tile,
+                            &mut |emit| {
+                                for &key in keys.iter() {
+                                    let (i, j, k) = decode_key(key);
+                                    emit(i, j);
+                                    emit(i, k);
+                                    emit(j, k);
                                 }
-                            }
-                        });
+                            },
+                            &mut scratch,
+                            &mut |x, col_starts, winv| {
+                                for e in bucket.iter_mut() {
+                                    let (i, j, k) = decode_key(e.key);
+                                    let ci = col_starts[i];
+                                    let pij = ci + (j - i - 1);
+                                    let pik = ci + (k - i - 1);
+                                    let pjk = col_starts[j] + (k - j - 1);
+                                    // SAFETY: same contract as the full hot
+                                    // loop, forwarded through the lease.
+                                    let th = unsafe {
+                                        visit_triplet(x, winv, pij, pik, pjk, e.y)
+                                    };
+                                    e.y = th;
+                                    if th == [0.0; 3] {
+                                        e.zero_passes += 1;
+                                    } else {
+                                        e.zero_passes = 0;
+                                    }
+                                }
+                            },
+                        );
                     }
                 }
                 visited += bucket.len() as u64;

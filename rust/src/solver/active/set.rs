@@ -18,10 +18,19 @@ use std::cell::UnsafeCell;
 /// so keys are directly comparable across the two stores.
 const INDEX_MASK: u64 = (1 << 20) - 1;
 
+/// Largest representable instance size: each index must fit the 20-bit
+/// key fields, so `n` must stay below `2^20`. Instance constructors
+/// reject anything larger — past the check, key packing cannot collide.
+pub const MAX_N: usize = 1 << 20;
+
 /// Encode triplet `(i, j, k)`, `i < j < k`, as a compact key.
 #[inline(always)]
 pub fn triplet_key(i: usize, j: usize, k: usize) -> u64 {
     debug_assert!(i < j && j < k);
+    // `i < j < k`, so checking the largest index covers all three.
+    // Instances with `n >= MAX_N` are rejected at construction; this
+    // backstops that check where a collision would corrupt duals.
+    debug_assert!(k < MAX_N, "index {k} overflows the 20-bit key field");
     ((i as u64) << 42) | ((j as u64) << 22) | ((k as u64) << 2)
 }
 
@@ -39,6 +48,7 @@ pub fn decode_key(key: u64) -> (usize, usize, usize) {
 /// what the screened sweep's merge-scan segments bucket entries by.
 #[inline(always)]
 pub fn run_prefix(i: usize, j: usize) -> u64 {
+    debug_assert!(i < MAX_N && j < MAX_N, "index overflows the 20-bit key field");
     ((i as u64) << 20) | (j as u64)
 }
 
@@ -202,6 +212,20 @@ mod tests {
                 assert_eq!(key & 3, 0, "type bits must be clear");
             }
         }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "overflows the 20-bit key field")]
+    fn triplet_key_rejects_indices_past_the_field_width() {
+        let _ = triplet_key(0, 1, MAX_N);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "overflows the 20-bit key field")]
+    fn run_prefix_rejects_indices_past_the_field_width() {
+        let _ = run_prefix(0, MAX_N);
     }
 
     #[test]

@@ -6,9 +6,12 @@
 //! solvers (full + active) and, since PR 5, the CC-LP solvers (full
 //! parallel + active). All of them lease `X` through
 //! [`TileStore`] — tile leases for the metric phases, pair-range leases
-//! for the CC pair phase and the elementwise residual scans — so the
-//! numerics are backend-independent bit for bit (pinned by
-//! `tests/store_equivalence.rs`).
+//! for the CC pair phase and the elementwise residual scans, and (since
+//! PR 7) entry-granular leases ([`TileStore::with_entries`]) for the
+//! cheap active passes, which name only the pairs their tile bucket
+//! touches so the disk backend gathers from just the blocks those pairs
+//! intersect — so the numerics are backend-independent bit for bit
+//! (pinned by `tests/store_equivalence.rs`).
 
 use super::checkpoint::SolverState;
 use super::schedule::Schedule;

@@ -355,12 +355,17 @@ pub(crate) fn store_stats_fields(stats: &StoreStats) -> Vec<(String, Json)> {
         f("peak_resident_bytes", stats.peak_resident_bytes),
         f("w_loads", stats.w_loads),
         f("w_evictions", stats.w_evictions),
+        f("entry_loads", stats.entry_loads),
+        f("blocks_skipped", stats.blocks_skipped),
     ]
 }
 
 /// Inverse of [`store_stats_fields`]; `Err` carries the missing key.
+/// The entry-lease counters default to 0 when absent so traces recorded
+/// before they existed keep parsing.
 pub(crate) fn parse_store_stats(v: &Json) -> Result<StoreStats, &'static str> {
     let get = |k: &'static str| v.get(k).and_then(Json::as_u64).ok_or(k);
+    let opt = |k: &'static str| v.get(k).and_then(Json::as_u64).unwrap_or(0);
     Ok(StoreStats {
         loads: get("loads")?,
         evictions: get("evictions")?,
@@ -369,6 +374,8 @@ pub(crate) fn parse_store_stats(v: &Json) -> Result<StoreStats, &'static str> {
         w_loads: get("w_loads")?,
         w_evictions: get("w_evictions")?,
         peak_resident_bytes: get("peak_resident_bytes")?,
+        entry_loads: opt("entry_loads"),
+        blocks_skipped: opt("blocks_skipped"),
     })
 }
 
@@ -412,6 +419,8 @@ mod tests {
                     peak_resident_bytes: 65536,
                     w_loads: 3,
                     w_evictions: 1,
+                    entry_loads: 12,
+                    blocks_skipped: 5,
                 },
             },
             Event::PassEnd { pass: 2, secs: 0.25, triplet_visits: 910, active_triplets: 20 },

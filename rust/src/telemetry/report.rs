@@ -196,6 +196,13 @@ pub fn render(path: &str, summary: &TraceSummary) -> String {
             stats.w_loads,
             stats.peak_resident_bytes as f64 / (1024.0 * 1024.0)
         );
+        if stats.entry_loads > 0 {
+            let _ = writeln!(
+                out,
+                "  entry io  : {} entries via entry leases, {} footprint blocks skipped",
+                stats.entry_loads, stats.blocks_skipped
+            );
+        }
     }
     if let Some(c) = &summary.footer {
         let _ = writeln!(

@@ -121,11 +121,33 @@ where
 /// catch wave-schedule/ordering bugs that only appear off the default —
 /// safe to apply anywhere results are bitwise thread-count independent.
 pub fn env_threads(default: usize) -> usize {
-    std::env::var("METRIC_PROJ_TEST_THREADS")
-        .ok()
-        .and_then(|s| s.trim().parse().ok())
-        .filter(|&p| p >= 1)
-        .unwrap_or(default)
+    match std::env::var("METRIC_PROJ_TEST_THREADS") {
+        Err(_) => default,
+        Ok(raw) => match parse_thread_override(&raw) {
+            Ok(p) => p,
+            Err(why) => {
+                // A typo'd override must not silently run the suite at
+                // the default count — say so through the global sink.
+                crate::telemetry::warn(&format!(
+                    "METRIC_PROJ_TEST_THREADS={raw:?} ignored ({why}); \
+                     using {default} thread(s)"
+                ));
+                default
+            }
+        },
+    }
+}
+
+/// Parse a `METRIC_PROJ_TEST_THREADS`-style override: a positive integer,
+/// surrounding whitespace allowed. Returns the reason on rejection so
+/// [`env_threads`] can report it.
+pub(crate) fn parse_thread_override(raw: &str) -> Result<usize, String> {
+    let trimmed = raw.trim();
+    match trimmed.parse::<usize>() {
+        Ok(0) => Err("thread count must be >= 1".to_string()),
+        Ok(p) => Ok(p),
+        Err(e) => Err(format!("not a positive integer: {e}")),
+    }
 }
 
 /// Number of hardware threads available to this process.
@@ -202,6 +224,28 @@ mod tests {
         for p in [1usize, 3, 8] {
             assert_eq!(par_reduce_max(p, 5000, f), serial);
         }
+    }
+
+    #[test]
+    fn thread_override_accepts_positive_integers() {
+        assert_eq!(parse_thread_override("4"), Ok(4));
+        assert_eq!(parse_thread_override(" 8 "), Ok(8));
+        assert_eq!(parse_thread_override("1"), Ok(1));
+    }
+
+    #[test]
+    fn thread_override_rejects_garbage_with_a_reason() {
+        for bad in ["", "zero", "1.5", "-2", "0x8"] {
+            let why = parse_thread_override(bad).unwrap_err();
+            assert!(
+                why.contains("not a positive integer"),
+                "{bad:?} -> {why:?}"
+            );
+        }
+        assert_eq!(
+            parse_thread_override("0").unwrap_err(),
+            "thread count must be >= 1"
+        );
     }
 
     #[test]

@@ -89,6 +89,20 @@ impl<'a, T> SharedMut<'a, T> {
         debug_assert!(lo <= hi && hi <= self.len);
         std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
     }
+
+    /// Reborrow the contiguous range `[lo, hi)` as a plain shared slice.
+    /// Lets hot read loops (the residual screen stripe) iterate with
+    /// ordinary slice iterators — bounds-check-free and auto-vectorizable
+    /// — instead of per-element [`Self::get`] calls.
+    ///
+    /// # Safety
+    /// `lo <= hi <= len`, and no other thread may **write** any element of
+    /// the range while the returned borrow lives.
+    #[inline(always)]
+    pub unsafe fn slice(&self, lo: usize, hi: usize) -> &[T] {
+        debug_assert!(lo <= hi && hi <= self.len);
+        std::slice::from_raw_parts(self.ptr.add(lo), hi - lo)
+    }
 }
 
 /// Per-worker mutable state: each worker `tid` may access only slot `tid`.

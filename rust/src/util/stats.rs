@@ -22,7 +22,10 @@ pub fn summarize(xs: &[f64]) -> Summary {
         0.0
     };
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // `total_cmp`, not `partial_cmp(..).unwrap()`: a NaN measurement
+    // (e.g. a zero-elapsed throughput row) must not panic the bench/eval
+    // harness. NaNs sort to the positive end under the IEEE total order.
+    sorted.sort_by(f64::total_cmp);
     let median = if n % 2 == 1 {
         sorted[n / 2]
     } else {
@@ -86,6 +89,17 @@ mod tests {
     #[test]
     fn median_odd() {
         assert_eq!(summarize(&[5.0, 1.0, 3.0]).median, 3.0);
+    }
+
+    #[test]
+    fn summarize_tolerates_nan_measurements() {
+        // Regression: `partial_cmp(..).unwrap()` used to panic here.
+        let s = summarize(&[1.0, f64::NAN, 3.0]);
+        assert_eq!(s.n, 3);
+        // NaN sorts last under the IEEE total order.
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan());
+        assert_eq!(s.median, 3.0);
     }
 
     #[test]

@@ -7,7 +7,10 @@
 //! from the store's second plane). Disk-backed checkpoints reference the
 //! store file (no inline `x`) and resume bitwise; a corrupted,
 //! truncated, or drifted store file is refused, mirroring
-//! `tests/checkpoint_roundtrip.rs`.
+//! `tests/checkpoint_roundtrip.rs`. Since PR 7 the active cheap passes
+//! lease entry-granular subsets of each tile (`with_entries`); the same
+//! bitwise contract holds, and the `entry_loads` / `blocks_skipped`
+//! counters must prove the sparse gathers skip footprint blocks.
 //!
 //! Thread counts marked with [`env_threads`] honor the CI matrix's
 //! `METRIC_PROJ_TEST_THREADS` override — results are bitwise
@@ -130,6 +133,64 @@ fn cc_disk_and_mem_solves_are_bitwise_identical_under_churn() {
             );
             assert!(stats.writebacks > 0, "{ctx}: dirty blocks must be written back");
         }
+        if matches!(strategy, Strategy::Active { .. }) {
+            assert!(
+                stats.entry_loads > 0,
+                "{ctx}: cheap passes must gather through entry leases"
+            );
+            if tile < n {
+                assert!(
+                    stats.blocks_skipped > 0,
+                    "{ctx}: sparse buckets must skip part of the tile footprint"
+                );
+            }
+        }
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}
+
+#[test]
+fn active_cheap_passes_stream_entry_leases_and_skip_footprint_blocks() {
+    // PR 7: the cheap passes of an active disk solve lease only the
+    // entries named by each tile bucket instead of the whole pair
+    // footprint. The solve must stay bitwise identical to the in-memory
+    // run, and the store counters must show both the entry gathers and
+    // the footprint blocks they skipped. Geometry keeps block == tile
+    // well below n so every tile footprint spans several cache blocks.
+    let cases = [
+        // (n, tile, threads, budget_bytes)
+        (40usize, 5usize, 1usize, 1usize << 12),
+        (40, 5, env_threads(3), 1 << 12),
+        (34, 8, env_threads(2), 1 << 11),
+    ];
+    for (idx, &(n, tile, threads, budget)) in cases.iter().enumerate() {
+        let inst = MetricNearnessInstance::random(n, 2.0, 61 + idx as u64);
+        let opts = NearnessOpts {
+            max_passes: 12,
+            check_every: 4,
+            tol_violation: 1e-12,
+            threads,
+            tile,
+            strategy: Strategy::Active { sweep_every: 3, forget_after: 2 },
+            ..Default::default()
+        };
+        let ctx = format!("entry-lease case {idx}: n={n} tile={tile} p={threads}");
+        let (mem, _) = solve_collecting(&inst, &opts, &StoreCfg::mem(), None);
+        let dir = tmp_dir(&format!("entry{idx}"));
+        let (disk, _) = solve_collecting(&inst, &opts, &StoreCfg::disk(&dir, budget), None);
+        assert_same_solution(&mem, &disk, &ctx);
+        let stats = disk.store_stats.expect("disk solve reports store stats");
+        assert!(
+            stats.entry_loads > 0,
+            "{ctx}: cheap passes must gather through entry leases"
+        );
+        assert!(
+            stats.blocks_skipped > 0,
+            "{ctx}: sparse buckets must skip part of the tile footprint \
+             ({} entries gathered, {} block loads)",
+            stats.entry_loads,
+            stats.loads
+        );
         let _ = std::fs::remove_dir_all(dir);
     }
 }
