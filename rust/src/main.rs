@@ -8,14 +8,20 @@
 //!            [--strategy full|active --sweep-every 8 --forget-after 3]
 //!            [--sweep-backend scalar|screened|engine] [--sweep-policy fixed|adaptive]
 //!            [--store mem|disk --store-dir store --store-budget-mb 64]
+//!            [--store-retries 4] [--fault-plan seed=1,read-eio=0.01]
 //!            [--checkpoint state.ckpt --checkpoint-every 10]
 //!            [--resume state.ckpt | --warm-start state.ckpt]
+//!            [--recover-attempts 2] [--on-interrupt ignore|checkpoint]
+//!            [--watchdog-stall 5 --watchdog-dump watchdog_dump.json]
 //!            [--trace-out run.jsonl] [--progress]
 //!   nearness --n 200 --threads 8 --tile 40 --passes 50
 //!            [--strategy full|active --sweep-every 8 --forget-after 3]
 //!            [--sweep-backend scalar|screened|engine] [--sweep-policy fixed|adaptive]
 //!            [--store mem|disk --store-dir store --store-budget-mb 64]
+//!            [--store-retries 4] [--fault-plan seed=1,read-eio=0.01]
 //!            [--checkpoint ... --checkpoint-every ... --resume ... --warm-start ...]
+//!            [--recover-attempts 2] [--on-interrupt ignore|checkpoint]
+//!            [--watchdog-stall 5 --watchdog-dump watchdog_dump.json]
 //!            [--trace-out run.jsonl] [--progress]
 //!   report   --trace run.jsonl[,run2.jsonl...]
 //!   bench-gate --fresh rows.json[,rows2.json...] [--baseline bench/baseline.json]
@@ -32,14 +38,16 @@ use metric_proj::cli::Args;
 use metric_proj::eval::{self, EvalConfig, Scale};
 use metric_proj::graph::datasets::Dataset;
 use metric_proj::instance::{cc_objective, CcLpInstance};
-use metric_proj::matrix::store::{StoreCfg, StoreKind};
+use metric_proj::matrix::store::{
+    clean_stale_artifacts, FaultPlan, StoreCfg, StoreKind, DEFAULT_STORE_RETRIES,
+};
 use metric_proj::rounding::{pivot, threshold};
 use metric_proj::solver::checkpoint::{self, SolverState, WarmStartOpts};
 use metric_proj::solver::schedule::Assignment;
 use metric_proj::runtime::DEFAULT_ARTIFACTS_DIR;
 use metric_proj::solver::{
-    dykstra_parallel, dykstra_serial, dykstra_xla, nearness, SolveOpts, Strategy,
-    SweepBackend, SweepPolicy,
+    dykstra_parallel, dykstra_serial, dykstra_xla, nearness, recover, OnInterrupt, SolveError,
+    SolveOpts, Strategy, SweepBackend, SweepPolicy,
 };
 use metric_proj::telemetry::{self, JsonlRecorder, ProgressRecorder, Recorder, Tee};
 use metric_proj::util::parallel::available_cores;
@@ -124,17 +132,38 @@ fn parse_sweep_backend(args: &Args) -> Result<SweepBackend> {
 
 /// Storage flags shared by the solve commands: `--store mem|disk`,
 /// `--store-dir <dir>` (default `store`), `--store-budget-mb <MiB>`
-/// (default 64) — the out-of-core tile store for `X`.
+/// (default 64) — the out-of-core tile store for `X` — plus the
+/// robustness knobs: `--store-retries <N>` bounds the per-operation
+/// retry budget for transient block-I/O failures, and `--fault-plan
+/// <key=value,...>` (or env `METRIC_PROJ_FAULTS`) arms deterministic
+/// fault injection at the block layer for drills and tests.
 fn parse_store_cfg(args: &Args) -> Result<StoreCfg> {
     let kind_str = args.get("store").unwrap_or("mem");
     let kind = StoreKind::parse(kind_str)
         .with_context(|| format!("--store must be mem|disk, got `{kind_str}`"))?;
     let budget_mb =
         args.get_or("store-budget-mb", 64usize).map_err(|e| anyhow::anyhow!(e))?.max(1);
+    let spec = match args.get("fault-plan") {
+        Some(s) => Some(s.to_string()),
+        None => std::env::var("METRIC_PROJ_FAULTS").ok(),
+    };
+    let faults = match spec {
+        Some(s) => {
+            let plan = FaultPlan::parse(&s)
+                .map_err(|e| anyhow::anyhow!("--fault-plan/METRIC_PROJ_FAULTS: {e}"))?;
+            eprintln!("warning: fault injection armed ({s})");
+            Some(std::sync::Arc::new(plan))
+        }
+        None => None,
+    };
     Ok(StoreCfg {
         kind,
         dir: args.get("store-dir").unwrap_or("store").into(),
         budget_bytes: budget_mb << 20,
+        faults,
+        retries: args
+            .get_or("store-retries", DEFAULT_STORE_RETRIES)
+            .map_err(|e| anyhow::anyhow!(e))?,
     })
 }
 
@@ -182,7 +211,25 @@ fn print_store_io(stats: Option<metric_proj::matrix::store::StoreStats>) {
                 stats.entry_loads, stats.blocks_skipped
             );
         }
+        if stats.retries > 0 {
+            println!("resilience: {} transient store faults absorbed by retries", stats.retries);
+        }
     }
+}
+
+/// Sweep `--store-dir` for leftovers of crashed runs (temp files and
+/// orphaned spill planes whose owner holds no live lock) before a disk
+/// solve opens the store; prints what it removed.
+fn clean_store_dir(cfg: &StoreCfg) -> Result<()> {
+    if cfg.kind != StoreKind::Disk {
+        return Ok(());
+    }
+    let removed = clean_stale_artifacts(&cfg.dir)
+        .with_context(|| format!("cleaning stale artifacts in `{}`", cfg.dir.display()))?;
+    for p in removed {
+        println!("store     : removed stale artifact {}", p.display());
+    }
+    Ok(())
 }
 
 /// Print the screen hit rate when the run had discovery sweeps.
@@ -265,6 +312,76 @@ impl CheckpointCli {
             } else {
                 eprintln!("checkpoint: NO state was written to {p} (see warnings above)");
             }
+        }
+    }
+}
+
+/// Robustness flags shared by the solve commands: `--on-interrupt
+/// ignore|checkpoint` (checkpoint mode installs the SIGINT/SIGTERM
+/// handlers and needs `--checkpoint`), `--watchdog-stall <K>` /
+/// `--watchdog-dump <path>`, and `--recover-attempts <N>` for the
+/// auto-resume harness around store failures.
+struct RobustCli {
+    on_interrupt: OnInterrupt,
+    watchdog_stall: usize,
+    watchdog_dump: String,
+    recover_attempts: usize,
+}
+
+impl RobustCli {
+    fn parse(args: &Args, ck: &CheckpointCli) -> Result<RobustCli> {
+        let s = args.get("on-interrupt").unwrap_or("ignore");
+        let on_interrupt = OnInterrupt::parse(s)
+            .with_context(|| format!("--on-interrupt must be ignore|checkpoint, got `{s}`"))?;
+        if on_interrupt == OnInterrupt::Checkpoint {
+            if ck.save_path.is_none() {
+                bail!("--on-interrupt checkpoint needs --checkpoint <path>");
+            }
+            metric_proj::util::interrupt::install();
+        }
+        let recover_attempts =
+            args.get_or("recover-attempts", 0usize).map_err(|e| anyhow::anyhow!(e))?;
+        if recover_attempts > 0 && ck.save_path.is_none() {
+            bail!("--recover-attempts needs --checkpoint <path> to resume from");
+        }
+        Ok(RobustCli {
+            on_interrupt,
+            watchdog_stall: args
+                .get_or("watchdog-stall", 0usize)
+                .map_err(|e| anyhow::anyhow!(e))?,
+            watchdog_dump: args
+                .get("watchdog-dump")
+                .unwrap_or("watchdog_dump.json")
+                .to_string(),
+            recover_attempts,
+        })
+    }
+
+    /// Map a typed solve failure onto CLI behavior: an honored interrupt
+    /// is a clean exit (the work is checkpointed, not lost), a watchdog
+    /// trip writes its diagnostic dump before failing, and store
+    /// failures propagate naming the last good checkpoint.
+    fn conclude(&self, err: SolveError) -> Result<()> {
+        match err {
+            SolveError::Interrupted { pass, checkpointed } => {
+                println!(
+                    "interrupted: stopped cleanly after pass {pass}{}",
+                    if checkpointed { " (state checkpointed)" } else { "" }
+                );
+                Ok(())
+            }
+            SolveError::Watchdog { pass, report } => {
+                let path = Path::new(&self.watchdog_dump);
+                std::fs::write(path, &report)
+                    .with_context(|| format!("writing watchdog dump `{}`", path.display()))?;
+                bail!(
+                    "watchdog tripped at pass {pass} (stall or divergence); \
+                     diagnostic dump written to {}",
+                    path.display()
+                )
+            }
+            SolveError::Other(e) => Err(e),
+            err => Err(anyhow::Error::from(err)),
         }
     }
 }
@@ -385,6 +502,7 @@ fn build_instance_cli(args: &Args) -> Result<(CcLpInstance, String)> {
 fn cmd_solve(args: &Args) -> Result<()> {
     let (inst, desc) = build_instance_cli(args)?;
     let ck = CheckpointCli::parse(args)?;
+    let robust = RobustCli::parse(args, &ck)?;
     let opts = SolveOpts {
         gamma: args.get_or("gamma", 5.0).map_err(|e| anyhow::anyhow!(e))?,
         max_passes: args.get_or("passes", 20usize).map_err(|e| anyhow::anyhow!(e))?,
@@ -397,6 +515,8 @@ fn cmd_solve(args: &Args) -> Result<()> {
         sweep_backend: parse_sweep_backend(args)?,
         sweep_policy: parse_sweep_policy(args)?,
         checkpoint_every: ck.every,
+        on_interrupt: robust.on_interrupt,
+        watchdog_stall: robust.watchdog_stall,
         ..Default::default()
     };
     let store_cfg = parse_store_cfg(args)?;
@@ -439,6 +559,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
     println!("instance  : {desc}");
     println!("constraints: {:.3e}", inst.n_constraints() as f64);
     print_store_cfg(&store_cfg);
+    clean_store_dir(&store_cfg)?;
     println!(
         "solver    : {} threads={} tile={} passes={} strategy={:?} sweep-backend={}{}",
         if args.has_flag("serial") { "serial" } else { "parallel" },
@@ -453,40 +574,49 @@ fn cmd_solve(args: &Args) -> Result<()> {
         }
     );
     let trace = TraceCli::parse(args)?;
-    let (sol, secs) = {
+    let (res, secs) = {
         let rec = trace.recorder();
         match engine {
             "cpu" => {
                 let mut sink = ck.sink();
-                let (res, secs) = time(|| {
-                    if args.has_flag("serial") {
-                        dykstra_serial::solve_traced(
-                            &inst,
-                            &opts,
-                            start.as_ref(),
-                            &mut sink,
-                            &rec,
-                        )
-                    } else {
-                        dykstra_parallel::solve_traced(
-                            &inst,
-                            &opts,
-                            &store_cfg,
-                            start.as_ref(),
-                            &mut sink,
-                            &rec,
-                        )
-                    }
-                });
-                (res?, secs)
+                let ckpath = ck.save_path.clone();
+                time(|| {
+                    recover::run_with_recovery(
+                        robust.recover_attempts,
+                        ckpath.as_deref().map(Path::new),
+                        &rec,
+                        |recovered| {
+                            let from = recovered.or(start.as_ref());
+                            if args.has_flag("serial") {
+                                dykstra_serial::solve_traced(&inst, &opts, from, &mut sink, &rec)
+                            } else {
+                                dykstra_parallel::solve_traced(
+                                    &inst,
+                                    &opts,
+                                    &store_cfg,
+                                    from,
+                                    &mut sink,
+                                    &rec,
+                                )
+                            }
+                        },
+                    )
+                })
             }
             "xla" => {
                 let eng = metric_proj::runtime::engine::XlaEngine::load(DEFAULT_ARTIFACTS_DIR)
                     .context("loading XLA engine (run `make artifacts`)")?;
-                let (sol, secs) = time(|| dykstra_xla::solve_traced(&inst, &opts, &eng, &rec));
-                (sol?, secs)
+                time(|| dykstra_xla::solve_traced(&inst, &opts, &eng, &rec))
             }
             other => bail!("--engine must be cpu|xla, got `{other}`"),
+        }
+    };
+    let sol = match res {
+        Ok(sol) => sol,
+        Err(err) => {
+            trace.finish()?;
+            ck.report();
+            return robust.conclude(err);
         }
     };
     trace.finish()?;
@@ -526,6 +656,7 @@ fn cmd_nearness(args: &Args) -> Result<()> {
     let inst =
         metric_proj::instance::metric_nearness::MetricNearnessInstance::random(n, 2.0, seed);
     let ck = CheckpointCli::parse(args)?;
+    let robust = RobustCli::parse(args, &ck)?;
     let opts = nearness::NearnessOpts {
         max_passes: args.get_or("passes", 50usize).map_err(|e| anyhow::anyhow!(e))?,
         threads: args.get_or("threads", available_cores()).map_err(|e| anyhow::anyhow!(e))?,
@@ -534,6 +665,8 @@ fn cmd_nearness(args: &Args) -> Result<()> {
         sweep_backend: parse_sweep_backend(args)?,
         sweep_policy: parse_sweep_policy(args)?,
         checkpoint_every: ck.every,
+        on_interrupt: robust.on_interrupt,
+        watchdog_stall: robust.watchdog_stall,
         ..Default::default()
     };
     let start: Option<SolverState> = match ck.loaded.clone() {
@@ -555,13 +688,38 @@ fn cmd_nearness(args: &Args) -> Result<()> {
     };
     let store_cfg = parse_store_cfg(args)?;
     print_store_cfg(&store_cfg);
+    clean_store_dir(&store_cfg)?;
     let trace = TraceCli::parse(args)?;
-    let (sol, secs) = {
+    let (res, secs) = {
         let rec = trace.recorder();
         let mut sink = ck.sink();
-        time(|| nearness::solve_traced(&inst, &opts, &store_cfg, start.as_ref(), &mut sink, &rec))
+        let ckpath = ck.save_path.clone();
+        time(|| {
+            recover::run_with_recovery(
+                robust.recover_attempts,
+                ckpath.as_deref().map(Path::new),
+                &rec,
+                |recovered| {
+                    nearness::solve_traced(
+                        &inst,
+                        &opts,
+                        &store_cfg,
+                        recovered.or(start.as_ref()),
+                        &mut sink,
+                        &rec,
+                    )
+                },
+            )
+        })
     };
-    let sol = sol?;
+    let sol = match res {
+        Ok(sol) => sol,
+        Err(err) => {
+            trace.finish()?;
+            ck.report();
+            return robust.conclude(err);
+        }
+    };
     trace.finish()?;
     ck.report();
     println!("metric nearness n={n}: passes={} time={secs:.2}s", sol.passes);

@@ -41,9 +41,33 @@
 //! worker-private arenas, so workers only serialize on the (short) copy
 //! phases. A background thread warms the cache for
 //! [`TileStore::prefetch`] hints — loads only, so results are
-//! unaffected. Mid-solve I/O errors are unrecoverable and panic;
-//! everything on the setup/teardown path returns [`StoreError`].
+//! unaffected.
+//!
+//! # Failure model
+//!
+//! Nothing mid-solve panics. Every block read is verified against a
+//! **resident checksum table** (`sums`, maintained by every write), so a
+//! torn or bit-flipped read is caught at the block it happened in, not
+//! at the next `open`. Transient failures — `EIO`, a read that fails its
+//! checksum — are retried with exponential backoff up to
+//! [`StoreTuning::retries`] times, counted in [`StoreStats::retries`]
+//! and described by [`RetryNote`]s (drained per pass into the
+//! `store_retry` telemetry event). A failure that survives its retry
+//! budget (or is non-retryable, like `ENOSPC`) is **latched**: the store
+//! remembers the first error, every subsequent lease becomes a no-op,
+//! and the driver's per-pass [`DiskStore::health`] poll unwinds the
+//! solve with the typed error — barrier-synchronized waves cannot unwind
+//! mid-wave, so leases park instead of panicking and the pass loop does
+//! the unwinding. Deterministic fault injection for all of this lives in
+//! [`super::faults`].
+//!
+//! A sibling `<x file>.lock` file (holding the owner's pid) makes two
+//! concurrent solves on one store a typed [`StoreError::Locked`] instead
+//! of silent corruption; stale locks from dead processes are broken
+//! automatically, and [`clean_stale_artifacts`] sweeps leftover `*.tmp`
+//! files and orphaned spill planes from crashed runs.
 
+use super::faults::FaultPlan;
 use super::layout::BlockLayout;
 use super::{Seg, TileScratch, TileStore};
 use crate::matrix::packed::n_pairs;
@@ -55,8 +79,9 @@ use std::fmt;
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 /// File magic: identifies a metric-proj tile store.
 pub const STORE_MAGIC: [u8; 8] = *b"MPROJTIL";
@@ -81,6 +106,9 @@ pub enum StoreError {
     /// The file is well-formed but does not match the caller's problem
     /// (wrong `n`, wrong stamp, ...).
     Mismatch(String),
+    /// Another live process (or another handle in this one) holds the
+    /// store's lockfile.
+    Locked(String),
 }
 
 impl fmt::Display for StoreError {
@@ -93,6 +121,7 @@ impl fmt::Display for StoreError {
             }
             StoreError::Corrupt(msg) => write!(f, "corrupt tile store: {msg}"),
             StoreError::Mismatch(msg) => write!(f, "tile store mismatch: {msg}"),
+            StoreError::Locked(msg) => write!(f, "tile store locked: {msg}"),
         }
     }
 }
@@ -114,6 +143,167 @@ impl From<std::io::Error> for StoreError {
 
 fn corrupt(msg: impl Into<String>) -> StoreError {
     StoreError::Corrupt(msg.into())
+}
+
+/// Whether a retry can plausibly heal this failure: transient `EIO` yes,
+/// a read-side checksum mismatch yes (a re-read of intact bytes heals a
+/// torn read), `ENOSPC` and every structural error no.
+fn retryable(e: &StoreError) -> bool {
+    match e {
+        StoreError::Io(io) => io.raw_os_error() != Some(28 /* ENOSPC */),
+        StoreError::Corrupt(_) => true,
+        _ => false,
+    }
+}
+
+/// Default bounded retry budget per block operation.
+pub const DEFAULT_STORE_RETRIES: u32 = 4;
+
+/// Robustness knobs threaded from [`super::StoreCfg`] into each cache
+/// plane: the (optional) deterministic fault plan and the per-operation
+/// retry budget.
+#[derive(Clone, Debug)]
+pub struct StoreTuning {
+    /// Deterministic fault injection at the block read/write layer
+    /// (tests, the nightly fault-matrix CI job); `None` in production.
+    pub faults: Option<Arc<FaultPlan>>,
+    /// Transient failures are retried up to this many times per
+    /// operation, with exponential backoff, before latching the store.
+    pub retries: u32,
+}
+
+impl Default for StoreTuning {
+    fn default() -> Self {
+        StoreTuning { faults: None, retries: DEFAULT_STORE_RETRIES }
+    }
+}
+
+/// One healed transient failure, recorded for the `store_retry`
+/// telemetry event (see [`DiskStore::drain_retries`]).
+#[derive(Clone, Debug)]
+pub struct RetryNote {
+    /// Which cache plane faulted (`"x"` or `"w"`).
+    pub plane: &'static str,
+    /// `"read"` or `"write"`.
+    pub op: &'static str,
+    /// Block index the operation targeted.
+    pub block: usize,
+    /// 1-based retry attempt that this note records.
+    pub attempt: u32,
+    /// Rendered error the retry healed.
+    pub error: String,
+}
+
+/// The store's error latch. Leases run under barrier-synchronized waves
+/// and cannot unwind mid-wave, so the first permanent failure is parked
+/// here, every later lease becomes a no-op, and the driver's per-pass
+/// [`DiskStore::health`] poll turns it into a typed unwind.
+#[derive(Default)]
+struct StoreHealth {
+    failed: AtomicBool,
+    first: Mutex<Option<StoreError>>,
+}
+
+/// Exclusive-ownership guard over a store file: a sibling
+/// `<x file>.lock` holding the owner's pid, created with `create_new`
+/// for atomicity. Stale locks (dead pid) are broken; live ones refuse
+/// the open with [`StoreError::Locked`]. Removed on drop.
+struct StoreLock {
+    path: PathBuf,
+}
+
+impl StoreLock {
+    fn acquire(store_path: &Path) -> Result<StoreLock, StoreError> {
+        let path = sibling(store_path, ".lock");
+        for _ in 0..2 {
+            match OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    let _ = f.write_all(std::process::id().to_string().as_bytes());
+                    let _ = f.flush();
+                    return Ok(StoreLock { path });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    if lock_is_live(&path) {
+                        let pid = std::fs::read_to_string(&path).unwrap_or_default();
+                        return Err(StoreError::Locked(format!(
+                            "{} is held by live process {}",
+                            path.display(),
+                            pid.trim()
+                        )));
+                    }
+                    // Stale lock from a crashed run: break it and retry.
+                    let _ = std::fs::remove_file(&path);
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Err(StoreError::Locked(format!("could not acquire {}", path.display())))
+    }
+}
+
+impl Drop for StoreLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Whether `lock_path` names a lockfile owned by a live process. A
+/// missing or unreadable pid counts as dead (the lock is stale).
+fn lock_is_live(lock_path: &Path) -> bool {
+    std::fs::read_to_string(lock_path)
+        .ok()
+        .and_then(|s| s.trim().parse::<u32>().ok())
+        .is_some_and(pid_alive)
+}
+
+#[cfg(unix)]
+fn pid_alive(pid: u32) -> bool {
+    Path::new(&format!("/proc/{pid}")).exists()
+}
+
+#[cfg(not(unix))]
+fn pid_alive(_pid: u32) -> bool {
+    // No portable liveness probe: treat every recorded pid as live
+    // (refusing a possibly-stale lock is safer than breaking a live one).
+    true
+}
+
+/// Remove leftovers a crashed solve can strand in a store directory:
+/// `*.tmp` staging files (atomic-rename writes that never renamed) and
+/// orphaned derived artifacts — `*.w` spill planes and `*.lock` files
+/// whose owning store has no live lock. Live-locked stores keep all
+/// their siblings; `*.ckpt` snapshots are always kept (they are the
+/// crash-recovery artifact). Returns the removed paths; a missing `dir`
+/// is an empty sweep, not an error.
+pub fn clean_stale_artifacts(dir: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(entries) => entries,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(e),
+    };
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for entry in entries {
+        paths.push(entry?.path());
+    }
+    let mut removed = Vec::new();
+    for path in paths {
+        let Some(name) = path.file_name().map(|n| n.to_string_lossy().into_owned()) else {
+            continue;
+        };
+        let stale = if name.ends_with(".tmp") {
+            true
+        } else if let Some(owner) = name.strip_suffix(".w") {
+            !lock_is_live(&sibling(&path.with_file_name(owner), ".lock"))
+        } else if name.ends_with(".lock") {
+            !lock_is_live(&path)
+        } else {
+            false
+        };
+        if stale && std::fs::remove_file(&path).is_ok() {
+            removed.push(path);
+        }
+    }
+    Ok(removed)
 }
 
 /// Cache counters, for diagnostics, benches, and the eviction-churn
@@ -144,6 +334,9 @@ pub struct StoreStats {
     /// touch (whole-tile footprint blocks minus blocks intersecting the
     /// requested entries) — the I/O the lease avoided.
     pub blocks_skipped: u64,
+    /// Transient block-I/O failures healed by the bounded retry loop
+    /// (both planes) — nonzero means the store survived real faults.
+    pub retries: u64,
 }
 
 struct CachedBlock {
@@ -162,19 +355,33 @@ struct Cache {
     /// `flush_and_stamp` (or as read at `open`).
     stamp: (u64, u64),
     stats: StoreStats,
+    /// Resident mirror of the on-disk block-checksum table: every write
+    /// updates it, every read is verified against it — a flipped bit in
+    /// a block read is caught at the block, not at the next `open`.
+    sums: Vec<u64>,
+    /// Plane name for diagnostics (`"x"` / `"w"`).
+    plane: &'static str,
+    tuning: StoreTuning,
+    /// Healed transient failures since the last drain (bounded; the
+    /// count in `stats.retries` is exact even if notes are dropped).
+    retry_notes: Vec<RetryNote>,
 }
+
+/// Cap on buffered [`RetryNote`]s per plane between drains, so a
+/// fault-heavy pass cannot grow memory without bound.
+const MAX_RETRY_NOTES: usize = 1024;
 
 impl Cache {
     /// Make block `idx` resident (LRU-touching it) and return nothing;
     /// the caller re-borrows `self.blocks[idx]`.
-    fn load_block(&mut self, lay: &BlockLayout, idx: usize) -> std::io::Result<()> {
+    fn load_block(&mut self, lay: &BlockLayout, idx: usize) -> Result<(), StoreError> {
         self.tick += 1;
         let tick = self.tick;
         if let Some(b) = self.blocks[idx].as_mut() {
             b.tick = tick;
             return Ok(());
         }
-        let data = read_block(&mut self.file, lay, idx)?;
+        let data = self.fetch_block(lay, idx)?;
         self.resident_entries += data.len();
         self.stats.loads += 1;
         let bytes = (self.resident_entries * 8) as u64;
@@ -185,9 +392,101 @@ impl Cache {
         self.evict_to_budget(lay, idx)
     }
 
+    /// Read and checksum-verify block `idx` (without caching it),
+    /// retrying transient failures with exponential backoff.
+    fn fetch_block(&mut self, lay: &BlockLayout, idx: usize) -> Result<Vec<f64>, StoreError> {
+        let mut attempt = 0u32;
+        loop {
+            match self.try_fetch_block(lay, idx) {
+                Ok(data) => return Ok(data),
+                Err(e) if retryable(&e) && attempt < self.tuning.retries => {
+                    attempt += 1;
+                    self.note_retry("read", idx, attempt, &e);
+                    backoff(attempt);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// One un-retried read attempt: fault-plan hooks, the raw read, and
+    /// checksum verification against the resident table.
+    fn try_fetch_block(&mut self, lay: &BlockLayout, idx: usize) -> Result<Vec<f64>, StoreError> {
+        let mut data = match &self.tuning.faults {
+            Some(plan) => {
+                let op = plan.next_op();
+                plan.pace(op);
+                if let Some(e) = plan.read_error(op) {
+                    return Err(e.into());
+                }
+                let mut data = read_block(&mut self.file, lay, idx)?;
+                plan.corrupt_read(op, &mut data);
+                data
+            }
+            None => read_block(&mut self.file, lay, idx)?,
+        };
+        let want = self.sums[idx];
+        if fnv_f64s(&data) != want {
+            data.clear();
+            return Err(corrupt(format!(
+                "checksum mismatch reading block {idx} of the {} plane",
+                self.plane
+            )));
+        }
+        Ok(data)
+    }
+
+    /// Write block `idx` back (re-stamping its checksum-table entry and
+    /// the resident mirror), retrying transient failures.
+    fn put_block(&mut self, lay: &BlockLayout, idx: usize, data: &[f64]) -> Result<(), StoreError> {
+        let mut attempt = 0u32;
+        loop {
+            match self.try_put_block(lay, idx, data) {
+                Ok(()) => return Ok(()),
+                Err(e) if retryable(&e) && attempt < self.tuning.retries => {
+                    attempt += 1;
+                    self.note_retry("write", idx, attempt, &e);
+                    backoff(attempt);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    fn try_put_block(
+        &mut self,
+        lay: &BlockLayout,
+        idx: usize,
+        data: &[f64],
+    ) -> Result<(), StoreError> {
+        if let Some(plan) = &self.tuning.faults {
+            let op = plan.next_op();
+            plan.pace(op);
+            if let Some(e) = plan.write_error(op) {
+                return Err(e.into());
+            }
+        }
+        let sum = write_block(&mut self.file, lay, idx, data)?;
+        self.sums[idx] = sum;
+        Ok(())
+    }
+
+    fn note_retry(&mut self, op: &'static str, block: usize, attempt: u32, e: &StoreError) {
+        self.stats.retries += 1;
+        if self.retry_notes.len() < MAX_RETRY_NOTES {
+            self.retry_notes.push(RetryNote {
+                plane: self.plane,
+                op,
+                block,
+                attempt,
+                error: e.to_string(),
+            });
+        }
+    }
+
     /// Evict least-recently-used blocks (never `keep`) until the budget
     /// holds, writing dirty victims back to the file.
-    fn evict_to_budget(&mut self, lay: &BlockLayout, keep: usize) -> std::io::Result<()> {
+    fn evict_to_budget(&mut self, lay: &BlockLayout, keep: usize) -> Result<(), StoreError> {
         while self.resident_entries > self.budget_entries {
             let mut victim: Option<(usize, u64)> = None;
             for (i, slot) in self.blocks.iter().enumerate() {
@@ -206,7 +505,7 @@ impl Cache {
             self.resident_entries -= b.data.len();
             self.stats.evictions += 1;
             if b.dirty {
-                write_block(&mut self.file, lay, vi, &b.data)?;
+                self.put_block(lay, vi, &b.data)?;
                 self.stats.writebacks += 1;
             }
         }
@@ -214,7 +513,7 @@ impl Cache {
     }
 
     /// Write every dirty block back to the file (blocks stay resident).
-    fn flush_dirty(&mut self, lay: &BlockLayout) -> std::io::Result<()> {
+    fn flush_dirty(&mut self, lay: &BlockLayout) -> Result<(), StoreError> {
         for idx in 0..self.blocks.len() {
             let dirty = self.blocks[idx].as_ref().is_some_and(|b| b.dirty);
             if dirty {
@@ -223,7 +522,7 @@ impl Cache {
                     b.dirty = false;
                     std::mem::take(&mut b.data)
                 };
-                let res = write_block(&mut self.file, lay, idx, &data);
+                let res = self.put_block(lay, idx, &data);
                 self.blocks[idx].as_mut().expect("still resident").data = data;
                 res?;
                 self.stats.writebacks += 1;
@@ -232,6 +531,23 @@ impl Cache {
         self.file.flush()?;
         Ok(())
     }
+}
+
+/// Exponential backoff before retry `attempt` (1-based): 0.5 ms, 1 ms,
+/// 2 ms, ... capped at ~64 ms.
+fn backoff(attempt: u32) {
+    std::thread::sleep(std::time::Duration::from_micros(250u64 << attempt.min(8)));
+}
+
+/// Allocation-free FNV-1a over a block's f64s — bit-identical to
+/// `fnv1a64(&f64s_to_bytes(data))`, which is what the on-disk checksum
+/// table stores.
+fn fnv_f64s(data: &[f64]) -> u64 {
+    let mut h = Fnv1a::new();
+    for &v in data {
+        h.update(&v.to_bits().to_le_bytes());
+    }
+    h.finish()
 }
 
 /// File-backed tile store (see the [module docs](self) for the format).
@@ -249,6 +565,10 @@ pub struct DiskStore {
     w_path: PathBuf,
     prefetch_tx: Option<Mutex<mpsc::Sender<PrefetchMsg>>>,
     prefetch_join: Option<std::thread::JoinHandle<()>>,
+    /// First-error latch; see the module docs' failure model.
+    health: StoreHealth,
+    /// Held for the store's lifetime; removed on drop.
+    _lock: StoreLock,
 }
 
 enum PrefetchMsg {
@@ -269,6 +589,20 @@ impl DiskStore {
         winv: Vec<f64>,
         src: &mut dyn FnMut(usize, usize) -> f64,
     ) -> Result<DiskStore, StoreError> {
+        DiskStore::create_with(path, n, block, budget_bytes, winv, src, StoreTuning::default())
+    }
+
+    /// [`DiskStore::create`] with explicit robustness tuning (fault plan
+    /// and retry budget).
+    pub fn create_with(
+        path: &Path,
+        n: usize,
+        block: usize,
+        budget_bytes: usize,
+        winv: Vec<f64>,
+        src: &mut dyn FnMut(usize, usize) -> f64,
+        tuning: StoreTuning,
+    ) -> Result<DiskStore, StoreError> {
         if winv.len() != n_pairs(n) {
             return Err(StoreError::Mismatch(format!(
                 "winv has {} entries, expected {}",
@@ -281,12 +615,13 @@ impl DiskStore {
                 std::fs::create_dir_all(parent)?;
             }
         }
+        let lock = StoreLock::acquire(path)?;
         let layout = BlockLayout::new(n, block.max(1));
-        let file = write_store_file(path, &layout, src)?;
+        let (file, sums) = write_store_file(path, &layout, src)?;
         let col_starts = packed_col_starts(n);
         let w_path = w_sibling(path);
         let cs = col_starts.clone();
-        let wfile =
+        let (wfile, wsums) =
             write_store_file(&w_path, &layout, &mut |c, r| winv[cs[c] + (r - c - 1)])?;
         Ok(DiskStore::assemble(
             layout,
@@ -297,6 +632,10 @@ impl DiskStore {
             col_starts,
             path,
             w_path,
+            sums,
+            wsums,
+            tuning,
+            lock,
         ))
     }
 
@@ -308,6 +647,18 @@ impl DiskStore {
         budget_bytes: usize,
         winv: Vec<f64>,
     ) -> Result<DiskStore, StoreError> {
+        DiskStore::open_with(path, budget_bytes, winv, StoreTuning::default())
+    }
+
+    /// [`DiskStore::open`] with explicit robustness tuning (fault plan
+    /// and retry budget).
+    pub fn open_with(
+        path: &Path,
+        budget_bytes: usize,
+        winv: Vec<f64>,
+        tuning: StoreTuning,
+    ) -> Result<DiskStore, StoreError> {
+        let lock = StoreLock::acquire(path)?;
         let mut file = OpenOptions::new().read(true).write(true).open(path)?;
         let mut header = [0u8; HEADER_LEN as usize];
         file.read_exact(&mut header).map_err(|_| corrupt("truncated header"))?;
@@ -352,11 +703,15 @@ impl DiskStore {
                 "file is {actual_len} bytes, expected {expect_len} (truncated or padded)"
             )));
         }
-        // Read the checksum table, then verify every block.
+        // Read the checksum table (kept resident as the read-verify
+        // mirror), then verify every block.
         let mut table = vec![0u8; n_blocks * 8];
         file.read_exact(&mut table).map_err(|_| corrupt("truncated checksum table"))?;
-        for idx in 0..n_blocks {
-            let want = u64::from_le_bytes(table[idx * 8..idx * 8 + 8].try_into().expect("8"));
+        let sums: Vec<u64> = table
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().expect("8 bytes")))
+            .collect();
+        for (idx, &want) in sums.iter().enumerate() {
             let len = layout.block_len(idx);
             let mut bytes = vec![0u8; len * 8];
             file.read_exact(&mut bytes)
@@ -370,7 +725,7 @@ impl DiskStore {
         let col_starts = packed_col_starts(n);
         let w_path = w_sibling(path);
         let cs = col_starts.clone();
-        let wfile =
+        let (wfile, wsums) =
             write_store_file(&w_path, &layout, &mut |c, r| winv[cs[c] + (r - c - 1)])?;
         Ok(DiskStore::assemble(
             layout,
@@ -381,6 +736,10 @@ impl DiskStore {
             col_starts,
             path,
             w_path,
+            sums,
+            wsums,
+            tuning,
+            lock,
         ))
     }
 
@@ -394,11 +753,15 @@ impl DiskStore {
         col_starts: Vec<usize>,
         path: &Path,
         w_path: PathBuf,
+        sums: Vec<u64>,
+        wsums: Vec<u64>,
+        tuning: StoreTuning,
+        lock: StoreLock,
     ) -> DiskStore {
         let n_blocks = layout.n_blocks();
         // The byte budget is split evenly between the X and W planes.
         let plane_budget = (budget_bytes / 2 / 8).max(1);
-        let mk_cache = |file: File, stamp: (u64, u64)| Cache {
+        let mk_cache = |file: File, stamp: (u64, u64), sums: Vec<u64>, plane: &'static str| Cache {
             file,
             blocks: (0..n_blocks).map(|_| None).collect(),
             tick: 0,
@@ -406,10 +769,14 @@ impl DiskStore {
             budget_entries: plane_budget,
             stamp,
             stats: StoreStats::default(),
+            sums,
+            plane,
+            tuning: tuning.clone(),
+            retry_notes: Vec::new(),
         };
         let layout = Arc::new(layout);
-        let cache = Arc::new(Mutex::new(mk_cache(file, stamp)));
-        let wcache = Arc::new(Mutex::new(mk_cache(wfile, (0, 0))));
+        let cache = Arc::new(Mutex::new(mk_cache(file, stamp, sums, "x")));
+        let wcache = Arc::new(Mutex::new(mk_cache(wfile, (0, 0), wsums, "w")));
         let (tx, rx) = mpsc::channel::<PrefetchMsg>();
         let join = {
             let layout = Arc::clone(&layout);
@@ -426,6 +793,8 @@ impl DiskStore {
             w_path,
             prefetch_tx: Some(Mutex::new(tx)),
             prefetch_join: Some(join),
+            health: StoreHealth::default(),
+            _lock: lock,
         }
     }
 
@@ -460,6 +829,7 @@ impl DiskStore {
             w_evictions: w.evictions,
             entry_loads: x.entry_loads,
             blocks_skipped: x.blocks_skipped,
+            retries: x.retries + w.retries,
         }
     }
 
@@ -494,7 +864,10 @@ impl DiskStore {
     pub fn flush_and_stamp(&self, pass: u64) -> Result<u64, StoreError> {
         let mut cache = self.lock();
         cache.flush_dirty(&self.layout)?;
-        let x_fnv = hash_checksum_table(&mut cache.file, &self.layout)?;
+        // The resident `sums` mirror equals the on-disk table after a
+        // flush, so the fingerprint needs no file re-read (which would
+        // also re-enter the fault plan for a pure bookkeeping step).
+        let x_fnv = fingerprint_of(&cache.sums);
         cache.file.seek(SeekFrom::Start(0))?;
         cache.file.write_all(&header_bytes(&self.layout, pass, x_fnv))?;
         cache.file.flush()?;
@@ -508,7 +881,64 @@ impl DiskStore {
     pub fn data_fingerprint(&self) -> Result<u64, StoreError> {
         let mut cache = self.lock();
         cache.flush_dirty(&self.layout)?;
-        Ok(hash_checksum_table(&mut cache.file, &self.layout)?)
+        Ok(fingerprint_of(&cache.sums))
+    }
+
+    /// Copy the (flushed, stamped) store file to `dest` atomically
+    /// (stage to `<dest>.tmp`, then rename), holding the `X`-plane lock
+    /// so no write-back interleaves with the copy. Drivers snapshot to
+    /// [`snapshot_sibling`] right after each checkpoint's
+    /// `flush_and_stamp`, which is what makes an external-`x` checkpoint
+    /// recoverable after the live store drifts past it or dies mid-pass.
+    pub fn snapshot_to(&self, dest: &Path) -> Result<(), StoreError> {
+        let _guard = self.lock();
+        let tmp = sibling(dest, ".tmp");
+        std::fs::copy(&self.path, &tmp)?;
+        std::fs::rename(&tmp, dest)?;
+        Ok(())
+    }
+
+    /// [`DiskStore::snapshot_to`] the store's default snapshot path
+    /// ([`snapshot_sibling`] of the store file).
+    pub fn snapshot(&self) -> Result<(), StoreError> {
+        self.snapshot_to(&snapshot_sibling(&self.path))
+    }
+
+    /// First-error latch poll — the per-pass health check drivers run
+    /// between phases. Returns the first latched error (taking it; later
+    /// polls report a generic already-failed error) or `Ok` while the
+    /// store is healthy.
+    pub fn health(&self) -> Result<(), StoreError> {
+        if !self.is_failed() {
+            return Ok(());
+        }
+        let mut first = self.health.first.lock().unwrap_or_else(|p| p.into_inner());
+        Err(first
+            .take()
+            .unwrap_or_else(|| corrupt("tile store already failed earlier in this solve")))
+    }
+
+    /// Whether a permanent failure has been latched (leases are no-ops).
+    pub fn is_failed(&self) -> bool {
+        self.health.failed.load(Ordering::Acquire)
+    }
+
+    /// Park a lease-path failure in the latch (first error wins).
+    fn latch(&self, e: StoreError) {
+        let mut first = self.health.first.lock().unwrap_or_else(|p| p.into_inner());
+        if first.is_none() {
+            *first = Some(e);
+        }
+        self.health.failed.store(true, Ordering::Release);
+    }
+
+    /// Take the retry notes buffered since the last drain (both planes).
+    /// Drivers drain once per pass and emit them as one `store_retry`
+    /// telemetry event, so the buffer stays small.
+    pub fn drain_retries(&self) -> Vec<RetryNote> {
+        let mut notes = std::mem::take(&mut self.lock().retry_notes);
+        notes.append(&mut self.wlock().retry_notes);
+        notes
     }
 
     /// Materialize the full packed array in global column-major order
@@ -524,7 +954,7 @@ impl DiskStore {
             let cached: Option<Vec<f64>> = cache.blocks[idx].as_ref().map(|b| b.data.clone());
             let data = match cached {
                 Some(d) => d,
-                None => read_block(&mut cache.file, lay, idx)?,
+                None => cache.fetch_block(lay, idx)?,
             };
             let mut pos = 0usize;
             lay.for_each_block_col(cb, rb, |c, lo, hi, _base| {
@@ -536,18 +966,23 @@ impl DiskStore {
         Ok(out)
     }
 
-    fn lock(&self) -> std::sync::MutexGuard<'_, Cache> {
-        self.cache.lock().expect("tile store lock poisoned")
+    /// Lock a cache plane, recovering from poison: the caches hold plain
+    /// data (no invariants a panicking copy loop can break mid-flight
+    /// that the checksum table won't catch), and cascading one worker's
+    /// panic into every other worker is exactly what the failure model
+    /// forbids.
+    fn lock(&self) -> MutexGuard<'_, Cache> {
+        self.cache.lock().unwrap_or_else(|p| p.into_inner())
     }
 
-    fn wlock(&self) -> std::sync::MutexGuard<'_, Cache> {
-        self.wcache.lock().expect("tile store W-plane lock poisoned")
+    fn wlock(&self) -> MutexGuard<'_, Cache> {
+        self.wcache.lock().unwrap_or_else(|p| p.into_inner())
     }
 
     /// Stage `tile`'s footprint into `scratch` (arena + address table +
     /// segment list), loading blocks through the caches under their
     /// locks — one plane at a time, never nested.
-    fn gather_tile(&self, tile: &Tile, scratch: &mut TileScratch) {
+    fn gather_tile(&self, tile: &Tile, scratch: &mut TileScratch) -> Result<(), StoreError> {
         let lay = &self.layout;
         let n = lay.n();
         if scratch.cols.len() < n {
@@ -559,7 +994,11 @@ impl DiskStore {
         {
             let mut cache = self.lock();
             let scratch = &mut *scratch;
+            let mut res = Ok(());
             for_each_tile_col(tile, |c, lo, hi| {
+                if res.is_err() {
+                    return;
+                }
                 let start = scratch.x.len();
                 // Non-negative by construction: the first footprint column
                 // starts at offset 0 with `lo == c + 1`, and every later
@@ -568,8 +1007,9 @@ impl DiskStore {
                 debug_assert!(start >= lo - c - 1, "arena base underflow for {tile:?}");
                 scratch.cols[c] = start - (lo - c - 1);
                 scratch.segs.push(Seg { col: c, row_lo: lo, row_hi: hi, start });
-                copy_col_span(&mut cache, lay, c, lo, hi, &mut scratch.x);
+                res = copy_col_span(&mut cache, lay, c, lo, hi, &mut scratch.x);
             });
+            res?;
         }
         // Second plane: replay the recorded segments against the W
         // spill. Same layout, same append order -> the winv arena
@@ -578,9 +1018,10 @@ impl DiskStore {
             let mut wc = self.wlock();
             let scratch = &mut *scratch;
             for seg in &scratch.segs {
-                copy_col_span(&mut wc, lay, seg.col, seg.row_lo, seg.row_hi, &mut scratch.winv);
+                copy_col_span(&mut wc, lay, seg.col, seg.row_lo, seg.row_hi, &mut scratch.winv)?;
             }
         }
+        Ok(())
     }
 }
 
@@ -593,7 +1034,7 @@ fn copy_col_span(
     lo: usize,
     hi: usize,
     out: &mut Vec<f64>,
-) {
+) -> Result<(), StoreError> {
     let n = lay.n();
     let cb = lay.block_of(c);
     let mut r = lo;
@@ -601,12 +1042,13 @@ fn copy_col_span(
         let rb = lay.block_of(r);
         let take_hi = hi.min(((rb + 1) * lay.block()).min(n));
         let idx = lay.block_index(cb, rb);
-        cache.load_block(lay, idx).expect("tile store I/O failed while loading a block");
+        cache.load_block(lay, idx)?;
         let (base, blo) = lay.block_col_base(cb, rb, c);
         let data = &cache.blocks[idx].as_ref().expect("just loaded").data;
         out.extend_from_slice(&data[base + (r - blo)..base + (take_hi - blo)]);
         r = take_hi;
     }
+    Ok(())
 }
 
 /// Copy rows `[lo, hi)` of column `c` into the pre-sized `out`, loading
@@ -621,7 +1063,7 @@ fn copy_col_span_into(
     hi: usize,
     out: &mut [f64],
     touched: &mut Vec<usize>,
-) {
+) -> Result<(), StoreError> {
     debug_assert_eq!(out.len(), hi - lo);
     let n = lay.n();
     let cb = lay.block_of(c);
@@ -634,7 +1076,7 @@ fn copy_col_span_into(
         if !touched.contains(&idx) {
             touched.push(idx);
         }
-        cache.load_block(lay, idx).expect("tile store I/O failed while loading a block");
+        cache.load_block(lay, idx)?;
         let (base, blo) = lay.block_col_base(cb, rb, c);
         let data = &cache.blocks[idx].as_ref().expect("just loaded").data;
         out[pos..pos + (take_hi - r)]
@@ -642,12 +1084,13 @@ fn copy_col_span_into(
         pos += take_hi - r;
         r = take_hi;
     }
+    Ok(())
 }
 
 impl Drop for DiskStore {
     fn drop(&mut self) {
         if let Some(tx) = self.prefetch_tx.take() {
-            let _ = tx.lock().expect("prefetch sender lock poisoned").send(PrefetchMsg::Stop);
+            let _ = tx.lock().unwrap_or_else(|p| p.into_inner()).send(PrefetchMsg::Stop);
         }
         if let Some(join) = self.prefetch_join.take() {
             let _ = join.join();
@@ -675,11 +1118,20 @@ impl TileStore for DiskStore {
         scratch: &mut TileScratch,
         f: &mut dyn FnMut(&SharedMut<'_, f64>, &[usize], &[f64]),
     ) {
+        // A latched store parks every lease: waves are barrier-
+        // synchronized, so the pass runs to its end on no-op leases and
+        // the driver's per-pass `health()` poll unwinds the solve.
+        if self.is_failed() {
+            return;
+        }
         let lay = &self.layout;
         let n = lay.n();
         // Gather: per-column segments of the tile footprint, copied from
         // the cached blocks under the lock.
-        self.gather_tile(tile, scratch);
+        if let Err(e) = self.gather_tile(tile, scratch) {
+            self.latch(e);
+            return;
+        }
         // Compute on the private arena — no lock held.
         {
             let view = SharedMut::new(scratch.x.as_mut_slice());
@@ -689,7 +1141,7 @@ impl TileStore for DiskStore {
         // pairs this tile may touch — disjoint from every concurrent
         // lease by the wave invariant, which `tiling` tests pin) and
         // mark the blocks dirty.
-        {
+        let scatter = (|| -> Result<(), StoreError> {
             let mut cache = self.lock();
             for seg in &scratch.segs {
                 let cb = lay.block_of(seg.col);
@@ -699,9 +1151,7 @@ impl TileStore for DiskStore {
                     let rb = lay.block_of(r);
                     let take_hi = seg.row_hi.min(((rb + 1) * lay.block()).min(n));
                     let idx = lay.block_index(cb, rb);
-                    cache
-                        .load_block(lay, idx)
-                        .expect("tile store I/O failed while loading a block");
+                    cache.load_block(lay, idx)?;
                     let (base, blo) = lay.block_col_base(cb, rb, seg.col);
                     let block = cache.blocks[idx].as_mut().expect("just loaded");
                     let dst = &mut block.data[base + (r - blo)..base + (take_hi - blo)];
@@ -711,6 +1161,10 @@ impl TileStore for DiskStore {
                     r = take_hi;
                 }
             }
+            Ok(())
+        })();
+        if let Err(e) = scatter {
+            self.latch(e);
         }
     }
 
@@ -720,9 +1174,15 @@ impl TileStore for DiskStore {
         scratch: &mut TileScratch,
         f: &mut dyn FnMut(&SharedMut<'_, f64>, &[usize], &[f64]),
     ) {
+        if self.is_failed() {
+            return;
+        }
         // Gather only — no scatter, no dirty marks: a read-only scan
         // must not turn the whole store dirty.
-        self.gather_tile(tile, scratch);
+        if let Err(e) = self.gather_tile(tile, scratch) {
+            self.latch(e);
+            return;
+        }
         let view = SharedMut::new(scratch.x.as_mut_slice());
         f(&view, &scratch.cols, &scratch.winv);
     }
@@ -734,6 +1194,9 @@ impl TileStore for DiskStore {
         scratch: &mut TileScratch,
         f: &mut dyn FnMut(&SharedMut<'_, f64>, &[usize], &[f64]),
     ) {
+        if self.is_failed() {
+            return;
+        }
         let lay = &self.layout;
         let n = lay.n();
         if scratch.cols.len() < n {
@@ -804,24 +1267,25 @@ impl TileStore for DiskStore {
         // Gather only the blocks the requested entries live in, one plane
         // locked at a time; account the entry-lease counters on the X
         // plane.
-        {
-            let mut cache = self.lock();
-            let mut touched: Vec<usize> = Vec::new();
-            for seg in segs.iter() {
-                copy_col_span_into(
-                    &mut cache,
-                    lay,
-                    seg.col,
-                    seg.row_lo,
-                    seg.row_hi,
-                    &mut x[seg.start..seg.start + (seg.row_hi - seg.row_lo)],
-                    &mut touched,
-                );
+        let gather = (|| -> Result<(), StoreError> {
+            {
+                let mut cache = self.lock();
+                let mut touched: Vec<usize> = Vec::new();
+                for seg in segs.iter() {
+                    copy_col_span_into(
+                        &mut cache,
+                        lay,
+                        seg.col,
+                        seg.row_lo,
+                        seg.row_hi,
+                        &mut x[seg.start..seg.start + (seg.row_hi - seg.row_lo)],
+                        &mut touched,
+                    )?;
+                }
+                cache.stats.entry_loads += pairs.len() as u64;
+                cache.stats.blocks_skipped +=
+                    footprint_blocks.saturating_sub(touched.len() as u64);
             }
-            cache.stats.entry_loads += pairs.len() as u64;
-            cache.stats.blocks_skipped += footprint_blocks.saturating_sub(touched.len() as u64);
-        }
-        {
             let mut wc = self.wlock();
             let mut wtouched: Vec<usize> = Vec::new();
             for seg in segs.iter() {
@@ -833,8 +1297,13 @@ impl TileStore for DiskStore {
                     seg.row_hi,
                     &mut winv[seg.start..seg.start + (seg.row_hi - seg.row_lo)],
                     &mut wtouched,
-                );
+                )?;
             }
+            Ok(())
+        })();
+        if let Err(e) = gather {
+            self.latch(e);
+            return;
         }
         // Compute on the private arena — no lock held.
         {
@@ -843,7 +1312,7 @@ impl TileStore for DiskStore {
         }
         // Scatter only the requested segments back, dirtying only their
         // blocks (same block walk as the `with_tile` scatter).
-        {
+        let scatter = (|| -> Result<(), StoreError> {
             let mut cache = self.lock();
             for seg in segs.iter() {
                 let cb = lay.block_of(seg.col);
@@ -853,9 +1322,7 @@ impl TileStore for DiskStore {
                     let rb = lay.block_of(r);
                     let take_hi = seg.row_hi.min(((rb + 1) * lay.block()).min(n));
                     let idx = lay.block_index(cb, rb);
-                    cache
-                        .load_block(lay, idx)
-                        .expect("tile store I/O failed while loading a block");
+                    cache.load_block(lay, idx)?;
                     let (base, blo) = lay.block_col_base(cb, rb, seg.col);
                     let block = cache.blocks[idx].as_mut().expect("just loaded");
                     block.data[base + (r - blo)..base + (take_hi - blo)]
@@ -865,6 +1332,10 @@ impl TileStore for DiskStore {
                     r = take_hi;
                 }
             }
+            Ok(())
+        })();
+        if let Err(e) = scatter {
+            self.latch(e);
         }
     }
 
@@ -876,82 +1347,87 @@ impl TileStore for DiskStore {
         scratch: &mut TileScratch,
         f: &mut dyn FnMut(usize, &mut [f64], &[f64]),
     ) {
-        if lo >= hi {
+        if lo >= hi || self.is_failed() {
             return;
         }
         let lay = &self.layout;
         let n = lay.n();
         debug_assert!(hi as u64 <= lay.total_entries());
-        // Column containing `lo`: col_starts is strictly increasing over
-        // the nonempty columns, so binary search lands on (or just past)
-        // the owning column.
-        let mut c = match self.col_starts.binary_search(&lo) {
-            Ok(c) => c,
-            Err(ins) => ins - 1,
-        };
-        let mut g = lo;
-        while g < hi {
-            let c_start = self.col_starts[c];
-            let c_end = c_start + (n - 1 - c);
-            debug_assert!(g >= c_start && g < c_end, "range walk lost its column");
-            let seg_hi = c_end.min(hi);
-            let cb = lay.block_of(c);
-            let mut r = c + 1 + (g - c_start);
-            let r_hi = c + 1 + (seg_hi - c_start);
-            while r < r_hi {
-                let rb = lay.block_of(r);
-                let take_hi = r_hi.min(((rb + 1) * lay.block()).min(n));
-                let len = take_hi - r;
-                let idx = lay.block_index(cb, rb);
-                let (base, blo) = lay.block_col_base(cb, rb, c);
-                // Gather the piece — one plane locked at a time.
-                scratch.x.clear();
-                scratch.winv.clear();
-                {
-                    let mut cache = self.lock();
-                    cache
-                        .load_block(lay, idx)
-                        .expect("tile store I/O failed while loading a block");
-                    let data = &cache.blocks[idx].as_ref().expect("just loaded").data;
-                    scratch
-                        .x
-                        .extend_from_slice(&data[base + (r - blo)..base + (take_hi - blo)]);
+        let walk = (|| -> Result<(), StoreError> {
+            // Column containing `lo`: col_starts is strictly increasing
+            // over the nonempty columns, so binary search lands on (or
+            // just past) the owning column.
+            let mut c = match self.col_starts.binary_search(&lo) {
+                Ok(c) => c,
+                Err(ins) => ins - 1,
+            };
+            let mut g = lo;
+            while g < hi {
+                let c_start = self.col_starts[c];
+                let c_end = c_start + (n - 1 - c);
+                debug_assert!(g >= c_start && g < c_end, "range walk lost its column");
+                let seg_hi = c_end.min(hi);
+                let cb = lay.block_of(c);
+                let mut r = c + 1 + (g - c_start);
+                let r_hi = c + 1 + (seg_hi - c_start);
+                while r < r_hi {
+                    let rb = lay.block_of(r);
+                    let take_hi = r_hi.min(((rb + 1) * lay.block()).min(n));
+                    let len = take_hi - r;
+                    let idx = lay.block_index(cb, rb);
+                    let (base, blo) = lay.block_col_base(cb, rb, c);
+                    // Gather the piece — one plane locked at a time.
+                    scratch.x.clear();
+                    scratch.winv.clear();
+                    {
+                        let mut cache = self.lock();
+                        cache.load_block(lay, idx)?;
+                        let data = &cache.blocks[idx].as_ref().expect("just loaded").data;
+                        scratch
+                            .x
+                            .extend_from_slice(&data[base + (r - blo)..base + (take_hi - blo)]);
+                    }
+                    {
+                        let mut wc = self.wlock();
+                        wc.load_block(lay, idx)?;
+                        let data = &wc.blocks[idx].as_ref().expect("just loaded").data;
+                        scratch
+                            .winv
+                            .extend_from_slice(&data[base + (r - blo)..base + (take_hi - blo)]);
+                    }
+                    // Compute on the private piece — no lock held.
+                    f(g, &mut scratch.x, &scratch.winv);
+                    if write {
+                        // The block may have been (cleanly) evicted while
+                        // the callback ran; reload and write the piece
+                        // back.
+                        let mut cache = self.lock();
+                        cache.load_block(lay, idx)?;
+                        let block = cache.blocks[idx].as_mut().expect("just loaded");
+                        block.data[base + (r - blo)..base + (take_hi - blo)]
+                            .copy_from_slice(&scratch.x);
+                        block.dirty = true;
+                    }
+                    g += len;
+                    r = take_hi;
                 }
-                {
-                    let mut wc = self.wlock();
-                    wc.load_block(lay, idx)
-                        .expect("tile store I/O failed while loading a block");
-                    let data = &wc.blocks[idx].as_ref().expect("just loaded").data;
-                    scratch
-                        .winv
-                        .extend_from_slice(&data[base + (r - blo)..base + (take_hi - blo)]);
-                }
-                // Compute on the private piece — no lock held.
-                f(g, &mut scratch.x, &scratch.winv);
-                if write {
-                    // The block may have been (cleanly) evicted while the
-                    // callback ran; reload and write the piece back.
-                    let mut cache = self.lock();
-                    cache
-                        .load_block(lay, idx)
-                        .expect("tile store I/O failed while loading a block");
-                    let block = cache.blocks[idx].as_mut().expect("just loaded");
-                    block.data[base + (r - blo)..base + (take_hi - blo)]
-                        .copy_from_slice(&scratch.x);
-                    block.dirty = true;
-                }
-                g += len;
-                r = take_hi;
+                c += 1;
             }
-            c += 1;
+            Ok(())
+        })();
+        if let Err(e) = walk {
+            self.latch(e);
         }
     }
 
     fn prefetch(&self, tile: &Tile) {
+        if self.is_failed() {
+            return;
+        }
         if let Some(tx) = &self.prefetch_tx {
             let _ = tx
                 .lock()
-                .expect("prefetch sender lock poisoned")
+                .unwrap_or_else(|p| p.into_inner())
                 .send(PrefetchMsg::Tile(*tile));
         }
     }
@@ -997,13 +1473,25 @@ fn data_start(lay: &BlockLayout) -> u64 {
     HEADER_LEN + lay.n_blocks() as u64 * 8
 }
 
-/// Path of the streamed-`W` spill sibling: the store file name plus a
-/// `.w` suffix (appended, not a replaced extension, so distinct stores
-/// never collide on the same spill).
-fn w_sibling(path: &Path) -> PathBuf {
+/// `path` with `suffix` appended to the file name (appended, not a
+/// replaced extension, so distinct stores never collide on a sibling).
+fn sibling(path: &Path, suffix: &str) -> PathBuf {
     let mut name = path.as_os_str().to_owned();
-    name.push(".w");
+    name.push(suffix);
     PathBuf::from(name)
+}
+
+/// Path of the streamed-`W` spill sibling of a store file.
+fn w_sibling(path: &Path) -> PathBuf {
+    sibling(path, ".w")
+}
+
+/// Path of a store file's recovery snapshot (written by
+/// [`DiskStore::snapshot_to`] after each checkpoint): the store file
+/// name plus `.ckpt`. A resume whose live store fails verification
+/// promotes this snapshot back over the live file.
+pub fn snapshot_sibling(path: &Path) -> PathBuf {
+    sibling(path, ".ckpt")
 }
 
 /// Global packed column offsets for dimension `n` (column `c` starts at
@@ -1021,12 +1509,13 @@ fn packed_col_starts(n: usize) -> Vec<usize> {
 /// Write a fresh store file at `path` (truncating any existing one):
 /// header with a zero stamp, reserved checksum table, blocks streamed
 /// from `src(c, r)` one buffer at a time (never materializing the full
-/// matrix), then the filled-in table. Returns the open read-write handle.
+/// matrix), then the filled-in table. Returns the open read-write handle
+/// and the block checksums (the cache's resident read-verify mirror).
 fn write_store_file(
     path: &Path,
     layout: &BlockLayout,
     src: &mut dyn FnMut(usize, usize) -> f64,
-) -> Result<File, StoreError> {
+) -> Result<(File, Vec<u64>), StoreError> {
     let mut file =
         OpenOptions::new().read(true).write(true).create(true).truncate(true).open(path)?;
     file.write_all(&header_bytes(layout, 0, 0))?;
@@ -1052,7 +1541,7 @@ fn write_store_file(
         file.write_all(&sum.to_le_bytes())?;
     }
     file.flush()?;
-    Ok(file)
+    Ok((file, sums))
 }
 
 fn header_bytes(lay: &BlockLayout, pass: u64, x_fnv: u64) -> [u8; HEADER_LEN as usize] {
@@ -1081,39 +1570,35 @@ fn read_block(file: &mut File, lay: &BlockLayout, idx: usize) -> std::io::Result
     Ok(bytes_to_f64s(&bytes))
 }
 
-/// Write a block's data and re-stamp its checksum table entry.
+/// Write a block's data and re-stamp its checksum table entry. Returns
+/// the block checksum, which the caller mirrors into its resident table.
 fn write_block(
     file: &mut File,
     lay: &BlockLayout,
     idx: usize,
     data: &[f64],
-) -> std::io::Result<()> {
+) -> std::io::Result<u64> {
     debug_assert_eq!(data.len(), lay.block_len(idx));
     let bytes = f64s_to_bytes(data);
     file.seek(SeekFrom::Start(block_file_offset(lay, idx)))?;
     file.write_all(&bytes)?;
+    let sum = fnv1a64(&bytes);
     file.seek(SeekFrom::Start(HEADER_LEN + idx as u64 * 8))?;
-    file.write_all(&fnv1a64(&bytes).to_le_bytes())?;
-    Ok(())
+    file.write_all(&sum.to_le_bytes())?;
+    Ok(sum)
 }
 
-/// FNV-1a over the block-checksum table — the store fingerprint. The
-/// table is re-stamped by every [`write_block`], so hashing it reflects
-/// the data content without re-reading the `O(n²)` data region; the
-/// table↔data coupling is what [`DiskStore::open`]'s full verification
-/// pins down.
-fn hash_checksum_table(file: &mut File, lay: &BlockLayout) -> std::io::Result<u64> {
-    file.seek(SeekFrom::Start(HEADER_LEN))?;
+/// FNV-1a over the block checksums in block order — the store
+/// fingerprint, bit-identical to hashing the on-disk checksum table
+/// (which [`write_block`] keeps in lockstep with the resident mirror);
+/// the table↔data coupling is what [`DiskStore::open`]'s full
+/// verification pins down.
+fn fingerprint_of(sums: &[u64]) -> u64 {
     let mut h = Fnv1a::new();
-    let mut remaining = lay.n_blocks() as u64 * 8;
-    let mut buf = vec![0u8; 1 << 16];
-    while remaining > 0 {
-        let take = (buf.len() as u64).min(remaining) as usize;
-        file.read_exact(&mut buf[..take])?;
-        h.update(&buf[..take]);
-        remaining -= take as u64;
+    for sum in sums {
+        h.update(&sum.to_le_bytes());
     }
-    Ok(h.finish())
+    h.finish()
 }
 
 fn f64s_to_bytes(data: &[f64]) -> Vec<u8> {
@@ -1469,6 +1954,205 @@ mod tests {
             drop(s);
             let _ = std::fs::remove_file(path);
         }
+    }
+
+    #[test]
+    #[allow(unused_unsafe)]
+    fn transient_faults_heal_bitwise_identical() {
+        // The same churn-heavy mutation walk as
+        // `leases_see_and_mutate_the_right_entries_under_churn`, but
+        // under an aggressive transient-fault plan: EIO on reads and
+        // writes, bit-flips on reads. With a retry budget, the final
+        // content must be bitwise identical to the fault-free walk, and
+        // the retry counter must prove faults actually fired.
+        let (n, b) = (17usize, 4usize);
+        let mut rng = Rng::new(7);
+        let d = PackedSym::from_fn(n, |_, _| rng.f64_in(-3.0, 3.0));
+        let winv = vec![1.0; d.len()];
+        let path = tmp_path("faulty");
+        let src = d.clone();
+        let plan = FaultPlan::parse("seed=5,read-eio=0.05,write-eio=0.03,bitflip=0.03")
+            .expect("plan");
+        let tuning = StoreTuning { faults: Some(Arc::new(plan)), retries: 10 };
+        let store = DiskStore::create_with(&path, n, b, 64 * 8, winv, &mut |c, r| {
+            src.get(c, r)
+        }, tuning)
+        .expect("create");
+        let mut flat = d.as_slice().to_vec();
+        let m = PackedSym::zeros(n);
+        let schedule = Schedule::new(n, b);
+        let mut scratch = TileScratch::default();
+        for _pass in 0..2 {
+            for wave in schedule.waves() {
+                for tile in wave {
+                    // SAFETY: single thread owns every tile.
+                    unsafe {
+                        store.with_tile(tile, &mut scratch, &mut |x, cols, _| {
+                            for_each_triplet(tile, b, |i, j, k| {
+                                let p = cols[i] + (j - i - 1);
+                                // SAFETY: in-bounds, single thread.
+                                unsafe {
+                                    let v = x.get(p) * 0.5 + (i + j + k) as f64 * 0.001;
+                                    x.set(p, v);
+                                    flat[m.idx(i, j)] = v;
+                                }
+                            });
+                        });
+                    }
+                }
+            }
+        }
+        store.health().expect("retries must absorb every transient fault");
+        assert_eq!(store.read_full().expect("read_full"), flat);
+        let stats = store.stats();
+        assert!(stats.retries > 0, "the fault plan must actually have fired");
+        let notes = store.drain_retries();
+        assert!(!notes.is_empty(), "healed faults must leave retry notes");
+        assert!(store.drain_retries().is_empty(), "drain must consume the notes");
+        let path = store.path().to_path_buf();
+        drop(store);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    #[allow(unused_unsafe)]
+    fn permanent_failure_latches_and_parks_leases() {
+        // A read that fails on every retry must not panic: the lease
+        // parks, later leases are no-ops, and `health()` hands back the
+        // typed error exactly once.
+        let (n, b) = (12usize, 3usize);
+        let mut rng = Rng::new(9);
+        let d = PackedSym::from_fn(n, |_, _| rng.f64_in(-1.0, 1.0));
+        let winv = vec![1.0; d.len()];
+        let path = tmp_path("permfault");
+        let src = d.clone();
+        let plan = FaultPlan::parse("seed=2,read-eio=1.0").expect("plan");
+        let tuning = StoreTuning { faults: Some(Arc::new(plan)), retries: 2 };
+        let store = DiskStore::create_with(&path, n, b, 1 << 20, winv, &mut |c, r| {
+            src.get(c, r)
+        }, tuning)
+        .expect("create never reads blocks, so it must succeed");
+        assert!(store.health().is_ok());
+        let schedule = Schedule::new(n, b);
+        let tile = schedule.waves()[0][0];
+        let mut scratch = TileScratch::default();
+        let mut ran = false;
+        // SAFETY: single thread owns the tile.
+        unsafe {
+            store.with_tile(&tile, &mut scratch, &mut |_x, _cols, _wv| ran = true);
+        }
+        assert!(!ran, "a failed gather must not run the kernel");
+        assert!(store.is_failed());
+        let err = store.health().expect_err("latch must surface the error");
+        assert!(matches!(err, StoreError::Io(_)), "got {err}");
+        // Later leases park silently; a later poll reports generically.
+        unsafe {
+            store.with_tile(&tile, &mut scratch, &mut |_x, _cols, _wv| ran = true);
+        }
+        assert!(!ran);
+        assert!(store.health().is_err());
+        let path = store.path().to_path_buf();
+        drop(store);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn enospc_is_never_retried() {
+        let plan = FaultPlan::parse("seed=1,enospc=1.0").expect("plan");
+        let e: StoreError = plan.write_error(0).expect("always fires").into();
+        assert!(!retryable(&e), "a full disk does not heal on backoff");
+        let eio: StoreError = std::io::Error::from_raw_os_error(5).into();
+        assert!(retryable(&eio));
+        assert!(retryable(&corrupt("torn read")));
+        assert!(!retryable(&StoreError::BadMagic));
+        assert!(!retryable(&StoreError::Locked("x".into())));
+    }
+
+    #[test]
+    fn lockfile_refuses_double_open_and_breaks_stale() {
+        let (store, want) = make("lockfile", 10, 3, 1 << 20, 21);
+        let path = store.path().to_path_buf();
+        let winv = vec![1.0; want.len()];
+        // A second open while the first handle is live must refuse.
+        assert!(matches!(
+            DiskStore::open(&path, 1 << 20, winv.clone()),
+            Err(StoreError::Locked(_))
+        ));
+        store.flush_and_stamp(1).expect("stamp");
+        drop(store);
+        // A stale lock (dead pid) from a crashed run is broken silently.
+        std::fs::write(sibling(&path, ".lock"), b"999999999").expect("plant stale lock");
+        let reopened = DiskStore::open(&path, 1 << 20, winv).expect("stale lock must break");
+        drop(reopened);
+        assert!(!sibling(&path, ".lock").exists(), "drop must release the lock");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn clean_stale_artifacts_sweeps_crash_leftovers() {
+        let dir = std::env::temp_dir()
+            .join(format!("metric_proj_sweep_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        // Crashed-run leftovers: a staging tmp, an orphaned spill, a
+        // stale lock...
+        std::fs::write(dir.join("ck.bin.tmp"), b"partial").expect("write");
+        std::fs::write(dir.join("x.tiles.w"), b"orphan spill").expect("write");
+        std::fs::write(dir.join("x.tiles.lock"), b"999999999").expect("write");
+        // ...plus a live solve's spill (lock held by this process) and
+        // artifacts that must always survive.
+        std::fs::write(dir.join("y.tiles.w"), b"live spill").expect("write");
+        std::fs::write(dir.join("y.tiles.lock"), std::process::id().to_string())
+            .expect("write");
+        std::fs::write(dir.join("x.tiles"), b"store").expect("write");
+        std::fs::write(dir.join("x.tiles.ckpt"), b"snapshot").expect("write");
+        let mut removed = clean_stale_artifacts(&dir).expect("sweep");
+        removed.sort();
+        assert_eq!(
+            removed,
+            vec![dir.join("ck.bin.tmp"), dir.join("x.tiles.lock"), dir.join("x.tiles.w")]
+        );
+        assert!(dir.join("y.tiles.w").exists(), "live-locked spill must survive");
+        assert!(dir.join("y.tiles.lock").exists());
+        assert!(dir.join("x.tiles").exists(), "store files are never swept");
+        assert!(dir.join("x.tiles.ckpt").exists(), "snapshots are never swept");
+        // A missing directory is an empty sweep, not an error.
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(clean_stale_artifacts(&dir).expect("missing dir").is_empty());
+    }
+
+    #[test]
+    #[allow(unused_unsafe)]
+    fn snapshot_promotes_over_a_drifted_store() {
+        // Snapshot after a stamp, drift the live store past it, then
+        // promote the snapshot back: the reopened store must carry the
+        // snapshot's stamp and content.
+        let (store, want) = make("snap", 11, 3, 1 << 20, 13);
+        let path = store.path().to_path_buf();
+        let f1 = store.flush_and_stamp(4).expect("stamp");
+        let snap = snapshot_sibling(&path);
+        store.snapshot_to(&snap).expect("snapshot");
+        // Drift: mutate one entry and stamp a later pass.
+        let schedule = Schedule::new(11, 3);
+        let tile = schedule.waves()[0][0];
+        let mut scratch = TileScratch::default();
+        unsafe {
+            store.with_tile(&tile, &mut scratch, &mut |x, cols, _| {
+                let p = cols[tile.i_lo] + (tile.k_lo - tile.i_lo - 1);
+                // SAFETY: in-bounds lease addressing, single thread.
+                unsafe { x.set(p, x.get(p) + 1.0) };
+            });
+        }
+        store.flush_and_stamp(5).expect("stamp");
+        drop(store);
+        std::fs::copy(&snap, &path).expect("promote");
+        let winv = vec![1.0; want.len()];
+        let reopened = DiskStore::open(&path, 1 << 20, winv).expect("reopen");
+        assert_eq!(reopened.stamp(), (4, f1), "promotion restores the snapshot stamp");
+        assert_eq!(reopened.read_full().expect("read_full"), want);
+        drop(reopened);
+        let _ = std::fs::remove_file(&snap);
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

@@ -1,0 +1,287 @@
+//! Seeded, deterministic fault injection for the disk tile store.
+//!
+//! A [`FaultPlan`] decides, per block-I/O operation, whether to inject a
+//! failure: a transient read/write `EIO`, an in-memory checksum bit-flip
+//! (a torn or silently-corrupted read, caught by the store's resident
+//! checksum table), an `ENOSPC` on write-back (never retried — a full
+//! disk does not heal on a 2 ms backoff), or a latency spike. Every
+//! decision is a pure hash of `(seed, op index, fault kind)`, so a plan
+//! replays the same fault schedule for the same operation sequence —
+//! tests and the nightly fault-matrix CI job exercise exact failure
+//! paths, not roulette. Plans are parsed from a compact spec string
+//! (CLI `--fault-plan` / env `METRIC_PROJ_FAULTS`):
+//!
+//! ```text
+//! seed=42,read-eio=0.02,write-eio=0.01,bitflip=0.005,latency=0.05,latency-ms=5,after=200
+//! ```
+//!
+//! Rates are probabilities in `[0, 1]` drawn independently per
+//! operation; `after=N` arms the plan only from the `N`-th operation on,
+//! which models a device that works for a while and then degrades —
+//! `read-eio=1.0,after=N` is a *permanent* failure (every retry faults
+//! again and the retry budget unwinds into a typed error).
+//!
+//! Faults are injected at exactly one layer: the disk store's block
+//! read/write wrappers (`rust/src/matrix/store/disk.rs`). Setup and
+//! teardown I/O (header writes, spill creation, open-time verification)
+//! is not in scope — the plan drills the *steady-state* solve loop,
+//! which is where hours-long out-of-core runs live.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Errno for a transient I/O failure.
+const EIO: i32 = 5;
+/// Errno for "no space left on device".
+const ENOSPC: i32 = 28;
+
+/// A deterministic fault-injection plan (see the [module docs](self)).
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    /// Seed mixed into every per-operation draw.
+    pub seed: u64,
+    /// Probability of a transient `EIO` on a block read.
+    pub read_eio: f64,
+    /// Probability of a transient `EIO` on a block write.
+    pub write_eio: f64,
+    /// Probability of flipping one bit of a block as it is read (caught
+    /// by the store's checksum verification, then retried).
+    pub bitflip: f64,
+    /// Probability of `ENOSPC` on a block write (non-retryable).
+    pub enospc: f64,
+    /// Probability of a latency spike on any block operation.
+    pub latency: f64,
+    /// Duration of one latency spike, in milliseconds.
+    pub latency_ms: u64,
+    /// Operations to pass through cleanly before the plan arms.
+    pub after: u64,
+    /// Global operation counter (shared by every plane of every store
+    /// holding this plan).
+    ops: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Parse a `key=value,...` spec string. Keys: `seed`, `read-eio`,
+    /// `write-eio`, `bitflip`, `enospc`, `latency` (rates in `[0, 1]`),
+    /// `latency-ms`, `after` (integers). Unknown keys are errors.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault spec `{part}` is not key=value"))?;
+            let rate = |v: &str| -> Result<f64, String> {
+                let r: f64 =
+                    v.parse().map_err(|_| format!("fault rate `{v}` is not a number"))?;
+                if !(0.0..=1.0).contains(&r) {
+                    return Err(format!("fault rate `{v}` is outside [0, 1]"));
+                }
+                Ok(r)
+            };
+            let int = |v: &str| -> Result<u64, String> {
+                v.parse().map_err(|_| format!("fault value `{v}` is not an integer"))
+            };
+            match key.trim() {
+                "seed" => plan.seed = int(value)?,
+                "read-eio" => plan.read_eio = rate(value)?,
+                "write-eio" => plan.write_eio = rate(value)?,
+                "bitflip" => plan.bitflip = rate(value)?,
+                "enospc" => plan.enospc = rate(value)?,
+                "latency" => plan.latency = rate(value)?,
+                "latency-ms" => plan.latency_ms = int(value)?,
+                "after" => plan.after = int(value)?,
+                other => return Err(format!("unknown fault key `{other}`")),
+            }
+        }
+        if plan.latency > 0.0 && plan.latency_ms == 0 {
+            plan.latency_ms = 10;
+        }
+        Ok(plan)
+    }
+
+    /// Claim the next operation id. Each block read/write claims exactly
+    /// one id and derives all of its fault draws from it.
+    pub fn next_op(&self) -> u64 {
+        self.ops.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Operations drawn so far.
+    pub fn ops_seen(&self) -> u64 {
+        self.ops.load(Ordering::Relaxed)
+    }
+
+    /// Uniform draw in `[0, 1)` for `(op, salt)` — a pure function of
+    /// the plan seed, so schedules replay.
+    fn draw(&self, op: u64, salt: u64) -> f64 {
+        let h = crate::util::hash::fnv1a64(
+            &[self.seed.to_le_bytes(), op.to_le_bytes(), salt.to_le_bytes()].concat(),
+        );
+        // 53 high bits -> uniform in [0, 1).
+        (h >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    fn armed(&self, op: u64) -> bool {
+        op >= self.after
+    }
+
+    /// Sleep out a latency spike, if this operation drew one.
+    pub fn pace(&self, op: u64) {
+        if self.armed(op) && self.latency > 0.0 && self.draw(op, 1) < self.latency {
+            std::thread::sleep(std::time::Duration::from_millis(self.latency_ms));
+        }
+    }
+
+    /// The injected error for a block read, if any.
+    pub fn read_error(&self, op: u64) -> Option<std::io::Error> {
+        if self.armed(op) && self.draw(op, 2) < self.read_eio {
+            return Some(std::io::Error::from_raw_os_error(EIO));
+        }
+        None
+    }
+
+    /// The injected error for a block write, if any. `ENOSPC` wins over
+    /// the transient `EIO` when both are drawn.
+    pub fn write_error(&self, op: u64) -> Option<std::io::Error> {
+        if !self.armed(op) {
+            return None;
+        }
+        if self.draw(op, 3) < self.enospc {
+            return Some(std::io::Error::from_raw_os_error(ENOSPC));
+        }
+        if self.draw(op, 4) < self.write_eio {
+            return Some(std::io::Error::from_raw_os_error(EIO));
+        }
+        None
+    }
+
+    /// Flip one deterministic bit of a just-read block, if this
+    /// operation drew a bit-flip. Returns whether a flip happened.
+    pub fn corrupt_read(&self, op: u64, data: &mut [f64]) -> bool {
+        if data.is_empty() || !self.armed(op) || self.draw(op, 5) >= self.bitflip {
+            return false;
+        }
+        let h = crate::util::hash::fnv1a64(
+            &[self.seed.to_le_bytes(), op.to_le_bytes(), 6u64.to_le_bytes()].concat(),
+        );
+        let entry = (h as usize) % data.len();
+        let bit = (h >> 32) % 64;
+        data[entry] = f64::from_bits(data[entry].to_bits() ^ (1u64 << bit));
+        true
+    }
+
+    /// Whether the plan can inject anything at all.
+    pub fn is_active(&self) -> bool {
+        self.read_eio > 0.0
+            || self.write_eio > 0.0
+            || self.bitflip > 0.0
+            || self.enospc > 0.0
+            || self.latency > 0.0
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "seed={}", self.seed)?;
+        for (key, rate) in [
+            ("read-eio", self.read_eio),
+            ("write-eio", self.write_eio),
+            ("bitflip", self.bitflip),
+            ("enospc", self.enospc),
+            ("latency", self.latency),
+        ] {
+            if rate > 0.0 {
+                write!(f, ",{key}={rate}")?;
+            }
+        }
+        if self.latency > 0.0 {
+            write!(f, ",latency-ms={}", self.latency_ms)?;
+        }
+        if self.after > 0 {
+            write!(f, ",after={}", self.after)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_through_display() {
+        let spec = "seed=42,read-eio=0.02,bitflip=0.005,latency=0.05,latency-ms=5,after=200";
+        let plan = FaultPlan::parse(spec).expect("parse");
+        assert_eq!(plan.seed, 42);
+        assert_eq!(plan.read_eio, 0.02);
+        assert_eq!(plan.bitflip, 0.005);
+        assert_eq!(plan.latency_ms, 5);
+        assert_eq!(plan.after, 200);
+        let again = FaultPlan::parse(&plan.to_string()).expect("reparse");
+        assert_eq!(again.read_eio, plan.read_eio);
+        assert_eq!(again.after, plan.after);
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(FaultPlan::parse("read-eio").is_err());
+        assert!(FaultPlan::parse("read-eio=2.0").is_err());
+        assert!(FaultPlan::parse("read-eio=-0.5").is_err());
+        assert!(FaultPlan::parse("warp-core=0.5").is_err());
+        assert!(FaultPlan::parse("seed=banana").is_err());
+        assert!(FaultPlan::parse("").expect("empty is a no-fault plan").is_active() == false);
+    }
+
+    #[test]
+    fn draws_are_deterministic_and_rate_shaped() {
+        let plan = FaultPlan::parse("seed=7,read-eio=0.25").expect("parse");
+        let twin = FaultPlan::parse("seed=7,read-eio=0.25").expect("parse");
+        let mut faults = 0usize;
+        for op in 0..10_000u64 {
+            let a = plan.read_error(op).is_some();
+            let b = twin.read_error(op).is_some();
+            assert_eq!(a, b, "op {op} must replay identically");
+            faults += a as usize;
+        }
+        // 2500 expected; allow a generous deterministic band.
+        assert!((1800..3200).contains(&faults), "rate 0.25 drew {faults}/10000");
+    }
+
+    #[test]
+    fn after_gates_every_fault_kind() {
+        let plan =
+            FaultPlan::parse("seed=1,read-eio=1.0,write-eio=1.0,enospc=1.0,bitflip=1.0,after=100")
+                .expect("parse");
+        let mut data = [1.0f64; 4];
+        for op in 0..100u64 {
+            assert!(plan.read_error(op).is_none());
+            assert!(plan.write_error(op).is_none());
+            assert!(!plan.corrupt_read(op, &mut data));
+        }
+        assert!(plan.read_error(100).is_some());
+        assert!(plan.write_error(100).is_some());
+        assert_eq!(plan.write_error(100).unwrap().raw_os_error(), Some(ENOSPC));
+        assert!(plan.corrupt_read(101, &mut data));
+    }
+
+    #[test]
+    fn bitflip_changes_exactly_one_bit() {
+        let plan = FaultPlan::parse("seed=3,bitflip=1.0").expect("parse");
+        let before = [1.5f64, -2.25, 0.0, 99.0];
+        let mut after = before;
+        assert!(plan.corrupt_read(0, &mut after));
+        let diffs: u32 = before
+            .iter()
+            .zip(after.iter())
+            .map(|(a, b)| (a.to_bits() ^ b.to_bits()).count_ones())
+            .sum();
+        assert_eq!(diffs, 1, "exactly one bit must flip");
+    }
+
+    #[test]
+    fn next_op_counts_up() {
+        let plan = FaultPlan::default();
+        assert_eq!(plan.next_op(), 0);
+        assert_eq!(plan.next_op(), 1);
+        assert_eq!(plan.ops_seen(), 2);
+    }
+}

@@ -62,15 +62,21 @@
 //! [`for_each_tile_col`]: crate::solver::tiling::for_each_tile_col
 
 pub mod disk;
+pub mod faults;
 pub mod layout;
 pub mod mem;
 
-pub use disk::{DiskStore, StoreError, StoreStats};
+pub use disk::{
+    clean_stale_artifacts, snapshot_sibling, DiskStore, RetryNote, StoreError, StoreStats,
+    StoreTuning, DEFAULT_STORE_RETRIES,
+};
+pub use faults::FaultPlan;
 pub use mem::MemStore;
 
 use crate::solver::schedule::Tile;
 use crate::util::shared::SharedMut;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// One leased per-column segment of a tile footprint (disk gathers).
 #[derive(Clone, Copy, Debug)]
@@ -280,11 +286,22 @@ pub struct StoreCfg {
     /// single block still work — the block being copied is exempt from
     /// eviction — they just churn harder.
     pub budget_bytes: usize,
+    /// Deterministic fault injection at the disk store's block I/O layer
+    /// (`--fault-plan` / `METRIC_PROJ_FAULTS`); `None` in production.
+    pub faults: Option<Arc<FaultPlan>>,
+    /// Bounded retry budget per block operation (`--store-retries`).
+    pub retries: u32,
 }
 
 impl Default for StoreCfg {
     fn default() -> Self {
-        StoreCfg { kind: StoreKind::Mem, dir: PathBuf::from("store"), budget_bytes: 64 << 20 }
+        StoreCfg {
+            kind: StoreKind::Mem,
+            dir: PathBuf::from("store"),
+            budget_bytes: 64 << 20,
+            faults: None,
+            retries: DEFAULT_STORE_RETRIES,
+        }
     }
 }
 
@@ -297,12 +314,22 @@ impl StoreCfg {
     /// A disk configuration rooted at `dir` with the given cache budget
     /// in bytes.
     pub fn disk(dir: impl Into<PathBuf>, budget_bytes: usize) -> StoreCfg {
-        StoreCfg { kind: StoreKind::Disk, dir: dir.into(), budget_bytes }
+        StoreCfg {
+            kind: StoreKind::Disk,
+            dir: dir.into(),
+            budget_bytes,
+            ..StoreCfg::default()
+        }
     }
 
     /// Path of the tile file this configuration addresses.
     pub fn x_path(&self) -> PathBuf {
         self.dir.join("x.tiles")
+    }
+
+    /// The robustness tuning handed to [`DiskStore`] constructors.
+    pub fn tuning(&self) -> StoreTuning {
+        StoreTuning { faults: self.faults.clone(), retries: self.retries }
     }
 }
 

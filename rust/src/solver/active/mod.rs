@@ -45,12 +45,16 @@ use self::set::{decode_key, ActiveSet};
 use self::sweep::{discovery_sweep_timed, SweepReport};
 use super::backing::XBacking;
 use super::checkpoint::{CheckRecord, SolverState};
-use super::dykstra_parallel::run_pair_phase_timed;
+use super::dykstra_parallel::{emit_retries, run_pair_phase_timed};
+use super::error::SolveError;
 use super::nearness::{NearnessOpts, NearnessSolution};
 use super::projection::visit_triplet;
 use super::schedule::{Assignment, Schedule};
 use super::termination::{compute_residuals_stored, compute_residuals_trusting_sweep_stored};
-use super::{CcState, Residuals, Solution, SolveOpts, Strategy, SweepBackend, SweepPolicy};
+use super::watchdog::Watchdog;
+use super::{
+    CcState, OnInterrupt, Residuals, Solution, SolveOpts, Strategy, SweepBackend, SweepPolicy,
+};
 use crate::instance::metric_nearness::MetricNearnessInstance;
 use crate::instance::CcLpInstance;
 use crate::matrix::store::{StoreCfg, TileScratch, TileStore};
@@ -272,13 +276,16 @@ pub fn solve_cc_stored(
     resume_from: Option<&SolverState>,
     on_checkpoint: &mut dyn FnMut(&SolverState),
 ) -> anyhow::Result<Solution> {
-    solve_cc_traced(inst, opts, store_cfg, resume_from, on_checkpoint, &NullRecorder)
+    Ok(solve_cc_traced(inst, opts, store_cfg, resume_from, on_checkpoint, &NullRecorder)?)
 }
 
 /// [`solve_cc_stored`] with a telemetry [`Recorder`] attached. All
 /// instrumentation is gated on [`Recorder::enabled`], so passing
 /// [`NullRecorder`] reproduces the untraced solve bitwise (pinned by
 /// `tests/telemetry.rs`).
+///
+/// This is the typed-error boundary: store failures, interrupts, and
+/// watchdog trips come back as the matching [`SolveError`] variant.
 pub fn solve_cc_traced(
     inst: &CcLpInstance,
     opts: &SolveOpts,
@@ -286,7 +293,7 @@ pub fn solve_cc_traced(
     resume_from: Option<&SolverState>,
     on_checkpoint: &mut dyn FnMut(&SolverState),
     rec: &dyn Recorder,
-) -> anyhow::Result<Solution> {
+) -> Result<Solution, SolveError> {
     let params = ActiveParams::from_strategy(opts.strategy)
         .expect("active::solve_cc requires SolveOpts::strategy = Strategy::Active");
     let mut cadence = SweepCadence::new(params.policy(opts.sweep_policy));
@@ -335,6 +342,7 @@ pub fn solve_cc_traced(
     let mut exact_at_break: Option<Residuals> = None;
     let pairs_per_pass = (inst.n * (inst.n - 1) / 2) as u64;
     let mut probe = PhaseProbe::new(rec, p);
+    let mut watchdog = Watchdog::new(opts.watchdog_stall);
 
     for pass in start_pass..opts.max_passes {
         let t0 = std::time::Instant::now();
@@ -413,6 +421,10 @@ pub fn solve_cc_traced(
             });
             probe.finish(pass_no, PhaseName::Pair, pt, pairs_per_pass, ws);
         }
+        // A failed lease parks inside the wave (barriers cannot unwind
+        // mid-pass); the latched error surfaces here, once per pass.
+        backing.health()?;
+        emit_retries(&probe, pass_no, backing.drain_retries());
         passes_done = pass + 1;
         if opts.track_pass_times {
             pass_times.push(t0.elapsed().as_secs_f64());
@@ -448,6 +460,7 @@ pub fn solve_cc_traced(
                 max_violation: r.max_violation,
                 rel_gap: r.rel_gap,
             });
+            watchdog.observe(passes_done, r.max_violation, r.rel_gap, &history)?;
             if r.max_violation <= opts.tol_violation && r.rel_gap.abs() <= opts.tol_gap {
                 let pt = probe.start();
                 let exact = backing.with_store(&state.col_starts, &state.winv, |store| {
@@ -507,6 +520,21 @@ pub fn solve_cc_traced(
                 triplet_visits,
                 active_triplets: active.len() as u64,
             });
+        }
+        if opts.on_interrupt == OnInterrupt::Checkpoint && crate::util::interrupt::interrupted() {
+            let checkpointed = opts.checkpoint_every > 0;
+            if checkpointed && last_saved != passes_done {
+                on_checkpoint(&capture_cc_active_backed(
+                    &state,
+                    &mut backing,
+                    &mut active,
+                    passes_done,
+                    triplet_visits,
+                    next_check,
+                    &history,
+                )?);
+            }
+            return Err(SolveError::Interrupted { pass: passes_done, checkpointed });
         }
         if stop {
             break;
@@ -604,7 +632,7 @@ fn capture_cc_active_backed(
     triplet_visits: u64,
     next_check: usize,
     history: &[CheckRecord],
-) -> anyhow::Result<SolverState> {
+) -> Result<SolverState, SolveError> {
     Ok(match backing {
         XBacking::Mem { x } => SolverState::capture_cc_active(
             state,
@@ -617,6 +645,7 @@ fn capture_cc_active_backed(
         ),
         XBacking::Disk { store } => {
             let x_fnv = store.flush_and_stamp(passes_done as u64)?;
+            store.snapshot()?;
             SolverState::capture_cc_active_external(
                 state,
                 x_fnv,
@@ -676,13 +705,16 @@ pub fn solve_nearness_stored(
     resume_from: Option<&SolverState>,
     on_checkpoint: &mut dyn FnMut(&SolverState),
 ) -> anyhow::Result<NearnessSolution> {
-    solve_nearness_traced(inst, opts, store_cfg, resume_from, on_checkpoint, &NullRecorder)
+    Ok(solve_nearness_traced(inst, opts, store_cfg, resume_from, on_checkpoint, &NullRecorder)?)
 }
 
 /// [`solve_nearness_stored`] with a telemetry [`Recorder`] attached.
 /// All instrumentation is gated on [`Recorder::enabled`], so passing
 /// [`NullRecorder`] reproduces the untraced solve bitwise (pinned by
 /// `tests/telemetry.rs`).
+///
+/// This is the typed-error boundary: store failures, interrupts, and
+/// watchdog trips come back as the matching [`SolveError`] variant.
 pub fn solve_nearness_traced(
     inst: &MetricNearnessInstance,
     opts: &NearnessOpts,
@@ -690,7 +722,7 @@ pub fn solve_nearness_traced(
     resume_from: Option<&SolverState>,
     on_checkpoint: &mut dyn FnMut(&SolverState),
     rec: &dyn Recorder,
-) -> anyhow::Result<NearnessSolution> {
+) -> Result<NearnessSolution, SolveError> {
     let params = ActiveParams::from_strategy(opts.strategy)
         .expect("active::solve_nearness requires NearnessOpts::strategy = Strategy::Active");
     let mut cadence = SweepCadence::new(params.policy(opts.sweep_policy));
@@ -730,6 +762,7 @@ pub fn solve_nearness_traced(
     // change between that scan and the end of the loop).
     let mut exact_at_break: Option<f64> = None;
     let mut probe = PhaseProbe::new(rec, p);
+    let mut watchdog = Watchdog::new(opts.watchdog_stall);
 
     for pass in start_pass..opts.max_passes {
         let t_pass = probe.start();
@@ -796,6 +829,10 @@ pub fn solve_nearness_traced(
                 });
             }
         }
+        // A failed lease parks inside the wave (barriers cannot unwind
+        // mid-pass); the latched error surfaces here, once per pass.
+        backing.health()?;
+        emit_retries(&probe, pass_no, backing.drain_retries());
         passes_done = pass + 1;
         // The sweep's mid-pass measurement is a cheap screen (later
         // projections in the same sweep can re-break rows measured
@@ -820,6 +857,7 @@ pub fn solve_nearness_traced(
                 max_violation: screened,
                 rel_gap: 0.0,
             });
+            watchdog.observe(passes_done, screened, 0.0, &history)?;
             if screened <= opts.tol_violation {
                 let pt = probe.start();
                 let v = backing.violation(&col_starts, n, p, &schedule);
@@ -870,6 +908,21 @@ pub fn solve_nearness_traced(
                 triplet_visits,
                 active_triplets: active.len() as u64,
             });
+        }
+        if opts.on_interrupt == OnInterrupt::Checkpoint && crate::util::interrupt::interrupted() {
+            let checkpointed = opts.checkpoint_every > 0;
+            if checkpointed && last_saved != passes_done {
+                on_checkpoint(&capture_nearness_active_backed(
+                    inst,
+                    &mut backing,
+                    &mut active,
+                    passes_done,
+                    triplet_visits,
+                    next_check,
+                    &history,
+                )?);
+            }
+            return Err(SolveError::Interrupted { pass: passes_done, checkpointed });
         }
         if stop {
             break;
@@ -956,7 +1009,7 @@ fn capture_nearness_active_backed(
     triplet_visits: u64,
     next_check: usize,
     history: &[CheckRecord],
-) -> anyhow::Result<SolverState> {
+) -> Result<SolverState, SolveError> {
     Ok(match backing {
         XBacking::Mem { x } => SolverState::capture_nearness_active(
             inst,
@@ -969,6 +1022,7 @@ fn capture_nearness_active_backed(
         ),
         XBacking::Disk { store } => {
             let x_fnv = store.flush_and_stamp(passes_done as u64)?;
+            store.snapshot()?;
             SolverState::capture_nearness_active_external(
                 inst,
                 x_fnv,

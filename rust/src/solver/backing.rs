@@ -17,8 +17,11 @@ use super::checkpoint::SolverState;
 use super::schedule::Schedule;
 use super::CcState;
 use crate::instance::metric_nearness::MetricNearnessInstance;
-use crate::matrix::store::{DiskStore, MemStore, StoreCfg, StoreKind, TileStore};
-use anyhow::bail;
+use crate::matrix::store::{
+    snapshot_sibling, DiskStore, MemStore, RetryNote, StoreCfg, StoreError, StoreKind,
+    StoreTuning, TileStore,
+};
+use anyhow::{bail, Context as _};
 use std::path::Path;
 
 /// Creating a fresh store must never clobber an existing file: an
@@ -63,6 +66,49 @@ fn verify_stamp(store: &DiskStore, st: &SolverState, path: &Path) -> anyhow::Res
         );
     }
     Ok(())
+}
+
+/// Open a store for an external-x resume, falling back to its `.ckpt`
+/// snapshot when the live file is unusable. A solve that died mid-pass
+/// leaves the live store drifted past (or torn relative to) the
+/// checkpoint it must match; the snapshot taken at the checkpoint's
+/// `flush_and_stamp` is the matching copy, so it is promoted over the
+/// live file and the open retried. A [`StoreError::Locked`] failure is
+/// never promoted over — another live process owns the store.
+fn open_verified(
+    path: &Path,
+    budget_bytes: usize,
+    winv: &[f64],
+    st: &SolverState,
+    tuning: &StoreTuning,
+) -> anyhow::Result<DiskStore> {
+    let first = match DiskStore::open_with(path, budget_bytes, winv.to_vec(), tuning.clone()) {
+        Ok(store) => match verify_stamp(&store, st, path) {
+            Ok(()) => return Ok(store),
+            // `store` drops here, releasing its lockfile before the
+            // snapshot is copied over the live file below.
+            Err(e) => e,
+        },
+        Err(e @ StoreError::Locked(_)) => return Err(anyhow::Error::from(e)),
+        Err(e) => anyhow::Error::from(e),
+    };
+    let snap = snapshot_sibling(path);
+    if !snap.exists() {
+        return Err(first.context(format!(
+            "store {} cannot resume this checkpoint and no snapshot exists beside it",
+            path.display()
+        )));
+    }
+    crate::telemetry::warn(&format!(
+        "store {} cannot resume this checkpoint ({first}); promoting snapshot {}",
+        path.display(),
+        snap.display()
+    ));
+    std::fs::copy(&snap, path)
+        .with_context(|| format!("promoting store snapshot {}", snap.display()))?;
+    let store = DiskStore::open_with(path, budget_bytes, winv.to_vec(), tuning.clone())?;
+    verify_stamp(&store, st, path)?;
+    Ok(store)
 }
 
 /// Where the packed distance variables of a solve live — resident vector
@@ -116,36 +162,44 @@ impl XBacking {
             StoreKind::Disk => {
                 let winv: Vec<f64> = inst.w.as_slice().iter().map(|&v| 1.0 / v).collect();
                 let path = cfg.x_path();
+                let tuning = cfg.tuning();
                 match resume {
                     Some(st) if st.x_external => {
-                        let store = DiskStore::open(&path, cfg.budget_bytes.max(8), winv)?;
-                        verify_stamp(&store, st, &path)?;
+                        let store = open_verified(
+                            &path,
+                            cfg.budget_bytes.max(8),
+                            &winv,
+                            st,
+                            &tuning,
+                        )?;
                         Ok(XBacking::Disk { store })
                     }
                     Some(st) => {
                         refuse_store_overwrite(&path)?;
                         let src = &st.x;
                         let cs = inst.d.col_starts();
-                        let store = DiskStore::create(
+                        let store = DiskStore::create_with(
                             &path,
                             inst.n,
                             block,
                             cfg.budget_bytes.max(8),
                             winv,
                             &mut |c, r| src[cs[c] + (r - c - 1)],
+                            tuning,
                         )?;
                         Ok(XBacking::Disk { store })
                     }
                     None => {
                         refuse_store_overwrite(&path)?;
                         let d = &inst.d;
-                        let store = DiskStore::create(
+                        let store = DiskStore::create_with(
                             &path,
                             inst.n,
                             block,
                             cfg.budget_bytes.max(8),
                             winv,
                             &mut |c, r| d.get(c, r),
+                            tuning,
                         )?;
                         Ok(XBacking::Disk { store })
                     }
@@ -186,22 +240,29 @@ impl XBacking {
                 // never through CcState::winv (left empty).
                 let winv = std::mem::take(&mut state.winv);
                 let path = cfg.x_path();
+                let tuning = cfg.tuning();
                 match resume {
                     Some(st) if st.x_external => {
-                        let store = DiskStore::open(&path, cfg.budget_bytes.max(8), winv)?;
-                        verify_stamp(&store, st, &path)?;
+                        let store = open_verified(
+                            &path,
+                            cfg.budget_bytes.max(8),
+                            &winv,
+                            st,
+                            &tuning,
+                        )?;
                         Ok(XBacking::Disk { store })
                     }
                     _ => {
                         refuse_store_overwrite(&path)?;
                         let cs = &state.col_starts;
-                        let store = DiskStore::create(
+                        let store = DiskStore::create_with(
                             &path,
                             state.n,
                             block,
                             cfg.budget_bytes.max(8),
                             winv,
                             &mut |c, r| x[cs[c] + (r - c - 1)],
+                            tuning,
                         )?;
                         Ok(XBacking::Disk { store })
                     }
@@ -245,13 +306,15 @@ impl XBacking {
     }
 
     /// Materialize the packed iterate (`O(n²)` resident — final
-    /// extraction only).
-    pub(crate) fn extract(&self) -> anyhow::Result<Vec<f64>> {
+    /// extraction only). Typed so an extraction-time store failure
+    /// surfaces as [`SolveError::Store`](super::SolveError::Store) in
+    /// the drivers.
+    pub(crate) fn extract(&self) -> Result<Vec<f64>, StoreError> {
         match self {
             XBacking::Mem { x } => Ok(x.clone()),
             XBacking::Disk { store } => {
                 store.flush()?;
-                Ok(store.read_full()?)
+                store.read_full()
             }
         }
     }
@@ -262,6 +325,37 @@ impl XBacking {
         match self {
             XBacking::Mem { .. } => None,
             XBacking::Disk { store } => Some(store.stats()),
+        }
+    }
+
+    /// Poll the disk backing's first-error latch (always healthy for the
+    /// resident path). Drivers call this once per pass: barrier-phased
+    /// leases cannot unwind mid-wave, so a failed store parks its leases
+    /// and the driver discovers the latched error here.
+    pub(crate) fn health(&self) -> Result<(), StoreError> {
+        match self {
+            XBacking::Mem { .. } => Ok(()),
+            XBacking::Disk { store } => store.health(),
+        }
+    }
+
+    /// Take the retry notes buffered since the last drain (empty for the
+    /// resident path); drivers emit them as a `store_retry` trace event.
+    pub(crate) fn drain_retries(&self) -> Vec<RetryNote> {
+        match self {
+            XBacking::Mem { .. } => Vec::new(),
+            XBacking::Disk { store } => store.drain_retries(),
+        }
+    }
+
+    /// Snapshot the (just flushed and stamped) store file beside itself
+    /// — the copy [`open_verified`] promotes when a crashed run's live
+    /// store can no longer resume its checkpoint. No-op for the resident
+    /// path, whose checkpoints inline `x`.
+    pub(crate) fn snapshot(&self) -> Result<(), StoreError> {
+        match self {
+            XBacking::Mem { .. } => Ok(()),
+            XBacking::Disk { store } => store.snapshot(),
         }
     }
 }

@@ -17,10 +17,12 @@
 use super::backing::XBacking;
 use super::checkpoint::{self, CheckRecord, SolverState};
 use super::duals::DualStore;
+use super::error::SolveError;
 use super::projection::{visit_box_upper_val, visit_pair_lower_val, visit_pair_upper_val};
 use super::schedule::{next_owned_tile, Assignment, Schedule};
 use super::termination::compute_residuals_stored;
-use super::{CcState, Residuals, Solution, SolveOpts};
+use super::watchdog::Watchdog;
+use super::{CcState, OnInterrupt, Residuals, Solution, SolveOpts};
 use crate::instance::CcLpInstance;
 use crate::matrix::store::{MemStore, StoreCfg, TileScratch, TileStore};
 use crate::matrix::PackedSym;
@@ -83,7 +85,7 @@ pub fn solve_stored(
     resume_from: Option<&SolverState>,
     on_checkpoint: &mut dyn FnMut(&SolverState),
 ) -> anyhow::Result<Solution> {
-    solve_traced(inst, opts, store_cfg, resume_from, on_checkpoint, &NullRecorder)
+    Ok(solve_traced(inst, opts, store_cfg, resume_from, on_checkpoint, &NullRecorder)?)
 }
 
 /// [`solve_stored`] with a [`Recorder`] receiving structured trace
@@ -93,6 +95,11 @@ pub fn solve_stored(
 /// default behind every other entry point — no instrumentation runs at
 /// all and the solve is bitwise identical to an untraced one (pinned by
 /// `tests/telemetry.rs`). Dispatches on [`super::Strategy`].
+///
+/// The traced entry point is also the typed-error boundary: it returns
+/// [`SolveError`] so embedders can distinguish store failures (and
+/// auto-resume via [`super::recover`]), watchdog trips, and clean
+/// interrupt unwinds; the `anyhow` wrappers above convert transparently.
 pub fn solve_traced(
     inst: &CcLpInstance,
     opts: &SolveOpts,
@@ -100,7 +107,7 @@ pub fn solve_traced(
     resume_from: Option<&SolverState>,
     on_checkpoint: &mut dyn FnMut(&SolverState),
     rec: &dyn Recorder,
-) -> anyhow::Result<Solution> {
+) -> Result<Solution, SolveError> {
     if opts.strategy.is_active() {
         return super::active::solve_cc_traced(
             inst,
@@ -135,7 +142,7 @@ fn solve_inner(
     resume_from: Option<&SolverState>,
     on_checkpoint: &mut dyn FnMut(&SolverState),
     rec: &dyn Recorder,
-) -> anyhow::Result<Solution> {
+) -> Result<Solution, SolveError> {
     assert_eq!(schedule.n(), inst.n, "schedule built for wrong n");
     assert!(
         !opts.strategy.is_active(),
@@ -176,6 +183,7 @@ fn solve_inner(
     let mut last_saved = usize::MAX;
     let pairs_per_pass = (inst.n * (inst.n - 1) / 2) as u64;
     let mut probe = PhaseProbe::new(rec, p);
+    let mut watchdog = Watchdog::new(opts.watchdog_stall);
 
     for pass in start_pass..opts.max_passes {
         let pass_no = (pass + 1) as u64;
@@ -198,6 +206,11 @@ fn solve_inner(
             });
             probe.finish(pass_no, PhaseName::Pair, pt, pairs_per_pass, ws);
         }
+        // A failed store parks its leases mid-wave (barriers cannot
+        // unwind); the latched first error surfaces here, before the
+        // un-projected iterate could feed a residual scan or checkpoint.
+        backing.health()?;
+        emit_retries(&probe, pass_no, backing.drain_retries());
         passes_done = pass + 1;
         triplet_visits += triplets_per_pass;
         if opts.track_pass_times {
@@ -224,6 +237,12 @@ fn solve_inner(
                 lp_objective: residuals.lp_objective,
                 exact: true,
             });
+            watchdog.observe(
+                passes_done,
+                residuals.max_violation,
+                residuals.rel_gap,
+                &history,
+            )?;
             if residuals.max_violation <= opts.tol_violation
                 && residuals.rel_gap.abs() <= opts.tol_gap
             {
@@ -254,6 +273,21 @@ fn solve_inner(
             triplet_visits,
             active_triplets: triplets_per_pass,
         });
+        if opts.on_interrupt == OnInterrupt::Checkpoint && crate::util::interrupt::interrupted()
+        {
+            let checkpointed = opts.checkpoint_every > 0;
+            if checkpointed && last_saved != passes_done {
+                on_checkpoint(&capture_cc_full_backed(
+                    &state,
+                    &mut backing,
+                    checkpoint::collect_duals(&mut stores),
+                    passes_done,
+                    triplet_visits,
+                    &history,
+                )?);
+            }
+            return Err(SolveError::Interrupted { pass: passes_done, checkpointed });
+        }
         if stop {
             break;
         }
@@ -315,7 +349,10 @@ fn solve_inner(
 
 /// Capture a full-strategy CC-LP checkpoint against either backing:
 /// inline `x` for the memory store, a flush-and-stamp reference for the
-/// disk store.
+/// disk store. The disk store is also snapshotted beside itself right
+/// after the stamp, so the checkpoint stays resumable even if the live
+/// store later drifts past it or dies mid-pass (see
+/// `backing::open_verified`).
 fn capture_cc_full_backed(
     state: &CcState,
     backing: &mut XBacking,
@@ -323,7 +360,7 @@ fn capture_cc_full_backed(
     passes_done: usize,
     triplet_visits: u64,
     history: &[CheckRecord],
-) -> anyhow::Result<SolverState> {
+) -> Result<SolverState, SolveError> {
     Ok(match backing {
         XBacking::Mem { x } => SolverState::capture_cc_full(
             state,
@@ -335,6 +372,7 @@ fn capture_cc_full_backed(
         ),
         XBacking::Disk { store } => {
             let x_fnv = store.flush_and_stamp(passes_done as u64)?;
+            store.snapshot()?;
             SolverState::capture_cc_full_external(
                 state,
                 x_fnv,
@@ -345,6 +383,30 @@ fn capture_cc_full_backed(
             )
         }
     })
+}
+
+/// Emit one compact `store_retry` event for the notes a pass drained
+/// (shared by every store-generic driver). Notes are drained by the
+/// caller unconditionally — the buffer must not grow across passes —
+/// but the event only fires when a recorder is listening and something
+/// was actually retried.
+pub(crate) fn emit_retries(
+    probe: &PhaseProbe<'_>,
+    pass: u64,
+    notes: Vec<crate::matrix::store::RetryNote>,
+) {
+    let Some(first) = notes.first() else { return };
+    if !probe.on() {
+        return;
+    }
+    probe.emit(Event::StoreRetry {
+        pass,
+        retries: notes.len() as u64,
+        detail: format!(
+            "{}/{} block {} attempt {}: {}",
+            first.plane, first.op, first.block, first.attempt, first.error
+        ),
+    });
 }
 
 /// One wave-parallel sweep over all metric constraints (resident `x`).

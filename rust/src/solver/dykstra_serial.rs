@@ -6,8 +6,10 @@
 use super::checkpoint::{CheckRecord, SolverState};
 use super::duals::DualStore;
 use super::dykstra_parallel::run_pair_phase;
+use super::error::SolveError;
 use super::termination::compute_residuals;
-use super::{CcState, Residuals, Solution, SolveOpts};
+use super::watchdog::Watchdog;
+use super::{CcState, OnInterrupt, Residuals, Solution, SolveOpts};
 use crate::instance::CcLpInstance;
 use crate::telemetry::{Counters, Event, NullRecorder, PassKind, PhaseName, PhaseProbe, Recorder};
 use crate::util::shared::SharedMut;
@@ -40,7 +42,7 @@ pub fn solve_checkpointed(
     resume_from: Option<&SolverState>,
     on_checkpoint: &mut dyn FnMut(&SolverState),
 ) -> anyhow::Result<Solution> {
-    solve_traced(inst, opts, resume_from, on_checkpoint, &NullRecorder)
+    Ok(solve_traced(inst, opts, resume_from, on_checkpoint, &NullRecorder)?)
 }
 
 /// [`solve_checkpointed`] with a telemetry [`Recorder`] attached. All
@@ -48,22 +50,27 @@ pub fn solve_checkpointed(
 /// [`NullRecorder`] reproduces the untraced solve bitwise (pinned by
 /// `tests/telemetry.rs`). Serial phases report no per-worker busy
 /// timings (the `workers` array of each phase event is empty).
+///
+/// This is the typed-error boundary: interrupts and watchdog trips come
+/// back as the matching [`SolveError`] variant (this driver is
+/// memory-resident, so store failures cannot occur).
 pub fn solve_traced(
     inst: &CcLpInstance,
     opts: &SolveOpts,
     resume_from: Option<&SolverState>,
     on_checkpoint: &mut dyn FnMut(&SolverState),
     rec: &dyn Recorder,
-) -> anyhow::Result<Solution> {
+) -> Result<Solution, SolveError> {
     assert!(
         !opts.strategy.is_active(),
         "dykstra_serial runs the full strategy only; use dykstra_parallel::solve for Strategy::Active"
     );
     if resume_from.is_some_and(|st| st.x_external) {
-        anyhow::bail!(
+        return Err(anyhow::anyhow!(
             "checkpoint references an external x store; resume through the parallel \
              driver's disk backend (dykstra_parallel::solve_stored / --store disk)"
-        );
+        )
+        .into());
     }
     let mut state = match resume_from {
         Some(st) => {
@@ -92,6 +99,7 @@ pub fn solve_traced(
     let mut last_saved = usize::MAX;
     let pairs_per_pass = (inst.n * (inst.n - 1) / 2) as u64;
     let mut probe = PhaseProbe::new(rec, 1);
+    let mut watchdog = Watchdog::new(opts.watchdog_stall);
 
     for pass in start_pass..opts.max_passes {
         let t0 = std::time::Instant::now();
@@ -127,6 +135,7 @@ pub fn solve_traced(
                 max_violation: residuals.max_violation,
                 rel_gap: residuals.rel_gap,
             });
+            watchdog.observe(passes_done, residuals.max_violation, residuals.rel_gap, &history)?;
             if residuals.max_violation <= opts.tol_violation
                 && residuals.rel_gap.abs() <= opts.tol_gap
             {
@@ -154,6 +163,21 @@ pub fn solve_traced(
                 triplet_visits,
                 active_triplets: triplets_per_pass,
             });
+        }
+        if opts.on_interrupt == OnInterrupt::Checkpoint && crate::util::interrupt::interrupted() {
+            let checkpointed = opts.checkpoint_every > 0;
+            if checkpointed && last_saved != passes_done {
+                let duals = store.iter_next().collect();
+                on_checkpoint(&SolverState::capture_cc_full(
+                    &state,
+                    &state.x,
+                    duals,
+                    passes_done,
+                    triplet_visits,
+                    &history,
+                ));
+            }
+            return Err(SolveError::Interrupted { pass: passes_done, checkpointed });
         }
         if stop {
             break;

@@ -16,9 +16,11 @@
 //! ablation bench. Production runs use the scalar CPU engine with sparse
 //! per-worker dual stores.
 
+use super::error::SolveError;
 use super::schedule_delta::BatchSchedule;
 use super::termination::compute_residuals;
-use super::{CcState, Residuals, Solution, SolveOpts};
+use super::watchdog::Watchdog;
+use super::{CcState, OnInterrupt, Residuals, Solution, SolveOpts};
 use crate::instance::CcLpInstance;
 use crate::runtime::engine::XlaEngine;
 use crate::telemetry::{Counters, Event, NullRecorder, PassKind, PhaseName, PhaseProbe, Recorder};
@@ -57,30 +59,38 @@ impl TripletRank {
 /// Solve the CC-LP instance through the PJRT engine. Full strategy only —
 /// `Strategy::Active` callers must use [`super::dykstra_parallel::solve`].
 pub fn solve(inst: &CcLpInstance, opts: &SolveOpts, engine: &XlaEngine) -> Result<Solution> {
-    solve_traced(inst, opts, engine, &NullRecorder)
+    Ok(solve_traced(inst, opts, engine, &NullRecorder)?)
 }
 
 /// [`solve`] with a telemetry [`Recorder`] attached. All instrumentation
 /// is gated on [`Recorder::enabled`]; the engine path is single-threaded
 /// on the host side, so phase events carry no per-worker busy timings.
+///
+/// This is the typed-error boundary: interrupts and watchdog trips come
+/// back as the matching [`SolveError`] variant. This driver has no
+/// checkpoint sink, so an interrupt unwind never reports saved state.
 pub fn solve_traced(
     inst: &CcLpInstance,
     opts: &SolveOpts,
     engine: &XlaEngine,
     rec: &dyn Recorder,
-) -> Result<Solution> {
-    anyhow::ensure!(
-        !opts.strategy.is_active(),
-        "the XLA engine runs the full strategy only; use dykstra_parallel::solve for Strategy::Active"
-    );
+) -> std::result::Result<Solution, SolveError> {
+    if opts.strategy.is_active() {
+        return Err(anyhow::anyhow!(
+            "the XLA engine runs the full strategy only; use dykstra_parallel::solve for active"
+        )
+        .into());
+    }
     let n = inst.n;
     let schedule = BatchSchedule::new(n, crate::runtime::engine::PROJECT_BATCHES[2]);
     let rank = TripletRank::new(n);
     let n_triplets = super::schedule::n_triplets(n) as usize;
-    anyhow::ensure!(
-        n_triplets * 3 <= 200_000_000,
-        "XLA engine path caps at ~n=800 (dense duals); use the CPU engine"
-    );
+    if n_triplets * 3 > 200_000_000 {
+        return Err(anyhow::anyhow!(
+            "XLA engine path caps at ~n=800 (dense duals); use the CPU engine"
+        )
+        .into());
+    }
     let mut state = CcState::new(inst, opts.gamma, opts.include_box);
     // Dense metric duals, 3 per triplet, f32 (artifact dtype).
     let mut metric_duals = vec![0.0f32; n_triplets * 3];
@@ -102,6 +112,7 @@ pub fn solve_traced(
     let mut y3: Vec<f32> = Vec::new();
 
     let mut probe = PhaseProbe::new(rec, 1);
+    let mut watchdog = Watchdog::new(opts.watchdog_stall);
     for pass in 0..opts.max_passes {
         let t0 = std::time::Instant::now();
         let pass_no = (pass + 1) as u64;
@@ -184,6 +195,7 @@ pub fn solve_traced(
                 exact: true,
             });
             measured_at = passes_done;
+            watchdog.observe(passes_done, residuals.max_violation, residuals.rel_gap, &[])?;
             if residuals.max_violation <= opts.tol_violation
                 && residuals.rel_gap.abs() <= opts.tol_gap
             {
@@ -197,6 +209,9 @@ pub fn solve_traced(
                 triplet_visits: passes_done as u64 * n_triplets as u64,
                 active_triplets: n_triplets as u64,
             });
+        }
+        if opts.on_interrupt == OnInterrupt::Checkpoint && crate::util::interrupt::interrupted() {
+            return Err(SolveError::Interrupted { pass: passes_done, checkpointed: false });
         }
         if stop {
             break;

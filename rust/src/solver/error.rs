@@ -1,0 +1,165 @@
+//! Typed solve failures.
+//!
+//! Every traced driver entry point returns `Result<_, SolveError>` so
+//! embedders (and the CLI's recovery harness, [`super::recover`]) can
+//! tell *why* a solve unwound and react mechanically: a [`Store`] error
+//! carries the last-good checkpoint to resume from, an [`Interrupted`]
+//! unwind is a clean exit (the work is checkpointed, not lost), a
+//! [`Watchdog`] trip carries a structured diagnostic dump. The plain
+//! `solve`/`resume` wrappers keep their `anyhow::Result` signatures —
+//! `SolveError` implements `std::error::Error`, so `?` converts.
+//!
+//! [`Store`]: SolveError::Store
+//! [`Interrupted`]: SolveError::Interrupted
+//! [`Watchdog`]: SolveError::Watchdog
+
+use crate::matrix::store::StoreError;
+use std::fmt;
+use std::path::PathBuf;
+
+/// Why a solve unwound before producing a [`super::Solution`].
+#[derive(Debug)]
+pub enum SolveError {
+    /// The tile store failed permanently (retry budget exhausted, or a
+    /// non-retryable fault like `ENOSPC`).
+    Store {
+        /// The store failure that ended the solve.
+        error: StoreError,
+        /// The most recent checkpoint known to be consistent, if any —
+        /// what a `--resume` (or the auto-recovery harness) starts from.
+        last_good_checkpoint: Option<PathBuf>,
+    },
+    /// The interrupt flag was raised and `--on-interrupt checkpoint`
+    /// finished the pass, checkpointed, and unwound cleanly.
+    Interrupted {
+        /// Passes completed before the interrupt was honored.
+        pass: usize,
+        /// Whether a checkpoint was emitted through the run's sink (it
+        /// is whenever periodic checkpointing is configured).
+        checkpointed: bool,
+    },
+    /// The watchdog detected a stall or NaN/∞ divergence.
+    Watchdog {
+        /// Pass at which the watchdog tripped.
+        pass: usize,
+        /// Structured diagnostic dump (JSON lines; the CLI writes it to
+        /// `--watchdog-dump`).
+        report: String,
+    },
+    /// Any other failure (setup, instance mismatch, checkpoint I/O...),
+    /// carried through from the pre-existing `anyhow` paths.
+    Other(anyhow::Error),
+}
+
+impl fmt::Display for SolveError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SolveError::Store { error, last_good_checkpoint } => match last_good_checkpoint {
+                Some(p) => write!(
+                    f,
+                    "store failure: {error} (last good checkpoint: {})",
+                    p.display()
+                ),
+                None => write!(f, "store failure: {error} (no checkpoint to resume from)"),
+            },
+            SolveError::Interrupted { pass, checkpointed } => write!(
+                f,
+                "interrupted after pass {pass} ({})",
+                if *checkpointed { "state checkpointed" } else { "no checkpoint configured" }
+            ),
+            SolveError::Watchdog { pass, .. } => {
+                write!(f, "watchdog tripped at pass {pass} (stall or divergence)")
+            }
+            SolveError::Other(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for SolveError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SolveError::Store { error, .. } => Some(error),
+            _ => None,
+        }
+    }
+}
+
+impl From<anyhow::Error> for SolveError {
+    fn from(e: anyhow::Error) -> SolveError {
+        SolveError::Other(e)
+    }
+}
+
+impl From<StoreError> for SolveError {
+    fn from(error: StoreError) -> SolveError {
+        SolveError::Store { error, last_good_checkpoint: None }
+    }
+}
+
+impl From<super::checkpoint::CheckpointError> for SolveError {
+    fn from(e: super::checkpoint::CheckpointError) -> SolveError {
+        SolveError::Other(anyhow::Error::from(e))
+    }
+}
+
+impl SolveError {
+    /// Attach the last-good checkpoint path to a store failure (no-op
+    /// for every other variant). Drivers return store failures bare;
+    /// the layer that knows where checkpoints were written (the CLI /
+    /// recovery harness) fills this in.
+    pub fn with_checkpoint(self, path: Option<PathBuf>) -> SolveError {
+        match self {
+            SolveError::Store { error, last_good_checkpoint: None } => {
+                SolveError::Store { error, last_good_checkpoint: path }
+            }
+            other => other,
+        }
+    }
+
+    /// True for store failures — the recoverable class the auto-resume
+    /// harness retries.
+    pub fn is_store(&self) -> bool {
+        matches!(self, SolveError::Store { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_checkpoint() {
+        let e = SolveError::from(StoreError::BadMagic)
+            .with_checkpoint(Some(PathBuf::from("/tmp/ck.bin")));
+        let s = e.to_string();
+        assert!(s.contains("bad magic"), "got {s}");
+        assert!(s.contains("/tmp/ck.bin"), "got {s}");
+        assert!(e.is_store());
+    }
+
+    #[test]
+    fn with_checkpoint_never_overwrites_or_leaks() {
+        let e = SolveError::from(StoreError::BadMagic)
+            .with_checkpoint(Some(PathBuf::from("a")))
+            .with_checkpoint(Some(PathBuf::from("b")));
+        match e {
+            SolveError::Store { last_good_checkpoint, .. } => {
+                assert_eq!(last_good_checkpoint, Some(PathBuf::from("a")));
+            }
+            other => panic!("wrong variant: {other}"),
+        }
+        let i = SolveError::Interrupted { pass: 3, checkpointed: true }
+            .with_checkpoint(Some(PathBuf::from("a")));
+        assert!(matches!(i, SolveError::Interrupted { .. }));
+        assert!(!i.is_store());
+    }
+
+    #[test]
+    fn converts_both_ways_with_anyhow() {
+        let from_anyhow: SolveError = anyhow::anyhow!("setup failed").into();
+        assert_eq!(from_anyhow.to_string(), "setup failed");
+        // std::error::Error impl -> anyhow's blanket From applies.
+        let back: anyhow::Error = SolveError::Interrupted { pass: 1, checkpointed: false }.into();
+        assert!(back.to_string().contains("interrupted after pass 1"));
+    }
+}

@@ -31,13 +31,18 @@ pub mod duals;
 pub mod dykstra_parallel;
 pub mod dykstra_serial;
 pub mod dykstra_xla;
+pub mod error;
 pub(crate) mod hot_loop;
 pub mod nearness;
 pub mod projection;
+pub mod recover;
 pub mod schedule;
 pub mod schedule_delta;
 pub mod termination;
 pub mod tiling;
+pub mod watchdog;
+
+pub use error::SolveError;
 
 use crate::instance::CcLpInstance;
 use crate::matrix::PackedSym;
@@ -178,6 +183,32 @@ impl SweepPolicy {
     }
 }
 
+/// What a driver's pass loop does when the process-wide interrupt flag
+/// ([`crate::util::interrupt`]) is raised mid-solve.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum OnInterrupt {
+    /// Ignore the flag and run to convergence (the embedder handles
+    /// signals itself; the default).
+    #[default]
+    Ignore,
+    /// Finish the pass in flight, emit a checkpoint through the run's
+    /// checkpoint sink, and unwind with
+    /// [`error::SolveError::Interrupted`] — the CLI's
+    /// `--on-interrupt checkpoint`.
+    Checkpoint,
+}
+
+impl OnInterrupt {
+    /// Parse a CLI name (`ignore` / `checkpoint`).
+    pub fn parse(s: &str) -> Option<OnInterrupt> {
+        match s {
+            "ignore" => Some(OnInterrupt::Ignore),
+            "checkpoint" => Some(OnInterrupt::Checkpoint),
+            _ => None,
+        }
+    }
+}
+
 /// Solver configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct SolveOpts {
@@ -213,6 +244,13 @@ pub struct SolveOpts {
     /// the `solve_checkpointed` entry points (0 = never; a final state is
     /// always emitted when nonzero). Ignored by the plain `solve` calls.
     pub checkpoint_every: usize,
+    /// What the pass loop does when the process-wide interrupt flag is
+    /// raised (SIGINT/SIGTERM under the CLI's installed handlers).
+    pub on_interrupt: OnInterrupt,
+    /// Watchdog: unwind with a diagnostic dump after this many
+    /// consecutive convergence checks without residual progress
+    /// (0 = stall detection off; NaN/∞ divergence always trips).
+    pub watchdog_stall: usize,
 }
 
 impl Default for SolveOpts {
@@ -232,6 +270,8 @@ impl Default for SolveOpts {
             sweep_backend: SweepBackend::default(),
             sweep_policy: None,
             checkpoint_every: 0,
+            on_interrupt: OnInterrupt::default(),
+            watchdog_stall: 0,
         }
     }
 }

@@ -11,9 +11,11 @@
 use super::backing::XBacking;
 use super::checkpoint::{self, CheckRecord, SolverState};
 use super::duals::DualStore;
-use super::dykstra_parallel::run_metric_phase_timed;
+use super::dykstra_parallel::{emit_retries, run_metric_phase_timed};
+use super::error::SolveError;
 use super::schedule::{Assignment, Schedule};
-use super::{Strategy, SweepBackend, SweepPolicy};
+use super::watchdog::Watchdog;
+use super::{OnInterrupt, Strategy, SweepBackend, SweepPolicy};
 use crate::instance::metric_nearness::MetricNearnessInstance;
 use crate::matrix::store::StoreCfg;
 use crate::matrix::PackedSym;
@@ -51,6 +53,12 @@ pub struct NearnessOpts {
     /// [`solve_checkpointed`] (0 = never; a final state is always emitted
     /// when nonzero). Ignored by the plain [`solve`] call.
     pub checkpoint_every: usize,
+    /// What to do when the process-wide interrupt flag is raised (see
+    /// [`crate::util::interrupt`]); mirrors `SolveOpts::on_interrupt`.
+    pub on_interrupt: OnInterrupt,
+    /// Watchdog stall budget in residual *checks* without improvement
+    /// (0 = stall detection off; divergence detection is always on).
+    pub watchdog_stall: usize,
 }
 
 impl Default for NearnessOpts {
@@ -66,6 +74,8 @@ impl Default for NearnessOpts {
             sweep_backend: SweepBackend::default(),
             sweep_policy: None,
             checkpoint_every: 0,
+            on_interrupt: OnInterrupt::Ignore,
+            watchdog_stall: 0,
         }
     }
 }
@@ -167,13 +177,16 @@ pub fn solve_stored(
     resume_from: Option<&SolverState>,
     on_checkpoint: &mut dyn FnMut(&SolverState),
 ) -> anyhow::Result<NearnessSolution> {
-    solve_traced(inst, opts, store_cfg, resume_from, on_checkpoint, &NullRecorder)
+    Ok(solve_traced(inst, opts, store_cfg, resume_from, on_checkpoint, &NullRecorder)?)
 }
 
 /// [`solve_stored`] with a telemetry [`Recorder`] attached. All
 /// instrumentation is gated on [`Recorder::enabled`], so passing
 /// [`NullRecorder`] reproduces the untraced solve bitwise (pinned by
 /// `tests/telemetry.rs`).
+///
+/// This is the typed-error boundary: store failures, interrupts, and
+/// watchdog trips come back as the matching [`SolveError`] variant.
 pub fn solve_traced(
     inst: &MetricNearnessInstance,
     opts: &NearnessOpts,
@@ -181,7 +194,7 @@ pub fn solve_traced(
     resume_from: Option<&SolverState>,
     on_checkpoint: &mut dyn FnMut(&SolverState),
     rec: &dyn Recorder,
-) -> anyhow::Result<NearnessSolution> {
+) -> Result<NearnessSolution, SolveError> {
     if opts.strategy.is_active() {
         return super::active::solve_nearness_traced(
             inst,
@@ -220,6 +233,7 @@ pub fn solve_traced(
     let mut measured_at = usize::MAX;
     let mut last_saved = usize::MAX;
     let mut probe = PhaseProbe::new(rec, p);
+    let mut watchdog = Watchdog::new(opts.watchdog_stall);
     for pass in start_pass..opts.max_passes {
         let t_pass = probe.start();
         let pass_no = (pass + 1) as u64;
@@ -232,6 +246,10 @@ pub fn solve_traced(
             });
             probe.finish(pass_no, PhaseName::Metric, pt, triplets_per_pass, ws);
         }
+        // A failed lease parks inside the wave (barriers cannot unwind
+        // mid-pass); the latched error surfaces here, once per pass.
+        backing.health()?;
+        emit_retries(&probe, pass_no, backing.drain_retries());
         passes_done = pass + 1;
         triplet_visits += triplets_per_pass;
         let mut stop = false;
@@ -252,6 +270,7 @@ pub fn solve_traced(
                 max_violation,
                 rel_gap: 0.0,
             });
+            watchdog.observe(passes_done, max_violation, 0.0, &history)?;
             if max_violation <= opts.tol_violation {
                 stop = true;
             }
@@ -279,6 +298,20 @@ pub fn solve_traced(
                 triplet_visits,
                 active_triplets: triplets_per_pass,
             });
+        }
+        if opts.on_interrupt == OnInterrupt::Checkpoint && crate::util::interrupt::interrupted() {
+            let checkpointed = opts.checkpoint_every > 0;
+            if checkpointed && last_saved != passes_done {
+                on_checkpoint(&capture_nearness_full_backed(
+                    inst,
+                    &mut backing,
+                    &mut stores,
+                    passes_done,
+                    triplet_visits,
+                    &history,
+                )?);
+            }
+            return Err(SolveError::Interrupted { pass: passes_done, checkpointed });
         }
         if stop {
             break;
@@ -354,7 +387,7 @@ fn capture_nearness_full_backed(
     passes_done: usize,
     triplet_visits: u64,
     history: &[CheckRecord],
-) -> anyhow::Result<SolverState> {
+) -> Result<SolverState, SolveError> {
     let duals = checkpoint::collect_duals(stores);
     Ok(match backing {
         XBacking::Mem { x } => SolverState::capture_nearness_full(
@@ -367,6 +400,7 @@ fn capture_nearness_full_backed(
         ),
         XBacking::Disk { store } => {
             let x_fnv = store.flush_and_stamp(passes_done as u64)?;
+            store.snapshot()?;
             SolverState::capture_nearness_full_external(
                 inst,
                 x_fnv,

@@ -1,0 +1,205 @@
+//! Auto-resume harness: re-run a solve from its last periodic checkpoint
+//! after a store failure.
+//!
+//! Out-of-core solves run for hours against real disks; a transient
+//! fault burst that outlives the store's retry budget should cost one
+//! resume, not the whole run. [`run_with_recovery`] wraps a solve
+//! closure: on a [`SolveError::Store`] unwind it reloads the most recent
+//! checkpoint, emits a [`Event::Recovery`] trace event, and re-invokes
+//! the closure with the reloaded state (the CLI's dispatch maps
+//! `Some(state)` onto the drivers' `resume` entry points, which also
+//! re-open the tile store — promoting the store's `.ckpt` snapshot when
+//! the live file no longer matches the checkpoint's stamp). Attempts are
+//! bounded; exhaustion returns the final error with the last-good
+//! checkpoint path attached so the operator can resume by hand once the
+//! device recovers.
+//!
+//! Only store failures recover: an [`Interrupted`](SolveError::Interrupted)
+//! unwind is deliberate, a [`Watchdog`](SolveError::Watchdog) trip would
+//! reproduce itself from the same state, and
+//! [`Other`](SolveError::Other) covers setup errors a retry cannot fix.
+
+use super::checkpoint::SolverState;
+use super::error::SolveError;
+use crate::telemetry::{Event, Recorder};
+use std::path::Path;
+
+/// Run `run`, auto-resuming from `checkpoint` on store failure.
+///
+/// The closure receives `None` on the first invocation and
+/// `Some(&state)` (the reloaded checkpoint) on each recovery attempt; it
+/// decides how to restart from the state — the drivers' `resume` entry
+/// points reproduce the uninterrupted run bitwise. `attempts` bounds the
+/// number of *re*-invocations (`0` disables recovery). Any error other
+/// than [`SolveError::Store`], a missing/unreadable checkpoint, or an
+/// exhausted budget ends the harness; store errors leave with the
+/// last-good checkpoint path attached when one is still loadable.
+pub fn run_with_recovery<T>(
+    attempts: usize,
+    checkpoint: Option<&Path>,
+    rec: &dyn Recorder,
+    mut run: impl FnMut(Option<&SolverState>) -> Result<T, SolveError>,
+) -> Result<T, SolveError> {
+    let mut state: Option<SolverState> = None;
+    let mut tried = 0usize;
+    loop {
+        let err = match run(state.as_ref()) {
+            Ok(t) => return Ok(t),
+            Err(e) => e,
+        };
+        if err.is_store() && tried < attempts {
+            if let Some(st) = checkpoint.and_then(|p| SolverState::load_path(p).ok()) {
+                tried += 1;
+                if rec.enabled() {
+                    rec.record(&Event::Recovery {
+                        attempt: tried as u64,
+                        pass: st.pass,
+                        msg: err.to_string(),
+                    });
+                }
+                state = Some(st);
+                continue;
+            }
+        }
+        // Out of attempts (or no usable checkpoint): report the failure,
+        // naming the last-good checkpoint if one is still loadable.
+        let last_good = checkpoint
+            .filter(|p| SolverState::load_path(p).is_ok())
+            .map(Path::to_path_buf);
+        return Err(err.with_checkpoint(last_good));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::store::StoreError;
+    use crate::solver::checkpoint::Problem;
+    use crate::telemetry::NullRecorder;
+    use std::path::PathBuf;
+    use std::sync::Mutex;
+
+    fn mini_state(pass: u64) -> SolverState {
+        SolverState {
+            problem: Problem::Nearness,
+            n: 8,
+            gamma: 0.0,
+            pass,
+            triplet_visits: 0,
+            next_check: 0,
+            skip_initial_sweep: false,
+            x_external: false,
+            x_fnv: 0,
+            x: vec![0.0; 28],
+            f: vec![],
+            y_upper: vec![],
+            y_lower: vec![],
+            y_box: vec![],
+            w: vec![1.0; 28],
+            d_hash: 0,
+            metric_duals: vec![],
+            active: vec![],
+            history: vec![],
+        }
+    }
+
+    fn tmp_ckpt(tag: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("metric_proj_recover_{tag}_{}.bin", std::process::id()))
+    }
+
+    struct VecRecorder(Mutex<Vec<Event>>);
+
+    impl Recorder for VecRecorder {
+        fn record(&self, ev: &Event) {
+            self.0.lock().unwrap().push(ev.clone());
+        }
+    }
+
+    #[test]
+    fn recovers_from_store_failure_with_the_checkpoint_state() {
+        let path = tmp_ckpt("heals");
+        mini_state(7).save_path(&path).expect("save checkpoint");
+        let sink = VecRecorder(Mutex::new(Vec::new()));
+        let mut calls = Vec::new();
+        let out = run_with_recovery(2, Some(&path), &sink, |st| {
+            calls.push(st.map(|s| s.pass));
+            if st.is_none() {
+                Err(SolveError::from(StoreError::BadMagic))
+            } else {
+                Ok(42)
+            }
+        });
+        assert_eq!(out.expect("second attempt succeeds"), 42);
+        assert_eq!(calls, vec![None, Some(7)]);
+        let events = sink.0.lock().unwrap();
+        assert_eq!(events.len(), 1);
+        match &events[0] {
+            Event::Recovery { attempt: 1, pass: 7, msg } => {
+                assert!(msg.contains("bad magic"), "got {msg}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn exhaustion_names_the_last_good_checkpoint() {
+        let path = tmp_ckpt("exhausts");
+        mini_state(3).save_path(&path).expect("save checkpoint");
+        let mut calls = 0usize;
+        let out: Result<(), _> = run_with_recovery(2, Some(&path), &NullRecorder, |_| {
+            calls += 1;
+            Err(SolveError::from(StoreError::BadMagic))
+        });
+        assert_eq!(calls, 3, "one first run + two recovery attempts");
+        match out.unwrap_err() {
+            SolveError::Store { last_good_checkpoint, .. } => {
+                assert_eq!(last_good_checkpoint, Some(path.clone()));
+            }
+            other => panic!("wrong variant: {other}"),
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn no_checkpoint_and_non_store_errors_end_immediately() {
+        let mut calls = 0usize;
+        let out: Result<(), _> = run_with_recovery(5, None, &NullRecorder, |_| {
+            calls += 1;
+            Err(SolveError::from(StoreError::BadMagic))
+        });
+        assert_eq!(calls, 1, "nothing to resume from");
+        assert!(out.unwrap_err().is_store());
+
+        let path = tmp_ckpt("nonstore");
+        mini_state(1).save_path(&path).expect("save checkpoint");
+        let mut calls = 0usize;
+        let out: Result<(), _> = run_with_recovery(5, Some(&path), &NullRecorder, |_| {
+            calls += 1;
+            Err(SolveError::Interrupted { pass: 2, checkpointed: true })
+        });
+        assert_eq!(calls, 1, "interrupts are deliberate, never retried");
+        assert!(matches!(out.unwrap_err(), SolveError::Interrupted { .. }));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_checkpoint_disables_recovery_and_is_not_named() {
+        let path = tmp_ckpt("corrupt");
+        std::fs::write(&path, b"not a checkpoint").expect("write junk");
+        let mut calls = 0usize;
+        let out: Result<(), _> = run_with_recovery(3, Some(&path), &NullRecorder, |_| {
+            calls += 1;
+            Err(SolveError::from(StoreError::BadMagic))
+        });
+        assert_eq!(calls, 1);
+        match out.unwrap_err() {
+            SolveError::Store { last_good_checkpoint, .. } => {
+                assert_eq!(last_good_checkpoint, None, "junk is not a last-good checkpoint");
+            }
+            other => panic!("wrong variant: {other}"),
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,187 @@
+//! Stall and divergence watchdog for long out-of-core solves.
+//!
+//! A multi-hour disk-backed solve can fail in two quiet ways that a
+//! store-error latch never sees: the iterate drifts to NaN/∞ (a logic or
+//! data bug — every further pass is wasted heat), or the residual stops
+//! improving for a long stretch (a stall: bad tolerance, cycling active
+//! set, or corrupted-but-checksum-valid input). The [`Watchdog`] sits in
+//! every traced driver's per-pass residual check and trips a
+//! [`SolveError::Watchdog`] carrying a structured diagnostic dump —
+//! JSON lines the CLI writes to `--watchdog-dump` — instead of letting
+//! the run spin forever or print `NaN` at the end.
+//!
+//! Divergence detection is always on (a non-finite residual is never
+//! legitimate). Stall detection is opt-in via
+//! [`SolveOpts::watchdog_stall`](super::SolveOpts::watchdog_stall): `0`
+//! disables it, `K` trips after `K` consecutive residual observations
+//! with no improvement of the best-seen max violation. Observations
+//! happen at the driver's existing residual cadence (`check_every`), so
+//! `K` is measured in *checks*, not passes.
+
+use super::checkpoint::CheckRecord;
+use super::error::SolveError;
+use std::fmt::Write as _;
+
+/// How many trailing convergence-history records the dump keeps.
+const DUMP_HISTORY: usize = 16;
+
+/// Per-solve stall/divergence monitor. Create one per traced solve and
+/// feed it every residual observation; it returns `Err` when the run
+/// should be aborted with a diagnostic dump.
+#[derive(Debug)]
+pub struct Watchdog {
+    /// Consecutive non-improving checks tolerated before a stall trips;
+    /// `0` disables stall detection.
+    stall_checks: usize,
+    /// Best (smallest) max violation seen so far.
+    best: f64,
+    /// Residual checks since `best` last improved.
+    since_best: usize,
+}
+
+impl Watchdog {
+    /// A watchdog that trips a stall after `stall_checks` non-improving
+    /// residual checks (`0` = divergence detection only).
+    pub fn new(stall_checks: usize) -> Watchdog {
+        Watchdog { stall_checks, best: f64::INFINITY, since_best: 0 }
+    }
+
+    /// Record one residual observation. `history` is the driver's
+    /// convergence history (used only to enrich the dump).
+    pub fn observe(
+        &mut self,
+        pass: usize,
+        max_violation: f64,
+        rel_gap: f64,
+        history: &[CheckRecord],
+    ) -> Result<(), SolveError> {
+        if !max_violation.is_finite() || !rel_gap.is_finite() {
+            return Err(self.trip("divergence", pass, max_violation, rel_gap, history));
+        }
+        if max_violation < self.best {
+            self.best = max_violation;
+            self.since_best = 0;
+        } else {
+            self.since_best += 1;
+            if self.stall_checks > 0 && self.since_best >= self.stall_checks {
+                return Err(self.trip("stall", pass, max_violation, rel_gap, history));
+            }
+        }
+        Ok(())
+    }
+
+    fn trip(
+        &self,
+        kind: &str,
+        pass: usize,
+        max_violation: f64,
+        rel_gap: f64,
+        history: &[CheckRecord],
+    ) -> SolveError {
+        let mut report = String::new();
+        let _ = writeln!(
+            report,
+            "{{\"event\":\"watchdog\",\"kind\":\"{kind}\",\"pass\":{pass},\
+             \"max_violation\":{},\"rel_gap\":{},\"best_seen\":{},\
+             \"checks_since_best\":{},\"stall_budget\":{}}}",
+            json_f64(max_violation),
+            json_f64(rel_gap),
+            json_f64(self.best),
+            self.since_best,
+            self.stall_checks,
+        );
+        let tail = history.len().saturating_sub(DUMP_HISTORY);
+        for rec in &history[tail..] {
+            let _ = writeln!(
+                report,
+                "{{\"event\":\"watchdog_history\",\"pass\":{},\
+                 \"max_violation\":{},\"rel_gap\":{}}}",
+                rec.pass,
+                json_f64(rec.max_violation),
+                json_f64(rec.rel_gap),
+            );
+        }
+        SolveError::Watchdog { pass, report }
+    }
+}
+
+/// Render an `f64` as a JSON value. NaN/∞ are not representable as JSON
+/// numbers, so they are quoted — which is exactly the divergence case
+/// the dump exists to describe.
+fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        format!("\"{x}\"")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(pass: u64, v: f64) -> CheckRecord {
+        CheckRecord { pass, max_violation: v, rel_gap: v / 2.0 }
+    }
+
+    #[test]
+    fn divergence_always_trips_even_with_stall_disabled() {
+        let mut dog = Watchdog::new(0);
+        dog.observe(1, 0.5, 0.1, &[]).expect("finite is fine");
+        let err = dog.observe(2, f64::NAN, 0.1, &[rec(1, 0.5)]).unwrap_err();
+        match err {
+            SolveError::Watchdog { pass, report } => {
+                assert_eq!(pass, 2);
+                assert!(report.contains("\"kind\":\"divergence\""), "got {report}");
+                assert!(report.contains("\"NaN\""), "NaN must be quoted: {report}");
+                assert!(report.contains("watchdog_history"), "got {report}");
+            }
+            other => panic!("wrong variant: {other}"),
+        }
+        let mut dog = Watchdog::new(0);
+        assert!(dog.observe(1, 0.5, f64::INFINITY, &[]).is_err());
+    }
+
+    #[test]
+    fn stall_trips_after_budget_and_improvement_resets_it() {
+        let mut dog = Watchdog::new(3);
+        dog.observe(1, 1.0, 0.0, &[]).expect("first check sets best");
+        dog.observe(2, 1.0, 0.0, &[]).expect("1 flat check");
+        dog.observe(3, 2.0, 0.0, &[]).expect("2 flat checks");
+        dog.observe(4, 0.5, 0.0, &[]).expect("improvement resets the count");
+        dog.observe(5, 0.5, 0.0, &[]).expect("1 flat");
+        dog.observe(6, 0.5, 0.0, &[]).expect("2 flat");
+        let err = dog.observe(7, 0.5, 0.0, &[]).unwrap_err();
+        match err {
+            SolveError::Watchdog { pass: 7, report } => {
+                assert!(report.contains("\"kind\":\"stall\""), "got {report}");
+                assert!(report.contains("\"best_seen\":0.5"), "got {report}");
+            }
+            other => panic!("wrong variant: {other}"),
+        }
+    }
+
+    #[test]
+    fn stall_disabled_never_trips_on_flat_residuals() {
+        let mut dog = Watchdog::new(0);
+        for pass in 0..1000 {
+            dog.observe(pass, 1.0, 0.5, &[]).expect("flat but finite");
+        }
+    }
+
+    #[test]
+    fn dump_keeps_only_the_trailing_history() {
+        let mut dog = Watchdog::new(1);
+        let history: Vec<CheckRecord> = (0..40).map(|p| rec(p, 1.0)).collect();
+        dog.observe(0, 1.0, 0.0, &history).expect("sets best");
+        let err = dog.observe(1, 1.0, 0.0, &history).unwrap_err();
+        let report = match err {
+            SolveError::Watchdog { report, .. } => report,
+            other => panic!("wrong variant: {other}"),
+        };
+        let lines = report.lines().count();
+        assert_eq!(lines, 1 + DUMP_HISTORY, "header + {DUMP_HISTORY} history lines");
+        assert!(report.contains("\"pass\":39"), "keeps the newest records: {report}");
+        assert!(!report.contains("\"pass\":10,"), "drops the oldest: {report}");
+    }
+}

@@ -165,6 +165,27 @@ pub enum Event {
         /// non-active strategies).
         active_triplets: u64,
     },
+    /// Tile-store operations were retried this pass (fault injection or
+    /// a genuinely flaky device); the solve healed without unwinding.
+    StoreRetry {
+        /// 1-based pass number.
+        pass: u64,
+        /// Retries drained this pass (not cumulative).
+        retries: u64,
+        /// A compact sample of what was retried, e.g.
+        /// `"x/read block 3 attempt 1: I/O error"`.
+        detail: String,
+    },
+    /// The recovery harness resumed a failed solve from its last
+    /// periodic checkpoint.
+    Recovery {
+        /// 1-based recovery attempt number.
+        attempt: u64,
+        /// Pass the reloaded checkpoint resumes from.
+        pass: u64,
+        /// The store failure that forced the resume.
+        msg: String,
+    },
     /// A non-fatal notice (fallbacks, skipped work).
     Warn {
         /// Human-readable message.
@@ -249,6 +270,22 @@ impl Event {
                     f("secs", json::num(*secs)),
                     f("triplet_visits", json::unum(*triplet_visits)),
                     f("active_triplets", json::unum(*active_triplets)),
+                ],
+            ),
+            Event::StoreRetry { pass, retries, detail } => obj(
+                "store_retry",
+                vec![
+                    f("pass", json::unum(*pass)),
+                    f("retries", json::unum(*retries)),
+                    f("detail", Json::Str(detail.clone())),
+                ],
+            ),
+            Event::Recovery { attempt, pass, msg } => obj(
+                "recovery",
+                vec![
+                    f("attempt", json::unum(*attempt)),
+                    f("pass", json::unum(*pass)),
+                    f("msg", Json::Str(msg.clone())),
                 ],
             ),
             Event::Warn { msg } => obj("warn", vec![f("msg", Json::Str(msg.clone()))]),
@@ -336,6 +373,16 @@ impl Event {
                 triplet_visits: unum("triplet_visits")?,
                 active_triplets: unum("active_triplets")?,
             }),
+            "store_retry" => Ok(Event::StoreRetry {
+                pass: pass()?,
+                retries: unum("retries")?,
+                detail: text("detail")?.to_string(),
+            }),
+            "recovery" => Ok(Event::Recovery {
+                attempt: unum("attempt")?,
+                pass: pass()?,
+                msg: text("msg")?.to_string(),
+            }),
             "warn" => Ok(Event::Warn { msg: text("msg")?.to_string() }),
             "footer" => Ok(Event::Footer { counters: Counters::from_json(&v)? }),
             other => Err(format!("unknown event `{other}`")),
@@ -357,12 +404,13 @@ pub(crate) fn store_stats_fields(stats: &StoreStats) -> Vec<(String, Json)> {
         f("w_evictions", stats.w_evictions),
         f("entry_loads", stats.entry_loads),
         f("blocks_skipped", stats.blocks_skipped),
+        f("retries", stats.retries),
     ]
 }
 
 /// Inverse of [`store_stats_fields`]; `Err` carries the missing key.
-/// The entry-lease counters default to 0 when absent so traces recorded
-/// before they existed keep parsing.
+/// The entry-lease and retry counters default to 0 when absent so
+/// traces recorded before they existed keep parsing.
 pub(crate) fn parse_store_stats(v: &Json) -> Result<StoreStats, &'static str> {
     let get = |k: &'static str| v.get(k).and_then(Json::as_u64).ok_or(k);
     let opt = |k: &'static str| v.get(k).and_then(Json::as_u64).unwrap_or(0);
@@ -376,6 +424,7 @@ pub(crate) fn parse_store_stats(v: &Json) -> Result<StoreStats, &'static str> {
         peak_resident_bytes: get("peak_resident_bytes")?,
         entry_loads: opt("entry_loads"),
         blocks_skipped: opt("blocks_skipped"),
+        retries: opt("retries"),
     })
 }
 
@@ -421,9 +470,20 @@ mod tests {
                     w_evictions: 1,
                     entry_loads: 12,
                     blocks_skipped: 5,
+                    retries: 7,
                 },
             },
             Event::PassEnd { pass: 2, secs: 0.25, triplet_visits: 910, active_triplets: 20 },
+            Event::StoreRetry {
+                pass: 2,
+                retries: 3,
+                detail: "x/read block 3 attempt 1: \"I/O\" error".to_string(),
+            },
+            Event::Recovery {
+                attempt: 1,
+                pass: 2,
+                msg: "store failure: I/O error".to_string(),
+            },
             Event::Warn { msg: "engine \"fallback\"\nsecond line".to_string() },
             Event::Footer {
                 counters: Counters {

@@ -33,6 +33,10 @@ pub struct TraceSummary {
     pub triplet_visits: u64,
     /// Last store I/O snapshot, if the solve was disk-backed.
     pub store: Option<crate::matrix::store::StoreStats>,
+    /// Total store-operation retries drained across all passes.
+    pub store_retries: u64,
+    /// Recovery resumes seen (count of `recovery` events).
+    pub recoveries: u64,
     /// Warn messages, in order.
     pub warns: Vec<String>,
     /// The footer counters, when the trace has one.
@@ -83,6 +87,8 @@ impl TraceSummary {
                     s.total_secs += secs;
                     s.triplet_visits = *triplet_visits;
                 }
+                Event::StoreRetry { retries, .. } => s.store_retries += retries,
+                Event::Recovery { .. } => s.recoveries += 1,
                 Event::Warn { msg } => s.warns.push(msg.clone()),
                 Event::Footer { counters } => s.footer = Some(counters.clone()),
             }
@@ -204,6 +210,13 @@ pub fn render(path: &str, summary: &TraceSummary) -> String {
             );
         }
     }
+    if summary.store_retries > 0 || summary.recoveries > 0 {
+        let _ = writeln!(
+            out,
+            "  resilience: {} store retries, {} checkpoint recoveries",
+            summary.store_retries, summary.recoveries
+        );
+    }
     if let Some(c) = &summary.footer {
         let _ = writeln!(
             out,
@@ -272,6 +285,12 @@ mod tests {
                 lp_objective: 3.5,
                 exact: true,
             },
+            Event::StoreRetry {
+                pass: 2,
+                retries: 3,
+                detail: "x/read block 1 attempt 1: I/O error".to_string(),
+            },
+            Event::Recovery { attempt: 1, pass: 1, msg: "store failure".to_string() },
             Event::PassEnd { pass: 2, secs: 0.2, triplet_visits: 125, active_triplets: 20 },
         ]
     }
@@ -288,15 +307,24 @@ mod tests {
         assert_eq!(s.triplet_visits, 125);
         let sweep_phase = s.phases.iter().find(|(n, ..)| n == "sweep").unwrap();
         assert!((sweep_phase.2 - 0.45).abs() < 1e-12);
+        assert_eq!(s.store_retries, 3);
+        assert_eq!(s.recoveries, 1);
     }
 
     #[test]
     fn render_mentions_key_sections() {
         let s = TraceSummary::from_events(&sample());
         let text = render("trace.jsonl", &s);
-        for needle in ["passes", "sweep", "active set", "convergence", "hit rate"] {
+        for needle in
+            ["passes", "sweep", "active set", "convergence", "hit rate", "resilience"]
+        {
             assert!(text.contains(needle), "missing `{needle}` in:\n{text}");
         }
+        let quiet = TraceSummary::default();
+        assert!(
+            !render("t", &quiet).contains("resilience"),
+            "retry line only appears when something was retried"
+        );
     }
 
     #[test]

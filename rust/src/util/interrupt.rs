@@ -1,0 +1,68 @@
+//! Process-wide interrupt flag for graceful shutdown.
+//!
+//! [`install`] registers SIGINT/SIGTERM handlers that set one atomic
+//! flag; solver pass loops poll [`interrupted`] between passes (under
+//! `SolveOpts::on_interrupt`) so a Ctrl-C or a service-manager TERM
+//! finishes the pass in flight, checkpoints, and unwinds cleanly instead
+//! of killing workers mid-wave. No `libc` crate: the two POSIX calls are
+//! declared directly and the whole module degrades to a manual flag on
+//! non-Unix targets.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static INTERRUPTED: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_signal(_sig: i32) {
+    // Only async-signal-safe work here: one atomic store.
+    INTERRUPTED.store(true, Ordering::SeqCst);
+}
+
+/// Install the SIGINT/SIGTERM handlers (idempotent). On non-Unix
+/// targets this is a no-op and only [`raise`] can set the flag.
+#[cfg(unix)]
+pub fn install() {
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> isize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal);
+        signal(SIGTERM, on_signal);
+    }
+}
+
+/// Install the interrupt handlers (no-op off Unix).
+#[cfg(not(unix))]
+pub fn install() {}
+
+/// Whether an interrupt has been requested since the last [`clear`].
+pub fn interrupted() -> bool {
+    INTERRUPTED.load(Ordering::SeqCst)
+}
+
+/// Set the flag by hand — what the signal handler does, callable from
+/// tests and embedders that route their own shutdown signal.
+pub fn raise() {
+    INTERRUPTED.store(true, Ordering::SeqCst);
+}
+
+/// Reset the flag (start of a run, or after a handled interrupt).
+pub fn clear() {
+    INTERRUPTED.store(false, Ordering::SeqCst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raise_and_clear_roundtrip() {
+        clear();
+        assert!(!interrupted());
+        raise();
+        assert!(interrupted());
+        clear();
+        assert!(!interrupted());
+    }
+}

@@ -2,6 +2,7 @@
 //! and a minimal property-testing harness (no external crates offline).
 
 pub mod hash;
+pub mod interrupt;
 pub mod json;
 pub mod parallel;
 pub mod proptest;

@@ -1,0 +1,399 @@
+//! Robustness acceptance tests (ISSUE 8): fault-injected out-of-core
+//! solves at the *driver* level. The store's own retry/latch mechanics
+//! are unit-tested in `matrix/store/disk.rs`; here the whole solve must
+//! honor the contracts:
+//!
+//! * a transient-fault plan heals through bounded retries and lands
+//!   **bitwise identical** to the fault-free solve, with the healed
+//!   retries visible in the store stats and the `store_retry` trace;
+//! * a permanent fault unwinds into a typed [`SolveError::Store`] whose
+//!   message names the last-good checkpoint once the recovery harness
+//!   exhausts its attempts;
+//! * a single bit flip **anywhere** in a checkpoint file or the tile
+//!   store file is refused with a clean error — never a panic, never a
+//!   silently accepted wrong value (property-tested over random bits);
+//! * a raised interrupt finishes the pass in flight, checkpoints, and
+//!   unwinds as [`SolveError::Interrupted`]; resuming that checkpoint
+//!   lands bitwise on the uninterrupted run;
+//! * the watchdog ends a stalled solve with a structured diagnostic
+//!   dump instead of burning the remaining pass budget;
+//! * a second solve on a live-locked store is refused with a typed
+//!   error instead of corrupting the first solve's file.
+
+use metric_proj::instance::metric_nearness::MetricNearnessInstance;
+use metric_proj::matrix::store::{
+    snapshot_sibling, DiskStore, FaultPlan, StoreCfg, StoreError,
+};
+use metric_proj::matrix::PackedSym;
+use metric_proj::solver::checkpoint::SolverState;
+use metric_proj::solver::nearness::{self, NearnessOpts};
+use metric_proj::solver::{recover, OnInterrupt, SolveError, Strategy};
+use metric_proj::telemetry::{Event, NullRecorder, Recorder};
+use metric_proj::util::interrupt;
+use metric_proj::util::proptest::check;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("metric_proj_faults_{tag}_{}", std::process::id()))
+}
+
+/// A disk configuration with a fault plan armed and a retry budget deep
+/// enough that a transient plan cannot deterministically exhaust it.
+fn faulted(dir: &Path, budget: usize, spec: &str, retries: u32) -> StoreCfg {
+    let mut cfg = StoreCfg::disk(dir, budget);
+    cfg.faults = Some(Arc::new(FaultPlan::parse(spec).expect("valid fault spec")));
+    cfg.retries = retries;
+    cfg
+}
+
+struct VecRecorder(Mutex<Vec<Event>>);
+
+impl Recorder for VecRecorder {
+    fn record(&self, ev: &Event) {
+        self.0.lock().unwrap().push(ev.clone());
+    }
+}
+
+#[test]
+fn transient_faults_heal_by_retry_and_land_bitwise() {
+    // Read EIOs, write-back EIOs, and checksum bit-flips at rates that
+    // fault dozens of block operations over the run; every one must heal
+    // inside the retry budget and the solve must match the fault-free
+    // disk run (and the in-memory run) bit for bit.
+    let spec = "seed=9,read-eio=0.03,write-eio=0.02,bitflip=0.01";
+    let cases = [
+        (26usize, 5usize, 2usize, Strategy::Full),
+        (26, 5, 2, Strategy::Active { sweep_every: 3, forget_after: 1 }),
+    ];
+    for (idx, &(n, tile, threads, strategy)) in cases.iter().enumerate() {
+        let inst = MetricNearnessInstance::random(n, 2.0, 77 + idx as u64);
+        let opts = NearnessOpts {
+            max_passes: 8,
+            check_every: 3,
+            tol_violation: 1e-12,
+            threads,
+            tile,
+            strategy,
+            ..Default::default()
+        };
+        let ctx = format!("transient case {idx}: {strategy:?}");
+        let mem = nearness::solve_stored(&inst, &opts, &StoreCfg::mem(), None, &mut |_| {})
+            .expect("mem reference");
+        let dir_clean = tmp_dir(&format!("clean{idx}"));
+        let clean = nearness::solve_stored(
+            &inst,
+            &opts,
+            &StoreCfg::disk(&dir_clean, 1 << 11),
+            None,
+            &mut |_| {},
+        )
+        .expect("fault-free disk reference");
+        let dir = tmp_dir(&format!("transient{idx}"));
+        let cfg = faulted(&dir, 1 << 11, spec, 8);
+        let rec = VecRecorder(Mutex::new(Vec::new()));
+        let sol = nearness::solve_traced(&inst, &opts, &cfg, None, &mut |_| {}, &rec)
+            .expect("transient faults must heal inside the retry budget");
+
+        assert_eq!(sol.x, clean.x, "{ctx}: x diverged from the fault-free disk run");
+        assert_eq!(sol.x, mem.x, "{ctx}: x diverged from the in-memory run");
+        assert_eq!(sol.passes, clean.passes, "{ctx}: pass counts diverged");
+        assert_eq!(sol.objective, clean.objective, "{ctx}: objective diverged");
+        assert_eq!(sol.max_violation, clean.max_violation, "{ctx}: violation diverged");
+
+        let stats = sol.store_stats.expect("disk solve reports store stats");
+        assert!(
+            stats.retries > 0,
+            "{ctx}: the plan {spec} faulted nothing — the test exercised no retry"
+        );
+        let events = rec.0.lock().unwrap();
+        let retried: u64 = events
+            .iter()
+            .filter_map(|e| match e {
+                Event::StoreRetry { retries, detail, .. } => {
+                    assert!(
+                        detail.contains("attempt"),
+                        "{ctx}: retry detail should sample an attempt, got `{detail}`"
+                    );
+                    Some(*retries)
+                }
+                _ => None,
+            })
+            .sum();
+        assert!(retried > 0, "{ctx}: no store_retry event reached the trace");
+
+        let clean_stats = clean.store_stats.expect("clean disk stats");
+        assert_eq!(clean_stats.retries, 0, "{ctx}: the fault-free run must not retry");
+
+        let _ = std::fs::remove_dir_all(dir);
+        let _ = std::fs::remove_dir_all(dir_clean);
+    }
+}
+
+#[test]
+fn permanent_faults_exhaust_recovery_and_name_the_last_good_checkpoint() {
+    // Phase 1: a clean disk run leaves a resumable checkpoint. Phase 2:
+    // every block read faults (a dead device); the resume fails, the
+    // recovery harness reloads the checkpoint and fails again, and the
+    // final typed error must name the checkpoint the operator can resume
+    // from once the device comes back.
+    let n = 22;
+    let inst = MetricNearnessInstance::random(n, 2.0, 123);
+    let dir = tmp_dir("permanent");
+    let ck = tmp_dir("permanent_ck").with_extension("bin");
+    let base = NearnessOpts {
+        max_passes: 4,
+        check_every: 2,
+        tol_violation: 1e-12,
+        threads: 2,
+        tile: 4,
+        strategy: Strategy::Full,
+        checkpoint_every: 2,
+        ..Default::default()
+    };
+    let clean_cfg = StoreCfg::disk(&dir, 1 << 11);
+    nearness::solve_stored(&inst, &base, &clean_cfg, None, &mut |s| {
+        s.save_path(&ck).expect("persist checkpoint");
+    })
+    .expect("clean run");
+    let start = SolverState::load_path(&ck).expect("checkpoint loads");
+    assert_eq!(start.pass, 4);
+
+    let cfg = faulted(&dir, 1 << 11, "seed=2,read-eio=1.0", 2);
+    let resume_opts = NearnessOpts { max_passes: 8, ..base };
+    let rec = VecRecorder(Mutex::new(Vec::new()));
+    let out = recover::run_with_recovery(1, Some(ck.as_path()), &rec, |recovered| {
+        let from = recovered.or(Some(&start));
+        nearness::solve_traced(&inst, &resume_opts, &cfg, from, &mut |_| {}, &NullRecorder)
+    });
+    let err = out.expect_err("a dead device must not produce a solution");
+    match &err {
+        SolveError::Store { error, last_good_checkpoint } => {
+            assert!(
+                matches!(error, StoreError::Io(_)),
+                "the injected EIO must surface, got {error}"
+            );
+            assert_eq!(
+                last_good_checkpoint.as_deref(),
+                Some(ck.as_path()),
+                "exhaustion must name the last-good checkpoint"
+            );
+        }
+        other => panic!("wrong unwind: {other}"),
+    }
+    assert!(
+        err.to_string().contains("last good checkpoint"),
+        "the operator-facing message must point at the resume path: {err}"
+    );
+    let recoveries = rec
+        .0
+        .lock()
+        .unwrap()
+        .iter()
+        .filter(|e| matches!(e, Event::Recovery { .. }))
+        .count();
+    assert_eq!(recoveries, 1, "exactly one recovery attempt was budgeted");
+
+    let _ = std::fs::remove_dir_all(dir);
+    let _ = std::fs::remove_file(ck);
+}
+
+#[test]
+fn any_single_bit_flip_in_checkpoint_or_store_is_refused_cleanly() {
+    // Property: flip one random bit anywhere in the checkpoint file or
+    // the tile-store file; loading/resuming must return a clean error.
+    // A panic fails the test harness outright, and an `Ok` is a silent
+    // acceptance — both are bugs. The store's `.ckpt` snapshot is
+    // removed first so snapshot promotion cannot mask the live file's
+    // corruption.
+    let n = 20;
+    let inst = MetricNearnessInstance::random(n, 2.0, 55);
+    let dir = tmp_dir("bitflip");
+    let ck = tmp_dir("bitflip_ck").with_extension("bin");
+    let opts = NearnessOpts {
+        max_passes: 4,
+        check_every: 2,
+        tol_violation: 1e-12,
+        threads: 1,
+        tile: 4,
+        strategy: Strategy::Full,
+        checkpoint_every: 2,
+        ..Default::default()
+    };
+    let cfg = StoreCfg::disk(&dir, 1 << 11);
+    nearness::solve_stored(&inst, &opts, &cfg, None, &mut |s| {
+        s.save_path(&ck).expect("persist checkpoint");
+    })
+    .expect("clean run");
+    let state = SolverState::load_path(&ck).expect("checkpoint loads");
+    let pristine_ck = std::fs::read(&ck).expect("checkpoint bytes");
+    let pristine_store = std::fs::read(cfg.x_path()).expect("store bytes");
+    let _ = std::fs::remove_file(snapshot_sibling(&cfg.x_path()));
+
+    let resume_opts = NearnessOpts { max_passes: 8, ..opts };
+    check("single_bit_flip_refusal", 0xB17F11A5, 48, |rng, case| {
+        // Alternate targets so both files get even coverage regardless
+        // of the case count.
+        if case % 2 == 0 {
+            let mut bad = pristine_ck.clone();
+            let bit = (rng.next_u64() as usize) % (bad.len() * 8);
+            bad[bit / 8] ^= 1 << (bit % 8);
+            std::fs::write(&ck, &bad).map_err(|e| e.to_string())?;
+            match SolverState::load_path(&ck) {
+                Err(_) => Ok(()),
+                Ok(_) => Err(format!("checkpoint bit {bit} was silently accepted")),
+            }
+        } else {
+            let mut bad = pristine_store.clone();
+            let bit = (rng.next_u64() as usize) % (bad.len() * 8);
+            bad[bit / 8] ^= 1 << (bit % 8);
+            std::fs::write(cfg.x_path(), &bad).map_err(|e| e.to_string())?;
+            let _ = std::fs::remove_file(snapshot_sibling(&cfg.x_path()));
+            match nearness::solve_stored(&inst, &resume_opts, &cfg, Some(&state), &mut |_| {})
+            {
+                Err(_) => Ok(()),
+                Ok(_) => Err(format!("store bit {bit} was silently accepted")),
+            }
+        }
+    });
+
+    // The pristine pair still resumes — the refusals above were the
+    // corruption's fault, not collateral damage from the harness.
+    std::fs::write(&ck, &pristine_ck).expect("restore checkpoint");
+    std::fs::write(cfg.x_path(), &pristine_store).expect("restore store");
+    nearness::solve_stored(&inst, &resume_opts, &cfg, Some(&state), &mut |_| {})
+        .expect("pristine files must still resume");
+
+    let _ = std::fs::remove_dir_all(dir);
+    let _ = std::fs::remove_file(ck);
+}
+
+#[test]
+fn a_raised_interrupt_checkpoints_and_unwinds_cleanly() {
+    let inst = MetricNearnessInstance::random(20, 2.0, 5);
+    let base = NearnessOpts {
+        max_passes: 8,
+        check_every: 0,
+        threads: 2,
+        tile: 4,
+        strategy: Strategy::Full,
+        checkpoint_every: 5,
+        on_interrupt: OnInterrupt::Checkpoint,
+        ..Default::default()
+    };
+    interrupt::clear();
+    let reference = nearness::solve_stored(&inst, &base, &StoreCfg::mem(), None, &mut |_| {})
+        .expect("uninterrupted reference");
+
+    // Raised flag: the solve finishes pass 1, checkpoints (pass 1 is not
+    // a periodic boundary, so the interrupt path must emit the state
+    // itself), and unwinds with the typed variant.
+    let mut states = Vec::new();
+    interrupt::raise();
+    let err = nearness::solve_traced(
+        &inst,
+        &base,
+        &StoreCfg::mem(),
+        None,
+        &mut |s| states.push(s.clone()),
+        &NullRecorder,
+    )
+    .expect_err("a raised interrupt must unwind");
+    interrupt::clear();
+    match err {
+        SolveError::Interrupted { pass: 1, checkpointed: true } => {}
+        other => panic!("wrong unwind: {other}"),
+    }
+    assert_eq!(states.len(), 1, "the interrupt path emits exactly one state");
+    assert_eq!(states[0].pass, 1);
+
+    // Resuming the interrupt checkpoint lands bitwise on the
+    // uninterrupted run — the interrupt lost no work.
+    let resumed =
+        nearness::solve_stored(&inst, &base, &StoreCfg::mem(), Some(&states[0]), &mut |_| {})
+            .expect("resume after interrupt");
+    assert_eq!(resumed.x, reference.x, "interrupt/resume diverged");
+    assert_eq!(resumed.passes, reference.passes);
+
+    // Without periodic checkpointing there is nothing durable to emit;
+    // the unwind must say so instead of pretending.
+    let nock = NearnessOpts { checkpoint_every: 0, ..base };
+    let mut states = Vec::new();
+    interrupt::raise();
+    let err = nearness::solve_traced(
+        &inst,
+        &nock,
+        &StoreCfg::mem(),
+        None,
+        &mut |s| states.push(s.clone()),
+        &NullRecorder,
+    )
+    .expect_err("interrupt with no checkpoint sink");
+    interrupt::clear();
+    assert!(matches!(err, SolveError::Interrupted { pass: 1, checkpointed: false }));
+    assert!(states.is_empty(), "no checkpoint sink configured, none may be emitted");
+}
+
+#[test]
+fn watchdog_ends_a_stalled_solve_with_a_diagnostic_dump() {
+    // Constant distances already satisfy every triangle inequality, so
+    // the residual is flat from the first check; a tolerance below the
+    // reachable floor keeps the solve running and the watchdog must end
+    // it after its stall budget instead of burning all 50 passes.
+    let inst = MetricNearnessInstance::new(PackedSym::filled(16, 1.0));
+    let opts = NearnessOpts {
+        max_passes: 50,
+        check_every: 1,
+        tol_violation: -2.0,
+        threads: 2,
+        tile: 4,
+        strategy: Strategy::Full,
+        watchdog_stall: 3,
+        ..Default::default()
+    };
+    let err =
+        nearness::solve_traced(&inst, &opts, &StoreCfg::mem(), None, &mut |_| {}, &NullRecorder)
+            .expect_err("a stalled solve must trip the watchdog");
+    match err {
+        SolveError::Watchdog { pass, report } => {
+            assert_eq!(pass, 4, "best at check 1, three flat checks, trip at pass 4");
+            assert!(report.contains("\"kind\":\"stall\""), "got {report}");
+            assert!(report.contains("watchdog_history"), "dump carries history: {report}");
+        }
+        other => panic!("wrong unwind: {other}"),
+    }
+}
+
+#[test]
+fn a_second_solve_on_a_live_locked_store_is_refused() {
+    // A live store lock (same pid counts — the lockfile holds a running
+    // process) must refuse a concurrent solve on the same store with a
+    // typed error instead of letting two writers corrupt the file.
+    let n = 14;
+    let inst = MetricNearnessInstance::random(n, 2.0, 3);
+    let dir = tmp_dir("lock");
+    let cfg = StoreCfg::disk(&dir, 1 << 10);
+    let winv = vec![1.0; n * (n - 1) / 2];
+    let holder = DiskStore::create(&cfg.x_path(), n, 4, 1 << 10, winv, &mut |_, _| 1.0)
+        .expect("first store acquires the lock");
+    // Remove the tile file (the holder keeps its handle) so the second
+    // solve takes the create path and hits the lock, not the
+    // overwrite-refusal guard.
+    std::fs::remove_file(cfg.x_path()).expect("unlink tile file");
+    let opts = NearnessOpts {
+        max_passes: 2,
+        check_every: 0,
+        threads: 1,
+        tile: 4,
+        strategy: Strategy::Full,
+        ..Default::default()
+    };
+    let err = nearness::solve_stored(&inst, &opts, &cfg, None, &mut |_| {})
+        .expect_err("a live lock must refuse the second solve");
+    assert!(
+        format!("{err:?}").contains("locked"),
+        "error should name the lock: {err:?}"
+    );
+    drop(holder);
+    let _ = std::fs::remove_dir_all(dir);
+}

@@ -1,0 +1,205 @@
+//! Crash-recovery subprocess tests against the real `metric-proj`
+//! binary: SIGKILL a disk-backed solve mid-pass and resume it; SIGTERM
+//! one running with `--on-interrupt checkpoint` and watch it exit
+//! cleanly. Both recovered runs must land **bitwise identical** to an
+//! uninterrupted reference — the invariant the checkpoint subsystem and
+//! the wave schedule's determinism promise together.
+//!
+//! The victim runs are slowed with the fault plan's deterministic
+//! latency injection (`latency=1.0`) so the kill reliably lands while
+//! passes are still in flight; latency spikes change wall-clock only,
+//! never values, so the reference runs skip them.
+
+#![cfg(unix)]
+
+use metric_proj::matrix::store::DiskStore;
+use metric_proj::solver::checkpoint::SolverState;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+const BIN: &str = env!("CARGO_BIN_EXE_metric-proj");
+const N: usize = 100;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("metric_proj_kill_{tag}_{}", std::process::id()))
+}
+
+/// `nearness` invocation shared by every run of one scenario: same
+/// instance (seed), same schedule, same pass budget.
+fn nearness_cmd(store_dir: &Path, ck: &Path) -> Command {
+    let mut cmd = Command::new(BIN);
+    cmd.args(["nearness", "--n", &N.to_string(), "--seed", "7"]);
+    cmd.args(["--passes", "6", "--threads", "2", "--tile", "20"]);
+    cmd.args(["--store", "disk", "--store-budget-mb", "1"]);
+    cmd.arg("--store-dir").arg(store_dir);
+    cmd.arg("--checkpoint").arg(ck);
+    cmd.stdout(Stdio::piped()).stderr(Stdio::piped());
+    cmd
+}
+
+/// Block until `ck` holds a loadable state with `pass >= 1` (the victim
+/// finished at least one pass and checkpointed it), or panic after a
+/// generous timeout. Checkpoint writes are tmp+rename atomic, so a
+/// midway load never sees torn bytes.
+fn wait_for_first_checkpoint(ck: &Path, child: &mut Child) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        if let Ok(st) = SolverState::load_path(ck) {
+            if st.pass >= 1 {
+                return;
+            }
+        }
+        if let Ok(Some(status)) = child.try_wait() {
+            // The victim outran us — that run degenerates to a plain
+            // resume-from-final, which keeps the equality assertions
+            // valid, just less interesting. Only a *failed* exit is a bug.
+            assert!(status.success(), "victim exited early with {status}");
+            return;
+        }
+        assert!(Instant::now() < deadline, "no checkpoint appeared within 120s");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+fn wait_with_timeout(child: &mut Child, secs: u64) -> std::process::ExitStatus {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    loop {
+        if let Ok(Some(status)) = child.try_wait() {
+            return status;
+        }
+        if Instant::now() >= deadline {
+            let _ = child.kill();
+            panic!("subprocess did not exit within {secs}s");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// The store's packed payload, read back through the verified open path.
+fn store_payload(store_dir: &Path) -> Vec<f64> {
+    let winv = vec![1.0; N * (N - 1) / 2];
+    let store = DiskStore::open(&store_dir.join("x.tiles"), 1 << 20, winv)
+        .expect("finished store opens clean");
+    store.read_full().expect("payload reads")
+}
+
+fn assert_same_final_state(ref_ck: &Path, ck: &Path, ref_store: &Path, store: &Path, ctx: &str) {
+    let a = SolverState::load_path(ref_ck).expect("reference checkpoint loads");
+    let b = SolverState::load_path(ck).expect("recovered checkpoint loads");
+    assert_eq!(a, b, "{ctx}: final checkpoint states diverged");
+    assert_eq!(
+        store_payload(ref_store),
+        store_payload(store),
+        "{ctx}: final iterates diverged"
+    );
+}
+
+#[test]
+fn sigkill_mid_pass_resumes_bitwise_identical() {
+    let root = tmp_dir("sigkill");
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).expect("mkdir");
+    let (ref_store, ref_ck) = (root.join("ref_store"), root.join("ref.ckpt"));
+    let (store, ck) = (root.join("store"), root.join("run.ckpt"));
+
+    // Uninterrupted reference.
+    let out = nearness_cmd(&ref_store, &ref_ck).output().expect("spawn reference");
+    assert!(
+        out.status.success(),
+        "reference run failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // Victim: checkpoint every pass, latency-throttled, killed hard
+    // after its first checkpoint lands (a mid-pass kill may tear the
+    // live store file; the checkpoint's `.ckpt` snapshot must cover it).
+    let mut victim = nearness_cmd(&store, &ck)
+        .args(["--checkpoint-every", "1"])
+        .args(["--fault-plan", "seed=1,latency=1.0,latency-ms=50"])
+        .spawn()
+        .expect("spawn victim");
+    wait_for_first_checkpoint(&ck, &mut victim);
+    let _ = victim.kill();
+    let _ = victim.wait();
+
+    // Resume (no latency this time) and land on the reference bitwise.
+    let out = nearness_cmd(&store, &ck)
+        .args(["--checkpoint-every", "1"])
+        .arg("--resume")
+        .arg(&ck)
+        .output()
+        .expect("spawn resume");
+    assert!(
+        out.status.success(),
+        "resume after SIGKILL failed:\n{}\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("resume    : from pass"), "resume banner missing:\n{stdout}");
+
+    assert_same_final_state(&ref_ck, &ck, &ref_store, &store, "SIGKILL/resume");
+    let _ = std::fs::remove_dir_all(root);
+}
+
+#[test]
+fn sigterm_with_on_interrupt_checkpoint_exits_cleanly_and_resumes() {
+    let root = tmp_dir("sigterm");
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).expect("mkdir");
+    let (ref_store, ref_ck) = (root.join("ref_store"), root.join("ref.ckpt"));
+    let (store, ck) = (root.join("store"), root.join("run.ckpt"));
+
+    let out = nearness_cmd(&ref_store, &ref_ck).output().expect("spawn reference");
+    assert!(
+        out.status.success(),
+        "reference run failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // Victim: TERM must finish the pass in flight, checkpoint, and exit
+    // zero — what a service manager's stop expects.
+    let mut victim = nearness_cmd(&store, &ck)
+        .args(["--checkpoint-every", "1", "--on-interrupt", "checkpoint"])
+        .args(["--fault-plan", "seed=1,latency=1.0,latency-ms=50"])
+        .spawn()
+        .expect("spawn victim");
+    wait_for_first_checkpoint(&ck, &mut victim);
+    let term = Command::new("kill")
+        .args(["-TERM", &victim.id().to_string()])
+        .status()
+        .expect("send SIGTERM");
+    assert!(term.success(), "kill -TERM failed");
+    let status = wait_with_timeout(&mut victim, 120);
+    let mut stdout = String::new();
+    if let Some(mut h) = victim.stdout.take() {
+        use std::io::Read;
+        let _ = h.read_to_string(&mut stdout);
+    }
+    assert!(status.success(), "TERM-interrupted run must exit 0, got {status}\n{stdout}");
+    assert!(
+        stdout.contains("interrupted: stopped cleanly after pass"),
+        "clean-interrupt banner missing:\n{stdout}"
+    );
+    assert!(
+        stdout.contains("(state checkpointed)"),
+        "the interrupt must report its checkpoint:\n{stdout}"
+    );
+
+    // The checkpointed interrupt lost no work: resume to completion.
+    let out = nearness_cmd(&store, &ck)
+        .args(["--checkpoint-every", "1"])
+        .arg("--resume")
+        .arg(&ck)
+        .output()
+        .expect("spawn resume");
+    assert!(
+        out.status.success(),
+        "resume after SIGTERM failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    assert_same_final_state(&ref_ck, &ck, &ref_store, &store, "SIGTERM/resume");
+    let _ = std::fs::remove_dir_all(root);
+}
