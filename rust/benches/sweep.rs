@@ -21,13 +21,19 @@
 //!
 //!     cargo bench --bench sweep
 //!
+//! Per size the harness also times the **proximal family** end to end
+//! (`prox-mm` / `prox-sd` rows, ARCHITECTURE.md §6): their CG/gradient
+//! sweeps bill the same per-triplet visit unit, so the throughput
+//! column stays comparable across families.
+//!
 //! Environment knobs: `METRIC_PROJ_SWEEP_NS` (comma-separated sizes,
 //! default `120,200,300`), `METRIC_PROJ_SWEEP_REPS` (timed sweeps per
 //! backend, default 5), `METRIC_PROJ_SWEEP_WARMUP` (steady-state solve
 //! passes, default 30), `METRIC_PROJ_SWEEP_THREADS` (default 1 — the
-//! cleanest per-core throughput comparison), `METRIC_PROJ_BENCH_OUT`
-//! (output path, default `../BENCH_sweep.json` = the repo root when run
-//! via `cargo bench`).
+//! cleanest per-core throughput comparison), `METRIC_PROJ_SWEEP_PROX_MAX_N`
+//! (skip the proximal rows above this size, default 200),
+//! `METRIC_PROJ_BENCH_OUT` (output path, default `../BENCH_sweep.json`
+//! = the repo root when run via `cargo bench`).
 //!
 //! Emits machine-readable `BENCH_sweep.json` for the perf trajectory:
 //! one record per (n, backend) with triplet-visits/sec, the screen hit
@@ -51,7 +57,7 @@ use metric_proj::solver::active::set::ActiveSet;
 use metric_proj::solver::active::sweep::{discovery_sweep, SweepReport};
 use metric_proj::solver::nearness::{self, NearnessOpts};
 use metric_proj::solver::schedule::{Assignment, Schedule};
-use metric_proj::solver::{Strategy, SweepBackend};
+use metric_proj::solver::{Algorithm, Strategy, SweepBackend};
 use std::fmt::Write as _;
 use std::time::Instant;
 
@@ -99,6 +105,7 @@ fn main() {
     let reps = env_usize("METRIC_PROJ_SWEEP_REPS", 5).max(1);
     let warmup = env_usize("METRIC_PROJ_SWEEP_WARMUP", 30);
     let threads = env_usize("METRIC_PROJ_SWEEP_THREADS", 1).max(1);
+    let prox_max_n = env_usize("METRIC_PROJ_SWEEP_PROX_MAX_N", 200);
     let out_path = std::env::var("METRIC_PROJ_BENCH_OUT")
         .unwrap_or_else(|_| "../BENCH_sweep.json".to_string());
     println!(
@@ -332,6 +339,55 @@ fn main() {
             let store_path = store.path().to_path_buf();
             drop(store);
             let _ = std::fs::remove_file(store_path);
+        }
+
+        // Proximal-family rows (ARCHITECTURE.md §6): end-to-end solves
+        // of the second algorithm family on the same instance, timed to
+        // a loose 1e-5 violation. CG and gradient sweeps bill every
+        // triplet per matvec, so triplet-visits/s stays the comparable
+        // unit; hit rate and speedup-vs-scalar do not apply (0, like
+        // the cheap-pass row). Skipped above METRIC_PROJ_SWEEP_PROX_MAX_N:
+        // MM runs thousands of O(n³) matvec sweeps per solve at n = 300.
+        if n <= prox_max_n {
+            for (algorithm, label, vectors) in
+                [(Algorithm::ProxMm, "prox-mm", 11usize), (Algorithm::ProxSd, "prox-sd", 7)]
+            {
+                let t0 = Instant::now();
+                let sol = nearness::solve(
+                    &inst,
+                    &NearnessOpts {
+                        tol_violation: 1e-5,
+                        threads,
+                        tile,
+                        algorithm,
+                        ..Default::default()
+                    },
+                );
+                let dt = t0.elapsed().as_secs_f64().max(1e-9);
+                let vps = sol.metric_visits as f64 / dt;
+                // Packed work-vector count of the driver (x/anchor/rhs/
+                // CG scratch... plus d and winv), the resident X path.
+                let resident_mb = mib((vectors * x_steady.len() * 8) as f64);
+                println!(
+                    "    {:<13} {:>9.3e} triplet-visits/s, {:.3}s to 1e-5 violation \
+                     ({} outer iterations), ~{:.1} MiB resident X",
+                    label, vps, dt, sol.passes, resident_mb
+                );
+                records.push(Record {
+                    n,
+                    backend: label,
+                    store: "mem",
+                    sweeps: sol.passes,
+                    seconds: dt,
+                    visits_per_sec: vps,
+                    hit_rate: 0.0,
+                    speedup_vs_scalar: 0.0,
+                    resident_mb,
+                    store_loads: 0,
+                    entry_loads: 0,
+                    blocks_skipped: 0,
+                });
+            }
         }
     }
 

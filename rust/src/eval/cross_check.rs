@@ -1,0 +1,425 @@
+//! Cross-family differential-testing oracle.
+//!
+//! The crate ships two algorithm families that solve the *same*
+//! mathematical problem by unrelated means: the Dykstra drivers
+//! (exact projection by cyclic constraint projection) and the proximal
+//! family ([`crate::solver::proximal`], penalized Newton-free descent).
+//! They share no fixed-point math, no dual storage, and no stopping
+//! logic — so running both on the same instance and comparing the
+//! converged objectives and constraint residuals is a differential test
+//! of everything underneath: the triangle operator, the wave schedule,
+//! the projection kernels, the violation scan.
+//!
+//! The tolerance model is deliberate and documented (see
+//! `docs/ARCHITECTURE.md`, "Why agreement is within tolerance"):
+//! Dykstra converges to the exact projection; a proximal run stops at a
+//! finite penalty, so its objective sits *near* (and its iterate is
+//! feasible only to `tol_violation`). The oracle therefore checks
+//!
+//! * `|obj_prox − obj_dyk| ≤ rel_obj_tol · max(1, obj_dyk)`, and
+//! * `max_violation_prox ≤ viol_tol`,
+//!
+//! with per-member bands measured in the f64 prototype behind the
+//! solvers (EXPERIMENTS.md, "Cross-family oracle"): MM converges to
+//! ~1e-4 relative agreement, band 5e-3; SD to ~9e-3, band 2e-2. The
+//! bands are loose enough for platform jitter but ~4 orders of
+//! magnitude tighter than what a broken kernel produces (a single
+//! flipped sign in `T'T` lands ~30× off in relative objective —
+//! `tests/cross_family.rs` pins this margin with
+//! [`crate::solver::proximal::operator::BrokenOperator`]).
+//!
+//! [`run_sweep`] drives a seeded instance sweep (sizes × weight
+//! structures), [`judge`] applies the band to any pair of solutions
+//! (public so negative tests can inject deliberately wrong ones), and
+//! [`Report::to_json`] emits the machine-readable verdict table the
+//! nightly CI oracle job archives.
+
+use crate::instance::metric_nearness::MetricNearnessInstance;
+use crate::matrix::PackedSym;
+use crate::solver::error::SolveError;
+use crate::solver::nearness::{self, NearnessOpts};
+use crate::solver::Algorithm;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// How the instance weights are drawn.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightKind {
+    /// All weights 1 (the classic nearness setting).
+    Unit,
+    /// I.i.d. uniform in `[0.5, 2]` — smooth anisotropy.
+    Uniform,
+    /// Mostly 1 with a ~10% fraction boosted ×25 — near-hard pairs,
+    /// the regime where a wrong weighted kernel shows first.
+    Spiky,
+}
+
+impl WeightKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            WeightKind::Unit => "unit",
+            WeightKind::Uniform => "uniform",
+            WeightKind::Spiky => "spiky",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<WeightKind> {
+        match s {
+            "unit" => Some(WeightKind::Unit),
+            "uniform" => Some(WeightKind::Uniform),
+            "spiky" => Some(WeightKind::Spiky),
+            _ => None,
+        }
+    }
+}
+
+/// One seeded instance of the sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct CaseSpec {
+    /// Number of points.
+    pub n: usize,
+    /// Instance seed (distances and weights both derive from it).
+    pub seed: u64,
+    /// Weight structure.
+    pub weights: WeightKind,
+    /// Upper bound of the uniform dissimilarity draw.
+    pub hi: f64,
+}
+
+impl CaseSpec {
+    /// Materialize the instance (deterministic in the spec).
+    pub fn build(&self) -> MetricNearnessInstance {
+        let mut inst = MetricNearnessInstance::random(self.n, self.hi, self.seed);
+        let mut rng = Rng::new(self.seed ^ 0x57e1_64f5);
+        inst.w = match self.weights {
+            WeightKind::Unit => PackedSym::filled(self.n, 1.0),
+            WeightKind::Uniform => PackedSym::from_fn(self.n, |_, _| rng.f64_in(0.5, 2.0)),
+            WeightKind::Spiky => PackedSym::from_fn(self.n, |_, _| {
+                if rng.f64_in(0.0, 1.0) < 0.1 {
+                    25.0
+                } else {
+                    1.0
+                }
+            }),
+        };
+        inst
+    }
+
+    fn label(&self) -> String {
+        format!("n={}/w={}/seed={}", self.n, self.weights.name(), self.seed)
+    }
+}
+
+/// The default nightly sweep: sizes × weight structures, one seed per
+/// cell derived from `base_seed` so re-runs are reproducible and
+/// distinct bases give distinct instances.
+pub fn default_sweep(base_seed: u64, ns: &[usize]) -> Vec<CaseSpec> {
+    let mut specs = Vec::new();
+    for (i, &n) in ns.iter().enumerate() {
+        for (j, weights) in
+            [WeightKind::Unit, WeightKind::Uniform, WeightKind::Spiky].into_iter().enumerate()
+        {
+            specs.push(CaseSpec {
+                n,
+                seed: base_seed.wrapping_add(1000 * i as u64 + 100 * j as u64),
+                weights,
+                hi: 2.0,
+            });
+        }
+    }
+    specs
+}
+
+/// The per-member agreement band (see the module docs for where the
+/// numbers come from).
+#[derive(Clone, Copy, Debug)]
+pub struct Band {
+    /// `|obj_prox − obj_dyk| ≤ rel_obj_tol · max(1, obj_dyk)`.
+    pub rel_obj_tol: f64,
+    /// Feasibility the proximal iterate must reach.
+    pub viol_tol: f64,
+    /// `tol_violation` the proximal solver is *run* with (tighter than
+    /// `viol_tol`, so the check has slack over the stopping rule).
+    pub solve_tol: f64,
+}
+
+impl Band {
+    /// The validated band for an algorithm member.
+    pub fn for_algorithm(a: Algorithm) -> Band {
+        match a {
+            Algorithm::ProxMm => Band { rel_obj_tol: 5e-3, viol_tol: 1e-6, solve_tol: 1e-7 },
+            Algorithm::ProxSd => Band { rel_obj_tol: 2e-2, viol_tol: 1e-5, solve_tol: 1e-6 },
+            // Dykstra vs itself: the reference band is only used when
+            // judging injected solutions in tests.
+            Algorithm::Dykstra => Band { rel_obj_tol: 1e-9, viol_tol: 1e-6, solve_tol: 1e-7 },
+        }
+    }
+}
+
+/// One judged comparison.
+#[derive(Clone, Debug)]
+pub struct Verdict {
+    /// Case label, e.g. `n=16/w=spiky/seed=7100`.
+    pub case: String,
+    /// Which proximal member was compared against Dykstra.
+    pub algorithm: Algorithm,
+    /// Converged Dykstra objective (the reference).
+    pub obj_dykstra: f64,
+    /// Converged proximal objective.
+    pub obj_prox: f64,
+    /// `|obj_prox − obj_dyk| / max(1, obj_dyk)`.
+    pub rel_gap: f64,
+    /// Proximal max triangle violation.
+    pub max_violation: f64,
+    /// The band that was applied.
+    pub band: Band,
+    /// Whether both checks passed.
+    pub pass: bool,
+}
+
+/// Apply a [`Band`] to a pair of converged objectives + the proximal
+/// feasibility. Public (and solver-free) so negative tests can judge
+/// deliberately wrong solutions without re-running anything.
+pub fn judge(
+    case: String,
+    algorithm: Algorithm,
+    obj_dykstra: f64,
+    obj_prox: f64,
+    max_violation: f64,
+    band: Band,
+) -> Verdict {
+    let scale = obj_dykstra.abs().max(1.0);
+    let rel_gap = (obj_prox - obj_dykstra).abs() / scale;
+    let feasible = max_violation <= band.viol_tol;
+    let close = rel_gap <= band.rel_obj_tol;
+    Verdict {
+        case,
+        algorithm,
+        obj_dykstra,
+        obj_prox,
+        rel_gap,
+        max_violation,
+        band,
+        pass: feasible && close && obj_prox.is_finite(),
+    }
+}
+
+/// The sweep's verdict table.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub verdicts: Vec<Verdict>,
+}
+
+impl Report {
+    /// True iff every verdict passed.
+    pub fn all_pass(&self) -> bool {
+        self.verdicts.iter().all(|v| v.pass)
+    }
+
+    /// Failing verdicts (for error messages).
+    pub fn failures(&self) -> Vec<&Verdict> {
+        self.verdicts.iter().filter(|v| !v.pass).collect()
+    }
+
+    /// Machine-readable verdict table (the nightly CI artifact).
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .verdicts
+            .iter()
+            .map(|v| {
+                Json::Obj(vec![
+                    ("case".to_string(), Json::Str(v.case.clone())),
+                    ("algorithm".to_string(), Json::Str(v.algorithm.name().to_string())),
+                    ("obj_dykstra".to_string(), json::num(v.obj_dykstra)),
+                    ("obj_prox".to_string(), json::num(v.obj_prox)),
+                    ("rel_gap".to_string(), json::num(v.rel_gap)),
+                    ("max_violation".to_string(), json::num(v.max_violation)),
+                    ("rel_obj_tol".to_string(), json::num(v.band.rel_obj_tol)),
+                    ("viol_tol".to_string(), json::num(v.band.viol_tol)),
+                    ("pass".to_string(), Json::Bool(v.pass)),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("all_pass".to_string(), Json::Bool(self.all_pass())),
+            ("cases".to_string(), json::unum(self.verdicts.len() as u64)),
+            ("verdicts".to_string(), Json::Arr(rows)),
+        ])
+    }
+
+    /// Fixed-width human table (one row per verdict).
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<28} {:<8} {:>12} {:>12} {:>10} {:>10}  verdict\n",
+            "case", "member", "obj_dykstra", "obj_prox", "rel_gap", "max_viol"
+        ));
+        for v in &self.verdicts {
+            out.push_str(&format!(
+                "{:<28} {:<8} {:>12.6} {:>12.6} {:>10.2e} {:>10.2e}  {}\n",
+                v.case,
+                v.algorithm.name(),
+                v.obj_dykstra,
+                v.obj_prox,
+                v.rel_gap,
+                v.max_violation,
+                if v.pass { "ok" } else { "MISMATCH" }
+            ));
+        }
+        out
+    }
+}
+
+/// Dykstra reference options: converge hard so the reference is the
+/// exact projection for all practical purposes.
+fn dykstra_opts(threads: usize) -> NearnessOpts {
+    NearnessOpts {
+        max_passes: 5000,
+        check_every: 10,
+        tol_violation: 1e-10,
+        threads,
+        ..Default::default()
+    }
+}
+
+/// Run both proximal members and Dykstra on one case; returns the two
+/// verdicts (MM and SD).
+pub fn run_case(spec: &CaseSpec, threads: usize) -> Result<Vec<Verdict>, SolveError> {
+    let inst = spec.build();
+    let dyk = nearness::solve(&inst, &dykstra_opts(threads));
+    let mut verdicts = Vec::with_capacity(2);
+    for algorithm in [Algorithm::ProxMm, Algorithm::ProxSd] {
+        let band = Band::for_algorithm(algorithm);
+        let prox = nearness::solve_stored(
+            &inst,
+            &NearnessOpts {
+                algorithm,
+                threads,
+                tol_violation: band.solve_tol,
+                ..Default::default()
+            },
+            &crate::matrix::store::StoreCfg::mem(),
+            None,
+            &mut |_| {},
+        )
+        .map_err(SolveError::Other)?;
+        verdicts.push(judge(
+            spec.label(),
+            algorithm,
+            dyk.objective,
+            prox.objective,
+            prox.max_violation,
+            band,
+        ));
+    }
+    Ok(verdicts)
+}
+
+/// Run the whole sweep; solver errors become failing verdicts (the
+/// oracle must go red, not crash, when a member diverges).
+pub fn run_sweep(specs: &[CaseSpec], threads: usize) -> Report {
+    let mut report = Report::default();
+    for spec in specs {
+        match run_case(spec, threads) {
+            Ok(vs) => report.verdicts.extend(vs),
+            Err(e) => {
+                for algorithm in [Algorithm::ProxMm, Algorithm::ProxSd] {
+                    report.verdicts.push(Verdict {
+                        case: format!("{} [solver error: {e}]", spec.label()),
+                        algorithm,
+                        obj_dykstra: f64::NAN,
+                        obj_prox: f64::NAN,
+                        rel_gap: f64::INFINITY,
+                        max_violation: f64::INFINITY,
+                        band: Band::for_algorithm(algorithm),
+                        pass: false,
+                    });
+                }
+            }
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_sweep_is_deterministic_and_distinct() {
+        let a = default_sweep(7, &[8, 10]);
+        let b = default_sweep(7, &[8, 10]);
+        assert_eq!(a.len(), 6);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.seed, y.seed);
+            assert_eq!(x.build().d, y.build().d);
+            assert_eq!(x.build().w, y.build().w);
+        }
+        let mut seeds: Vec<u64> = a.iter().map(|s| s.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 6, "sweep seeds collide");
+    }
+
+    #[test]
+    fn weight_kinds_shape_the_weights() {
+        let unit = CaseSpec { n: 10, seed: 3, weights: WeightKind::Unit, hi: 2.0 }.build();
+        assert!(unit.w.as_slice().iter().all(|&w| w == 1.0));
+        let spiky = CaseSpec { n: 14, seed: 3, weights: WeightKind::Spiky, hi: 2.0 }.build();
+        let boosted = spiky.w.as_slice().iter().filter(|&&w| w == 25.0).count();
+        assert!(boosted > 0, "no boosted weights at n=14");
+        assert!(spiky.w.as_slice().iter().all(|&w| w == 1.0 || w == 25.0));
+        spiky.validate().unwrap();
+        let uniform =
+            CaseSpec { n: 10, seed: 3, weights: WeightKind::Uniform, hi: 2.0 }.build();
+        assert!(uniform.w.as_slice().iter().all(|&w| (0.5..=2.0).contains(&w)));
+    }
+
+    #[test]
+    fn judge_applies_both_checks() {
+        let band = Band { rel_obj_tol: 1e-2, viol_tol: 1e-6, solve_tol: 1e-7 };
+        let ok = judge("c".into(), Algorithm::ProxMm, 10.0, 10.05, 1e-8, band);
+        assert!(ok.pass, "{ok:?}");
+        let far = judge("c".into(), Algorithm::ProxMm, 10.0, 11.0, 1e-8, band);
+        assert!(!far.pass);
+        let infeasible = judge("c".into(), Algorithm::ProxMm, 10.0, 10.0, 1e-3, band);
+        assert!(!infeasible.pass);
+        let nan = judge("c".into(), Algorithm::ProxMm, 10.0, f64::NAN, 1e-8, band);
+        assert!(!nan.pass);
+    }
+
+    #[test]
+    fn report_json_and_table_render() {
+        let band = Band::for_algorithm(Algorithm::ProxMm);
+        let report = Report {
+            verdicts: vec![
+                judge("a".into(), Algorithm::ProxMm, 1.0, 1.001, 1e-8, band),
+                judge("b".into(), Algorithm::ProxSd, 1.0, 2.0, 1e-2, band),
+            ],
+        };
+        assert!(!report.all_pass());
+        assert_eq!(report.failures().len(), 1);
+        let j = report.to_json();
+        assert_eq!(j.get("all_pass").and_then(Json::as_bool), Some(false));
+        assert_eq!(j.get("cases").and_then(Json::as_u64), Some(2));
+        let rows = j.get("verdicts").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("pass").and_then(Json::as_bool), Some(true));
+        // roundtrips through the parser (the CI job reads it back)
+        let reparsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(reparsed.get("cases").and_then(Json::as_u64), Some(2));
+        let table = report.render_table();
+        assert!(table.contains("MISMATCH"));
+        assert!(table.contains("ok"));
+    }
+
+    #[test]
+    fn oracle_passes_on_a_small_case() {
+        let spec = CaseSpec { n: 10, seed: 11, weights: WeightKind::Uniform, hi: 2.0 };
+        let verdicts = run_case(&spec, 2).unwrap();
+        assert_eq!(verdicts.len(), 2);
+        for v in &verdicts {
+            assert!(v.pass, "{}", Report { verdicts: verdicts.clone() }.render_table());
+        }
+    }
+}

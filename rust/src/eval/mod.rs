@@ -3,6 +3,7 @@
 //! it exercises). Shared by the CLI (`metric-proj table1|fig6|fig7`) and
 //! the cargo benches.
 
+pub mod cross_check;
 pub mod regression;
 pub mod simulate;
 

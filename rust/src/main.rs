@@ -15,6 +15,7 @@
 //!            [--watchdog-stall 5 --watchdog-dump watchdog_dump.json]
 //!            [--trace-out run.jsonl] [--progress]
 //!   nearness --n 200 --threads 8 --tile 40 --passes 50
+//!            [--algorithm dykstra|prox-mm|prox-sd]
 //!            [--strategy full|active --sweep-every 8 --forget-after 3]
 //!            [--sweep-backend scalar|screened|engine] [--sweep-policy fixed|adaptive]
 //!            [--store mem|disk --store-dir store --store-budget-mb 64]
@@ -23,6 +24,8 @@
 //!            [--recover-attempts 2] [--on-interrupt ignore|checkpoint]
 //!            [--watchdog-stall 5 --watchdog-dump watchdog_dump.json]
 //!            [--trace-out run.jsonl] [--progress]
+//!   cross-check [--ns 8,12,16] [--seed 42] [--threads 4] [--out verdicts.json]
+//!            [--self-test] — differential oracle: Dykstra vs the proximal family
 //!   report   --trace run.jsonl[,run2.jsonl...]
 //!   bench-gate --fresh rows.json[,rows2.json...] [--baseline bench/baseline.json]
 //!            [--tolerance 0.25]
@@ -74,6 +77,7 @@ fn main() -> Result<()> {
         "info" => cmd_info(),
         "solve" => cmd_solve(&args),
         "nearness" => cmd_nearness(&args),
+        "cross-check" => cmd_cross_check(&args),
         "warm-ablation" => cmd_warm_ablation(&args),
         "generate" => cmd_generate(&args),
         "table1" => cmd_table1(&args),
@@ -95,7 +99,7 @@ fn main() -> Result<()> {
 fn print_help() {
     println!(
         "metric-proj — parallel projection methods for metric-constrained optimization\n\
-         commands: info | solve | nearness | warm-ablation | generate | table1 | fig6 | fig7 | report | bench-gate\n\
+         commands: info | solve | nearness | cross-check | warm-ablation | generate | table1 | fig6 | fig7 | report | bench-gate\n\
          see rust/src/main.rs header or README.md for options"
     );
 }
@@ -122,6 +126,12 @@ fn parse_strategy(args: &Args) -> Result<Strategy> {
     let s = args.get("strategy").unwrap_or("full");
     Strategy::parse(s, sweep_every, forget_after)
         .with_context(|| format!("--strategy must be full|active, got `{s}`"))
+}
+
+fn parse_algorithm(args: &Args) -> Result<metric_proj::solver::Algorithm> {
+    let s = args.get("algorithm").unwrap_or("dykstra");
+    metric_proj::solver::Algorithm::parse(s)
+        .with_context(|| format!("--algorithm must be dykstra|prox-mm|prox-sd, got `{s}`"))
 }
 
 fn parse_sweep_backend(args: &Args) -> Result<SweepBackend> {
@@ -500,6 +510,16 @@ fn build_instance_cli(args: &Args) -> Result<(CcLpInstance, String)> {
 }
 
 fn cmd_solve(args: &Args) -> Result<()> {
+    let algorithm = parse_algorithm(args)?;
+    if algorithm.is_proximal() {
+        bail!(
+            "--algorithm {} is implemented for the nearness problem only \
+             (the CC-LP objective has slack variables the proximal penalty \
+             does not model); use `nearness --algorithm {}` or drop the flag",
+            algorithm.name(),
+            algorithm.name()
+        );
+    }
     let (inst, desc) = build_instance_cli(args)?;
     let ck = CheckpointCli::parse(args)?;
     let robust = RobustCli::parse(args, &ck)?;
@@ -667,6 +687,7 @@ fn cmd_nearness(args: &Args) -> Result<()> {
         checkpoint_every: ck.every,
         on_interrupt: robust.on_interrupt,
         watchdog_stall: robust.watchdog_stall,
+        algorithm: parse_algorithm(args)?,
         ..Default::default()
     };
     let start: Option<SolverState> = match ck.loaded.clone() {
@@ -722,13 +743,122 @@ fn cmd_nearness(args: &Args) -> Result<()> {
     };
     trace.finish()?;
     ck.report();
-    println!("metric nearness n={n}: passes={} time={secs:.2}s", sol.passes);
+    println!(
+        "metric nearness n={n} ({}): passes={} time={secs:.2}s",
+        opts.algorithm.name(),
+        sol.passes
+    );
     println!("objective ||X-D||_W^2 = {:.4}", sol.objective);
     println!("max violation = {:.3e}", sol.max_violation);
     let full_per_pass = metric_proj::solver::schedule::n_triplets(n) as u128 * 3;
     print_work(sol.metric_visits, sol.active_triplets, sol.passes, full_per_pass);
     print_sweep_screen(sol.sweep_screened, sol.sweep_projected);
     print_store_io(sol.store_stats);
+    Ok(())
+}
+
+/// `cross-check` — the cross-family differential oracle: run Dykstra and
+/// both proximal members over a seeded instance sweep, compare converged
+/// objectives and feasibility within the documented bands, and emit the
+/// machine-readable verdict table. `--self-test` additionally proves the
+/// oracle's sensitivity by driving the MM solver over a deliberately
+/// broken triangle operator and demanding a MISMATCH verdict. Exits
+/// nonzero on any mismatch (or on a self-test that fails to trip).
+fn cmd_cross_check(args: &Args) -> Result<()> {
+    use metric_proj::eval::cross_check::{self, Band, CaseSpec, WeightKind};
+    use metric_proj::solver::proximal::{self, operator, ProxTuning};
+    use metric_proj::solver::Algorithm;
+
+    let ns = args
+        .get_list("ns")
+        .map_err(|e| anyhow::anyhow!(e))?
+        .unwrap_or_else(|| vec![8, 12, 16]);
+    let seed = args.get_or("seed", 42u64).map_err(|e| anyhow::anyhow!(e))?;
+    let threads =
+        args.get_or("threads", available_cores().min(4)).map_err(|e| anyhow::anyhow!(e))?;
+    let specs = cross_check::default_sweep(seed, &ns);
+    println!(
+        "# cross-family oracle — {} cases (ns={ns:?} x unit/uniform/spiky weights, \
+         base seed {seed}), {threads} thread(s)",
+        specs.len()
+    );
+    let report = cross_check::run_sweep(&specs, threads);
+    print!("{}", report.render_table());
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, report.to_json().to_string())
+            .with_context(|| format!("writing verdict table `{out}`"))?;
+        println!("verdicts  : written to {out}");
+    }
+
+    if args.has_flag("self-test") {
+        // Negative control: the same MM solver over a sign-flipped T'T
+        // must land visibly outside the band.
+        let spec = CaseSpec { n: 10, seed, weights: WeightKind::Unit, hi: 2.0 };
+        let inst = spec.build();
+        let dyk = nearness::solve(
+            &inst,
+            &nearness::NearnessOpts {
+                max_passes: 5000,
+                check_every: 10,
+                tol_violation: 1e-10,
+                threads,
+                ..Default::default()
+            },
+        );
+        let band = Band::for_algorithm(Algorithm::ProxMm);
+        let tuning = ProxTuning::default();
+        let broken = operator::BrokenOperator(operator::WaveOperator::new(inst.n, 8, threads));
+        let verdict = match proximal::solve_nearness_with(
+            &inst,
+            Algorithm::ProxMm,
+            band.solve_tol,
+            threads,
+            &tuning,
+            &broken,
+            &metric_proj::telemetry::NullRecorder,
+        ) {
+            Ok(sol) => cross_check::judge(
+                "self-test/broken-operator".to_string(),
+                Algorithm::ProxMm,
+                dyk.objective,
+                sol.objective,
+                sol.max_violation,
+                band,
+            ),
+            // A divergence error is an equally valid detection.
+            Err(e) => {
+                println!("self-test : broken operator made the solver fail typed ({e}) — ok");
+                cross_check::judge(
+                    "self-test/broken-operator".to_string(),
+                    Algorithm::ProxMm,
+                    dyk.objective,
+                    f64::NAN,
+                    f64::INFINITY,
+                    band,
+                )
+            }
+        };
+        if verdict.pass {
+            bail!(
+                "oracle self-test FAILED: a sign-flipped T'T kernel passed the band \
+                 (rel_gap {:.3e}, viol {:.3e}) — the tolerances are too loose",
+                verdict.rel_gap,
+                verdict.max_violation
+            );
+        }
+        println!(
+            "self-test : broken kernel flagged (rel_gap {:.3e}, viol {:.3e}) — oracle is live",
+            verdict.rel_gap, verdict.max_violation
+        );
+    }
+
+    if !report.all_pass() {
+        bail!(
+            "cross-family oracle found {} mismatch(es) — see the table above",
+            report.failures().len()
+        );
+    }
+    println!("oracle    : all {} verdicts within tolerance", report.verdicts.len());
     Ok(())
 }
 

@@ -35,6 +35,7 @@ pub mod error;
 pub(crate) mod hot_loop;
 pub mod nearness;
 pub mod projection;
+pub mod proximal;
 pub mod recover;
 pub mod schedule;
 pub mod schedule_delta;
@@ -151,6 +152,60 @@ impl SweepBackend {
     }
 }
 
+/// Which algorithm family runs the solve.
+///
+/// `Dykstra` is the paper's cyclic-projection family — every driver in
+/// this crate (serial/parallel/active, any store, any sweep backend) is
+/// a constraint-ordering variant of it, and all of them converge to the
+/// *exact* weighted projection. The two `Prox*` members are the
+/// proximal-distance family ([`proximal`]): the same metric-nearness
+/// objective minimized by a completely independent route (penalized
+/// unconstrained subproblems driven by an increasing penalty `rho`,
+/// matrix-free over the same wave schedule). They agree with Dykstra
+/// only *within tolerance* — the penalty path stops at finite `rho` —
+/// which is exactly what makes them useful as a differential-testing
+/// oracle ([`crate::eval::cross_check`]): a shared bug in one family is
+/// vanishingly unlikely to reproduce in the other.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Algorithm {
+    /// Cyclic Dykstra projections (the paper's family; exact).
+    #[default]
+    Dykstra,
+    /// Proximal-distance majorize-minimize: Nesterov-accelerated outer
+    /// iterations, each solving the penalized normal equations with
+    /// matrix-free preconditioned CG ([`proximal::mm`]).
+    ProxMm,
+    /// Proximal-distance steepest descent with exact line search
+    /// ([`proximal::sd`]) — cheaper per iteration, looser tolerance.
+    ProxSd,
+}
+
+impl Algorithm {
+    /// Parse a CLI name (`dykstra` / `prox-mm` / `prox-sd`).
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s {
+            "dykstra" => Some(Algorithm::Dykstra),
+            "prox-mm" | "mm" => Some(Algorithm::ProxMm),
+            "prox-sd" | "sd" => Some(Algorithm::ProxSd),
+            _ => None,
+        }
+    }
+
+    /// CLI name of the algorithm.
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Dykstra => "dykstra",
+            Algorithm::ProxMm => "prox-mm",
+            Algorithm::ProxSd => "prox-sd",
+        }
+    }
+
+    /// True for either proximal-distance member.
+    pub fn is_proximal(self) -> bool {
+        !matches!(self, Algorithm::Dykstra)
+    }
+}
+
 /// When the active-set driver runs its next discovery sweep.
 ///
 /// `Fixed(k)` is the classic cadence: a sweep every `k` passes (pass
@@ -251,6 +306,11 @@ pub struct SolveOpts {
     /// consecutive convergence checks without residual progress
     /// (0 = stall detection off; NaN/∞ divergence always trips).
     pub watchdog_stall: usize,
+    /// Algorithm family. Only [`Algorithm::Dykstra`] is implemented for
+    /// the CC-LP objective; the proximal members are metric-nearness
+    /// only and make `solve` fail typed (the nearness drivers dispatch
+    /// on [`nearness::NearnessOpts::algorithm`] instead).
+    pub algorithm: Algorithm,
 }
 
 impl Default for SolveOpts {
@@ -272,6 +332,7 @@ impl Default for SolveOpts {
             checkpoint_every: 0,
             on_interrupt: OnInterrupt::default(),
             watchdog_stall: 0,
+            algorithm: Algorithm::default(),
         }
     }
 }
@@ -509,6 +570,24 @@ mod tests {
         for b in [SweepBackend::Scalar, SweepBackend::Screened, SweepBackend::Engine] {
             assert_eq!(SweepBackend::parse(b.name()), Some(b));
         }
+    }
+
+    #[test]
+    fn algorithm_parses_and_defaults_to_dykstra() {
+        assert_eq!(Algorithm::parse("dykstra"), Some(Algorithm::Dykstra));
+        assert_eq!(Algorithm::parse("prox-mm"), Some(Algorithm::ProxMm));
+        assert_eq!(Algorithm::parse("mm"), Some(Algorithm::ProxMm));
+        assert_eq!(Algorithm::parse("prox-sd"), Some(Algorithm::ProxSd));
+        assert_eq!(Algorithm::parse("sd"), Some(Algorithm::ProxSd));
+        assert_eq!(Algorithm::parse("admm"), None);
+        assert_eq!(Algorithm::default(), Algorithm::Dykstra);
+        assert_eq!(SolveOpts::default().algorithm, Algorithm::Dykstra);
+        for a in [Algorithm::Dykstra, Algorithm::ProxMm, Algorithm::ProxSd] {
+            assert_eq!(Algorithm::parse(a.name()), Some(a));
+        }
+        assert!(!Algorithm::Dykstra.is_proximal());
+        assert!(Algorithm::ProxMm.is_proximal());
+        assert!(Algorithm::ProxSd.is_proximal());
     }
 
     #[test]

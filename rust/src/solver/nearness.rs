@@ -15,7 +15,7 @@ use super::dykstra_parallel::{emit_retries, run_metric_phase_timed};
 use super::error::SolveError;
 use super::schedule::{Assignment, Schedule};
 use super::watchdog::Watchdog;
-use super::{OnInterrupt, Strategy, SweepBackend, SweepPolicy};
+use super::{Algorithm, OnInterrupt, Strategy, SweepBackend, SweepPolicy};
 use crate::instance::metric_nearness::MetricNearnessInstance;
 use crate::matrix::store::StoreCfg;
 use crate::matrix::PackedSym;
@@ -59,6 +59,12 @@ pub struct NearnessOpts {
     /// Watchdog stall budget in residual *checks* without improvement
     /// (0 = stall detection off; divergence detection is always on).
     pub watchdog_stall: usize,
+    /// Algorithm family ([`Algorithm`]). The proximal members route the
+    /// whole solve to [`super::proximal`] (resident store only, no
+    /// resume); every other option above that the proximal family does
+    /// not consume (`strategy`, sweep knobs, checkpoint cadence) is
+    /// ignored there.
+    pub algorithm: Algorithm,
 }
 
 impl Default for NearnessOpts {
@@ -76,6 +82,7 @@ impl Default for NearnessOpts {
             checkpoint_every: 0,
             on_interrupt: OnInterrupt::Ignore,
             watchdog_stall: 0,
+            algorithm: Algorithm::Dykstra,
         }
     }
 }
@@ -195,6 +202,23 @@ pub fn solve_traced(
     on_checkpoint: &mut dyn FnMut(&SolverState),
     rec: &dyn Recorder,
 ) -> Result<NearnessSolution, SolveError> {
+    if opts.algorithm.is_proximal() {
+        if store_cfg.kind != crate::matrix::store::StoreKind::Mem {
+            return Err(SolveError::Other(anyhow::anyhow!(
+                "--algorithm {} runs resident-only (the penalty subproblems sweep \
+                 dense vectors, not leased tiles); drop --store disk or use dykstra",
+                opts.algorithm.name()
+            )));
+        }
+        if resume_from.is_some() {
+            return Err(SolveError::Other(anyhow::anyhow!(
+                "--algorithm {} does not support checkpoint resume; re-run from \
+                 the instance or resume with the dykstra family",
+                opts.algorithm.name()
+            )));
+        }
+        return super::proximal::solve_nearness_traced(inst, opts, rec);
+    }
     if opts.strategy.is_active() {
         return super::active::solve_nearness_traced(
             inst,

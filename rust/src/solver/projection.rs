@@ -554,6 +554,173 @@ mod tests {
         }
     }
 
+    /// Project the 3-vector `xs` onto metric halfspace `t` (pure
+    /// projection: zero incoming dual), returning the new point and
+    /// `theta`.
+    fn project(xs: &[f64; 3], winv: &[f64; 3], t: usize) -> ([f64; 3], f64) {
+        let mut v = xs.to_vec();
+        let theta = {
+            let x = shared(&mut v);
+            unsafe { visit_metric(&x, winv, 0, 1, 2, t, 0.0) }
+        };
+        ([v[0], v[1], v[2]], theta)
+    }
+
+    fn residual(xs: &[f64; 3], t: usize) -> f64 {
+        let [s0, s1, s2] = METRIC_SIGNS[t];
+        s0 * xs[0] + s1 * xs[1] + s2 * xs[2]
+    }
+
+    /// Squared W-norm of a difference (`w = 1/winv`; the inner product
+    /// the projection is taken in).
+    fn w_dist_sq(a: &[f64; 3], b: &[f64; 3], winv: &[f64; 3]) -> f64 {
+        (0..3).map(|k| (a[k] - b[k]).powi(2) / winv[k]).sum()
+    }
+
+    #[test]
+    fn projection_is_feasible_and_idempotent() {
+        use crate::prop_assert;
+        use crate::util::proptest::check;
+        check("proj_feas_idem", 0x9e01, 128, |rng, case| {
+            let t = case % 3;
+            let xs = [
+                rng.f64_in(-2.5, 2.5),
+                rng.f64_in(-2.5, 2.5),
+                rng.f64_in(-2.5, 2.5),
+            ];
+            let winv =
+                [rng.f64_in(0.2, 5.0), rng.f64_in(0.2, 5.0), rng.f64_in(0.2, 5.0)];
+            let (p, theta) = project(&xs, &winv, t);
+            // Feasibility: one visit lands on or inside the halfspace.
+            prop_assert!(
+                residual(&p, t) <= 1e-9,
+                "t={t} residual {} after projection",
+                residual(&p, t)
+            );
+            prop_assert!(theta >= 0.0, "negative dual {theta}");
+            // Idempotence: projecting the projected point is a no-op up
+            // to roundoff of the (now ~0) residual.
+            let (pp, theta2) = project(&p, &winv, t);
+            prop_assert!(theta2 <= 1e-12, "second projection moved: theta {theta2}");
+            for k in 0..3 {
+                prop_assert!((pp[k] - p[k]).abs() <= 1e-11, "idempotence at {k}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn projection_is_nonexpansive_in_w_norm() {
+        use crate::prop_assert;
+        use crate::util::proptest::check;
+        // ||P(a) - P(b)||_W <= ||a - b||_W — the defining property of a
+        // projection in the W-inner product, and the reason Dykstra
+        // converges at all. Checked across random pairs, weights, and
+        // all three constraint orientations.
+        check("proj_nonexpansive", 0x9e02, 128, |rng, case| {
+            let t = case % 3;
+            let a = [
+                rng.f64_in(-2.5, 2.5),
+                rng.f64_in(-2.5, 2.5),
+                rng.f64_in(-2.5, 2.5),
+            ];
+            let b = [
+                rng.f64_in(-2.5, 2.5),
+                rng.f64_in(-2.5, 2.5),
+                rng.f64_in(-2.5, 2.5),
+            ];
+            let winv =
+                [rng.f64_in(0.2, 5.0), rng.f64_in(0.2, 5.0), rng.f64_in(0.2, 5.0)];
+            let (pa, _) = project(&a, &winv, t);
+            let (pb, _) = project(&b, &winv, t);
+            let before = w_dist_sq(&a, &b, &winv);
+            let after = w_dist_sq(&pa, &pb, &winv);
+            prop_assert!(
+                after <= before * (1.0 + 1e-12) + 1e-12,
+                "t={t} expanded: {after} > {before}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_inverse_weight_freezes_the_coordinate() {
+        // winv = 0 is the w -> infinity limit: an immovable entry. The
+        // projection must leave it bitwise untouched and still land on
+        // the constraint plane by moving only the free coordinates.
+        let winv = [0.0, 1.0, 1.0];
+        let xs = [3.0, 0.5, 0.5]; // residual 2 for t = 0
+        let (p, theta) = project(&xs, &winv, 0);
+        assert_eq!(p[0].to_bits(), xs[0].to_bits(), "frozen coordinate moved");
+        assert!((theta - 1.0).abs() < 1e-12, "theta = delta / (0+1+1), got {theta}");
+        assert!(residual(&p, 0).abs() < 1e-12, "not on the plane: {}", residual(&p, 0));
+    }
+
+    #[test]
+    fn exactly_tight_constraint_is_a_bitwise_noop() {
+        use crate::prop_assert;
+        use crate::util::proptest::check;
+        // A point exactly on the plane (residual == 0.0) must produce
+        // theta == 0 and no store at all — the same contract the
+        // screened sweep's skip path relies on for feasible triplets.
+        check("proj_tight_noop", 0x9e03, 64, |rng, case| {
+            let t = case % 3;
+            // Dyadic draws (multiples of 1/8, small magnitude) keep every
+            // sum below exact, so the constructed point sits on the plane
+            // with residual exactly 0.0, not merely near it.
+            let dyadic = |rng: &mut crate::util::rng::Rng| {
+                (rng.usize_in(0, 33) as f64 - 16.0) / 8.0
+            };
+            let free = [dyadic(rng), dyadic(rng)];
+            // Solve the plane equation for the t-th coordinate.
+            let mut xs = [0.0; 3];
+            let (a, b) = ((t + 1) % 3, (t + 2) % 3);
+            xs[a] = free[0];
+            xs[b] = free[1];
+            xs[t] = free[0] + free[1]; // s_t*x_t = x_a + x_b -> residual 0
+            prop_assert!(residual(&xs, t) == 0.0, "dyadic construction not exact");
+            let winv =
+                [rng.f64_in(0.2, 5.0), rng.f64_in(0.2, 5.0), rng.f64_in(0.2, 5.0)];
+            let (p, theta) = project(&xs, &winv, t);
+            prop_assert!(theta == 0.0, "tight constraint produced dual {theta}");
+            for k in 0..3 {
+                prop_assert!(
+                    p[k].to_bits() == xs[k].to_bits(),
+                    "tight visit wrote to x[{k}]"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_triplet_output_is_metric_feasible() {
+        use crate::prop_assert;
+        use crate::util::proptest::check;
+        // Repeated fused visits (with Dykstra memory) must drive any
+        // random triple to a point satisfying all three inequalities —
+        // convergence of cyclic Dykstra on one triplet's constraint set.
+        check("triplet_converges", 0x9e04, 48, |rng, _case| {
+            let mut v = vec![
+                rng.f64_in(-2.0, 4.0),
+                rng.f64_in(-2.0, 4.0),
+                rng.f64_in(-2.0, 4.0),
+            ];
+            let winv =
+                vec![rng.f64_in(0.2, 5.0), rng.f64_in(0.2, 5.0), rng.f64_in(0.2, 5.0)];
+            let mut y = [0.0; 3];
+            for _ in 0..400 {
+                let x = shared(&mut v);
+                y = unsafe { visit_triplet(&x, &winv, 0, 1, 2, y) };
+            }
+            for t in 0..3 {
+                let r = residual(&[v[0], v[1], v[2]], t);
+                prop_assert!(r <= 1e-7, "constraint {t} violated by {r} after 400 visits");
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn dykstra_two_halfspace_convergence() {
         // Classic sanity check: alternating Dykstra visits to two

@@ -1,0 +1,282 @@
+//! The **proximal-distance** solver family — the second, fully
+//! independent algorithm family for the metric-nearness objective
+//! (ROADMAP "second algorithm family"; Keys–Zhou–Lange's
+//! proximal-distance framework applied to metric projection).
+//!
+//! Where every Dykstra driver in this crate projects onto one
+//! constraint at a time and converges to the **exact** weighted
+//! projection, the proximal family never projects at all: it minimizes
+//! the penalized objective `f(x) + ρ/2 · dist²(Dx, ℝ₊)` for an
+//! increasing ladder of penalties `ρ`, where `D = [T; I]` stacks the
+//! triangle operator ([`operator`]) on the identity. As `ρ → ∞` the
+//! penalty path converges to the projection — validated to a relative
+//! objective agreement of ~1e-4 against converged Dykstra in the f64
+//! prototype behind this module — but any finite run stops at finite
+//! `ρ`, so the family agrees with Dykstra *within tolerance*, never
+//! bitwise. That near-total independence (different math, different
+//! fixed point, different stopping) is the point: the two families
+//! cross-check each other in [`crate::eval::cross_check`], and a bug in
+//! either one shows up as a tolerance-band mismatch
+//! (`tests/cross_family.rs` proves this with a deliberately broken
+//! operator).
+//!
+//! Two members, selected by [`Algorithm`]:
+//!
+//! * [`Algorithm::ProxMm`] ([`mm`]) — majorize-minimize; each outer
+//!   iteration solves `(W + ρ(T'T + I)) x = W∘d + ρ(T'p + q)` with
+//!   matrix-free preconditioned CG ([`cg`]), Nesterov-accelerated,
+//!   `ρ` annealed per iteration. The accurate member.
+//! * [`Algorithm::ProxSd`] ([`sd`]) — steepest descent with an exact
+//!   majorized step, no linear solves. The cheap member.
+//!
+//! Both run every operator sweep over the same conflict-free wave
+//! schedule as the Dykstra drivers and are bitwise independent of the
+//! thread count ([`operator::WaveOperator`]); neither supports disk
+//! stores or checkpoint resume (the iterate is a dense resident pair
+//! vector by construction — [`crate::solver::nearness::solve_traced`]
+//! rejects those combinations typed).
+
+pub mod cg;
+pub mod mm;
+pub mod operator;
+pub mod sd;
+
+use crate::instance::metric_nearness::MetricNearnessInstance;
+use crate::solver::error::SolveError;
+use crate::solver::nearness::{NearnessOpts, NearnessSolution};
+use crate::solver::Algorithm;
+use crate::telemetry::{NullRecorder, Recorder};
+use operator::{MetricOperator, WaveOperator};
+
+/// Iteration-schedule knobs of the proximal family. The defaults are
+/// the values tuned in the f64 prototype (see EXPERIMENTS.md,
+/// "Cross-family oracle"): they reach ≤1e-7 violation and ~1e-4 relative
+/// objective agreement with Dykstra on seeded random instances up to
+/// n ≈ 24 in a few hundred outer iterations. [`NearnessOpts`] supplies
+/// what the proximal loops share with Dykstra (`tol_violation`,
+/// `threads`, `tile`); everything schedule-specific lives here, because
+/// `max_passes = 50`-style Dykstra budgets would cripple a penalty
+/// method that needs hundreds of cheap outer steps.
+#[derive(Clone, Copy, Debug)]
+pub struct ProxTuning {
+    /// Initial penalty ρ.
+    pub rho_init: f64,
+    /// MM: per-outer-iteration geometric anneal factor of ρ.
+    pub mm_rho_mult: f64,
+    /// MM: outer-iteration budget.
+    pub mm_max_outer: usize,
+    /// MM: run the exact violation scan every this many outer
+    /// iterations (clamped to ≥ 1).
+    pub mm_check_every: usize,
+    /// MM: CG stop when the residual shrinks by this factor relative to
+    /// the warm-start residual.
+    pub cg_rtol: f64,
+    /// MM: CG iteration cap per outer solve.
+    pub cg_max: usize,
+    /// SD: per-level geometric anneal factor of ρ.
+    pub sd_rho_mult: f64,
+    /// SD: number of ρ levels.
+    pub sd_levels: usize,
+    /// SD: descent-iteration budget per level.
+    pub sd_inner: usize,
+    /// SD: declare a level stationary when `‖∇h‖ ≤ rtol · max(1, ‖x‖)`.
+    pub sd_grad_rtol: f64,
+}
+
+impl Default for ProxTuning {
+    fn default() -> Self {
+        ProxTuning {
+            rho_init: 1.0,
+            mm_rho_mult: 1.05,
+            mm_max_outer: 600,
+            mm_check_every: 10,
+            cg_rtol: 1e-6,
+            cg_max: 100,
+            sd_rho_mult: 1.5,
+            sd_levels: 80,
+            sd_inner: 60,
+            sd_grad_rtol: 1e-9,
+        }
+    }
+}
+
+/// Solve metric nearness with the proximal family selected by
+/// `opts.algorithm`, untraced. Convenience over
+/// [`solve_nearness_traced`].
+pub fn solve_nearness(
+    inst: &MetricNearnessInstance,
+    opts: &NearnessOpts,
+) -> Result<NearnessSolution, SolveError> {
+    solve_nearness_traced(inst, opts, &NullRecorder)
+}
+
+/// The entry the nearness dispatcher calls: build the production
+/// [`WaveOperator`] from the shared opts and run the member selected by
+/// `opts.algorithm` with default [`ProxTuning`].
+pub fn solve_nearness_traced(
+    inst: &MetricNearnessInstance,
+    opts: &NearnessOpts,
+    rec: &dyn Recorder,
+) -> Result<NearnessSolution, SolveError> {
+    let threads = opts.threads.max(1);
+    let op = WaveOperator::new(inst.n, opts.tile, threads);
+    solve_nearness_with(
+        inst,
+        opts.algorithm,
+        opts.tol_violation,
+        threads,
+        &ProxTuning::default(),
+        &op,
+        rec,
+    )
+}
+
+/// Full-control entry point with an injectable [`MetricOperator`] —
+/// this is how the differential oracle's negative tests drive the
+/// solver over [`operator::BrokenOperator`] to prove the tolerance
+/// band catches a wrong kernel.
+pub fn solve_nearness_with(
+    inst: &MetricNearnessInstance,
+    algorithm: Algorithm,
+    tol_violation: f64,
+    threads: usize,
+    tuning: &ProxTuning,
+    op: &dyn MetricOperator,
+    rec: &dyn Recorder,
+) -> Result<NearnessSolution, SolveError> {
+    match algorithm {
+        Algorithm::ProxMm => mm::run(inst, op, tol_violation, threads, tuning, rec),
+        Algorithm::ProxSd => sd::run(inst, op, tol_violation, threads, tuning, rec),
+        Algorithm::Dykstra => Err(SolveError::Other(anyhow::anyhow!(
+            "Algorithm::Dykstra is not a proximal member; call the nearness drivers"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::metric_nearness::max_triangle_violation;
+    use crate::solver::nearness;
+
+    fn opts(algorithm: Algorithm, threads: usize) -> NearnessOpts {
+        NearnessOpts { algorithm, threads, tol_violation: 1e-7, tile: 8, ..Default::default() }
+    }
+
+    #[test]
+    fn mm_converges_to_dykstra_projection() {
+        let inst = MetricNearnessInstance::random(12, 2.0, 41);
+        let dyk = nearness::solve(
+            &inst,
+            &NearnessOpts {
+                max_passes: 3000,
+                check_every: 10,
+                tol_violation: 1e-10,
+                threads: 2,
+                ..Default::default()
+            },
+        );
+        let mm = solve_nearness(&inst, &opts(Algorithm::ProxMm, 2)).unwrap();
+        assert!(mm.max_violation <= 1e-6, "viol {}", mm.max_violation);
+        let scale = dyk.objective.max(1.0);
+        assert!(
+            (mm.objective - dyk.objective).abs() <= 5e-3 * scale,
+            "objectives: mm {} vs dykstra {}",
+            mm.objective,
+            dyk.objective
+        );
+    }
+
+    #[test]
+    fn sd_converges_to_dykstra_projection_loosely() {
+        let inst = MetricNearnessInstance::random(10, 2.0, 42);
+        let dyk = nearness::solve(
+            &inst,
+            &NearnessOpts {
+                max_passes: 3000,
+                check_every: 10,
+                tol_violation: 1e-10,
+                threads: 1,
+                ..Default::default()
+            },
+        );
+        let mut o = opts(Algorithm::ProxSd, 2);
+        o.tol_violation = 1e-6;
+        let sd = solve_nearness(&inst, &o).unwrap();
+        assert!(sd.max_violation <= 1e-5, "viol {}", sd.max_violation);
+        let scale = dyk.objective.max(1.0);
+        assert!(
+            (sd.objective - dyk.objective).abs() <= 2e-2 * scale,
+            "objectives: sd {} vs dykstra {}",
+            sd.objective,
+            dyk.objective
+        );
+    }
+
+    #[test]
+    fn proximal_results_thread_count_independent_bitwise() {
+        let inst = MetricNearnessInstance::random(11, 2.0, 43);
+        for algorithm in [Algorithm::ProxMm, Algorithm::ProxSd] {
+            let a = solve_nearness(&inst, &opts(algorithm, 1)).unwrap();
+            let b = solve_nearness(&inst, &opts(algorithm, 4)).unwrap();
+            assert_eq!(a.x, b.x, "{algorithm:?} differs across thread counts");
+            assert_eq!(a.passes, b.passes);
+        }
+    }
+
+    #[test]
+    fn already_metric_is_near_fixed_point() {
+        // d = all-ones is metric: the projection is d itself, and the
+        // proximal path must stay within tolerance of it.
+        let inst = MetricNearnessInstance::new(crate::matrix::PackedSym::filled(8, 1.0));
+        for algorithm in [Algorithm::ProxMm, Algorithm::ProxSd] {
+            let sol = solve_nearness(&inst, &opts(algorithm, 1)).unwrap();
+            assert!(sol.objective <= 1e-8, "{algorithm:?} objective {}", sol.objective);
+            assert!(max_triangle_violation(&sol.x) <= 1e-6);
+        }
+    }
+
+    #[test]
+    fn nearness_dispatch_routes_proximal_and_rejects_disk_and_resume() {
+        let inst = MetricNearnessInstance::random(9, 2.0, 44);
+        // routed through the standard nearness entry
+        let sol = nearness::solve_stored(
+            &inst,
+            &opts(Algorithm::ProxMm, 1),
+            &crate::matrix::store::StoreCfg::mem(),
+            None,
+            &mut |_| {},
+        )
+        .unwrap();
+        assert!(sol.max_violation <= 1e-6);
+        // disk store is a typed refusal
+        let dir = std::env::temp_dir().join(format!("mp-prox-reject-{}", std::process::id()));
+        let err = nearness::solve_stored(
+            &inst,
+            &opts(Algorithm::ProxSd, 1),
+            &crate::matrix::store::StoreCfg::disk(&dir, 1 << 20),
+            None,
+            &mut |_| {},
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("resident-only"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dykstra_is_rejected_by_proximal_entry() {
+        let inst = MetricNearnessInstance::random(6, 2.0, 45);
+        let op = WaveOperator::new(inst.n, 4, 1);
+        let err = solve_nearness_with(
+            &inst,
+            Algorithm::Dykstra,
+            1e-6,
+            1,
+            &ProxTuning::default(),
+            &op,
+            &NullRecorder,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("not a proximal member"), "{err}");
+    }
+}

@@ -1,0 +1,397 @@
+//! The triangle operator `T` as fused matrix-free sweeps over the wave
+//! schedule.
+//!
+//! `T` has one row triple per ordered triplet `i < j < k`: with
+//! `a = v_ij`, `b = v_ik`, `c = v_jk`, the three metric rows are
+//! `t1 = -a + b + c`, `t2 = a - b + c`, `t3 = a + b - c` (each `>= 0`
+//! at a metric point). The proximal solvers never materialize `T v`
+//! (length `3·C(n,3)`); every quantity they need collapses to one
+//! closed-form visit per triplet, accumulated straight into
+//! pair-indexed vectors:
+//!
+//! * `T'T v`   — `out_ij += 3a - b - c`, `out_ik += 3b - a - c`,
+//!   `out_jk += 3c - a - b`;
+//! * `T'·clamp(T v)` — clamp `t1..t3` at zero (above or below), then
+//!   scatter `out_ij += -u1 + u2 + u3`, `out_ik += u1 - u2 + u3`,
+//!   `out_jk += u1 + u2 - u3`;
+//! * `‖T v‖²`  — `t1² + t2² + t3²` summed per tile.
+//!
+//! All sweeps run over the existing conflict-free wave schedule
+//! ([`crate::solver::schedule`]): tiles within a wave touch disjoint
+//! pair footprints, so the scatter is lock-free, and waves are separated
+//! by barriers, so each entry's accumulation order is the fixed wave
+//! order — results are **bitwise independent of the thread count**, the
+//! same discipline as the Dykstra drivers. The reduction in
+//! [`MetricOperator::t_norm_sq`] keeps that property by summing
+//! per-tile partials serially in schedule order.
+//!
+//! The trait exists (rather than free functions) so the
+//! differential-testing oracle can prove its own sensitivity:
+//! [`BrokenOperator`] is a deliberately sign-flipped implementation that
+//! the cross-family tests inject to confirm a wrong kernel cannot slip
+//! through the tolerance band ([`crate::eval::cross_check`]).
+
+use crate::matrix::PackedSym;
+use crate::solver::schedule::Schedule;
+use crate::solver::tiling;
+use crate::util::parallel::scoped_workers;
+use crate::util::shared::SharedMut;
+
+/// Matrix-free access to the triangle operator `T`, on packed
+/// pair-indexed vectors of length `C(n,2)`.
+pub trait MetricOperator: Sync {
+    /// Number of points `n`.
+    fn n(&self) -> usize;
+
+    /// `out = T'T v` (overwrites `out`).
+    fn normal_matvec(&self, v: &[f64], out: &mut [f64]);
+
+    /// `out += T'·max(T v, 0)` when `positive`, else `out += T'·min(T v, 0)`.
+    fn scatter_clamped(&self, v: &[f64], positive: bool, out: &mut [f64]);
+
+    /// `‖T v‖²`.
+    fn t_norm_sq(&self, v: &[f64]) -> f64;
+
+    /// Triplets visited by one full sweep (telemetry billing: every
+    /// method above costs exactly one sweep).
+    fn sweep_triplets(&self) -> u64;
+}
+
+/// The production implementation: fused sweeps over the wave schedule.
+pub struct WaveOperator {
+    n: usize,
+    threads: usize,
+    schedule: Schedule,
+    col_starts: Vec<usize>,
+    /// Global slot index of each wave's first tile (for the
+    /// deterministic per-tile reduction in [`Self::t_norm_sq`]).
+    tile_offsets: Vec<usize>,
+    total_tiles: usize,
+}
+
+impl WaveOperator {
+    /// Build the operator for `n` points with the given wave-schedule
+    /// tile size and worker count.
+    pub fn new(n: usize, tile: usize, threads: usize) -> WaveOperator {
+        let schedule = Schedule::new(n, tile.max(1));
+        let mut tile_offsets = Vec::with_capacity(schedule.waves().len());
+        let mut total = 0usize;
+        for wave in schedule.waves() {
+            tile_offsets.push(total);
+            total += wave.len();
+        }
+        WaveOperator {
+            n,
+            threads: threads.max(1),
+            schedule,
+            col_starts: PackedSym::zeros(n).col_starts().to_vec(),
+            tile_offsets,
+            total_tiles: total,
+        }
+    }
+
+    /// Packed pair indices of a triplet `i < j < k`.
+    #[inline(always)]
+    fn pidx(&self, i: usize, j: usize, k: usize) -> (usize, usize, usize) {
+        let ci = self.col_starts[i];
+        (ci + (j - i - 1), ci + (k - i - 1), self.col_starts[j] + (k - j - 1))
+    }
+
+    /// Run `visit` over every triplet, wave-parallel: tiles of a wave are
+    /// dealt round-robin to workers, and a barrier separates waves so the
+    /// visits' disjoint-footprint writes stay conflict-free.
+    fn sweep<F: Fn(usize, usize, usize) + Sync>(&self, visit: &F) {
+        let p = self.threads;
+        let b = self.schedule.tile_size();
+        scoped_workers(p, |tid, barrier| {
+            for wave in self.schedule.waves() {
+                let mut r = tid;
+                while r < wave.len() {
+                    tiling::for_each_triplet(&wave[r], b, |i, j, k| visit(i, j, k));
+                    r += p;
+                }
+                barrier.wait();
+            }
+        });
+    }
+}
+
+impl MetricOperator for WaveOperator {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn normal_matvec(&self, v: &[f64], out: &mut [f64]) {
+        out.fill(0.0);
+        let o = SharedMut::new(out);
+        self.sweep(&|i, j, k| {
+            let (ij, ik, jk) = self.pidx(i, j, k);
+            let (a, b, c) = (v[ij], v[ik], v[jk]);
+            // SAFETY: tiles within a wave have disjoint pair footprints
+            // (schedule invariant, tested exhaustively) and waves are
+            // barrier-separated, so no other thread touches these slots.
+            unsafe {
+                o.add(ij, 3.0 * a - b - c);
+                o.add(ik, 3.0 * b - a - c);
+                o.add(jk, 3.0 * c - a - b);
+            }
+        });
+    }
+
+    fn scatter_clamped(&self, v: &[f64], positive: bool, out: &mut [f64]) {
+        let o = SharedMut::new(out);
+        self.sweep(&|i, j, k| {
+            let (ij, ik, jk) = self.pidx(i, j, k);
+            let (a, b, c) = (v[ij], v[ik], v[jk]);
+            let (t1, t2, t3) = (-a + b + c, a - b + c, a + b - c);
+            let (u1, u2, u3) = if positive {
+                (t1.max(0.0), t2.max(0.0), t3.max(0.0))
+            } else {
+                (t1.min(0.0), t2.min(0.0), t3.min(0.0))
+            };
+            // SAFETY: as in `normal_matvec`.
+            unsafe {
+                o.add(ij, -u1 + u2 + u3);
+                o.add(ik, u1 - u2 + u3);
+                o.add(jk, u1 + u2 - u3);
+            }
+        });
+    }
+
+    fn t_norm_sq(&self, v: &[f64]) -> f64 {
+        // Per-tile partials, then a serial sum in schedule order: the
+        // value is bitwise identical for every thread count.
+        let mut slots = vec![0.0f64; self.total_tiles];
+        let s = SharedMut::new(&mut slots);
+        let p = self.threads;
+        let b = self.schedule.tile_size();
+        scoped_workers(p, |tid, _| {
+            for (w_idx, wave) in self.schedule.waves().iter().enumerate() {
+                let mut r = tid;
+                while r < wave.len() {
+                    let mut acc = 0.0;
+                    tiling::for_each_triplet(&wave[r], b, |i, j, k| {
+                        let (ij, ik, jk) = self.pidx(i, j, k);
+                        let (a, bb, c) = (v[ij], v[ik], v[jk]);
+                        let (t1, t2, t3) = (-a + bb + c, a - bb + c, a + bb - c);
+                        acc += t1 * t1 + t2 * t2 + t3 * t3;
+                    });
+                    // SAFETY: slot (wave, r) is owned by this worker.
+                    unsafe { s.set(self.tile_offsets[w_idx] + r, acc) };
+                    r += p;
+                }
+            }
+        });
+        slots.iter().sum()
+    }
+
+    fn sweep_triplets(&self) -> u64 {
+        self.schedule.total_triplets()
+    }
+}
+
+/// A deliberately wrong operator for the oracle's negative tests: the
+/// `c`-coupling of the `ij` row in `T'T` carries a flipped sign, the
+/// kind of one-character kernel bug the cross-family oracle exists to
+/// catch. Everything else is forwarded to the wrapped real operator.
+/// Exposed (not test-gated) so `tests/cross_family.rs` and the
+/// `cross-check --self-test` CLI path can prove oracle sensitivity.
+pub struct BrokenOperator(pub WaveOperator);
+
+impl MetricOperator for BrokenOperator {
+    fn n(&self) -> usize {
+        self.0.n()
+    }
+
+    fn normal_matvec(&self, v: &[f64], out: &mut [f64]) {
+        out.fill(0.0);
+        let o = SharedMut::new(out);
+        self.0.sweep(&|i, j, k| {
+            let (ij, ik, jk) = self.0.pidx(i, j, k);
+            let (a, b, c) = (v[ij], v[ik], v[jk]);
+            // The bug: `+ c` where the true operator has `- c`.
+            unsafe {
+                o.add(ij, 3.0 * a - b + c);
+                o.add(ik, 3.0 * b - a - c);
+                o.add(jk, 3.0 * c - a - b);
+            }
+        });
+    }
+
+    fn scatter_clamped(&self, v: &[f64], positive: bool, out: &mut [f64]) {
+        self.0.scatter_clamped(v, positive, out)
+    }
+
+    fn t_norm_sq(&self, v: &[f64]) -> f64 {
+        self.0.t_norm_sq(v)
+    }
+
+    fn sweep_triplets(&self) -> u64 {
+        self.0.sweep_triplets()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::packed::n_pairs;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    /// Reference `T v` via explicit lexicographic row enumeration.
+    fn t_apply_ref(n: usize, v: &[f64]) -> Vec<f64> {
+        let cs = PackedSym::zeros(n).col_starts().to_vec();
+        let mut out = Vec::new();
+        tiling::for_each_triplet_lex(n, |i, j, k| {
+            let (ij, ik, jk) =
+                (cs[i] + (j - i - 1), cs[i] + (k - i - 1), cs[j] + (k - j - 1));
+            let (a, b, c) = (v[ij], v[ik], v[jk]);
+            out.push(-a + b + c);
+            out.push(a - b + c);
+            out.push(a + b - c);
+        });
+        out
+    }
+
+    /// Reference `T' u` via the same enumeration.
+    fn tt_apply_ref(n: usize, u: &[f64]) -> Vec<f64> {
+        let cs = PackedSym::zeros(n).col_starts().to_vec();
+        let mut out = vec![0.0; n_pairs(n)];
+        let mut row = 0;
+        tiling::for_each_triplet_lex(n, |i, j, k| {
+            let (ij, ik, jk) =
+                (cs[i] + (j - i - 1), cs[i] + (k - i - 1), cs[j] + (k - j - 1));
+            let (u1, u2, u3) = (u[row], u[row + 1], u[row + 2]);
+            out[ij] += -u1 + u2 + u3;
+            out[ik] += u1 - u2 + u3;
+            out[jk] += u1 + u2 - u3;
+            row += 3;
+        });
+        out
+    }
+
+    fn rand_vec(rng: &mut Rng, m: usize) -> Vec<f64> {
+        (0..m).map(|_| rng.f64_in(-2.0, 2.0)).collect()
+    }
+
+    #[test]
+    fn normal_matvec_matches_explicit_composition() {
+        check("ttt_vs_ref", 0x7a11, 24, |rng, case| {
+            let n = 4 + case % 9;
+            let tile = 1 + case % 5;
+            let threads = 1 + case % 3;
+            let m = n_pairs(n);
+            let v = rand_vec(rng, m);
+            let op = WaveOperator::new(n, tile, threads);
+            let mut got = vec![f64::NAN; m];
+            op.normal_matvec(&v, &mut got);
+            let want = tt_apply_ref(n, &t_apply_ref(n, &v));
+            for e in 0..m {
+                prop_assert!(
+                    (got[e] - want[e]).abs() <= 1e-9,
+                    "n={n} tile={tile} p={threads} entry {e}: {} vs {}",
+                    got[e],
+                    want[e]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scatter_clamped_matches_explicit_composition() {
+        check("scatter_vs_ref", 0x7a12, 24, |rng, case| {
+            let n = 4 + case % 9;
+            let m = n_pairs(n);
+            let v = rand_vec(rng, m);
+            let op = WaveOperator::new(n, 1 + case % 4, 1 + case % 3);
+            for positive in [true, false] {
+                let mut got = vec![0.25; m];
+                op.scatter_clamped(&v, positive, &mut got);
+                let tv = t_apply_ref(n, &v);
+                let clamped: Vec<f64> = tv
+                    .iter()
+                    .map(|&t| if positive { t.max(0.0) } else { t.min(0.0) })
+                    .collect();
+                let want = tt_apply_ref(n, &clamped);
+                for e in 0..m {
+                    prop_assert!(
+                        (got[e] - (0.25 + want[e])).abs() <= 1e-9,
+                        "positive={positive} entry {e}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn t_norm_sq_matches_explicit_rows() {
+        check("tnorm_vs_ref", 0x7a13, 24, |rng, case| {
+            let n = 4 + case % 9;
+            let v = rand_vec(rng, n_pairs(n));
+            let op = WaveOperator::new(n, 1 + case % 4, 1 + case % 3);
+            let want: f64 = t_apply_ref(n, &v).iter().map(|t| t * t).sum();
+            let got = op.t_norm_sq(&v);
+            prop_assert!(
+                (got - want).abs() <= 1e-9 * want.max(1.0),
+                "{got} vs {want}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sweeps_bitwise_thread_count_independent() {
+        let n = 13;
+        let m = n_pairs(n);
+        let mut rng = Rng::new(0x7a14);
+        let v = rand_vec(&mut rng, m);
+        let op1 = WaveOperator::new(n, 3, 1);
+        let (mut a1, mut s1) = (vec![0.0; m], vec![0.0; m]);
+        op1.normal_matvec(&v, &mut a1);
+        op1.scatter_clamped(&v, true, &mut s1);
+        let norm1 = op1.t_norm_sq(&v);
+        for p in [2, 4, 7] {
+            let op = WaveOperator::new(n, 3, p);
+            let (mut a, mut s) = (vec![0.0; m], vec![0.0; m]);
+            op.normal_matvec(&v, &mut a);
+            op.scatter_clamped(&v, true, &mut s);
+            assert_eq!(a, a1, "normal_matvec differs at p={p}");
+            assert_eq!(s, s1, "scatter differs at p={p}");
+            assert_eq!(op.t_norm_sq(&v), norm1, "t_norm_sq differs at p={p}");
+        }
+    }
+
+    #[test]
+    fn metric_point_is_normal_matvec_consistent() {
+        // At the all-ones (metric) point every row is t = 1, so
+        // T'T·1 has the closed form (n-2)·1 per entry: 3·1 - 1 - 1 = 1
+        // per incident triplet, and each pair sits in n-2 triplets.
+        let n = 9;
+        let m = n_pairs(n);
+        let op = WaveOperator::new(n, 4, 2);
+        let v = vec![1.0; m];
+        let mut out = vec![0.0; m];
+        op.normal_matvec(&v, &mut out);
+        for &o in &out {
+            assert!((o - (n as f64 - 2.0)).abs() < 1e-12, "{o}");
+        }
+        assert_eq!(op.sweep_triplets(), crate::solver::schedule::n_triplets(n));
+    }
+
+    #[test]
+    fn broken_operator_disagrees_with_real_one() {
+        let n = 8;
+        let m = n_pairs(n);
+        let mut rng = Rng::new(0x7a15);
+        let v = rand_vec(&mut rng, m);
+        let real = WaveOperator::new(n, 3, 1);
+        let broken = BrokenOperator(WaveOperator::new(n, 3, 1));
+        let (mut a, mut b) = (vec![0.0; m], vec![0.0; m]);
+        real.normal_matvec(&v, &mut a);
+        broken.normal_matvec(&v, &mut b);
+        assert!(a.iter().zip(&b).any(|(x, y)| (x - y).abs() > 1e-6));
+    }
+}

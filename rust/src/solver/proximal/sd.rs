@@ -1,0 +1,156 @@
+//! The proximal-distance **steepest-descent** driver: minimize the
+//! penalized objective `h(x) = ½ Σ w_e (x_e - d_e)² + ρ/2 · dist²(Dx, ℝ₊)`
+//! by exact-line-search gradient descent at a ladder of ρ levels.
+//!
+//! The gradient collapses to one fused scatter sweep:
+//!
+//! ```text
+//!   ∇h = W∘(x - d) + ρ (T'·min(Tx, 0) + min(x, 0))
+//! ```
+//!
+//! and because `h` restricted to the descent ray is a piecewise
+//! quadratic whose curvature is bounded by the *unclamped* quadratic
+//! `g'Wg + ρ (‖Tg‖² + ‖g‖²)`, the majorized exact step is
+//!
+//! ```text
+//!   γ = ‖g‖² / (g'Wg + ρ (‖Tg‖² + ‖g‖²))
+//! ```
+//!
+//! (the identity block of `D = [T; I]` contributes the `ρ‖g‖²` term
+//! exactly once — folding it into `‖Tg‖²` would double-count it and
+//! halve the step for no reason). Each iteration costs two operator
+//! sweeps (gradient scatter + `‖Tg‖²`); there is no linear solve, which
+//! is what makes this the cheap member of the family — paid for with a
+//! looser tolerance band in the oracle ([`crate::eval::cross_check`]).
+//!
+//! Like the MM driver, stopping is on the true triangle-violation scan,
+//! never on operator-derived quantities.
+
+use super::operator::MetricOperator;
+use super::ProxTuning;
+use crate::instance::metric_nearness::MetricNearnessInstance;
+use crate::matrix::PackedSym;
+use crate::solver::error::SolveError;
+use crate::solver::nearness::{self, NearnessSolution};
+use crate::telemetry::{Counters, Event, PassKind, PhaseName, PhaseProbe, Recorder};
+
+pub(crate) fn run(
+    inst: &MetricNearnessInstance,
+    op: &dyn MetricOperator,
+    tol_violation: f64,
+    threads: usize,
+    tuning: &ProxTuning,
+    rec: &dyn Recorder,
+) -> Result<NearnessSolution, SolveError> {
+    let n = inst.n;
+    let p = threads.max(1);
+    let d = inst.d.as_slice();
+    let w = inst.w.as_slice();
+    let m = d.len();
+    let col_starts = inst.d.col_starts().to_vec();
+    let tps = op.sweep_triplets();
+
+    let mut x = d.to_vec();
+    let mut g = vec![0.0; m];
+    let mut tmp = vec![0.0; m];
+    let mut rho = tuning.rho_init;
+
+    let mut triplet_visits: u64 = 0;
+    let mut levels_done = 0usize;
+    let mut max_violation = f64::INFINITY;
+    let mut probe = PhaseProbe::new(rec, p);
+
+    'levels: for level in 0..tuning.sd_levels {
+        let t_pass = probe.start();
+        let pass_no = (level + 1) as u64;
+        probe.emit(Event::PassStart { pass: pass_no, kind: PassKind::Full });
+        let pt = probe.start();
+        let mut level_visits = 0u64;
+        for _ in 0..tuning.sd_inner {
+            tmp.fill(0.0);
+            op.scatter_clamped(&x, false, &mut tmp);
+            let mut gn2 = 0.0;
+            let mut xn2 = 0.0;
+            let mut gwg = 0.0;
+            for e in 0..m {
+                let ge = w[e] * (x[e] - d[e]) + rho * (tmp[e] + x[e].min(0.0));
+                g[e] = ge;
+                gn2 += ge * ge;
+                gwg += w[e] * ge * ge;
+                xn2 += x[e] * x[e];
+            }
+            level_visits += tps;
+            if gn2 <= tuning.sd_grad_rtol * tuning.sd_grad_rtol * xn2.max(1.0) {
+                break; // stationary at this rho level
+            }
+            let tg2 = op.t_norm_sq(&g);
+            level_visits += tps;
+            let denom = gwg + rho * (tg2 + gn2);
+            if denom <= 0.0 || !denom.is_finite() {
+                triplet_visits += level_visits;
+                return Err(SolveError::Other(anyhow::anyhow!(
+                    "prox-sd step-size breakdown (denominator {denom:.3e}) at \
+                     level {level}, rho = {rho:.3e}"
+                )));
+            }
+            let gamma = gn2 / denom;
+            for e in 0..m {
+                x[e] -= gamma * g[e];
+            }
+        }
+        triplet_visits += level_visits;
+        probe.finish(pass_no, PhaseName::Metric, pt, level_visits, None);
+        levels_done = level + 1;
+
+        let pt = probe.start();
+        max_violation = nearness::violation(&x, &col_starts, n, p);
+        probe.finish(pass_no, PhaseName::ResidualScan, pt, tps, None);
+        probe.emit(Event::Residuals {
+            pass: pass_no,
+            max_violation,
+            rel_gap: 0.0,
+            lp_objective: 0.0,
+            exact: true,
+        });
+        if !max_violation.is_finite() {
+            return Err(SolveError::Other(anyhow::anyhow!(
+                "prox-sd diverged (non-finite iterate) at level {levels_done}, rho = {rho:.3e}"
+            )));
+        }
+        if probe.on() {
+            probe.emit(Event::PassEnd {
+                pass: pass_no,
+                secs: t_pass.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0),
+                triplet_visits,
+                active_triplets: tps,
+            });
+        }
+        if max_violation <= tol_violation {
+            break 'levels;
+        }
+        rho *= tuning.sd_rho_mult;
+    }
+    let mut xm = PackedSym::zeros(n);
+    xm.as_mut_slice().copy_from_slice(&x);
+    let sol = NearnessSolution {
+        objective: inst.objective(&xm),
+        x: xm,
+        max_violation,
+        passes: levels_done,
+        metric_visits: triplet_visits * 3,
+        active_triplets: tps as usize,
+        sweep_screened: 0,
+        sweep_projected: 0,
+        store_stats: None,
+    };
+    if probe.on() {
+        probe.emit(Event::Footer {
+            counters: Counters {
+                phase_secs: probe.wall_totals(),
+                worker_busy_secs: probe.busy_totals(),
+                ..sol.counters()
+            },
+        });
+    }
+    Ok(sol)
+}

@@ -57,6 +57,8 @@ pub enum PhaseName {
     Sweep,
     /// Checkpoint capture and sink invocation.
     Checkpoint,
+    /// A proximal normal-equations solve (CG matvec sweeps).
+    Cg,
 }
 
 impl PhaseName {
@@ -68,6 +70,7 @@ impl PhaseName {
             PhaseName::ResidualScan => "residual-scan",
             PhaseName::Sweep => "sweep",
             PhaseName::Checkpoint => "checkpoint",
+            PhaseName::Cg => "cg",
         }
     }
 
@@ -79,6 +82,7 @@ impl PhaseName {
             "residual-scan" => Some(PhaseName::ResidualScan),
             "sweep" => Some(PhaseName::Sweep),
             "checkpoint" => Some(PhaseName::Checkpoint),
+            "cg" => Some(PhaseName::Cg),
             _ => None,
         }
     }
@@ -447,6 +451,13 @@ mod tests {
                 name: PhaseName::ResidualScan,
                 secs: 0.5,
                 visits: 455,
+                workers: vec![],
+            },
+            Event::Phase {
+                pass: 3,
+                name: PhaseName::Cg,
+                secs: 0.0625,
+                visits: 910,
                 workers: vec![],
             },
             Event::Sweep { pass: 1, screened: 455, projected: 20, max_violation: 0.75 },

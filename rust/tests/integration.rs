@@ -8,8 +8,9 @@ use metric_proj::graph::generators;
 use metric_proj::instance::construction::{build_cc_instance, ConstructionParams};
 use metric_proj::instance::metric_nearness::{max_triangle_violation, MetricNearnessInstance};
 use metric_proj::instance::{cc_objective, CcLpInstance};
+use metric_proj::matrix::StoreCfg;
 use metric_proj::rounding::{pivot, threshold};
-use metric_proj::solver::{dykstra_parallel, dykstra_serial, nearness, SolveOpts, Strategy};
+use metric_proj::solver::{dykstra_parallel, nearness, SolveOpts, Strategy, SweepBackend};
 
 #[test]
 fn full_pipeline_planted_clusters_recovered() {
@@ -40,25 +41,115 @@ fn full_pipeline_planted_clusters_recovered() {
     assert!(obj_piv + 1e-9 >= lp);
 }
 
+/// Cross-driver agreement matrix: serial/parallel/active ×
+/// mem/disk × scalar/screened, all 12 cells in one parameterized
+/// table (replacing the old ad-hoc pairwise cases). Results are
+/// bitwise independent of thread count, store backend, and sweep
+/// backend by construction, so every cell within a strategy family
+/// must match its family reference *exactly*; across families
+/// (full vs active visit different constraint subsets) agreement is
+/// within 1e-6. CC-LP serial-order-vs-parallel agreement is pinned
+/// separately in `dykstra_parallel`'s unit tests.
 #[test]
-fn serial_and_parallel_agree_on_dataset_instance() {
-    let g = Dataset::Power.generate(60, 3);
-    let inst = build_cc_instance(&g, ConstructionParams::default(), 2);
-    let passes = 800;
-    let ser = dykstra_serial::solve(&inst, &SolveOpts { max_passes: passes, ..Default::default() });
-    let par = dykstra_parallel::solve(
-        &inst,
-        &SolveOpts { max_passes: passes, threads: 4, tile: 10, ..Default::default() },
-    );
-    let mut worst: f64 = 0.0;
-    for (i, j, v) in par.x.iter_pairs() {
-        worst = worst.max((v - ser.x.get(i, j)).abs());
+fn cross_driver_agreement_matrix() {
+    let inst = MetricNearnessInstance::random(28, 2.0, 5);
+    let tol = 1e-7;
+    let base = nearness::NearnessOpts {
+        max_passes: 4000,
+        check_every: 5,
+        tol_violation: tol,
+        tile: 8,
+        ..Default::default()
+    };
+    let drivers: [(&str, usize, Strategy); 3] = [
+        ("serial", 1, Strategy::Full),
+        ("parallel", 4, Strategy::Full),
+        ("active", 4, Strategy::Active { sweep_every: 5, forget_after: 2 }),
+    ];
+    let stores = ["mem", "disk"];
+    let backends = [SweepBackend::Scalar, SweepBackend::Screened];
+
+    let mut full_ref: Option<nearness::NearnessSolution> = None; // serial/mem/scalar
+    let mut active_ref: Option<nearness::NearnessSolution> = None;
+    for (driver, threads, strategy) in drivers {
+        for store in stores {
+            for backend in backends {
+                let label = format!("{driver}/{store}/{}", backend.name());
+                let cfg = if store == "mem" {
+                    StoreCfg::mem()
+                } else {
+                    let dir = std::env::temp_dir()
+                        .join(format!("metric_proj_matrix_{driver}_{}", backend.name()));
+                    let _ = std::fs::remove_dir_all(&dir);
+                    StoreCfg::disk(&dir, 1 << 10)
+                };
+                let opts = nearness::NearnessOpts {
+                    threads,
+                    strategy,
+                    sweep_backend: backend,
+                    ..base
+                };
+                let sol = nearness::solve_stored(&inst, &opts, &cfg, None, &mut |_| {})
+                    .unwrap_or_else(|e| panic!("{label}: solve failed: {e}"));
+                assert!(sol.passes < base.max_passes, "{label}: no convergence");
+                assert!(
+                    sol.max_violation <= 10.0 * tol,
+                    "{label}: violation {}",
+                    sol.max_violation
+                );
+                if store == "disk" {
+                    let stats = sol
+                        .store_stats
+                        .as_ref()
+                        .unwrap_or_else(|| panic!("{label}: disk solve reports no store stats"));
+                    assert!(stats.loads > 0, "{label}: disk solve never loaded a block");
+                }
+                if strategy.is_active() {
+                    match &active_ref {
+                        None => {
+                            // First active cell: tolerance-compare the
+                            // two families and pin the work saving.
+                            let full = full_ref.as_ref().expect("full reference runs first");
+                            assert!(
+                                (sol.objective - full.objective).abs()
+                                    <= 1e-6 * full.objective.max(1.0),
+                                "{label}: objectives differ: {} vs {}",
+                                sol.objective,
+                                full.objective
+                            );
+                            assert!(
+                                (sol.max_violation - full.max_violation).abs() <= 1e-6,
+                                "{label}: violations differ: {} vs {}",
+                                sol.max_violation,
+                                full.max_violation
+                            );
+                            assert!(
+                                sol.metric_visits < full.metric_visits,
+                                "{label}: active visits {} !< full visits {}",
+                                sol.metric_visits,
+                                full.metric_visits
+                            );
+                            active_ref = Some(sol);
+                        }
+                        Some(r) => {
+                            assert_eq!(r.x, sol.x, "{label}: active cells must agree bitwise");
+                            assert_eq!(r.passes, sol.passes, "{label}: stopping pass differs");
+                            assert_eq!(r.metric_visits, sol.metric_visits, "{label}");
+                        }
+                    }
+                } else {
+                    match &full_ref {
+                        None => full_ref = Some(sol),
+                        Some(r) => {
+                            assert_eq!(r.x, sol.x, "{label}: full cells must agree bitwise");
+                            assert_eq!(r.passes, sol.passes, "{label}: stopping pass differs");
+                            assert_eq!(r.metric_visits, sol.metric_visits, "{label}");
+                        }
+                    }
+                }
+            }
+        }
     }
-    assert!(worst < 1e-2, "optima differ by {worst}");
-    assert!(
-        (par.residuals.lp_objective - ser.residuals.lp_objective).abs()
-            < 1e-2 * ser.residuals.lp_objective.max(1.0)
-    );
 }
 
 #[test]
@@ -141,47 +232,6 @@ fn active_strategy_acceptance_n200() {
         level /= 10.0;
         assert!(level >= 1e-12, "ladder exhausted: dv={dv:.3e} dlp={dlp:.3e}");
     }
-}
-
-#[test]
-fn active_nearness_matches_and_saves_work() {
-    let inst = MetricNearnessInstance::random(40, 2.0, 5);
-    let base = nearness::NearnessOpts {
-        max_passes: 6000,
-        check_every: 5,
-        tol_violation: 1e-9,
-        threads: 2,
-        tile: 8,
-        ..Default::default()
-    };
-    let full = nearness::solve(&inst, &base);
-    let act = nearness::solve(
-        &inst,
-        &nearness::NearnessOpts {
-            strategy: Strategy::Active { sweep_every: 5, forget_after: 2 },
-            ..base
-        },
-    );
-    assert!(full.passes < 6000 && act.passes < 6000, "both must converge");
-    assert!(act.max_violation <= 1e-6, "active violation {}", act.max_violation);
-    assert!(
-        (full.max_violation - act.max_violation).abs() <= 1e-6,
-        "violations differ: {} vs {}",
-        full.max_violation,
-        act.max_violation
-    );
-    assert!(
-        (full.objective - act.objective).abs() <= 1e-6 * full.objective.max(1.0),
-        "objectives differ: {} vs {}",
-        full.objective,
-        act.objective
-    );
-    assert!(
-        act.metric_visits < full.metric_visits,
-        "active visits {} !< full {}",
-        act.metric_visits,
-        full.metric_visits
-    );
 }
 
 #[test]
