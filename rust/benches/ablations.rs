@@ -189,6 +189,8 @@ fn main() {
             peak_resident_bytes: (r.resident_mb_est * (1u64 << 20) as f64) as u64,
             entry_loads: 0,
             blocks_skipped: 0,
+            shard_bytes: 0,
+            barrier_wait_us: 0,
         })
         .collect();
     let rows_path = std::env::var("METRIC_PROJ_BENCH_ROWS")

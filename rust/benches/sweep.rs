@@ -11,7 +11,13 @@
 //! are pure per-triplet overhead. A final `screened+disk` row repeats
 //! the screened sweep with `X` streamed from a [`DiskStore`] under a
 //! cache budget of one quarter of the packed matrix — the out-of-core
-//! throughput tax, measured against the same steady state.
+//! throughput tax, measured against the same steady state. A
+//! `screened+shard` row repeats it once more against a [`ShardStore`]
+//! with two in-process workers behind the coordinator↔worker socket
+//! protocol — the multi-process transport tax, with bytes-over-socket
+//! and barrier-wait columns feeding the CI gate (traffic is
+//! schedule-deterministic and gated; barrier wait is wall clock and
+//! informational only).
 //!
 //! Every row also reports a **peak resident-set estimate** for the `X`
 //! path (packed `x` + `winv` for the in-memory backends; the measured
@@ -49,7 +55,7 @@
 
 use metric_proj::eval::regression;
 use metric_proj::instance::metric_nearness::MetricNearnessInstance;
-use metric_proj::matrix::store::{DiskStore, MemStore};
+use metric_proj::matrix::store::{DiskStore, MemStore, ShardStore, StoreCfg};
 use metric_proj::runtime::engine::XlaEngine;
 use metric_proj::runtime::DEFAULT_ARTIFACTS_DIR;
 use metric_proj::solver::active::active_pass;
@@ -94,6 +100,10 @@ struct Record {
     entry_loads: u64,
     /// Whole-tile footprint blocks those leases skipped.
     blocks_skipped: u64,
+    /// Bytes over the coordinator↔worker sockets (shard rows only).
+    shard_bytes: u64,
+    /// Coordinator barrier-wait time in µs (shard rows only).
+    barrier_wait_us: u64,
 }
 
 fn mib(bytes: f64) -> f64 {
@@ -211,6 +221,8 @@ fn main() {
                 store_loads: 0,
                 entry_loads: 0,
                 blocks_skipped: 0,
+                shard_bytes: 0,
+                barrier_wait_us: 0,
             });
         }
 
@@ -286,6 +298,8 @@ fn main() {
                 store_loads: stats.loads,
                 entry_loads: 0,
                 blocks_skipped: 0,
+                shard_bytes: 0,
+                barrier_wait_us: 0,
             });
 
             // Cheap-pass row: the timed sweeps above left `set` holding
@@ -333,12 +347,100 @@ fn main() {
                     store_loads: loads,
                     entry_loads,
                     blocks_skipped,
+                    shard_bytes: 0,
+                    barrier_wait_us: 0,
                 });
             }
 
             let store_path = store.path().to_path_buf();
             drop(store);
             let _ = std::fs::remove_file(store_path);
+        }
+
+        // Sharded row: the same screened sweep leased over the
+        // coordinator↔worker socket protocol, two in-process workers
+        // (`worker_exe: None` — the protocol and framing are identical
+        // to the multi-process path, without fork cost polluting a
+        // throughput bench). Socket traffic is schedule-deterministic
+        // and feeds the gate's `shard_bytes` column; the per-rep
+        // `health()` barrier accrues the (ungated) `barrier_wait_us`
+        // column, exactly as the solver drivers poll per pass.
+        {
+            let dir = std::env::temp_dir().join(format!(
+                "metric_proj_bench_shard_{n}_{}",
+                std::process::id()
+            ));
+            let _ = std::fs::remove_dir_all(&dir);
+            std::fs::create_dir_all(&dir).expect("create bench shard dir");
+            let cfg = StoreCfg::shard(&dir, 2);
+            let store = ShardStore::create_with(&cfg, n, winv.clone(), &mut |c, r| {
+                x_steady[col_starts[c] + (r - c - 1)]
+            })
+            .expect("create bench shard store");
+            let set = ActiveSet::new(&schedule);
+            let sweep_shard = |set: &ActiveSet| -> SweepReport {
+                discovery_sweep(
+                    &store,
+                    &schedule,
+                    set,
+                    threads,
+                    Assignment::RoundRobin,
+                    SweepBackend::Screened,
+                    None,
+                )
+            };
+            sweep_shard(&set);
+            let before = store.stats();
+            let t0 = Instant::now();
+            let mut last = None;
+            for _ in 0..reps {
+                last = Some(sweep_shard(&set));
+                store.health().expect("shard workers healthy");
+            }
+            let dt = t0.elapsed().as_secs_f64().max(1e-9);
+            let report = last.expect("reps >= 1");
+            let vps = (reps as u64 * triplets) as f64 / dt;
+            let speedup = scalar_vps.map_or(1.0, |s| vps / s);
+            let after = store.stats();
+            let shard_bytes = (after.shard_bytes_in - before.shard_bytes_in)
+                + (after.shard_bytes_out - before.shard_bytes_out);
+            let barrier_wait_us = after.barrier_wait_us - before.barrier_wait_us;
+            println!(
+                "    {:<13} {:>9.3e} triplet-visits/s ({:>5.2}x scalar), \
+                 hit rate {:>6.3}%, {:.3}s for {} sweeps, ~{:.1} MiB resident X \
+                 ({} requests, {:.1} MiB over sockets, {:.1} ms barrier wait)",
+                "screened+shard",
+                vps,
+                speedup,
+                100.0 * report.hit_rate(),
+                dt,
+                reps,
+                mem_resident_mb,
+                after.shard_requests - before.shard_requests,
+                mib(shard_bytes as f64),
+                barrier_wait_us as f64 / 1e3
+            );
+            records.push(Record {
+                n,
+                backend: "screened",
+                store: "shard",
+                sweeps: reps,
+                seconds: dt,
+                visits_per_sec: vps,
+                hit_rate: report.hit_rate(),
+                speedup_vs_scalar: speedup,
+                // The workers collectively keep the packed x and winv
+                // planes resident, split across their slices — the same
+                // footprint as the in-memory row, just partitioned.
+                resident_mb: mem_resident_mb,
+                store_loads: 0,
+                entry_loads: 0,
+                blocks_skipped: 0,
+                shard_bytes,
+                barrier_wait_us,
+            });
+            drop(store);
+            let _ = std::fs::remove_dir_all(&dir);
         }
 
         // Proximal-family rows (ARCHITECTURE.md §6): end-to-end solves
@@ -386,6 +488,8 @@ fn main() {
                     store_loads: 0,
                     entry_loads: 0,
                     blocks_skipped: 0,
+                    shard_bytes: 0,
+                    barrier_wait_us: 0,
                 });
             }
         }
@@ -396,10 +500,10 @@ fn main() {
     let _ = writeln!(json, "  \"threads\": {threads},");
     json.push_str("  \"results\": [\n");
     for (idx, r) in records.iter().enumerate() {
-        let label = if r.store == "disk" {
-            format!("{}+disk", r.backend)
-        } else {
+        let label = if r.store == "mem" {
             r.backend.to_string()
+        } else {
+            format!("{}+{}", r.backend, r.store)
         };
         let _ = write!(
             json,
@@ -434,6 +538,8 @@ fn main() {
             peak_resident_bytes: (r.resident_mb * (1u64 << 20) as f64) as u64,
             entry_loads: r.entry_loads,
             blocks_skipped: r.blocks_skipped,
+            shard_bytes: r.shard_bytes,
+            barrier_wait_us: r.barrier_wait_us,
         })
         .collect();
     let rows_path = std::env::var("METRIC_PROJ_BENCH_ROWS")

@@ -170,6 +170,22 @@ mod tests {
     }
 
     #[test]
+    fn shard_flags_parse() {
+        // The grammar main.rs uses for the multi-process shard store.
+        let a = parse("solve --store shard --store-dir /tmp/sh --workers 4");
+        assert_eq!(a.get("store"), Some("shard"));
+        assert_eq!(a.get("store-dir"), Some("/tmp/sh"));
+        assert_eq!(a.get_or("workers", 2usize).unwrap(), 4);
+        // the worker count defaults when absent
+        let b = parse("nearness --store shard --store-dir /tmp/sh");
+        assert_eq!(b.get_or("workers", 2usize).unwrap(), 2);
+        // the hidden worker subcommand the coordinator re-enters with
+        let c = parse("shard-worker --connect /tmp/sh/shard.sock");
+        assert_eq!(c.command, "shard-worker");
+        assert_eq!(c.get("connect"), Some("/tmp/sh/shard.sock"));
+    }
+
+    #[test]
     fn telemetry_flags_parse() {
         // The grammar main.rs uses for the telemetry layer: trace capture
         // on solve/nearness, the trace summarizer, and the perf gate.

@@ -40,7 +40,7 @@ pub struct BaselineRow {
     /// Strategy/backend label within the bench (e.g. `screened`,
     /// `active s=8 k=3`).
     pub cell: String,
-    /// `X` storage backend (`mem` / `disk`).
+    /// `X` storage backend (`mem` / `disk` / `shard`).
     pub store: String,
     /// Triplet-visits per calibration unit ([`normalize`]d throughput;
     /// higher is better).
@@ -57,6 +57,15 @@ pub struct BaselineRow {
     /// Footprint blocks entry leases skipped — the gate fails when this
     /// *shrinks* past tolerance (the lease stopped saving I/O).
     pub blocks_skipped: u64,
+    /// Bytes moved over the coordinator↔worker sockets (0 for
+    /// non-sharded cells). Deterministic for a fixed schedule, so it is
+    /// gated like store loads: growth past tolerance means the lease
+    /// pattern got chattier.
+    pub shard_bytes: u64,
+    /// Microseconds the coordinator spent waiting at shard barriers.
+    /// Wall-clock — noisy on shared runners — so it is recorded for the
+    /// report but never gated.
+    pub barrier_wait_us: u64,
 }
 
 impl BaselineRow {
@@ -77,6 +86,8 @@ impl BaselineRow {
             ("peak_resident_bytes".into(), json::unum(self.peak_resident_bytes)),
             ("entry_loads".into(), json::unum(self.entry_loads)),
             ("blocks_skipped".into(), json::unum(self.blocks_skipped)),
+            ("shard_bytes".into(), json::unum(self.shard_bytes)),
+            ("barrier_wait_us".into(), json::unum(self.barrier_wait_us)),
         ])
     }
 
@@ -110,6 +121,9 @@ impl BaselineRow {
             // absent means "measured before entry leases existed" = 0.
             entry_loads: j.get("entry_loads").and_then(Json::as_u64).unwrap_or(0),
             blocks_skipped: j.get("blocks_skipped").and_then(Json::as_u64).unwrap_or(0),
+            // Shard columns postdate the schema's first rows too.
+            shard_bytes: j.get("shard_bytes").and_then(Json::as_u64).unwrap_or(0),
+            barrier_wait_us: j.get("barrier_wait_us").and_then(Json::as_u64).unwrap_or(0),
         })
     }
 }
@@ -381,6 +395,21 @@ pub fn gate(baseline: &BaselineFile, fresh: &BaselineFile, tol: f64) -> GateRepo
                 100.0 * tol
             ));
         }
+        // Socket traffic of a sharded cell is schedule-deterministic, so
+        // it gates like store loads. Barrier wait is wall-clock and is
+        // deliberately NOT gated — it only informs the report. Rows with
+        // a zero baseline (pre-shard history, or non-sharded cells) stay
+        // disarmed.
+        if base.shard_bytes > 0 && new.shard_bytes as f64 > base.shard_bytes as f64 * (1.0 + tol)
+        {
+            report.failures.push(format!(
+                "{key}: shard socket bytes {} > {} (+{:.1}%, tolerance {:.0}%)",
+                new.shard_bytes,
+                base.shard_bytes,
+                100.0 * (new.shard_bytes as f64 / base.shard_bytes as f64 - 1.0),
+                100.0 * tol
+            ));
+        }
     }
     for row in &fresh.rows {
         let key = row.key();
@@ -407,11 +436,22 @@ mod tests {
             peak_resident_bytes: peak,
             entry_loads: 0,
             blocks_skipped: 0,
+            shard_bytes: 0,
+            barrier_wait_us: 0,
         }
     }
 
     fn entry_row(entry_loads: u64, blocks_skipped: u64) -> BaselineRow {
         BaselineRow { entry_loads, blocks_skipped, ..row("cheap-pass", 1e8, 0.0, 10, 4096) }
+    }
+
+    fn shard_row(shard_bytes: u64, barrier_wait_us: u64) -> BaselineRow {
+        BaselineRow {
+            shard_bytes,
+            barrier_wait_us,
+            store: "shard".into(),
+            ..row("sharded w=2", 1e8, 0.0, 0, 4096)
+        }
     }
 
     #[test]
@@ -533,6 +573,27 @@ mod tests {
         let file = BaselineFile::parse(text).unwrap();
         assert_eq!(file.rows[0].entry_loads, 0);
         assert_eq!(file.rows[0].blocks_skipped, 0);
+        assert_eq!(file.rows[0].shard_bytes, 0);
+        assert_eq!(file.rows[0].barrier_wait_us, 0);
+    }
+
+    #[test]
+    fn shard_bytes_gate_but_barrier_wait_never_does() {
+        let base = BaselineFile { rows: vec![shard_row(1 << 20, 500)] };
+        // Identical traffic passes.
+        assert!(gate(&base, &base.clone(), DEFAULT_TOLERANCE).passed());
+        // Socket traffic growing past the band fails (chattier leases).
+        let chatty = BaselineFile { rows: vec![shard_row(1 << 21, 500)] };
+        let rep = gate(&base, &chatty, DEFAULT_TOLERANCE);
+        assert!(!rep.passed());
+        assert!(rep.failures[0].contains("shard socket bytes"), "{}", rep.failures[0]);
+        // Barrier wait is wall-clock noise: a 100x swing never fails.
+        let slow_barrier = BaselineFile { rows: vec![shard_row(1 << 20, 50_000)] };
+        assert!(gate(&base, &slow_barrier, DEFAULT_TOLERANCE).passed());
+        // Zero-baseline rows (pre-shard history) stay disarmed.
+        let legacy = BaselineFile { rows: vec![shard_row(0, 0)] };
+        let fresh = BaselineFile { rows: vec![shard_row(1 << 30, 0)] };
+        assert!(gate(&legacy, &fresh, DEFAULT_TOLERANCE).passed());
     }
 
     #[test]

@@ -7,8 +7,8 @@
 //!            [--engine cpu|xla] [--assignment rr|rot] [--round] [--serial]
 //!            [--strategy full|active --sweep-every 8 --forget-after 3]
 //!            [--sweep-backend scalar|screened|engine] [--sweep-policy fixed|adaptive]
-//!            [--store mem|disk --store-dir store --store-budget-mb 64]
-//!            [--store-retries 4] [--fault-plan seed=1,read-eio=0.01]
+//!            [--store mem|disk|shard --store-dir store --store-budget-mb 64]
+//!            [--workers 2] [--store-retries 4] [--fault-plan seed=1,read-eio=0.01]
 //!            [--checkpoint state.ckpt --checkpoint-every 10]
 //!            [--resume state.ckpt | --warm-start state.ckpt]
 //!            [--recover-attempts 2] [--on-interrupt ignore|checkpoint]
@@ -18,8 +18,8 @@
 //!            [--algorithm dykstra|prox-mm|prox-sd]
 //!            [--strategy full|active --sweep-every 8 --forget-after 3]
 //!            [--sweep-backend scalar|screened|engine] [--sweep-policy fixed|adaptive]
-//!            [--store mem|disk --store-dir store --store-budget-mb 64]
-//!            [--store-retries 4] [--fault-plan seed=1,read-eio=0.01]
+//!            [--store mem|disk|shard --store-dir store --store-budget-mb 64]
+//!            [--workers 2] [--store-retries 4] [--fault-plan seed=1,read-eio=0.01]
 //!            [--checkpoint ... --checkpoint-every ... --resume ... --warm-start ...]
 //!            [--recover-attempts 2] [--on-interrupt ignore|checkpoint]
 //!            [--watchdog-stall 5 --watchdog-dump watchdog_dump.json]
@@ -85,6 +85,9 @@ fn main() -> Result<()> {
         "fig7" => cmd_fig7(&args),
         "report" => cmd_report(&args),
         "bench-gate" => cmd_bench_gate(&args),
+        // Hidden: the shard coordinator re-enters its own binary with
+        // this subcommand to run one worker process (see ShardStore).
+        "shard-worker" => cmd_shard_worker(&args),
         "" | "help" | "--help" => {
             print_help();
             Ok(())
@@ -140,19 +143,32 @@ fn parse_sweep_backend(args: &Args) -> Result<SweepBackend> {
         .with_context(|| format!("--sweep-backend must be scalar|screened|engine, got `{s}`"))
 }
 
-/// Storage flags shared by the solve commands: `--store mem|disk`,
-/// `--store-dir <dir>` (default `store`), `--store-budget-mb <MiB>`
-/// (default 64) — the out-of-core tile store for `X` — plus the
-/// robustness knobs: `--store-retries <N>` bounds the per-operation
-/// retry budget for transient block-I/O failures, and `--fault-plan
-/// <key=value,...>` (or env `METRIC_PROJ_FAULTS`) arms deterministic
-/// fault injection at the block layer for drills and tests.
+/// Storage flags shared by the solve commands: `--store
+/// mem|disk|shard`, `--store-dir <dir>` (default `store`),
+/// `--store-budget-mb <MiB>` (default 64) — the out-of-core tile store
+/// for `X` — `--workers <N>` (default 2) shard worker processes for the
+/// shard backend, plus the robustness knobs: `--store-retries <N>`
+/// bounds the per-operation retry budget for transient block-I/O
+/// failures, and `--fault-plan <key=value,...>` (or env
+/// `METRIC_PROJ_FAULTS`) arms deterministic fault injection at the disk
+/// store's block layer for drills and tests.
 fn parse_store_cfg(args: &Args) -> Result<StoreCfg> {
     let kind_str = args.get("store").unwrap_or("mem");
     let kind = StoreKind::parse(kind_str)
-        .with_context(|| format!("--store must be mem|disk, got `{kind_str}`"))?;
+        .with_context(|| format!("--store must be mem|disk|shard, got `{kind_str}`"))?;
     let budget_mb =
         args.get_or("store-budget-mb", 64usize).map_err(|e| anyhow::anyhow!(e))?.max(1);
+    let workers = args.get_or("workers", 2usize).map_err(|e| anyhow::anyhow!(e))?;
+    if kind == StoreKind::Shard && workers == 0 {
+        bail!("--workers must be at least 1");
+    }
+    // The coordinator spawns shard workers by re-entering its own
+    // binary with the hidden `shard-worker` subcommand.
+    let worker_exe = if kind == StoreKind::Shard {
+        Some(std::env::current_exe().context("resolving the worker executable")?)
+    } else {
+        None
+    };
     let spec = match args.get("fault-plan") {
         Some(s) => Some(s.to_string()),
         None => std::env::var("METRIC_PROJ_FAULTS").ok(),
@@ -174,6 +190,8 @@ fn parse_store_cfg(args: &Args) -> Result<StoreCfg> {
         retries: args
             .get_or("store-retries", DEFAULT_STORE_RETRIES)
             .map_err(|e| anyhow::anyhow!(e))?,
+        workers,
+        worker_exe,
     })
 }
 
@@ -190,20 +208,37 @@ fn parse_sweep_policy(args: &Args) -> Result<Option<SweepPolicy>> {
     }
 }
 
-/// Print the storage line for a disk-backed solve (silent for mem).
+/// Print the storage line for a non-resident solve (silent for mem).
 fn print_store_cfg(cfg: &StoreCfg) {
-    if cfg.kind == StoreKind::Disk {
-        println!(
+    match cfg.kind {
+        StoreKind::Mem => {}
+        StoreKind::Disk => println!(
             "store     : disk ({}, cache budget {} MiB split over the X and streamed-W planes)",
             cfg.x_path().display(),
             cfg.budget_bytes >> 20
-        );
+        ),
+        StoreKind::Shard => println!(
+            "store     : shard ({} x {} worker processes over unix sockets)",
+            cfg.x_path().display(),
+            cfg.workers
+        ),
     }
 }
 
 /// Print the tile-store I/O counters when the solve ran out of core.
 fn print_store_io(stats: Option<metric_proj::matrix::store::StoreStats>) {
     if let Some(stats) = stats {
+        if stats.shard_requests > 0 {
+            println!(
+                "shard I/O : {} requests, {:.2} MiB sent, {:.2} MiB received, \
+                 {:.1} ms barrier wait",
+                stats.shard_requests,
+                stats.shard_bytes_out as f64 / (1u64 << 20) as f64,
+                stats.shard_bytes_in as f64 / (1u64 << 20) as f64,
+                stats.barrier_wait_us as f64 / 1000.0
+            );
+            return;
+        }
         println!(
             "store I/O : {} block loads ({} W-plane), {} evictions ({} write-backs), \
              {} prefetched, peak cache {:.2} MiB",
@@ -227,11 +262,12 @@ fn print_store_io(stats: Option<metric_proj::matrix::store::StoreStats>) {
     }
 }
 
-/// Sweep `--store-dir` for leftovers of crashed runs (temp files and
-/// orphaned spill planes whose owner holds no live lock) before a disk
-/// solve opens the store; prints what it removed.
+/// Sweep `--store-dir` for leftovers of crashed runs (temp files,
+/// orphaned spill planes, and dead per-shard locks whose owner holds no
+/// live pid) before a disk or shard solve opens the store; prints what
+/// it removed.
 fn clean_store_dir(cfg: &StoreCfg) -> Result<()> {
-    if cfg.kind != StoreKind::Disk {
+    if cfg.kind == StoreKind::Mem {
         return Ok(());
     }
     let removed = clean_stale_artifacts(&cfg.dir)
@@ -438,6 +474,15 @@ impl TraceCli {
     }
 }
 
+/// FNV-1a over the solution plane's bits — the cheap cross-run equality
+/// anchor: two solves print the same value iff their iterates are
+/// bitwise identical, which is how the CI shard matrix diffs a sharded
+/// solve against its resident reference.
+fn solution_fnv(x: &[f64]) -> u64 {
+    use metric_proj::util::hash::{fnv1a64_f64s, Fnv1a};
+    fnv1a64_f64s(Fnv1a::new().finish(), x)
+}
+
 /// Print the work accounting shared by `solve` and `nearness`.
 fn print_work(metric_visits: u64, active_triplets: usize, passes: usize, full_per_pass: u128) {
     let full_total = full_per_pass as f64 * passes.max(1) as f64;
@@ -550,10 +595,11 @@ fn cmd_solve(args: &Args) -> Result<()> {
     if ck.in_use() && engine != "cpu" {
         bail!("--checkpoint/--resume/--warm-start run on the CPU engine only");
     }
-    if store_cfg.kind == StoreKind::Disk && (args.has_flag("serial") || engine != "cpu") {
+    if store_cfg.kind != StoreKind::Mem && (args.has_flag("serial") || engine != "cpu") {
         bail!(
-            "--store disk runs on the parallel CPU engine only \
-             (drop --serial / use --engine cpu)"
+            "--store {} runs on the parallel CPU engine only \
+             (drop --serial / use --engine cpu)",
+            store_cfg.kind.name()
         );
     }
     let start: Option<SolverState> = match ck.loaded.clone() {
@@ -654,6 +700,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
     print_work(sol.metric_visits, sol.active_triplets, sol.passes, inst.n_metric_constraints());
     print_sweep_screen(sol.sweep_screened, sol.sweep_projected);
     print_store_io(sol.store_stats);
+    println!("solution fnv : {:#018x}", solution_fnv(sol.x.as_slice()));
 
     if args.has_flag("round") {
         let labels_t = threshold::round(&sol.x, 0.5);
@@ -754,6 +801,7 @@ fn cmd_nearness(args: &Args) -> Result<()> {
     print_work(sol.metric_visits, sol.active_triplets, sol.passes, full_per_pass);
     print_sweep_screen(sol.sweep_screened, sol.sweep_projected);
     print_store_io(sol.store_stats);
+    println!("solution fnv : {:#018x}", solution_fnv(sol.x.as_slice()));
     Ok(())
 }
 
@@ -979,6 +1027,19 @@ fn cmd_report(args: &Args) -> Result<()> {
         bail!("--trace: no paths given");
     }
     print!("{}", metric_proj::telemetry::report::render_files(&paths)?);
+    Ok(())
+}
+
+/// Hidden `shard-worker --connect <socket>` — one shard worker process,
+/// spawned by a `--store shard` coordinator from this same binary. It
+/// connects back, receives its slice over INIT, and serves leases until
+/// shutdown (or coordinator EOF).
+fn cmd_shard_worker(args: &Args) -> Result<()> {
+    let sock = args
+        .get("connect")
+        .context("shard-worker needs --connect <socket path>")?;
+    metric_proj::matrix::store::shard::worker_main(Path::new(sock))
+        .with_context(|| format!("shard worker serving `{sock}`"))?;
     Ok(())
 }
 

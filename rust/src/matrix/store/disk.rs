@@ -208,12 +208,16 @@ struct StoreHealth {
 /// `<x file>.lock` holding the owner's pid, created with `create_new`
 /// for atomicity. Stale locks (dead pid) are broken; live ones refuse
 /// the open with [`StoreError::Locked`]. Removed on drop.
-struct StoreLock {
+///
+/// Shard workers reuse this guard on their *per-shard* data file
+/// (`x.tiles.shard<k>.lock`), so a multi-process sharded solve holds one
+/// lock per shard instead of fighting over a single `x.tiles.lock`.
+pub(crate) struct StoreLock {
     path: PathBuf,
 }
 
 impl StoreLock {
-    fn acquire(store_path: &Path) -> Result<StoreLock, StoreError> {
+    pub(crate) fn acquire(store_path: &Path) -> Result<StoreLock, StoreError> {
         let path = sibling(store_path, ".lock");
         for _ in 0..2 {
             match OpenOptions::new().write(true).create_new(true).open(&path) {
@@ -249,7 +253,7 @@ impl Drop for StoreLock {
 
 /// Whether `lock_path` names a lockfile owned by a live process. A
 /// missing or unreadable pid counts as dead (the lock is stale).
-fn lock_is_live(lock_path: &Path) -> bool {
+pub(crate) fn lock_is_live(lock_path: &Path) -> bool {
     std::fs::read_to_string(lock_path)
         .ok()
         .and_then(|s| s.trim().parse::<u32>().ok())
@@ -273,7 +277,12 @@ fn pid_alive(_pid: u32) -> bool {
 /// orphaned derived artifacts — `*.w` spill planes and `*.lock` files
 /// whose owning store has no live lock. Live-locked stores keep all
 /// their siblings; `*.ckpt` snapshots are always kept (they are the
-/// crash-recovery artifact). Returns the removed paths; a missing `dir`
+/// crash-recovery artifact). The rules are shard-aware by construction:
+/// a sharded store's locks are *per shard* (`x.tiles.shard<k>.lock`,
+/// each holding its worker's pid), so a restarting coordinator sweeps
+/// only the locks of dead workers and never refuses — or breaks — its
+/// own live ones, and the shard data files themselves (no recognized
+/// suffix) are never swept. Returns the removed paths; a missing `dir`
 /// is an empty sweep, not an error.
 pub fn clean_stale_artifacts(dir: &Path) -> std::io::Result<Vec<PathBuf>> {
     let entries = match std::fs::read_dir(dir) {
@@ -337,6 +346,18 @@ pub struct StoreStats {
     /// Transient block-I/O failures healed by the bounded retry loop
     /// (both planes) — nonzero means the store survived real faults.
     pub retries: u64,
+    /// Protocol round-trips a sharded store issued to its workers
+    /// (reads, writes, stamps, barriers — every request frame).
+    pub shard_requests: u64,
+    /// Payload bytes a sharded store received from its workers (gathered
+    /// `x`/`winv` entries, fingerprints, acks).
+    pub shard_bytes_in: u64,
+    /// Payload bytes a sharded store sent to its workers (scatter
+    /// write-backs, requests, init slices).
+    pub shard_bytes_out: u64,
+    /// Microseconds the coordinator spent blocked in end-of-pass barrier
+    /// / heartbeat exchanges with its shard workers.
+    pub barrier_wait_us: u64,
 }
 
 struct CachedBlock {
@@ -830,6 +851,8 @@ impl DiskStore {
             entry_loads: x.entry_loads,
             blocks_skipped: x.blocks_skipped,
             retries: x.retries + w.retries,
+            // The socket-transport counters belong to the shard store.
+            ..StoreStats::default()
         }
     }
 
@@ -1475,7 +1498,7 @@ fn data_start(lay: &BlockLayout) -> u64 {
 
 /// `path` with `suffix` appended to the file name (appended, not a
 /// replaced extension, so distinct stores never collide on a sibling).
-fn sibling(path: &Path, suffix: &str) -> PathBuf {
+pub(crate) fn sibling(path: &Path, suffix: &str) -> PathBuf {
     let mut name = path.as_os_str().to_owned();
     name.push(suffix);
     PathBuf::from(name)
@@ -1496,7 +1519,7 @@ pub fn snapshot_sibling(path: &Path) -> PathBuf {
 
 /// Global packed column offsets for dimension `n` (column `c` starts at
 /// `sum_{i<c} (n - 1 - i)`).
-fn packed_col_starts(n: usize) -> Vec<usize> {
+pub(crate) fn packed_col_starts(n: usize) -> Vec<usize> {
     let mut col_starts = Vec::with_capacity(n);
     let mut acc = 0usize;
     for i in 0..n {
@@ -1601,7 +1624,7 @@ fn fingerprint_of(sums: &[u64]) -> u64 {
     h.finish()
 }
 
-fn f64s_to_bytes(data: &[f64]) -> Vec<u8> {
+pub(crate) fn f64s_to_bytes(data: &[f64]) -> Vec<u8> {
     let mut out = Vec::with_capacity(data.len() * 8);
     for &v in data {
         out.extend_from_slice(&v.to_bits().to_le_bytes());
@@ -1609,7 +1632,7 @@ fn f64s_to_bytes(data: &[f64]) -> Vec<u8> {
     out
 }
 
-fn bytes_to_f64s(bytes: &[u8]) -> Vec<f64> {
+pub(crate) fn bytes_to_f64s(bytes: &[u8]) -> Vec<f64> {
     bytes
         .chunks_exact(8)
         .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().expect("8 bytes"))))
@@ -2119,6 +2142,37 @@ mod tests {
         // A missing directory is an empty sweep, not an error.
         let _ = std::fs::remove_dir_all(&dir);
         assert!(clean_stale_artifacts(&dir).expect("missing dir").is_empty());
+    }
+
+    #[test]
+    fn clean_stale_artifacts_is_shard_aware() {
+        // Per-shard lock paths mean a coordinator restart sweeps only
+        // dead workers' locks: live shard locks, shard data files, and
+        // shard snapshots all survive the sweep.
+        let dir = std::env::temp_dir()
+            .join(format!("metric_proj_sweep_shard_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        std::fs::write(dir.join("x.tiles.shard0"), b"slice 0").expect("write");
+        std::fs::write(dir.join("x.tiles.shard1"), b"slice 1").expect("write");
+        std::fs::write(dir.join("x.tiles.shard0.ckpt"), b"snapshot 0").expect("write");
+        // Shard 0's worker died (stale pid); shard 1's is live (our pid).
+        std::fs::write(dir.join("x.tiles.shard0.lock"), b"999999999").expect("write");
+        std::fs::write(dir.join("x.tiles.shard1.lock"), std::process::id().to_string())
+            .expect("write");
+        // A torn shard persist (crash between write and rename).
+        std::fs::write(dir.join("x.tiles.shard0.tmp"), b"torn").expect("write");
+        let mut removed = clean_stale_artifacts(&dir).expect("sweep");
+        removed.sort();
+        assert_eq!(
+            removed,
+            vec![dir.join("x.tiles.shard0.lock"), dir.join("x.tiles.shard0.tmp")]
+        );
+        assert!(dir.join("x.tiles.shard0").exists(), "shard data is never swept");
+        assert!(dir.join("x.tiles.shard1").exists());
+        assert!(dir.join("x.tiles.shard0.ckpt").exists(), "shard snapshots survive");
+        assert!(dir.join("x.tiles.shard1.lock").exists(), "live worker lock survives");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

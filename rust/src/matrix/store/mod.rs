@@ -65,6 +65,8 @@ pub mod disk;
 pub mod faults;
 pub mod layout;
 pub mod mem;
+pub mod protocol;
+pub mod shard;
 
 pub use disk::{
     clean_stale_artifacts, snapshot_sibling, DiskStore, RetryNote, StoreError, StoreStats,
@@ -72,6 +74,7 @@ pub use disk::{
 };
 pub use faults::FaultPlan;
 pub use mem::MemStore;
+pub use shard::ShardStore;
 
 use crate::solver::schedule::Tile;
 use crate::util::shared::SharedMut;
@@ -247,14 +250,18 @@ pub enum StoreKind {
     Mem,
     /// File-backed tile blocks with a bounded resident working set.
     Disk,
+    /// Plane sharded across worker processes behind Unix-socket leases
+    /// ([`ShardStore`]).
+    Shard,
 }
 
 impl StoreKind {
-    /// Parse a CLI name (`mem` / `disk`).
+    /// Parse a CLI name (`mem` / `disk` / `shard`).
     pub fn parse(s: &str) -> Option<StoreKind> {
         match s {
             "mem" | "memory" => Some(StoreKind::Mem),
             "disk" | "file" => Some(StoreKind::Disk),
+            "shard" | "sharded" => Some(StoreKind::Shard),
             _ => None,
         }
     }
@@ -264,6 +271,7 @@ impl StoreKind {
         match self {
             StoreKind::Mem => "mem",
             StoreKind::Disk => "disk",
+            StoreKind::Shard => "shard",
         }
     }
 }
@@ -291,6 +299,15 @@ pub struct StoreCfg {
     pub faults: Option<Arc<FaultPlan>>,
     /// Bounded retry budget per block operation (`--store-retries`).
     pub retries: u32,
+    /// Number of shard workers (`--workers`; shard backend only).
+    pub workers: usize,
+    /// How the shard backend runs its workers: `Some(exe)` spawns real
+    /// worker *processes* from that binary (the CLI passes its own
+    /// `current_exe()`, which re-enters as the hidden `shard-worker`
+    /// subcommand); `None` runs the same worker loop on in-process
+    /// threads over socketpairs — the embedder/bench/unit-test mode,
+    /// byte-for-byte the same protocol.
+    pub worker_exe: Option<PathBuf>,
 }
 
 impl Default for StoreCfg {
@@ -301,6 +318,8 @@ impl Default for StoreCfg {
             budget_bytes: 64 << 20,
             faults: None,
             retries: DEFAULT_STORE_RETRIES,
+            workers: 2,
+            worker_exe: None,
         }
     }
 }
@@ -318,6 +337,18 @@ impl StoreCfg {
             kind: StoreKind::Disk,
             dir: dir.into(),
             budget_bytes,
+            ..StoreCfg::default()
+        }
+    }
+
+    /// A shard configuration rooted at `dir` with `workers` in-process
+    /// worker threads (set [`StoreCfg::worker_exe`] afterwards to use
+    /// real processes).
+    pub fn shard(dir: impl Into<PathBuf>, workers: usize) -> StoreCfg {
+        StoreCfg {
+            kind: StoreKind::Shard,
+            dir: dir.into(),
+            workers,
             ..StoreCfg::default()
         }
     }
@@ -343,8 +374,10 @@ mod tests {
         assert_eq!(StoreKind::parse("memory"), Some(StoreKind::Mem));
         assert_eq!(StoreKind::parse("disk"), Some(StoreKind::Disk));
         assert_eq!(StoreKind::parse("file"), Some(StoreKind::Disk));
+        assert_eq!(StoreKind::parse("shard"), Some(StoreKind::Shard));
+        assert_eq!(StoreKind::parse("sharded"), Some(StoreKind::Shard));
         assert_eq!(StoreKind::parse("tape"), None);
-        for k in [StoreKind::Mem, StoreKind::Disk] {
+        for k in [StoreKind::Mem, StoreKind::Disk, StoreKind::Shard] {
             assert_eq!(StoreKind::parse(k.name()), Some(k));
         }
         assert_eq!(StoreKind::default(), StoreKind::Mem);
@@ -357,5 +390,9 @@ mod tests {
         assert_eq!(cfg.x_path(), PathBuf::from("/tmp/xyz/x.tiles"));
         assert_eq!(cfg.budget_bytes, 2 << 20);
         assert_eq!(StoreCfg::mem().kind, StoreKind::Mem);
+        let sh = StoreCfg::shard("/tmp/sh", 4);
+        assert_eq!(sh.kind, StoreKind::Shard);
+        assert_eq!(sh.workers, 4);
+        assert!(sh.worker_exe.is_none());
     }
 }

@@ -1,0 +1,563 @@
+//! Wire protocol between a sharded solve's coordinator and its worker
+//! processes (see [`super::shard`]).
+//!
+//! Every message is one **frame**: a little-endian `u32` body length
+//! followed by the body, whose first byte is the opcode. Payloads are
+//! fixed-width little-endian integers, length-prefixed byte strings, and
+//! raw `f64` bit patterns — no general-purpose serialization, so the
+//! bytes a worker returns for an entry are exactly the bytes it holds
+//! and a sharded gather stays bit-identical to a resident read.
+//!
+//! The conversation is strictly request/response over a per-worker
+//! Unix-domain socket (the coordinator never pipelines), so a frame
+//! boundary is also a turn boundary: after writing a request the
+//! coordinator reads exactly one response, and a worker that encounters
+//! a store error answers with an [`Response::Err`] frame carrying a
+//! typed [`StoreError`] instead of dying silently.
+//!
+//! Offsets in [`Request::Read`] / [`Request::Write`] are **global packed
+//! column-major entry indices** — the same addressing every kernel and
+//! [`super::TileStore`] lease uses — and must lie inside the worker's
+//! own partition range; the worker rejects anything else as a
+//! [`StoreError::Mismatch`].
+
+use super::disk::{bytes_to_f64s, f64s_to_bytes, StoreError};
+use std::io::{Read, Write};
+use std::path::PathBuf;
+
+/// Protocol version, checked at [`Request::Init`].
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Upper bound on a frame body (1 GiB): a length prefix beyond this is
+/// treated as stream corruption rather than honored as an allocation.
+pub const MAX_FRAME_LEN: u32 = 1 << 30;
+
+/// Coordinator → worker messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Hand the worker its identity and its resident slice. `x_path` is
+    /// the *logical* store file (`<dir>/x.tiles`); the worker derives
+    /// its own artifacts (`x.tiles.shard<k>`, per-shard lock) from it.
+    /// The partition geometry is recomputed worker-side from
+    /// `(n, n_shards, shard)`, so both ends agree by construction.
+    Init {
+        /// Protocol version of the coordinator.
+        version: u32,
+        /// Problem dimension.
+        n: u64,
+        /// This worker's shard index.
+        shard: u32,
+        /// Total shard count.
+        n_shards: u32,
+        /// Logical store path the shard artifacts are siblings of.
+        x_path: PathBuf,
+        /// The shard's slice of the packed `x` plane.
+        x: Vec<f64>,
+        /// The shard's slice of the packed inverse-weight plane.
+        winv: Vec<f64>,
+    },
+    /// Gather the listed `(global_offset, len)` ranges of both planes.
+    Read {
+        /// Ascending, non-overlapping, inside the worker's partition.
+        ranges: Vec<(u64, u64)>,
+    },
+    /// Scatter `x` back over the listed ranges (concatenated in range
+    /// order). `winv` is read-only and never written.
+    Write {
+        /// Same contract as [`Request::Read`].
+        ranges: Vec<(u64, u64)>,
+        /// Concatenated replacement entries, `sum(len)` values.
+        x: Vec<f64>,
+    },
+    /// Persist the shard file stamped with `pass`, then return the
+    /// FNV-1a state after folding this shard's slice into `seed` — the
+    /// chaining step of the plane-wide fingerprint.
+    Stamp {
+        /// Solver pass being stamped.
+        pass: u64,
+        /// Incoming FNV state (previous shard's result).
+        seed: u64,
+    },
+    /// Return the chained FNV state without persisting anything.
+    Fingerprint {
+        /// Incoming FNV state (previous shard's result).
+        seed: u64,
+    },
+    /// Copy the shard file to its `.ckpt` sibling (atomically).
+    Snapshot,
+    /// End-of-pass barrier / liveness heartbeat; echoes `pass` back.
+    Barrier {
+        /// Pass number, echoed in the response.
+        pass: u64,
+    },
+    /// Clean shutdown: the worker acks, releases its lock, and exits.
+    Shutdown,
+}
+
+/// Worker → coordinator messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// Init accepted; `pid` is the worker's OS process id (the
+    /// coordinator's own pid for in-process worker threads).
+    InitAck {
+        /// Worker process id.
+        pid: u32,
+    },
+    /// Gathered entries, concatenated in range order, both planes.
+    Read {
+        /// Distance entries.
+        x: Vec<f64>,
+        /// Inverse-weight entries (same layout).
+        winv: Vec<f64>,
+    },
+    /// Scatter applied.
+    WriteAck,
+    /// Shard file persisted; `chain` is the outgoing FNV state.
+    Stamp {
+        /// FNV state after this shard's slice.
+        chain: u64,
+    },
+    /// Chained fingerprint without persistence.
+    Fingerprint {
+        /// FNV state after this shard's slice.
+        chain: u64,
+    },
+    /// Snapshot written.
+    SnapshotAck,
+    /// Barrier reached; echoes the request's pass.
+    Barrier {
+        /// Echoed pass number.
+        pass: u64,
+    },
+    /// Shutdown acknowledged (the socket closes right after).
+    ShutdownAck,
+    /// The request failed worker-side with a typed store error.
+    Err {
+        /// The re-hydrated error.
+        error: StoreError,
+    },
+}
+
+const OP_INIT: u8 = 0x01;
+const OP_READ: u8 = 0x02;
+const OP_WRITE: u8 = 0x03;
+const OP_STAMP: u8 = 0x04;
+const OP_FINGERPRINT: u8 = 0x05;
+const OP_SNAPSHOT: u8 = 0x06;
+const OP_BARRIER: u8 = 0x07;
+const OP_SHUTDOWN: u8 = 0x08;
+const OP_INIT_ACK: u8 = 0x81;
+const OP_READ_OK: u8 = 0x82;
+const OP_WRITE_OK: u8 = 0x83;
+const OP_STAMP_OK: u8 = 0x84;
+const OP_FINGERPRINT_OK: u8 = 0x85;
+const OP_SNAPSHOT_OK: u8 = 0x86;
+const OP_BARRIER_OK: u8 = 0x87;
+const OP_SHUTDOWN_OK: u8 = 0x88;
+const OP_ERR: u8 = 0x7F;
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    put_u64(out, b.len() as u64);
+    out.extend_from_slice(b);
+}
+
+fn put_f64s(out: &mut Vec<u8>, data: &[f64]) {
+    put_bytes(out, &f64s_to_bytes(data));
+}
+
+fn put_ranges(out: &mut Vec<u8>, ranges: &[(u64, u64)]) {
+    put_u64(out, ranges.len() as u64);
+    for &(off, len) in ranges {
+        put_u64(out, off);
+        put_u64(out, len);
+    }
+}
+
+/// Bounded reader over a frame body.
+struct Buf<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Buf<'a> {
+    fn new(b: &'a [u8]) -> Buf<'a> {
+        Buf { b, pos: 0 }
+    }
+
+    fn take(&mut self, len: usize) -> Result<&'a [u8], StoreError> {
+        let end = self
+            .pos
+            .checked_add(len)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| StoreError::Corrupt("truncated protocol frame".into()))?;
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn take_u8(&mut self) -> Result<u8, StoreError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn take_u32(&mut self) -> Result<u32, StoreError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn take_u64(&mut self) -> Result<u64, StoreError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn take_bytes(&mut self) -> Result<&'a [u8], StoreError> {
+        let len = self.take_u64()?;
+        if len > MAX_FRAME_LEN as u64 {
+            return Err(StoreError::Corrupt(format!("oversized field ({len} bytes)")));
+        }
+        self.take(len as usize)
+    }
+
+    fn take_f64s(&mut self) -> Result<Vec<f64>, StoreError> {
+        let bytes = self.take_bytes()?;
+        if bytes.len() % 8 != 0 {
+            return Err(StoreError::Corrupt("f64 field not a multiple of 8 bytes".into()));
+        }
+        Ok(bytes_to_f64s(bytes))
+    }
+
+    fn take_ranges(&mut self) -> Result<Vec<(u64, u64)>, StoreError> {
+        let count = self.take_u64()?;
+        if count > (MAX_FRAME_LEN as u64) / 16 {
+            return Err(StoreError::Corrupt(format!("oversized range list ({count})")));
+        }
+        let mut ranges = Vec::with_capacity(count as usize);
+        for _ in 0..count {
+            let off = self.take_u64()?;
+            let len = self.take_u64()?;
+            ranges.push((off, len));
+        }
+        Ok(ranges)
+    }
+
+    fn finish(&self) -> Result<(), StoreError> {
+        if self.pos != self.b.len() {
+            return Err(StoreError::Corrupt(format!(
+                "trailing bytes in protocol frame ({} unread)",
+                self.b.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Write one frame (`u32` length + body) and flush.
+pub fn write_frame(w: &mut impl Write, body: &[u8]) -> std::io::Result<()> {
+    debug_assert!(body.len() as u64 <= MAX_FRAME_LEN as u64);
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Read one frame body. An EOF *before* the length prefix surfaces as
+/// `UnexpectedEof` — callers distinguish a peer that closed cleanly from
+/// one that died mid-frame by whether any bytes arrived.
+pub fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len);
+    if len > MAX_FRAME_LEN {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("protocol frame length {len} exceeds {MAX_FRAME_LEN}"),
+        ));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    Ok(body)
+}
+
+impl Request {
+    /// Serialize into a frame body.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Request::Init { version, n, shard, n_shards, x_path, x, winv } => {
+                out.push(OP_INIT);
+                put_u32(&mut out, *version);
+                put_u64(&mut out, *n);
+                put_u32(&mut out, *shard);
+                put_u32(&mut out, *n_shards);
+                put_bytes(&mut out, x_path.to_string_lossy().as_bytes());
+                put_f64s(&mut out, x);
+                put_f64s(&mut out, winv);
+            }
+            Request::Read { ranges } => {
+                out.push(OP_READ);
+                put_ranges(&mut out, ranges);
+            }
+            Request::Write { ranges, x } => {
+                out.push(OP_WRITE);
+                put_ranges(&mut out, ranges);
+                put_f64s(&mut out, x);
+            }
+            Request::Stamp { pass, seed } => {
+                out.push(OP_STAMP);
+                put_u64(&mut out, *pass);
+                put_u64(&mut out, *seed);
+            }
+            Request::Fingerprint { seed } => {
+                out.push(OP_FINGERPRINT);
+                put_u64(&mut out, *seed);
+            }
+            Request::Snapshot => out.push(OP_SNAPSHOT),
+            Request::Barrier { pass } => {
+                out.push(OP_BARRIER);
+                put_u64(&mut out, *pass);
+            }
+            Request::Shutdown => out.push(OP_SHUTDOWN),
+        }
+        out
+    }
+
+    /// Parse a frame body.
+    pub fn decode(body: &[u8]) -> Result<Request, StoreError> {
+        let mut buf = Buf::new(body);
+        let req = match buf.take_u8()? {
+            OP_INIT => Request::Init {
+                version: buf.take_u32()?,
+                n: buf.take_u64()?,
+                shard: buf.take_u32()?,
+                n_shards: buf.take_u32()?,
+                x_path: PathBuf::from(String::from_utf8_lossy(buf.take_bytes()?).into_owned()),
+                x: buf.take_f64s()?,
+                winv: buf.take_f64s()?,
+            },
+            OP_READ => Request::Read { ranges: buf.take_ranges()? },
+            OP_WRITE => {
+                Request::Write { ranges: buf.take_ranges()?, x: buf.take_f64s()? }
+            }
+            OP_STAMP => Request::Stamp { pass: buf.take_u64()?, seed: buf.take_u64()? },
+            OP_FINGERPRINT => Request::Fingerprint { seed: buf.take_u64()? },
+            OP_SNAPSHOT => Request::Snapshot,
+            OP_BARRIER => Request::Barrier { pass: buf.take_u64()? },
+            OP_SHUTDOWN => Request::Shutdown,
+            op => return Err(StoreError::Corrupt(format!("unknown request opcode {op:#x}"))),
+        };
+        buf.finish()?;
+        Ok(req)
+    }
+}
+
+/// Error kinds on the wire (one byte + auxiliary word + message).
+fn err_body(error: &StoreError) -> Vec<u8> {
+    let (kind, aux, msg): (u8, u32, String) = match error {
+        StoreError::Io(e) => (0, e.raw_os_error().unwrap_or(0) as u32, e.to_string()),
+        StoreError::BadMagic => (1, 0, String::new()),
+        StoreError::UnsupportedVersion(v) => (2, *v, String::new()),
+        StoreError::Corrupt(m) => (3, 0, m.clone()),
+        StoreError::Mismatch(m) => (4, 0, m.clone()),
+        StoreError::Locked(m) => (5, 0, m.clone()),
+    };
+    let mut out = vec![OP_ERR, kind];
+    put_u32(&mut out, aux);
+    put_bytes(&mut out, msg.as_bytes());
+    out
+}
+
+fn decode_err(buf: &mut Buf<'_>) -> Result<StoreError, StoreError> {
+    let kind = buf.take_u8()?;
+    let aux = buf.take_u32()?;
+    let msg = String::from_utf8_lossy(buf.take_bytes()?).into_owned();
+    Ok(match kind {
+        0 => {
+            let e = if aux != 0 {
+                std::io::Error::from_raw_os_error(aux as i32)
+            } else {
+                std::io::Error::other(msg)
+            };
+            StoreError::Io(e)
+        }
+        1 => StoreError::BadMagic,
+        2 => StoreError::UnsupportedVersion(aux),
+        3 => StoreError::Corrupt(msg),
+        4 => StoreError::Mismatch(msg),
+        5 => StoreError::Locked(msg),
+        k => return Err(StoreError::Corrupt(format!("unknown error kind {k}"))),
+    })
+}
+
+impl Response {
+    /// Serialize into a frame body.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Response::InitAck { pid } => {
+                out.push(OP_INIT_ACK);
+                put_u32(&mut out, *pid);
+            }
+            Response::Read { x, winv } => {
+                out.push(OP_READ_OK);
+                put_f64s(&mut out, x);
+                put_f64s(&mut out, winv);
+            }
+            Response::WriteAck => out.push(OP_WRITE_OK),
+            Response::Stamp { chain } => {
+                out.push(OP_STAMP_OK);
+                put_u64(&mut out, *chain);
+            }
+            Response::Fingerprint { chain } => {
+                out.push(OP_FINGERPRINT_OK);
+                put_u64(&mut out, *chain);
+            }
+            Response::SnapshotAck => out.push(OP_SNAPSHOT_OK),
+            Response::Barrier { pass } => {
+                out.push(OP_BARRIER_OK);
+                put_u64(&mut out, *pass);
+            }
+            Response::ShutdownAck => out.push(OP_SHUTDOWN_OK),
+            Response::Err { error } => return err_body(error),
+        }
+        out
+    }
+
+    /// Parse a frame body.
+    pub fn decode(body: &[u8]) -> Result<Response, StoreError> {
+        let mut buf = Buf::new(body);
+        let resp = match buf.take_u8()? {
+            OP_INIT_ACK => Response::InitAck { pid: buf.take_u32()? },
+            OP_READ_OK => Response::Read { x: buf.take_f64s()?, winv: buf.take_f64s()? },
+            OP_WRITE_OK => Response::WriteAck,
+            OP_STAMP_OK => Response::Stamp { chain: buf.take_u64()? },
+            OP_FINGERPRINT_OK => Response::Fingerprint { chain: buf.take_u64()? },
+            OP_SNAPSHOT_OK => Response::SnapshotAck,
+            OP_BARRIER_OK => Response::Barrier { pass: buf.take_u64()? },
+            OP_SHUTDOWN_OK => Response::ShutdownAck,
+            OP_ERR => Response::Err { error: decode_err(&mut buf)? },
+            op => return Err(StoreError::Corrupt(format!("unknown response opcode {op:#x}"))),
+        };
+        buf.finish()?;
+        Ok(resp)
+    }
+}
+
+// PartialEq for Response must see through StoreError (which carries
+// io::Error and is not PartialEq): compare the rendered form, which is
+// what tests and logs observe anyway.
+impl PartialEq for StoreError {
+    fn eq(&self, other: &Self) -> bool {
+        self.to_string() == other.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(req: Request) {
+        let body = req.encode();
+        assert_eq!(Request::decode(&body).unwrap(), req);
+    }
+
+    fn roundtrip_resp(resp: Response) {
+        let body = resp.encode();
+        assert_eq!(Response::decode(&body).unwrap(), resp);
+    }
+
+    #[test]
+    fn every_request_roundtrips() {
+        roundtrip_req(Request::Init {
+            version: PROTOCOL_VERSION,
+            n: 17,
+            shard: 1,
+            n_shards: 4,
+            x_path: PathBuf::from("/tmp/store/x.tiles"),
+            x: vec![1.5, -2.25, f64::MIN_POSITIVE],
+            winv: vec![0.0, 1.0, 4.0],
+        });
+        roundtrip_req(Request::Read { ranges: vec![(0, 3), (10, 7)] });
+        roundtrip_req(Request::Write { ranges: vec![(4, 2)], x: vec![0.5, -0.5] });
+        roundtrip_req(Request::Stamp { pass: 9, seed: 0xdead_beef });
+        roundtrip_req(Request::Fingerprint { seed: 42 });
+        roundtrip_req(Request::Snapshot);
+        roundtrip_req(Request::Barrier { pass: 3 });
+        roundtrip_req(Request::Shutdown);
+    }
+
+    #[test]
+    fn every_response_roundtrips() {
+        roundtrip_resp(Response::InitAck { pid: 4242 });
+        roundtrip_resp(Response::Read { x: vec![1.0, 2.0], winv: vec![3.0, 4.0] });
+        roundtrip_resp(Response::WriteAck);
+        roundtrip_resp(Response::Stamp { chain: 0xcbf29ce484222325 });
+        roundtrip_resp(Response::Fingerprint { chain: 7 });
+        roundtrip_resp(Response::SnapshotAck);
+        roundtrip_resp(Response::Barrier { pass: 11 });
+        roundtrip_resp(Response::ShutdownAck);
+        for error in [
+            StoreError::BadMagic,
+            StoreError::UnsupportedVersion(9),
+            StoreError::Corrupt("torn".into()),
+            StoreError::Mismatch("wrong n".into()),
+            StoreError::Locked("pid 1".into()),
+            StoreError::Io(std::io::Error::from_raw_os_error(28)),
+        ] {
+            roundtrip_resp(Response::Err { error });
+        }
+    }
+
+    #[test]
+    fn f64_payloads_are_bit_exact() {
+        let vals = vec![f64::NAN, -0.0, f64::INFINITY, 1.0 + f64::EPSILON];
+        let body = Response::Read { x: vals.clone(), winv: vals.clone() }.encode();
+        match Response::decode(&body).unwrap() {
+            Response::Read { x, winv } => {
+                for (a, b) in x.iter().chain(winv.iter()).zip(vals.iter().chain(vals.iter())) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn frames_cross_a_pipe() {
+        let mut wire: Vec<u8> = Vec::new();
+        let req = Request::Barrier { pass: 5 };
+        write_frame(&mut wire, &req.encode()).unwrap();
+        let resp = Response::Barrier { pass: 5 };
+        write_frame(&mut wire, &resp.encode()).unwrap();
+        let mut r = &wire[..];
+        assert_eq!(Request::decode(&read_frame(&mut r).unwrap()).unwrap(), req);
+        assert_eq!(Response::decode(&read_frame(&mut r).unwrap()).unwrap(), resp);
+        assert!(read_frame(&mut r).is_err(), "EOF after the last frame");
+    }
+
+    #[test]
+    fn truncated_and_trailing_bytes_are_typed_errors() {
+        let body = Request::Stamp { pass: 1, seed: 2 }.encode();
+        assert!(matches!(
+            Request::decode(&body[..body.len() - 1]),
+            Err(StoreError::Corrupt(_))
+        ));
+        let mut long = body.clone();
+        long.push(0);
+        assert!(matches!(Request::decode(&long), Err(StoreError::Corrupt(_))));
+        assert!(matches!(Request::decode(&[0xEE]), Err(StoreError::Corrupt(_))));
+    }
+
+    #[test]
+    fn oversized_frame_length_is_refused() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(MAX_FRAME_LEN + 1).to_le_bytes());
+        wire.extend_from_slice(&[0u8; 16]);
+        let mut r = &wire[..];
+        let err = read_frame(&mut r).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+}

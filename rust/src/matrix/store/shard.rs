@@ -1,0 +1,1400 @@
+//! Multi-process tile sharding: the packed `x` / `winv` planes split
+//! across worker processes behind [`TileStore`] leases.
+//!
+//! A sharded solve is one **coordinator** (this process — it owns the
+//! wave schedule, the pass loop, termination, checkpoints, telemetry)
+//! and `N` **workers**, each holding one [`ShardPartition`] slice of
+//! both planes resident and answering gather/scatter requests over a
+//! Unix-domain socket speaking the [`super::protocol`] frames. Workers
+//! never compute: every projection runs on the coordinator inside the
+//! lease callback, on bytes the worker copied verbatim — which is why a
+//! sharded solve is **bitwise identical** to the resident one (pinned by
+//! `tests/shard_equivalence.rs`), the same argument that made
+//! [`super::DiskStore`] safe.
+//!
+//! The partition is column-granular ([`ShardPartition`]), so every
+//! per-column segment a tile lease gathers lives wholly inside one
+//! shard: a lease costs one `READ`/`WRITE` round-trip per shard its
+//! footprint touches, never a split segment.
+//!
+//! # Persistence and resume
+//!
+//! Workers persist nothing per-lease. At each checkpoint the
+//! coordinator chains a `STAMP` through the shards: worker `k` writes
+//! its slice to `x.tiles.shard<k>` (atomic `.tmp` + rename; 72-byte
+//! header + raw slice) and folds the slice into the running FNV-1a
+//! state seeded by worker `k - 1`'s result. Because FNV-1a chains, the
+//! final value equals the hash of the whole plane in packed order —
+//! **independent of the partition** — so it doubles as checkpoint v2's
+//! external-x `x_fnv` and a resume may use a *different* `--workers`
+//! count: the coordinator re-reads all shard files itself
+//! ([`ShardStore::open_with`]), re-partitions, and hands out fresh
+//! slices. `SNAPSHOT` copies each shard file to a `.ckpt` sibling, which
+//! the resume path promotes when the live files are torn (a crash
+//! mid-`STAMP` chain), mirroring the disk store's snapshot discipline.
+//!
+//! # Locking and failure
+//!
+//! Each worker holds a [`StoreLock`] on **its own** shard file
+//! (`x.tiles.shard<k>.lock`, holding the worker's pid) — per-shard lock
+//! paths, so a coordinator restart never refuses its own workers the
+//! way a single `x.tiles.lock` would, and a SIGKILLed worker leaves a
+//! dead-pid lock that the next open breaks as stale. Socket failures
+//! latch the store exactly like disk I/O failures: leases park, the
+//! driver's per-pass [`ShardStore::health`] poll (which doubles as the
+//! liveness heartbeat — one `BARRIER` round-trip per worker, timed into
+//! [`StoreStats::barrier_wait_us`]) unwinds the solve with a typed
+//! error, and `--recover-attempts` re-opens from the shard files, which
+//! still hold the last checkpoint state.
+
+use super::disk::{
+    bytes_to_f64s, f64s_to_bytes, lock_is_live, packed_col_starts, sibling, snapshot_sibling,
+    RetryNote, StoreError, StoreLock, StoreStats,
+};
+use super::protocol::{read_frame, write_frame, Request, Response, PROTOCOL_VERSION};
+use super::{Seg, StoreCfg, TileScratch, TileStore};
+use crate::matrix::packed::n_pairs;
+use crate::solver::schedule::{ShardPartition, Tile};
+use crate::solver::tiling::for_each_tile_col;
+use crate::util::hash::{fnv1a64, fnv1a64_f64s, Fnv1a};
+use crate::util::shared::SharedMut;
+use std::fs::File;
+use std::io::Write as _;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Shard file magic: identifies one shard's slice of a sharded store.
+pub const SHARD_MAGIC: [u8; 8] = *b"MPROJSHD";
+
+/// Current shard-file format version.
+pub const SHARD_VERSION: u32 = 1;
+
+const SHARD_HEADER_LEN: usize = 72;
+
+/// How long the coordinator waits for all spawned workers to connect.
+const ACCEPT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Per-request read timeout on coordinator sockets: a worker that goes
+/// silent this long counts as dead.
+const REQUEST_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Bounded patience at drop: shutdown ack + child reap.
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(2);
+
+/// Entries per `READ`/`WRITE` chunk of a pair-range lease, bounding the
+/// frame size (and the worker's transient copy) to 512 KiB of payload.
+const PAIR_CHUNK: usize = 1 << 16;
+
+/// Sanity cap on the shard count read back from a shard file header.
+const MAX_SHARDS: u32 = 4096;
+
+/// Path of shard `k`'s data file: the logical store path (`x.tiles`)
+/// with `.shard<k>` appended.
+pub fn shard_data_path(x_path: &Path, shard: usize) -> PathBuf {
+    sibling(x_path, &format!(".shard{shard}"))
+}
+
+fn shard_header_bytes(
+    n: u64,
+    shard: u32,
+    n_shards: u32,
+    entry_lo: u64,
+    entry_hi: u64,
+    pass: u64,
+    slice_fnv: u64,
+) -> [u8; SHARD_HEADER_LEN] {
+    let mut h = [0u8; SHARD_HEADER_LEN];
+    h[..8].copy_from_slice(&SHARD_MAGIC);
+    h[8..12].copy_from_slice(&SHARD_VERSION.to_le_bytes());
+    h[16..24].copy_from_slice(&n.to_le_bytes());
+    h[24..28].copy_from_slice(&shard.to_le_bytes());
+    h[28..32].copy_from_slice(&n_shards.to_le_bytes());
+    h[32..40].copy_from_slice(&entry_lo.to_le_bytes());
+    h[40..48].copy_from_slice(&entry_hi.to_le_bytes());
+    h[48..56].copy_from_slice(&pass.to_le_bytes());
+    h[56..64].copy_from_slice(&slice_fnv.to_le_bytes());
+    let sum = fnv1a64(&h[..64]);
+    h[64..72].copy_from_slice(&sum.to_le_bytes());
+    h
+}
+
+/// Parsed shard-file header.
+#[derive(Clone, Copy, Debug)]
+struct ShardHeader {
+    n: u64,
+    shard: u32,
+    n_shards: u32,
+    entry_lo: u64,
+    entry_hi: u64,
+    pass: u64,
+    slice_fnv: u64,
+}
+
+fn parse_shard_header(h: &[u8]) -> Result<ShardHeader, StoreError> {
+    if h.len() < SHARD_HEADER_LEN {
+        return Err(StoreError::Corrupt("shard file shorter than its header".into()));
+    }
+    if h[..8] != SHARD_MAGIC {
+        return Err(StoreError::BadMagic);
+    }
+    let version = u32::from_le_bytes(h[8..12].try_into().unwrap());
+    if version != SHARD_VERSION {
+        return Err(StoreError::UnsupportedVersion(version));
+    }
+    let sum = u64::from_le_bytes(h[64..72].try_into().unwrap());
+    if sum != fnv1a64(&h[..64]) {
+        return Err(StoreError::Corrupt("shard header checksum mismatch".into()));
+    }
+    Ok(ShardHeader {
+        n: u64::from_le_bytes(h[16..24].try_into().unwrap()),
+        shard: u32::from_le_bytes(h[24..28].try_into().unwrap()),
+        n_shards: u32::from_le_bytes(h[28..32].try_into().unwrap()),
+        entry_lo: u64::from_le_bytes(h[32..40].try_into().unwrap()),
+        entry_hi: u64::from_le_bytes(h[40..48].try_into().unwrap()),
+        pass: u64::from_le_bytes(h[48..56].try_into().unwrap()),
+        slice_fnv: u64::from_le_bytes(h[56..64].try_into().unwrap()),
+    })
+}
+
+fn read_shard_file(path: &Path) -> Result<(ShardHeader, Vec<f64>), StoreError> {
+    let bytes = std::fs::read(path)?;
+    let header = parse_shard_header(&bytes)?;
+    let want = (header.entry_hi - header.entry_lo) as usize * 8;
+    let data = &bytes[SHARD_HEADER_LEN..];
+    if data.len() != want {
+        return Err(StoreError::Corrupt(format!(
+            "shard file {} holds {} data bytes, header promises {want}",
+            path.display(),
+            data.len()
+        )));
+    }
+    if fnv1a64(data) != header.slice_fnv {
+        return Err(StoreError::Corrupt(format!(
+            "shard file {} slice checksum mismatch (torn write?)",
+            path.display()
+        )));
+    }
+    Ok((header, bytes_to_f64s(data)))
+}
+
+/// Reassemble the full packed plane from the on-disk shard files of a
+/// previous run (whatever worker count wrote them — shard 0's header
+/// names it). Verifies per-file integrity, cross-shard consistency
+/// (same `n`, same shard count, same pass, exact partition geometry),
+/// and that no shard is still live-locked by another process. Returns
+/// `(plane, pass, plane_fnv)`; the fnv is recomputed from the bytes, so
+/// it is simultaneously the stamp and the content fingerprint.
+fn read_shard_plane(x_path: &Path, n: usize) -> Result<(Vec<f64>, u64, u64), StoreError> {
+    let first = shard_data_path(x_path, 0);
+    if !first.exists() {
+        return Err(StoreError::Mismatch(format!(
+            "no shard files at {} (missing {})",
+            x_path.display(),
+            first.display()
+        )));
+    }
+    for_each_live_shard_lock(x_path, |k, lock| {
+        Err(StoreError::Locked(format!(
+            "shard {k} of {} is held by a live process ({})",
+            x_path.display(),
+            lock.display()
+        )))
+    })?;
+    let bytes = std::fs::read(&first)?;
+    let h0 = parse_shard_header(&bytes)?;
+    if h0.n != n as u64 {
+        return Err(StoreError::Mismatch(format!(
+            "shard store is for n = {}, this solve needs n = {n}",
+            h0.n
+        )));
+    }
+    if h0.n_shards == 0 || h0.n_shards > MAX_SHARDS {
+        return Err(StoreError::Corrupt(format!("implausible shard count {}", h0.n_shards)));
+    }
+    let on_disk = h0.n_shards as usize;
+    let part = ShardPartition::new(n, on_disk);
+    let total = n_pairs(n);
+    let mut plane = vec![0.0f64; total];
+    for k in 0..on_disk {
+        let path = shard_data_path(x_path, k);
+        let (h, data) = read_shard_file(&path)?;
+        let (lo, hi) = part.entry_range(k);
+        if h.n != n as u64
+            || h.n_shards != h0.n_shards
+            || h.shard != k as u32
+            || h.pass != h0.pass
+            || h.entry_lo != lo as u64
+            || h.entry_hi != hi as u64
+        {
+            return Err(StoreError::Corrupt(format!(
+                "shard file {} disagrees with its siblings (shard {} of {}, pass {}, \
+                 entries [{}, {}); expected shard {k} of {}, pass {}, entries [{lo}, {hi}))",
+                path.display(),
+                h.shard,
+                h.n_shards,
+                h.pass,
+                h.entry_lo,
+                h.entry_hi,
+                h0.n_shards,
+                h0.pass,
+            )));
+        }
+        plane[lo..hi].copy_from_slice(&data);
+    }
+    let fnv = fnv1a64_f64s(Fnv1a::new().finish(), &plane);
+    Ok((plane, h0.pass, fnv))
+}
+
+/// Visit every live per-shard lock beside `x_path` (scanning the parent
+/// directory for `x.tiles.shard<k>.lock` siblings). The visitor may
+/// short-circuit by returning an error.
+fn for_each_live_shard_lock(
+    x_path: &Path,
+    mut f: impl FnMut(usize, &Path) -> Result<(), StoreError>,
+) -> Result<(), StoreError> {
+    for k in 0..MAX_SHARDS as usize {
+        let data = shard_data_path(x_path, k);
+        let lock = sibling(&data, ".lock");
+        if !data.exists() && !lock.exists() {
+            break;
+        }
+        if lock_is_live(&lock) {
+            f(k, &lock)?;
+        }
+    }
+    Ok(())
+}
+
+/// Promote every `x.tiles.shard<k>.ckpt` snapshot over its live shard
+/// file (the sharded analog of the disk store's snapshot promotion; the
+/// resume path calls this when the live shard set is torn, e.g. a crash
+/// mid-`STAMP` chain left headers disagreeing). Returns how many files
+/// were promoted.
+pub fn promote_shard_snapshots(x_path: &Path) -> std::io::Result<usize> {
+    let mut promoted = 0usize;
+    for k in 0..MAX_SHARDS as usize {
+        let data = shard_data_path(x_path, k);
+        let snap = snapshot_sibling(&data);
+        if !data.exists() && !snap.exists() {
+            break;
+        }
+        if snap.exists() {
+            std::fs::copy(&snap, &data)?;
+            promoted += 1;
+        }
+    }
+    Ok(promoted)
+}
+
+/// Whether any shard files exist beside `x_path` (fresh-create refusal,
+/// the shard analog of checking for `x.tiles` itself).
+pub fn shard_files_exist(x_path: &Path) -> bool {
+    shard_data_path(x_path, 0).exists()
+}
+
+// ---------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------
+
+/// One worker's resident state: its slice of both planes plus the
+/// per-shard persistence paths and lock.
+struct WorkerState {
+    n: u64,
+    shard: u32,
+    n_shards: u32,
+    entry_lo: usize,
+    entry_hi: usize,
+    x: Vec<f64>,
+    winv: Vec<f64>,
+    data_path: PathBuf,
+    _lock: StoreLock,
+}
+
+impl WorkerState {
+    fn init(req: Request) -> Result<WorkerState, StoreError> {
+        let Request::Init { version, n, shard, n_shards, x_path, x, winv } = req else {
+            return Err(StoreError::Mismatch("first frame must be INIT".into()));
+        };
+        if version != PROTOCOL_VERSION {
+            return Err(StoreError::UnsupportedVersion(version));
+        }
+        if n_shards == 0 || shard >= n_shards {
+            return Err(StoreError::Mismatch(format!("shard {shard} of {n_shards} workers")));
+        }
+        let part = ShardPartition::new(n as usize, n_shards as usize);
+        let (entry_lo, entry_hi) = part.entry_range(shard as usize);
+        if x.len() != entry_hi - entry_lo || winv.len() != x.len() {
+            return Err(StoreError::Mismatch(format!(
+                "shard {shard} slice holds {} entries, partition expects {}",
+                x.len(),
+                entry_hi - entry_lo
+            )));
+        }
+        let data_path = shard_data_path(&x_path, shard as usize);
+        if let Some(dir) = data_path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let lock = StoreLock::acquire(&data_path)?;
+        Ok(WorkerState { n, shard, n_shards, entry_lo, entry_hi, x, winv, data_path, _lock: lock })
+    }
+
+    /// Validate that `ranges` lie inside this shard's slice and count
+    /// their total entries.
+    fn check_ranges(&self, ranges: &[(u64, u64)]) -> Result<usize, StoreError> {
+        let mut total = 0usize;
+        for &(off, len) in ranges {
+            let end = off.checked_add(len).ok_or_else(|| {
+                StoreError::Mismatch(format!("range ({off}, {len}) overflows"))
+            })?;
+            if off < self.entry_lo as u64 || end > self.entry_hi as u64 {
+                return Err(StoreError::Mismatch(format!(
+                    "range [{off}, {end}) outside shard {} slice [{}, {})",
+                    self.shard, self.entry_lo, self.entry_hi
+                )));
+            }
+            total += len as usize;
+        }
+        Ok(total)
+    }
+
+    fn gather(&self, ranges: &[(u64, u64)]) -> Result<(Vec<f64>, Vec<f64>), StoreError> {
+        let total = self.check_ranges(ranges)?;
+        let mut x = Vec::with_capacity(total);
+        let mut winv = Vec::with_capacity(total);
+        for &(off, len) in ranges {
+            let lo = off as usize - self.entry_lo;
+            let hi = lo + len as usize;
+            x.extend_from_slice(&self.x[lo..hi]);
+            winv.extend_from_slice(&self.winv[lo..hi]);
+        }
+        Ok((x, winv))
+    }
+
+    fn scatter(&mut self, ranges: &[(u64, u64)], data: &[f64]) -> Result<(), StoreError> {
+        let total = self.check_ranges(ranges)?;
+        if data.len() != total {
+            return Err(StoreError::Mismatch(format!(
+                "scatter payload holds {} entries, ranges cover {total}",
+                data.len()
+            )));
+        }
+        let mut pos = 0usize;
+        for &(off, len) in ranges {
+            let lo = off as usize - self.entry_lo;
+            self.x[lo..lo + len as usize].copy_from_slice(&data[pos..pos + len as usize]);
+            pos += len as usize;
+        }
+        Ok(())
+    }
+
+    /// Persist the slice to the shard file: header + raw entries, staged
+    /// to `.tmp` and renamed (so `clean_stale_artifacts`'s `.tmp` rule
+    /// sweeps a torn write and a reader never sees half a file).
+    fn persist(&self, pass: u64) -> Result<(), StoreError> {
+        let bytes = f64s_to_bytes(&self.x);
+        let header = shard_header_bytes(
+            self.n,
+            self.shard,
+            self.n_shards,
+            self.entry_lo as u64,
+            self.entry_hi as u64,
+            pass,
+            fnv1a64(&bytes),
+        );
+        let tmp = sibling(&self.data_path, ".tmp");
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(&header)?;
+            f.write_all(&bytes)?;
+            f.flush()?;
+        }
+        std::fs::rename(&tmp, &self.data_path)?;
+        Ok(())
+    }
+
+    fn snapshot(&self) -> Result<(), StoreError> {
+        let dest = snapshot_sibling(&self.data_path);
+        let tmp = sibling(&dest, ".tmp");
+        std::fs::copy(&self.data_path, &tmp)?;
+        std::fs::rename(&tmp, &dest)?;
+        Ok(())
+    }
+
+    /// Handle one post-init request; returns the response and whether to
+    /// exit the serve loop.
+    fn handle(&mut self, req: Request) -> (Response, bool) {
+        let resp = match req {
+            Request::Init { .. } => {
+                Response::Err { error: StoreError::Mismatch("duplicate INIT".into()) }
+            }
+            Request::Read { ranges } => match self.gather(&ranges) {
+                Ok((x, winv)) => Response::Read { x, winv },
+                Err(error) => Response::Err { error },
+            },
+            Request::Write { ranges, x } => match self.scatter(&ranges, &x) {
+                Ok(()) => Response::WriteAck,
+                Err(error) => Response::Err { error },
+            },
+            Request::Stamp { pass, seed } => match self.persist(pass) {
+                Ok(()) => Response::Stamp { chain: fnv1a64_f64s(seed, &self.x) },
+                Err(error) => Response::Err { error },
+            },
+            Request::Fingerprint { seed } => {
+                Response::Fingerprint { chain: fnv1a64_f64s(seed, &self.x) }
+            }
+            Request::Snapshot => match self.snapshot() {
+                Ok(()) => Response::SnapshotAck,
+                Err(error) => Response::Err { error },
+            },
+            Request::Barrier { pass } => Response::Barrier { pass },
+            Request::Shutdown => return (Response::ShutdownAck, true),
+        };
+        (resp, false)
+    }
+}
+
+/// Serve one coordinator connection until shutdown or EOF. EOF (the
+/// coordinator died or dropped us) is a clean exit: the worker holds no
+/// state the shard files don't already hold as of the last `STAMP`, and
+/// exiting releases the per-shard lock.
+fn serve(mut stream: UnixStream) {
+    let mut state = match read_frame(&mut stream) {
+        Ok(body) => match Request::decode(&body).and_then(WorkerState::init) {
+            Ok(state) => {
+                let ack = Response::InitAck { pid: std::process::id() };
+                if write_frame(&mut stream, &ack.encode()).is_err() {
+                    return;
+                }
+                state
+            }
+            Err(error) => {
+                let _ = write_frame(&mut stream, &Response::Err { error }.encode());
+                return;
+            }
+        },
+        Err(_) => return,
+    };
+    loop {
+        let body = match read_frame(&mut stream) {
+            Ok(body) => body,
+            Err(_) => return,
+        };
+        let (resp, done) = match Request::decode(&body) {
+            Ok(req) => state.handle(req),
+            Err(error) => (Response::Err { error }, false),
+        };
+        if write_frame(&mut stream, &resp.encode()).is_err() || done {
+            return;
+        }
+    }
+}
+
+/// Process-mode worker entry point (the hidden `shard-worker` CLI
+/// subcommand): connect to the coordinator's listening socket and serve
+/// until shutdown.
+pub fn worker_main(connect: &Path) -> Result<(), StoreError> {
+    let stream = UnixStream::connect(connect)?;
+    serve(stream);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Coordinator side
+// ---------------------------------------------------------------------
+
+/// One worker connection: the request/response socket (a full
+/// round-trip runs under the mutex, so concurrent wave workers on the
+/// coordinator never interleave frames) plus the handle to reap at
+/// drop.
+struct ShardConn {
+    stream: Mutex<UnixStream>,
+    child: Option<Child>,
+    thread: Option<std::thread::JoinHandle<()>>,
+    /// Worker pid from `INIT_ACK` (the coordinator's own pid for
+    /// in-process worker threads).
+    pid: u32,
+}
+
+/// Coordinator-side [`TileStore`] over `N` shard workers.
+pub struct ShardStore {
+    n: usize,
+    total: usize,
+    col_starts: Vec<usize>,
+    part: ShardPartition,
+    path: PathBuf,
+    conns: Vec<ShardConn>,
+    /// `(pass, x_fnv)` of the last [`ShardStore::flush_and_stamp`] (or
+    /// as read back at [`ShardStore::open_with`]).
+    stamp: Mutex<(u64, u64)>,
+    stats: Mutex<StoreStats>,
+    failed: AtomicBool,
+    first_err: Mutex<Option<StoreError>>,
+    barrier_seq: AtomicU64,
+}
+
+/// A tile footprint's segments grouped per owning shard, with the wire
+/// ranges and the matching arena spans.
+struct ShardGroup {
+    shard: usize,
+    ranges: Vec<(u64, u64)>,
+    /// `(arena_start, len)` per range.
+    spans: Vec<(usize, usize)>,
+}
+
+fn unexpected(op: &str, resp: &Response) -> StoreError {
+    StoreError::Corrupt(format!("unexpected worker response to {op}: {resp:?}"))
+}
+
+fn worker_io(shard: usize, context: &str, e: std::io::Error) -> StoreError {
+    StoreError::Io(std::io::Error::new(
+        e.kind(),
+        format!("shard worker {shard} ({context}): {e}"),
+    ))
+}
+
+impl ShardStore {
+    /// Create a fresh sharded store: materialize the plane from
+    /// `src(c, r)` (transient `O(n²)`, like any fresh create), partition
+    /// it over `cfg.workers` workers, and hand each its slice.
+    pub fn create_with(
+        cfg: &StoreCfg,
+        n: usize,
+        winv: Vec<f64>,
+        src: &mut dyn FnMut(usize, usize) -> f64,
+    ) -> Result<ShardStore, StoreError> {
+        let col_starts = packed_col_starts(n);
+        let mut x = vec![0.0f64; n_pairs(n)];
+        for c in 0..n.saturating_sub(1) {
+            let base = col_starts[c];
+            for r in (c + 1)..n {
+                x[base + (r - c - 1)] = src(c, r);
+            }
+        }
+        Self::boot(cfg, n, x, winv, (0, 0))
+    }
+
+    /// Re-open a sharded store from its on-disk shard files (external-x
+    /// resume): reassemble the plane (verifying every header, checksum,
+    /// and the cross-shard geometry), then re-partition for the
+    /// *current* `cfg.workers` — the chained fingerprint is
+    /// partition-independent, so resuming with a different worker count
+    /// is exact. The returned store's [`ShardStore::stamp`] carries the
+    /// files' pass and the recomputed plane fingerprint.
+    pub fn open_with(cfg: &StoreCfg, n: usize, winv: Vec<f64>) -> Result<ShardStore, StoreError> {
+        let (x, pass, fnv) = read_shard_plane(&cfg.x_path(), n)?;
+        Self::boot(cfg, n, x, winv, (pass, fnv))
+    }
+
+    fn boot(
+        cfg: &StoreCfg,
+        n: usize,
+        x: Vec<f64>,
+        winv: Vec<f64>,
+        stamp: (u64, u64),
+    ) -> Result<ShardStore, StoreError> {
+        let total = n_pairs(n);
+        if x.len() != total || winv.len() != total {
+            return Err(StoreError::Mismatch(format!(
+                "plane slices hold {} / {} entries, n = {n} needs {total}",
+                x.len(),
+                winv.len()
+            )));
+        }
+        let workers = cfg.workers.max(1);
+        let part = ShardPartition::new(n, workers);
+        let path = cfg.x_path();
+        std::fs::create_dir_all(&cfg.dir)?;
+        let mut conns = match &cfg.worker_exe {
+            Some(exe) => spawn_process_workers(exe, &cfg.dir, workers)?,
+            None => spawn_thread_workers(workers)?,
+        };
+        let mut stats = StoreStats::default();
+        for (k, conn) in conns.iter_mut().enumerate() {
+            let (lo, hi) = part.entry_range(k);
+            let req = Request::Init {
+                version: PROTOCOL_VERSION,
+                n: n as u64,
+                shard: k as u32,
+                n_shards: workers as u32,
+                x_path: path.clone(),
+                x: x[lo..hi].to_vec(),
+                winv: winv[lo..hi].to_vec(),
+            };
+            let stream = conn.stream.get_mut().unwrap_or_else(|p| p.into_inner());
+            let resp = roundtrip(stream, &req, k, &mut stats)?;
+            match resp {
+                Response::InitAck { pid } => conn.pid = pid,
+                Response::Err { error } => return Err(error),
+                other => return Err(unexpected("INIT", &other)),
+            }
+        }
+        Ok(ShardStore {
+            n,
+            total,
+            col_starts: packed_col_starts(n),
+            part,
+            path,
+            conns,
+            stamp: Mutex::new(stamp),
+            stats: Mutex::new(stats),
+            failed: AtomicBool::new(false),
+            first_err: Mutex::new(None),
+            barrier_seq: AtomicU64::new(0),
+        })
+    }
+
+    /// The partition in force (tests and diagnostics).
+    pub fn partition(&self) -> &ShardPartition {
+        &self.part
+    }
+
+    /// Worker pids in shard order (the kill-recovery test picks its
+    /// victim here via the per-shard lock files; this accessor serves
+    /// diagnostics).
+    pub fn worker_pids(&self) -> Vec<u32> {
+        self.conns.iter().map(|c| c.pid).collect()
+    }
+
+    /// The `(pass, x_fnv)` stamp of the last
+    /// [`ShardStore::flush_and_stamp`] (or as read back at open).
+    pub fn stamp(&self) -> (u64, u64) {
+        *self.stamp.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Cache/transport counters so far.
+    pub fn stats(&self) -> StoreStats {
+        *self.stats.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Workers hold their slices resident and `STAMP` persists
+    /// synchronously, so there is nothing to flush.
+    pub fn flush(&self) -> Result<(), StoreError> {
+        self.health_latch_only()
+    }
+
+    /// Chain a `STAMP` through the shards: worker `k` persists its
+    /// slice stamped with `pass` and folds it into the FNV state seeded
+    /// by worker `k - 1`. The final state equals the FNV of the whole
+    /// plane in packed order — checkpoint v2's external `x_fnv`.
+    pub fn flush_and_stamp(&self, pass: u64) -> Result<u64, StoreError> {
+        let mut chain = Fnv1a::new().finish();
+        for k in 0..self.part.n_shards() {
+            match self.request(k, &Request::Stamp { pass, seed: chain })? {
+                Response::Stamp { chain: next } => chain = next,
+                other => return Err(unexpected("STAMP", &other)),
+            }
+        }
+        *self.stamp.lock().unwrap_or_else(|p| p.into_inner()) = (pass, chain);
+        Ok(chain)
+    }
+
+    /// Recompute the plane fingerprint (chained per-shard FNV) without
+    /// persisting anything.
+    pub fn data_fingerprint(&self) -> Result<u64, StoreError> {
+        let mut chain = Fnv1a::new().finish();
+        for k in 0..self.part.n_shards() {
+            match self.request(k, &Request::Fingerprint { seed: chain })? {
+                Response::Fingerprint { chain: next } => chain = next,
+                other => return Err(unexpected("FINGERPRINT", &other)),
+            }
+        }
+        Ok(chain)
+    }
+
+    /// Have every worker copy its (just stamped) shard file to the
+    /// `.ckpt` sibling — the recovery artifact the resume path promotes
+    /// over torn live files.
+    pub fn snapshot(&self) -> Result<(), StoreError> {
+        for k in 0..self.part.n_shards() {
+            match self.request(k, &Request::Snapshot)? {
+                Response::SnapshotAck => {}
+                other => return Err(unexpected("SNAPSHOT", &other)),
+            }
+        }
+        Ok(())
+    }
+
+    /// Materialize the full packed plane (final extraction; `O(n²)`
+    /// resident, streamed shard by shard in bounded chunks).
+    pub fn read_full(&self) -> Result<Vec<f64>, StoreError> {
+        let mut out = vec![0.0f64; self.total];
+        for k in 0..self.part.n_shards() {
+            let (lo, hi) = self.part.entry_range(k);
+            let mut pos = lo;
+            while pos < hi {
+                let take = (hi - pos).min(PAIR_CHUNK);
+                match self.request(k, &Request::Read { ranges: vec![(pos as u64, take as u64)] })? {
+                    Response::Read { x, .. } => {
+                        if x.len() != take {
+                            return Err(StoreError::Corrupt(format!(
+                                "shard {k} returned {} entries for a {take}-entry read",
+                                x.len()
+                            )));
+                        }
+                        out[pos..pos + take].copy_from_slice(&x);
+                    }
+                    other => return Err(unexpected("READ", &other)),
+                }
+                pos += take;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Per-pass health poll, which doubles as the worker **liveness
+    /// heartbeat**: one `BARRIER` round-trip per worker (a SIGKILLed
+    /// worker surfaces here as a socket error at the latest), with the
+    /// blocked time accounted to [`StoreStats::barrier_wait_us`]. Then
+    /// the first-error latch is taken exactly like the disk store's.
+    pub fn health(&self) -> Result<(), StoreError> {
+        if !self.is_failed() {
+            let seq = self.barrier_seq.fetch_add(1, Ordering::Relaxed);
+            let t0 = Instant::now();
+            for k in 0..self.part.n_shards() {
+                match self.request(k, &Request::Barrier { pass: seq }) {
+                    Ok(Response::Barrier { pass }) if pass == seq => {}
+                    Ok(other) => {
+                        self.latch(unexpected("BARRIER", &other));
+                        break;
+                    }
+                    Err(e) => {
+                        self.latch(e);
+                        break;
+                    }
+                }
+            }
+            let waited = t0.elapsed().as_micros() as u64;
+            self.stats.lock().unwrap_or_else(|p| p.into_inner()).barrier_wait_us += waited;
+        }
+        self.health_latch_only()
+    }
+
+    fn health_latch_only(&self) -> Result<(), StoreError> {
+        if !self.is_failed() {
+            return Ok(());
+        }
+        let mut first = self.first_err.lock().unwrap_or_else(|p| p.into_inner());
+        Err(first.take().unwrap_or_else(|| {
+            StoreError::Corrupt("sharded store already failed earlier in this solve".into())
+        }))
+    }
+
+    /// Whether a permanent failure has been latched (leases are no-ops).
+    pub fn is_failed(&self) -> bool {
+        self.failed.load(Ordering::Acquire)
+    }
+
+    /// Park a lease-path failure in the latch (first error wins).
+    fn latch(&self, e: StoreError) {
+        let mut first = self.first_err.lock().unwrap_or_else(|p| p.into_inner());
+        if first.is_none() {
+            *first = Some(e);
+        }
+        self.failed.store(true, Ordering::Release);
+    }
+
+    /// No retry loop on the socket path (a dead worker cannot heal), so
+    /// there are never buffered retry notes.
+    pub fn drain_retries(&self) -> Vec<RetryNote> {
+        Vec::new()
+    }
+
+    /// One request/response round-trip with shard `k`, serialized on
+    /// the connection mutex, accounted into the transport counters (the
+    /// stats lock is taken only after the socket I/O, so requests to
+    /// *different* shards never serialize on it).
+    fn request(&self, k: usize, req: &Request) -> Result<Response, StoreError> {
+        let mut local = StoreStats::default();
+        let resp = {
+            let mut stream = self.conns[k].stream.lock().unwrap_or_else(|p| p.into_inner());
+            roundtrip(&mut stream, req, k, &mut local)
+        };
+        {
+            let mut stats = self.stats.lock().unwrap_or_else(|p| p.into_inner());
+            stats.shard_requests += local.shard_requests;
+            stats.shard_bytes_out += local.shard_bytes_out;
+            stats.shard_bytes_in += local.shard_bytes_in;
+        }
+        if let Ok(Response::Err { error }) = resp {
+            return Err(error);
+        }
+        resp
+    }
+
+    /// Stage `tile`'s footprint into `scratch` (arena + address table +
+    /// segment list), one `READ` per shard the footprint touches.
+    fn gather_tile(&self, tile: &Tile, scratch: &mut TileScratch) -> Result<(), StoreError> {
+        let n = self.n;
+        if scratch.cols.len() < n {
+            scratch.cols.resize(n, 0);
+        }
+        scratch.segs.clear();
+        let mut arena_len = 0usize;
+        {
+            let scratch = &mut *scratch;
+            for_each_tile_col(tile, |c, lo, hi| {
+                // Non-negative by construction — see `DiskStore::gather_tile`.
+                debug_assert!(arena_len >= lo - c - 1, "arena base underflow for {tile:?}");
+                scratch.cols[c] = arena_len - (lo - c - 1);
+                scratch.segs.push(Seg { col: c, row_lo: lo, row_hi: hi, start: arena_len });
+                arena_len += hi - lo;
+            });
+        }
+        scratch.x.clear();
+        scratch.x.resize(arena_len, 0.0);
+        scratch.winv.clear();
+        scratch.winv.resize(arena_len, 0.0);
+        for group in self.group_segs(&scratch.segs) {
+            let want: usize = group.spans.iter().map(|&(_, len)| len).sum();
+            match self.request(group.shard, &Request::Read { ranges: group.ranges })? {
+                Response::Read { x, winv } => {
+                    if x.len() != want || winv.len() != want {
+                        return Err(StoreError::Corrupt(format!(
+                            "shard {} returned {} / {} entries, lease asked for {want}",
+                            group.shard,
+                            x.len(),
+                            winv.len()
+                        )));
+                    }
+                    let mut pos = 0usize;
+                    for &(start, len) in &group.spans {
+                        scratch.x[start..start + len].copy_from_slice(&x[pos..pos + len]);
+                        scratch.winv[start..start + len].copy_from_slice(&winv[pos..pos + len]);
+                        pos += len;
+                    }
+                }
+                other => return Err(unexpected("READ", &other)),
+            }
+        }
+        Ok(())
+    }
+
+    /// Write the whole gathered footprint back, one `WRITE` per shard.
+    fn scatter_tile(&self, scratch: &TileScratch) -> Result<(), StoreError> {
+        for group in self.group_segs(&scratch.segs) {
+            let mut payload = Vec::with_capacity(group.spans.iter().map(|&(_, l)| l).sum());
+            for &(start, len) in &group.spans {
+                payload.extend_from_slice(&scratch.x[start..start + len]);
+            }
+            match self.request(group.shard, &Request::Write { ranges: group.ranges, x: payload })? {
+                Response::WriteAck => {}
+                other => return Err(unexpected("WRITE", &other)),
+            }
+        }
+        Ok(())
+    }
+
+    /// Group a footprint's per-column segments by owning shard. The
+    /// partition is column-granular, so each segment maps to exactly one
+    /// shard, and segments arrive in ascending column order, so each
+    /// shard's ranges are ascending too.
+    fn group_segs(&self, segs: &[Seg]) -> Vec<ShardGroup> {
+        let mut groups: Vec<ShardGroup> = Vec::new();
+        for seg in segs {
+            let len = seg.row_hi - seg.row_lo;
+            if len == 0 {
+                continue;
+            }
+            let shard = self.part.shard_of_col(seg.col);
+            let off = (self.col_starts[seg.col] + (seg.row_lo - seg.col - 1)) as u64;
+            match groups.last_mut() {
+                Some(g) if g.shard == shard => {
+                    g.ranges.push((off, len as u64));
+                    g.spans.push((seg.start, len));
+                }
+                _ => groups.push(ShardGroup {
+                    shard,
+                    ranges: vec![(off, len as u64)],
+                    spans: vec![(seg.start, len)],
+                }),
+            }
+        }
+        groups
+    }
+}
+
+fn roundtrip(
+    stream: &mut UnixStream,
+    req: &Request,
+    shard: usize,
+    stats: &mut StoreStats,
+) -> Result<Response, StoreError> {
+    let body = req.encode();
+    stats.shard_requests += 1;
+    stats.shard_bytes_out += body.len() as u64 + 4;
+    write_frame(stream, &body).map_err(|e| worker_io(shard, "send", e))?;
+    let resp_body = read_frame(stream).map_err(|e| worker_io(shard, "receive", e))?;
+    stats.shard_bytes_in += resp_body.len() as u64 + 4;
+    Response::decode(&resp_body)
+}
+
+impl TileStore for ShardStore {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn n_pairs(&self) -> usize {
+        self.total
+    }
+
+    unsafe fn with_tile(
+        &self,
+        tile: &Tile,
+        scratch: &mut TileScratch,
+        f: &mut dyn FnMut(&SharedMut<'_, f64>, &[usize], &[f64]),
+    ) {
+        // A latched store parks every lease (waves are barrier-
+        // synchronized; the driver's per-pass `health()` unwinds).
+        if self.is_failed() {
+            return;
+        }
+        if let Err(e) = self.gather_tile(tile, scratch) {
+            self.latch(e);
+            return;
+        }
+        {
+            let view = SharedMut::new(scratch.x.as_mut_slice());
+            f(&view, &scratch.cols, &scratch.winv);
+        }
+        if let Err(e) = self.scatter_tile(scratch) {
+            self.latch(e);
+        }
+    }
+
+    unsafe fn with_tile_read(
+        &self,
+        tile: &Tile,
+        scratch: &mut TileScratch,
+        f: &mut dyn FnMut(&SharedMut<'_, f64>, &[usize], &[f64]),
+    ) {
+        if self.is_failed() {
+            return;
+        }
+        if let Err(e) = self.gather_tile(tile, scratch) {
+            self.latch(e);
+            return;
+        }
+        let view = SharedMut::new(scratch.x.as_mut_slice());
+        f(&view, &scratch.cols, &scratch.winv);
+    }
+
+    unsafe fn with_pair_range(
+        &self,
+        lo: usize,
+        hi: usize,
+        write: bool,
+        scratch: &mut TileScratch,
+        f: &mut dyn FnMut(usize, &mut [f64], &[f64]),
+    ) {
+        if lo >= hi || self.is_failed() {
+            return;
+        }
+        debug_assert!(hi <= self.total);
+        let walk = (|| -> Result<(), StoreError> {
+            let mut g = lo;
+            while g < hi {
+                let shard = self.part.shard_of_entry(g);
+                let (_, shard_hi) = self.part.entry_range(shard);
+                let seg_hi = hi.min(shard_hi);
+                let mut pos = g;
+                while pos < seg_hi {
+                    let take = (seg_hi - pos).min(PAIR_CHUNK);
+                    let ranges = vec![(pos as u64, take as u64)];
+                    match self.request(shard, &Request::Read { ranges: ranges.clone() })? {
+                        Response::Read { x, winv } => {
+                            if x.len() != take || winv.len() != take {
+                                return Err(StoreError::Corrupt(format!(
+                                    "shard {shard} returned {} entries for a {take}-entry range",
+                                    x.len()
+                                )));
+                            }
+                            scratch.x.clear();
+                            scratch.x.extend_from_slice(&x);
+                            scratch.winv.clear();
+                            scratch.winv.extend_from_slice(&winv);
+                        }
+                        other => return Err(unexpected("READ", &other)),
+                    }
+                    f(pos, &mut scratch.x, &scratch.winv);
+                    if write {
+                        let payload = scratch.x.clone();
+                        match self.request(shard, &Request::Write { ranges, x: payload })? {
+                            Response::WriteAck => {}
+                            other => return Err(unexpected("WRITE", &other)),
+                        }
+                    }
+                    pos += take;
+                }
+                g = seg_hi;
+            }
+            Ok(())
+        })();
+        if let Err(e) = walk {
+            self.latch(e);
+        }
+    }
+}
+
+impl Drop for ShardConn {
+    /// Best-effort clean shutdown with bounded patience: ask the worker
+    /// to exit, close the socket (a wedged worker then sees EOF), and
+    /// reap the child / join the thread. Dropping the conns — whether
+    /// from a completed solve or a failed boot — never hangs and never
+    /// leaks a worker process.
+    fn drop(&mut self) {
+        {
+            let mut stream = self.stream.lock().unwrap_or_else(|p| p.into_inner());
+            let _ = stream.set_read_timeout(Some(SHUTDOWN_GRACE));
+            let _ = write_frame(&mut *stream, &Request::Shutdown.encode());
+            let _ = read_frame(&mut *stream);
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+        }
+        if let Some(mut child) = self.child.take() {
+            let deadline = Instant::now() + SHUTDOWN_GRACE;
+            loop {
+                match child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    _ => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        break;
+                    }
+                }
+            }
+        }
+        if let Some(handle) = self.thread.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn spawn_thread_workers(workers: usize) -> Result<Vec<ShardConn>, StoreError> {
+    let mut conns = Vec::with_capacity(workers);
+    for k in 0..workers {
+        let (coord, worker) = UnixStream::pair()?;
+        coord.set_read_timeout(Some(REQUEST_TIMEOUT))?;
+        let thread = std::thread::Builder::new()
+            .name(format!("shard-worker-{k}"))
+            .spawn(move || serve(worker))
+            .map_err(StoreError::Io)?;
+        conns.push(ShardConn {
+            stream: Mutex::new(coord),
+            child: None,
+            thread: Some(thread),
+            pid: std::process::id(),
+        });
+    }
+    Ok(conns)
+}
+
+fn spawn_process_workers(
+    exe: &Path,
+    dir: &Path,
+    workers: usize,
+) -> Result<Vec<ShardConn>, StoreError> {
+    let sock = dir.join("shard.sock");
+    let _ = std::fs::remove_file(&sock);
+    let listener = UnixListener::bind(&sock)?;
+    listener.set_nonblocking(true)?;
+    let mut children: Vec<Child> = Vec::with_capacity(workers);
+    let spawn_all = (|| -> Result<(), StoreError> {
+        for _ in 0..workers {
+            let child = Command::new(exe)
+                .arg("shard-worker")
+                .arg("--connect")
+                .arg(&sock)
+                .stdin(Stdio::null())
+                .spawn()?;
+            children.push(child);
+        }
+        Ok(())
+    })();
+    if let Err(e) = spawn_all {
+        reap(&mut children);
+        let _ = std::fs::remove_file(&sock);
+        return Err(e);
+    }
+    let mut streams: Vec<UnixStream> = Vec::with_capacity(workers);
+    let deadline = Instant::now() + ACCEPT_TIMEOUT;
+    while streams.len() < workers {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let ready = (|| -> std::io::Result<()> {
+                    stream.set_nonblocking(false)?;
+                    stream.set_read_timeout(Some(REQUEST_TIMEOUT))
+                })();
+                if let Err(e) = ready {
+                    reap(&mut children);
+                    let _ = std::fs::remove_file(&sock);
+                    return Err(e.into());
+                }
+                streams.push(stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                let died = children
+                    .iter_mut()
+                    .any(|c| matches!(c.try_wait(), Ok(Some(_))));
+                if died || Instant::now() > deadline {
+                    reap(&mut children);
+                    let _ = std::fs::remove_file(&sock);
+                    return Err(StoreError::Io(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        if died {
+                            "a shard worker exited before connecting"
+                        } else {
+                            "timed out waiting for shard workers to connect"
+                        },
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                reap(&mut children);
+                let _ = std::fs::remove_file(&sock);
+                return Err(e.into());
+            }
+        }
+    }
+    let _ = std::fs::remove_file(&sock);
+    // Identity is assigned by INIT, not by accept order, so pairing the
+    // k-th accepted stream with the k-th spawned child is only for
+    // reaping — a mismatch is harmless.
+    Ok(streams
+        .into_iter()
+        .zip(children)
+        .map(|(stream, child)| ShardConn {
+            stream: Mutex::new(stream),
+            child: Some(child),
+            thread: None,
+            pid: 0,
+        })
+        .collect())
+}
+
+fn reap(children: &mut Vec<Child>) {
+    for child in children.iter_mut() {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+    children.clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::schedule::Schedule;
+
+    fn test_dir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("metric_proj_shard_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn cfg(dir: &Path, workers: usize) -> StoreCfg {
+        StoreCfg::shard(dir, workers)
+    }
+
+    /// Deterministic test plane: entry of pair (c, r).
+    fn val(c: usize, r: usize) -> f64 {
+        (c as f64) * 1000.0 + (r as f64) + 0.25
+    }
+
+    fn make_store(dir: &Path, n: usize, workers: usize) -> ShardStore {
+        let winv: Vec<f64> = (0..n_pairs(n)).map(|g| 1.0 + (g % 7) as f64).collect();
+        ShardStore::create_with(&cfg(dir, workers), n, winv, &mut |c, r| val(c, r)).unwrap()
+    }
+
+    fn expected_plane(n: usize) -> Vec<f64> {
+        let cs = packed_col_starts(n);
+        let mut x = vec![0.0; n_pairs(n)];
+        for c in 0..n.saturating_sub(1) {
+            for r in (c + 1)..n {
+                x[cs[c] + (r - c - 1)] = val(c, r);
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn create_and_read_full_roundtrips() {
+        let dir = test_dir("roundtrip");
+        for workers in [1usize, 2, 3] {
+            let store = make_store(&dir, 12, workers);
+            assert_eq!(store.read_full().unwrap(), expected_plane(12));
+            assert!(store.stats().shard_requests > 0);
+            drop(store);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tile_lease_gathers_and_scatters_across_shards() {
+        let dir = test_dir("lease");
+        let n = 14;
+        let store = make_store(&dir, n, 3);
+        let schedule = Schedule::new(n, 4);
+        let cs = packed_col_starts(n);
+        let mut scratch = TileScratch::default();
+        // Add 1.0 to every entry, tile by tile (each pair touched once
+        // per covering tile footprint — use one fixed tile instead).
+        let tile = schedule.waves()[0][0];
+        // SAFETY: single-threaded test, exclusive tile ownership.
+        unsafe {
+            store.with_tile(&tile, &mut scratch, &mut |x, cols, winv| {
+                for_each_tile_col(&tile, |c, lo, hi| {
+                    for r in lo..hi {
+                        let idx = cols[c] + (r - c - 1);
+                        // SAFETY: exclusive access in this test.
+                        let got = unsafe { x.get(idx) };
+                        assert_eq!(got, val(c, r), "gathered ({c},{r})");
+                        assert!(winv[idx] >= 1.0);
+                        // SAFETY: exclusive access in this test.
+                        unsafe { x.add(idx, 1.0) };
+                    }
+                });
+            });
+        }
+        store.health().unwrap();
+        let full = store.read_full().unwrap();
+        let mut want = expected_plane(n);
+        for_each_tile_col(&tile, |c, lo, hi| {
+            for r in lo..hi {
+                want[cs[c] + (r - c - 1)] += 1.0;
+            }
+        });
+        assert_eq!(full, want);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pair_range_lease_walks_ascending_across_shard_boundaries() {
+        let dir = test_dir("pairrange");
+        let n = 13;
+        let store = make_store(&dir, n, 4);
+        let total = n_pairs(n);
+        let mut scratch = TileScratch::default();
+        let mut seen = vec![false; total];
+        let mut last = 0usize;
+        // SAFETY: single-threaded, whole-range ownership.
+        unsafe {
+            store.with_pair_range(0, total, true, &mut scratch, &mut |g, x, winv| {
+                assert!(g >= last, "segments must ascend");
+                last = g;
+                assert_eq!(x.len(), winv.len());
+                for (i, v) in x.iter_mut().enumerate() {
+                    assert!(!seen[g + i], "entry {} handed twice", g + i);
+                    seen[g + i] = true;
+                    *v *= 2.0;
+                }
+            });
+        }
+        store.health().unwrap();
+        assert!(seen.iter().all(|&s| s));
+        let want: Vec<f64> = expected_plane(n).iter().map(|v| v * 2.0).collect();
+        assert_eq!(store.read_full().unwrap(), want);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stamp_is_partition_independent_and_resume_is_exact() {
+        let dir = test_dir("resume");
+        let n = 11;
+        let plane = expected_plane(n);
+        let fnv_direct = fnv1a64_f64s(Fnv1a::new().finish(), &plane);
+        let store = make_store(&dir, n, 3);
+        let fnv = store.flush_and_stamp(7).unwrap();
+        assert_eq!(fnv, fnv_direct, "chained stamp equals the one-shot plane hash");
+        assert_eq!(store.stamp(), (7, fnv));
+        assert_eq!(store.data_fingerprint().unwrap(), fnv);
+        drop(store);
+        // Reopen with a *different* worker count.
+        let winv: Vec<f64> = (0..n_pairs(n)).map(|g| 1.0 + (g % 7) as f64).collect();
+        let reopened = ShardStore::open_with(&cfg(&dir, 2), n, winv).unwrap();
+        assert_eq!(reopened.stamp(), (7, fnv));
+        assert_eq!(reopened.read_full().unwrap(), plane);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_promotes_over_a_torn_shard_file() {
+        let dir = test_dir("promote");
+        let n = 10;
+        let store = make_store(&dir, n, 2);
+        let fnv = store.flush_and_stamp(3).unwrap();
+        store.snapshot().unwrap();
+        drop(store);
+        // Tear one live shard file (truncate past the header).
+        let victim = shard_data_path(&cfg(&dir, 2).x_path(), 1);
+        let bytes = std::fs::read(&victim).unwrap();
+        std::fs::write(&victim, &bytes[..bytes.len() - 4]).unwrap();
+        let winv: Vec<f64> = (0..n_pairs(n)).map(|g| 1.0 + (g % 7) as f64).collect();
+        let x_path = cfg(&dir, 2).x_path();
+        assert!(matches!(
+            ShardStore::open_with(&cfg(&dir, 2), n, winv.clone()),
+            Err(StoreError::Corrupt(_))
+        ));
+        assert_eq!(promote_shard_snapshots(&x_path).unwrap(), 2);
+        let healed = ShardStore::open_with(&cfg(&dir, 2), n, winv).unwrap();
+        assert_eq!(healed.stamp(), (3, fnv));
+        assert_eq!(healed.read_full().unwrap(), expected_plane(n));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn live_per_shard_lock_refuses_reopen() {
+        let dir = test_dir("locked");
+        let n = 9;
+        let store = make_store(&dir, n, 2);
+        store.flush_and_stamp(1).unwrap();
+        // Workers are live (in-process threads hold the per-shard
+        // locks), so a second coordinator must be refused.
+        let winv: Vec<f64> = (0..n_pairs(n)).map(|_| 1.0).collect();
+        assert!(matches!(
+            ShardStore::open_with(&cfg(&dir, 2), n, winv),
+            Err(StoreError::Locked(_))
+        ));
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn worker_rejects_out_of_partition_ranges() {
+        let dir = test_dir("reject");
+        let n = 9;
+        let store = make_store(&dir, n, 2);
+        let (lo, _) = store.partition().entry_range(1);
+        // Ask shard 0 for shard 1's first entry.
+        let err = store
+            .request(0, &Request::Read { ranges: vec![(lo as u64, 1)] })
+            .unwrap_err();
+        assert!(matches!(err, StoreError::Mismatch(_)), "{err}");
+        // The store itself is not latched by a caller-level misuse probe;
+        // the lease paths would latch it.
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_dead_pid_shard_lock_is_broken_on_reopen() {
+        let dir = test_dir("stale");
+        let n = 8;
+        let store = make_store(&dir, n, 2);
+        let fnv = store.flush_and_stamp(2).unwrap();
+        drop(store);
+        // Simulate a SIGKILLed worker: a leftover lock naming a dead pid.
+        let lock = sibling(&shard_data_path(&cfg(&dir, 2).x_path(), 0), ".lock");
+        std::fs::write(&lock, "999999999").unwrap();
+        let winv: Vec<f64> = (0..n_pairs(n)).map(|_| 1.0).collect();
+        let reopened = ShardStore::open_with(&cfg(&dir, 3), n, winv).unwrap();
+        assert_eq!(reopened.stamp(), (2, fnv));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

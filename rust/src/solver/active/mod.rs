@@ -643,9 +643,10 @@ fn capture_cc_active_backed(
             next_check,
             history,
         ),
-        XBacking::Disk { store } => {
-            let x_fnv = store.flush_and_stamp(passes_done as u64)?;
-            store.snapshot()?;
+        backing @ (XBacking::Disk { .. } | XBacking::Shard { .. }) => {
+            let x_fnv = backing
+                .stamp_external(passes_done as u64)?
+                .expect("external backings always stamp");
             SolverState::capture_cc_active_external(
                 state,
                 x_fnv,
@@ -1020,9 +1021,10 @@ fn capture_nearness_active_backed(
             next_check,
             history,
         ),
-        XBacking::Disk { store } => {
-            let x_fnv = store.flush_and_stamp(passes_done as u64)?;
-            store.snapshot()?;
+        backing @ (XBacking::Disk { .. } | XBacking::Shard { .. }) => {
+            let x_fnv = backing
+                .stamp_external(passes_done as u64)?
+                .expect("external backings always stamp");
             SolverState::capture_nearness_active_external(
                 inst,
                 x_fnv,

@@ -17,8 +17,9 @@ use super::checkpoint::SolverState;
 use super::schedule::Schedule;
 use super::CcState;
 use crate::instance::metric_nearness::MetricNearnessInstance;
+use crate::matrix::store::shard::{promote_shard_snapshots, shard_data_path, shard_files_exist};
 use crate::matrix::store::{
-    snapshot_sibling, DiskStore, MemStore, RetryNote, StoreCfg, StoreError, StoreKind,
+    snapshot_sibling, DiskStore, MemStore, RetryNote, ShardStore, StoreCfg, StoreError, StoreKind,
     StoreTuning, TileStore,
 };
 use anyhow::{bail, Context as _};
@@ -39,14 +40,12 @@ pub(crate) fn refuse_store_overwrite(path: &Path) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Check that an opened store and an external-x checkpoint form a
-/// consistent pair: the header stamp must match the checkpoint's
-/// `(pass, x_fnv)` exactly, and the re-derived content fingerprint must
-/// confirm the stamp — a store that advanced past (or fell behind) the
-/// checkpoint is refused instead of silently resuming from the wrong
-/// iterate.
-fn verify_stamp(store: &DiskStore, st: &SolverState, path: &Path) -> anyhow::Result<()> {
-    let (pass, fnv) = store.stamp();
+/// Check a store's `(pass, fnv)` stamp against an external-x
+/// checkpoint's expectation — a store that advanced past (or fell
+/// behind) the checkpoint is refused instead of silently resuming from
+/// the wrong iterate. Shared by the disk and shard verifiers.
+fn check_stamp(stamp: (u64, u64), st: &SolverState, path: &Path) -> anyhow::Result<()> {
+    let (pass, fnv) = stamp;
     if pass != st.pass || fnv != st.x_fnv {
         bail!(
             "store {} is stamped (pass {pass}, fnv {fnv:#x}) but the checkpoint expects \
@@ -56,6 +55,15 @@ fn verify_stamp(store: &DiskStore, st: &SolverState, path: &Path) -> anyhow::Res
             st.x_fnv
         );
     }
+    Ok(())
+}
+
+/// Check that an opened store and an external-x checkpoint form a
+/// consistent pair: the header stamp must match the checkpoint's
+/// `(pass, x_fnv)` exactly, and the re-derived content fingerprint must
+/// confirm the stamp.
+fn verify_stamp(store: &DiskStore, st: &SolverState, path: &Path) -> anyhow::Result<()> {
+    check_stamp(store.stamp(), st, path)?;
     let actual = store.data_fingerprint()?;
     if actual != st.x_fnv {
         bail!(
@@ -111,6 +119,66 @@ fn open_verified(
     Ok(store)
 }
 
+/// Creating a fresh *sharded* store must never clobber existing shard
+/// files (the shard analog of [`refuse_store_overwrite`]).
+fn refuse_shard_overwrite(x_path: &Path) -> anyhow::Result<()> {
+    if shard_files_exist(x_path) {
+        bail!(
+            "refusing to overwrite the existing shard files beside {} (found {}): they may \
+             back an earlier run's checkpoint. Resume it (--resume <ckpt>), point \
+             --store-dir somewhere fresh, or delete the files to discard that state",
+            x_path.display(),
+            shard_data_path(x_path, 0).display()
+        );
+    }
+    Ok(())
+}
+
+/// Open a sharded store for an external-x resume, falling back to its
+/// per-shard `.ckpt` snapshots when the live shard set is unusable (the
+/// shard analog of [`open_verified`]). [`ShardStore::open_with`]
+/// recomputes the plane fingerprint from the bytes it reassembles and
+/// reports it as the stamp, so a successful [`check_stamp`] *is* the
+/// content verification — no second fingerprint pass is needed. A
+/// [`StoreError::Locked`] failure (another coordinator's workers are
+/// live) is never promoted over.
+fn open_verified_shard(
+    cfg: &StoreCfg,
+    n: usize,
+    winv: &[f64],
+    st: &SolverState,
+) -> anyhow::Result<ShardStore> {
+    let path = cfg.x_path();
+    let first = match ShardStore::open_with(cfg, n, winv.to_vec()) {
+        Ok(store) => match check_stamp(store.stamp(), st, &path) {
+            Ok(()) => return Ok(store),
+            // `store` drops here, shutting its workers down (and
+            // releasing the per-shard locks) before the snapshots are
+            // promoted below.
+            Err(e) => e,
+        },
+        Err(e @ StoreError::Locked(_)) => return Err(anyhow::Error::from(e)),
+        Err(e) => anyhow::Error::from(e),
+    };
+    let promoted = promote_shard_snapshots(&path)
+        .with_context(|| format!("promoting shard snapshots beside {}", path.display()))?;
+    if promoted == 0 {
+        return Err(first.context(format!(
+            "sharded store {} cannot resume this checkpoint and no shard snapshots exist \
+             beside it",
+            path.display()
+        )));
+    }
+    crate::telemetry::warn(&format!(
+        "sharded store {} cannot resume this checkpoint ({first}); promoted {promoted} \
+         shard snapshot(s)",
+        path.display()
+    ));
+    let store = ShardStore::open_with(cfg, n, winv.to_vec())?;
+    check_stamp(store.stamp(), st, &path)?;
+    Ok(store)
+}
+
 /// Where the packed distance variables of a solve live — resident vector
 /// (the classic path) or disk-backed tile store with a bounded working
 /// set. Shared by the CC-LP and nearness drivers; every phase leases
@@ -131,6 +199,14 @@ pub(crate) enum XBacking {
         /// The tile store (owns the file handles and caches).
         store: DiskStore,
     },
+    /// `x` is partitioned across shard worker processes (or in-process
+    /// worker threads) behind a [`ShardStore`]; the coordinator keeps
+    /// only per-lease gather arenas resident and every access crosses
+    /// the socket protocol.
+    Shard {
+        /// The coordinator-side store (owns the worker connections).
+        store: ShardStore,
+    },
 }
 
 impl XBacking {
@@ -149,8 +225,9 @@ impl XBacking {
             StoreKind::Mem => {
                 if resume.is_some_and(|st| st.x_external) {
                     bail!(
-                        "checkpoint references an external x store; resume with the disk \
-                         store (--store disk --store-dir <dir>)"
+                        "checkpoint references an external x store; resume with the \
+                         backend that wrote it (--store disk or --store shard, with \
+                         --store-dir <dir>)"
                     );
                 }
                 let mut x: Vec<f64> = inst.d.as_slice().to_vec();
@@ -205,6 +282,31 @@ impl XBacking {
                     }
                 }
             }
+            StoreKind::Shard => {
+                let winv: Vec<f64> = inst.w.as_slice().iter().map(|&v| 1.0 / v).collect();
+                match resume {
+                    Some(st) if st.x_external => {
+                        let store = open_verified_shard(cfg, inst.n, &winv, st)?;
+                        Ok(XBacking::Shard { store })
+                    }
+                    Some(st) => {
+                        refuse_shard_overwrite(&cfg.x_path())?;
+                        let src = &st.x;
+                        let cs = inst.d.col_starts();
+                        let store = ShardStore::create_with(cfg, inst.n, winv, &mut |c, r| {
+                            src[cs[c] + (r - c - 1)]
+                        })?;
+                        Ok(XBacking::Shard { store })
+                    }
+                    None => {
+                        refuse_shard_overwrite(&cfg.x_path())?;
+                        let d = &inst.d;
+                        let store =
+                            ShardStore::create_with(cfg, inst.n, winv, &mut |c, r| d.get(c, r))?;
+                        Ok(XBacking::Shard { store })
+                    }
+                }
+            }
         }
     }
 
@@ -228,8 +330,9 @@ impl XBacking {
             StoreKind::Mem => {
                 if resume.is_some_and(|st| st.x_external) {
                     bail!(
-                        "checkpoint references an external x store; resume with the disk \
-                         store (--store disk --store-dir <dir>)"
+                        "checkpoint references an external x store; resume with the \
+                         backend that wrote it (--store disk or --store shard, with \
+                         --store-dir <dir>)"
                     );
                 }
                 Ok(XBacking::Mem { x })
@@ -268,6 +371,27 @@ impl XBacking {
                     }
                 }
             }
+            StoreKind::Shard => {
+                // The shard workers hold winv resident in their slices;
+                // the drivers read weights back through leases, never
+                // through CcState::winv (left empty), exactly like the
+                // disk path.
+                let winv = std::mem::take(&mut state.winv);
+                match resume {
+                    Some(st) if st.x_external => {
+                        let store = open_verified_shard(cfg, state.n, &winv, st)?;
+                        Ok(XBacking::Shard { store })
+                    }
+                    _ => {
+                        refuse_shard_overwrite(&cfg.x_path())?;
+                        let cs = &state.col_starts;
+                        let store = ShardStore::create_with(cfg, state.n, winv, &mut |c, r| {
+                            x[cs[c] + (r - c - 1)]
+                        })?;
+                        Ok(XBacking::Shard { store })
+                    }
+                }
+            }
         }
     }
 
@@ -284,6 +408,7 @@ impl XBacking {
                 f(&store)
             }
             XBacking::Disk { store } => f(&*store),
+            XBacking::Shard { store } => f(&*store),
         }
     }
 
@@ -302,6 +427,9 @@ impl XBacking {
             XBacking::Disk { store } => {
                 super::active::sweep::exact_violation(store, schedule, p)
             }
+            XBacking::Shard { store } => {
+                super::active::sweep::exact_violation(store, schedule, p)
+            }
         }
     }
 
@@ -316,6 +444,10 @@ impl XBacking {
                 store.flush()?;
                 store.read_full()
             }
+            XBacking::Shard { store } => {
+                store.flush()?;
+                store.read_full()
+            }
         }
     }
 
@@ -325,6 +457,7 @@ impl XBacking {
         match self {
             XBacking::Mem { .. } => None,
             XBacking::Disk { store } => Some(store.stats()),
+            XBacking::Shard { store } => Some(store.stats()),
         }
     }
 
@@ -336,6 +469,7 @@ impl XBacking {
         match self {
             XBacking::Mem { .. } => Ok(()),
             XBacking::Disk { store } => store.health(),
+            XBacking::Shard { store } => store.health(),
         }
     }
 
@@ -345,6 +479,7 @@ impl XBacking {
         match self {
             XBacking::Mem { .. } => Vec::new(),
             XBacking::Disk { store } => store.drain_retries(),
+            XBacking::Shard { store } => store.drain_retries(),
         }
     }
 
@@ -356,6 +491,30 @@ impl XBacking {
         match self {
             XBacking::Mem { .. } => Ok(()),
             XBacking::Disk { store } => store.snapshot(),
+            XBacking::Shard { store } => store.snapshot(),
+        }
+    }
+
+    /// Flush-and-stamp the backing at `pass` and snapshot it beside
+    /// itself — everything an external-x checkpoint capture needs from
+    /// a non-resident backend, in one call. Returns the stamped plane
+    /// fingerprint (`None` for the resident path, whose checkpoints
+    /// inline `x` instead). The drivers' `capture_*_backed` helpers
+    /// branch on the backing once and share this for every external
+    /// backend.
+    pub(crate) fn stamp_external(&self, pass: u64) -> Result<Option<u64>, StoreError> {
+        match self {
+            XBacking::Mem { .. } => Ok(None),
+            XBacking::Disk { store } => {
+                let fnv = store.flush_and_stamp(pass)?;
+                store.snapshot()?;
+                Ok(Some(fnv))
+            }
+            XBacking::Shard { store } => {
+                let fnv = store.flush_and_stamp(pass)?;
+                store.snapshot()?;
+                Ok(Some(fnv))
+            }
         }
     }
 }

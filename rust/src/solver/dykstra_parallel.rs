@@ -370,9 +370,10 @@ fn capture_cc_full_backed(
             triplet_visits,
             history,
         ),
-        XBacking::Disk { store } => {
-            let x_fnv = store.flush_and_stamp(passes_done as u64)?;
-            store.snapshot()?;
+        backing @ (XBacking::Disk { .. } | XBacking::Shard { .. }) => {
+            let x_fnv = backing
+                .stamp_external(passes_done as u64)?
+                .expect("external backings always stamp");
             SolverState::capture_cc_full_external(
                 state,
                 x_fnv,

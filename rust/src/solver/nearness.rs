@@ -206,7 +206,7 @@ pub fn solve_traced(
         if store_cfg.kind != crate::matrix::store::StoreKind::Mem {
             return Err(SolveError::Other(anyhow::anyhow!(
                 "--algorithm {} runs resident-only (the penalty subproblems sweep \
-                 dense vectors, not leased tiles); drop --store disk or use dykstra",
+                 dense vectors, not leased tiles); drop --store disk/shard or use dykstra",
                 opts.algorithm.name()
             )));
         }
@@ -422,9 +422,10 @@ fn capture_nearness_full_backed(
             triplet_visits,
             history,
         ),
-        XBacking::Disk { store } => {
-            let x_fnv = store.flush_and_stamp(passes_done as u64)?;
-            store.snapshot()?;
+        backing @ (XBacking::Disk { .. } | XBacking::Shard { .. }) => {
+            let x_fnv = backing
+                .stamp_external(passes_done as u64)?
+                .expect("external backings always stamp");
             SolverState::capture_nearness_full_external(
                 inst,
                 x_fnv,

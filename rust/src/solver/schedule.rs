@@ -255,6 +255,109 @@ pub fn n_triplets(n: usize) -> u64 {
     n * (n - 1) * (n - 2) / 6
 }
 
+/// Partition of the packed column-major `x` plane across shard workers.
+///
+/// Each shard owns a *contiguous run of columns* `c ∈ [col_bounds[s],
+/// col_bounds[s+1])` of the strict upper triangle, i.e. the contiguous
+/// packed-entry range `[entry_bounds[s], entry_bounds[s+1])`. Column
+/// granularity matters: every per-column segment a tile lease gathers
+/// (see `for_each_tile_col`) then lives wholly inside one shard, so a
+/// lease's socket traffic is a handful of per-shard range requests, never
+/// a split segment. Columns are dealt greedily by pair count (column `c`
+/// holds `n - 1 - c` pairs), so shard loads are balanced to within one
+/// column. The partition is a pure function of `(n, n_shards)` —
+/// coordinator and workers recompute it independently and agree.
+///
+/// Trailing shards may own zero columns when `n_shards > n - 1`; that is
+/// legal (the worker simply idles), so worker counts need not divide the
+/// problem size.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPartition {
+    n: usize,
+    /// `n_shards + 1` ascending column bounds; first 0, last `n - 1`
+    /// (the last column of the strict upper triangle is empty and is
+    /// never assigned).
+    col_bounds: Vec<usize>,
+    /// `n_shards + 1` ascending packed-entry bounds; first 0, last
+    /// `n·(n-1)/2`.
+    entry_bounds: Vec<usize>,
+}
+
+impl ShardPartition {
+    /// Build the partition of the `n`-node plane over `n_shards >= 1`
+    /// workers.
+    pub fn new(n: usize, n_shards: usize) -> ShardPartition {
+        assert!(n_shards >= 1, "shard partition needs at least one shard");
+        let n_cols = n.saturating_sub(1);
+        let total: usize = n * n_cols / 2;
+        let mut col_bounds = Vec::with_capacity(n_shards + 1);
+        let mut entry_bounds = Vec::with_capacity(n_shards + 1);
+        col_bounds.push(0);
+        entry_bounds.push(0);
+        let mut c = 0usize;
+        let mut e = 0usize;
+        for s in 0..n_shards {
+            // Greedy: extend this shard while its pair count stays below
+            // the even split of what remains over the shards left.
+            let remaining_shards = n_shards - s;
+            let target = (total - e).div_ceil(remaining_shards);
+            let mut here = 0usize;
+            while c < n_cols && (here == 0 || here + (n - 1 - c) <= target) {
+                here += n - 1 - c;
+                c += 1;
+            }
+            e += here;
+            col_bounds.push(c);
+            entry_bounds.push(e);
+        }
+        debug_assert_eq!(*col_bounds.last().unwrap(), n_cols);
+        debug_assert_eq!(*entry_bounds.last().unwrap(), total);
+        ShardPartition { n, col_bounds, entry_bounds }
+    }
+
+    /// Problem size.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of shards.
+    pub fn n_shards(&self) -> usize {
+        self.col_bounds.len() - 1
+    }
+
+    /// Column range `[lo, hi)` owned by shard `s` (may be empty).
+    pub fn col_range(&self, s: usize) -> (usize, usize) {
+        (self.col_bounds[s], self.col_bounds[s + 1])
+    }
+
+    /// Packed-entry range `[lo, hi)` owned by shard `s` (may be empty).
+    pub fn entry_range(&self, s: usize) -> (usize, usize) {
+        (self.entry_bounds[s], self.entry_bounds[s + 1])
+    }
+
+    /// Shard owning global packed entry `g`.
+    ///
+    /// # Panics
+    /// If `g` is at or past the total pair count.
+    pub fn shard_of_entry(&self, g: usize) -> usize {
+        assert!(g < *self.entry_bounds.last().unwrap(), "entry {g} out of range");
+        // entry_bounds is ascending but not strictly (empty shards repeat
+        // a bound); partition_point finds the first shard whose upper
+        // bound exceeds g — the unique nonempty owner.
+        self.entry_bounds[1..].partition_point(|&b| b <= g)
+    }
+
+    /// Shard owning packed column `c` (the shard whose column range
+    /// contains it; empty columns at the tail are unowned).
+    ///
+    /// # Panics
+    /// If `c >= n - 1` (the last column holds no pairs).
+    pub fn shard_of_col(&self, c: usize) -> usize {
+        assert!(c < *self.col_bounds.last().unwrap(), "column {c} out of range");
+        self.col_bounds[1..].partition_point(|&b| b <= c)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -533,5 +636,76 @@ mod tests {
                 assert_eq!(t.k_hi - t.k_lo, 1);
             }
         }
+    }
+
+    #[test]
+    fn shard_partition_covers_plane_exactly() {
+        for n in [2usize, 3, 7, 16, 41] {
+            for p in [1usize, 2, 3, 4, 8, 50] {
+                let part = ShardPartition::new(n, p);
+                assert_eq!(part.n_shards(), p);
+                let n_pairs = n * (n - 1) / 2;
+                // Column and entry ranges tile [0, n-1) and [0, n_pairs)
+                // contiguously, and agree with each other.
+                let mut c_prev = 0usize;
+                let mut e_prev = 0usize;
+                for s in 0..p {
+                    let (clo, chi) = part.col_range(s);
+                    let (elo, ehi) = part.entry_range(s);
+                    assert_eq!(clo, c_prev, "n={n} p={p} s={s}");
+                    assert_eq!(elo, e_prev, "n={n} p={p} s={s}");
+                    assert!(chi >= clo && ehi >= elo);
+                    let pairs: usize = (clo..chi).map(|c| n - 1 - c).sum();
+                    assert_eq!(ehi - elo, pairs, "n={n} p={p} s={s}");
+                    c_prev = chi;
+                    e_prev = ehi;
+                }
+                assert_eq!(c_prev, n - 1);
+                assert_eq!(e_prev, n_pairs);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_partition_lookup_agrees_with_ranges() {
+        let (n, p) = (23usize, 4usize);
+        let part = ShardPartition::new(n, p);
+        let n_pairs = n * (n - 1) / 2;
+        for g in 0..n_pairs {
+            let s = part.shard_of_entry(g);
+            let (lo, hi) = part.entry_range(s);
+            assert!(lo <= g && g < hi, "entry {g} -> shard {s}");
+        }
+        for c in 0..(n - 1) {
+            let s = part.shard_of_col(c);
+            let (lo, hi) = part.col_range(s);
+            assert!(lo <= c && c < hi, "col {c} -> shard {s}");
+        }
+    }
+
+    #[test]
+    fn shard_partition_is_balanced_within_one_column() {
+        // Greedy dealing bounds each shard's load by the even split plus
+        // the heaviest column (n - 1 pairs).
+        for (n, p) in [(64usize, 2usize), (64, 4), (101, 8)] {
+            let part = ShardPartition::new(n, p);
+            let total = n * (n - 1) / 2;
+            let even = total.div_ceil(p);
+            for s in 0..p {
+                let (lo, hi) = part.entry_range(s);
+                assert!(hi - lo <= even + (n - 1), "n={n} p={p} s={s} load={}", hi - lo);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_partition_tolerates_more_shards_than_columns() {
+        let part = ShardPartition::new(4, 10);
+        // 3 columns, 10 shards: the first shards own one column each, the
+        // rest are empty but well-formed.
+        let owned: usize =
+            (0..10).map(|s| part.col_range(s)).map(|(lo, hi)| hi - lo).sum();
+        assert_eq!(owned, 3);
+        assert_eq!(part.entry_range(9), (6, 6));
     }
 }

@@ -409,6 +409,10 @@ pub(crate) fn store_stats_fields(stats: &StoreStats) -> Vec<(String, Json)> {
         f("entry_loads", stats.entry_loads),
         f("blocks_skipped", stats.blocks_skipped),
         f("retries", stats.retries),
+        f("shard_requests", stats.shard_requests),
+        f("shard_bytes_in", stats.shard_bytes_in),
+        f("shard_bytes_out", stats.shard_bytes_out),
+        f("barrier_wait_us", stats.barrier_wait_us),
     ]
 }
 
@@ -429,6 +433,10 @@ pub(crate) fn parse_store_stats(v: &Json) -> Result<StoreStats, &'static str> {
         entry_loads: opt("entry_loads"),
         blocks_skipped: opt("blocks_skipped"),
         retries: opt("retries"),
+        shard_requests: opt("shard_requests"),
+        shard_bytes_in: opt("shard_bytes_in"),
+        shard_bytes_out: opt("shard_bytes_out"),
+        barrier_wait_us: opt("barrier_wait_us"),
     })
 }
 
@@ -482,6 +490,10 @@ mod tests {
                     entry_loads: 12,
                     blocks_skipped: 5,
                     retries: 7,
+                    shard_requests: 40,
+                    shard_bytes_in: 8192,
+                    shard_bytes_out: 4096,
+                    barrier_wait_us: 150,
                 },
             },
             Event::PassEnd { pass: 2, secs: 0.25, triplet_visits: 910, active_triplets: 20 },

@@ -209,6 +209,16 @@ pub fn render(path: &str, summary: &TraceSummary) -> String {
                 stats.entry_loads, stats.blocks_skipped
             );
         }
+        if stats.shard_requests > 0 {
+            let _ = writeln!(
+                out,
+                "  shard io  : {} requests, {:.1} MiB out, {:.1} MiB in, {:.1} ms barrier wait",
+                stats.shard_requests,
+                stats.shard_bytes_out as f64 / (1024.0 * 1024.0),
+                stats.shard_bytes_in as f64 / (1024.0 * 1024.0),
+                stats.barrier_wait_us as f64 / 1000.0
+            );
+        }
     }
     if summary.store_retries > 0 || summary.recoveries > 0 {
         let _ = writeln!(

@@ -12,6 +12,14 @@ impl Fnv1a {
         Fnv1a(0xcbf29ce484222325)
     }
 
+    /// Resume hashing from a previously `finish()`ed state. Because
+    /// FNV-1a folds one byte at a time into a single running word,
+    /// `with_state(h(a)).update(b)` equals `h(a ‖ b)` — which lets
+    /// per-shard fingerprints chain into one plane-wide hash.
+    pub fn with_state(state: u64) -> Fnv1a {
+        Fnv1a(state)
+    }
+
     /// Fold `bytes` into the running hash.
     pub fn update(&mut self, bytes: &[u8]) {
         for &b in bytes {
@@ -39,6 +47,20 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
     h.finish()
 }
 
+/// FNV-1a over the little-endian bit patterns of an `f64` slice,
+/// continuing from `seed` (pass [`Fnv1a::new().finish()`] — the offset
+/// basis — for a fresh hash). The store fingerprint and the CLI's
+/// printed solution hash both use this, so a plane hashed shard-by-shard
+/// (each shard seeded with its predecessor's result) equals the same
+/// plane hashed in one pass.
+pub fn fnv1a64_f64s(seed: u64, data: &[f64]) -> u64 {
+    let mut h = Fnv1a::with_state(seed);
+    for &v in data {
+        h.update(&v.to_bits().to_le_bytes());
+    }
+    h.finish()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -55,5 +77,23 @@ mod tests {
         h.update(b"hello ");
         h.update(b"world");
         assert_eq!(h.finish(), fnv1a64(b"hello world"));
+    }
+
+    #[test]
+    fn chained_state_equals_one_shot() {
+        let first = fnv1a64(b"hello ");
+        let mut h = Fnv1a::with_state(first);
+        h.update(b"world");
+        assert_eq!(h.finish(), fnv1a64(b"hello world"));
+    }
+
+    #[test]
+    fn f64_chaining_is_partition_independent() {
+        let data: Vec<f64> = (0..17).map(|i| (i as f64) * 0.5 - 3.0).collect();
+        let whole = fnv1a64_f64s(Fnv1a::new().finish(), &data);
+        for split in 0..=data.len() {
+            let head = fnv1a64_f64s(Fnv1a::new().finish(), &data[..split]);
+            assert_eq!(fnv1a64_f64s(head, &data[split..]), whole, "split at {split}");
+        }
     }
 }

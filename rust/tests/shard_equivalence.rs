@@ -1,0 +1,507 @@
+//! Multi-process sharding acceptance tests: a solve whose packed `x` /
+//! `winv` planes are partitioned across shard workers behind the
+//! coordinator↔worker socket protocol must be **bitwise identical** to
+//! the resident in-memory solve — for 1, 2, and 4 workers, the full and
+//! active strategies, and the nearness and CC-LP drivers alike. The
+//! shard files double as checkpoint v2's external-`x` referent, and the
+//! partition-independent FNV chain means a checkpoint written by a
+//! 2-worker run resumes bitwise under 1 or 4 workers.
+//!
+//! Worker transport: the in-library tests run in-process thread workers
+//! (same protocol and framing, no fork cost) across the wide case
+//! matrix, plus one real-process case via `CARGO_BIN_EXE_metric-proj`.
+//! The subprocess tests at the bottom SIGKILL a worker process mid-run
+//! (`tests/kill_resume.rs` style): the coordinator's per-pass barrier
+//! heartbeat must turn the dead socket into a typed store failure naming
+//! the last-good checkpoint, and `--recover-attempts` must respawn the
+//! workers and land bitwise on the uninterrupted reference.
+
+use metric_proj::instance::metric_nearness::MetricNearnessInstance;
+use metric_proj::instance::CcLpInstance;
+use metric_proj::matrix::store::StoreCfg;
+use metric_proj::solver::checkpoint::SolverState;
+use metric_proj::solver::nearness::{self, NearnessOpts, NearnessSolution};
+use metric_proj::solver::{dykstra_parallel, Solution, SolveOpts, Strategy};
+use metric_proj::util::parallel::env_threads;
+use std::path::PathBuf;
+
+const BIN: &str = env!("CARGO_BIN_EXE_metric-proj");
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("metric_proj_shard_eq_{tag}_{}", std::process::id()))
+}
+
+fn solve_collecting(
+    inst: &MetricNearnessInstance,
+    opts: &NearnessOpts,
+    cfg: &StoreCfg,
+    resume: Option<&SolverState>,
+) -> (NearnessSolution, Vec<SolverState>) {
+    let mut states = Vec::new();
+    let sol = nearness::solve_stored(inst, opts, cfg, resume, &mut |s| states.push(s.clone()))
+        .expect("solve_stored");
+    (sol, states)
+}
+
+fn assert_same_solution(a: &NearnessSolution, b: &NearnessSolution, ctx: &str) {
+    assert_eq!(a.x, b.x, "{ctx}: x diverged");
+    assert_eq!(a.passes, b.passes, "{ctx}: pass counts diverged");
+    assert_eq!(a.metric_visits, b.metric_visits, "{ctx}: work accounting diverged");
+    assert_eq!(a.max_violation, b.max_violation, "{ctx}: reported violation diverged");
+    assert_eq!(a.objective, b.objective, "{ctx}: objective diverged");
+}
+
+fn cc_solve_collecting(
+    inst: &CcLpInstance,
+    opts: &SolveOpts,
+    cfg: &StoreCfg,
+    resume: Option<&SolverState>,
+) -> (Solution, Vec<SolverState>) {
+    let mut states = Vec::new();
+    let sol =
+        dykstra_parallel::solve_stored(inst, opts, cfg, resume, &mut |s| states.push(s.clone()))
+            .expect("solve_stored");
+    (sol, states)
+}
+
+fn assert_same_cc_solution(a: &Solution, b: &Solution, ctx: &str) {
+    assert_eq!(a.x, b.x, "{ctx}: x diverged");
+    assert_eq!(a.f, b.f, "{ctx}: slacks diverged");
+    assert_eq!(a.passes, b.passes, "{ctx}: pass counts diverged");
+    assert_eq!(a.nnz_duals, b.nnz_duals, "{ctx}: dual counts diverged");
+    assert_eq!(a.metric_visits, b.metric_visits, "{ctx}: work accounting diverged");
+    assert_eq!(
+        a.residuals.max_violation, b.residuals.max_violation,
+        "{ctx}: reported violation diverged"
+    );
+    assert_eq!(a.residuals.rel_gap, b.residuals.rel_gap, "{ctx}: gap diverged");
+}
+
+/// The shard run's transport counters must prove the leases actually
+/// crossed the sockets.
+fn assert_shard_traffic(sol_stats: Option<metric_proj::matrix::store::StoreStats>, ctx: &str) {
+    let stats = sol_stats.expect("shard solves report store stats");
+    assert!(stats.shard_requests > 0, "{ctx}: no lease ever crossed a socket");
+    assert!(stats.shard_bytes_out > 0, "{ctx}: no request bytes were counted");
+    assert!(stats.shard_bytes_in > 0, "{ctx}: no response bytes were counted");
+}
+
+#[test]
+fn nearness_shard_and_mem_solves_are_bitwise_identical_across_worker_counts() {
+    let cases = [
+        // (n, tile, threads, workers, strategy)
+        (24usize, 4usize, 1usize, 1usize, Strategy::Full),
+        (24, 4, env_threads(3), 2, Strategy::Full),
+        (26, 5, env_threads(2), 4, Strategy::Full),
+        (30, 7, env_threads(2), 2, Strategy::Active { sweep_every: 3, forget_after: 1 }),
+        (34, 5, env_threads(3), 4, Strategy::Active { sweep_every: 4, forget_after: 2 }),
+        // tile > n: a single tile still shards column-granularly.
+        (19, 40, 2, 2, Strategy::Active { sweep_every: 2, forget_after: 0 }),
+    ];
+    for (idx, &(n, tile, threads, workers, strategy)) in cases.iter().enumerate() {
+        let inst = MetricNearnessInstance::random(n, 2.0, 7 + idx as u64);
+        let opts = NearnessOpts {
+            max_passes: 12,
+            check_every: 4,
+            tol_violation: 1e-9,
+            threads,
+            tile,
+            strategy,
+            ..Default::default()
+        };
+        let ctx = format!("case {idx}: n={n} tile={tile} p={threads} w={workers} {strategy:?}");
+        let (mem, _) = solve_collecting(&inst, &opts, &StoreCfg::mem(), None);
+        assert!(mem.store_stats.is_none(), "{ctx}: mem solves carry no store stats");
+        let dir = tmp_dir(&format!("near{idx}"));
+        let (shard, _) = solve_collecting(&inst, &opts, &StoreCfg::shard(&dir, workers), None);
+        assert_same_solution(&mem, &shard, &ctx);
+        assert_shard_traffic(shard.store_stats, &ctx);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}
+
+#[test]
+fn cc_shard_and_mem_solves_are_bitwise_identical_across_worker_counts() {
+    // The CC-LP drivers push the metric phases, the pair phase, and the
+    // residual scans through the store; weighted instances stream winv
+    // from the workers' second plane.
+    let cases = [
+        // (n, tile, threads, workers, strategy)
+        (24usize, 4usize, env_threads(2), 1usize, Strategy::Full),
+        (24, 4, env_threads(3), 2, Strategy::Full),
+        (26, 5, env_threads(2), 2, Strategy::Active { sweep_every: 3, forget_after: 1 }),
+        (28, 6, env_threads(2), 4, Strategy::Active { sweep_every: 3, forget_after: 1 }),
+    ];
+    for (idx, &(n, tile, threads, workers, strategy)) in cases.iter().enumerate() {
+        let inst = CcLpInstance::random(n, 0.5, 0.8, 1.6, 31 + idx as u64);
+        let opts = SolveOpts {
+            max_passes: 10,
+            check_every: 4,
+            tol_violation: 1e-12,
+            tol_gap: 1e-12,
+            threads,
+            tile,
+            strategy,
+            ..Default::default()
+        };
+        let ctx =
+            format!("cc case {idx}: n={n} tile={tile} p={threads} w={workers} {strategy:?}");
+        let (mem, _) = cc_solve_collecting(&inst, &opts, &StoreCfg::mem(), None);
+        let dir = tmp_dir(&format!("cc{idx}"));
+        let (shard, _) =
+            cc_solve_collecting(&inst, &opts, &StoreCfg::shard(&dir, workers), None);
+        assert_same_cc_solution(&mem, &shard, &ctx);
+        assert_shard_traffic(shard.store_stats, &ctx);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}
+
+#[test]
+fn process_workers_and_thread_workers_land_bitwise_identical() {
+    // One case through real worker *processes* (the CLI transport): the
+    // fork boundary must not change a bit relative to thread workers or
+    // the resident solve.
+    let n = 24;
+    let inst = MetricNearnessInstance::random(n, 2.0, 77);
+    let opts = NearnessOpts {
+        max_passes: 8,
+        check_every: 3,
+        tol_violation: 1e-12,
+        threads: 2,
+        tile: 5,
+        strategy: Strategy::Active { sweep_every: 3, forget_after: 1 },
+        ..Default::default()
+    };
+    let (mem, _) = solve_collecting(&inst, &opts, &StoreCfg::mem(), None);
+    let dir_t = tmp_dir("proc_vs_thread_t");
+    let (threads_sol, _) = solve_collecting(&inst, &opts, &StoreCfg::shard(&dir_t, 2), None);
+    let dir_p = tmp_dir("proc_vs_thread_p");
+    let mut cfg = StoreCfg::shard(&dir_p, 2);
+    cfg.worker_exe = Some(PathBuf::from(BIN));
+    let (procs_sol, _) = solve_collecting(&inst, &opts, &cfg, None);
+    assert_same_solution(&mem, &threads_sol, "thread workers vs resident");
+    assert_same_solution(&mem, &procs_sol, "process workers vs resident");
+    assert_shard_traffic(procs_sol.store_stats, "process workers");
+    let _ = std::fs::remove_dir_all(dir_t);
+    let _ = std::fs::remove_dir_all(dir_p);
+}
+
+#[test]
+fn shard_checkpoints_reference_the_shards_and_resume_across_worker_counts() {
+    // The shard files are checkpoint v2's external-x referent, and the
+    // stamp FNV chains shard-by-shard into the packed-plane fingerprint —
+    // so a checkpoint stamped by a 2-worker run must resume bitwise under
+    // 4 workers (repartition) and under 1 (gather).
+    let n = 32;
+    let inst = MetricNearnessInstance::random(n, 2.0, 11);
+    let strategy = Strategy::Active { sweep_every: 3, forget_after: 1 };
+    let base = NearnessOpts {
+        check_every: 2,
+        tol_violation: 1e-12,
+        threads: 2,
+        tile: 5,
+        strategy,
+        checkpoint_every: 2,
+        ..Default::default()
+    };
+
+    // Uninterrupted references, memory and sharded.
+    let full_opts = NearnessOpts { max_passes: 9, ..base };
+    let (mem_ref, _) = solve_collecting(&inst, &full_opts, &StoreCfg::mem(), None);
+    let dir_ref = tmp_dir("ckpt_ref");
+    let (shard_ref, _) =
+        solve_collecting(&inst, &full_opts, &StoreCfg::shard(&dir_ref, 2), None);
+    assert_same_solution(&mem_ref, &shard_ref, "uninterrupted sharded run");
+
+    // Interrupt a 2-worker run at pass 4: the emitted states must
+    // reference the shard files instead of re-serializing x.
+    let dir = tmp_dir("ckpt_resume");
+    let half_opts = NearnessOpts { max_passes: 4, ..base };
+    let (_half, states) = solve_collecting(&inst, &half_opts, &StoreCfg::shard(&dir, 2), None);
+    let last = states.last().expect("checkpoints were emitted");
+    assert_eq!(last.pass, 4);
+    assert!(last.x_external, "shard checkpoints must reference the shard files");
+    assert!(last.x.is_empty(), "external checkpoints must not inline x");
+    let mut bytes = Vec::new();
+    last.save(&mut bytes).expect("save");
+    let reloaded = SolverState::load(&mut bytes.as_slice()).expect("load");
+    assert_eq!(*last, reloaded);
+
+    // Clone the interrupted store so each worker count resumes from the
+    // identical pass-4 shard files.
+    let clone_store = |tag: &str| -> PathBuf {
+        let dst = tmp_dir(tag);
+        let _ = std::fs::remove_dir_all(&dst);
+        std::fs::create_dir_all(&dst).expect("mkdir clone");
+        for entry in std::fs::read_dir(&dir).expect("read interrupted store") {
+            let entry = entry.expect("dir entry");
+            std::fs::copy(entry.path(), dst.join(entry.file_name())).expect("copy shard file");
+        }
+        dst
+    };
+    for workers in [1usize, 2, 4] {
+        let dst = clone_store(&format!("resume_w{workers}"));
+        let (resumed, _) = solve_collecting(
+            &inst,
+            &full_opts,
+            &StoreCfg::shard(&dst, workers),
+            Some(&reloaded),
+        );
+        assert_same_solution(
+            &mem_ref,
+            &resumed,
+            &format!("2-worker checkpoint resumed under {workers} worker(s)"),
+        );
+        let _ = std::fs::remove_dir_all(dst);
+    }
+
+    let _ = std::fs::remove_dir_all(dir);
+    let _ = std::fs::remove_dir_all(dir_ref);
+}
+
+#[test]
+fn fresh_shard_solve_refuses_to_overwrite_existing_shards() {
+    // Shard files on disk may be the only copy of an earlier run's
+    // iterate; a fresh (non-resuming) solve must refuse to clobber them.
+    let n = 18;
+    let inst = MetricNearnessInstance::random(n, 2.0, 97);
+    let opts = NearnessOpts {
+        max_passes: 3,
+        check_every: 0,
+        threads: 1,
+        tile: 4,
+        strategy: Strategy::Full,
+        checkpoint_every: 2,
+        ..Default::default()
+    };
+    let dir = tmp_dir("no_clobber");
+    let cfg = StoreCfg::shard(&dir, 2);
+    let (_first, _) = solve_collecting(&inst, &opts, &cfg, None);
+    let err = nearness::solve_stored(&inst, &opts, &cfg, None, &mut |_| {})
+        .expect_err("second fresh solve must refuse the existing shard files");
+    assert!(
+        format!("{err:?}").contains("refusing to overwrite"),
+        "error should explain the refusal: {err:?}"
+    );
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+// ---------------------------------------------------------------------------
+// Worker-failure subprocess tests against the real binary.
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+mod worker_failure {
+    use super::{tmp_dir, BIN};
+    use metric_proj::solver::checkpoint::SolverState;
+    use std::path::Path;
+    use std::process::{Child, Command, Stdio};
+    use std::time::{Duration, Instant};
+
+    const N: usize = 110;
+
+    /// `nearness` invocation shared by every run of one scenario: same
+    /// instance (seed), same schedule, same pass budget, 2 worker
+    /// processes.
+    fn nearness_cmd(store_dir: &Path, ck: &Path) -> Command {
+        let mut cmd = Command::new(BIN);
+        cmd.args(["nearness", "--n", &N.to_string(), "--seed", "9"]);
+        cmd.args(["--passes", "14", "--threads", "2", "--tile", "16"]);
+        cmd.args(["--store", "shard", "--workers", "2"]);
+        cmd.arg("--store-dir").arg(store_dir);
+        cmd.arg("--checkpoint").arg(ck);
+        cmd.args(["--checkpoint-every", "1"]);
+        cmd.stdout(Stdio::piped()).stderr(Stdio::piped());
+        cmd
+    }
+
+    /// Block until `ck` holds a loadable state with `pass >= 1`, or the
+    /// victim exits (tolerated: the run degenerates to an uninterrupted
+    /// one, which keeps the equality assertions valid).
+    fn wait_for_first_checkpoint(ck: &Path, child: &mut Child) -> bool {
+        let deadline = Instant::now() + Duration::from_secs(120);
+        loop {
+            if let Ok(st) = SolverState::load_path(ck) {
+                if st.pass >= 1 {
+                    return true;
+                }
+            }
+            if let Ok(Some(status)) = child.try_wait() {
+                assert!(status.success(), "victim exited early with {status}");
+                return false;
+            }
+            assert!(Instant::now() < deadline, "no checkpoint appeared within 120s");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// SIGKILL the shard-0 worker process, whose pid the per-shard lock
+    /// file records. Returns false when the worker (or its lock) is
+    /// already gone — the victim outran us.
+    fn kill_shard0_worker(store_dir: &Path, coordinator_pid: u32) -> bool {
+        let lock = store_dir.join("x.tiles.shard0.lock");
+        let Ok(text) = std::fs::read_to_string(&lock) else { return false };
+        let Ok(pid) = text.trim().parse::<u32>() else { return false };
+        assert_ne!(
+            pid, coordinator_pid,
+            "per-shard locks must hold the worker's pid, not the coordinator's"
+        );
+        Command::new("kill")
+            .args(["-9", &pid.to_string()])
+            .status()
+            .map(|s| s.success())
+            .unwrap_or(false)
+    }
+
+    fn wait_with_timeout(child: &mut Child, secs: u64) -> std::process::ExitStatus {
+        let deadline = Instant::now() + Duration::from_secs(secs);
+        loop {
+            if let Ok(Some(status)) = child.try_wait() {
+                return status;
+            }
+            if Instant::now() >= deadline {
+                let _ = child.kill();
+                panic!("subprocess did not exit within {secs}s");
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+
+    fn read_to_string<R: std::io::Read>(h: Option<R>) -> String {
+        let mut out = String::new();
+        if let Some(mut h) = h {
+            let _ = h.read_to_string(&mut out);
+        }
+        out
+    }
+
+    /// The `solution fnv : 0x…` line both CLI drivers print — the
+    /// cross-run bitwise pin the nightly shard matrix diffs too.
+    fn solution_fnv_line(stdout: &str) -> String {
+        stdout
+            .lines()
+            .find(|l| l.starts_with("solution fnv"))
+            .unwrap_or_else(|| panic!("no solution fnv line in:\n{stdout}"))
+            .to_string()
+    }
+
+    #[test]
+    fn worker_sigkill_fails_typed_and_resumes_bitwise() {
+        // Without --recover-attempts: a killed worker must surface as a
+        // typed store failure naming the last-good checkpoint, and a
+        // manual --resume must land bitwise on the uninterrupted
+        // reference.
+        let root = tmp_dir("wkill");
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(&root).expect("mkdir");
+        let (ref_store, ref_ck) = (root.join("ref_store"), root.join("ref.ckpt"));
+        let (store, ck) = (root.join("store"), root.join("run.ckpt"));
+
+        // Uninterrupted sharded reference.
+        let out = nearness_cmd(&ref_store, &ref_ck).output().expect("spawn reference");
+        assert!(
+            out.status.success(),
+            "reference run failed:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let ref_fnv = solution_fnv_line(&String::from_utf8_lossy(&out.stdout));
+
+        let mut victim = nearness_cmd(&store, &ck).spawn().expect("spawn victim");
+        let checkpointed = wait_for_first_checkpoint(&ck, &mut victim);
+        let killed = checkpointed && kill_shard0_worker(&store, victim.id());
+        let status = wait_with_timeout(&mut victim, 120);
+        let stdout = read_to_string(victim.stdout.take());
+        let stderr = read_to_string(victim.stderr.take());
+        if status.success() {
+            // The victim outran the kill (or finished the final pass
+            // before the next heartbeat): it degenerates to an
+            // uninterrupted run and must still match the reference.
+            assert_eq!(solution_fnv_line(&stdout), ref_fnv, "degenerate run diverged");
+        } else {
+            assert!(killed, "victim failed without a kill:\n{stderr}");
+            assert!(
+                stderr.contains("store failure"),
+                "worker death must surface as a typed store failure:\n{stderr}"
+            );
+            assert!(
+                stderr.contains("last good checkpoint") && stderr.contains("run.ckpt"),
+                "the failure must name the last-good checkpoint:\n{stderr}"
+            );
+
+            // Manual resume from the named checkpoint: the stale shard-0
+            // lock (dead pid) is broken, the shard files reopen at the
+            // stamped pass, and the run lands on the reference bitwise.
+            let out = nearness_cmd(&store, &ck)
+                .arg("--resume")
+                .arg(&ck)
+                .output()
+                .expect("spawn resume");
+            assert!(
+                out.status.success(),
+                "resume after worker SIGKILL failed:\n{}\n{}",
+                String::from_utf8_lossy(&out.stdout),
+                String::from_utf8_lossy(&out.stderr)
+            );
+            let stdout = String::from_utf8_lossy(&out.stdout);
+            assert!(stdout.contains("resume    : from pass"), "resume banner missing:\n{stdout}");
+            assert_eq!(solution_fnv_line(&stdout), ref_fnv, "resumed run diverged");
+        }
+
+        // Either way the final checkpoints agree (external stamps and
+        // duals included).
+        let a = SolverState::load_path(&ref_ck).expect("reference checkpoint loads");
+        let b = SolverState::load_path(&ck).expect("recovered checkpoint loads");
+        assert_eq!(a, b, "final checkpoint states diverged");
+        let _ = std::fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn worker_sigkill_with_recover_attempts_resumes_in_process() {
+        // With --recover-attempts: the coordinator reloads the last
+        // checkpoint, respawns the workers (breaking the dead worker's
+        // stale per-shard lock), and finishes bitwise — one process, no
+        // operator in the loop. The trace records the recovery.
+        let root = tmp_dir("wrecover");
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(&root).expect("mkdir");
+        let (ref_store, ref_ck) = (root.join("ref_store"), root.join("ref.ckpt"));
+        let (store, ck) = (root.join("store"), root.join("run.ckpt"));
+        let trace = root.join("trace.jsonl");
+
+        let out = nearness_cmd(&ref_store, &ref_ck).output().expect("spawn reference");
+        assert!(
+            out.status.success(),
+            "reference run failed:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let ref_fnv = solution_fnv_line(&String::from_utf8_lossy(&out.stdout));
+
+        let mut victim = nearness_cmd(&store, &ck)
+            .args(["--recover-attempts", "2"])
+            .arg("--trace-out")
+            .arg(&trace)
+            .spawn()
+            .expect("spawn victim");
+        let checkpointed = wait_for_first_checkpoint(&ck, &mut victim);
+        let killed = checkpointed && kill_shard0_worker(&store, victim.id());
+        let status = wait_with_timeout(&mut victim, 120);
+        let stdout = read_to_string(victim.stdout.take());
+        let stderr = read_to_string(victim.stderr.take());
+        assert!(
+            status.success(),
+            "recovery must absorb the worker kill (killed={killed}):\n{stdout}\n{stderr}"
+        );
+        assert_eq!(solution_fnv_line(&stdout), ref_fnv, "recovered run diverged");
+        let a = SolverState::load_path(&ref_ck).expect("reference checkpoint loads");
+        let b = SolverState::load_path(&ck).expect("recovered checkpoint loads");
+        assert_eq!(a, b, "final checkpoint states diverged");
+        // The kill lands right after the pass-1 checkpoint of a 14-pass
+        // run, so when it landed on a live worker the trace must carry
+        // the recovery event.
+        if killed {
+            let trace_text = std::fs::read_to_string(&trace).unwrap_or_default();
+            assert!(trace_text.contains("recovery"), "missing recovery event:\n{trace_text}");
+        }
+        let _ = std::fs::remove_dir_all(root);
+    }
+}
